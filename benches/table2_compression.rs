@@ -1,0 +1,124 @@
+//! Table 2: compression ratio and per-core decompression throughput of the
+//! cache codecs, plus the dataset-size table (CSV / raw / per-codec).
+//!
+//! Paper columns: snappy, zlib-1, zlib-3 (we add the delta-varint ablation
+//! and our snappy stand-in `lzp`).  Expected shape: zlib-3 > zlib-1 > fast
+//! codec on ratio; fast codec ≫ zlib on decompression MB/s, and all
+//! decompress faster than the HDD's ~310MB/s.
+
+use std::time::Instant;
+
+use graphmp::benchutil::{banner, Table};
+use graphmp::compress::{lzp, CacheMode};
+use graphmp::graph::datasets::{Dataset, ALL};
+use graphmp::graph::stats::stats;
+use graphmp::graph::Csr;
+use graphmp::prep::compute_intervals;
+use graphmp::storage::shard::Shard;
+
+/// Concatenated shard bytes of the dataset — what the edge cache stores.
+fn shard_payload(ds: Dataset) -> (Vec<u8>, u64) {
+    let g = ds.generate();
+    let st = stats(&g);
+    let intervals = compute_intervals(&g.in_degrees(), 262_144, 8_192);
+    let mut owner = vec![0u32; g.num_vertices as usize];
+    for (s, &(a, b)) in intervals.iter().enumerate() {
+        for v in a..b {
+            owner[v as usize] = s as u32;
+        }
+    }
+    let mut buckets: Vec<Vec<graphmp::graph::Edge>> = vec![Vec::new(); intervals.len()];
+    for e in &g.edges {
+        buckets[owner[e.dst as usize] as usize].push(*e);
+    }
+    let mut payload = Vec::new();
+    for (s, bucket) in buckets.iter().enumerate() {
+        let (a, b) = intervals[s];
+        let shard = Shard {
+            id: s as u32,
+            start_vertex: a,
+            csr: Csr::from_edges(bucket, a, (b - a) as usize, false),
+        };
+        payload.extend_from_slice(&shard.to_bytes());
+    }
+    (payload, st.csv_bytes)
+}
+
+fn main() {
+    banner("table2_compression", "Table 2 (compression ratio + throughput, sizes)");
+
+    let codecs: [(&str, CacheMode); 3] = [
+        ("fast(delta)", CacheMode::M2Fast),
+        ("zlib-1", CacheMode::M3Zlib1),
+        ("zlib-3", CacheMode::M4Zlib3),
+    ];
+
+    let mut ratio_tbl = Table::new(vec![
+        "dataset", "fast", "zlib-1", "zlib-3", "lz77", "| MB/s fast", "zlib-1", "zlib-3", "lz77",
+    ]);
+    let mut size_tbl = Table::new(vec![
+        "dataset", "CSV(MiB)", "raw(MiB)", "fast", "zlib-1", "zlib-3", "lz77",
+    ]);
+
+    for ds in ALL {
+        let (raw, csv_bytes) = shard_payload(ds);
+        let mib = |b: usize| format!("{:.1}", b as f64 / (1 << 20) as f64);
+        let mut ratios = Vec::new();
+        let mut speeds = Vec::new();
+        let mut sizes = Vec::new();
+        for (_, mode) in codecs {
+            let comp = mode.compress(&raw);
+            ratios.push(format!("{:.2}", raw.len() as f64 / comp.len() as f64));
+            sizes.push(mib(comp.len()));
+            // decompression throughput (the cache-hit hot path)
+            let t = Instant::now();
+            let mut out_len = 0usize;
+            let reps = 3;
+            for _ in 0..reps {
+                out_len = mode.decompress(&comp).unwrap().len();
+            }
+            let secs = t.elapsed().as_secs_f64() / reps as f64;
+            speeds.push(format!("{:.0}", out_len as f64 / secs / (1 << 20) as f64));
+        }
+        // raw byte-LZ ablation (shows why mode 2 is delta-varint here:
+        // 4-byte-aligned id streams defeat byte-window matching)
+        let comp = lzp::compress(&raw);
+        ratios.push(format!("{:.2}", raw.len() as f64 / comp.len() as f64));
+        sizes.push(mib(comp.len()));
+        let t = Instant::now();
+        let reps = 3;
+        for _ in 0..reps {
+            let _ = lzp::decompress(&comp).unwrap();
+        }
+        let secs = t.elapsed().as_secs_f64() / reps as f64;
+        speeds.push(format!("{:.0}", raw.len() as f64 / secs / (1 << 20) as f64));
+
+        ratio_tbl.row(vec![
+            ds.name().to_string(),
+            ratios[0].clone(),
+            ratios[1].clone(),
+            ratios[2].clone(),
+            ratios[3].clone(),
+            format!("| {}", speeds[0]),
+            speeds[1].clone(),
+            speeds[2].clone(),
+            speeds[3].clone(),
+        ]);
+        size_tbl.row(vec![
+            ds.name().to_string(),
+            format!("{:.1}", csv_bytes as f64 / (1 << 20) as f64),
+            mib(raw.len()),
+            sizes[0].clone(),
+            sizes[1].clone(),
+            sizes[2].clone(),
+            sizes[3].clone(),
+        ]);
+    }
+
+    ratio_tbl.print("Table 2a: compression ratio | decompression MB/s per core");
+    size_tbl.print("Table 2b: dataset sizes by representation");
+    println!("\npaper shape check: zlib-3 ≥ zlib-1 > fast codec (ratio);");
+    println!("fast codec ≫ zlib on decompression MB/s (the cache-hit path);");
+    println!("substitution note: snappy → delta-varint (same ratio/speed class");
+    println!("on CSR shard bytes); raw byte-LZ shown as the failed alternative.");
+}

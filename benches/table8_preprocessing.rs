@@ -1,0 +1,64 @@
+//! Table 8: data preprocessing time of GraphChi, GridGraph, X-Stream and
+//! GraphMP on the four datasets (HDD-throttled).
+//!
+//! Expected shape (paper): X-Stream fastest (single streaming pass, 2D|E|);
+//! GraphMP between X-Stream and GridGraph (5D|E| + CSR build); GraphChi
+//! slowest ((C+5D)|E| + per-shard source sort).
+
+use graphmp::baselines::{
+    dsw::DswEngine, esg::EsgEngine, psw::PswEngine, BaselineConfig, BaselineEngine,
+};
+use graphmp::benchutil::{banner, scale, Table};
+use graphmp::graph::datasets::ALL;
+use graphmp::prep::{preprocess_into, PrepConfig};
+
+fn main() {
+    banner("table8_preprocessing", "Table 8 (preprocessing time, seconds)");
+    let mut tbl = Table::new(vec!["dataset", "GraphChi", "GridGraph", "X-Stream", "GraphMP"]);
+    let tmp = std::env::temp_dir().join("graphmp_bench_t8");
+    let _ = std::fs::remove_dir_all(&tmp);
+
+    for ds in ALL {
+        println!("preprocessing {} ...", ds.name());
+        let g = ds.generate();
+        let cfg = BaselineConfig { p: 16, ..Default::default() };
+
+        let disk = scale::bench_disk();
+        let chi = PswEngine::new(cfg).preprocess(&g, &disk).unwrap();
+
+        let disk = scale::bench_disk();
+        let grid = DswEngine::new(cfg).preprocess(&g, &disk).unwrap();
+
+        let disk = scale::bench_disk();
+        let xs = EsgEngine::new(cfg).preprocess(&g, &disk).unwrap();
+
+        let disk = scale::bench_disk();
+        let t = std::time::Instant::now();
+        let sim0 = disk.snapshot().sim_nanos;
+        preprocess_into(
+            &g,
+            tmp.join(ds.name()),
+            &disk,
+            PrepConfig {
+                edges_per_shard: scale::EDGES_PER_SHARD,
+                max_rows_per_shard: scale::MAX_ROWS,
+                weighted: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let gmp =
+            t.elapsed().as_secs_f64() + (disk.snapshot().sim_nanos - sim0) as f64 / 1e9;
+
+        tbl.row(vec![
+            ds.name().to_string(),
+            format!("{chi:.2}"),
+            format!("{grid:.2}"),
+            format!("{xs:.2}"),
+            format!("{gmp:.2}"),
+        ]);
+    }
+    tbl.print("Table 8: preprocessing time (seconds, HDD-throttled)");
+    println!("\npaper shape check: X-Stream < GraphMP < GridGraph < GraphChi.");
+    let _ = std::fs::remove_dir_all(&tmp);
+}

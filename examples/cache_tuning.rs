@@ -1,0 +1,69 @@
+//! Demonstrates §2.4.2 automatic cache-mode selection: as the available
+//! memory shrinks relative to the graph, GraphMP escalates from raw
+//! caching to zlib-3, and the measured hit ratio + per-iteration time show
+//! why the rule `min i s.t. S/γᵢ ≤ C` is the right greedy choice.
+//!
+//! ```bash
+//! cargo run --release --example cache_tuning
+//! ```
+
+use graphmp::apps::PageRank;
+use graphmp::benchutil::Table;
+use graphmp::compress::select_mode;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::datasets::Dataset;
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::storage::disk::{Disk, DiskProfile};
+use graphmp::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let g = Dataset::Uk2007Sim.generate();
+    let tmp = std::env::temp_dir().join("graphmp_cache_tuning");
+    let _ = std::fs::remove_dir_all(&tmp);
+    let pdisk = Disk::unthrottled();
+    let (dir, rep) = preprocess_into(
+        &g,
+        &tmp,
+        &pdisk,
+        PrepConfig { edges_per_shard: 65_536, ..Default::default() },
+    )?;
+    let s = rep.shard_bytes;
+    println!(
+        "graph shards: {} — sweeping cache budgets around S",
+        human_bytes(s)
+    );
+
+    let mut tbl = Table::new(vec![
+        "budget", "auto mode", "cached shards", "hit ratio", "iters2-10(s)",
+    ]);
+    for frac in [2.0, 1.0, 0.6, 0.35, 0.2, 0.05] {
+        let budget = (s as f64 * frac) as u64;
+        let mode = select_mode(s, budget);
+        let disk = Disk::new(DiskProfile::hdd_raid5());
+        let mut e = VswEngine::open(
+            &dir,
+            &disk,
+            EngineConfig {
+                cache_capacity: budget,
+                cache_mode: None, // automatic
+                ..Default::default()
+            },
+        )?;
+        assert_eq!(e.cache().mode(), mode, "engine must apply the §2.4.2 rule");
+        let run = e.run(&PageRank::new(), 10)?;
+        let snap = e.cache().snapshot();
+        let rest: f64 = run.iterations.iter().skip(1).map(|m| m.elapsed_seconds()).sum();
+        tbl.row(vec![
+            human_bytes(budget),
+            mode.name().to_string(),
+            format!("{}/{}", e.cache().len(), e.property().num_shards),
+            format!("{:.2}", snap.hit_ratio()),
+            format!("{rest:.3}"),
+        ]);
+    }
+    tbl.print("automatic cache-mode selection (uk2007-sim, PageRank)");
+    println!("\nshrinking memory escalates the codec; hit ratio (and speed) degrade");
+    println!("gracefully instead of falling off a cliff.");
+    let _ = std::fs::remove_dir_all(&tmp);
+    Ok(())
+}

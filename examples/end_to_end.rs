@@ -1,0 +1,129 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! Exercises every layer in one run:
+//!   L3 rust coordinator (preprocessing, VSW engine, selective scheduling,
+//!      compressed cache) →
+//!   Runtime (PJRT CPU client executing the AOT JAX+Pallas artifacts) →
+//!   L2/L1 (pagerank_shard / relax_min_shard HLO).
+//!
+//! Workload: uk2007-sim (~1.3M edges), PageRank + SSSP + CC, native AND
+//! pjrt backends, with cross-backend agreement checked and the headline
+//! metric (edges/second and first-10-iteration time) reported.  Results
+//! are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Requires `make artifacts` (skips the pjrt half with a warning if absent).
+
+use std::sync::Arc;
+
+use graphmp::apps::{Cc, PageRank, Sssp, VertexProgram};
+use graphmp::benchutil::scale;
+use graphmp::engine::{Backend, EngineConfig, VswEngine};
+use graphmp::graph::datasets::Dataset;
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::runtime::{Manifest, ShardExecutor};
+use graphmp::storage::disk::{Disk, DiskProfile};
+use graphmp::util::{human_bytes, human_count};
+
+fn main() -> anyhow::Result<()> {
+    let ds = Dataset::Uk2007Sim;
+    println!("=== GraphMP end-to-end driver: {} ===", ds.name());
+    let g = ds.generate();
+    let gu = g.to_undirected();
+    println!(
+        "graph: |V|={} |E|={} ({} undirected)",
+        human_count(g.num_vertices as u64),
+        human_count(g.num_edges()),
+        human_count(gu.num_edges())
+    );
+
+    let tmp = std::env::temp_dir().join("graphmp_e2e");
+    let _ = std::fs::remove_dir_all(&tmp);
+    let disk = Disk::new(DiskProfile::hdd_raid5());
+    let prep = PrepConfig {
+        edges_per_shard: 65_536,
+        max_rows_per_shard: 8_192,
+        weighted: true,
+        ..Default::default()
+    };
+    let t = std::time::Instant::now();
+    let (dir_w, rep) = preprocess_into(&g, tmp.join("w"), &disk, prep)?;
+    let (dir_u, _) = preprocess_into(
+        &gu,
+        tmp.join("u"),
+        &disk,
+        PrepConfig { weighted: false, ..prep },
+    )?;
+    println!(
+        "preprocessing: {} shards, {} on disk, {:.2}s\n",
+        rep.num_shards,
+        human_bytes(rep.shard_bytes),
+        t.elapsed().as_secs_f64()
+    );
+
+    // PJRT executor over the AOT artifacts (L2/L1)
+    let art_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let executor = match Manifest::load(&art_dir) {
+        Ok(m) => {
+            let variant = m
+                .pick_variant(g.num_vertices as usize, 8_192)
+                .expect("no variant fits; run `make artifacts`");
+            println!("pjrt: loading AOT variant '{variant}' (JAX+Pallas → HLO → PJRT)");
+            Some(Arc::new(ShardExecutor::load(&art_dir, variant)?))
+        }
+        Err(e) => {
+            println!("WARNING: artifacts missing ({e}); running native only");
+            None
+        }
+    };
+
+    let engine_cfg = |backend: Backend| EngineConfig {
+        cache_capacity: scale::CACHE_CAPACITY,
+        active_threshold: 0.02,
+        backend,
+        ..Default::default()
+    };
+
+    let apps: [(&dyn VertexProgram, &graphmp::storage::GraphDir, u32); 3] = [
+        (&PageRank::new(), &dir_w, 10),
+        (&Sssp::new(0), &dir_w, 10),
+        (&Cc, &dir_u, 10),
+    ];
+
+    for (app, dir, iters) in apps {
+        println!("--- {} ---", app.name());
+        let mut nat = VswEngine::open(dir, &disk, engine_cfg(Backend::Native))?;
+        let (nat_vals, nat_run) = nat.run_to_values(app, iters)?;
+        let edges = nat.property().num_edges;
+        println!(
+            "  native: first-{iters} iters {:>8.3}s  ({} edges/s/iter, {} skipped shards)",
+            nat_run.first_n_seconds(iters as usize),
+            human_count(nat_run.edges_per_second(edges) as u64),
+            nat_run.iterations.iter().map(|m| m.shards_skipped).sum::<u32>(),
+        );
+
+        if let Some(exe) = &executor {
+            let mut pj =
+                VswEngine::open(dir, &disk, engine_cfg(Backend::Pjrt(Arc::clone(exe))))?;
+            let (pj_vals, pj_run) = pj.run_to_values(app, iters)?;
+            println!(
+                "  pjrt:   first-{iters} iters {:>8.3}s  (AOT JAX+Pallas kernels via PJRT)",
+                pj_run.first_n_seconds(iters as usize),
+            );
+            // cross-backend agreement: min-apps bit-exact, PR to fp tolerance
+            let mut max_err = 0f32;
+            for (a, b) in nat_vals.iter().zip(&pj_vals) {
+                if a.is_finite() && b.is_finite() {
+                    max_err = max_err.max((a - b).abs() / a.abs().max(1e-9));
+                } else {
+                    assert_eq!(a, b, "finite/inf mismatch between backends");
+                }
+            }
+            assert!(max_err < 1e-4, "backend divergence {max_err}");
+            println!("  agreement: max relative error {max_err:.2e} ✓");
+        }
+    }
+
+    println!("\nend-to-end OK: all three layers composed on a real workload.");
+    let _ = std::fs::remove_dir_all(&tmp);
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Perf probe: time the pieces of a GMP-C steady-state iteration.
+use graphmp::apps::PageRank;
+use graphmp::benchutil::scale;
+use graphmp::compress::CacheMode;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::datasets::Dataset;
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::storage::disk::Disk;
+use std::time::Instant;
+
+fn main() {
+    let g = Dataset::Eu2015Sim.generate();
+    let tmp = std::env::temp_dir().join("graphmp_perf_probe");
+    let _ = std::fs::remove_dir_all(&tmp);
+    let disk = Disk::unthrottled();
+    let prep = PrepConfig { edges_per_shard: scale::EDGES_PER_SHARD, max_rows_per_shard: scale::MAX_ROWS, weighted: false, ..Default::default() };
+    let (dir, rep) = preprocess_into(&g, &tmp, &disk, prep).unwrap();
+    println!("shards={} bytes={}", rep.num_shards, rep.shard_bytes);
+    drop(g);
+    for mode in [CacheMode::M1Raw, CacheMode::M2Fast, CacheMode::M3Zlib1] {
+        let mut e = VswEngine::open(&dir, &disk, EngineConfig {
+            cache_mode: Some(mode), cache_capacity: u64::MAX >> 1, selective: false, ..Default::default()
+        }).unwrap();
+        let _ = e.run(&PageRank::new(), 1).unwrap(); // fill
+        let t = Instant::now();
+        let r = e.run(&PageRank::new(), 3).unwrap();
+        println!("{}: 3 steady iters wall={:.3}s (per-iter {:.3}s) sim={:.3}", mode.name(), t.elapsed().as_secs_f64(), t.elapsed().as_secs_f64()/3.0, r.total_sim_disk_seconds);
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
+}

@@ -1,0 +1,126 @@
+"""AOT-lower the Layer-2 shard updates to HLO text for the rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from /root/repo/python):
+    python -m compile.aot --out-dir ../artifacts
+
+Emits, per size variant:
+    pagerank_shard_<v>.hlo.txt     (src, inv_out_deg, col, seg, w, base) -> (f32[Rc],)
+    relax_min_shard_<v>.hlo.txt    (src, col, seg, w, cur)               -> (f32[Rc],)
+    pagerank_power_<v>.hlo.txt     (col, seg, w, inv_out_deg)            -> (f32[Vc],)
+plus ``manifest.txt`` -- one record per line, parsed by rust/src/runtime:
+    artifact <name> variant=<v> vc=<Vc> ec=<Ec> rc=<Rc> iters=<n> path=<file>
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.spmv import vmem_footprint_bytes
+
+# (name, Vc, Ec, Rc).  Vc covers the padded vertex count of the target
+# graph; Ec/Rc are per-shard capacities.  Ec must be a multiple of the
+# kernel block (8192).  Sized for the sim datasets in rust/src/graph.
+VARIANTS = [
+    ("tiny", 2_048, 8_192, 512),
+    # "smalltight" trades chunking (shards wider than Ec are split and
+    # partials combined) for 4x less gather padding per call — measured
+    # ~2x faster on the pjrt backend for uk2007-sim-shaped shards (§Perf).
+    ("smalltight", 65_536, 65_536, 8_192),
+    ("small", 65_536, 262_144, 8_192),
+    ("medium", 262_144, 1_048_576, 16_384),
+    ("large", 1_048_576, 2_097_152, 32_768),
+]
+
+# Fixed-iteration in-memory power PageRank (GraphMat-like path): variant ->
+# (edge capacity, iterations).  Only lowered for sizes small enough that a
+# whole sim graph fits one executable.
+POWER_VARIANTS = {"tiny": 10, "small": 10}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name: str, vc: int, ec: int, rc: int):
+    """Yield (artifact_name, hlo_text, extra_manifest_fields) records."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sv = jax.ShapeDtypeStruct((vc,), f32)
+    se = jax.ShapeDtypeStruct((ec,), i32)
+    sw = jax.ShapeDtypeStruct((ec,), f32)
+    sr = jax.ShapeDtypeStruct((rc,), f32)
+    s1 = jax.ShapeDtypeStruct((1,), f32)
+
+    pr = jax.jit(model.build_pagerank_shard(rc)).lower(sv, sv, se, se, sw, s1)
+    yield f"pagerank_shard_{name}", to_hlo_text(pr), {}
+
+    relax = jax.jit(model.build_relax_min_shard()).lower(sv, se, se, sw, sr)
+    yield f"relax_min_shard_{name}", to_hlo_text(relax), {}
+
+    if name in POWER_VARIANTS:
+        iters = POWER_VARIANTS[name]
+        power = jax.jit(model.build_pagerank_power(iters, vc)).lower(
+            se, se, sw, sv
+        )
+        yield f"pagerank_power_{name}", to_hlo_text(power), {"iters": iters}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default="tiny,smalltight,small,medium",
+        help="comma list from {tiny,smalltight,small,medium,large}",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    wanted = set(args.variants.split(","))
+
+    manifest_lines = []
+    for name, vc, ec, rc in VARIANTS:
+        if name not in wanted:
+            continue
+        for art_name, text, extra in lower_variant(name, vc, ec, rc):
+            fname = f"{art_name}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            fields = [
+                f"artifact {art_name}",
+                f"variant={name}",
+                f"vc={vc}",
+                f"ec={ec}",
+                f"rc={rc}",
+            ]
+            fields += [f"{k}={v}" for k, v in extra.items()]
+            fields.append(f"path={fname}")
+            manifest_lines.append(" ".join(fields))
+            print(f"wrote {path} ({len(text)} chars)")
+        for kern in ("sum", "min"):
+            fp = vmem_footprint_bytes(vc, min(8192, ec), rc, kern)
+            print(f"  variant={name} kernel={kern} est. VMEM/step = {fp/1024:.0f} KiB")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

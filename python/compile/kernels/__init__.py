@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for GraphMP shard updates.
+
+The per-shard vertex update of the VSW model is a sparse gather + segment
+reduction over a CSR edge shard.  Two kernels cover the paper's three
+applications:
+
+- :func:`spmv.seg_sum_gather` -- PageRank's weighted neighbour sum.
+- :func:`spmv.seg_min_gather` -- the min-relaxation shared by SSSP and CC.
+
+Both are written with ``pallas_call(..., interpret=True)`` so they lower to
+plain HLO and run on any PJRT backend (the rust CPU client included).  See
+``ref.py`` for the pure-jnp oracles they are tested against.
+"""
+
+from .spmv import seg_min_gather, seg_sum_gather  # noqa: F401

@@ -1,0 +1,168 @@
+"""Pallas kernels: gather + segment reduction over an edge shard.
+
+GraphMP stores each shard as CSR over the shard's destination-vertex
+interval.  The rust coordinator flattens CSR ``row`` into a per-edge
+segment id (``seg[e] = local row of edge e``), so the kernels only see
+three flat arrays per shard:
+
+- ``col[e]``  -- global source-vertex id of edge ``e`` (the CSR col array),
+- ``seg[e]``  -- local destination row of edge ``e`` in ``[0, rows)``,
+- ``w[e]``    -- edge weight (PageRank uses the gathered ``inv_out_deg``
+                 instead; SSSP uses real weights; CC uses zeros).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the edge axis is blocked
+with ``BlockSpec`` -- each grid step streams one ``block_e``-sized slab of
+``col``/``seg``/``w`` from HBM into VMEM, while the full source-vertex
+array and the output rows stay VMEM-resident across all grid steps (the
+same "keep vertices in fast memory, stream edges" insight the paper applies
+at the RAM/disk level).  The output block index map is constant, so the
+segment accumulation revisits the same VMEM tile each step.
+
+Padding convention (reduction identities, fixed AOT shapes):
+- sum kernel: padding edges carry ``w = 0`` (contribution 0, any seg/col),
+- min kernel: padding edges carry ``w = +inf``.
+
+``interpret=True`` everywhere: real-TPU lowering emits Mosaic custom-calls
+the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default edge-block size. 8192 edges * (4B col + 4B seg + 4B w) = 96KiB of
+# streamed VMEM per step -- small next to the resident src array, and large
+# enough that the gather dominates the block-switch overhead.
+DEFAULT_BLOCK_E = 8192
+
+
+def _sum_kernel(src_ref, deg_ref, col_ref, seg_ref, w_ref, out_ref):
+    """One grid step: accumulate one edge block into the output rows.
+
+    out[r] += sum_{e in block: seg[e]=r} src[col[e]] * deg[col[e]] * w[e]
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    cols = col_ref[...]
+    segs = seg_ref[...]
+    # Gather from the VMEM-resident source-vertex arrays.
+    src = src_ref[...]
+    deg = deg_ref[...]
+    contrib = src[cols] * deg[cols] * w_ref[...]
+    out_ref[...] += jnp.zeros_like(out_ref).at[segs].add(contrib)
+
+
+def _min_kernel(src_ref, col_ref, seg_ref, w_ref, cur_ref, out_ref):
+    """One grid step of the min relaxation.
+
+    out[r] = min(cur[r], min_{e in block: seg[e]=r} src[col[e]] + w[e])
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = cur_ref[...]
+
+    cols = col_ref[...]
+    segs = seg_ref[...]
+    src = src_ref[...]
+    cand = src[cols] + w_ref[...]
+    inf = jnp.full_like(out_ref, jnp.inf)
+    out_ref[...] = jnp.minimum(out_ref[...], inf.at[segs].min(cand))
+
+
+def _edge_grid(num_edges: int, block_e: int) -> int:
+    if num_edges % block_e != 0:
+        raise ValueError(
+            f"num_edges={num_edges} must be a multiple of block_e={block_e}; "
+            "the rust coordinator pads shards to the artifact's edge capacity"
+        )
+    return num_edges // block_e
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "block_e"))
+def seg_sum_gather(src, deg, col, seg, w, *, rows: int, block_e: int = DEFAULT_BLOCK_E):
+    """PageRank shard reduction: ``out[r] = Σ src[col[e]]·deg[col[e]]·w[e]``.
+
+    Args:
+      src:  f32[Vc]  source-vertex values (SrcVertexArray slice-free: whole
+            array; VSW keeps every vertex in memory).
+      deg:  f32[Vc]  per-vertex multiplier, ``1/out_degree`` for PageRank.
+      col:  i32[Ec]  per-edge source vertex ids.
+      seg:  i32[Ec]  per-edge local destination rows, in ``[0, rows)``.
+      w:    f32[Ec]  per-edge weight; 0 marks padding.
+      rows: static number of destination rows (the artifact's Rc).
+    Returns:
+      f32[rows] summed contributions per destination row.
+    """
+    num_edges = col.shape[0]
+    block_e = min(block_e, num_edges)
+    grid = _edge_grid(num_edges, block_e)
+    return pl.pallas_call(
+        _sum_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(src.shape, lambda i: (0,)),          # resident
+            pl.BlockSpec(deg.shape, lambda i: (0,)),          # resident
+            pl.BlockSpec((block_e,), lambda i: (i,)),         # streamed
+            pl.BlockSpec((block_e,), lambda i: (i,)),         # streamed
+            pl.BlockSpec((block_e,), lambda i: (i,)),         # streamed
+        ],
+        out_specs=pl.BlockSpec((rows,), lambda i: (0,)),      # revisited
+        out_shape=jax.ShapeDtypeStruct((rows,), src.dtype),
+        interpret=True,
+    )(src, deg, col, seg, w)
+
+
+@functools.partial(jax.jit, static_argnames=("block_e",))
+def seg_min_gather(src, col, seg, w, cur, *, block_e: int = DEFAULT_BLOCK_E):
+    """SSSP/CC shard relaxation: ``out[r] = min(cur[r], min src[col[e]]+w[e])``.
+
+    Args:
+      src: f32[Vc] source-vertex values (distances / component labels).
+      col: i32[Ec] per-edge source vertex ids.
+      seg: i32[Ec] per-edge local destination rows.
+      w:   f32[Ec] edge weights; +inf marks padding; zeros for CC.
+      cur: f32[Rc] current values of the shard's destination rows.
+    Returns:
+      f32[Rc] relaxed values.
+    """
+    num_edges = col.shape[0]
+    rows = cur.shape[0]
+    block_e = min(block_e, num_edges)
+    grid = _edge_grid(num_edges, block_e)
+    return pl.pallas_call(
+        _min_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec(src.shape, lambda i: (0,)),          # resident
+            pl.BlockSpec((block_e,), lambda i: (i,)),         # streamed
+            pl.BlockSpec((block_e,), lambda i: (i,)),         # streamed
+            pl.BlockSpec((block_e,), lambda i: (i,)),         # streamed
+            pl.BlockSpec((rows,), lambda i: (0,)),            # resident
+        ],
+        out_specs=pl.BlockSpec((rows,), lambda i: (0,)),      # revisited
+        out_shape=jax.ShapeDtypeStruct((rows,), src.dtype),
+        interpret=True,
+    )(src, col, seg, w, cur)
+
+
+def vmem_footprint_bytes(vc: int, ec_block: int, rows: int, kernel: str) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md §Perf).
+
+    Resident: src (+deg for sum) f32[Vc] and the f32[rows] output tile;
+    streamed: one block of col/seg (i32) and w (f32).
+    """
+    resident = vc * 4 * (2 if kernel == "sum" else 1) + rows * 4
+    if kernel == "min":
+        resident += rows * 4  # cur tile
+    streamed = ec_block * 4 * 3
+    return resident + streamed

@@ -1,0 +1,97 @@
+"""Layer-2 JAX model: GraphMP's per-shard vertex updates.
+
+Each function here is one fixed-shape compute graph that `aot.py` lowers to
+HLO text for the rust runtime.  They all call the Layer-1 Pallas kernels in
+``kernels/`` so kernel and surrounding arithmetic lower into a single HLO
+module (one PJRT executable per shard update, no host round-trips inside).
+
+Shapes are static per AOT *variant* (tiny/small/medium...):
+  Vc -- padded vertex capacity (graph |V| rounded up; last slot is the
+        sentinel: value 0 for sums, +inf for mins),
+  Ec -- edge capacity of one shard (multiple of the kernel block size),
+  Rc -- row capacity of one shard (max interval width).
+
+The rust coordinator pads every shard to (Ec, Rc) with identity edges and
+never recompiles at runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import seg_min_gather, seg_sum_gather
+
+
+def pagerank_shard(src, inv_out_deg, col, seg, w, base, *, rows: int):
+    """One VSW PageRank shard update (Algorithm 3, PR_Update).
+
+    Args:
+      src:          f32[Vc]  SrcVertexArray (current ranks).
+      inv_out_deg:  f32[Vc]  1/out_degree (0 for dangling vertices).
+      col, seg:     i32[Ec]  CSR edges of the shard (per-edge source id,
+                             local destination row).
+      w:            f32[Ec]  1 for real edges, 0 for padding.
+      base:         f32[1]   (1-d)/|V| teleport term (|V| = real count).
+      rows:         static row capacity Rc.
+    Returns:
+      f32[Rc] updated ranks for the shard's destination interval.
+    """
+    s = seg_sum_gather(src, inv_out_deg, col, seg, w, rows=rows)
+    return base[0] + 0.85 * s
+
+
+def relax_min_shard(src, col, seg, w, cur):
+    """One VSW min-relaxation shard update (SSSP_Update / CC_Update).
+
+    SSSP: src = distances, w = edge weights (+inf padding).
+    CC:   src = component labels as f32, w = 0 (+inf padding).
+    Returns f32[Rc] = min(cur, segment-min of src[col]+w).
+    """
+    return seg_min_gather(src, col, seg, w, cur)
+
+
+def pagerank_power(col, seg, w, inv_out_deg, num_iters: int, num_vertices: int):
+    """Full-graph fixed-iteration power PageRank (GraphMat-like baseline).
+
+    The in-memory SpMV view: the whole edge list is one "shard" with
+    seg = destination vertex id, iterated with lax.scan.  Used by the
+    fig9/fig10 baseline path to show L2 can also host the entire app when
+    the graph fits in memory.
+    """
+    n = num_vertices
+    ranks0 = jnp.full((inv_out_deg.shape[0],), 1.0 / n, dtype=jnp.float32)
+    base = (1.0 - 0.85) / n
+
+    def step(ranks, _):
+        s = seg_sum_gather(ranks, inv_out_deg, col, seg, w, rows=inv_out_deg.shape[0])
+        new = base + 0.85 * s
+        return new.astype(jnp.float32), ()
+
+    ranks, _ = jax.lax.scan(step, ranks0, None, length=num_iters)
+    return ranks
+
+
+def build_pagerank_shard(rows: int):
+    """Bind the static row capacity Rc into pagerank_shard for lowering."""
+
+    def fn(src, inv_out_deg, col, seg, w, base):
+        return (pagerank_shard(src, inv_out_deg, col, seg, w, base, rows=rows),)
+
+    return fn
+
+
+def build_relax_min_shard():
+    def fn(src, col, seg, w, cur):
+        return (seg_min_gather(src, col, seg, w, cur),)
+
+    return fn
+
+
+def build_pagerank_power(num_iters: int, num_vertices: int):
+    def fn(col, seg, w, inv_out_deg):
+        return (
+            pagerank_power(col, seg, w, inv_out_deg, num_iters, num_vertices),
+        )
+
+    return fn

@@ -1,0 +1,74 @@
+"""AOT pipeline tests: lowering emits parseable HLO text + sane manifest."""
+
+import os
+
+import pytest
+
+from compile import aot
+
+
+class TestLowering:
+    @pytest.fixture(scope="class")
+    def tiny_artifacts(self):
+        return list(aot.lower_variant("tiny", 2048, 8192, 512))
+
+    def test_emits_three_artifacts(self, tiny_artifacts):
+        names = [n for n, _, _ in tiny_artifacts]
+        assert names == [
+            "pagerank_shard_tiny",
+            "relax_min_shard_tiny",
+            "pagerank_power_tiny",
+        ]
+
+    def test_hlo_text_is_module(self, tiny_artifacts):
+        for name, text, _ in tiny_artifacts:
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_shapes_in_entry_signature(self, tiny_artifacts):
+        name, text, _ = tiny_artifacts[0]
+        # src f32[2048], col s32[8192], output tuple (f32[512])
+        assert "f32[2048]" in text
+        assert "s32[8192]" in text
+        assert "f32[512]" in text
+
+    def test_no_custom_calls(self, tiny_artifacts):
+        """interpret=True must lower to plain HLO ops (no Mosaic)."""
+        for name, text, _ in tiny_artifacts:
+            assert "custom-call" not in text, name
+
+    def test_power_iters_recorded(self, tiny_artifacts):
+        _, _, extra = tiny_artifacts[2]
+        assert extra == {"iters": aot.POWER_VARIANTS["tiny"]}
+
+
+class TestManifest:
+    def test_round_trip(self, tmp_path):
+        import subprocess
+        import sys
+
+        out = tmp_path / "arts"
+        r = subprocess.run(
+            [sys.executable, "-m", "compile.aot",
+             "--out-dir", str(out), "--variants", "tiny"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True,
+        )
+        assert r.returncode == 0, r.stderr
+        manifest = (out / "manifest.txt").read_text().strip().splitlines()
+        assert len(manifest) == 3
+        for line in manifest:
+            fields = line.split()
+            assert fields[0] == "artifact"
+            kv = dict(f.split("=", 1) for f in fields[2:])
+            assert (out / kv["path"]).exists()
+            assert int(kv["vc"]) == 2048
+            assert int(kv["ec"]) == 8192
+            assert int(kv["rc"]) == 512
+
+    def test_variant_table_block_aligned(self):
+        from compile.kernels.spmv import DEFAULT_BLOCK_E
+
+        for name, vc, ec, rc in aot.VARIANTS:
+            assert ec % min(DEFAULT_BLOCK_E, ec) == 0, name
+            assert rc <= vc, name

@@ -1,0 +1,231 @@
+"""Pallas kernels vs pure-jnp oracle: the core L1 correctness signal.
+
+Hypothesis sweeps shapes, index patterns and value ranges; fixed cases pin
+the padding conventions the rust coordinator relies on.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.spmv import (
+    DEFAULT_BLOCK_E,
+    seg_min_gather,
+    seg_sum_gather,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import (
+    pagerank_dense_ref,
+    seg_min_gather_ref,
+    seg_sum_gather_ref,
+)
+
+INF = np.float32(np.inf)
+
+
+def _mk(rng, vc, ec, rc, w_mode="unit"):
+    src = jnp.asarray(rng.random(vc, dtype=np.float32))
+    deg = jnp.asarray(rng.random(vc, dtype=np.float32))
+    col = jnp.asarray(rng.integers(0, vc, ec).astype(np.int32))
+    seg = jnp.asarray(rng.integers(0, rc, ec).astype(np.int32))
+    if w_mode == "unit":
+        w = jnp.ones((ec,), jnp.float32)
+    else:
+        w = jnp.asarray(rng.random(ec, dtype=np.float32))
+    return src, deg, col, seg, w
+
+
+# ---------------------------------------------------------------- sum kernel
+
+
+class TestSegSumGather:
+    def test_single_block(self):
+        rng = np.random.default_rng(1)
+        src, deg, col, seg, w = _mk(rng, 32, 64, 8, "rand")
+        out = seg_sum_gather(src, deg, col, seg, w, rows=8, block_e=64)
+        ref = seg_sum_gather_ref(src, deg, col, seg, w, rows=8)
+        np.testing.assert_allclose(out, ref, rtol=2e-5)
+
+    def test_multi_block_accumulation(self):
+        """Grid revisiting the output block must accumulate, not overwrite."""
+        rng = np.random.default_rng(2)
+        src, deg, col, seg, w = _mk(rng, 128, 4 * DEFAULT_BLOCK_E, 64, "rand")
+        out = seg_sum_gather(src, deg, col, seg, w, rows=64)
+        ref = seg_sum_gather_ref(src, deg, col, seg, w, rows=64)
+        np.testing.assert_allclose(out, ref, rtol=2e-4)
+
+    def test_padding_is_identity(self):
+        """w=0 edges must contribute exactly nothing, whatever col/seg say."""
+        rng = np.random.default_rng(3)
+        src, deg, col, seg, w = _mk(rng, 32, 64, 8, "rand")
+        col_pad = jnp.concatenate([col, jnp.full((64,), 31, jnp.int32)])
+        seg_pad = jnp.concatenate([seg, jnp.full((64,), 7, jnp.int32)])
+        w_pad = jnp.concatenate([w, jnp.zeros((64,), jnp.float32)])
+        out = seg_sum_gather(src, deg, col_pad, seg_pad, w_pad, rows=8, block_e=128)
+        ref = seg_sum_gather_ref(src, deg, col, seg, w, rows=8)
+        np.testing.assert_allclose(out, ref, rtol=2e-5)
+
+    def test_empty_segment_is_zero(self):
+        src = jnp.ones((4,), jnp.float32)
+        deg = jnp.ones((4,), jnp.float32)
+        col = jnp.zeros((8,), jnp.int32)
+        seg = jnp.zeros((8,), jnp.int32)  # only row 0 touched
+        w = jnp.ones((8,), jnp.float32)
+        out = seg_sum_gather(src, deg, col, seg, w, rows=4, block_e=8)
+        assert float(out[0]) == pytest.approx(8.0)
+        assert np.all(np.asarray(out[1:]) == 0.0)
+
+    def test_all_edges_one_row(self):
+        """Max-skew: every edge lands in one destination row."""
+        rng = np.random.default_rng(4)
+        vc, ec = 64, 2 * DEFAULT_BLOCK_E
+        src = jnp.asarray(rng.random(vc, dtype=np.float32))
+        deg = jnp.ones((vc,), jnp.float32)
+        col = jnp.asarray(rng.integers(0, vc, ec).astype(np.int32))
+        seg = jnp.full((ec,), 3, jnp.int32)
+        w = jnp.ones((ec,), jnp.float32)
+        out = seg_sum_gather(src, deg, col, seg, w, rows=8)
+        ref = seg_sum_gather_ref(src, deg, col, seg, w, rows=8)
+        np.testing.assert_allclose(out, ref, rtol=2e-4)
+
+    def test_rejects_non_multiple_block(self):
+        src = jnp.ones((4,), jnp.float32)
+        with pytest.raises(ValueError, match="multiple"):
+            seg_sum_gather(
+                src, src,
+                jnp.zeros((10,), jnp.int32),
+                jnp.zeros((10,), jnp.int32),
+                jnp.ones((10,), jnp.float32),
+                rows=4,
+                block_e=4,
+            )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        vc=st.integers(2, 200),
+        rc=st.integers(1, 64),
+        log_e=st.integers(3, 10),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, vc, rc, log_e, seed):
+        rng = np.random.default_rng(seed)
+        ec = 2**log_e
+        src, deg, col, seg, w = _mk(rng, vc, ec, rc, "rand")
+        out = seg_sum_gather(src, deg, col, seg, w, rows=rc, block_e=min(ec, 256))
+        ref = seg_sum_gather_ref(src, deg, col, seg, w, rows=rc)
+        np.testing.assert_allclose(out, ref, rtol=5e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------- min kernel
+
+
+class TestSegMinGather:
+    def test_single_block(self):
+        rng = np.random.default_rng(5)
+        src, _, col, seg, w = _mk(rng, 32, 64, 8, "rand")
+        cur = jnp.asarray(rng.random(8, dtype=np.float32))
+        out = seg_min_gather(src, col, seg, w, cur, block_e=64)
+        ref = seg_min_gather_ref(src, col, seg, w, cur)
+        np.testing.assert_allclose(out, ref)
+
+    def test_multi_block(self):
+        rng = np.random.default_rng(6)
+        ec = 3 * DEFAULT_BLOCK_E
+        src, _, col, seg, w = _mk(rng, 100, ec, 32, "rand")
+        cur = jnp.asarray(rng.random(32, dtype=np.float32))
+        out = seg_min_gather(src, col, seg, w, cur)
+        ref = seg_min_gather_ref(src, col, seg, w, cur)
+        np.testing.assert_allclose(out, ref)
+
+    def test_inf_padding_is_identity(self):
+        rng = np.random.default_rng(7)
+        src, _, col, seg, w = _mk(rng, 32, 64, 8, "rand")
+        cur = jnp.asarray(rng.random(8, dtype=np.float32))
+        col_pad = jnp.concatenate([col, jnp.zeros((64,), jnp.int32)])
+        seg_pad = jnp.concatenate([seg, jnp.zeros((64,), jnp.int32)])
+        w_pad = jnp.concatenate([w, jnp.full((64,), INF)])
+        out = seg_min_gather(src, col_pad, seg_pad, w_pad, cur, block_e=128)
+        ref = seg_min_gather_ref(src, col, seg, w, cur)
+        np.testing.assert_allclose(out, ref)
+
+    def test_untouched_rows_keep_cur(self):
+        """SSSP invariant: rows with no incoming active edge keep cur."""
+        src = jnp.full((4,), INF)
+        col = jnp.zeros((8,), jnp.int32)
+        seg = jnp.zeros((8,), jnp.int32)
+        w = jnp.ones((8,), jnp.float32)
+        cur = jnp.asarray([0.0, 5.0, 7.0, INF], jnp.float32)
+        out = seg_min_gather(src, col, seg, w, cur, block_e=8)
+        np.testing.assert_allclose(out, cur)
+
+    def test_sssp_relax_step(self):
+        """Hand case: source at 0, edges 0->1 (w=2), 0->2 (w=5), 1->2 (w=1)."""
+        src = jnp.asarray([0.0, INF, INF], jnp.float32)
+        # shard covering rows {1, 2} locally {0, 1}
+        col = jnp.asarray([0, 0, 1, 0], jnp.int32)
+        seg = jnp.asarray([0, 1, 1, 0], jnp.int32)
+        w = jnp.asarray([2.0, 5.0, 1.0, INF], jnp.float32)
+        cur = jnp.asarray([INF, INF], jnp.float32)
+        out = seg_min_gather(src, col, seg, w, cur, block_e=4)
+        np.testing.assert_allclose(out, [2.0, 5.0])
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        vc=st.integers(2, 200),
+        rc=st.integers(1, 64),
+        log_e=st.integers(3, 10),
+        seed=st.integers(0, 2**31 - 1),
+        inf_frac=st.floats(0.0, 0.9),
+    )
+    def test_hypothesis_matches_ref(self, vc, rc, log_e, seed, inf_frac):
+        rng = np.random.default_rng(seed)
+        ec = 2**log_e
+        src, _, col, seg, w = _mk(rng, vc, ec, rc, "rand")
+        # mix of +inf (unreached / padding) sources, the SSSP steady state
+        src = jnp.where(jnp.asarray(rng.random(vc) < inf_frac), INF, src)
+        cur = jnp.asarray(rng.random(rc, dtype=np.float32))
+        out = seg_min_gather(src, col, seg, w, cur, block_e=min(ec, 256))
+        ref = seg_min_gather_ref(src, col, seg, w, cur)
+        np.testing.assert_allclose(out, ref)
+
+
+# ------------------------------------------------------------------- dtypes
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_sum_dtype_sweep(dtype):
+    if dtype == jnp.float64 and not jax.config.jax_enable_x64:
+        pytest.skip("x64 disabled")
+    rng = np.random.default_rng(8)
+    src = jnp.asarray(rng.random(16), dtype)
+    deg = jnp.ones((16,), dtype)
+    col = jnp.asarray(rng.integers(0, 16, 32).astype(np.int32))
+    seg = jnp.asarray(rng.integers(0, 4, 32).astype(np.int32))
+    w = jnp.ones((32,), dtype)
+    out = seg_sum_gather(src, deg, col, seg, w, rows=4, block_e=32)
+    ref = seg_sum_gather_ref(src, deg, col, seg, w, rows=4)
+    np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+def test_vmem_footprint_within_budget():
+    """DESIGN.md §Perf: every AOT variant's working set fits 16MiB VMEM."""
+    from compile.aot import VARIANTS
+
+    for name, vc, ec, rc in VARIANTS:
+        for kern in ("sum", "min"):
+            fp = vmem_footprint_bytes(vc, min(DEFAULT_BLOCK_E, ec), rc, kern)
+            assert fp < 16 * 1024 * 1024, (name, kern, fp)
+
+
+def test_pagerank_dense_ref_sums_to_one():
+    rng = np.random.default_rng(9)
+    n = 16
+    adj = (rng.random((n, n)) < 0.3).astype(np.float32)
+    np.fill_diagonal(adj, 0)
+    deg = adj.sum(axis=1)
+    # patch dangling vertices: paper's formulation just drops their mass,
+    # so total sum < 1 when any out_deg == 0; give each a self-loop-free out
+    ranks = pagerank_dense_ref(jnp.asarray(adj), jnp.asarray(deg), iters=30)
+    assert np.all(np.asarray(ranks) > 0)

@@ -1,0 +1,191 @@
+"""Layer-2 model tests: shard updates compose into whole-app numerics.
+
+Builds a small random graph in numpy, shards it exactly like the rust
+preprocessor (destination-interval CSR + padding), runs the L2 shard
+updates until convergence, and checks against dense references.  This is
+the contract test for the rust coordinator: if these invariants hold here,
+the rust side only has to reproduce the same padding/layout.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels.ref import pagerank_dense_ref
+
+INF = np.float32(np.inf)
+
+
+def _random_graph(rng, n, m):
+    """Random directed multigraph-free edge list."""
+    edges = set()
+    while len(edges) < m:
+        u, v = rng.integers(0, n, 2)
+        if u != v:
+            edges.add((int(u), int(v)))
+    return sorted(edges, key=lambda e: (e[1], e[0]))  # sorted by destination
+
+
+def _shard(edges, n, num_shards, ec, weights=None):
+    """Destination-interval sharding with padding, mirroring rust prep/."""
+    bounds = np.linspace(0, n, num_shards + 1).astype(int)
+    shards = []
+    for s in range(num_shards):
+        lo, hi = bounds[s], bounds[s + 1]
+        es = [(u, v) for (u, v) in edges if lo <= v < hi]
+        col = np.full(ec, 0, np.int32)
+        seg = np.full(ec, 0, np.int32)
+        w = np.zeros(ec, np.float32)
+        wmin = np.full(ec, INF, np.float32)
+        for i, (u, v) in enumerate(es):
+            col[i] = u
+            seg[i] = v - lo
+            w[i] = 1.0
+            wmin[i] = 1.0 if weights is None else weights[(u, v)]
+        shards.append((lo, hi, col, seg, w, wmin))
+    return shards
+
+
+class TestPageRankShardComposition:
+    def test_matches_dense_reference(self):
+        rng = np.random.default_rng(0)
+        n, m, vc, ec, rc = 24, 80, 32, 128, 16
+        edges = _random_graph(rng, n, m)
+        out_deg = np.zeros(vc, np.float32)
+        for u, _ in edges:
+            out_deg[u] += 1
+        inv = np.where(out_deg > 0, 1.0 / np.maximum(out_deg, 1), 0.0).astype(
+            np.float32
+        )
+        shards = _shard(edges, n, 3, ec)
+
+        src = np.full(vc, 1.0 / n, np.float32)
+        src[n:] = 0.0
+        base = jnp.asarray([0.15 / n], jnp.float32)
+        for _ in range(25):
+            dst = src.copy()
+            for lo, hi, col, seg, w, _ in shards:
+                out = model.pagerank_shard(
+                    jnp.asarray(src), jnp.asarray(inv),
+                    jnp.asarray(col), jnp.asarray(seg), jnp.asarray(w),
+                    base, rows=rc,
+                )
+                dst[lo:hi] = np.asarray(out)[: hi - lo]
+            src = dst
+
+        adj = np.zeros((n, n), np.float32)
+        for u, v in edges:
+            adj[u, v] = 1
+        ref = pagerank_dense_ref(jnp.asarray(adj), jnp.asarray(adj.sum(1)), 25)
+        np.testing.assert_allclose(src[:n], np.asarray(ref), rtol=1e-4)
+
+    def test_rank_mass_conserved_without_dangling(self):
+        """With no dangling vertices, total rank mass stays 1."""
+        rng = np.random.default_rng(1)
+        n, vc, ec, rc = 16, 16, 64, 16
+        # ring + random chords: every vertex has out-degree >= 1
+        edges = sorted(
+            {(i, (i + 1) % n) for i in range(n)}
+            | {tuple(map(int, rng.integers(0, n, 2))) for _ in range(30)},
+            key=lambda e: (e[1], e[0]),
+        )
+        edges = [(u, v) for u, v in edges if u != v]
+        out_deg = np.zeros(vc, np.float32)
+        for u, _ in edges:
+            out_deg[u] += 1
+        inv = (1.0 / np.maximum(out_deg, 1)).astype(np.float32)
+        shards = _shard(edges, n, 2, ec)
+        src = np.full(vc, 1.0 / n, np.float32)
+        base = jnp.asarray([0.15 / n], jnp.float32)
+        for _ in range(10):
+            dst = src.copy()
+            for lo, hi, col, seg, w, _ in shards:
+                out = model.pagerank_shard(
+                    jnp.asarray(src), jnp.asarray(inv),
+                    jnp.asarray(col), jnp.asarray(seg), jnp.asarray(w),
+                    base, rows=rc,
+                )
+                dst[lo:hi] = np.asarray(out)[: hi - lo]
+            src = dst
+        assert float(np.sum(src[:n])) == pytest.approx(1.0, rel=1e-4)
+
+
+class TestRelaxMinComposition:
+    def test_sssp_matches_bellman_ford(self):
+        rng = np.random.default_rng(2)
+        n, vc, ec = 20, 32, 128
+        edges = _random_graph(rng, n, 60)
+        weights = {e: float(rng.integers(1, 10)) for e in edges}
+        shards = _shard(edges, n, 2, ec, weights)
+
+        dist = np.full(vc, INF, np.float32)
+        dist[0] = 0.0
+        for _ in range(n):
+            new = dist.copy()
+            for lo, hi, col, seg, _, wmin in shards:
+                cur = jnp.asarray(new[lo : lo + len(wmin[:0]) + (hi - lo)])
+                # pad cur to rc = hi-lo rows exactly
+                out = model.relax_min_shard(
+                    jnp.asarray(dist), jnp.asarray(col), jnp.asarray(seg),
+                    jnp.asarray(wmin), jnp.asarray(dist[lo:hi]),
+                )
+                new[lo:hi] = np.asarray(out)
+            dist = new
+
+        # Bellman-Ford reference
+        ref = np.full(n, np.inf)
+        ref[0] = 0
+        for _ in range(n):
+            for (u, v), w in weights.items():
+                if ref[u] + w < ref[v]:
+                    ref[v] = ref[u] + w
+        np.testing.assert_allclose(dist[:n], ref.astype(np.float32))
+
+    def test_cc_label_propagation_converges(self):
+        """Two disjoint cliques -> two distinct final labels (min-label)."""
+        n, vc, ec = 8, 8, 64
+        cliq1 = [(u, v) for u in range(4) for v in range(4) if u != v]
+        cliq2 = [(u, v) for u in range(4, 8) for v in range(4, 8) if u != v]
+        edges = sorted(cliq1 + cliq2, key=lambda e: (e[1], e[0]))
+        weights = {e: 0.0 for e in edges}
+        shards = _shard(edges, n, 2, ec, weights)
+        lab = np.arange(vc, dtype=np.float32)
+        for _ in range(5):
+            new = lab.copy()
+            for lo, hi, col, seg, _, wmin in shards:
+                out = model.relax_min_shard(
+                    jnp.asarray(lab), jnp.asarray(col), jnp.asarray(seg),
+                    jnp.asarray(wmin), jnp.asarray(lab[lo:hi]),
+                )
+                new[lo:hi] = np.asarray(out)
+            lab = new
+        assert set(lab[:4]) == {0.0}
+        assert set(lab[4:8]) == {4.0}
+
+
+class TestPagerankPower:
+    def test_matches_iterated_shard_updates(self):
+        rng = np.random.default_rng(3)
+        n, vc, ec = 24, 32, 128
+        edges = _random_graph(rng, n, 80)
+        col = np.zeros(ec, np.int32)
+        seg = np.zeros(ec, np.int32)
+        w = np.zeros(ec, np.float32)
+        for i, (u, v) in enumerate(edges):
+            col[i], seg[i], w[i] = u, v, 1.0
+        out_deg = np.zeros(vc, np.float32)
+        for u, _ in edges:
+            out_deg[u] += 1
+        inv = np.where(out_deg > 0, 1.0 / np.maximum(out_deg, 1), 0.0).astype(
+            np.float32
+        )
+        ranks = model.pagerank_power(
+            jnp.asarray(col), jnp.asarray(seg), jnp.asarray(w),
+            jnp.asarray(inv), num_iters=10, num_vertices=n,
+        )
+        adj = np.zeros((n, n), np.float32)
+        for u, v in edges:
+            adj[u, v] = 1
+        ref = pagerank_dense_ref(jnp.asarray(adj), jnp.asarray(adj.sum(1)), 10)
+        np.testing.assert_allclose(np.asarray(ranks)[:n], np.asarray(ref), rtol=1e-4)

@@ -1,0 +1,244 @@
+//! Vertex programs: PageRank, SSSP, CC (paper Algorithm 3) + BFS extension.
+//!
+//! The paper's `Init`/`Update` API specialises, for all three evaluated
+//! applications, to one of two shard reductions — a weighted neighbour sum
+//! (PageRank) or a min-relaxation (SSSP, CC) — which is exactly the pair of
+//! AOT-compiled L2 artifacts.  A [`VertexProgram`] therefore declares its
+//! [`ShardCompute`] kind plus init/activation rules; the engine executes
+//! the kind on either backend (native rust or PJRT).
+
+use crate::graph::VertexId;
+
+/// The per-edge cost fed to the min-relaxation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeCost {
+    /// Use the shard's edge weights (SSSP).
+    Weights,
+    /// Unit cost per hop (BFS levels).
+    Unit,
+    /// Zero cost (CC label propagation).
+    Zero,
+}
+
+impl EdgeCost {
+    #[inline]
+    pub fn apply(&self, w: f32) -> f32 {
+        match self {
+            EdgeCost::Weights => w,
+            EdgeCost::Unit => 1.0,
+            EdgeCost::Zero => 0.0,
+        }
+    }
+}
+
+/// The two shard-update shapes the engine (and the AOT artifacts) know.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ShardCompute {
+    /// `dst[r] = base + damping * Σ_{e→r} src[col_e] * inv_out_deg[col_e]`
+    PageRankSum { damping: f32 },
+    /// `dst[r] = min(src[r], min_{e→r} src[col_e] + cost(w_e))`
+    RelaxMin { cost: EdgeCost },
+}
+
+/// A vertex-centric application (paper §2.3 `Init` + `Update`).
+pub trait VertexProgram: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Initial vertex values and the initially-active vertex set.
+    fn init(&self, num_vertices: u32) -> (Vec<f32>, Vec<VertexId>);
+
+    /// Which shard reduction drives `Update`.
+    fn compute(&self) -> ShardCompute;
+
+    /// Does a value change count as "activation"? PageRank: any change;
+    /// min-apps: strict decrease (monotone lattice).
+    #[inline]
+    fn is_update(&self, old: f32, new: f32) -> bool {
+        match self.compute() {
+            ShardCompute::PageRankSum { .. } => old != new,
+            ShardCompute::RelaxMin { .. } => new < old,
+        }
+    }
+
+    /// Whether the app needs the out-degree array (PageRank only).
+    fn uses_out_degrees(&self) -> bool {
+        matches!(self.compute(), ShardCompute::PageRankSum { .. })
+    }
+
+    /// Whether shard weights must be present on disk.
+    fn needs_weights(&self) -> bool {
+        matches!(
+            self.compute(),
+            ShardCompute::RelaxMin { cost: EdgeCost::Weights }
+        )
+    }
+}
+
+/// PageRank (Algorithm 3 lines 1–11).
+#[derive(Clone, Copy, Debug)]
+pub struct PageRank {
+    pub damping: f32,
+}
+
+impl PageRank {
+    pub fn new() -> Self {
+        PageRank { damping: 0.85 }
+    }
+}
+
+impl Default for PageRank {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl VertexProgram for PageRank {
+    fn name(&self) -> &'static str {
+        "pagerank"
+    }
+
+    fn init(&self, n: u32) -> (Vec<f32>, Vec<VertexId>) {
+        let v = vec![1.0 / n.max(1) as f32; n as usize];
+        (v, (0..n).collect())
+    }
+
+    fn compute(&self) -> ShardCompute {
+        ShardCompute::PageRankSum { damping: self.damping }
+    }
+}
+
+/// Single-source shortest paths (Algorithm 3 lines 12–25).
+#[derive(Clone, Copy, Debug)]
+pub struct Sssp {
+    pub source: VertexId,
+}
+
+impl Sssp {
+    pub fn new(source: VertexId) -> Self {
+        Sssp { source }
+    }
+}
+
+impl VertexProgram for Sssp {
+    fn name(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn init(&self, n: u32) -> (Vec<f32>, Vec<VertexId>) {
+        let mut v = vec![f32::INFINITY; n as usize];
+        if self.source < n {
+            v[self.source as usize] = 0.0;
+        }
+        (v, vec![self.source])
+    }
+
+    fn compute(&self) -> ShardCompute {
+        ShardCompute::RelaxMin { cost: EdgeCost::Weights }
+    }
+}
+
+/// Weakly connected components via min-label propagation (Algorithm 3
+/// lines 26–36; run on the symmetrised graph).  Labels are carried as f32
+/// — exact for ids < 2²⁴, asserted by the engine.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Cc;
+
+impl VertexProgram for Cc {
+    fn name(&self) -> &'static str {
+        "cc"
+    }
+
+    fn init(&self, n: u32) -> (Vec<f32>, Vec<VertexId>) {
+        ((0..n).map(|i| i as f32).collect(), (0..n).collect())
+    }
+
+    fn compute(&self) -> ShardCompute {
+        ShardCompute::RelaxMin { cost: EdgeCost::Zero }
+    }
+}
+
+/// BFS levels — a paper-adjacent extension app exercising the same
+/// min-relaxation with unit costs.
+#[derive(Clone, Copy, Debug)]
+pub struct Bfs {
+    pub source: VertexId,
+}
+
+impl Bfs {
+    pub fn new(source: VertexId) -> Self {
+        Bfs { source }
+    }
+}
+
+impl VertexProgram for Bfs {
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn init(&self, n: u32) -> (Vec<f32>, Vec<VertexId>) {
+        let mut v = vec![f32::INFINITY; n as usize];
+        if self.source < n {
+            v[self.source as usize] = 0.0;
+        }
+        (v, vec![self.source])
+    }
+
+    fn compute(&self) -> ShardCompute {
+        ShardCompute::RelaxMin { cost: EdgeCost::Unit }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pagerank_init_uniform_all_active() {
+        let (v, active) = PageRank::new().init(4);
+        assert_eq!(v, vec![0.25; 4]);
+        assert_eq!(active.len(), 4);
+    }
+
+    #[test]
+    fn sssp_init_source_only() {
+        let (v, active) = Sssp::new(2).init(4);
+        assert_eq!(v[2], 0.0);
+        assert!(v[0].is_infinite());
+        assert_eq!(active, vec![2]);
+    }
+
+    #[test]
+    fn cc_init_identity_labels() {
+        let (v, active) = Cc.init(3);
+        assert_eq!(v, vec![0.0, 1.0, 2.0]);
+        assert_eq!(active.len(), 3);
+    }
+
+    #[test]
+    fn update_semantics() {
+        let pr = PageRank::new();
+        assert!(pr.is_update(0.5, 0.6));
+        assert!(pr.is_update(0.6, 0.5));
+        assert!(!pr.is_update(0.5, 0.5));
+        let ss = Sssp::new(0);
+        assert!(ss.is_update(5.0, 3.0));
+        assert!(!ss.is_update(3.0, 5.0));
+        assert!(!ss.is_update(3.0, 3.0));
+    }
+
+    #[test]
+    fn edge_cost_apply() {
+        assert_eq!(EdgeCost::Weights.apply(2.5), 2.5);
+        assert_eq!(EdgeCost::Unit.apply(2.5), 1.0);
+        assert_eq!(EdgeCost::Zero.apply(2.5), 0.0);
+    }
+
+    #[test]
+    fn aux_requirements() {
+        assert!(PageRank::new().uses_out_degrees());
+        assert!(!Sssp::new(0).uses_out_degrees());
+        assert!(Sssp::new(0).needs_weights());
+        assert!(!Cc.needs_weights());
+        assert!(!Bfs::new(0).needs_weights());
+    }
+}

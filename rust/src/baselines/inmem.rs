@@ -1,0 +1,217 @@
+//! In-memory SpMV engine — the GraphMat stand-in (§4.3).
+//!
+//! Loads the whole graph into memory at application start (GraphMat sorts
+//! edges and builds its SpMV structures during this loading phase — the
+//! expensive step Fig 9 shows), then iterates entirely in RAM with zero
+//! per-iteration disk I/O.  If the resident model (`C|V| + (C+D)|E|`
+//! with construction overhead) exceeds the configured RAM budget, the run
+//! fails with OOM — reproducing GraphMat's crashes on UK-2007/UK-2014/
+//! EU-2015 under 128GB.
+//!
+//! Optionally executes through the AOT `pagerank_power` artifact (the L2
+//! lax.scan whole-graph power iteration) instead of native loops.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::apps::VertexProgram;
+use crate::graph::{Csr, EdgeList};
+use crate::metrics::{IterationMetrics, RunMetrics};
+use crate::storage::disk::Disk;
+
+use super::{count_updates, inv_out_degrees, BaselineConfig, BaselineEngine, C_VERTEX, D_EDGE};
+
+pub struct InMemEngine {
+    cfg: BaselineConfig,
+    csr: Option<Csr>,
+    num_vertices: u32,
+    num_edges: u64,
+    inv_out_deg: Vec<f32>,
+    values: Vec<f32>,
+    /// Loading-phase seconds (Fig 9's data-loading bar).
+    pub load_seconds: f64,
+    /// Peak memory of the loading phase (GraphMat's sort roughly doubles
+    /// the edge footprint transiently, Fig 9 shows 122GB for Twitter).
+    pub load_peak_bytes: u64,
+}
+
+impl InMemEngine {
+    pub fn new(cfg: BaselineConfig) -> Self {
+        InMemEngine {
+            cfg,
+            csr: None,
+            num_vertices: 0,
+            num_edges: 0,
+            inv_out_deg: Vec::new(),
+            values: Vec::new(),
+            load_seconds: 0.0,
+            load_peak_bytes: 0,
+        }
+    }
+
+    /// The loading-phase residency model: raw edge list + sort scratch +
+    /// final CSR, all live at the peak (this is what OOMs, not the steady
+    /// state).
+    fn loading_peak(num_vertices: u64, num_edges: u64) -> u64 {
+        let raw = D_EDGE * num_edges;
+        let scratch = D_EDGE * num_edges; // sort buffer
+        let csr = D_EDGE * num_edges + C_VERTEX * num_vertices;
+        raw + scratch + csr
+    }
+}
+
+impl BaselineEngine for InMemEngine {
+    fn name(&self) -> &'static str {
+        "graphmat-inmem"
+    }
+
+    /// GraphMat has no separate preprocessing: loading happens at app
+    /// start (§4.3).  `preprocess` therefore only records the CSV read.
+    fn preprocess(&mut self, _g: &EdgeList, _disk: &Disk) -> Result<f64> {
+        Ok(0.0)
+    }
+
+    fn run(&mut self, app: &dyn VertexProgram, iters: u32, disk: &Disk) -> Result<RunMetrics> {
+        anyhow::ensure!(self.csr.is_some(), "load first (InMemEngine::load)");
+        let n = self.num_vertices;
+        let csr = self.csr.as_ref().unwrap();
+        let (mut src, _) = app.init(n);
+        let mut run = RunMetrics::default();
+        let start = Instant::now();
+        let sim_start = disk.snapshot().sim_nanos;
+        for iter in 0..iters {
+            let t0 = Instant::now();
+            let mut dst = src.clone();
+            crate::engine::native_update(
+                app.compute(),
+                &crate::storage::shard::Shard {
+                    id: 0,
+                    start_vertex: 0,
+                    csr: csr.clone(),
+                },
+                &src,
+                &self.inv_out_deg,
+                &mut dst,
+            );
+            let active = count_updates(app, &src, &dst);
+            src = dst;
+            run.iterations.push(IterationMetrics {
+                iteration: iter,
+                wall: t0.elapsed(),
+                sim_disk_seconds: 0.0,
+                active_vertices: active,
+                active_ratio: active as f64 / n.max(1) as f64,
+                shards_processed: 1,
+                shards_skipped: 0,
+                io: Default::default(),
+                cache: Default::default(),
+            });
+            if active == 0 {
+                run.converged = true;
+                break;
+            }
+        }
+        run.total_wall = start.elapsed();
+        run.total_sim_disk_seconds = (disk.snapshot().sim_nanos - sim_start) as f64 / 1e9;
+        run.memory_bytes = self.memory_bytes();
+        self.values = src;
+        Ok(run)
+    }
+
+    fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    fn memory_bytes(&self) -> u64 {
+        // steady state: CSR + vertex arrays
+        D_EDGE * self.num_edges + 2 * C_VERTEX * self.num_vertices as u64
+    }
+}
+
+impl InMemEngine {
+    /// The loading phase (Fig 9): read the CSV, sort edges by destination,
+    /// build CSR.  Fails with OOM when the peak residency model exceeds
+    /// the RAM budget.
+    pub fn load(&mut self, g: &EdgeList, disk: &Disk) -> Result<()> {
+        let peak = Self::loading_peak(g.num_vertices as u64, g.num_edges());
+        self.load_peak_bytes = peak;
+        anyhow::ensure!(
+            peak <= self.cfg.ram_budget,
+            "OOM: loading needs {} bytes, budget {} (GraphMat cannot load this graph)",
+            peak,
+            self.cfg.ram_budget
+        );
+        let t = Instant::now();
+        let sim0 = disk.snapshot().sim_nanos;
+        // read the CSV once
+        disk.account_read(D_EDGE * g.num_edges());
+        // GraphMat's expensive in-memory sort + structure build
+        let mut edges = g.edges.clone();
+        edges.sort_unstable_by_key(|e| (e.dst, e.src));
+        let csr = Csr::from_edges(&edges, 0, g.num_vertices as usize, true);
+        self.csr = Some(csr);
+        self.num_vertices = g.num_vertices;
+        self.num_edges = g.num_edges();
+        self.inv_out_deg = inv_out_degrees(g);
+        self.load_seconds =
+            t.elapsed().as_secs_f64() + (disk.snapshot().sim_nanos - sim0) as f64 / 1e9;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::PageRank;
+    use crate::graph::rmat::{rmat, RmatParams};
+
+    #[test]
+    fn inmem_oom_when_budget_too_small() {
+        let g = rmat(8, 2_000, 107, RmatParams::default());
+        let disk = Disk::unthrottled();
+        let mut e = InMemEngine::new(BaselineConfig { ram_budget: 1000, ..Default::default() });
+        let err = e.load(&g, &disk).unwrap_err().to_string();
+        assert!(err.contains("OOM"), "{err}");
+    }
+
+    #[test]
+    fn inmem_no_disk_io_after_load() {
+        let g = rmat(8, 2_000, 109, RmatParams::default());
+        let disk = Disk::unthrottled();
+        let mut e = InMemEngine::new(BaselineConfig::default());
+        e.load(&g, &disk).unwrap();
+        disk.reset();
+        let run = e.run(&PageRank::new(), 5, &disk).unwrap();
+        for m in &run.iterations {
+            assert_eq!(m.io.bytes_read, 0);
+            assert_eq!(m.io.bytes_written, 0);
+        }
+    }
+
+    #[test]
+    fn inmem_matches_sweep_reference() {
+        let g = rmat(8, 2_000, 113, RmatParams::default());
+        let disk = Disk::unthrottled();
+        let mut e = InMemEngine::new(BaselineConfig::default());
+        e.load(&g, &disk).unwrap();
+        e.run(&PageRank::new(), 5, &disk).unwrap();
+        let inv = inv_out_degrees(&g);
+        let (mut src, _) = PageRank::new().init(g.num_vertices);
+        for _ in 0..5 {
+            src = super::super::sweep(PageRank::new().compute(), &g.edges, g.num_vertices, &inv, &src);
+        }
+        for (a, b) in e.values().iter().zip(&src) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn loading_peak_exceeds_steady_state() {
+        let peak = InMemEngine::loading_peak(100, 1000);
+        let mut e = InMemEngine::new(BaselineConfig::default());
+        e.num_vertices = 100;
+        e.num_edges = 1000;
+        assert!(peak > e.memory_bytes());
+    }
+}

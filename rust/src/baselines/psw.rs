@@ -1,0 +1,225 @@
+//! PSW — GraphChi's parallel-sliding-windows engine (§3.1).
+//!
+//! Vertices are split into P intervals; each shard stores the interval's
+//! in-edges sorted by *source* (GraphChi's layout, enabling the sliding
+//! window over out-edges).  Vertex values live **on the edges**: each
+//! iteration loads an interval's vertices, in-edges *and* out-edges
+//! (reading `C|V| + 2(C+D)|E|`), updates, and writes everything back
+//! (another `C|V| + 2(C+D)|E|`).  Memory holds one interval's subgraph:
+//! `(C|V| + 2(C+D)|E|)/P`.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::apps::VertexProgram;
+use crate::graph::{Edge, EdgeList};
+use crate::metrics::{IterationMetrics, RunMetrics};
+use crate::storage::disk::Disk;
+
+use super::{count_updates, inv_out_degrees, sweep, BaselineConfig, BaselineEngine, C_VERTEX, D_EDGE};
+
+pub struct PswEngine {
+    cfg: BaselineConfig,
+    /// Edges of shard `s` (destination in interval `s`), sorted by source.
+    shards: Vec<Vec<Edge>>,
+    num_vertices: u32,
+    num_edges: u64,
+    inv_out_deg: Vec<f32>,
+    values: Vec<f32>,
+}
+
+impl PswEngine {
+    pub fn new(cfg: BaselineConfig) -> Self {
+        PswEngine {
+            cfg,
+            shards: Vec::new(),
+            num_vertices: 0,
+            num_edges: 0,
+            inv_out_deg: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+}
+
+impl BaselineEngine for PswEngine {
+    fn name(&self) -> &'static str {
+        "graphchi-psw"
+    }
+
+    fn preprocess(&mut self, g: &EdgeList, disk: &Disk) -> Result<f64> {
+        let t = Instant::now();
+        let sim0 = disk.snapshot().sim_nanos;
+        let de = D_EDGE * g.num_edges();
+        // step 1: count in-degrees, choose intervals (read D|E|)
+        disk.account_read(de);
+        let in_deg = g.in_degrees();
+        let per = (g.num_edges() / self.cfg.p as u64).max(1);
+        let mut bounds = vec![0u32];
+        let mut acc = 0u64;
+        for (v, &d) in in_deg.iter().enumerate() {
+            acc += d as u64;
+            if acc > per && (v as u32) > *bounds.last().unwrap() {
+                bounds.push(v as u32);
+                acc = d as u64;
+            }
+        }
+        bounds.push(g.num_vertices);
+        // step 2: shard scratch files (read D|E|, write D|E|)
+        disk.account_read(de);
+        disk.account_write(de);
+        let mut shards: Vec<Vec<Edge>> = vec![Vec::new(); bounds.len() - 1];
+        let owner = |v: u32| -> usize {
+            match bounds.binary_search(&v) {
+                Ok(i) => i.min(shards.len() - 1),
+                Err(i) => i - 1,
+            }
+        };
+        let mut shard_of = vec![0u32; g.num_vertices as usize];
+        for v in 0..g.num_vertices {
+            shard_of[v as usize] = owner(v) as u32;
+        }
+        for e in &g.edges {
+            shards[shard_of[e.dst as usize] as usize].push(*e);
+        }
+        // step 3: sort each shard by source, write compact (read D|E|,
+        // write (C+D)|E| — GraphChi attaches vertex data to edges)
+        disk.account_read(de);
+        disk.account_write((C_VERTEX + D_EDGE) * g.num_edges());
+        for s in &mut shards {
+            s.sort_unstable_by_key(|e| e.src);
+        }
+        self.shards = shards;
+        self.num_vertices = g.num_vertices;
+        self.num_edges = g.num_edges();
+        self.inv_out_deg = inv_out_degrees(g);
+        let sim = (disk.snapshot().sim_nanos - sim0) as f64 / 1e9;
+        Ok(t.elapsed().as_secs_f64() + sim)
+    }
+
+    fn run(&mut self, app: &dyn VertexProgram, iters: u32, disk: &Disk) -> Result<RunMetrics> {
+        anyhow::ensure!(!self.shards.is_empty(), "preprocess first");
+        let n = self.num_vertices;
+        let (mut src, _) = app.init(n);
+        let mut run = RunMetrics::default();
+        let start = Instant::now();
+        let sim_start = disk.snapshot().sim_nanos;
+        for iter in 0..iters {
+            let t0 = Instant::now();
+            let io0 = disk.snapshot();
+            let mut dst = vec![0.0f32; n as usize];
+            let mut first = true;
+            for shard in &self.shards {
+                // load interval vertices + in-edges + the sliding windows
+                // of out-edges from all other shards
+                disk.account_read(C_VERTEX * n as u64 / self.shards.len() as u64);
+                disk.account_read(2 * (C_VERTEX + D_EDGE) * shard.len() as u64);
+                let part = sweep(app.compute(), shard, n, &self.inv_out_deg, &src);
+                if first {
+                    dst = part;
+                    first = false;
+                } else {
+                    // merge the interval's rows (each shard owns its
+                    // destination rows exclusively)
+                    for e in shard.iter() {
+                        dst[e.dst as usize] = part[e.dst as usize];
+                    }
+                }
+                // write back vertices + updated edge values (both
+                // directions, §3.1)
+                disk.account_write(C_VERTEX * n as u64 / self.shards.len() as u64);
+                disk.account_write(2 * (C_VERTEX + D_EDGE) * shard.len() as u64);
+            }
+            let active = count_updates(app, &src, &dst);
+            src = dst;
+            let io1 = disk.snapshot();
+            run.iterations.push(IterationMetrics {
+                iteration: iter,
+                wall: t0.elapsed(),
+                sim_disk_seconds: (io1.sim_nanos - io0.sim_nanos) as f64 / 1e9,
+                active_vertices: active,
+                active_ratio: active as f64 / n.max(1) as f64,
+                shards_processed: self.shards.len() as u32,
+                shards_skipped: 0,
+                io: io1.since(&io0),
+                cache: Default::default(),
+            });
+            if active == 0 {
+                run.converged = true;
+                break;
+            }
+        }
+        run.total_wall = start.elapsed();
+        run.total_sim_disk_seconds = (disk.snapshot().sim_nanos - sim_start) as f64 / 1e9;
+        run.memory_bytes = self.memory_bytes();
+        self.values = src;
+        Ok(run)
+    }
+
+    fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    fn memory_bytes(&self) -> u64 {
+        // (C|V| + 2(C+D)|E|) / P
+        (C_VERTEX * self.num_vertices as u64 + 2 * (C_VERTEX + D_EDGE) * self.num_edges)
+            / self.shards.len().max(1) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::PageRank;
+    use crate::graph::rmat::{rmat, RmatParams};
+
+    #[test]
+    fn psw_io_matches_table3() {
+        let g = rmat(9, 4_000, 71, RmatParams::default());
+        let disk = Disk::unthrottled();
+        let mut e = PswEngine::new(BaselineConfig { p: 8, ..Default::default() });
+        e.preprocess(&g, &disk).unwrap();
+        disk.reset();
+        let run = e.run(&PageRank::new(), 1, &disk).unwrap();
+        let m = &run.iterations[0];
+        let v = g.num_vertices as u64;
+        let ed = g.num_edges();
+        let expect = C_VERTEX * (v / e.shards.len() as u64) * e.shards.len() as u64
+            + 2 * (C_VERTEX + D_EDGE) * ed;
+        // reads and writes both ≈ C|V| + 2(C+D)|E| (integer division slack)
+        assert!(
+            (m.io.bytes_read as i64 - expect as i64).unsigned_abs() < v * C_VERTEX,
+            "read {} vs {}",
+            m.io.bytes_read,
+            expect
+        );
+        assert!(
+            (m.io.bytes_written as i64 - expect as i64).unsigned_abs() < v * C_VERTEX,
+            "write {} vs {}",
+            m.io.bytes_written,
+            expect
+        );
+    }
+
+    #[test]
+    fn psw_prep_io_matches_c_plus_5d() {
+        let g = rmat(8, 2_000, 73, RmatParams::default());
+        let disk = Disk::unthrottled();
+        let mut e = PswEngine::new(BaselineConfig::default());
+        e.preprocess(&g, &disk).unwrap();
+        let s = disk.snapshot();
+        let de = D_EDGE * g.num_edges();
+        let ce = C_VERTEX * g.num_edges();
+        assert_eq!(s.bytes_read, 3 * de);
+        assert_eq!(s.bytes_written, de + ce + de);
+        // total = (C+5D)|E|
+        assert_eq!(s.bytes_read + s.bytes_written, ce + 5 * de);
+    }
+
+    #[test]
+    fn psw_requires_preprocess() {
+        let disk = Disk::unthrottled();
+        let mut e = PswEngine::new(BaselineConfig::default());
+        assert!(e.run(&PageRank::new(), 1, &disk).is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! Minimal benchmark harness (criterion is not in the vendored crate set).
+//!
+//! Provides timing statistics and fixed-width table printing shared by all
+//! `benches/*.rs` targets, which regenerate the paper's tables/figures as
+//! text.
+
+use std::time::Instant;
+
+/// Run `f` `iters` times after `warmup` runs; returns per-run seconds.
+pub fn time_n<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Mean / stddev / min of a sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn stats(samples: &[f64]) -> Stats {
+    if samples.is_empty() {
+        return Stats::default();
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+    Stats {
+        mean,
+        stddev: var.sqrt(),
+        min: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        max: samples.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Fixed-width text table writer for the bench outputs.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Table {
+            headers: headers.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for i in 0..cols {
+                s.push_str(&format!("{:<w$}  ", cells[i], w = widths[i]));
+            }
+            s.trim_end().to_string()
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        print!("{}", self.render());
+    }
+}
+
+/// Shared bench banner so `cargo bench` output is self-describing.
+pub fn banner(name: &str, paper_ref: &str) {
+    println!("\n################################################################");
+    println!("# bench: {name}");
+    println!("# reproduces: {paper_ref}");
+    println!("################################################################");
+}
+
+/// Shared bench-scale constants.
+///
+/// The sim datasets scale the paper's graphs down by ~3–4 decimal orders;
+/// the RAM budgets below scale the testbed's memory the same way so every
+/// memory-driven effect reproduces:
+///
+/// - paper: GraphMat (single 128GB box) loads Twitter (~1.5B·22B ≈ 33GB
+///   peak) but OOMs on UK-2007 (5.5B edges).  Sim: 24MB budget sits between
+///   twitter-sim's ~18MB and uk2007-sim's ~43MB loading peaks.
+/// - paper: Pregel+/PowerGraph/PowerLyra (9 × 128GB) handle UK-2007 but
+///   crash on UK-2014/EU-2015.  Sim: 16MB/machine sits between
+///   uk2007-sim's ~5MB and uk2014-sim's ~28MB per-machine residency.
+/// - paper: GraphMP's cache (128GB box) holds EU-2015 only zlib-compressed
+///   (362GB raw → 62GB zlib-3 < ~68GB spare).  Sim: 40MB cache vs
+///   eu2015-sim's ~95MB raw shards forces the same mode escalation.
+pub mod scale {
+    /// Single-machine edge-cache capacity for GraphMP (bytes).
+    /// eu2015-sim is 86.5MiB raw / ~54MiB zlib (Table 2 bench), so 56MiB
+    /// reproduces the paper's regime: raw caching holds ~65%, zlib holds
+    /// everything — the same escalation EU-2015 forces at 128GB.
+    pub const CACHE_CAPACITY: u64 = 56 * 1024 * 1024;
+    /// GraphMat-like loading budget (bytes).
+    pub const GRAPHMAT_RAM: u64 = 24 * 1024 * 1024;
+    /// Distributed in-memory engines: RAM per machine (bytes).
+    pub const CLUSTER_RAM_PER_MACHINE: u64 = 16 * 1024 * 1024;
+    /// Shard size for the sim datasets (edges) — keeps tens of shards per
+    /// graph, the paper's regime.
+    pub const EDGES_PER_SHARD: u32 = 262_144;
+    /// Row cap aligned with the `medium` AOT artifact (Rc = 16384).
+    pub const MAX_ROWS: u32 = 8_192;
+
+    /// The bench disk: the per-core share of the paper's RAID5 array
+    /// (310MB/s ÷ 12 cores ≈ 26MB/s), since the bench host runs one
+    /// worker where the paper ran twelve against the same array.
+    pub fn bench_disk() -> crate::storage::disk::Disk {
+        crate::storage::disk::Disk::new(
+            crate::storage::disk::DiskProfile::hdd_raid5_shared(12),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = stats(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 3.0).abs() < 1e-12);
+        assert!(s.stddev > 0.0);
+    }
+
+    #[test]
+    fn stats_empty() {
+        assert_eq!(stats(&[]).mean, 0.0);
+    }
+
+    #[test]
+    fn time_n_counts() {
+        let mut calls = 0;
+        let t = time_n(2, 3, || calls += 1);
+        assert_eq!(calls, 5);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(vec!["a", "bbbb"]);
+        t.row(vec!["xx", "y"]);
+        let r = t.render();
+        assert!(r.contains("a   bbbb"));
+        assert!(r.lines().count() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged() {
+        let mut t = Table::new(vec!["a"]);
+        t.row(vec!["x", "y"]);
+    }
+}

@@ -1,0 +1,198 @@
+//! Bloom filters for selective scheduling (paper §2.4.1).
+//!
+//! One filter per shard records the *source* vertices of the shard's edges.
+//! When the active-vertex ratio is below the threshold, a shard whose
+//! filter contains none of the active vertices is provably inactive (no
+//! false negatives) and is skipped — no disk read, no compute.
+
+use crate::util::rng::splitmix64;
+use crate::util::bytes_as_u32s;
+
+/// Double-hashing Bloom filter (Kirsch–Mitzenmacher: `h_i = h1 + i*h2`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BloomFilter {
+    bits: Vec<u64>,
+    num_bits: u64,
+    num_hashes: u32,
+}
+
+impl BloomFilter {
+    /// Size the filter for `expected_items` at `fp_rate` false positives.
+    pub fn with_rate(expected_items: usize, fp_rate: f64) -> Self {
+        let n = expected_items.max(1) as f64;
+        let m = (-n * fp_rate.ln() / (std::f64::consts::LN_2.powi(2))).ceil() as u64;
+        let m = m.max(64).next_multiple_of(64);
+        let k = ((m as f64 / n) * std::f64::consts::LN_2).round().max(1.0) as u32;
+        BloomFilter {
+            bits: vec![0u64; (m / 64) as usize],
+            num_bits: m,
+            num_hashes: k.min(16),
+        }
+    }
+
+    pub fn insert(&mut self, item: u32) {
+        let (h1, h2) = self.hashes(item);
+        for i in 0..self.num_hashes {
+            let bit = h1.wrapping_add((i as u64).wrapping_mul(h2)) % self.num_bits;
+            self.bits[(bit / 64) as usize] |= 1 << (bit % 64);
+        }
+    }
+
+    /// May return false positives, never false negatives.
+    pub fn contains(&self, item: u32) -> bool {
+        let (h1, h2) = self.hashes(item);
+        (0..self.num_hashes).all(|i| {
+            let bit = h1.wrapping_add((i as u64).wrapping_mul(h2)) % self.num_bits;
+            self.bits[(bit / 64) as usize] & (1 << (bit % 64)) != 0
+        })
+    }
+
+    /// True iff the filter (possibly) contains any of `items` — the shard
+    /// activity test. Short-circuits on first hit.
+    pub fn contains_any(&self, items: &[u32]) -> bool {
+        items.iter().any(|&v| self.contains(v))
+    }
+
+    fn hashes(&self, item: u32) -> (u64, u64) {
+        let h = splitmix64(item as u64);
+        let h2 = splitmix64(h) | 1; // odd => full period
+        (h, h2)
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.bits.len() * 8 + 16
+    }
+
+    /// Serialise: `num_bits u64 | num_hashes u32 | words...` (LE u32 pairs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(12 + self.bits.len() * 8);
+        out.extend_from_slice(&self.num_bits.to_le_bytes());
+        out.extend_from_slice(&self.num_hashes.to_le_bytes());
+        for w in &self.bits {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> anyhow::Result<BloomFilter> {
+        anyhow::ensure!(b.len() >= 12, "bloom too small");
+        let num_bits = u64::from_le_bytes(b[..8].try_into().unwrap());
+        let num_hashes = u32::from_le_bytes(b[8..12].try_into().unwrap());
+        anyhow::ensure!(b.len() == 12 + (num_bits as usize / 64) * 8, "bloom truncated");
+        let words = bytes_as_u32s(&b[12..]);
+        let bits = words
+            .chunks_exact(2)
+            .map(|c| (c[0] as u64) | ((c[1] as u64) << 32))
+            .collect();
+        Ok(BloomFilter { bits, num_bits, num_hashes })
+    }
+}
+
+/// The per-shard filter set, persisted as one file by preprocessing.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct BloomSet {
+    pub filters: Vec<BloomFilter>,
+}
+
+impl BloomSet {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"GMPB");
+        out.extend_from_slice(&(self.filters.len() as u32).to_le_bytes());
+        for f in &self.filters {
+            let fb = f.to_bytes();
+            out.extend_from_slice(&(fb.len() as u32).to_le_bytes());
+            out.extend_from_slice(&fb);
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> anyhow::Result<BloomSet> {
+        anyhow::ensure!(b.len() >= 8 && &b[..4] == b"GMPB", "bad bloom set magic");
+        let n = u32::from_le_bytes(b[4..8].try_into().unwrap()) as usize;
+        let mut filters = Vec::with_capacity(n);
+        let mut off = 8;
+        for _ in 0..n {
+            anyhow::ensure!(b.len() >= off + 4, "bloom set truncated");
+            let len = u32::from_le_bytes(b[off..off + 4].try_into().unwrap()) as usize;
+            off += 4;
+            anyhow::ensure!(b.len() >= off + len, "bloom set truncated");
+            filters.push(BloomFilter::from_bytes(&b[off..off + len])?);
+            off += len;
+        }
+        Ok(BloomSet { filters })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.filters.iter().map(|f| f.size_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_false_negatives() {
+        let mut f = BloomFilter::with_rate(1000, 0.01);
+        for v in 0..1000u32 {
+            f.insert(v * 7);
+        }
+        for v in 0..1000u32 {
+            assert!(f.contains(v * 7));
+        }
+    }
+
+    #[test]
+    fn fp_rate_in_ballpark() {
+        let mut f = BloomFilter::with_rate(10_000, 0.01);
+        for v in 0..10_000u32 {
+            f.insert(v);
+        }
+        let fps = (10_000u32..110_000).filter(|&v| f.contains(v)).count();
+        let rate = fps as f64 / 100_000.0;
+        assert!(rate < 0.03, "fp rate {rate}");
+    }
+
+    #[test]
+    fn contains_any_short_circuit_semantics() {
+        let mut f = BloomFilter::with_rate(10, 0.001);
+        f.insert(42);
+        assert!(f.contains_any(&[1, 2, 42]));
+        // `contains_any` of an empty active list must be false: an
+        // iteration with no active vertices activates no shard.
+        assert!(!f.contains_any(&[]));
+    }
+
+    #[test]
+    fn filter_round_trip() {
+        let mut f = BloomFilter::with_rate(100, 0.01);
+        for v in [3u32, 5, 800, 13] {
+            f.insert(v);
+        }
+        let g = BloomFilter::from_bytes(&f.to_bytes()).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn set_round_trip() {
+        let mut a = BloomFilter::with_rate(10, 0.01);
+        a.insert(1);
+        let mut b = BloomFilter::with_rate(1000, 0.001);
+        b.insert(999);
+        let set = BloomSet { filters: vec![a, b] };
+        assert_eq!(BloomSet::from_bytes(&set.to_bytes()).unwrap(), set);
+    }
+
+    #[test]
+    fn set_rejects_garbage() {
+        assert!(BloomSet::from_bytes(b"XXXX____").is_err());
+    }
+
+    #[test]
+    fn sizes_scale_with_items() {
+        let small = BloomFilter::with_rate(100, 0.01);
+        let big = BloomFilter::with_rate(100_000, 0.01);
+        assert!(big.size_bytes() > 100 * small.size_bytes() / 2);
+    }
+}

@@ -1,0 +1,280 @@
+//! The compressed edge cache (paper §2.4.2).
+//!
+//! Capacity-bounded, shard-id-keyed.  On a hit the shard is decompressed
+//! from RAM (throughput ≫ disk); on a miss the caller loads from disk and
+//! offers the bytes back with [`EdgeCache::admit`].  No eviction policy is
+//! needed: the shard set is fixed after preprocessing, so the cache simply
+//! fills until capacity (matching the paper, which caches "as many shards
+//! as possible") — an LRU would only churn identical-value entries.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use anyhow::Result;
+
+use crate::compress::CacheMode;
+use crate::storage::shard::Shard;
+
+/// Hit/miss counters (atomics: workers probe concurrently).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub admitted: AtomicU64,
+    pub rejected: AtomicU64,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub used_bytes: u64,
+}
+
+impl CacheSnapshot {
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+enum Entry {
+    /// Mode 1 stores the shard parsed once — a cache hit is an Arc clone
+    /// (zero-copy), not a re-parse of ~MBs of CSR bytes (§Perf log).
+    Parsed(Arc<Shard>),
+    /// Compressed modes store bytes; hits decompress + parse.
+    Compressed(Vec<u8>),
+}
+
+/// The cache proper.  `mode == M0None` disables it entirely.
+pub struct EdgeCache {
+    mode: CacheMode,
+    capacity_bytes: u64,
+    used_bytes: AtomicU64,
+    entries: RwLock<HashMap<u32, Arc<Entry>>>,
+    /// Shards already rejected on capacity — the shard set is static, so
+    /// re-offering them would only repeat the (possibly expensive)
+    /// compression; skip them permanently.
+    rejected_ids: RwLock<HashSet<u32>>,
+    stats: CacheStats,
+}
+
+impl EdgeCache {
+    pub fn new(mode: CacheMode, capacity_bytes: u64) -> Self {
+        EdgeCache {
+            mode,
+            capacity_bytes: if mode == CacheMode::M0None { 0 } else { capacity_bytes },
+            used_bytes: AtomicU64::new(0),
+            entries: RwLock::new(HashMap::new()),
+            rejected_ids: RwLock::new(HashSet::new()),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Auto-select the mode per §2.4.2 and build the cache.
+    pub fn auto(graph_bytes: u64, capacity_bytes: u64) -> Self {
+        let mode = crate::compress::select_mode(graph_bytes, capacity_bytes);
+        EdgeCache::new(mode, capacity_bytes)
+    }
+
+    pub fn mode(&self) -> CacheMode {
+        self.mode
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Probe for a shard; decompresses on hit (zero-copy for mode 1).
+    pub fn get(&self, shard_id: u32) -> Result<Option<Arc<Shard>>> {
+        if self.mode == CacheMode::M0None {
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            return Ok(None);
+        }
+        let entry = {
+            let map = self.entries.read().unwrap();
+            map.get(&shard_id).cloned()
+        };
+        match entry {
+            Some(e) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                match &*e {
+                    Entry::Parsed(shard) => Ok(Some(Arc::clone(shard))),
+                    Entry::Compressed(bytes) => {
+                        let raw = self.mode.decompress(bytes)?;
+                        Ok(Some(Arc::new(Shard::from_bytes(&raw)?)))
+                    }
+                }
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                Ok(None)
+            }
+        }
+    }
+
+    /// Offer freshly-loaded shard bytes; stored if capacity allows.
+    /// Returns whether the shard was admitted.
+    pub fn admit(&self, shard_id: u32, raw_bytes: &[u8]) -> bool {
+        if self.mode == CacheMode::M0None {
+            return false;
+        }
+        {
+            let map = self.entries.read().unwrap();
+            if map.contains_key(&shard_id) {
+                return true; // raced with another worker: already cached
+            }
+        }
+        if self.rejected_ids.read().unwrap().contains(&shard_id) {
+            return false; // don't recompress a known non-fit every miss
+        }
+        // cheap pre-check: even a best-case compression can't fit
+        if self.used_bytes.load(Ordering::Relaxed) + raw_bytes.len() as u64 / 8
+            > self.capacity_bytes
+        {
+            self.rejected_ids.write().unwrap().insert(shard_id);
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let entry = if self.mode == CacheMode::M1Raw {
+            match Shard::from_bytes(raw_bytes) {
+                Ok(sh) => Entry::Parsed(Arc::new(sh)),
+                Err(_) => return false, // corrupt bytes never enter the cache
+            }
+        } else {
+            Entry::Compressed(self.mode.compress(raw_bytes))
+        };
+        let sz = match &entry {
+            Entry::Parsed(sh) => (sh.csr.size_bytes() + 32) as u64,
+            Entry::Compressed(c) => c.len() as u64,
+        };
+        // optimistic reservation
+        let prev = self.used_bytes.fetch_add(sz, Ordering::Relaxed);
+        if prev + sz > self.capacity_bytes {
+            self.used_bytes.fetch_sub(sz, Ordering::Relaxed);
+            self.rejected_ids.write().unwrap().insert(shard_id);
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let mut map = self.entries.write().unwrap();
+        if map.contains_key(&shard_id) {
+            self.used_bytes.fetch_sub(sz, Ordering::Relaxed);
+            return true;
+        }
+        map.insert(shard_id, Arc::new(entry));
+        self.stats.admitted.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn snapshot(&self) -> CacheSnapshot {
+        CacheSnapshot {
+            hits: self.stats.hits.load(Ordering::Relaxed),
+            misses: self.stats.misses.load(Ordering::Relaxed),
+            admitted: self.stats.admitted.load(Ordering::Relaxed),
+            rejected: self.stats.rejected.load(Ordering::Relaxed),
+            used_bytes: self.used_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Csr, Edge};
+
+    fn mk_shard(id: u32, edges: usize) -> Shard {
+        let es: Vec<Edge> = (0..edges)
+            .map(|i| Edge::new((i % 97) as u32, 100 + (i % 8) as u32))
+            .collect();
+        Shard { id, start_vertex: 100, csr: Csr::from_edges(&es, 100, 8, false) }
+    }
+
+    #[test]
+    fn hit_after_admit() {
+        let cache = EdgeCache::new(CacheMode::M3Zlib1, 1 << 20);
+        let s = mk_shard(0, 500);
+        assert!(cache.get(0).unwrap().is_none());
+        assert!(cache.admit(0, &s.to_bytes()));
+        let got = cache.get(0).unwrap().unwrap();
+        assert_eq!(*got, s);
+        let snap = cache.snapshot();
+        assert_eq!(snap.hits, 1);
+        assert_eq!(snap.misses, 1);
+        assert!(snap.used_bytes > 0);
+    }
+
+    #[test]
+    fn capacity_rejects() {
+        let cache = EdgeCache::new(CacheMode::M1Raw, 100); // tiny
+        let s = mk_shard(1, 500);
+        assert!(!cache.admit(1, &s.to_bytes()));
+        assert_eq!(cache.snapshot().rejected, 1);
+        assert_eq!(cache.snapshot().used_bytes, 0); // reservation rolled back
+    }
+
+    #[test]
+    fn mode0_never_caches() {
+        let cache = EdgeCache::new(CacheMode::M0None, u64::MAX);
+        let s = mk_shard(2, 100);
+        assert!(!cache.admit(2, &s.to_bytes()));
+        assert!(cache.get(2).unwrap().is_none());
+    }
+
+    #[test]
+    fn compressed_fits_more() {
+        let raw = EdgeCache::new(CacheMode::M1Raw, 40_000);
+        let z = EdgeCache::new(CacheMode::M4Zlib3, 40_000);
+        let mut raw_count = 0;
+        let mut z_count = 0;
+        for id in 0..32 {
+            let b = mk_shard(id, 1000).to_bytes();
+            raw_count += raw.admit(id, &b) as u32;
+            z_count += z.admit(id, &b) as u32;
+        }
+        assert!(
+            z_count > raw_count,
+            "zlib cached {z_count} <= raw {raw_count}"
+        );
+    }
+
+    #[test]
+    fn double_admit_is_idempotent() {
+        let cache = EdgeCache::new(CacheMode::M2Fast, 1 << 20);
+        let b = mk_shard(3, 100).to_bytes();
+        assert!(cache.admit(3, &b));
+        let used = cache.snapshot().used_bytes;
+        assert!(cache.admit(3, &b));
+        assert_eq!(cache.snapshot().used_bytes, used);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn auto_picks_reasonably() {
+        let c = EdgeCache::auto(1000, 10_000);
+        assert_eq!(c.mode(), CacheMode::M1Raw);
+        let c = EdgeCache::auto(1_000_000, 10_000);
+        assert_eq!(c.mode(), CacheMode::M4Zlib3);
+    }
+
+    #[test]
+    fn hit_ratio_math() {
+        let snap = CacheSnapshot { hits: 3, misses: 1, ..Default::default() };
+        assert!((snap.hit_ratio() - 0.75).abs() < 1e-9);
+        assert_eq!(CacheSnapshot::default().hit_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny CLI argument parser (clap is not in the vendored crate set).
+//!
+//! Supports `graphmp <subcommand> [--key value] [--flag]` with typed
+//! accessors and helpful errors.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first bare word is the subcommand, `--k v` are
+    /// options, `--k` followed by another `--` or nothing is a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                anyhow::ensure!(!key.is_empty(), "bare `--` is not a valid option");
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.opts.insert(key.to_string(), it.next().unwrap());
+                    }
+                    _ => out.flags.push(key.to_string()),
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                anyhow::bail!("unexpected positional argument: {tok}");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn parse_opt<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => Ok(Some(
+                s.parse::<T>().with_context(|| format!("bad --{name}: {s}"))?,
+            )),
+        }
+    }
+
+    pub fn parse_opt_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        Ok(self.parse_opt(name)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = args("run --dataset twitter-sim --iters 10 --no-cache");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.opt("dataset"), Some("twitter-sim"));
+        assert_eq!(a.parse_opt::<u32>("iters").unwrap(), Some(10));
+        assert!(a.flag("no-cache"));
+        assert!(!a.flag("other"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("run");
+        assert_eq!(a.opt_or("x", "d"), "d");
+        assert_eq!(a.parse_opt_or::<u32>("n", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = args("run --verbose");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_double_positional() {
+        assert!(Args::parse(["a".into(), "b".into()]).is_err());
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let a = args("run --iters xyz");
+        assert!(a.parse_opt::<u32>("iters").is_err());
+    }
+}

@@ -1,0 +1,504 @@
+//! Cluster simulator — the distributed baselines of Tables 5–7.
+//!
+//! The paper runs Pregel+, PowerGraph, PowerLyra (distributed in-memory)
+//! and GraphD, Chaos (distributed out-of-core) on 9 R720 servers over
+//! 10Gbps Ethernet.  We cannot run those systems, so this module
+//! *simulates* each on the same workload: the graph is actually
+//! partitioned, per-machine compute is really executed (same vertex math
+//! as every other engine), cross-machine messages are really counted, and
+//! iteration time is modelled as
+//!
+//! `t = max_m(compute_m) + bytes_network / net_bw + barrier`
+//!
+//! plus per-machine streamed-disk time for the out-of-core engines.  This
+//! preserves what Tables 5–7 need: the *relative standing* (distributed
+//! in-memory ≈ GraphMP on small graphs, OOM-crash on big ones; distributed
+//! out-of-core completes but loses to GraphMP-cache by ~8–27×).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::apps::{ShardCompute, VertexProgram};
+use crate::baselines::{count_updates, inv_out_degrees, C_VERTEX, D_EDGE};
+use crate::graph::{Edge, EdgeList};
+use crate::metrics::{IterationMetrics, RunMetrics};
+
+/// Cluster hardware model (defaults = the paper's 9-node testbed).
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    pub machines: u32,
+    /// Per-machine RAM in bytes (paper: 128GB each → scaled by the bench).
+    pub ram_per_machine: u64,
+    /// Network bandwidth in bytes/s (10Gbps).
+    pub net_bw: u64,
+    /// Per-iteration synchronisation barrier cost in seconds.
+    pub barrier_seconds: f64,
+    /// Per-machine disk bandwidth for out-of-core engines (bytes/s).
+    pub disk_bw: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            machines: 9,
+            ram_per_machine: u64::MAX,
+            net_bw: 10 * 1024 * 1024 * 1024 / 8,
+            // BSP synchronisation on 10GbE with stragglers: ~20ms/round
+            barrier_seconds: 0.020,
+            // per-core share of each machine's RAID array (same scaling
+            // argument as benchutil::scale::bench_disk)
+            disk_bw: 310 * 1024 * 1024 / 12,
+        }
+    }
+}
+
+/// Which distributed system is being simulated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DistSystem {
+    /// Pregel-like: hash vertex partitioning, messages along edges.
+    PregelPlus,
+    /// GAS vertex-cut: better balance on power-law, replica sync traffic.
+    PowerGraph,
+    /// GAS with differentiated (hybrid) cuts: lower replication.
+    PowerLyra,
+    /// Distributed out-of-core, vertex-centric (edges streamed from disk).
+    GraphD,
+    /// Distributed out-of-core, edge-centric (X-Stream scaled out; edges
+    /// also shuffled over the network).
+    Chaos,
+}
+
+pub const ALL_SYSTEMS: [DistSystem; 5] = [
+    DistSystem::PregelPlus,
+    DistSystem::PowerGraph,
+    DistSystem::PowerLyra,
+    DistSystem::GraphD,
+    DistSystem::Chaos,
+];
+
+impl DistSystem {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DistSystem::PregelPlus => "pregel+",
+            DistSystem::PowerGraph => "powergraph",
+            DistSystem::PowerLyra => "powerlyra",
+            DistSystem::GraphD => "graphd",
+            DistSystem::Chaos => "chaos",
+        }
+    }
+
+    pub fn is_in_memory(&self) -> bool {
+        matches!(
+            self,
+            DistSystem::PregelPlus | DistSystem::PowerGraph | DistSystem::PowerLyra
+        )
+    }
+
+    /// Per-edge processing cost in seconds per machine, calibrated from
+    /// the paper's measured Table 5 throughputs (e.g. Pregel+ on Twitter:
+    /// 6.9 s/iteration × 9 machines / 1.5B edges ≈ 41 ns/edge).  These are
+    /// framework costs (message construction, (de)serialisation, vertex
+    /// dispatch) — far above a bare SpMV loop, which is why distributed
+    /// engines need 9 machines to match one tight single-machine engine.
+    pub fn per_edge_cost(&self) -> f64 {
+        match self {
+            DistSystem::PregelPlus => 41e-9,
+            DistSystem::PowerGraph => 33e-9,
+            DistSystem::PowerLyra => 28e-9,
+            DistSystem::GraphD => 41e-9, // Pregel-style compute + disk below
+            DistSystem::Chaos => 33e-9,  // X-Stream-style streaming compute
+        }
+    }
+
+    /// Whether compute scales with the active fraction (vertex-level
+    /// selective execution: Pregel+/GraphD process only active vertices;
+    /// the GAS engines and Chaos sweep everything each round).
+    pub fn active_scaled(&self) -> bool {
+        matches!(self, DistSystem::PregelPlus | DistSystem::GraphD)
+    }
+}
+
+/// A simulated distributed engine bound to one partitioned workload.
+pub struct DistEngine {
+    pub system: DistSystem,
+    pub cfg: ClusterConfig,
+    g: EdgeList,
+    inv_out_deg: Vec<f32>,
+    /// machine of each vertex (hash partitioning).
+    owner: Vec<u32>,
+    /// per-machine edge count (edges live with their destination owner for
+    /// Pregel-like, balanced for GAS).
+    machine_edges: Vec<u64>,
+    /// edges whose source and destination live on different machines.
+    cross_edges: u64,
+    values: Vec<f32>,
+    /// estimated replication factor (GAS systems).
+    replication: f64,
+}
+
+impl DistEngine {
+    pub fn new(system: DistSystem, cfg: ClusterConfig, g: EdgeList) -> Result<DistEngine> {
+        let m = cfg.machines.max(1);
+        let inv_out_deg = inv_out_degrees(&g);
+        // hash partitioning (Pregel's default): owner = id % machines
+        let owner: Vec<u32> = (0..g.num_vertices).map(|v| v % m).collect();
+        let mut machine_edges = vec![0u64; m as usize];
+        let mut cross_edges = 0u64;
+        for e in &g.edges {
+            machine_edges[owner[e.dst as usize] as usize] += 1;
+            if owner[e.src as usize] != owner[e.dst as usize] {
+                cross_edges += 1;
+            }
+        }
+        // GAS replication factor: expected #machines holding a replica of
+        // a vertex ≈ Σ_v min(deg_v, M) / |V| — computed exactly here.
+        let mut repl_sum = 0u64;
+        let ind = g.in_degrees();
+        let outd = g.out_degrees();
+        for v in 0..g.num_vertices as usize {
+            let deg = ind[v] as u64 + outd[v] as u64;
+            repl_sum += deg.min(m as u64).max(1);
+        }
+        let replication = repl_sum as f64 / g.num_vertices.max(1) as f64;
+
+        let eng = DistEngine {
+            system,
+            cfg,
+            inv_out_deg,
+            owner,
+            machine_edges,
+            cross_edges,
+            values: Vec::new(),
+            replication,
+            g,
+        };
+        eng.check_memory()?;
+        Ok(eng)
+    }
+
+    /// Per-machine residency model; OOM reproduces the paper's crashes of
+    /// Pregel+/PowerGraph/PowerLyra on UK-2014 and EU-2015.
+    fn check_memory(&self) -> Result<()> {
+        if !self.system.is_in_memory() {
+            return Ok(()); // out-of-core engines stream from disk
+        }
+        let m = self.cfg.machines as u64;
+        let v = self.g.num_vertices as u64;
+        let e = self.g.num_edges();
+        let per_machine = match self.system {
+            // vertices + their edges + message buffers
+            DistSystem::PregelPlus => (C_VERTEX * v + (C_VERTEX + D_EDGE) * e * 2) / m,
+            // replicated vertices + edges
+            DistSystem::PowerGraph => {
+                ((C_VERTEX as f64 * v as f64 * self.replication) as u64 + D_EDGE * e * 2) / m
+            }
+            DistSystem::PowerLyra => {
+                ((C_VERTEX as f64 * v as f64 * (1.0 + 0.7 * (self.replication - 1.0))) as u64
+                    + D_EDGE * e * 2)
+                    / m
+            }
+            _ => unreachable!(),
+        };
+        anyhow::ensure!(
+            per_machine <= self.cfg.ram_per_machine,
+            "OOM: {} needs {} bytes/machine, budget {}",
+            self.system.name(),
+            per_machine,
+            self.cfg.ram_per_machine
+        );
+        Ok(())
+    }
+
+    /// Simulated network seconds for one iteration, given how many values
+    /// actually changed (message-generating vertices).
+    fn network_seconds(&self, active_frac: f64) -> f64 {
+        let msg_bytes = match self.system {
+            // one message per cross-partition edge whose source is active
+            DistSystem::PregelPlus | DistSystem::GraphD => {
+                (self.cross_edges as f64 * active_frac) * (4.0 + C_VERTEX as f64)
+            }
+            // GAS: gather+apply+scatter sync per replica
+            DistSystem::PowerGraph => {
+                self.g.num_vertices as f64 * (self.replication - 1.0).max(0.0)
+                    * C_VERTEX as f64
+                    * 2.0
+                    * active_frac.max(0.05)
+            }
+            DistSystem::PowerLyra => {
+                self.g.num_vertices as f64 * 0.7 * (self.replication - 1.0).max(0.0)
+                    * C_VERTEX as f64
+                    * 2.0
+                    * active_frac.max(0.05)
+            }
+            // Chaos streams edges over the network too (storage/compute
+            // disaggregation)
+            DistSystem::Chaos => (self.g.num_edges() as f64) * D_EDGE as f64,
+        };
+        msg_bytes / self.cfg.net_bw as f64
+    }
+
+    /// Simulated per-machine disk seconds per iteration (out-of-core only).
+    fn disk_seconds(&self, active_frac: f64) -> f64 {
+        let per_machine_edges =
+            self.machine_edges.iter().copied().max().unwrap_or(0) as f64;
+        match self.system {
+            DistSystem::GraphD => {
+                // stream edges + write/read the recoverable message
+                // streams (message volume tracks the active frontier)
+                let bytes = per_machine_edges
+                    * (D_EDGE as f64 + 2.0 * C_VERTEX as f64 * active_frac.max(0.05));
+                bytes / self.cfg.disk_bw as f64
+            }
+            DistSystem::Chaos => {
+                // scatter + gather passes over edge/update files
+                let bytes = per_machine_edges * (D_EDGE as f64 + C_VERTEX as f64);
+                bytes / self.cfg.disk_bw as f64
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// One-time load/initialisation charged to the first iteration (the
+    /// paper's Tables 5–7 include data loading in iteration 1 for every
+    /// system): each machine reads its partition from disk and builds its
+    /// in-memory/stream structures.
+    fn load_seconds(&self) -> f64 {
+        let per_machine_edges =
+            self.machine_edges.iter().copied().max().unwrap_or(0) as f64;
+        let read = per_machine_edges * D_EDGE as f64 / self.cfg.disk_bw as f64;
+        // structure build ≈ 2 passes at the framework's per-edge rate
+        let build = per_machine_edges * self.system.per_edge_cost() * 2.0;
+        read + build
+    }
+
+    /// Run `app` for `iters` iterations, returning per-iteration simulated
+    /// times.  The vertex math runs for real (values are exact and
+    /// cross-checked against the single-machine engines); iteration *time*
+    /// is simulated from per-edge framework costs calibrated to the
+    /// paper's published numbers plus real message counts, the network
+    /// model and the streamed-disk model.
+    pub fn run(&mut self, app: &dyn VertexProgram, iters: u32) -> Result<RunMetrics> {
+        let n = self.g.num_vertices;
+        let (mut src, active0) = app.init(n);
+        let mut active = active0.len() as u64;
+        let mut run = RunMetrics::default();
+        let start = Instant::now();
+        // effective parallelism: M * (avg edges per machine / max edges)
+        let max_e = self.machine_edges.iter().copied().max().unwrap_or(1) as f64;
+        let avg_e = self.g.num_edges() as f64 / self.cfg.machines.max(1) as f64;
+        let balance = (avg_e / max_e.max(1.0)).min(1.0);
+        let eff_machines = match self.system {
+            // GAS systems split high-degree vertices → near-perfect balance
+            DistSystem::PowerGraph | DistSystem::PowerLyra => self.cfg.machines as f64,
+            _ => (self.cfg.machines as f64 * balance).max(1.0),
+        };
+        for iter in 0..iters {
+            if active == 0 {
+                run.converged = true;
+                break;
+            }
+            let t0 = Instant::now();
+            let active_frac = active as f64 / n.max(1) as f64;
+            let dst = crate::baselines::sweep(
+                adapt_kind(app.compute()),
+                &self.g.edges,
+                n,
+                &self.inv_out_deg,
+                &src,
+            );
+            let compute_wall = t0.elapsed().as_secs_f64();
+            let compute_scale = if self.system.active_scaled() {
+                active_frac.max(0.01)
+            } else {
+                1.0
+            };
+            let compute_sim = self.g.num_edges() as f64
+                * self.system.per_edge_cost()
+                * compute_scale
+                / eff_machines;
+            let mut sim = compute_sim
+                + self.network_seconds(active_frac)
+                + self.disk_seconds(active_frac)
+                + self.cfg.barrier_seconds;
+            if iter == 0 {
+                sim += self.load_seconds();
+            }
+            active = count_updates(app, &src, &dst);
+            src = dst;
+            run.iterations.push(IterationMetrics {
+                iteration: iter,
+                wall: std::time::Duration::from_secs_f64(compute_wall),
+                sim_disk_seconds: sim - compute_wall, // report sim − wall so
+                // elapsed_seconds() == simulated cluster time
+                active_vertices: active,
+                active_ratio: active as f64 / n.max(1) as f64,
+                shards_processed: self.cfg.machines,
+                shards_skipped: 0,
+                io: Default::default(),
+                cache: Default::default(),
+            });
+        }
+        if active == 0 {
+            run.converged = true;
+        }
+        run.total_wall = start.elapsed();
+        run.total_sim_disk_seconds =
+            run.iterations.iter().map(|m| m.sim_disk_seconds).sum();
+        run.memory_bytes = 0;
+        self.values = src;
+        Ok(run)
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    pub fn replication_factor(&self) -> f64 {
+        self.replication
+    }
+
+    pub fn cross_edge_ratio(&self) -> f64 {
+        self.cross_edges as f64 / self.g.num_edges().max(1) as f64
+    }
+}
+
+/// Distributed engines run the same math; kinds pass through unchanged
+/// (hook point for system-specific semantics, e.g. combiner rounding).
+fn adapt_kind(kind: ShardCompute) -> ShardCompute {
+    kind
+}
+
+/// Convenience: partition quality diagnostics used by the benches.
+pub fn partition_stats(g: &EdgeList, machines: u32) -> (f64, f64) {
+    let m = machines.max(1);
+    let owner: Vec<u32> = (0..g.num_vertices).map(|v| v % m).collect();
+    let mut per = vec![0u64; m as usize];
+    let mut cross = 0u64;
+    for e in &g.edges {
+        per[owner[e.dst as usize] as usize] += 1;
+        if owner[e.src as usize] != owner[e.dst as usize] {
+            cross += 1;
+        }
+    }
+    let max = *per.iter().max().unwrap() as f64;
+    let avg = g.num_edges() as f64 / m as f64;
+    (max / avg.max(1.0), cross as f64 / g.num_edges().max(1) as f64)
+}
+
+/// Extra: edges for the undirected CC variant with weight zero cost.
+pub fn symmetrized(edges: &[Edge]) -> Vec<Edge> {
+    let mut out = Vec::with_capacity(edges.len() * 2);
+    for e in edges {
+        out.push(*e);
+        out.push(Edge::weighted(e.dst, e.src, e.weight));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{PageRank, Sssp};
+    use crate::graph::rmat::{rmat, RmatParams};
+
+    fn graph() -> EdgeList {
+        rmat(9, 4_000, 127, RmatParams::default())
+    }
+
+    #[test]
+    fn in_memory_oom_on_small_budget() {
+        let cfg = ClusterConfig { ram_per_machine: 1000, ..Default::default() };
+        for sys in [DistSystem::PregelPlus, DistSystem::PowerGraph, DistSystem::PowerLyra] {
+            let err = match DistEngine::new(sys, cfg, graph()) {
+                Err(e) => e.to_string(),
+                Ok(_) => panic!("{sys:?}: expected OOM"),
+            };
+            assert!(err.contains("OOM"), "{sys:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn out_of_core_survives_small_budget() {
+        let cfg = ClusterConfig { ram_per_machine: 1000, ..Default::default() };
+        for sys in [DistSystem::GraphD, DistSystem::Chaos] {
+            assert!(DistEngine::new(sys, cfg, graph()).is_ok(), "{sys:?}");
+        }
+    }
+
+    #[test]
+    fn values_match_single_machine_sweep() {
+        let g = graph();
+        let mut eng =
+            DistEngine::new(DistSystem::PregelPlus, ClusterConfig::default(), g.clone()).unwrap();
+        eng.run(&PageRank::new(), 5).unwrap();
+        let inv = inv_out_degrees(&g);
+        let (mut src, _) = PageRank::new().init(g.num_vertices);
+        for _ in 0..5 {
+            src = crate::baselines::sweep(
+                PageRank::new().compute(),
+                &g.edges,
+                g.num_vertices,
+                &inv,
+                &src,
+            );
+        }
+        assert_eq!(eng.values(), &src[..]);
+    }
+
+    #[test]
+    fn chaos_slower_than_pregel_per_iteration() {
+        // Chaos streams all edges over the network every iteration; on a
+        // graph that fits in cluster RAM, Pregel+ must win (Table 5).
+        let g = graph();
+        let mut chaos =
+            DistEngine::new(DistSystem::Chaos, ClusterConfig::default(), g.clone()).unwrap();
+        let mut pregel =
+            DistEngine::new(DistSystem::PregelPlus, ClusterConfig::default(), g).unwrap();
+        let rc = chaos.run(&PageRank::new(), 3).unwrap();
+        let rp = pregel.run(&PageRank::new(), 3).unwrap();
+        assert!(rc.first_n_seconds(3) > rp.first_n_seconds(3));
+    }
+
+    #[test]
+    fn sssp_converges_and_matches() {
+        let g = graph();
+        let mut eng =
+            DistEngine::new(DistSystem::GraphD, ClusterConfig::default(), g.clone()).unwrap();
+        let run = eng.run(&Sssp::new(0), 100).unwrap();
+        assert!(run.converged);
+        // Bellman-Ford reference
+        let n = g.num_vertices as usize;
+        let mut d = vec![f32::INFINITY; n];
+        d[0] = 0.0;
+        loop {
+            let mut ch = false;
+            for e in &g.edges {
+                let c = d[e.src as usize] + e.weight;
+                if c < d[e.dst as usize] {
+                    d[e.dst as usize] = c;
+                    ch = true;
+                }
+            }
+            if !ch {
+                break;
+            }
+        }
+        assert_eq!(eng.values(), &d[..]);
+    }
+
+    #[test]
+    fn replication_exceeds_one_on_powerlaw() {
+        let eng =
+            DistEngine::new(DistSystem::PowerGraph, ClusterConfig::default(), graph()).unwrap();
+        assert!(eng.replication_factor() > 1.5, "{}", eng.replication_factor());
+    }
+
+    #[test]
+    fn partition_stats_sane() {
+        let (skew, cross) = partition_stats(&graph(), 9);
+        assert!(skew >= 1.0);
+        assert!((0.0..=1.0).contains(&cross));
+        assert!(cross > 0.5, "hash partitioning should cut most edges");
+    }
+}

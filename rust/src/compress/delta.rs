@@ -1,0 +1,118 @@
+//! Graph-aware delta-varint codec for CSR shard payloads (Table 2
+//! ablation).
+//!
+//! CSR `row_offsets` are non-decreasing and `col` ids cluster by locality;
+//! zigzag-delta + LEB128 exploits both, beating byte-oriented codecs on
+//! ratio for unweighted shards at near-memcpy speed.  Operates on u32
+//! streams (the shard serialisation), not arbitrary bytes.
+
+use anyhow::Result;
+
+use crate::util::varint;
+
+/// Encode a u32 slice as zigzag deltas.
+pub fn encode_u32s(vals: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() + 8);
+    varint::write_u64(&mut out, vals.len() as u64);
+    let mut prev = 0i64;
+    for &v in vals {
+        let d = v as i64 - prev;
+        varint::write_u64(&mut out, varint::zigzag(d));
+        prev = v as i64;
+    }
+    out
+}
+
+pub fn decode_u32s(data: &[u8]) -> Result<Vec<u32>> {
+    let mut pos = 0usize;
+    let n = varint::read_u64(data, &mut pos)
+        .ok_or_else(|| anyhow::anyhow!("delta: bad header"))? as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut prev = 0i64;
+    for _ in 0..n {
+        let z = varint::read_u64(data, &mut pos)
+            .ok_or_else(|| anyhow::anyhow!("delta: truncated"))?;
+        let v = prev + varint::unzigzag(z);
+        anyhow::ensure!((0..=u32::MAX as i64).contains(&v), "delta: value {v} out of range");
+        out.push(v as u32);
+        prev = v;
+    }
+    anyhow::ensure!(pos == data.len(), "delta: {} trailing bytes", data.len() - pos);
+    Ok(out)
+}
+
+/// Whole-byte-buffer adapter (reinterprets as u32s): lets the delta codec
+/// plug into the same bench harness as the byte codecs. Input length must
+/// be a multiple of 4 — shard files always are.
+pub fn compress_bytes(data: &[u8]) -> Result<Vec<u8>> {
+    anyhow::ensure!(data.len() % 4 == 0, "delta: payload not u32-aligned");
+    Ok(encode_u32s(&crate::util::bytes_as_u32s(data)))
+}
+
+pub fn decompress_bytes(data: &[u8]) -> Result<Vec<u8>> {
+    Ok(crate::util::u32s_as_bytes(&decode_u32s(data)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_sorted() {
+        let vals: Vec<u32> = (0..10_000).map(|i| i * 2 + 5).collect();
+        let enc = encode_u32s(&vals);
+        assert_eq!(decode_u32s(&enc).unwrap(), vals);
+        // sorted deltas are tiny: ~1 byte each
+        assert!(enc.len() < vals.len() * 2, "{} bytes", enc.len());
+    }
+
+    #[test]
+    fn round_trip_unsorted() {
+        let vals = vec![5u32, 0, u32::MAX, 17, 17, 3];
+        assert_eq!(decode_u32s(&encode_u32s(&vals)).unwrap(), vals);
+    }
+
+    #[test]
+    fn empty() {
+        assert_eq!(decode_u32s(&encode_u32s(&[])).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn beats_raw_on_csr_like_data() {
+        // CSR col array of a power-lawish shard: clustered ascending runs.
+        let mut vals = Vec::new();
+        for row in 0..200u32 {
+            for j in 0..50u32 {
+                vals.push(row * 37 + j * 3);
+            }
+        }
+        let enc = encode_u32s(&vals);
+        assert!(enc.len() * 2 < vals.len() * 4, "ratio {}", vals.len() * 4 / enc.len());
+    }
+
+    #[test]
+    fn byte_adapter_round_trip() {
+        let vals: Vec<u32> = (0..1000).rev().collect();
+        let bytes = crate::util::u32s_as_bytes(&vals);
+        let enc = compress_bytes(&bytes).unwrap();
+        assert_eq!(decompress_bytes(&enc).unwrap(), bytes);
+    }
+
+    #[test]
+    fn byte_adapter_rejects_ragged() {
+        assert!(compress_bytes(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let enc = encode_u32s(&[1, 2, 3]);
+        assert!(decode_u32s(&enc[..enc.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut enc = encode_u32s(&[1, 2, 3]);
+        enc.push(0);
+        assert!(decode_u32s(&enc).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! A fast byte-oriented LZ codec — the snappy stand-in for cache mode 2.
+//!
+//! Greedy LZ77 with a 64Ki-entry hash table over 4-byte windows, emitting a
+//! token stream in a snappy-like framing:
+//!
+//! ```text
+//! header: varint decompressed_len
+//! tokens: literal  = 0x00, varint len, bytes
+//!         match    = 0x01, varint len, varint distance
+//! ```
+//!
+//! Like snappy it trades ratio for speed: single pass, no entropy coding.
+
+use anyhow::Result;
+
+use crate::util::varint;
+
+const MIN_MATCH: usize = 4;
+const HASH_BITS: u32 = 16;
+
+#[inline]
+fn hash4(b: &[u8]) -> usize {
+    let x = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    (x.wrapping_mul(0x9e37_79b1) >> (32 - HASH_BITS)) as usize
+}
+
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    varint::write_u64(&mut out, data.len() as u64);
+    if data.is_empty() {
+        return out;
+    }
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+    while i + MIN_MATCH <= data.len() {
+        let h = hash4(&data[i..]);
+        let cand = table[h];
+        table[h] = i;
+        if cand != usize::MAX && data[cand..cand + MIN_MATCH] == data[i..i + MIN_MATCH] {
+            // extend the match
+            let mut len = MIN_MATCH;
+            while i + len < data.len() && data[cand + len] == data[i + len] {
+                len += 1;
+            }
+            flush_literals(&mut out, &data[lit_start..i]);
+            out.push(0x01);
+            varint::write_u64(&mut out, len as u64);
+            varint::write_u64(&mut out, (i - cand) as u64);
+            // index a few positions inside the match so later data can
+            // reference it (snappy skips this; indexing every 4th position
+            // is a cheap ratio win on shard byte streams)
+            let end = i + len;
+            let mut j = i + 1;
+            while j + MIN_MATCH <= end.min(data.len()) {
+                table[hash4(&data[j..])] = j;
+                j += 4;
+            }
+            i = end;
+            lit_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    flush_literals(&mut out, &data[lit_start..]);
+    out
+}
+
+fn flush_literals(out: &mut Vec<u8>, lits: &[u8]) {
+    if lits.is_empty() {
+        return;
+    }
+    out.push(0x00);
+    varint::write_u64(out, lits.len() as u64);
+    out.extend_from_slice(lits);
+}
+
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
+    let mut pos = 0usize;
+    let total = varint::read_u64(data, &mut pos)
+        .ok_or_else(|| anyhow::anyhow!("lzp: bad header"))? as usize;
+    let mut out = Vec::with_capacity(total);
+    while pos < data.len() {
+        let tag = data[pos];
+        pos += 1;
+        match tag {
+            0x00 => {
+                let len = varint::read_u64(data, &mut pos)
+                    .ok_or_else(|| anyhow::anyhow!("lzp: bad literal len"))?
+                    as usize;
+                anyhow::ensure!(pos + len <= data.len(), "lzp: literal overrun");
+                out.extend_from_slice(&data[pos..pos + len]);
+                pos += len;
+            }
+            0x01 => {
+                let len = varint::read_u64(data, &mut pos)
+                    .ok_or_else(|| anyhow::anyhow!("lzp: bad match len"))?
+                    as usize;
+                let dist = varint::read_u64(data, &mut pos)
+                    .ok_or_else(|| anyhow::anyhow!("lzp: bad match dist"))?
+                    as usize;
+                anyhow::ensure!(dist > 0 && dist <= out.len(), "lzp: bad distance {dist}");
+                // overlapping copy (dist may be < len)
+                let start = out.len() - dist;
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+            t => anyhow::bail!("lzp: unknown tag {t}"),
+        }
+    }
+    anyhow::ensure!(out.len() == total, "lzp: length {} != header {}", out.len(), total);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(data: &[u8]) {
+        let c = compress(data);
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn empty() {
+        round_trip(&[]);
+    }
+
+    #[test]
+    fn short_literals() {
+        round_trip(b"abc");
+    }
+
+    #[test]
+    fn repetitive_compresses_well() {
+        let data = b"abcdabcdabcdabcdabcdabcdabcdabcd".repeat(100);
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 4, "{} vs {}", c.len(), data.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn overlapping_match_rle() {
+        let data = vec![7u8; 10_000];
+        let c = compress(&data);
+        assert!(c.len() < 100);
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn csr_like_stream_compresses() {
+        // CSR col arrays repeat hub ids — byte-level matches LZ can find.
+        // (A pure arithmetic progression is *not* LZ-compressible; that
+        // case belongs to the delta codec.)
+        let mut data = Vec::new();
+        for row in 0..5_000u32 {
+            for j in 0..10u32 {
+                let hub = (row % 16) * 1000 + j; // repeating neighbour sets
+                data.extend_from_slice(&hub.to_le_bytes());
+            }
+        }
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 2, "{} vs {}", c.len(), data.len());
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn random_bytes_round_trip() {
+        let mut x = 1u64;
+        let data: Vec<u8> = (0..10_000)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                (x >> 33) as u8
+            })
+            .collect();
+        round_trip(&data);
+    }
+
+    #[test]
+    fn rejects_corrupt_stream() {
+        let c = compress(b"hello world hello world hello world");
+        // corrupt the header length
+        let mut bad = c.clone();
+        bad[0] ^= 0x7f;
+        assert!(decompress(&bad).is_err());
+        // truncate mid-token
+        assert!(decompress(&c[..c.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        let mut buf = Vec::new();
+        crate::util::varint::write_u64(&mut buf, 4);
+        buf.push(0x99);
+        assert!(decompress(&buf).is_err());
+    }
+}

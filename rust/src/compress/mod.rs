@@ -1,0 +1,220 @@
+//! Compression codecs for the compressed edge cache (paper §2.4.2).
+//!
+//! The paper uses snappy, zlib-1 and zlib-3 (cache modes 2/3/4).  snappy is
+//! not in the vendored crate set; on CSR shard bytes the graph-aware
+//! delta-varint codec ([`delta`]) lands in exactly snappy's class (ratio ≈
+//! 1.7–2.2, decompression ≈ 2–4× zlib's speed — Table 2 bench), so mode 2
+//! uses it (with the byte-LZ [`lzp`] as fallback for non-u32-aligned
+//! payloads).  Modes 3/4 are the real zlib via `flate2`.
+
+pub mod delta;
+pub mod lzp;
+
+use anyhow::Result;
+
+/// The five cache modes of §2.4.2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CacheMode {
+    /// Mode 0: no edge cache (system page cache only).
+    M0None,
+    /// Mode 1: cache uncompressed shards.
+    M1Raw,
+    /// Mode 2: fast LZ (snappy stand-in).
+    M2Fast,
+    /// Mode 3: zlib level 1.
+    M3Zlib1,
+    /// Mode 4: zlib level 3.
+    M4Zlib3,
+}
+
+pub const ALL_MODES: [CacheMode; 5] = [
+    CacheMode::M0None,
+    CacheMode::M1Raw,
+    CacheMode::M2Fast,
+    CacheMode::M3Zlib1,
+    CacheMode::M4Zlib3,
+];
+
+impl CacheMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CacheMode::M0None => "cache-0",
+            CacheMode::M1Raw => "cache-1",
+            CacheMode::M2Fast => "cache-2",
+            CacheMode::M3Zlib1 => "cache-3",
+            CacheMode::M4Zlib3 => "cache-4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CacheMode> {
+        ALL_MODES.into_iter().find(|m| m.name() == s)
+    }
+
+    /// Estimated compression ratios γᵢ for the §2.4.2 selection rule.
+    /// The paper uses γ = 1,2,4,5 (measured on its web crawls); RMAT sim
+    /// shards are less locality-rich, so these are calibrated from the
+    /// Table 2 bench on the sim datasets instead.
+    pub fn estimated_ratio(&self) -> f64 {
+        match self {
+            CacheMode::M0None => 1.0,
+            CacheMode::M1Raw => 1.0,
+            CacheMode::M2Fast => 1.7,
+            CacheMode::M3Zlib1 => 1.9,
+            CacheMode::M4Zlib3 => 2.0,
+        }
+    }
+
+    pub fn compress(&self, data: &[u8]) -> Vec<u8> {
+        match self {
+            CacheMode::M0None | CacheMode::M1Raw => data.to_vec(),
+            CacheMode::M2Fast => {
+                // delta-varint for u32-aligned shard payloads (tag 1),
+                // byte-LZ fallback otherwise (tag 0)
+                if data.len() % 4 == 0 {
+                    let mut out = delta::compress_bytes(data).expect("aligned");
+                    out.push(1);
+                    out
+                } else {
+                    let mut out = lzp::compress(data);
+                    out.push(0);
+                    out
+                }
+            }
+            CacheMode::M3Zlib1 => zlib_compress(data, 1),
+            CacheMode::M4Zlib3 => zlib_compress(data, 3),
+        }
+    }
+
+    pub fn decompress(&self, data: &[u8]) -> Result<Vec<u8>> {
+        match self {
+            CacheMode::M0None | CacheMode::M1Raw => Ok(data.to_vec()),
+            CacheMode::M2Fast => {
+                let (tag, body) = data
+                    .split_last()
+                    .ok_or_else(|| anyhow::anyhow!("fast codec: empty payload"))?;
+                match tag {
+                    1 => delta::decompress_bytes(body),
+                    0 => lzp::decompress(body),
+                    t => anyhow::bail!("fast codec: unknown tag {t}"),
+                }
+            }
+            CacheMode::M3Zlib1 | CacheMode::M4Zlib3 => zlib_decompress(data),
+        }
+    }
+}
+
+fn zlib_compress(data: &[u8], level: u32) -> Vec<u8> {
+    use flate2::write::ZlibEncoder;
+    use std::io::Write;
+    let mut enc = ZlibEncoder::new(
+        Vec::with_capacity(data.len() / 2),
+        flate2::Compression::new(level),
+    );
+    enc.write_all(data).expect("in-memory zlib write");
+    enc.finish().expect("in-memory zlib finish")
+}
+
+fn zlib_decompress(data: &[u8]) -> Result<Vec<u8>> {
+    use flate2::read::ZlibDecoder;
+    use std::io::Read;
+    let mut out = Vec::with_capacity(data.len() * 3);
+    ZlibDecoder::new(data).read_to_end(&mut out)?;
+    Ok(out)
+}
+
+/// §2.4.2 automatic mode selection: the smallest `i` with `S/γᵢ ≤ C`,
+/// falling back to the highest-ratio mode when nothing fits.
+pub fn select_mode(graph_bytes: u64, cache_capacity: u64) -> CacheMode {
+    if cache_capacity == 0 {
+        return CacheMode::M0None;
+    }
+    for mode in [
+        CacheMode::M1Raw,
+        CacheMode::M2Fast,
+        CacheMode::M3Zlib1,
+        CacheMode::M4Zlib3,
+    ] {
+        if (graph_bytes as f64 / mode.estimated_ratio()) <= cache_capacity as f64 {
+            return mode;
+        }
+    }
+    CacheMode::M4Zlib3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard_like_payload() -> Vec<u8> {
+        // Sorted-ish u32 ids: realistic shard bytes, compressible.
+        let mut out = Vec::new();
+        let mut x = 0u32;
+        for i in 0..20_000u32 {
+            x += i % 7;
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn all_modes_round_trip() {
+        let data = shard_like_payload();
+        for m in ALL_MODES {
+            let c = m.compress(&data);
+            assert_eq!(m.decompress(&c).unwrap(), data, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn zlib_compresses_shard_bytes() {
+        let data = shard_like_payload();
+        let c3 = CacheMode::M3Zlib1.compress(&data);
+        let c4 = CacheMode::M4Zlib3.compress(&data);
+        assert!(c3.len() < data.len() / 2);
+        assert!(c4.len() <= c3.len() + c3.len() / 10);
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in ALL_MODES {
+            assert_eq!(CacheMode::parse(m.name()), Some(m));
+        }
+    }
+
+    #[test]
+    fn select_mode_prefers_lowest_fitting() {
+        // Graph 100 bytes: capacity 200 fits raw (γ=1)
+        assert_eq!(select_mode(100, 200), CacheMode::M1Raw);
+        // capacity 55: needs γ >= 1.82 => zlib-1 (γ=1.9)
+        assert_eq!(select_mode(100, 55), CacheMode::M3Zlib1);
+        // capacity 59: fast codec (γ=1.7) fits
+        assert_eq!(select_mode(100, 59), CacheMode::M2Fast);
+        // capacity 10: nothing fits => highest ratio
+        assert_eq!(select_mode(100, 10), CacheMode::M4Zlib3);
+        // zero capacity => no cache
+        assert_eq!(select_mode(100, 0), CacheMode::M0None);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        for m in ALL_MODES {
+            assert_eq!(m.decompress(&m.compress(&[])).unwrap(), Vec::<u8>::new());
+        }
+    }
+
+    #[test]
+    fn incompressible_data_round_trips() {
+        let mut x = 0x12345678u32;
+        let data: Vec<u8> = (0..4096)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                x as u8
+            })
+            .collect();
+        for m in ALL_MODES {
+            assert_eq!(m.decompress(&m.compress(&data)).unwrap(), data);
+        }
+    }
+}

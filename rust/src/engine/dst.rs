@@ -1,0 +1,139 @@
+//! Lock-free disjoint writes into the `DstVertexArray`.
+//!
+//! The paper's central no-synchronisation claim (§2.3): because every
+//! in-edge of a vertex lives in exactly one shard, `DstVertexArray[v]` is
+//! written by exactly one worker per iteration — so unlike GridGraph no
+//! locks or atomics are needed.  [`SharedDst`] encodes that invariant: it
+//! hands out `&mut [f32]` windows over one array to multiple threads,
+//! `debug_assert`ing that claimed intervals never overlap.
+
+use std::cell::UnsafeCell;
+use std::sync::Mutex;
+
+/// A vertex-value array writable concurrently on *disjoint* intervals.
+pub struct SharedDst {
+    data: UnsafeCell<Vec<f32>>,
+    /// Debug-only overlap registry of claimed `[start, end)` intervals.
+    claims: Mutex<Vec<(usize, usize)>>,
+}
+
+// SAFETY: concurrent access is confined to disjoint index ranges, enforced
+// by the claim registry in debug builds and by the preprocessing invariant
+// (intervals partition the vertex space) in release builds.
+unsafe impl Sync for SharedDst {}
+
+impl SharedDst {
+    pub fn new(init: Vec<f32>) -> Self {
+        SharedDst { data: UnsafeCell::new(init), claims: Mutex::new(Vec::new()) }
+    }
+
+    pub fn len(&self) -> usize {
+        unsafe { (*self.data.get()).len() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Claim `[start, start+len)` for exclusive writing.
+    ///
+    /// # Safety
+    /// Callers must guarantee no two live claims overlap. The VSW engine
+    /// derives claims from the disjoint shard intervals of the property
+    /// file, which `prep::compute_intervals` guarantees (and tests).
+    pub unsafe fn claim(&self, start: usize, len: usize) -> &mut [f32] {
+        debug_assert!(start + len <= self.len(), "claim out of bounds");
+        #[cfg(debug_assertions)]
+        {
+            let mut claims = self.claims.lock().unwrap();
+            for &(a, b) in claims.iter() {
+                assert!(
+                    start + len <= a || b <= start,
+                    "overlapping dst claim [{start},{}) vs [{a},{b})",
+                    start + len
+                );
+            }
+            claims.push((start, start + len));
+        }
+        let v = &mut *self.data.get();
+        &mut v[start..start + len]
+    }
+
+    /// Clear the debug claim registry at an iteration barrier.
+    pub fn release_all(&self) {
+        #[cfg(debug_assertions)]
+        self.claims.lock().unwrap().clear();
+        #[cfg(not(debug_assertions))]
+        {
+            let _ = &self.claims;
+        }
+    }
+
+    /// Take the array back out (single-threaded phase).
+    pub fn into_inner(self) -> Vec<f32> {
+        self.data.into_inner()
+    }
+
+    /// Read-only view; callers must ensure no concurrent writers (the
+    /// engine only reads at iteration barriers).
+    pub fn snapshot(&self) -> Vec<f32> {
+        unsafe { (*self.data.get()).clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_claims_write_independently() {
+        let dst = SharedDst::new(vec![0.0; 10]);
+        std::thread::scope(|s| {
+            let d = &dst;
+            s.spawn(move || {
+                let a = unsafe { d.claim(0, 5) };
+                a.fill(1.0);
+            });
+            s.spawn(move || {
+                let b = unsafe { d.claim(5, 5) };
+                b.fill(2.0);
+            });
+        });
+        let v = dst.into_inner();
+        assert_eq!(&v[..5], &[1.0; 5]);
+        assert_eq!(&v[5..], &[2.0; 5]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "overlapping dst claim")]
+    fn overlap_detected_in_debug() {
+        let dst = SharedDst::new(vec![0.0; 10]);
+        unsafe {
+            let _a = dst.claim(0, 6);
+            let _b = dst.claim(5, 5);
+        }
+    }
+
+    #[test]
+    fn release_allows_reclaim() {
+        let dst = SharedDst::new(vec![0.0; 4]);
+        unsafe {
+            dst.claim(0, 4)[0] = 3.0;
+        }
+        dst.release_all();
+        unsafe {
+            assert_eq!(dst.claim(0, 4)[0], 3.0);
+        }
+    }
+
+    #[test]
+    fn snapshot_reflects_writes() {
+        let dst = SharedDst::new(vec![1.0; 3]);
+        unsafe {
+            dst.claim(1, 1)[0] = 9.0;
+        }
+        dst.release_all();
+        assert_eq!(dst.snapshot(), vec![1.0, 9.0, 1.0]);
+    }
+}

@@ -1,0 +1,110 @@
+//! Registry of the sim datasets standing in for the paper's four graphs.
+//!
+//! Scaled so the whole evaluation runs on one core in minutes while keeping
+//! the paper's *ratios*: average degrees (35/41/60/86), the ~1.8×
+//! vertex-count step Twitter→UK-2007, and the size ordering that makes
+//! UK-2014/EU-2015 exceed the simulated RAM budget (so the cache-mode and
+//! out-of-memory effects reproduce).  See `storage::disk` for the RAM/disk
+//! model that pairs with these.
+
+use super::rmat::{rmat, RmatParams};
+use super::EdgeList;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    TwitterSim,
+    Uk2007Sim,
+    Uk2014Sim,
+    Eu2015Sim,
+}
+
+pub const ALL: [Dataset; 4] = [
+    Dataset::TwitterSim,
+    Dataset::Uk2007Sim,
+    Dataset::Uk2014Sim,
+    Dataset::Eu2015Sim,
+];
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::TwitterSim => "twitter-sim",
+            Dataset::Uk2007Sim => "uk2007-sim",
+            Dataset::Uk2014Sim => "uk2014-sim",
+            Dataset::Eu2015Sim => "eu2015-sim",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataset> {
+        ALL.into_iter().find(|d| d.name() == s)
+    }
+
+    /// (scale, edges, avg-degree target). Paper: Twitter 42M/1.5B (d̄ 35),
+    /// UK-2007 134M/5.5B (41), UK-2014 788M/47.6B (60), EU-2015 1.1B/91.8B
+    /// (86).  We scale vertices by ~2¹², keeping d̄.
+    pub fn spec(&self) -> (u32, u64, u64) {
+        match self {
+            Dataset::TwitterSim => (14, 560_000, 101),   // 16K vertices, d̄≈34
+            Dataset::Uk2007Sim => (15, 1_340_000, 102),  // 32K vertices, d̄≈41
+            Dataset::Uk2014Sim => (17, 7_800_000, 103),  // 131K vertices, d̄≈60
+            Dataset::Eu2015Sim => (18, 22_400_000, 104), // 262K vertices, d̄≈85
+        }
+    }
+
+    /// Generate the dataset (deterministic per-dataset seed).
+    pub fn generate(&self) -> EdgeList {
+        let (scale, edges, seed) = self.spec();
+        rmat(scale, edges, seed, RmatParams::default())
+    }
+
+    /// A scaled-down twin (same degree structure, ~8x fewer edges) used by
+    /// unit/integration tests to stay fast.
+    pub fn generate_small(&self) -> EdgeList {
+        let (scale, edges, seed) = self.spec();
+        rmat(scale.saturating_sub(3).max(8), edges / 8, seed, RmatParams::default())
+    }
+
+    /// AOT artifact variant whose Vc covers this dataset's vertex count.
+    pub fn artifact_variant(&self) -> &'static str {
+        match self {
+            Dataset::TwitterSim | Dataset::Uk2007Sim => "small",
+            Dataset::Uk2014Sim | Dataset::Eu2015Sim => "medium",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for d in ALL {
+            assert_eq!(Dataset::parse(d.name()), Some(d));
+        }
+        assert_eq!(Dataset::parse("nope"), None);
+    }
+
+    #[test]
+    fn average_degrees_match_paper_ratios() {
+        // paper avg degrees: 35.3, 41.2, 60.4, 85.7
+        let want = [34.0, 41.0, 59.0, 85.0];
+        for (d, w) in ALL.iter().zip(want) {
+            let (scale, edges, _) = d.spec();
+            let avg = edges as f64 / (1u64 << scale) as f64;
+            assert!((avg - w).abs() < 3.0, "{}: avg degree {avg} vs {w}", d.name());
+        }
+    }
+
+    #[test]
+    fn sizes_strictly_increase() {
+        let sizes: Vec<u64> = ALL.iter().map(|d| d.spec().1).collect();
+        assert!(sizes.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn small_twin_generates() {
+        let g = Dataset::TwitterSim.generate_small();
+        assert!(g.num_edges() > 10_000);
+    }
+}

@@ -1,0 +1,281 @@
+//! Graph core: edge lists, CSR, degree statistics, dataset registry.
+
+pub mod datasets;
+pub mod rmat;
+pub mod stats;
+
+/// Vertex ids are dense `u32` (the paper's datasets are relabelled the same
+/// way by the LAW framework).
+pub type VertexId = u32;
+
+/// A directed edge `(src, dst)` with optional weight (SSSP uses weights;
+/// PageRank/CC ignore them).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub src: VertexId,
+    pub dst: VertexId,
+    pub weight: f32,
+}
+
+impl Edge {
+    pub fn new(src: VertexId, dst: VertexId) -> Self {
+        Edge { src, dst, weight: 1.0 }
+    }
+
+    pub fn weighted(src: VertexId, dst: VertexId, weight: f32) -> Self {
+        Edge { src, dst, weight }
+    }
+}
+
+/// An in-memory edge list plus the vertex count.  The generators produce
+/// this; the preprocessor consumes it (or its CSV serialisation).
+#[derive(Clone, Debug, Default)]
+pub struct EdgeList {
+    pub num_vertices: u32,
+    pub edges: Vec<Edge>,
+}
+
+impl EdgeList {
+    pub fn new(num_vertices: u32) -> Self {
+        EdgeList { num_vertices, edges: Vec::new() }
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        self.edges.len() as u64
+    }
+
+    /// Per-vertex in-degrees (preprocessing step 1 of the paper).
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_vertices as usize];
+        for e in &self.edges {
+            deg[e.dst as usize] += 1;
+        }
+        deg
+    }
+
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_vertices as usize];
+        for e in &self.edges {
+            deg[e.src as usize] += 1;
+        }
+        deg
+    }
+
+    /// Symmetrise for CC: the paper converts directed inputs to undirected
+    /// graphs before running CC.  Self-duplicates are not removed (CSR
+    /// min-reduction is idempotent, duplicates only cost I/O, matching how
+    /// X-Stream/GridGraph treat symmetrised inputs).
+    pub fn to_undirected(&self) -> EdgeList {
+        let mut edges = Vec::with_capacity(self.edges.len() * 2);
+        for e in &self.edges {
+            edges.push(*e);
+            edges.push(Edge::weighted(e.dst, e.src, e.weight));
+        }
+        EdgeList { num_vertices: self.num_vertices, edges }
+    }
+
+    /// Serialise as the CSV the paper's preprocessing pipelines ingest.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::with_capacity(self.edges.len() * 16);
+        for e in &self.edges {
+            s.push_str(&format!("{},{}\n", e.src, e.dst));
+        }
+        s
+    }
+
+    /// Parse `src,dst[,weight]` CSV lines.
+    pub fn from_csv(text: &str, num_vertices: u32) -> anyhow::Result<EdgeList> {
+        let mut edges = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split(',');
+            let parse = |s: Option<&str>| -> anyhow::Result<u32> {
+                Ok(s.ok_or_else(|| anyhow::anyhow!("line {}: missing field", i + 1))?
+                    .trim()
+                    .parse()?)
+            };
+            let src = parse(it.next())?;
+            let dst = parse(it.next())?;
+            let weight = match it.next() {
+                Some(w) => w.trim().parse()?,
+                None => 1.0,
+            };
+            anyhow::ensure!(
+                src < num_vertices && dst < num_vertices,
+                "line {}: vertex id out of range",
+                i + 1
+            );
+            edges.push(Edge::weighted(src, dst, weight));
+        }
+        Ok(EdgeList { num_vertices, edges })
+    }
+}
+
+/// Compressed Sparse Row over destination rows — the in-memory form of one
+/// edge shard (Figure 3 of the paper).  `row_offsets.len() == rows + 1`;
+/// edge `e` of local row `r` has source `col[e]` for
+/// `e in row_offsets[r]..row_offsets[r+1]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub row_offsets: Vec<u32>,
+    pub col: Vec<VertexId>,
+    /// Present only for weighted graphs (paper: unweighted graphs skip the
+    /// val array entirely).
+    pub weights: Option<Vec<f32>>,
+}
+
+impl Csr {
+    pub fn rows(&self) -> usize {
+        self.row_offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Build CSR from edges already restricted to destination interval
+    /// `[start, start+rows)`.  Edges need not be pre-sorted.
+    pub fn from_edges(edges: &[Edge], start: VertexId, rows: usize, weighted: bool) -> Csr {
+        let mut counts = vec![0u32; rows];
+        for e in edges {
+            let r = (e.dst - start) as usize;
+            assert!(r < rows, "edge dst {} outside interval", e.dst);
+            counts[r] += 1;
+        }
+        let mut row_offsets = vec![0u32; rows + 1];
+        for r in 0..rows {
+            row_offsets[r + 1] = row_offsets[r] + counts[r];
+        }
+        let mut col = vec![0u32; edges.len()];
+        let mut w = if weighted { vec![0.0f32; edges.len()] } else { Vec::new() };
+        let mut cursor = row_offsets.clone();
+        for e in edges {
+            let r = (e.dst - start) as usize;
+            let i = cursor[r] as usize;
+            col[i] = e.src;
+            if weighted {
+                w[i] = e.weight;
+            }
+            cursor[r] += 1;
+        }
+        Csr {
+            row_offsets,
+            col,
+            weights: if weighted { Some(w) } else { None },
+        }
+    }
+
+    /// In-memory size in bytes (row + col + val arrays).
+    pub fn size_bytes(&self) -> usize {
+        self.row_offsets.len() * 4
+            + self.col.len() * 4
+            + self.weights.as_ref().map_or(0, |w| w.len() * 4)
+    }
+
+    /// Iterate `(local_row, src, weight)` triples.
+    pub fn iter_edges(&self) -> impl Iterator<Item = (u32, VertexId, f32)> + '_ {
+        (0..self.rows()).flat_map(move |r| {
+            let lo = self.row_offsets[r] as usize;
+            let hi = self.row_offsets[r + 1] as usize;
+            (lo..hi).map(move |i| {
+                let w = self.weights.as_ref().map_or(1.0, |ws| ws[i]);
+                (r as u32, self.col[i], w)
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> EdgeList {
+        // 0 -> 1, 0 -> 2, 1 -> 3, 2 -> 3
+        EdgeList {
+            num_vertices: 4,
+            edges: vec![
+                Edge::new(0, 1),
+                Edge::new(0, 2),
+                Edge::new(1, 3),
+                Edge::new(2, 3),
+            ],
+        }
+    }
+
+    #[test]
+    fn degrees() {
+        let g = diamond();
+        assert_eq!(g.in_degrees(), vec![0, 1, 1, 2]);
+        assert_eq!(g.out_degrees(), vec![2, 1, 1, 0]);
+    }
+
+    #[test]
+    fn undirected_doubles_edges() {
+        let g = diamond().to_undirected();
+        assert_eq!(g.num_edges(), 8);
+        assert_eq!(g.in_degrees(), vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let g = diamond();
+        let parsed = EdgeList::from_csv(&g.to_csv(), 4).unwrap();
+        assert_eq!(parsed.edges, g.edges);
+    }
+
+    #[test]
+    fn csv_rejects_out_of_range() {
+        assert!(EdgeList::from_csv("0,9\n", 4).is_err());
+    }
+
+    #[test]
+    fn csv_weighted_and_comments() {
+        let g = EdgeList::from_csv("# header\n0,1,2.5\n\n1,0\n", 2).unwrap();
+        assert_eq!(g.edges[0].weight, 2.5);
+        assert_eq!(g.edges[1].weight, 1.0);
+    }
+
+    #[test]
+    fn csr_matches_figure3_shape() {
+        // Figure 3 of the paper: row = [0,2,4,7,9]
+        let edges = vec![
+            Edge::new(5, 0), Edge::new(7, 0),
+            Edge::new(1, 1), Edge::new(2, 1),
+            Edge::new(0, 2), Edge::new(3, 2), Edge::new(9, 2),
+            Edge::new(4, 3), Edge::new(8, 3),
+        ];
+        let csr = Csr::from_edges(&edges, 0, 4, false);
+        assert_eq!(csr.row_offsets, vec![0, 2, 4, 7, 9]);
+        assert_eq!(csr.col, vec![5, 7, 1, 2, 0, 3, 9, 4, 8]);
+        assert!(csr.weights.is_none());
+    }
+
+    #[test]
+    fn csr_interval_offset() {
+        let edges = vec![Edge::new(0, 10), Edge::new(1, 11), Edge::new(2, 10)];
+        let csr = Csr::from_edges(&edges, 10, 2, false);
+        assert_eq!(csr.row_offsets, vec![0, 2, 3]);
+        assert_eq!(csr.rows(), 2);
+        let all: Vec<_> = csr.iter_edges().collect();
+        assert_eq!(all, vec![(0, 0, 1.0), (0, 2, 1.0), (1, 1, 1.0)]);
+    }
+
+    #[test]
+    fn csr_unsorted_input_ok() {
+        let edges = vec![Edge::new(3, 1), Edge::new(2, 0), Edge::new(1, 1)];
+        let csr = Csr::from_edges(&edges, 0, 2, false);
+        assert_eq!(csr.row_offsets, vec![0, 1, 3]);
+        assert_eq!(csr.col[0], 2);
+    }
+
+    #[test]
+    fn csr_size_accounts_weights() {
+        let edges = vec![Edge::weighted(0, 0, 2.0)];
+        let a = Csr::from_edges(&edges, 0, 1, false).size_bytes();
+        let b = Csr::from_edges(&edges, 0, 1, true).size_bytes();
+        assert_eq!(b - a, 4);
+    }
+}

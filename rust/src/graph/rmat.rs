@@ -1,0 +1,154 @@
+//! Synthetic graph generators.
+//!
+//! The paper's datasets (Twitter, UK-2007/2014, EU-2015) are 25GB–1.7TB
+//! crawls we cannot download; all four are power-law (Fig 6), and the
+//! recursive-matrix (R-MAT, Chakrabarti et al.) generator reproduces that
+//! skew, which is what drives shard balance, Bloom-filter selectivity and
+//! edge compressibility.  See DESIGN.md "Substitutions".
+
+use super::{Edge, EdgeList, VertexId};
+use crate::util::rng::Xoshiro256;
+
+/// R-MAT parameters. `(a, b, c)` are the quadrant probabilities
+/// (`d = 1-a-b-c`); the classic power-law setting is `(0.57, 0.19, 0.19)`.
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Perturbation of quadrant probabilities per level, avoids exact
+    /// self-similarity artifacts.
+    pub noise: f64,
+    /// Weight range for SSSP inputs (uniform in `[1, max_weight]`).
+    pub max_weight: f32,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        RmatParams { a: 0.57, b: 0.19, c: 0.19, noise: 0.1, max_weight: 16.0 }
+    }
+}
+
+/// Generate an R-MAT graph with `2^scale` vertices and `num_edges` edges.
+/// Self-loops are redirected; duplicate edges are kept (real crawls contain
+/// parallel link structure after relabelling too).
+pub fn rmat(scale: u32, num_edges: u64, seed: u64, params: RmatParams) -> EdgeList {
+    assert!(scale > 0 && scale < 32, "scale must be in (0, 32)");
+    let n: u64 = 1 << scale;
+    let mut rng = Xoshiro256::new(seed);
+    let mut edges = Vec::with_capacity(num_edges as usize);
+    for _ in 0..num_edges {
+        let (mut u, mut v) = (0u64, 0u64);
+        let mut half = n >> 1;
+        // per-edge jitter of the quadrant probabilities
+        let jitter = |p: f64, r: &mut Xoshiro256, noise: f64| {
+            p * (1.0 - noise + 2.0 * noise * r.next_f64())
+        };
+        while half > 0 {
+            let a = jitter(params.a, &mut rng, params.noise);
+            let b = jitter(params.b, &mut rng, params.noise);
+            let c = jitter(params.c, &mut rng, params.noise);
+            let d = (1.0 - params.a - params.b - params.c).max(0.0);
+            let d = jitter(d, &mut rng, params.noise);
+            let total = a + b + c + d;
+            let r = rng.next_f64() * total;
+            if r < a {
+                // top-left: nothing to add
+            } else if r < a + b {
+                v += half;
+            } else if r < a + b + c {
+                u += half;
+            } else {
+                u += half;
+                v += half;
+            }
+            half >>= 1;
+        }
+        if u == v {
+            v = (v + 1) % n; // redirect self-loop
+        }
+        let weight = 1.0 + rng.next_below(params.max_weight as u64) as f32;
+        edges.push(Edge::weighted(u as VertexId, v as VertexId, weight));
+    }
+    EdgeList { num_vertices: n as u32, edges }
+}
+
+/// Erdős–Rényi-style uniform random graph (non-power-law control for the
+/// ablation benches).
+pub fn uniform(num_vertices: u32, num_edges: u64, seed: u64) -> EdgeList {
+    assert!(num_vertices >= 2);
+    let mut rng = Xoshiro256::new(seed);
+    let mut edges = Vec::with_capacity(num_edges as usize);
+    for _ in 0..num_edges {
+        let u = rng.next_below(num_vertices as u64) as VertexId;
+        let mut v = rng.next_below(num_vertices as u64) as VertexId;
+        if v == u {
+            v = (v + 1) % num_vertices;
+        }
+        let weight = 1.0 + rng.next_below(16) as f32;
+        edges.push(Edge::weighted(u, v, weight));
+    }
+    EdgeList { num_vertices, edges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats;
+
+    #[test]
+    fn rmat_deterministic() {
+        let a = rmat(8, 1000, 1, RmatParams::default());
+        let b = rmat(8, 1000, 1, RmatParams::default());
+        assert_eq!(a.edges, b.edges);
+    }
+
+    #[test]
+    fn rmat_counts() {
+        let g = rmat(10, 5000, 2, RmatParams::default());
+        assert_eq!(g.num_vertices, 1024);
+        assert_eq!(g.num_edges(), 5000);
+    }
+
+    #[test]
+    fn rmat_no_self_loops() {
+        let g = rmat(9, 4000, 3, RmatParams::default());
+        assert!(g.edges.iter().all(|e| e.src != e.dst));
+    }
+
+    #[test]
+    fn rmat_ids_in_range() {
+        let g = rmat(7, 2000, 4, RmatParams::default());
+        assert!(g.edges.iter().all(|e| e.src < 128 && e.dst < 128));
+    }
+
+    #[test]
+    fn rmat_is_skewed_vs_uniform() {
+        // Power-law check: RMAT's max in-degree far exceeds uniform's.
+        let r = rmat(12, 40_000, 5, RmatParams::default());
+        let u = uniform(4096, 40_000, 5);
+        let rmax = *r.in_degrees().iter().max().unwrap();
+        let umax = *u.in_degrees().iter().max().unwrap();
+        assert!(
+            rmax > 3 * umax,
+            "rmat max in-degree {rmax} not ≫ uniform {umax}"
+        );
+        // and a heavier tail in the log-binned histogram
+        let hist = stats::degree_histogram(&r.in_degrees());
+        assert!(hist.len() >= 6, "expected a long-tailed histogram");
+    }
+
+    #[test]
+    fn weights_in_declared_range() {
+        let g = rmat(8, 3000, 6, RmatParams::default());
+        assert!(g.edges.iter().all(|e| (1.0..=16.0).contains(&e.weight)));
+    }
+
+    #[test]
+    fn uniform_counts() {
+        let g = uniform(100, 1000, 7);
+        assert_eq!(g.num_vertices, 100);
+        assert_eq!(g.num_edges(), 1000);
+        assert!(g.edges.iter().all(|e| e.src != e.dst));
+    }
+}

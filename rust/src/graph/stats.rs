@@ -1,0 +1,119 @@
+//! Degree statistics — regenerates Table 4 rows and Figure 6 series.
+
+use super::EdgeList;
+
+/// Summary row matching Table 4 of the paper.
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    pub num_vertices: u32,
+    pub num_edges: u64,
+    pub avg_degree: f64,
+    pub max_in_degree: u32,
+    pub max_out_degree: u32,
+    pub csv_bytes: u64,
+}
+
+pub fn stats(g: &EdgeList) -> GraphStats {
+    let ind = g.in_degrees();
+    let outd = g.out_degrees();
+    // CSV size estimated from actual digit counts, no materialisation.
+    let csv_bytes: u64 = g
+        .edges
+        .iter()
+        .map(|e| digits(e.src) + digits(e.dst) + 2)
+        .sum();
+    GraphStats {
+        num_vertices: g.num_vertices,
+        num_edges: g.num_edges(),
+        avg_degree: g.num_edges() as f64 / g.num_vertices.max(1) as f64,
+        max_in_degree: ind.iter().copied().max().unwrap_or(0),
+        max_out_degree: outd.iter().copied().max().unwrap_or(0),
+        csv_bytes,
+    }
+}
+
+fn digits(x: u32) -> u64 {
+    let mut n = 1;
+    let mut x = x;
+    while x >= 10 {
+        x /= 10;
+        n += 1;
+    }
+    n
+}
+
+/// Log₂-binned degree histogram: `hist[b] = #vertices with degree in
+/// [2^b, 2^(b+1))`; degree-0 vertices are dropped (log axis, as in Fig 6).
+pub fn degree_histogram(degrees: &[u32]) -> Vec<(u32, u64)> {
+    let mut bins: Vec<u64> = Vec::new();
+    for &d in degrees {
+        if d == 0 {
+            continue;
+        }
+        let b = 31 - d.leading_zeros();
+        if bins.len() <= b as usize {
+            bins.resize(b as usize + 1, 0);
+        }
+        bins[b as usize] += 1;
+    }
+    bins.into_iter()
+        .enumerate()
+        .filter(|(_, c)| *c > 0)
+        .map(|(b, c)| (1u32 << b, c))
+        .collect()
+}
+
+/// Least-squares slope of `log(count)` vs `log(degree)` over the histogram
+/// — a power law shows up as a clearly negative slope (Fig 6's straight
+/// line in log-log space).
+pub fn powerlaw_slope(hist: &[(u32, u64)]) -> f64 {
+    let pts: Vec<(f64, f64)> = hist
+        .iter()
+        .map(|&(d, c)| ((d as f64).ln(), (c as f64).ln()))
+        .collect();
+    let n = pts.len() as f64;
+    if pts.len() < 2 {
+        return 0.0;
+    }
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat::{rmat, RmatParams};
+    use crate::graph::Edge;
+
+    #[test]
+    fn stats_of_small_graph() {
+        let g = EdgeList {
+            num_vertices: 3,
+            edges: vec![Edge::new(0, 1), Edge::new(0, 2), Edge::new(1, 2)],
+        };
+        let s = stats(&g);
+        assert_eq!(s.num_edges, 3);
+        assert_eq!(s.max_out_degree, 2);
+        assert_eq!(s.max_in_degree, 2);
+        assert!((s.avg_degree - 1.0).abs() < 1e-9);
+        // "0,1\n" = 4 bytes per edge here
+        assert_eq!(s.csv_bytes, 12);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let hist = degree_histogram(&[0, 1, 1, 2, 3, 4, 9]);
+        assert_eq!(hist, vec![(1, 2), (2, 2), (4, 1), (8, 1)]);
+    }
+
+    #[test]
+    fn rmat_slope_is_negative() {
+        let g = rmat(12, 60_000, 8, RmatParams::default());
+        let hist = degree_histogram(&g.in_degrees());
+        let slope = powerlaw_slope(&hist);
+        assert!(slope < -0.5, "slope {slope} not power-law-like");
+    }
+}

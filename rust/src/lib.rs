@@ -1,0 +1,48 @@
+//! # GraphMP — I/O-efficient big graph analytics on a single machine
+//!
+//! A reproduction of *GraphMP: I/O-Efficient Big Graph Analytics on a
+//! Single Commodity Machine* (Sun, Wen, Duong, Xiao; cs.DC 2018) as a
+//! three-layer rust + JAX/Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the paper's coordinator: VSW sliding-window
+//!   engine, selective scheduling (Bloom filters), compressed edge cache,
+//!   the preprocessing pipeline, every baseline engine and the analytical
+//!   cost models.
+//! - **Layer 2/1 (`python/compile`)** — the per-shard vertex update as a
+//!   JAX function calling Pallas kernels, AOT-lowered to HLO text.
+//! - **Runtime** — [`runtime`] loads the HLO artifacts through the PJRT C
+//!   API (`xla` crate) so Python never runs on the iteration path.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use graphmp::graph::datasets::Dataset;
+//! use graphmp::prep::{preprocess_into, PrepConfig};
+//! use graphmp::storage::disk::{Disk, DiskProfile};
+//! use graphmp::engine::{EngineConfig, VswEngine};
+//! use graphmp::apps::PageRank;
+//!
+//! let g = Dataset::TwitterSim.generate_small();
+//! let disk = Disk::new(DiskProfile::hdd_raid5());
+//! let (dir, _) = preprocess_into(&g, "/tmp/g", &disk, PrepConfig::default()).unwrap();
+//! let mut engine = VswEngine::open(&dir, &disk, EngineConfig::default()).unwrap();
+//! let run = engine.run(&PageRank::new(), 10).unwrap();
+//! println!("10 iterations in {:.2}s", run.total_seconds());
+//! ```
+
+pub mod apps;
+pub mod baselines;
+pub mod benchutil;
+pub mod cli;
+pub mod bloom;
+pub mod cache;
+pub mod cluster;
+pub mod compress;
+pub mod engine;
+pub mod graph;
+pub mod metrics;
+pub mod model;
+pub mod prep;
+pub mod runtime;
+pub mod storage;
+pub mod util;

@@ -1,0 +1,226 @@
+//! GraphMP command-line launcher.
+//!
+//! ```text
+//! graphmp generate   --dataset twitter-sim --out /tmp/g.csv
+//! graphmp preprocess --dataset twitter-sim --dir /tmp/g [--weighted]
+//! graphmp run        --dir /tmp/g --app pagerank --iters 10
+//!                    [--backend native|pjrt] [--cache-mode cache-3]
+//!                    [--cache-mb 256] [--no-selective] [--disk hdd|ssd|none]
+//! graphmp info       --dir /tmp/g
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use graphmp::apps::{Bfs, Cc, PageRank, Sssp, VertexProgram};
+use graphmp::cli::Args;
+use graphmp::compress::CacheMode;
+use graphmp::engine::{Backend, EngineConfig, VswEngine};
+use graphmp::graph::datasets::Dataset;
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::runtime::{Manifest, ShardExecutor};
+use graphmp::storage::disk::{Disk, DiskProfile};
+use graphmp::storage::GraphDir;
+use graphmp::util::{human_bytes, human_count, human_duration};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("generate") => cmd_generate(&args),
+        Some("preprocess") => cmd_preprocess(&args),
+        Some("run") => cmd_run(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            usage();
+            return;
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "graphmp — I/O-efficient big graph analytics (GraphMP reproduction)
+
+USAGE:
+  graphmp generate   --dataset <name> --out <file.csv>
+  graphmp preprocess --dataset <name> --dir <graphdir> [--weighted] [--undirected]
+                     [--edges-per-shard N] [--small]
+  graphmp run        --dir <graphdir> --app pagerank|sssp|cc|bfs [--iters N]
+                     [--source V] [--backend native|pjrt] [--artifacts DIR]
+                     [--cache-mode cache-0..4] [--cache-mb N] [--no-selective]
+                     [--workers N] [--disk hdd|ssd|none]
+  graphmp info       --dir <graphdir>
+
+datasets: twitter-sim uk2007-sim uk2014-sim eu2015-sim"
+    );
+}
+
+fn dataset(args: &Args) -> Result<Dataset> {
+    let name = args.opt("dataset").context("--dataset required")?;
+    Dataset::parse(name).with_context(|| format!("unknown dataset {name}"))
+}
+
+fn disk(args: &Args) -> Disk {
+    match args.opt_or("disk", "hdd") {
+        "ssd" => Disk::new(DiskProfile::ssd()),
+        "none" => Disk::unthrottled(),
+        _ => Disk::new(DiskProfile::hdd_raid5()),
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let ds = dataset(args)?;
+    let out = PathBuf::from(args.opt("out").context("--out required")?);
+    let g = if args.flag("small") { ds.generate_small() } else { ds.generate() };
+    std::fs::write(&out, g.to_csv())?;
+    println!(
+        "wrote {}: |V|={} |E|={} -> {}",
+        ds.name(),
+        human_count(g.num_vertices as u64),
+        human_count(g.num_edges()),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_preprocess(args: &Args) -> Result<()> {
+    let ds = dataset(args)?;
+    let dir = PathBuf::from(args.opt("dir").context("--dir required")?);
+    let disk = disk(args);
+    let mut g = if args.flag("small") { ds.generate_small() } else { ds.generate() };
+    if args.flag("undirected") {
+        g = g.to_undirected();
+    }
+    let cfg = PrepConfig {
+        edges_per_shard: args.parse_opt_or("edges-per-shard", 262_144u32)?,
+        weighted: args.flag("weighted"),
+        max_rows_per_shard: args.parse_opt_or("max-rows", 8_192u32)?,
+        ..Default::default()
+    };
+    let t = std::time::Instant::now();
+    let (_, report) = preprocess_into(&g, &dir, &disk, cfg)?;
+    println!(
+        "preprocessed {} into {} shards ({} edges, {} on disk) in {}",
+        ds.name(),
+        report.num_shards,
+        human_count(report.num_edges),
+        human_bytes(report.shard_bytes),
+        human_duration(t.elapsed())
+    );
+    Ok(())
+}
+
+fn app_of(args: &Args) -> Result<Box<dyn VertexProgram>> {
+    let source: u32 = args.parse_opt_or("source", 0u32)?;
+    Ok(match args.opt_or("app", "pagerank") {
+        "pagerank" => Box::new(PageRank::new()),
+        "sssp" => Box::new(Sssp::new(source)),
+        "cc" => Box::new(Cc),
+        "bfs" => Box::new(Bfs::new(source)),
+        other => anyhow::bail!("unknown app {other}"),
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let dir = GraphDir::new(args.opt("dir").context("--dir required")?);
+    let disk = disk(args);
+    let app = app_of(args)?;
+    let iters: u32 = args.parse_opt_or("iters", 10u32)?;
+
+    let backend = match args.opt_or("backend", "native") {
+        "native" => Backend::Native,
+        "pjrt" => {
+            let art = PathBuf::from(args.opt_or("artifacts", "artifacts"));
+            let manifest = Manifest::load(&art)?;
+            let prop = dir.read_property(&disk)?;
+            let max_rows = prop
+                .intervals
+                .iter()
+                .map(|&(a, b)| (b - a) as usize)
+                .max()
+                .unwrap_or(0);
+            let variant = manifest
+                .pick_variant(prop.num_vertices as usize, max_rows)
+                .context("no AOT variant large enough; run `make artifacts`")?
+                .to_string();
+            println!("pjrt backend: variant={variant}");
+            Backend::Pjrt(Arc::new(ShardExecutor::load(&art, &variant)?))
+        }
+        other => anyhow::bail!("unknown backend {other}"),
+    };
+
+    let cfg = EngineConfig {
+        workers: args.parse_opt_or("workers", EngineConfig::default().workers)?,
+        cache_capacity: args.parse_opt_or("cache-mb", 256u64)? * 1024 * 1024,
+        cache_mode: match args.opt("cache-mode") {
+            Some(m) => Some(CacheMode::parse(m).with_context(|| format!("bad cache mode {m}"))?),
+            None => None,
+        },
+        selective: !args.flag("no-selective"),
+        active_threshold: args.parse_opt_or("active-threshold", 0.001f64)?,
+        backend,
+    };
+    let mut engine = VswEngine::open(&dir, &disk, cfg)?;
+    println!(
+        "graph: |V|={} |E|={} shards={} cache={}",
+        human_count(engine.property().num_vertices as u64),
+        human_count(engine.property().num_edges),
+        engine.property().num_shards,
+        engine.cache().mode().name(),
+    );
+    let run = engine.run(app.as_ref(), iters)?;
+    for m in &run.iterations {
+        println!(
+            "iter {:>3}: {:>9.3}s  active={:<9} processed={:<4} skipped={:<4} read={}",
+            m.iteration,
+            m.elapsed_seconds(),
+            m.active_vertices,
+            m.shards_processed,
+            m.shards_skipped,
+            human_bytes(m.io.bytes_read),
+        );
+    }
+    println!(
+        "total: {:.3}s ({} iterations{}), memory {}",
+        run.total_seconds(),
+        run.iterations.len(),
+        if run.converged { ", converged" } else { "" },
+        human_bytes(run.memory_bytes),
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = GraphDir::new(args.opt("dir").context("--dir required")?);
+    let disk = Disk::unthrottled();
+    let prop = dir.read_property(&disk)?;
+    let info = dir.read_vertex_info(&disk)?;
+    println!("graph dir: {}", dir.root.display());
+    println!("  vertices: {}", human_count(prop.num_vertices as u64));
+    println!("  edges:    {}", human_count(prop.num_edges));
+    println!("  shards:   {}", prop.num_shards);
+    println!("  weighted: {}", prop.weighted);
+    let max_in = info.in_degree.iter().copied().max().unwrap_or(0);
+    let max_out = info.out_degree.iter().copied().max().unwrap_or(0);
+    println!("  max in-degree: {max_in}, max out-degree: {max_out}");
+    let widths: Vec<u32> = prop.intervals.iter().map(|&(a, b)| b - a).collect();
+    println!(
+        "  interval width: min={} max={}",
+        widths.iter().min().unwrap(),
+        widths.iter().max().unwrap()
+    );
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Run metrics: per-iteration timing, I/O deltas, memory accounting.
+//!
+//! Memory is *accounted* (structural sizes of the arrays each engine keeps
+//! live), not sampled from the OS: at sim scale RSS is dominated by noise,
+//! while the accounted number is exactly the quantity Table 3's "Memory
+//! Usage" column models and Fig 11 plots.
+
+use std::time::Duration;
+
+use crate::cache::CacheSnapshot;
+use crate::storage::disk::IoSnapshot;
+
+/// One iteration's record (drives Figs 7, 8, 10).
+#[derive(Clone, Debug, Default)]
+pub struct IterationMetrics {
+    pub iteration: u32,
+    /// Wall-clock compute time of the iteration.
+    pub wall: Duration,
+    /// Simulated disk seconds charged during the iteration.
+    pub sim_disk_seconds: f64,
+    pub active_vertices: u64,
+    pub active_ratio: f64,
+    pub shards_processed: u32,
+    pub shards_skipped: u32,
+    pub io: IoSnapshot,
+    pub cache: CacheSnapshot,
+}
+
+impl IterationMetrics {
+    /// The reported per-iteration time: wall compute + simulated device
+    /// time (what the run would have cost on the paper's HDD box).
+    pub fn elapsed_seconds(&self) -> f64 {
+        self.wall.as_secs_f64() + self.sim_disk_seconds
+    }
+}
+
+/// Whole-run summary.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub iterations: Vec<IterationMetrics>,
+    /// Accounted peak memory in bytes (vertex arrays + blooms + cache +
+    /// in-flight shards).
+    pub memory_bytes: u64,
+    pub converged: bool,
+    pub total_wall: Duration,
+    pub total_sim_disk_seconds: f64,
+}
+
+impl RunMetrics {
+    pub fn total_seconds(&self) -> f64 {
+        self.total_wall.as_secs_f64() + self.total_sim_disk_seconds
+    }
+
+    pub fn total_minutes(&self) -> f64 {
+        self.total_seconds() / 60.0
+    }
+
+    /// Sum of the first `n` iterations (the paper reports first-10-iteration
+    /// times in Tables 5–7).
+    pub fn first_n_seconds(&self, n: usize) -> f64 {
+        self.iterations.iter().take(n).map(|m| m.elapsed_seconds()).sum()
+    }
+
+    pub fn edges_per_second(&self, edges_per_iter: u64) -> f64 {
+        let s = self.total_seconds();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        edges_per_iter as f64 * self.iterations.len() as f64 / s
+    }
+}
+
+/// Structural memory accounting helper.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemoryAccount {
+    pub vertex_arrays: u64,
+    pub degree_arrays: u64,
+    pub blooms: u64,
+    pub cache: u64,
+    pub inflight_shards: u64,
+    pub other: u64,
+}
+
+impl MemoryAccount {
+    pub fn total(&self) -> u64 {
+        self.vertex_arrays
+            + self.degree_arrays
+            + self.blooms
+            + self.cache
+            + self.inflight_shards
+            + self.other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_adds_sim_time() {
+        let m = IterationMetrics {
+            wall: Duration::from_millis(500),
+            sim_disk_seconds: 1.5,
+            ..Default::default()
+        };
+        assert!((m.elapsed_seconds() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn first_n() {
+        let mut r = RunMetrics::default();
+        for i in 0..5 {
+            r.iterations.push(IterationMetrics {
+                iteration: i,
+                sim_disk_seconds: 1.0,
+                ..Default::default()
+            });
+        }
+        assert!((r.first_n_seconds(3) - 3.0).abs() < 1e-9);
+        assert!((r.first_n_seconds(10) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_total() {
+        let m = MemoryAccount { vertex_arrays: 10, cache: 5, ..Default::default() };
+        assert_eq!(m.total(), 15);
+    }
+
+    #[test]
+    fn edges_per_second_zero_safe() {
+        let r = RunMetrics::default();
+        assert_eq!(r.edges_per_second(100), 0.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Analytical I/O cost models — Table 3 of the paper, in closed form.
+//!
+//! For each computation model (PSW/GraphChi, ESG/X-Stream, VSP/VENUS,
+//! DSW/GridGraph, VSW/GraphMP) this gives per-iteration data read/write,
+//! memory usage, and preprocessing I/O as functions of the graph
+//! parameters.  `C` = vertex record size, `D` = edge record size, `P` =
+//! shard/partition count, `d_avg` = average degree, `N` = CPU cores,
+//! `θ` = GraphMP cache miss ratio.
+
+/// Graph + system parameters feeding the closed forms.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelParams {
+    pub num_vertices: u64,
+    pub num_edges: u64,
+    /// Vertex record bytes (paper's C).
+    pub c: u64,
+    /// Edge record bytes (paper's D).
+    pub d: u64,
+    /// Number of shards / partitions (P).
+    pub p: u64,
+    /// CPU cores (N).
+    pub n_cores: u64,
+    /// GraphMP cache miss ratio θ ∈ [0,1].
+    pub theta: f64,
+}
+
+impl ModelParams {
+    pub fn new(num_vertices: u64, num_edges: u64, p: u64) -> Self {
+        ModelParams {
+            num_vertices,
+            num_edges,
+            c: 8, // paper's PageRank value type: double
+            d: 8, // (src,dst) u32 pair
+            p: p.max(1),
+            n_cores: 12,
+            theta: 1.0,
+        }
+    }
+
+    pub fn d_avg(&self) -> f64 {
+        self.num_edges as f64 / self.num_vertices.max(1) as f64
+    }
+
+    /// δ ≈ (1 − e^(−d_avg/P))·P  (VENUS v-shard expansion, Table 3).
+    pub fn delta(&self) -> f64 {
+        let p = self.p as f64;
+        (1.0 - (-self.d_avg() / p).exp()) * p
+    }
+}
+
+/// One row of Table 3 (bytes per iteration / resident bytes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostRow {
+    pub data_read: f64,
+    pub data_write: f64,
+    pub memory: f64,
+    pub prep_io: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ComputeModel {
+    /// GraphChi's parallel sliding windows.
+    Psw,
+    /// X-Stream's edge-centric scatter-gather.
+    Esg,
+    /// VENUS's vertex-centric streamlined processing.
+    Vsp,
+    /// GridGraph's dual sliding windows.
+    Dsw,
+    /// GraphMP's vertex-centric sliding window.
+    Vsw,
+}
+
+pub const ALL_MODELS: [ComputeModel; 5] = [
+    ComputeModel::Psw,
+    ComputeModel::Esg,
+    ComputeModel::Vsp,
+    ComputeModel::Dsw,
+    ComputeModel::Vsw,
+];
+
+impl ComputeModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ComputeModel::Psw => "PSW (GraphChi)",
+            ComputeModel::Esg => "ESG (X-Stream)",
+            ComputeModel::Vsp => "VSP (VENUS)",
+            ComputeModel::Dsw => "DSW (GridGraph)",
+            ComputeModel::Vsw => "VSW (GraphMP)",
+        }
+    }
+
+    /// The Table 3 closed forms.
+    pub fn cost(&self, mp: &ModelParams) -> CostRow {
+        let v = mp.num_vertices as f64;
+        let e = mp.num_edges as f64;
+        let c = mp.c as f64;
+        let d = mp.d as f64;
+        let p = mp.p as f64;
+        let n = mp.n_cores as f64;
+        match self {
+            ComputeModel::Psw => CostRow {
+                data_read: c * v + 2.0 * (c + d) * e,
+                data_write: c * v + 2.0 * (c + d) * e,
+                memory: (c * v + 2.0 * (c + d) * e) / p,
+                prep_io: (c + 5.0 * d) * e,
+            },
+            ComputeModel::Esg => CostRow {
+                data_read: c * v + (c + d) * e,
+                data_write: c * v + c * e,
+                memory: c * v / p,
+                prep_io: 2.0 * d * e,
+            },
+            ComputeModel::Vsp => {
+                let delta = mp.delta();
+                CostRow {
+                    data_read: c * (1.0 + delta) * v + d * e,
+                    data_write: c * v,
+                    memory: c * (2.0 + delta) * v / p,
+                    prep_io: 4.0 * d * e,
+                }
+            }
+            ComputeModel::Dsw => {
+                let sqrt_p = p.sqrt();
+                CostRow {
+                    data_read: c * sqrt_p * v + d * e,
+                    data_write: c * sqrt_p * v,
+                    memory: 2.0 * c * v / sqrt_p,
+                    prep_io: 6.0 * d * e,
+                }
+            }
+            ComputeModel::Vsw => CostRow {
+                data_read: mp.theta * d * e,
+                data_write: 0.0,
+                memory: 2.0 * c * v + n * d * e / p,
+                prep_io: 5.0 * d * e,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> ModelParams {
+        // UK-2007-ish: 134M vertices, 5.5B edges, 256 shards
+        ModelParams::new(134_000_000, 5_500_000_000, 256)
+    }
+
+    #[test]
+    fn vsw_reads_least_writes_nothing() {
+        let mp = params();
+        let vsw = ComputeModel::Vsw.cost(&mp);
+        assert_eq!(vsw.data_write, 0.0);
+        for m in [ComputeModel::Psw, ComputeModel::Esg, ComputeModel::Vsp, ComputeModel::Dsw] {
+            let row = m.cost(&mp);
+            assert!(
+                vsw.data_read <= row.data_read,
+                "{}: VSW reads {} > {}",
+                m.name(),
+                vsw.data_read,
+                row.data_read
+            );
+            assert!(row.data_write > 0.0);
+        }
+    }
+
+    #[test]
+    fn vsw_cache_scales_reads() {
+        let mut mp = params();
+        mp.theta = 0.2;
+        let miss20 = ComputeModel::Vsw.cost(&mp).data_read;
+        mp.theta = 1.0;
+        let nocache = ComputeModel::Vsw.cost(&mp).data_read;
+        assert!((miss20 - 0.2 * nocache).abs() < 1.0);
+    }
+
+    #[test]
+    fn vsw_memory_higher_than_streaming_models() {
+        // the paper's trade-off: VSW buys low I/O with more memory
+        let mp = params();
+        let vsw = ComputeModel::Vsw.cost(&mp).memory;
+        let esg = ComputeModel::Esg.cost(&mp).memory;
+        assert!(vsw > esg);
+    }
+
+    #[test]
+    fn psw_heaviest_io() {
+        let mp = params();
+        let psw = ComputeModel::Psw.cost(&mp);
+        for m in ALL_MODELS {
+            let row = m.cost(&mp);
+            assert!(psw.data_read + psw.data_write >= row.data_read + row.data_write);
+        }
+    }
+
+    #[test]
+    fn delta_bounded_by_p() {
+        let mp = params();
+        assert!(mp.delta() > 0.0);
+        assert!(mp.delta() <= mp.p as f64);
+    }
+
+    #[test]
+    fn prep_costs_match_paper_constants() {
+        let mp = params();
+        let e = mp.num_edges as f64;
+        let d = mp.d as f64;
+        assert_eq!(ComputeModel::Esg.cost(&mp).prep_io, 2.0 * d * e);
+        assert_eq!(ComputeModel::Vsw.cost(&mp).prep_io, 5.0 * d * e);
+        assert_eq!(ComputeModel::Dsw.cost(&mp).prep_io, 6.0 * d * e);
+    }
+}

@@ -1,0 +1,147 @@
+//! Parser for `artifacts/manifest.txt` written by `python/compile/aot.py`.
+//!
+//! Line format:
+//! `artifact <name> variant=<v> vc=<n> ec=<n> rc=<n> [iters=<n>] path=<file>`
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Artifact {
+    pub name: String,
+    pub variant: String,
+    pub vc: usize,
+    pub ec: usize,
+    pub rc: usize,
+    pub iters: Option<usize>,
+    pub path: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut artifacts = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            anyhow::ensure!(
+                it.next() == Some("artifact"),
+                "manifest line {}: expected 'artifact'",
+                ln + 1
+            );
+            let name = it
+                .next()
+                .with_context(|| format!("manifest line {}: missing name", ln + 1))?
+                .to_string();
+            let mut variant = String::new();
+            let mut vc = 0;
+            let mut ec = 0;
+            let mut rc = 0;
+            let mut iters = None;
+            let mut path = String::new();
+            for field in it {
+                let (k, v) = field
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad field {field}", ln + 1))?;
+                match k {
+                    "variant" => variant = v.to_string(),
+                    "vc" => vc = v.parse()?,
+                    "ec" => ec = v.parse()?,
+                    "rc" => rc = v.parse()?,
+                    "iters" => iters = Some(v.parse()?),
+                    "path" => path = v.to_string(),
+                    _ => {} // forward-compatible: ignore unknown keys
+                }
+            }
+            anyhow::ensure!(
+                !path.is_empty() && vc > 0 && ec > 0 && rc > 0,
+                "manifest line {}: incomplete artifact record",
+                ln + 1
+            );
+            artifacts.push(Artifact { name, variant, vc, ec, rc, iters, path });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let p = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("read {} (run `make artifacts`)", p.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Smallest variant whose capacities cover `(vertices, max shard rows)`.
+    /// Ties on `vc` prefer the smaller edge capacity: oversized `ec` only
+    /// adds gather padding per call (shards wider than `ec` are chunked).
+    pub fn pick_variant(&self, num_vertices: usize, max_rows: usize) -> Option<&str> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.name.starts_with("pagerank_shard_"))
+            .filter(|a| a.vc >= num_vertices && a.rc >= max_rows)
+            .min_by_key(|a| (a.vc, a.ec))
+            .map(|a| a.variant.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact pagerank_shard_tiny variant=tiny vc=2048 ec=8192 rc=512 path=pr.hlo.txt
+artifact relax_min_shard_tiny variant=tiny vc=2048 ec=8192 rc=512 path=rx.hlo.txt
+artifact pagerank_shard_small variant=small vc=65536 ec=262144 rc=8192 path=prs.hlo.txt
+artifact pagerank_power_tiny variant=tiny vc=2048 ec=8192 rc=512 iters=10 path=pp.hlo.txt
+";
+
+    #[test]
+    fn parses_all_lines() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 4);
+        let a = m.find("pagerank_shard_tiny").unwrap();
+        assert_eq!((a.vc, a.ec, a.rc), (2048, 8192, 512));
+        assert_eq!(a.iters, None);
+        assert_eq!(m.find("pagerank_power_tiny").unwrap().iters, Some(10));
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# hi\n\nartifact x variant=v vc=1 ec=1 rc=1 path=p\n").unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        assert!(Manifest::parse("artifact x variant=v vc=1\n").is_err());
+        assert!(Manifest::parse("nonsense\n").is_err());
+    }
+
+    #[test]
+    fn pick_variant_smallest_fit() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.pick_variant(1000, 100), Some("tiny"));
+        assert_eq!(m.pick_variant(4000, 100), Some("small"));
+        assert_eq!(m.pick_variant(100_000, 100), None);
+        // rows exceeding tiny's rc push to small
+        assert_eq!(m.pick_variant(1000, 600), Some("small"));
+    }
+
+    #[test]
+    fn unknown_keys_ignored() {
+        let m =
+            Manifest::parse("artifact x variant=v vc=1 ec=1 rc=1 newkey=3 path=p\n").unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+    }
+}

@@ -1,0 +1,242 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute shard updates.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once; after that the rust
+//! binary is self-contained — this module compiles the HLO text with the
+//! PJRT CPU client at startup and executes from the iteration hot path
+//! without ever touching Python.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits serialized protos with
+//! 64-bit instruction ids, which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+pub use manifest::{Artifact, Manifest};
+
+/// A compiled pair of shard-update executables for one size variant.
+///
+/// Shapes are static: `vc` (padded vertex capacity), `ec` (edge capacity
+/// per call), `rc` (row capacity per call).  The executor pads every call
+/// with reduction identities (w=0 for sums, w=+inf for mins), so any shard
+/// chunk with `rows ≤ rc` and `edges ≤ ec` computes exactly.
+pub struct ShardExecutor {
+    pub variant: String,
+    pub vc: usize,
+    pub ec: usize,
+    pub rc: usize,
+    // Both executables share one PJRT client via non-atomic `Rc`s inside
+    // the xla crate, so they are neither Send nor Sync.  A single Mutex
+    // serialises *all* access (execute + drop paths) to everything that
+    // touches those Rcs.
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    pagerank: xla::PjRtLoadedExecutable,
+    relax: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: the only non-Send/Sync state is the Rc-shared PJRT client inside
+// `Inner`.  `Inner` is accessible exclusively through the Mutex, so no two
+// threads ever manipulate those Rcs concurrently, and `Arc<ShardExecutor>`
+// guarantees a single drop (which happens while no other handle exists).
+// The engine additionally runs a single worker on the PJRT backend, so the
+// lock is uncontended in practice.
+unsafe impl Send for ShardExecutor {}
+unsafe impl Sync for ShardExecutor {}
+
+impl ShardExecutor {
+    /// Load + compile the two shard executables of `variant` from the
+    /// artifact directory.
+    pub fn load(artifacts_dir: &Path, variant: &str) -> Result<ShardExecutor> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        let pr = manifest
+            .find(&format!("pagerank_shard_{variant}"))
+            .with_context(|| format!("no pagerank_shard artifact for variant {variant}"))?;
+        let rx = manifest
+            .find(&format!("relax_min_shard_{variant}"))
+            .with_context(|| format!("no relax_min_shard artifact for variant {variant}"))?;
+        anyhow::ensure!(
+            (pr.vc, pr.ec, pr.rc) == (rx.vc, rx.ec, rx.rc),
+            "variant {variant} artifacts disagree on shapes"
+        );
+        let compile = |art: &Artifact| -> Result<xla::PjRtLoadedExecutable> {
+            let path = artifacts_dir.join(&art.path);
+            let proto = xla::HloModuleProto::from_text_file(&path).map_err(to_anyhow)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(to_anyhow)
+        };
+        Ok(ShardExecutor {
+            variant: variant.to_string(),
+            vc: pr.vc,
+            ec: pr.ec,
+            rc: pr.rc,
+            inner: Mutex::new(Inner { pagerank: compile(pr)?, relax: compile(rx)? }),
+        })
+    }
+
+    /// PageRank shard call: returns `base + damping·Σ src[col]·inv_deg[col]·w`
+    /// for the first `rows` destination rows.
+    ///
+    /// `src`/`inv_deg` are the full vertex arrays (len ≤ vc); `col`/`seg`/`w`
+    /// one edge chunk (len ≤ ec); padding is appended here.
+    pub fn pagerank(
+        &self,
+        src: &[f32],
+        inv_deg: &[f32],
+        col: &[u32],
+        seg: &[u32],
+        w: &[f32],
+        base: f32,
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(src.len() <= self.vc, "src {} > vc {}", src.len(), self.vc);
+        anyhow::ensure!(col.len() <= self.ec, "edges {} > ec {}", col.len(), self.ec);
+        anyhow::ensure!(rows <= self.rc, "rows {} > rc {}", rows, self.rc);
+        let src_l = lit_f32_padded(src, self.vc, 0.0);
+        let deg_l = lit_f32_padded(inv_deg, self.vc, 0.0);
+        let col_l = lit_i32_padded(col, self.ec);
+        let seg_l = lit_i32_padded(seg, self.ec);
+        let w_l = lit_f32_padded(w, self.ec, 0.0); // w=0 ⇒ padding contributes 0
+        let base_l = xla::Literal::vec1(&[base]);
+        let inner = self.inner.lock().unwrap();
+        let out = execute1(&inner.pagerank, &[src_l, deg_l, col_l, seg_l, w_l, base_l])?;
+        Ok(out[..rows].to_vec())
+    }
+
+    /// Min-relaxation shard call: `min(cur, min src[col]+w)` per row.
+    pub fn relax_min(
+        &self,
+        src: &[f32],
+        col: &[u32],
+        seg: &[u32],
+        w: &[f32],
+        cur: &[f32],
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(src.len() <= self.vc, "src {} > vc {}", src.len(), self.vc);
+        anyhow::ensure!(col.len() <= self.ec, "edges {} > ec {}", col.len(), self.ec);
+        anyhow::ensure!(cur.len() <= self.rc, "rows {} > rc {}", cur.len(), self.rc);
+        let rows = cur.len();
+        let src_l = lit_f32_padded(src, self.vc, f32::INFINITY);
+        let col_l = lit_i32_padded(col, self.ec);
+        let seg_l = lit_i32_padded(seg, self.ec);
+        let w_l = lit_f32_padded(w, self.ec, f32::INFINITY); // +inf ⇒ min identity
+        let cur_l = lit_f32_padded(cur, self.rc, f32::INFINITY);
+        let inner = self.inner.lock().unwrap();
+        let out = execute1(&inner.relax, &[src_l, col_l, seg_l, w_l, cur_l])?;
+        Ok(out[..rows].to_vec())
+    }
+}
+
+/// Run a compiled executable whose HLO returns a 1-tuple of f32[_].
+fn execute1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<f32>> {
+    let result = exe.execute::<xla::Literal>(args).map_err(to_anyhow)?;
+    let lit = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+    // lowered with return_tuple=True → unwrap the 1-tuple
+    let out = lit.to_tuple1().map_err(to_anyhow)?;
+    out.to_vec::<f32>().map_err(to_anyhow)
+}
+
+fn lit_f32_padded(v: &[f32], len: usize, pad: f32) -> xla::Literal {
+    let mut buf = Vec::with_capacity(len);
+    buf.extend_from_slice(v);
+    buf.resize(len, pad);
+    xla::Literal::vec1(&buf)
+}
+
+fn lit_i32_padded(v: &[u32], len: usize) -> xla::Literal {
+    let mut buf: Vec<i32> = Vec::with_capacity(len);
+    buf.extend(v.iter().map(|&x| x as i32));
+    buf.resize(len, 0);
+    xla::Literal::vec1(&buf)
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn load_tiny_and_run_pagerank() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let ex = ShardExecutor::load(&artifacts_dir(), "tiny").unwrap();
+        assert_eq!(ex.vc, 2048);
+        // graph: edges 1->0 and 2->0 with out-degree 1 each; base = 0.05
+        let mut src = vec![0.0f32; 3];
+        src[1] = 0.4;
+        src[2] = 0.2;
+        let inv = vec![1.0f32; 3];
+        let out = ex
+            .pagerank(&src, &inv, &[1, 2], &[0, 0], &[1.0, 1.0], 0.05, 4)
+            .unwrap();
+        // row 0: 0.05 + 0.85*(0.4+0.2) = 0.56 ; rows 1..: 0.05
+        assert!((out[0] - 0.56).abs() < 1e-6, "{out:?}");
+        assert!((out[1] - 0.05).abs() < 1e-6);
+    }
+
+    #[test]
+    fn load_tiny_and_run_relax() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let ex = ShardExecutor::load(&artifacts_dir(), "tiny").unwrap();
+        let src = vec![0.0f32, f32::INFINITY, f32::INFINITY];
+        // edges 0->1 (w=2), 0->2 (w=5): shard rows = vertices 1,2
+        let out = ex
+            .relax_min(
+                &src,
+                &[0, 0],
+                &[0, 1],
+                &[2.0, 5.0],
+                &[f32::INFINITY, f32::INFINITY],
+            )
+            .unwrap();
+        assert_eq!(out, vec![2.0, 5.0]);
+    }
+
+    #[test]
+    fn relax_keeps_cur_on_untouched_rows() {
+        if !have_artifacts() {
+            return;
+        }
+        let ex = ShardExecutor::load(&artifacts_dir(), "tiny").unwrap();
+        let src = vec![f32::INFINITY; 4];
+        let out = ex
+            .relax_min(&src, &[0], &[0], &[1.0], &[7.0, 9.0])
+            .unwrap();
+        assert_eq!(out, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        if !have_artifacts() {
+            return;
+        }
+        let ex = ShardExecutor::load(&artifacts_dir(), "tiny").unwrap();
+        let big = vec![0.0f32; ex.vc + 1];
+        assert!(ex
+            .pagerank(&big, &big, &[], &[], &[], 0.0, 1)
+            .is_err());
+    }
+}

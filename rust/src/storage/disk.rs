@@ -1,0 +1,274 @@
+//! Throttled disk model.
+//!
+//! The paper's testbed is 4×4TB HDD RAID5 (~310MB/s sequential read shared
+//! by all cores).  At sim scale the host page cache would hide all I/O, so
+//! every engine in this repo routes file access through [`Disk`], which
+//! (a) meters exact byte counts (the quantity Table 3 models) and
+//! (b) optionally *simulates* HDD timing with a shared token bucket
+//! (bandwidth) plus per-open seek latency.  Simulated seconds are accounted
+//! in `IoStats::sim_nanos` rather than slept away, so benches stay fast
+//! while reporting disk-bound timings — `elapsed = wall + sim` is what the
+//! bench harness prints.
+
+use std::fs;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+/// Bandwidth/latency profile of the simulated storage device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DiskProfile {
+    pub name: &'static str,
+    /// Sequential read bandwidth in bytes/s (shared across threads).
+    pub read_bw: u64,
+    /// Sequential write bandwidth in bytes/s.
+    pub write_bw: u64,
+    /// Seek + request overhead charged per file open, in nanoseconds.
+    pub seek_nanos: u64,
+}
+
+impl DiskProfile {
+    /// The paper's RAID5 HDD array: 310MB/s read, 180MB/s write, ~5ms seek.
+    pub fn hdd_raid5() -> Self {
+        DiskProfile {
+            name: "hdd-raid5",
+            read_bw: 310 * 1024 * 1024,
+            write_bw: 180 * 1024 * 1024,
+            seek_nanos: 5_000_000,
+        }
+    }
+
+    /// The per-core *share* of the RAID5 array on the paper's 12-core box
+    /// (§2.4.2: "the available disk bandwidth is shared by all CPU cores",
+    /// while decompression runs per-core).  Our bench host has one core,
+    /// so charging each worker the full 310MB/s would make the simulated
+    /// disk 12× faster *relative to compute* than the paper's testbed —
+    /// this profile restores the paper's disk/compute balance.
+    pub fn hdd_raid5_shared(cores: u64) -> Self {
+        let full = Self::hdd_raid5();
+        DiskProfile {
+            name: "hdd-raid5/core-share",
+            read_bw: full.read_bw / cores.max(1),
+            write_bw: full.write_bw / cores.max(1),
+            seek_nanos: full.seek_nanos,
+        }
+    }
+
+    /// A SATA SSD profile (for the FlashGraph-adjacent ablation).
+    pub fn ssd() -> Self {
+        DiskProfile {
+            name: "ssd",
+            read_bw: 2 * 1024 * 1024 * 1024,
+            write_bw: 1024 * 1024 * 1024,
+            seek_nanos: 60_000,
+        }
+    }
+
+    /// No simulation: byte metering only (used by unit tests).
+    pub fn unthrottled() -> Self {
+        DiskProfile { name: "unthrottled", read_bw: 0, write_bw: 0, seek_nanos: 0 }
+    }
+}
+
+/// Cumulative I/O counters.  All atomic: engines hit the disk from worker
+/// threads.
+#[derive(Debug, Default)]
+pub struct IoStats {
+    pub bytes_read: AtomicU64,
+    pub bytes_written: AtomicU64,
+    pub read_ops: AtomicU64,
+    pub write_ops: AtomicU64,
+    /// Simulated device time in nanoseconds (0 when unthrottled).
+    pub sim_nanos: AtomicU64,
+}
+
+/// Point-in-time snapshot of [`IoStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IoSnapshot {
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub read_ops: u64,
+    pub write_ops: u64,
+    pub sim_nanos: u64,
+}
+
+impl IoSnapshot {
+    pub fn sim_seconds(&self) -> f64 {
+        self.sim_nanos as f64 / 1e9
+    }
+
+    /// Delta between two snapshots (self - earlier).
+    pub fn since(&self, earlier: &IoSnapshot) -> IoSnapshot {
+        IoSnapshot {
+            bytes_read: self.bytes_read - earlier.bytes_read,
+            bytes_written: self.bytes_written - earlier.bytes_written,
+            read_ops: self.read_ops - earlier.read_ops,
+            write_ops: self.write_ops - earlier.write_ops,
+            sim_nanos: self.sim_nanos - earlier.sim_nanos,
+        }
+    }
+}
+
+/// The shared disk handle: all file I/O of every engine goes through here.
+#[derive(Clone)]
+pub struct Disk {
+    profile: DiskProfile,
+    stats: Arc<IoStats>,
+}
+
+impl Disk {
+    pub fn new(profile: DiskProfile) -> Self {
+        Disk { profile, stats: Arc::new(IoStats::default()) }
+    }
+
+    pub fn unthrottled() -> Self {
+        Disk::new(DiskProfile::unthrottled())
+    }
+
+    pub fn profile(&self) -> DiskProfile {
+        self.profile
+    }
+
+    pub fn snapshot(&self) -> IoSnapshot {
+        IoSnapshot {
+            bytes_read: self.stats.bytes_read.load(Ordering::Relaxed),
+            bytes_written: self.stats.bytes_written.load(Ordering::Relaxed),
+            read_ops: self.stats.read_ops.load(Ordering::Relaxed),
+            write_ops: self.stats.write_ops.load(Ordering::Relaxed),
+            sim_nanos: self.stats.sim_nanos.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.stats.bytes_read.store(0, Ordering::Relaxed);
+        self.stats.bytes_written.store(0, Ordering::Relaxed);
+        self.stats.read_ops.store(0, Ordering::Relaxed);
+        self.stats.write_ops.store(0, Ordering::Relaxed);
+        self.stats.sim_nanos.store(0, Ordering::Relaxed);
+    }
+
+    /// Read a whole file, metering + simulating device time.
+    pub fn read_file(&self, path: &Path) -> Result<Vec<u8>> {
+        let data = fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        self.account_read(data.len() as u64);
+        Ok(data)
+    }
+
+    /// Write a whole file.
+    pub fn write_file(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, bytes).with_context(|| format!("write {}", path.display()))?;
+        self.account_write(bytes.len() as u64);
+        Ok(())
+    }
+
+    /// Append to a file (preprocessing step 2 writes shard scratch files
+    /// this way). Charged as one op.
+    pub fn append_file(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        use std::io::Write;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(bytes)?;
+        self.account_write(bytes.len() as u64);
+        Ok(())
+    }
+
+    /// Meter a read that bypassed the filesystem (e.g. a baseline engine
+    /// streaming from an in-memory copy to model pure sequential I/O).
+    pub fn account_read(&self, bytes: u64) {
+        self.stats.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+        self.stats.read_ops.fetch_add(1, Ordering::Relaxed);
+        self.charge(bytes, self.profile.read_bw);
+    }
+
+    pub fn account_write(&self, bytes: u64) {
+        self.stats.bytes_written.fetch_add(bytes, Ordering::Relaxed);
+        self.stats.write_ops.fetch_add(1, Ordering::Relaxed);
+        self.charge(bytes, self.profile.write_bw);
+    }
+
+    fn charge(&self, bytes: u64, bw: u64) {
+        if bw == 0 {
+            return;
+        }
+        let nanos = self.profile.seek_nanos + bytes.saturating_mul(1_000_000_000) / bw;
+        self.stats.sim_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meters_bytes() {
+        let dir = std::env::temp_dir().join("graphmp_disk_test");
+        let _ = fs::remove_dir_all(&dir);
+        let disk = Disk::unthrottled();
+        let p = dir.join("x.bin");
+        disk.write_file(&p, &[0u8; 1000]).unwrap();
+        let b = disk.read_file(&p).unwrap();
+        assert_eq!(b.len(), 1000);
+        let s = disk.snapshot();
+        assert_eq!(s.bytes_written, 1000);
+        assert_eq!(s.bytes_read, 1000);
+        assert_eq!(s.read_ops, 1);
+        assert_eq!(s.sim_nanos, 0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn hdd_simulated_time_scales_with_bytes() {
+        let disk = Disk::new(DiskProfile::hdd_raid5());
+        disk.account_read(310 * 1024 * 1024); // exactly 1 second of reads
+        let s = disk.snapshot();
+        let secs = s.sim_seconds();
+        assert!((secs - 1.005).abs() < 0.01, "simulated {secs}s");
+    }
+
+    #[test]
+    fn seek_charged_per_op() {
+        let disk = Disk::new(DiskProfile::hdd_raid5());
+        for _ in 0..10 {
+            disk.account_read(0);
+        }
+        assert_eq!(disk.snapshot().sim_nanos, 50_000_000);
+    }
+
+    #[test]
+    fn snapshot_delta() {
+        let disk = Disk::unthrottled();
+        disk.account_read(100);
+        let a = disk.snapshot();
+        disk.account_read(50);
+        let d = disk.snapshot().since(&a);
+        assert_eq!(d.bytes_read, 50);
+        assert_eq!(d.read_ops, 1);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let disk = Disk::unthrottled();
+        disk.account_write(10);
+        disk.reset();
+        assert_eq!(disk.snapshot(), IoSnapshot::default());
+    }
+
+    #[test]
+    fn append_accumulates() {
+        let dir = std::env::temp_dir().join("graphmp_disk_append_test");
+        let _ = fs::remove_dir_all(&dir);
+        let disk = Disk::unthrottled();
+        let p = dir.join("a.bin");
+        disk.append_file(&p, b"ab").unwrap();
+        disk.append_file(&p, b"cd").unwrap();
+        assert_eq!(disk.read_file(&p).unwrap(), b"abcd");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

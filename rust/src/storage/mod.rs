@@ -1,0 +1,191 @@
+//! Storage layer: shard files, graph metadata files, and the throttled
+//! disk model that restores the paper's disk-bound regime at sim scale.
+
+pub mod disk;
+pub mod shard;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::graph::VertexId;
+use crate::util::{bytes_as_u32s, u32s_as_bytes};
+use disk::Disk;
+
+/// The property file: global info of the partitioned graph (paper §2.2).
+/// Stored as a simple line format — `key value` or `interval start end`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Property {
+    pub num_vertices: u32,
+    pub num_edges: u64,
+    pub num_shards: u32,
+    pub weighted: bool,
+    /// Shard `s` owns destination interval `[intervals[s].0, intervals[s].1)`.
+    pub intervals: Vec<(VertexId, VertexId)>,
+}
+
+impl Property {
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("num_vertices {}\n", self.num_vertices));
+        s.push_str(&format!("num_edges {}\n", self.num_edges));
+        s.push_str(&format!("num_shards {}\n", self.num_shards));
+        s.push_str(&format!("weighted {}\n", self.weighted as u8));
+        for (a, b) in &self.intervals {
+            s.push_str(&format!("interval {} {}\n", a, b));
+        }
+        s
+    }
+
+    pub fn from_text(text: &str) -> Result<Property> {
+        let mut p = Property {
+            num_vertices: 0,
+            num_edges: 0,
+            num_shards: 0,
+            weighted: false,
+            intervals: Vec::new(),
+        };
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("num_vertices") => p.num_vertices = it.next().context("missing")?.parse()?,
+                Some("num_edges") => p.num_edges = it.next().context("missing")?.parse()?,
+                Some("num_shards") => p.num_shards = it.next().context("missing")?.parse()?,
+                Some("weighted") => p.weighted = it.next().context("missing")? == "1",
+                Some("interval") => {
+                    let a = it.next().context("missing")?.parse()?;
+                    let b = it.next().context("missing")?.parse()?;
+                    p.intervals.push((a, b));
+                }
+                _ => {}
+            }
+        }
+        anyhow::ensure!(
+            p.intervals.len() == p.num_shards as usize,
+            "interval count {} != num_shards {}",
+            p.intervals.len(),
+            p.num_shards
+        );
+        Ok(p)
+    }
+}
+
+/// The vertex information file: per-vertex in/out-degree arrays plus the
+/// (initial or updated) value array (paper §2.2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct VertexInfo {
+    pub in_degree: Vec<u32>,
+    pub out_degree: Vec<u32>,
+}
+
+impl VertexInfo {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let n = self.in_degree.len() as u32;
+        let mut out = Vec::with_capacity(8 + self.in_degree.len() * 8);
+        out.extend_from_slice(b"GMPV");
+        out.extend_from_slice(&n.to_le_bytes());
+        out.extend_from_slice(&u32s_as_bytes(&self.in_degree));
+        out.extend_from_slice(&u32s_as_bytes(&self.out_degree));
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<VertexInfo> {
+        anyhow::ensure!(b.len() >= 8 && &b[..4] == b"GMPV", "bad vertex info magic");
+        let n = u32::from_le_bytes([b[4], b[5], b[6], b[7]]) as usize;
+        anyhow::ensure!(b.len() == 8 + n * 8, "vertex info truncated");
+        let in_degree = bytes_as_u32s(&b[8..8 + n * 4]);
+        let out_degree = bytes_as_u32s(&b[8 + n * 4..]);
+        Ok(VertexInfo { in_degree, out_degree })
+    }
+}
+
+/// Filesystem layout of one partitioned graph directory.
+#[derive(Clone, Debug)]
+pub struct GraphDir {
+    pub root: PathBuf,
+}
+
+impl GraphDir {
+    pub fn new<P: AsRef<Path>>(root: P) -> Self {
+        GraphDir { root: root.as_ref().to_path_buf() }
+    }
+
+    pub fn property_path(&self) -> PathBuf {
+        self.root.join("property.txt")
+    }
+
+    pub fn vertex_info_path(&self) -> PathBuf {
+        self.root.join("vertices.bin")
+    }
+
+    pub fn shard_path(&self, shard_id: u32) -> PathBuf {
+        self.root.join(format!("shard_{shard_id:05}.bin"))
+    }
+
+    pub fn bloom_path(&self) -> PathBuf {
+        self.root.join("blooms.bin")
+    }
+
+    pub fn write_property(&self, disk: &Disk, p: &Property) -> Result<()> {
+        disk.write_file(&self.property_path(), p.to_text().as_bytes())
+    }
+
+    pub fn read_property(&self, disk: &Disk) -> Result<Property> {
+        let b = disk.read_file(&self.property_path())?;
+        Property::from_text(std::str::from_utf8(&b)?)
+    }
+
+    pub fn write_vertex_info(&self, disk: &Disk, v: &VertexInfo) -> Result<()> {
+        disk.write_file(&self.vertex_info_path(), &v.to_bytes())
+    }
+
+    pub fn read_vertex_info(&self, disk: &Disk) -> Result<VertexInfo> {
+        VertexInfo::from_bytes(&disk.read_file(&self.vertex_info_path())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_round_trip() {
+        let p = Property {
+            num_vertices: 100,
+            num_edges: 500,
+            num_shards: 2,
+            weighted: true,
+            intervals: vec![(0, 50), (50, 100)],
+        };
+        assert_eq!(Property::from_text(&p.to_text()).unwrap(), p);
+    }
+
+    #[test]
+    fn property_rejects_bad_interval_count() {
+        let txt = "num_vertices 10\nnum_edges 5\nnum_shards 2\ninterval 0 10\n";
+        assert!(Property::from_text(txt).is_err());
+    }
+
+    #[test]
+    fn vertex_info_round_trip() {
+        let v = VertexInfo {
+            in_degree: vec![1, 2, 3],
+            out_degree: vec![3, 2, 1],
+        };
+        assert_eq!(VertexInfo::from_bytes(&v.to_bytes()).unwrap(), v);
+    }
+
+    #[test]
+    fn vertex_info_rejects_garbage() {
+        assert!(VertexInfo::from_bytes(b"nope").is_err());
+        let mut b = VertexInfo { in_degree: vec![1], out_degree: vec![1] }.to_bytes();
+        b.truncate(b.len() - 1);
+        assert!(VertexInfo::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn graph_dir_paths() {
+        let d = GraphDir::new("/tmp/g");
+        assert!(d.shard_path(3).to_str().unwrap().ends_with("shard_00003.bin"));
+    }
+}

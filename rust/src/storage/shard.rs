@@ -1,0 +1,184 @@
+//! On-disk shard format: one CSR edge shard per file, CRC-protected.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic  "GMPS"            4B
+//! shard_id                 u32
+//! start_vertex             u32
+//! rows                     u32
+//! num_edges                u32
+//! flags (bit0 = weighted)  u32
+//! row_offsets              (rows+1) * u32
+//! col                      num_edges * u32
+//! weights                  num_edges * f32   (if weighted)
+//! crc32 of everything above  u32
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::graph::{Csr, VertexId};
+use crate::util::{bytes_as_f32s, bytes_as_u32s, f32s_as_bytes, u32s_as_bytes};
+
+use super::disk::Disk;
+
+const MAGIC: &[u8; 4] = b"GMPS";
+
+/// A fully materialised shard: interval metadata + CSR edges.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Shard {
+    pub id: u32,
+    /// Destination interval is `[start_vertex, start_vertex + rows)`.
+    pub start_vertex: VertexId,
+    pub csr: Csr,
+}
+
+impl Shard {
+    pub fn rows(&self) -> usize {
+        self.csr.rows()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.csr.num_edges()
+    }
+
+    pub fn end_vertex(&self) -> VertexId {
+        self.start_vertex + self.rows() as u32
+    }
+
+    /// Serialise to the on-disk format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let weighted = self.csr.weights.is_some();
+        let mut out = Vec::with_capacity(24 + self.csr.size_bytes() + 4);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&self.id.to_le_bytes());
+        out.extend_from_slice(&self.start_vertex.to_le_bytes());
+        out.extend_from_slice(&(self.rows() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.num_edges() as u32).to_le_bytes());
+        out.extend_from_slice(&(weighted as u32).to_le_bytes());
+        out.extend_from_slice(&u32s_as_bytes(&self.csr.row_offsets));
+        out.extend_from_slice(&u32s_as_bytes(&self.csr.col));
+        if let Some(w) = &self.csr.weights {
+            out.extend_from_slice(&f32s_as_bytes(w));
+        }
+        let crc = crc32fast::hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse + verify CRC.
+    pub fn from_bytes(b: &[u8]) -> Result<Shard> {
+        anyhow::ensure!(b.len() >= 28, "shard file too small ({}B)", b.len());
+        anyhow::ensure!(&b[..4] == MAGIC, "bad shard magic");
+        let body = &b[..b.len() - 4];
+        let stored_crc = u32::from_le_bytes(b[b.len() - 4..].try_into().unwrap());
+        let crc = crc32fast::hash(body);
+        anyhow::ensure!(crc == stored_crc, "shard CRC mismatch: {crc:08x} != {stored_crc:08x}");
+        let rd_u32 = |off: usize| u32::from_le_bytes(b[off..off + 4].try_into().unwrap());
+        let id = rd_u32(4);
+        let start_vertex = rd_u32(8);
+        let rows = rd_u32(12) as usize;
+        let num_edges = rd_u32(16) as usize;
+        let weighted = rd_u32(20) != 0;
+        let mut off = 24;
+        let expect = 24 + (rows + 1) * 4 + num_edges * 4 * (1 + weighted as usize) + 4;
+        anyhow::ensure!(b.len() == expect, "shard length {} != expected {}", b.len(), expect);
+        let row_offsets = bytes_as_u32s(&b[off..off + (rows + 1) * 4]);
+        off += (rows + 1) * 4;
+        let col = bytes_as_u32s(&b[off..off + num_edges * 4]);
+        off += num_edges * 4;
+        let weights = if weighted {
+            Some(bytes_as_f32s(&b[off..off + num_edges * 4]))
+        } else {
+            None
+        };
+        anyhow::ensure!(
+            *row_offsets.last().unwrap() as usize == num_edges,
+            "row_offsets end {} != num_edges {}",
+            row_offsets.last().unwrap(),
+            num_edges
+        );
+        Ok(Shard { id, start_vertex, csr: Csr { row_offsets, col, weights } })
+    }
+
+    pub fn write(&self, disk: &Disk, path: &Path) -> Result<()> {
+        disk.write_file(path, &self.to_bytes())
+    }
+
+    pub fn read(disk: &Disk, path: &Path) -> Result<Shard> {
+        Shard::from_bytes(&disk.read_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Edge;
+
+    fn sample(weighted: bool) -> Shard {
+        let edges = vec![
+            Edge::weighted(5, 10, 2.0),
+            Edge::weighted(7, 10, 3.0),
+            Edge::weighted(1, 11, 1.0),
+        ];
+        Shard {
+            id: 3,
+            start_vertex: 10,
+            csr: Csr::from_edges(&edges, 10, 2, weighted),
+        }
+    }
+
+    #[test]
+    fn round_trip_unweighted() {
+        let s = sample(false);
+        assert_eq!(Shard::from_bytes(&s.to_bytes()).unwrap(), s);
+    }
+
+    #[test]
+    fn round_trip_weighted() {
+        let s = sample(true);
+        assert_eq!(Shard::from_bytes(&s.to_bytes()).unwrap(), s);
+    }
+
+    #[test]
+    fn crc_detects_corruption() {
+        let mut b = sample(true).to_bytes();
+        b[30] ^= 0xff;
+        let err = Shard::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let b = sample(false).to_bytes();
+        assert!(Shard::from_bytes(&b[..b.len() - 8]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut b = sample(false).to_bytes();
+        b[0] = b'X';
+        assert!(Shard::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("graphmp_shard_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let disk = Disk::unthrottled();
+        let s = sample(true);
+        let p = dir.join("s.bin");
+        s.write(&disk, &p).unwrap();
+        assert_eq!(Shard::read(&disk, &p).unwrap(), s);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn interval_accessors() {
+        let s = sample(false);
+        assert_eq!(s.start_vertex, 10);
+        assert_eq!(s.end_vertex(), 12);
+        assert_eq!(s.num_edges(), 3);
+    }
+}

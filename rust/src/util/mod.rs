@@ -1,0 +1,127 @@
+//! Small shared utilities: seeded RNG, varints, byte casts, formatting.
+//!
+//! The vendored crate set has no `rand`, `serde` or `byteorder`, so the
+//! pieces we need are implemented here and unit-tested below.
+
+pub mod rng;
+pub mod varint;
+
+use std::time::Duration;
+
+/// Reinterpret a `u32` slice as little-endian bytes (all targets we build
+/// for are little-endian; asserted in `storage::shard`).
+pub fn u32s_as_bytes(v: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`u32s_as_bytes`].
+pub fn bytes_as_u32s(b: &[u8]) -> Vec<u32> {
+    assert!(b.len() % 4 == 0, "byte length {} not a multiple of 4", b.len());
+    b.chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+pub fn f32s_as_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_as_f32s(b: &[u8]) -> Vec<f32> {
+    assert!(b.len() % 4 == 0);
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// `1234567` -> `"1.23M"` — used by the bench tables.
+pub fn human_count(n: u64) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.2}B", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.1}K", n as f64 / 1e3)
+    } else {
+        format!("{}", n)
+    }
+}
+
+/// `1536` -> `"1.5KiB"`.
+pub fn human_bytes(n: u64) -> String {
+    const U: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = n as f64;
+    let mut i = 0;
+    while x >= 1024.0 && i < U.len() - 1 {
+        x /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{}B", n)
+    } else {
+        format!("{:.2}{}", x, U[i])
+    }
+}
+
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 60.0 {
+        format!("{:.2}min", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.2}ms", s * 1e3)
+    }
+}
+
+/// Round `n` up to the next multiple of `m` (m > 0).
+pub fn round_up(n: usize, m: usize) -> usize {
+    n.div_ceil(m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u32_bytes_round_trip() {
+        let v = vec![0u32, 1, 0xdead_beef, u32::MAX];
+        assert_eq!(bytes_as_u32s(&u32s_as_bytes(&v)), v);
+    }
+
+    #[test]
+    fn f32_bytes_round_trip() {
+        let v = vec![0.0f32, -1.5, f32::INFINITY, 3.25e9];
+        assert_eq!(bytes_as_f32s(&f32s_as_bytes(&v)), v);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 4")]
+    fn bytes_as_u32s_rejects_ragged() {
+        bytes_as_u32s(&[1, 2, 3]);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_count(999), "999");
+        assert_eq!(human_count(1_500_000), "1.50M");
+        assert_eq!(human_count(2_000_000_000), "2.00B");
+        assert_eq!(human_bytes(512), "512B");
+        assert_eq!(human_bytes(1536), "1.50KiB");
+    }
+
+    #[test]
+    fn round_up_cases() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+}

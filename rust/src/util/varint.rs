@@ -1,0 +1,100 @@
+//! LEB128 varints — used by the delta-varint edge codec (`compress::delta`).
+
+/// Append `x` as LEB128 to `out`.
+#[inline]
+pub fn write_u64(out: &mut Vec<u8>, mut x: u64) {
+    loop {
+        let b = (x & 0x7f) as u8;
+        x >>= 7;
+        if x == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Read one LEB128 varint from `buf[*pos..]`, advancing `pos`.
+/// Returns `None` on truncated or >10-byte input.
+#[inline]
+pub fn read_u64(buf: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut x = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos)?;
+        *pos += 1;
+        if shift >= 64 {
+            return None;
+        }
+        x |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Some(x);
+        }
+        shift += 7;
+    }
+}
+
+/// ZigZag-encode a signed delta so small negatives stay small.
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_edge_values() {
+        let cases = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &c in &cases {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, c);
+            let mut pos = 0;
+            assert_eq!(read_u64(&buf, &mut pos), Some(c));
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn truncated_returns_none() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, 1u64 << 40);
+        buf.pop();
+        let mut pos = 0;
+        assert_eq!(read_u64(&buf, &mut pos), None);
+    }
+
+    #[test]
+    fn zigzag_round_trip() {
+        for v in [-5i64, -1, 0, 1, 1 << 40, i64::MIN, i64::MAX] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn zigzag_small_negatives_small() {
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert_eq!(zigzag(-2), 3);
+    }
+
+    #[test]
+    fn stream_of_varints() {
+        let vals: Vec<u64> = (0..1000).map(|i| i * 37 % 9973).collect();
+        let mut buf = Vec::new();
+        for &v in &vals {
+            write_u64(&mut buf, v);
+        }
+        let mut pos = 0;
+        let got: Vec<u64> = (0..1000)
+            .map(|_| read_u64(&buf, &mut pos).unwrap())
+            .collect();
+        assert_eq!(got, vals);
+    }
+}

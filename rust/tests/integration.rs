@@ -1,0 +1,335 @@
+//! Integration tests across modules: preprocessing → engine → apps,
+//! backend equivalence (native vs PJRT), engine equivalence (VSW vs
+//! baselines), and failure injection.
+
+use graphmp::apps::{Bfs, Cc, PageRank, Sssp, VertexProgram};
+use graphmp::baselines::{
+    dsw::DswEngine, esg::EsgEngine, inmem::InMemEngine, psw::PswEngine, BaselineConfig,
+    BaselineEngine,
+};
+use graphmp::compress::CacheMode;
+use graphmp::engine::{Backend, EngineConfig, VswEngine};
+use graphmp::graph::rmat::{rmat, RmatParams};
+use graphmp::graph::EdgeList;
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::runtime::{Manifest, ShardExecutor};
+use graphmp::storage::disk::{Disk, DiskProfile};
+use std::sync::Arc;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!("graphmp_it_{name}"));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn graph() -> EdgeList {
+    rmat(10, 12_000, 777, RmatParams::default())
+}
+
+fn prep_cfg(weighted: bool) -> PrepConfig {
+    PrepConfig {
+        edges_per_shard: 2048,
+        weighted,
+        max_rows_per_shard: 512,
+        ..Default::default()
+    }
+}
+
+/// Build a VSW engine over a fresh prep of `g`.
+fn vsw(g: &EdgeList, name: &str, cfg: EngineConfig, weighted: bool) -> VswEngine {
+    let disk = Disk::unthrottled();
+    let (dir, _) = preprocess_into(g, tmp(name), &disk, prep_cfg(weighted)).unwrap();
+    VswEngine::open(&dir, &disk, cfg).unwrap()
+}
+
+// ---------------------------------------------------------------- backends
+
+#[test]
+fn native_and_pjrt_backends_agree_on_pagerank() {
+    if !artifacts_dir().join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let g = graph();
+    let manifest = Manifest::load(&artifacts_dir()).unwrap();
+    let variant = manifest
+        .pick_variant(g.num_vertices as usize, 512)
+        .expect("need tiny/small artifacts");
+    let exe = Arc::new(ShardExecutor::load(&artifacts_dir(), variant).unwrap());
+
+    let mut nat = vsw(&g, "be_nat", EngineConfig::default(), false);
+    let mut pj = vsw(
+        &g,
+        "be_pjrt",
+        EngineConfig { backend: Backend::Pjrt(exe), ..Default::default() },
+        false,
+    );
+    let (vn, _) = nat.run_to_values(&PageRank::new(), 5).unwrap();
+    let (vp, _) = pj.run_to_values(&PageRank::new(), 5).unwrap();
+    for (i, (a, b)) in vn.iter().zip(&vp).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-5 * a.abs().max(1e-3),
+            "vertex {i}: native {a} vs pjrt {b}"
+        );
+    }
+}
+
+#[test]
+fn native_and_pjrt_backends_agree_on_sssp_and_cc() {
+    if !artifacts_dir().join("manifest.txt").exists() {
+        return;
+    }
+    let g = graph();
+    let manifest = Manifest::load(&artifacts_dir()).unwrap();
+    let variant = manifest
+        .pick_variant(g.num_vertices as usize, 512)
+        .expect("need artifacts");
+
+    // SSSP on the weighted directed graph
+    let exe = Arc::new(ShardExecutor::load(&artifacts_dir(), variant).unwrap());
+    let mut nat = vsw(&g, "be2_nat", EngineConfig::default(), true);
+    let mut pj = vsw(
+        &g,
+        "be2_pjrt",
+        EngineConfig { backend: Backend::Pjrt(exe), ..Default::default() },
+        true,
+    );
+    let (vn, _) = nat.run_to_values(&Sssp::new(0), 30).unwrap();
+    let (vp, _) = pj.run_to_values(&Sssp::new(0), 30).unwrap();
+    assert_eq!(vn, vp, "SSSP min-relaxation must be bit-exact across backends");
+
+    // CC on the symmetrised graph
+    let ug = g.to_undirected();
+    let manifest_u = Manifest::load(&artifacts_dir()).unwrap();
+    let variant_u = manifest_u
+        .pick_variant(ug.num_vertices as usize, 512)
+        .expect("need artifacts");
+    let exe_u = Arc::new(ShardExecutor::load(&artifacts_dir(), variant_u).unwrap());
+    let mut natc = vsw(&ug, "be3_nat", EngineConfig::default(), false);
+    let mut pjc = vsw(
+        &ug,
+        "be3_pjrt",
+        EngineConfig { backend: Backend::Pjrt(exe_u), ..Default::default() },
+        false,
+    );
+    let (vn, _) = natc.run_to_values(&Cc, 50).unwrap();
+    let (vp, _) = pjc.run_to_values(&Cc, 50).unwrap();
+    assert_eq!(vn, vp, "CC labels must be bit-exact across backends");
+}
+
+// ------------------------------------------------------------ vsw vs baselines
+
+#[test]
+fn all_engines_agree_on_pagerank() {
+    let g = graph();
+    let iters = 5;
+    let mut v = vsw(&g, "agree_vsw", EngineConfig::default(), false);
+    let (vsw_vals, _) = v.run_to_values(&PageRank::new(), iters).unwrap();
+
+    let disk = Disk::unthrottled();
+    let cfg = BaselineConfig { p: 8, ..Default::default() };
+    let mut engines: Vec<Box<dyn BaselineEngine>> = vec![
+        Box::new(PswEngine::new(cfg)),
+        Box::new(EsgEngine::new(cfg)),
+        Box::new(DswEngine::new(cfg)),
+    ];
+    for e in engines.iter_mut() {
+        e.preprocess(&g, &disk).unwrap();
+        e.run(&PageRank::new(), iters, &disk).unwrap();
+        for (i, (a, b)) in vsw_vals.iter().zip(e.values()).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5,
+                "{}: vertex {i}: vsw {a} vs {b}",
+                e.name()
+            );
+        }
+    }
+    let mut im = InMemEngine::new(cfg);
+    im.load(&g, &disk).unwrap();
+    im.run(&PageRank::new(), iters, &disk).unwrap();
+    for (a, b) in vsw_vals.iter().zip(im.values()) {
+        assert!((a - b).abs() <= 1e-5);
+    }
+}
+
+#[test]
+fn all_engines_agree_on_sssp() {
+    let g = graph();
+    let mut v = vsw(&g, "agree_sssp_vsw", EngineConfig::default(), true);
+    let (vsw_vals, run) = v.run_to_values(&Sssp::new(0), 100).unwrap();
+    assert!(run.converged);
+
+    let disk = Disk::unthrottled();
+    let cfg = BaselineConfig { p: 8, ..Default::default() };
+    let mut engines: Vec<Box<dyn BaselineEngine>> = vec![
+        Box::new(PswEngine::new(cfg)),
+        Box::new(EsgEngine::new(cfg)),
+        Box::new(DswEngine::new(cfg)),
+    ];
+    for e in engines.iter_mut() {
+        e.preprocess(&g, &disk).unwrap();
+        e.run(&Sssp::new(0), 100, &disk).unwrap();
+        assert_eq!(e.values(), &vsw_vals[..], "{} disagrees", e.name());
+    }
+}
+
+// ---------------------------------------------------------------- engine IO
+
+#[test]
+fn vsw_reads_less_than_baselines_per_iteration() {
+    // The headline mechanism: Table 3's ordering shows up in measured bytes.
+    let g = graph();
+    let iters = 3;
+
+    let disk_v = Disk::unthrottled();
+    let (dir, _) = preprocess_into(&g, tmp("io_vsw"), &disk_v, prep_cfg(false)).unwrap();
+    let mut v = VswEngine::open(
+        &dir,
+        &disk_v,
+        EngineConfig {
+            cache_mode: Some(CacheMode::M0None), // even uncached VSW wins
+            selective: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    disk_v.reset();
+    v.run(&PageRank::new(), iters).unwrap();
+    let vsw_read = disk_v.snapshot().bytes_read;
+
+    let cfg = BaselineConfig { p: 8, ..Default::default() };
+    let makers: Vec<Box<dyn Fn() -> Box<dyn BaselineEngine>>> = vec![
+        Box::new(move || Box::new(PswEngine::new(cfg))),
+        Box::new(move || Box::new(EsgEngine::new(cfg))),
+        Box::new(move || Box::new(DswEngine::new(cfg))),
+    ];
+    for mk in &makers {
+        let disk_b = Disk::unthrottled();
+        let mut e = mk();
+        e.preprocess(&g, &disk_b).unwrap();
+        disk_b.reset();
+        e.run(&PageRank::new(), iters, &disk_b).unwrap();
+        let b_read = disk_b.snapshot().bytes_read;
+        let b_written = disk_b.snapshot().bytes_written;
+        assert!(
+            vsw_read < b_read,
+            "{}: VSW read {vsw_read} !< {b_read}",
+            e.name()
+        );
+        assert!(b_written > 0, "{} writes nothing?", e.name());
+    }
+    // and VSW writes nothing during iterations
+    assert_eq!(disk_v.snapshot().bytes_written, 0);
+}
+
+#[test]
+fn bfs_levels_consistent_with_sssp_unit_weights() {
+    let g = graph();
+    let mut e1 = vsw(&g, "bfs1", EngineConfig::default(), false);
+    let (bfs_vals, _) = e1.run_to_values(&Bfs::new(3), 100).unwrap();
+    // SSSP over the same graph with all weights forced to 1 == BFS levels
+    let mut unit = g.clone();
+    for e in &mut unit.edges {
+        e.weight = 1.0;
+    }
+    let mut e2 = vsw(&unit, "bfs2", EngineConfig::default(), true);
+    let (sssp_vals, _) = e2.run_to_values(&Sssp::new(3), 100).unwrap();
+    assert_eq!(bfs_vals, sssp_vals);
+}
+
+// ------------------------------------------------------------ failure modes
+
+#[test]
+fn corrupted_shard_is_detected() {
+    let g = graph();
+    let disk = Disk::unthrottled();
+    let (dir, _) = preprocess_into(&g, tmp("corrupt"), &disk, prep_cfg(false)).unwrap();
+    // flip a byte in shard 0's payload
+    let p = dir.shard_path(0);
+    let mut bytes = std::fs::read(&p).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&p, &bytes).unwrap();
+    let mut e = VswEngine::open(&dir, &disk, EngineConfig::default()).unwrap();
+    let err = e.run(&PageRank::new(), 2).unwrap_err().to_string();
+    assert!(err.contains("CRC") || err.contains("shard"), "{err}");
+}
+
+#[test]
+fn missing_shard_file_is_reported() {
+    let g = graph();
+    let disk = Disk::unthrottled();
+    let (dir, _) = preprocess_into(&g, tmp("missing"), &disk, prep_cfg(false)).unwrap();
+    std::fs::remove_file(dir.shard_path(1)).unwrap();
+    let err = VswEngine::open(&dir, &disk, EngineConfig::default());
+    // open stats shard files; either open or first run must fail
+    match err {
+        Err(e) => assert!(e.to_string().contains("shard_00001")),
+        Ok(mut eng) => {
+            assert!(eng.run(&PageRank::new(), 1).is_err());
+        }
+    }
+}
+
+#[test]
+fn throttled_disk_reports_simulated_time() {
+    let g = rmat(9, 6_000, 555, RmatParams::default());
+    let disk = Disk::new(DiskProfile::hdd_raid5());
+    let (dir, _) = preprocess_into(&g, tmp("throttle"), &disk, prep_cfg(false)).unwrap();
+    let mut e = VswEngine::open(
+        &dir,
+        &disk,
+        EngineConfig {
+            cache_mode: Some(CacheMode::M0None),
+            selective: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let run = e.run(&PageRank::new(), 2).unwrap();
+    for m in &run.iterations {
+        assert!(
+            m.sim_disk_seconds > 0.0,
+            "HDD profile must charge simulated seconds"
+        );
+    }
+}
+
+#[test]
+fn cache_mode_survives_cold_and_hot_iterations() {
+    let g = graph();
+    for mode in [CacheMode::M1Raw, CacheMode::M2Fast, CacheMode::M3Zlib1, CacheMode::M4Zlib3] {
+        let disk = Disk::unthrottled();
+        let (dir, _) =
+            preprocess_into(&g, tmp(&format!("cm_{}", mode.name())), &disk, prep_cfg(false))
+                .unwrap();
+        let mut e = VswEngine::open(
+            &dir,
+            &disk,
+            EngineConfig {
+                cache_mode: Some(mode),
+                cache_capacity: 1 << 30,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let (vals, _) = e.run_to_values(&PageRank::new(), 4).unwrap();
+        // compare against uncached run
+        let disk2 = Disk::unthrottled();
+        let (dir2, _) =
+            preprocess_into(&g, tmp(&format!("cm0_{}", mode.name())), &disk2, prep_cfg(false))
+                .unwrap();
+        let mut e0 = VswEngine::open(
+            &dir2,
+            &disk2,
+            EngineConfig { cache_mode: Some(CacheMode::M0None), ..Default::default() },
+        )
+        .unwrap();
+        let (vals0, _) = e0.run_to_values(&PageRank::new(), 4).unwrap();
+        assert_eq!(vals, vals0, "{} changed results", mode.name());
+    }
+}

@@ -1,0 +1,313 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! `proptest` is not in the vendored crate set, so properties are driven
+//! by the repo's seeded RNG over many randomized cases per property —
+//! same idea: generate adversarial inputs, assert invariants, print the
+//! failing seed.
+
+use graphmp::apps::{Cc, PageRank, Sssp, VertexProgram};
+use graphmp::bloom::BloomFilter;
+use graphmp::compress::{delta, ALL_MODES};
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::rmat::{rmat, uniform, RmatParams};
+use graphmp::graph::{Csr, Edge, EdgeList};
+use graphmp::prep::{compute_intervals, preprocess_into, PrepConfig};
+use graphmp::storage::disk::Disk;
+use graphmp::storage::shard::Shard;
+use graphmp::util::rng::Xoshiro256;
+
+const CASES: u64 = 30;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir().join(format!("graphmp_prop_{name}"));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// Random graph with adversarial shapes: stars, chains, isolated ranges.
+fn random_graph(seed: u64) -> EdgeList {
+    let mut rng = Xoshiro256::new(seed);
+    let n = 16 + rng.next_below(2000) as u32;
+    let m = 1 + rng.next_below(4 * n as u64);
+    let mut g = match seed % 3 {
+        0 => rmat(11, m.min(30_000), seed, RmatParams::default()),
+        1 => uniform(n, m, seed),
+        _ => {
+            // hub-and-spokes + chain: worst case for interval balance
+            let mut edges = Vec::new();
+            for v in 1..n {
+                edges.push(Edge::new(v, 0)); // giant in-degree hub
+                if v + 1 < n {
+                    edges.push(Edge::new(v, v + 1));
+                }
+            }
+            EdgeList { num_vertices: n, edges }
+        }
+    };
+    // clamp ids defensively (rmat returns its own n)
+    let n = g.num_vertices;
+    g.edges.retain(|e| e.src < n && e.dst < n);
+    g
+}
+
+// ---------------------------------------------------------------- intervals
+
+#[test]
+fn prop_intervals_partition_vertex_space() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(seed ^ 0xA11CE);
+        let n = 1 + rng.next_below(5000) as usize;
+        let degs: Vec<u32> = (0..n).map(|_| rng.next_below(100) as u32).collect();
+        let threshold = 1 + rng.next_below(500) as u32;
+        let max_rows = 1 + rng.next_below(512) as u32;
+        let iv = compute_intervals(&degs, threshold, max_rows);
+        assert_eq!(iv.first().unwrap().0, 0, "seed {seed}");
+        assert_eq!(iv.last().unwrap().1, n as u32, "seed {seed}");
+        for w in iv.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "seed {seed}: gap/overlap");
+        }
+        for &(a, b) in &iv {
+            assert!(a < b, "seed {seed}: empty interval");
+            assert!(b - a <= max_rows, "seed {seed}: row cap violated");
+        }
+    }
+}
+
+#[test]
+fn prop_shards_partition_edges_exactly() {
+    for seed in 0..CASES {
+        let g = random_graph(seed ^ 0xB0B);
+        let disk = Disk::unthrottled();
+        let cfg = PrepConfig {
+            edges_per_shard: 512,
+            max_rows_per_shard: 256,
+            weighted: true,
+            ..Default::default()
+        };
+        let (dir, rep) = preprocess_into(&g, tmp(&format!("pp_{seed}")), &disk, cfg).unwrap();
+        let prop = dir.read_property(&disk).unwrap();
+        let mut seen = 0u64;
+        for s in 0..prop.num_shards {
+            let shard = Shard::read(&disk, &dir.shard_path(s)).unwrap();
+            let (a, b) = prop.intervals[s as usize];
+            for (r, src, _) in shard.csr.iter_edges() {
+                let dst = a + r;
+                assert!(dst >= a && dst < b, "seed {seed}: edge outside interval");
+                assert!(src < prop.num_vertices, "seed {seed}");
+            }
+            seen += shard.num_edges() as u64;
+        }
+        assert_eq!(seen, rep.num_edges, "seed {seed}: edges lost or duplicated");
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+}
+
+// ---------------------------------------------------------------- shard IO
+
+#[test]
+fn prop_shard_serialisation_round_trips() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(seed ^ 0x5EED);
+        let rows = 1 + rng.next_below(300) as usize;
+        let edges = rng.next_below(2000) as usize;
+        let start = rng.next_below(10_000) as u32;
+        let weighted = seed % 2 == 0;
+        let es: Vec<Edge> = (0..edges)
+            .map(|_| {
+                Edge::weighted(
+                    rng.next_below(100_000) as u32,
+                    start + rng.next_below(rows as u64) as u32,
+                    rng.next_range_f32(0.0, 100.0),
+                )
+            })
+            .collect();
+        let shard = Shard {
+            id: seed as u32,
+            start_vertex: start,
+            csr: Csr::from_edges(&es, start, rows, weighted),
+        };
+        let back = Shard::from_bytes(&shard.to_bytes()).unwrap();
+        assert_eq!(back, shard, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_codecs_round_trip_shard_bytes() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(seed ^ 0xC0DEC);
+        let len = (rng.next_below(50_000) as usize / 4) * 4;
+        let mut data = Vec::with_capacity(len);
+        // mix of compressible runs and noise
+        while data.len() < len {
+            if rng.next_f64() < 0.5 {
+                let b = rng.next_below(256) as u8;
+                let run = 1 + rng.next_below(64) as usize;
+                data.extend(std::iter::repeat_n(b, run.min(len - data.len())));
+            } else {
+                data.push(rng.next_below(256) as u8);
+            }
+        }
+        for mode in ALL_MODES {
+            let c = mode.compress(&data);
+            assert_eq!(
+                mode.decompress(&c).unwrap(),
+                data,
+                "seed {seed} mode {}",
+                mode.name()
+            );
+        }
+        let enc = delta::compress_bytes(&data).unwrap();
+        assert_eq!(delta::decompress_bytes(&enc).unwrap(), data, "seed {seed} delta");
+    }
+}
+
+// ---------------------------------------------------------------- blooms
+
+#[test]
+fn prop_bloom_never_false_negative() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::new(seed ^ 0xB100);
+        let n = 1 + rng.next_below(5000) as usize;
+        let mut f = BloomFilter::with_rate(n, 0.01);
+        let items: Vec<u32> = (0..n).map(|_| rng.next_below(1 << 30) as u32).collect();
+        for &v in &items {
+            f.insert(v);
+        }
+        for &v in &items {
+            assert!(f.contains(v), "seed {seed}: false negative on {v}");
+        }
+    }
+}
+
+// ------------------------------------------------------------ engine props
+
+#[test]
+fn prop_pagerank_mass_bounded_and_positive() {
+    for seed in 0..8 {
+        let g = random_graph(seed ^ 0xFACE);
+        if g.num_edges() == 0 {
+            continue;
+        }
+        let disk = Disk::unthrottled();
+        let cfg = PrepConfig {
+            edges_per_shard: 1024,
+            max_rows_per_shard: 512,
+            ..Default::default()
+        };
+        let (dir, _) = preprocess_into(&g, tmp(&format!("pr_{seed}")), &disk, cfg).unwrap();
+        let mut e = VswEngine::open(&dir, &disk, EngineConfig::default()).unwrap();
+        let (vals, _) = e.run_to_values(&PageRank::new(), 8).unwrap();
+        let n = g.num_vertices as f32;
+        let total: f32 = vals.iter().sum();
+        for (i, &v) in vals.iter().enumerate() {
+            assert!(v >= 0.15 / n * 0.999, "seed {seed}: rank {i} below base: {v}");
+            assert!(v <= 1.0, "seed {seed}: rank {i} above 1: {v}");
+        }
+        // dangling vertices leak mass, so total ≤ 1 (+ fp slack)
+        assert!(total <= 1.001, "seed {seed}: total mass {total}");
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+}
+
+#[test]
+fn prop_sssp_monotone_and_triangle_consistent() {
+    for seed in 0..8 {
+        let g = random_graph(seed ^ 0xD1D);
+        if g.num_edges() == 0 {
+            continue;
+        }
+        let disk = Disk::unthrottled();
+        let cfg = PrepConfig {
+            edges_per_shard: 1024,
+            max_rows_per_shard: 512,
+            weighted: true,
+            ..Default::default()
+        };
+        let (dir, _) = preprocess_into(&g, tmp(&format!("ss_{seed}")), &disk, cfg).unwrap();
+        let mut e = VswEngine::open(&dir, &disk, EngineConfig::default()).unwrap();
+        let (vals, run) = e.run_to_values(&Sssp::new(0), 300).unwrap();
+        assert!(run.converged, "seed {seed}: SSSP did not converge");
+        assert_eq!(vals[0], 0.0, "seed {seed}");
+        // fixed-point property: no edge can still relax
+        for edge in &g.edges {
+            let lhs = vals[edge.dst as usize];
+            let rhs = vals[edge.src as usize] + edge.weight;
+            assert!(
+                lhs <= rhs,
+                "seed {seed}: edge {}->{} violates triangle: {lhs} > {rhs}",
+                edge.src,
+                edge.dst
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+}
+
+#[test]
+fn prop_cc_labels_are_component_minima() {
+    for seed in 0..6 {
+        let g = random_graph(seed ^ 0xCC).to_undirected();
+        if g.num_edges() == 0 {
+            continue;
+        }
+        let disk = Disk::unthrottled();
+        let cfg = PrepConfig {
+            edges_per_shard: 1024,
+            max_rows_per_shard: 512,
+            ..Default::default()
+        };
+        let (dir, _) = preprocess_into(&g, tmp(&format!("cc_{seed}")), &disk, cfg).unwrap();
+        let mut e = VswEngine::open(&dir, &disk, EngineConfig::default()).unwrap();
+        let (vals, run) = e.run_to_values(&Cc, 500).unwrap();
+        assert!(run.converged, "seed {seed}");
+        // endpoint labels equal across every edge; label ≤ own id
+        for edge in &g.edges {
+            assert_eq!(
+                vals[edge.src as usize], vals[edge.dst as usize],
+                "seed {seed}: edge endpoints in different components"
+            );
+        }
+        for (v, &l) in vals.iter().enumerate() {
+            assert!(l <= v as f32, "seed {seed}: label above own id");
+            // the labelled root labels itself
+            assert_eq!(vals[l as usize], l, "seed {seed}: non-canonical label");
+        }
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+}
+
+#[test]
+fn prop_selective_scheduling_never_changes_results() {
+    for seed in 0..6 {
+        let g = random_graph(seed ^ 0x5E1);
+        if g.num_edges() == 0 {
+            continue;
+        }
+        let disk = Disk::unthrottled();
+        let cfg = PrepConfig {
+            edges_per_shard: 512,
+            max_rows_per_shard: 256,
+            weighted: true,
+            ..Default::default()
+        };
+        let (dir, _) = preprocess_into(&g, tmp(&format!("sel_{seed}")), &disk, cfg).unwrap();
+        for app in [&Sssp::new(0) as &dyn VertexProgram] {
+            let mut on = VswEngine::open(
+                &dir,
+                &disk,
+                EngineConfig { selective: true, active_threshold: 0.5, ..Default::default() },
+            )
+            .unwrap();
+            let mut off = VswEngine::open(
+                &dir,
+                &disk,
+                EngineConfig { selective: false, ..Default::default() },
+            )
+            .unwrap();
+            let (a, _) = on.run_to_values(app, 100).unwrap();
+            let (b, _) = off.run_to_values(app, 100).unwrap();
+            assert_eq!(a, b, "seed {seed}: selective changed {}", app.name());
+        }
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+}

@@ -8,7 +8,7 @@
 //! (~6–10%).
 
 use graphmp::apps::{Cc, PageRank, Sssp, VertexProgram};
-use graphmp::benchutil::{banner, scale, Table};
+use graphmp::benchutil::{banner, pipeline_summary, scale, Table};
 use graphmp::compress::CacheMode;
 use graphmp::engine::{EngineConfig, VswEngine};
 use graphmp::graph::datasets::Dataset;
@@ -41,7 +41,7 @@ fn run_app(
 fn report(name: &str, ss: &RunMetrics, nss: &RunMetrics) {
     println!("\n--- {name} ---");
     let mut tbl = Table::new(vec![
-        "iter", "activation", "SS time(s)", "NSS time(s)", "SS skipped",
+        "iter", "activation", "SS time(s)", "NSS time(s)", "SS skipped", "SS prefetched",
     ]);
     let total = ss.iterations.len().max(nss.iterations.len());
     let samples: Vec<usize> = (0..total)
@@ -56,9 +56,12 @@ fn report(name: &str, ss: &RunMetrics, nss: &RunMetrics) {
             s.map_or("-".into(), |m| format!("{:.4}", m.elapsed_seconds())),
             n.map_or("-".into(), |m| format!("{:.4}", m.elapsed_seconds())),
             s.map_or("-".into(), |m| format!("{}", m.shards_skipped)),
+            s.map_or("-".into(), |m| format!("{}", m.shards_prefetched)),
         ]);
     }
     tbl.print(&format!("Fig 7 {name}: per-iteration series (sampled)"));
+    println!("SS  {}", pipeline_summary(ss));
+    println!("NSS {}", pipeline_summary(nss));
     let ts: f64 = ss.iterations.iter().map(|m| m.elapsed_seconds()).sum();
     let tn: f64 = nss.iterations.iter().map(|m| m.elapsed_seconds()).sum();
     let best_ratio = ss

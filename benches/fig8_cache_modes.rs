@@ -8,7 +8,7 @@
 //! expensive fill pass in every mode.
 
 use graphmp::apps::{Cc, PageRank, Sssp, VertexProgram};
-use graphmp::benchutil::{banner, scale, Table};
+use graphmp::benchutil::{banner, pipeline_summary, scale, Table};
 use graphmp::compress::{CacheMode, ALL_MODES};
 use graphmp::engine::{EngineConfig, VswEngine};
 use graphmp::graph::datasets::Dataset;
@@ -40,22 +40,43 @@ fn run_mode(
 }
 
 fn report(app_name: &str, results: &[(CacheMode, RunMetrics, f64)]) {
-    let mut tbl = Table::new(vec!["mode", "shards cached", "iter1(s)", "iters2-10(s)", "total(s)", "speedup"]);
+    let mut tbl = Table::new(vec![
+        "mode", "shards cached", "iter1(s)", "iters2-10(s)", "total(s)", "overlap(s)",
+        "decodes", "ready%", "speedup",
+    ]);
     let base_total: f64 = results[0].1.first_n_seconds(10);
     for (mode, run, frac) in results {
         let t1 = run.iterations.first().map_or(0.0, |m| m.elapsed_seconds());
         let rest: f64 = run.iterations.iter().skip(1).take(9).map(|m| m.elapsed_seconds()).sum();
         let total = run.first_n_seconds(10);
+        let first10 = || run.iterations.iter().take(10);
+        let overlap: f64 = first10().map(|m| m.overlapped_sim_seconds).sum();
+        // acceptance metric: compressed-cache hits must not re-parse —
+        // decode count stays ≤ shards per iteration (0 once memoized)
+        let decodes: u64 = first10().map(|m| m.cache.decodes).sum();
+        let hits: u64 = first10().map(|m| m.ready_hits as u64).sum();
+        let misses: u64 = first10().map(|m| m.ready_misses as u64).sum();
+        let ready = if hits + misses == 0 {
+            "-".to_string()
+        } else {
+            format!("{:.0}%", 100.0 * hits as f64 / (hits + misses) as f64)
+        };
         tbl.row(vec![
             mode.name().to_string(),
             format!("{:.1}%", frac * 100.0),
             format!("{t1:.3}"),
             format!("{rest:.3}"),
             format!("{total:.3}"),
+            format!("{overlap:.3}"),
+            format!("{decodes}"),
+            ready,
             format!("{:.2}x", base_total / total.max(1e-9)),
         ]);
     }
     tbl.print(&format!("Fig 8: {app_name} on eu2015-sim, first 10 iterations"));
+    if let Some((_, run, _)) = results.last() {
+        println!("{}", pipeline_summary(run));
+    }
 }
 
 fn main() {

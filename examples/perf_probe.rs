@@ -1,6 +1,7 @@
-//! Perf probe: time the pieces of a GMP-C steady-state iteration.
+//! Perf probe: time the pieces of a GMP-C steady-state iteration, and show
+//! the shard-pipeline counters (prefetch overlap + decode-once memo).
 use graphmp::apps::PageRank;
-use graphmp::benchutil::scale;
+use graphmp::benchutil::{pipeline_summary, scale};
 use graphmp::compress::CacheMode;
 use graphmp::engine::{EngineConfig, VswEngine};
 use graphmp::graph::datasets::Dataset;
@@ -18,13 +19,25 @@ fn main() {
     println!("shards={} bytes={}", rep.num_shards, rep.shard_bytes);
     drop(g);
     for mode in [CacheMode::M1Raw, CacheMode::M2Fast, CacheMode::M3Zlib1] {
-        let mut e = VswEngine::open(&dir, &disk, EngineConfig {
-            cache_mode: Some(mode), cache_capacity: u64::MAX >> 1, selective: false, ..Default::default()
-        }).unwrap();
-        let _ = e.run(&PageRank::new(), 1).unwrap(); // fill
-        let t = Instant::now();
-        let r = e.run(&PageRank::new(), 3).unwrap();
-        println!("{}: 3 steady iters wall={:.3}s (per-iter {:.3}s) sim={:.3}", mode.name(), t.elapsed().as_secs_f64(), t.elapsed().as_secs_f64()/3.0, r.total_sim_disk_seconds);
+        // pipelined (defaults) vs sequential decode-every-hit reference
+        for (label, depth, memo) in [("pipelined", 4usize, 256u64 << 20), ("sequential", 0, 0)] {
+            let mut e = VswEngine::open(&dir, &disk, EngineConfig {
+                cache_mode: Some(mode), cache_capacity: u64::MAX >> 1, selective: false,
+                prefetch_depth: depth, decode_memo_budget: memo, ..Default::default()
+            }).unwrap();
+            let _ = e.run(&PageRank::new(), 1).unwrap(); // fill
+            let t = Instant::now();
+            let r = e.run(&PageRank::new(), 3).unwrap();
+            println!(
+                "{} {label}: 3 steady iters wall={:.3}s (per-iter {:.3}s) sim={:.3} overlap={:.3}",
+                mode.name(),
+                t.elapsed().as_secs_f64(),
+                t.elapsed().as_secs_f64() / 3.0,
+                r.total_sim_disk_seconds,
+                r.total_overlapped_sim_seconds,
+            );
+            println!("  {}", pipeline_summary(&r));
+        }
     }
     let _ = std::fs::remove_dir_all(&tmp);
 }

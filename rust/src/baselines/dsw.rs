@@ -122,6 +122,7 @@ impl BaselineEngine for DswEngine {
                 shards_skipped: 0,
                 io: io1.since(&io0),
                 cache: Default::default(),
+                ..Default::default()
             });
             if active == 0 {
                 run.converged = true;

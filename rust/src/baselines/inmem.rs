@@ -106,6 +106,7 @@ impl BaselineEngine for InMemEngine {
                 shards_skipped: 0,
                 io: Default::default(),
                 cache: Default::default(),
+                ..Default::default()
             });
             if active == 0 {
                 run.converged = true;

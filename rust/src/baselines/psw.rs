@@ -143,6 +143,7 @@ impl BaselineEngine for PswEngine {
                 shards_skipped: 0,
                 io: io1.since(&io0),
                 cache: Default::default(),
+                ..Default::default()
             });
             if active == 0 {
                 run.converged = true;

@@ -96,6 +96,26 @@ impl Table {
     }
 }
 
+/// One-line pipeline summary of a run: prefetched shards, ready-queue hit
+/// ratio, decode counts and overlapped (hidden) simulated disk seconds —
+/// the counters the fig7/fig8 benches and `perf_probe` report.
+pub fn pipeline_summary(run: &crate::metrics::RunMetrics) -> String {
+    let prefetched: u64 = run.iterations.iter().map(|m| m.shards_prefetched as u64).sum();
+    let hits: u64 = run.iterations.iter().map(|m| m.ready_hits as u64).sum();
+    let misses: u64 = run.iterations.iter().map(|m| m.ready_misses as u64).sum();
+    let decodes: u64 = run.iterations.iter().map(|m| m.cache.decodes).sum();
+    let skips: u64 = run.iterations.iter().map(|m| m.cache.decode_skips).sum();
+    let ready_pct = if hits + misses == 0 {
+        0.0
+    } else {
+        100.0 * hits as f64 / (hits + misses) as f64
+    };
+    format!(
+        "pipeline: prefetched {prefetched}, ready-hit {ready_pct:.0}%, decodes {decodes} (memo-skipped {skips}), overlapped sim {:.3}s of {:.3}s",
+        run.total_overlapped_sim_seconds, run.total_sim_disk_seconds
+    )
+}
+
 /// Shared bench banner so `cargo bench` output is self-describing.
 pub fn banner(name: &str, paper_ref: &str) {
     println!("\n################################################################");
@@ -185,5 +205,25 @@ mod tests {
     fn table_rejects_ragged() {
         let mut t = Table::new(vec!["a"]);
         t.row(vec!["x", "y"]);
+    }
+
+    #[test]
+    fn pipeline_summary_formats_counters() {
+        use crate::metrics::{IterationMetrics, RunMetrics};
+        let mut run = RunMetrics {
+            total_sim_disk_seconds: 2.0,
+            total_overlapped_sim_seconds: 1.5,
+            ..Default::default()
+        };
+        run.iterations.push(IterationMetrics {
+            shards_prefetched: 10,
+            ready_hits: 9,
+            ready_misses: 1,
+            ..Default::default()
+        });
+        let s = pipeline_summary(&run);
+        assert!(s.contains("prefetched 10"), "{s}");
+        assert!(s.contains("ready-hit 90%"), "{s}");
+        assert!(s.contains("1.500s"), "{s}");
     }
 }

@@ -16,6 +16,17 @@ pub struct BloomFilter {
     num_hashes: u32,
 }
 
+/// Double-hashing base pair for an item.  Depends only on the item (not
+/// the filter geometry), so callers probing one item against *many*
+/// filters — [`BloomSet::probe_active`] — compute it once per item
+/// instead of once per (item, filter) pair.
+#[inline]
+pub fn hash_pair(item: u32) -> (u64, u64) {
+    let h1 = splitmix64(item as u64);
+    let h2 = splitmix64(h1) | 1; // odd => full period
+    (h1, h2)
+}
+
 impl BloomFilter {
     /// Size the filter for `expected_items` at `fp_rate` false positives.
     pub fn with_rate(expected_items: usize, fp_rate: f64) -> Self {
@@ -31,7 +42,7 @@ impl BloomFilter {
     }
 
     pub fn insert(&mut self, item: u32) {
-        let (h1, h2) = self.hashes(item);
+        let (h1, h2) = hash_pair(item);
         for i in 0..self.num_hashes {
             let bit = h1.wrapping_add((i as u64).wrapping_mul(h2)) % self.num_bits;
             self.bits[(bit / 64) as usize] |= 1 << (bit % 64);
@@ -40,7 +51,13 @@ impl BloomFilter {
 
     /// May return false positives, never false negatives.
     pub fn contains(&self, item: u32) -> bool {
-        let (h1, h2) = self.hashes(item);
+        let (h1, h2) = hash_pair(item);
+        self.contains_hashed(h1, h2)
+    }
+
+    /// [`contains`](Self::contains) with a precomputed [`hash_pair`].
+    #[inline]
+    pub fn contains_hashed(&self, h1: u64, h2: u64) -> bool {
         (0..self.num_hashes).all(|i| {
             let bit = h1.wrapping_add((i as u64).wrapping_mul(h2)) % self.num_bits;
             self.bits[(bit / 64) as usize] & (1 << (bit % 64)) != 0
@@ -53,14 +70,10 @@ impl BloomFilter {
         items.iter().any(|&v| self.contains(v))
     }
 
-    fn hashes(&self, item: u32) -> (u64, u64) {
-        let h = splitmix64(item as u64);
-        let h2 = splitmix64(h) | 1; // odd => full period
-        (h, h2)
-    }
-
+    /// In-memory/serialized size: words + the 12-byte header of
+    /// [`to_bytes`](Self::to_bytes) (`num_bits` u64 + `num_hashes` u32).
     pub fn size_bytes(&self) -> usize {
-        self.bits.len() * 8 + 16
+        self.bits.len() * 8 + 12
     }
 
     /// Serialise: `num_bits u64 | num_hashes u32 | words...` (LE u32 pairs).
@@ -126,6 +139,32 @@ impl BloomSet {
     pub fn size_bytes(&self) -> usize {
         self.filters.iter().map(|f| f.size_bytes()).sum()
     }
+
+    /// Batched shard-activity probe: `out[s]` is true iff shard `s`'s
+    /// filter (possibly) contains any of `active`.  One [`hash_pair`] per
+    /// active vertex serves every filter, and the scan exits early once
+    /// all shards are known active — strictly cheaper than calling
+    /// [`BloomFilter::contains_any`] per shard.
+    pub fn probe_active(&self, active: &[u32]) -> Vec<bool> {
+        let mut hot = vec![false; self.filters.len()];
+        if self.filters.is_empty() {
+            return hot;
+        }
+        let mut cold = self.filters.len();
+        for &v in active {
+            let (h1, h2) = hash_pair(v);
+            for (s, f) in self.filters.iter().enumerate() {
+                if !hot[s] && f.contains_hashed(h1, h2) {
+                    hot[s] = true;
+                    cold -= 1;
+                    if cold == 0 {
+                        return hot;
+                    }
+                }
+            }
+        }
+        hot
+    }
 }
 
 #[cfg(test)]
@@ -187,6 +226,59 @@ mod tests {
     #[test]
     fn set_rejects_garbage() {
         assert!(BloomSet::from_bytes(b"XXXX____").is_err());
+    }
+
+    #[test]
+    fn size_bytes_matches_serialised_len() {
+        // Fig 11's memory account sums `size_bytes`; it must equal the
+        // bytes actually persisted per filter (12-byte header + words).
+        for n in [1usize, 10, 1000, 50_000] {
+            let f = BloomFilter::with_rate(n, 0.01);
+            assert_eq!(f.to_bytes().len(), f.size_bytes(), "n={n}");
+        }
+        // set framing adds the GMPB magic + count (8B) and a 4B length
+        // prefix per filter on top of the per-filter account
+        let set = BloomSet {
+            filters: vec![
+                BloomFilter::with_rate(10, 0.01),
+                BloomFilter::with_rate(500, 0.001),
+            ],
+        };
+        assert_eq!(set.to_bytes().len(), set.size_bytes() + 8 + 2 * 4);
+    }
+
+    #[test]
+    fn probe_active_matches_per_filter_contains_any() {
+        let mut filters = Vec::new();
+        for s in 0..4u32 {
+            let mut f = BloomFilter::with_rate(64, 0.001);
+            for v in 0..32u32 {
+                f.insert(s * 1000 + v);
+            }
+            filters.push(f);
+        }
+        let set = BloomSet { filters };
+        for active in [
+            vec![],
+            vec![5u32],
+            vec![5, 2007],
+            vec![1, 2, 3, 1001, 3005],
+            vec![9999],
+        ] {
+            let hot = set.probe_active(&active);
+            for (s, f) in set.filters.iter().enumerate() {
+                assert_eq!(
+                    hot[s],
+                    f.contains_any(&active),
+                    "shard {s}, active {active:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn probe_active_empty_set() {
+        assert!(BloomSet::default().probe_active(&[1, 2, 3]).is_empty());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The compressed edge cache (paper §2.4.2).
+//! The compressed edge cache (paper §2.4.2) with a decode-once hot path.
 //!
 //! Capacity-bounded, shard-id-keyed.  On a hit the shard is decompressed
 //! from RAM (throughput ≫ disk); on a miss the caller loads from disk and
@@ -6,6 +6,15 @@
 //! needed: the shard set is fixed after preprocessing, so the cache simply
 //! fills until capacity (matching the paper, which caches "as many shards
 //! as possible") — an LRU would only churn identical-value entries.
+//!
+//! Compressed entries additionally memoize their parsed [`Shard`] while
+//! the decode-memo byte budget lasts, so a hit is an `Arc` clone, not a
+//! zlib inflate + full `Shard::from_bytes`.  The memo is permanent and
+//! strictly budget-bounded (it is real extra RAM, accounted as
+//! `memo_bytes` / Fig 11's decoded pool); beyond the budget a hit decodes
+//! — at most once per scheduled shard per iteration, because the engine's
+//! prefetcher fetches each shard exactly once and hands the decoded `Arc`
+//! to the compute worker through the ready queue.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -23,6 +32,10 @@ pub struct CacheStats {
     pub misses: AtomicU64,
     pub admitted: AtomicU64,
     pub rejected: AtomicU64,
+    /// Full decompress + parse passes on compressed entries.
+    pub decodes: AtomicU64,
+    /// Compressed-entry hits served from the parsed memo (no decode).
+    pub decode_skips: AtomicU64,
 }
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -32,6 +45,10 @@ pub struct CacheSnapshot {
     pub admitted: u64,
     pub rejected: u64,
     pub used_bytes: u64,
+    pub decodes: u64,
+    pub decode_skips: u64,
+    /// Bytes of parsed shards pinned by the decode-memo budget.
+    pub memo_bytes: u64,
 }
 
 impl CacheSnapshot {
@@ -49,8 +66,12 @@ enum Entry {
     /// Mode 1 stores the shard parsed once — a cache hit is an Arc clone
     /// (zero-copy), not a re-parse of ~MBs of CSR bytes (§Perf log).
     Parsed(Arc<Shard>),
-    /// Compressed modes store bytes; hits decompress + parse.
-    Compressed(Vec<u8>),
+    /// Compressed modes store bytes; a hit decodes unless the parsed
+    /// shard is pinned in the budget-bounded memo.
+    Compressed {
+        bytes: Vec<u8>,
+        memo: RwLock<Option<Arc<Shard>>>,
+    },
 }
 
 /// The cache proper.  `mode == M0None` disables it entirely.
@@ -58,6 +79,10 @@ pub struct EdgeCache {
     mode: CacheMode,
     capacity_bytes: u64,
     used_bytes: AtomicU64,
+    /// Byte budget for permanently memoizing parsed shards of compressed
+    /// entries (0 = no decode memo).
+    memo_budget: u64,
+    memo_used: AtomicU64,
     entries: RwLock<HashMap<u32, Arc<Entry>>>,
     /// Shards already rejected on capacity — the shard set is static, so
     /// re-offering them would only repeat the (possibly expensive)
@@ -72,6 +97,8 @@ impl EdgeCache {
             mode,
             capacity_bytes: if mode == CacheMode::M0None { 0 } else { capacity_bytes },
             used_bytes: AtomicU64::new(0),
+            memo_budget: 0,
+            memo_used: AtomicU64::new(0),
             entries: RwLock::new(HashMap::new()),
             rejected_ids: RwLock::new(HashSet::new()),
             stats: CacheStats::default(),
@@ -84,6 +111,16 @@ impl EdgeCache {
         EdgeCache::new(mode, capacity_bytes)
     }
 
+    /// Set the decode-once memo budget (bytes of parsed shards kept
+    /// beside the compressed entries).  Call before sharing the cache.
+    pub fn set_decode_memo_budget(&mut self, bytes: u64) {
+        self.memo_budget = bytes;
+    }
+
+    pub fn decode_memo_budget(&self) -> u64 {
+        self.memo_budget
+    }
+
     pub fn mode(&self) -> CacheMode {
         self.mode
     }
@@ -92,7 +129,8 @@ impl EdgeCache {
         self.capacity_bytes
     }
 
-    /// Probe for a shard; decompresses on hit (zero-copy for mode 1).
+    /// Probe for a shard; a hit is an Arc clone when the entry is parsed
+    /// (mode 1) or memoized; otherwise it decodes (and tries to memoize).
     pub fn get(&self, shard_id: u32) -> Result<Option<Arc<Shard>>> {
         if self.mode == CacheMode::M0None {
             self.stats.misses.fetch_add(1, Ordering::Relaxed);
@@ -107,9 +145,16 @@ impl EdgeCache {
                 self.stats.hits.fetch_add(1, Ordering::Relaxed);
                 match &*e {
                     Entry::Parsed(shard) => Ok(Some(Arc::clone(shard))),
-                    Entry::Compressed(bytes) => {
+                    Entry::Compressed { bytes, memo } => {
+                        if let Some(shard) = memo.read().unwrap().as_ref() {
+                            self.stats.decode_skips.fetch_add(1, Ordering::Relaxed);
+                            return Ok(Some(Arc::clone(shard)));
+                        }
                         let raw = self.mode.decompress(bytes)?;
-                        Ok(Some(Arc::new(Shard::from_bytes(&raw)?)))
+                        let shard = Arc::new(Shard::from_bytes(&raw)?);
+                        self.stats.decodes.fetch_add(1, Ordering::Relaxed);
+                        self.memoize(memo, &shard);
+                        Ok(Some(shard))
                     }
                 }
             }
@@ -123,6 +168,17 @@ impl EdgeCache {
     /// Offer freshly-loaded shard bytes; stored if capacity allows.
     /// Returns whether the shard was admitted.
     pub fn admit(&self, shard_id: u32, raw_bytes: &[u8]) -> bool {
+        self.admit_impl(shard_id, raw_bytes, None)
+    }
+
+    /// [`admit`](Self::admit) when the caller already parsed the bytes:
+    /// mode 1 reuses the given `Arc` instead of re-parsing, compressed
+    /// modes seed the decode memo with it.
+    pub fn admit_with(&self, shard_id: u32, raw_bytes: &[u8], parsed: &Arc<Shard>) -> bool {
+        self.admit_impl(shard_id, raw_bytes, Some(parsed))
+    }
+
+    fn admit_impl(&self, shard_id: u32, raw_bytes: &[u8], parsed: Option<&Arc<Shard>>) -> bool {
         if self.mode == CacheMode::M0None {
             return false;
         }
@@ -144,16 +200,22 @@ impl EdgeCache {
             return false;
         }
         let entry = if self.mode == CacheMode::M1Raw {
-            match Shard::from_bytes(raw_bytes) {
-                Ok(sh) => Entry::Parsed(Arc::new(sh)),
-                Err(_) => return false, // corrupt bytes never enter the cache
+            match parsed {
+                Some(sh) => Entry::Parsed(Arc::clone(sh)),
+                None => match Shard::from_bytes(raw_bytes) {
+                    Ok(sh) => Entry::Parsed(Arc::new(sh)),
+                    Err(_) => return false, // corrupt bytes never enter the cache
+                },
             }
         } else {
-            Entry::Compressed(self.mode.compress(raw_bytes))
+            Entry::Compressed {
+                bytes: self.mode.compress(raw_bytes),
+                memo: RwLock::new(None),
+            }
         };
         let sz = match &entry {
             Entry::Parsed(sh) => (sh.csr.size_bytes() + 32) as u64,
-            Entry::Compressed(c) => c.len() as u64,
+            Entry::Compressed { bytes, .. } => bytes.len() as u64,
         };
         // optimistic reservation
         let prev = self.used_bytes.fetch_add(sz, Ordering::Relaxed);
@@ -163,14 +225,41 @@ impl EdgeCache {
             self.stats.rejected.fetch_add(1, Ordering::Relaxed);
             return false;
         }
-        let mut map = self.entries.write().unwrap();
-        if map.contains_key(&shard_id) {
-            self.used_bytes.fetch_sub(sz, Ordering::Relaxed);
-            return true;
+        let entry = Arc::new(entry);
+        {
+            let mut map = self.entries.write().unwrap();
+            if map.contains_key(&shard_id) {
+                self.used_bytes.fetch_sub(sz, Ordering::Relaxed);
+                return true;
+            }
+            map.insert(shard_id, Arc::clone(&entry));
+            self.stats.admitted.fetch_add(1, Ordering::Relaxed);
         }
-        map.insert(shard_id, Arc::new(entry));
-        self.stats.admitted.fetch_add(1, Ordering::Relaxed);
+        if let (Entry::Compressed { memo, .. }, Some(sh)) = (&*entry, parsed) {
+            self.memoize(memo, sh);
+        }
         true
+    }
+
+    /// Pin `shard` as the entry's parsed memo while the budget lasts.
+    /// Beyond the budget the entry simply stays decode-on-hit: pinning
+    /// more would hold the decoded graph in RAM unaccounted, defeating
+    /// the compressed cache's memory bound.
+    fn memoize(&self, slot: &RwLock<Option<Arc<Shard>>>, shard: &Arc<Shard>) {
+        if self.memo_budget == 0 {
+            return;
+        }
+        let mut w = slot.write().unwrap();
+        if w.is_some() {
+            return; // raced: already pinned
+        }
+        let sz = (shard.csr.size_bytes() + 32) as u64;
+        let prev = self.memo_used.fetch_add(sz, Ordering::Relaxed);
+        if prev + sz <= self.memo_budget {
+            *w = Some(Arc::clone(shard));
+        } else {
+            self.memo_used.fetch_sub(sz, Ordering::Relaxed);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -188,6 +277,9 @@ impl EdgeCache {
             admitted: self.stats.admitted.load(Ordering::Relaxed),
             rejected: self.stats.rejected.load(Ordering::Relaxed),
             used_bytes: self.used_bytes.load(Ordering::Relaxed),
+            decodes: self.stats.decodes.load(Ordering::Relaxed),
+            decode_skips: self.stats.decode_skips.load(Ordering::Relaxed),
+            memo_bytes: self.memo_used.load(Ordering::Relaxed),
         }
     }
 }
@@ -276,5 +368,67 @@ mod tests {
         let snap = CacheSnapshot { hits: 3, misses: 1, ..Default::default() };
         assert!((snap.hit_ratio() - 0.75).abs() < 1e-9);
         assert_eq!(CacheSnapshot::default().hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn no_memo_budget_decodes_every_hit_and_pins_nothing() {
+        let cache = EdgeCache::new(CacheMode::M3Zlib1, 1 << 20);
+        let s = mk_shard(5, 500);
+        assert!(cache.admit(5, &s.to_bytes()));
+        assert_eq!(*cache.get(5).unwrap().unwrap(), s);
+        assert_eq!(*cache.get(5).unwrap().unwrap(), s);
+        let snap = cache.snapshot();
+        assert_eq!(snap.decodes, 2, "no budget: every hit re-decodes");
+        assert_eq!(snap.decode_skips, 0);
+        assert_eq!(snap.memo_bytes, 0, "no budget: nothing may be pinned");
+    }
+
+    #[test]
+    fn memo_budget_pins_decoded_shards() {
+        let mut cache = EdgeCache::new(CacheMode::M4Zlib3, 1 << 20);
+        cache.set_decode_memo_budget(1 << 20);
+        let s = mk_shard(6, 500);
+        assert!(cache.admit(6, &s.to_bytes()));
+        assert_eq!(*cache.get(6).unwrap().unwrap(), s);
+        assert_eq!(*cache.get(6).unwrap().unwrap(), s);
+        let snap = cache.snapshot();
+        assert_eq!(snap.decodes, 1, "budgeted memo must decode exactly once");
+        assert_eq!(snap.decode_skips, 1);
+        assert!(snap.memo_bytes > 0);
+    }
+
+    #[test]
+    fn exhausted_memo_budget_stops_pinning() {
+        let mut cache = EdgeCache::new(CacheMode::M3Zlib1, 1 << 20);
+        cache.set_decode_memo_budget(1); // smaller than any shard
+        let s = mk_shard(9, 500);
+        assert!(cache.admit(9, &s.to_bytes()));
+        cache.get(9).unwrap().unwrap();
+        cache.get(9).unwrap().unwrap();
+        let snap = cache.snapshot();
+        assert_eq!(snap.decodes, 2);
+        assert_eq!(snap.memo_bytes, 0, "over-budget pin must roll back");
+    }
+
+    #[test]
+    fn admit_with_seeds_the_memo() {
+        let mut cache = EdgeCache::new(CacheMode::M3Zlib1, 1 << 20);
+        cache.set_decode_memo_budget(1 << 20);
+        let s = mk_shard(7, 300);
+        let arc = Arc::new(s.clone());
+        assert!(cache.admit_with(7, &s.to_bytes(), &arc));
+        let got = cache.get(7).unwrap().unwrap();
+        assert!(Arc::ptr_eq(&got, &arc), "memoized hit must be the same Arc");
+        assert_eq!(cache.snapshot().decodes, 0);
+    }
+
+    #[test]
+    fn admit_with_reuses_parsed_for_mode1() {
+        let cache = EdgeCache::new(CacheMode::M1Raw, 1 << 20);
+        let s = mk_shard(8, 300);
+        let arc = Arc::new(s.clone());
+        assert!(cache.admit_with(8, &s.to_bytes(), &arc));
+        let got = cache.get(8).unwrap().unwrap();
+        assert!(Arc::ptr_eq(&got, &arc));
     }
 }

@@ -337,6 +337,7 @@ impl DistEngine {
                 shards_skipped: 0,
                 io: Default::default(),
                 cache: Default::default(),
+                ..Default::default()
             });
         }
         if active == 0 {

@@ -7,6 +7,23 @@
 //! disjoint `DstVertexArray` intervals with no locks or atomics
 //! ([`dst::SharedDst`]).
 //!
+//! Each iteration runs as a three-stage pipeline:
+//! 1. a **scheduler** ([`schedule::shard_worklist`]) computes the
+//!    active-shard worklist up front with one batched Bloom pass;
+//! 2. a bounded **prefetcher** ([`prefetch`]) stages upcoming shards —
+//!    read, decompress, parse — on dedicated I/O threads so (simulated)
+//!    disk time overlaps compute instead of serialising with it;
+//! 3. **compute workers** drain the ready queue and only ever touch
+//!    decoded shards; activated vertices land in a shared bitset
+//!    ([`schedule::ActiveBits`]) that the barrier scans into the next
+//!    sorted active set.
+//!
+//! Reported iteration time is `wall + (sim − overlapped)`: simulated disk
+//! seconds charged while the pipeline kept compute busy are overlap, not
+//! critical path.  Results are bit-identical to the sequential
+//! (`workers = 1`, `prefetch_depth = 0`) engine for PageRank/SSSP/CC —
+//! see `rust/tests/determinism.rs`.
+//!
 //! Two compute backends execute the shard update itself:
 //! - [`Backend::Native`] — hand-written rust loops (the fast path);
 //! - [`Backend::Pjrt`] — the AOT-compiled L2/L1 JAX+Pallas artifacts via
@@ -14,8 +31,10 @@
 //!   `--backend pjrt`).
 
 pub mod dst;
+pub mod prefetch;
+pub mod schedule;
 
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -32,6 +51,7 @@ use crate::storage::disk::Disk;
 use crate::storage::shard::Shard;
 use crate::storage::{GraphDir, Property, VertexInfo};
 use dst::SharedDst;
+use schedule::ActiveBits;
 
 /// Shard-update execution backend.
 #[derive(Clone)]
@@ -65,6 +85,19 @@ pub struct EngineConfig {
     /// Active-ratio threshold below which selective scheduling kicks in
     /// (paper: 0.001).
     pub active_threshold: f64,
+    /// Ready-queue depth of the shard prefetcher: how many decoded shards
+    /// the I/O threads may stage ahead of the compute workers.  0 turns
+    /// the pipeline off (shards load inline on the worker, the pre-PR
+    /// behaviour and the determinism baseline).
+    pub prefetch_depth: usize,
+    /// Dedicated I/O threads feeding the ready queue; 1–2 is enough to
+    /// keep the (simulated) disk continuously busy.
+    pub prefetch_threads: usize,
+    /// Byte budget for permanently memoizing parsed shards of compressed
+    /// cache entries (decode-once hot path).  0 disables the memo; the
+    /// prefetcher still decodes each scheduled shard only once per
+    /// iteration, on the I/O threads.
+    pub decode_memo_budget: u64,
     pub backend: Backend,
 }
 
@@ -81,6 +114,9 @@ impl Default for EngineConfig {
             cache_mode: None,
             selective: true,
             active_threshold: 0.001,
+            prefetch_depth: 4,
+            prefetch_threads: 2,
+            decode_memo_budget: 256 * 1024 * 1024,
             backend: Backend::Native,
         }
     }
@@ -117,10 +153,11 @@ impl VswEngine {
                 .with_context(|| format!("stat {}", p.display()))?
                 .len();
         }
-        let cache = match cfg.cache_mode {
+        let mut cache = match cfg.cache_mode {
             Some(mode) => EdgeCache::new(mode, cfg.cache_capacity),
             None => EdgeCache::auto(shard_bytes, cfg.cache_capacity),
         };
+        cache.set_decode_memo_budget(cfg.decode_memo_budget);
         Ok(VswEngine {
             dir: dir.clone(),
             disk: disk.clone(),
@@ -158,13 +195,16 @@ impl VswEngine {
     /// Structural memory account (Fig 11 / Table 3's memory column).
     pub fn memory_account(&self) -> MemoryAccount {
         let n = self.prop.num_vertices as u64;
+        let cache_snap = self.cache.snapshot();
         MemoryAccount {
             vertex_arrays: 2 * 4 * n,           // Src + Dst f32 arrays
             degree_arrays: 2 * 4 * n,           // in/out degree u32 arrays
             blooms: self.blooms.size_bytes() as u64,
-            cache: self.cache.snapshot().used_bytes,
-            // one in-flight shard per worker, sized by the largest shard
-            inflight_shards: (self.cfg.workers as u64)
+            cache: cache_snap.used_bytes,
+            decoded_pool: cache_snap.memo_bytes,
+            // one in-flight shard per worker plus the prefetcher's ready
+            // queue, sized by the average shard
+            inflight_shards: ((self.cfg.workers + self.cfg.prefetch_depth) as u64)
                 * (self.shard_bytes / self.prop.num_shards.max(1) as u64),
             other: 0,
         }
@@ -173,6 +213,27 @@ impl VswEngine {
     /// Run `app` for at most `max_iters` iterations (stops early when no
     /// vertex is active, Algorithm 2 line 2).
     pub fn run(&mut self, app: &dyn VertexProgram, max_iters: u32) -> Result<RunMetrics> {
+        Ok(self.run_impl(app, max_iters)?.1)
+    }
+
+    /// Final values convenience: run and return the vertex array.
+    pub fn run_to_values(
+        &mut self,
+        app: &dyn VertexProgram,
+        max_iters: u32,
+    ) -> Result<(Vec<f32>, RunMetrics)> {
+        self.run_impl(app, max_iters)
+    }
+
+    /// The single run loop behind [`run`](Self::run) and
+    /// [`run_to_values`](Self::run_to_values) (they used to be separate
+    /// copies that drifted — `run_to_values` silently dropped the sim-disk
+    /// accounting).
+    fn run_impl(
+        &mut self,
+        app: &dyn VertexProgram,
+        max_iters: u32,
+    ) -> Result<(Vec<f32>, RunMetrics)> {
         let n = self.prop.num_vertices;
         anyhow::ensure!(
             n < (1 << 24),
@@ -211,43 +272,14 @@ impl VswEngine {
         run.total_wall = run_start.elapsed();
         run.total_sim_disk_seconds =
             (self.disk.snapshot().sim_nanos - sim_start) as f64 / 1e9;
-        run.memory_bytes = self.memory_account().total();
-        Ok(run)
-    }
-
-    /// Final values convenience: run and return the vertex array.
-    pub fn run_to_values(
-        &mut self,
-        app: &dyn VertexProgram,
-        max_iters: u32,
-    ) -> Result<(Vec<f32>, RunMetrics)> {
-        let n = self.prop.num_vertices;
-        let (mut src, mut active) = app.init(n);
-        let inv_out_deg: Arc<Vec<f32>> = Arc::new(if app.uses_out_degrees() {
-            self.info
-                .out_degree
-                .iter()
-                .map(|&d| if d > 0 { 1.0 / d as f32 } else { 0.0 })
-                .collect()
-        } else {
-            Vec::new()
-        });
-        let mut run = RunMetrics::default();
-        let start = Instant::now();
-        for iter in 0..max_iters {
-            if active.is_empty() {
-                run.converged = true;
-                break;
-            }
-            let m = self.run_iteration(app, iter, &mut src, &mut active, &inv_out_deg)?;
-            run.iterations.push(m);
-        }
-        run.total_wall = start.elapsed();
+        run.total_overlapped_sim_seconds =
+            run.iterations.iter().map(|m| m.overlapped_sim_seconds).sum();
         run.memory_bytes = self.memory_account().total();
         Ok((src, run))
     }
 
-    /// One iteration of Algorithm 2: parallel shard sweep + barrier swap.
+    /// One iteration of Algorithm 2 as a schedule → prefetch → compute
+    /// pipeline with a barrier swap at the end.
     fn run_iteration(
         &self,
         app: &dyn VertexProgram,
@@ -267,6 +299,10 @@ impl VswEngine {
         let cache_before = self.cache.snapshot();
         let t0 = Instant::now();
 
+        // stage 1: the scheduler decides the whole shard worklist up front
+        let (worklist, skipped) =
+            schedule::shard_worklist(&self.blooms, num_shards, active, selective_on);
+
         // §Perf: for PageRank, fold src·inv_out_deg once per iteration
         // (|V| multiplies) instead of once per edge (|E| ≫ |V| gathers).
         let contrib: Arc<Vec<f32>> = Arc::new(match app.compute() {
@@ -279,12 +315,12 @@ impl VswEngine {
         });
 
         let dst = SharedDst::new(src.clone());
-        let next_shard = AtomicUsize::new(0);
+        let bits = ActiveBits::new(n);
+        let next_fetch = AtomicUsize::new(0);
         let processed = AtomicU32::new(0);
-        let skipped = AtomicU32::new(0);
-        let changed: Mutex<Vec<VertexId>> = Mutex::new(Vec::new());
         let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-        let changed_count = AtomicU64::new(0);
+        let abort = AtomicBool::new(false);
+        let counters = prefetch::PipelineCounters::default();
 
         let workers = match &self.cfg.backend {
             // PJRT executions serialise on the executable lock; extra
@@ -292,58 +328,118 @@ impl VswEngine {
             Backend::Pjrt(_) => 1,
             Backend::Native => self.cfg.workers.max(1),
         };
+        let pipelined = self.cfg.prefetch_depth > 0 && self.cfg.prefetch_threads > 0;
 
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                let dst = &dst;
-                let next_shard = &next_shard;
-                let processed = &processed;
-                let skipped = &skipped;
-                let changed = &changed;
-                let first_err = &first_err;
-                let changed_count = &changed_count;
-                let src: &[f32] = src;
-                let active: &[VertexId] = active;
-                let inv = Arc::clone(inv_out_deg);
-                let contrib = Arc::clone(&contrib);
-                scope.spawn(move || {
-                    let mut local_changed: Vec<VertexId> = Vec::new();
-                    loop {
-                        let s = next_shard.fetch_add(1, Ordering::Relaxed);
-                        if s >= num_shards {
-                            break;
-                        }
-                        let (a, b) = self.prop.intervals[s];
-                        if selective_on
-                            && !self.blooms.filters[s].contains_any(active)
-                        {
-                            // inactive shard: dst keeps src (SharedDst was
-                            // initialised from src), no disk, no compute.
-                            skipped.fetch_add(1, Ordering::Relaxed);
-                            continue;
-                        }
-                        let res = self.process_shard(
-                            app,
-                            s as u32,
-                            (a, b),
-                            src,
-                            &inv,
-                            &contrib,
-                            dst,
-                            &mut local_changed,
-                        );
-                        if let Err(e) = res {
-                            let mut fe = first_err.lock().unwrap();
-                            if fe.is_none() {
-                                *fe = Some(e);
-                            }
-                            break;
-                        }
-                        processed.fetch_add(1, Ordering::Relaxed);
+        // shared per-shard worker body (both acquisition modes): execute
+        // the shard or route its error to the barrier.  One copy, so the
+        // pipelined path can never drift from the sequential reference —
+        // the same hazard the run/run_to_values dedup fixes.
+        let src_view: &[f32] = src;
+        let inv_view: &[f32] = inv_out_deg;
+        let contrib_view: &[f32] = &contrib;
+        let dst_ref = &dst;
+        let consume = |marker: &mut schedule::RangeMarker<'_>,
+                       id: u32,
+                       res: Result<Arc<Shard>>| {
+            let outcome = match res {
+                Ok(shard) => self.process_shard(
+                    app,
+                    id,
+                    &shard,
+                    src_view,
+                    inv_view,
+                    contrib_view,
+                    dst_ref,
+                    marker,
+                ),
+                Err(e) => Err(e),
+            };
+            match outcome {
+                Ok(()) => {
+                    processed.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    let mut fe = first_err.lock().unwrap();
+                    if fe.is_none() {
+                        *fe = Some(e);
                     }
-                    changed_count.fetch_add(local_changed.len() as u64, Ordering::Relaxed);
-                    changed.lock().unwrap().append(&mut local_changed);
-                });
+                    abort.store(true, Ordering::Relaxed);
+                }
+            }
+        };
+        let consume = &consume;
+
+        // stages 2+3: I/O threads stage shards into the bounded ready
+        // queue; compute workers drain it.  Without prefetching, workers
+        // load inline (the sequential reference path).
+        let (queue_opt, tx_opt) = if pipelined {
+            let (q, tx) = prefetch::ReadyQueue::with_sender(self.cfg.prefetch_depth);
+            (Some(q), Some(tx))
+        } else {
+            (None, None)
+        };
+        std::thread::scope(|scope| {
+            if let (Some(queue), Some(tx)) = (&queue_opt, tx_opt) {
+                for _ in 0..self.cfg.prefetch_threads.max(1) {
+                    let tx = tx.clone();
+                    let worklist = &worklist;
+                    let next_fetch = &next_fetch;
+                    let abort = &abort;
+                    let counters = &counters;
+                    scope.spawn(move || {
+                        prefetch::io_thread(
+                            |id| self.load_shard(id),
+                            worklist,
+                            next_fetch,
+                            abort,
+                            tx,
+                            counters,
+                        );
+                    });
+                }
+                drop(tx); // queue closes when the last I/O thread finishes
+                for _ in 0..workers {
+                    let counters = &counters;
+                    let abort = &abort;
+                    let bits = &bits;
+                    scope.spawn(move || {
+                        let _guard = prefetch::AbortOnPanic(abort);
+                        let mut marker = bits.marker();
+                        while let Some((id, res)) = queue.next(counters) {
+                            if abort.load(Ordering::Relaxed) {
+                                // keep draining so I/O threads never block
+                                // forever on a full queue after a failure
+                                continue;
+                            }
+                            consume(&mut marker, id, res);
+                        }
+                        marker.flush();
+                    });
+                }
+            } else {
+                for _ in 0..workers {
+                    let worklist = &worklist;
+                    let next_fetch = &next_fetch;
+                    let abort = &abort;
+                    let bits = &bits;
+                    scope.spawn(move || {
+                        let mut marker = bits.marker();
+                        loop {
+                            // an error recorded by any worker stops the
+                            // sweep (consume raised the abort flag)
+                            if abort.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            let i = next_fetch.fetch_add(1, Ordering::Relaxed);
+                            if i >= worklist.len() {
+                                break;
+                            }
+                            let id = worklist[i];
+                            consume(&mut marker, id, self.load_shard(id));
+                        }
+                        marker.flush();
+                    });
+                }
             }
         });
         if let Some(e) = first_err.into_inner().unwrap() {
@@ -351,21 +447,34 @@ impl VswEngine {
         }
 
         dst.release_all();
-        let new_src = dst.into_inner();
-        *src = new_src;
-        let mut new_active = changed.into_inner().unwrap();
-        new_active.sort_unstable();
-        *active = new_active;
+        *src = dst.into_inner();
+        *active = bits.to_sorted_vec();
 
+        let wall = t0.elapsed();
         let io_after = self.disk.snapshot();
+        let sim_disk_seconds = (io_after.sim_nanos - io_before.sim_nanos) as f64 / 1e9;
+        // Pipeline overlap model: with dedicated I/O threads the (simulated)
+        // device streams concurrently with compute, so the iteration costs
+        // max(wall, sim) instead of wall + sim — i.e. min(wall, sim) of the
+        // charged device time is hidden.  Without prefetching every charge
+        // sits on the critical path, exactly the pre-pipeline accounting.
+        let overlapped_sim_seconds = if pipelined {
+            sim_disk_seconds.min(wall.as_secs_f64())
+        } else {
+            0.0
+        };
         Ok(IterationMetrics {
             iteration: iter,
-            wall: t0.elapsed(),
-            sim_disk_seconds: (io_after.sim_nanos - io_before.sim_nanos) as f64 / 1e9,
+            wall,
+            sim_disk_seconds,
+            overlapped_sim_seconds,
             active_vertices: active.len() as u64,
             active_ratio: active.len() as f64 / n.max(1) as f64,
             shards_processed: processed.load(Ordering::Relaxed),
-            shards_skipped: skipped.load(Ordering::Relaxed),
+            shards_skipped: skipped,
+            shards_prefetched: counters.prefetched.load(Ordering::Relaxed),
+            ready_hits: counters.ready_hits.load(Ordering::Relaxed),
+            ready_misses: counters.ready_misses.load(Ordering::Relaxed),
             io: io_after.since(&io_before),
             cache: {
                 let c = self.cache.snapshot();
@@ -375,28 +484,30 @@ impl VswEngine {
                     admitted: c.admitted - cache_before.admitted,
                     rejected: c.rejected - cache_before.rejected,
                     used_bytes: c.used_bytes,
+                    decodes: c.decodes - cache_before.decodes,
+                    decode_skips: c.decode_skips - cache_before.decode_skips,
+                    memo_bytes: c.memo_bytes,
                 }
             },
         })
     }
 
-    /// Load (cache or disk) and execute one shard, writing its interval of
-    /// dst and recording activated vertices.
+    /// Execute one decoded shard: write its interval of dst and mark
+    /// activated vertices in the shared bitset.
     #[allow(clippy::too_many_arguments)]
     fn process_shard(
         &self,
         app: &dyn VertexProgram,
         shard_id: u32,
-        interval: (VertexId, VertexId),
+        shard: &Shard,
         src: &[f32],
         inv_out_deg: &[f32],
         contrib: &[f32],
         dst: &SharedDst,
-        changed: &mut Vec<VertexId>,
+        marker: &mut schedule::RangeMarker<'_>,
     ) -> Result<()> {
-        let shard = self.load_shard(shard_id)?;
-        debug_assert_eq!(shard.start_vertex, interval.0);
-        let (a, b) = interval;
+        let (a, b) = self.prop.intervals[shard_id as usize];
+        debug_assert_eq!(shard.start_vertex, a);
         let rows = (b - a) as usize;
         // SAFETY: shard intervals are disjoint (prep::compute_intervals
         // invariant, verified by its tests + the debug registry).
@@ -404,31 +515,36 @@ impl VswEngine {
         match &self.cfg.backend {
             Backend::Native => match app.compute() {
                 ShardCompute::PageRankSum { damping } => {
-                    native_update_pagerank_contrib(&shard, contrib, damping, out);
+                    native_update_pagerank_contrib(shard, contrib, damping, out);
                 }
-                kind => native_update(kind, &shard, src, inv_out_deg, out),
+                kind => native_update(kind, shard, src, inv_out_deg, out),
             },
             Backend::Pjrt(exe) => {
-                pjrt_update(app.compute(), exe, &shard, src, inv_out_deg, out)?;
+                pjrt_update(app.compute(), exe, shard, src, inv_out_deg, out)?;
             }
         }
         for r in 0..rows {
             let v = a + r as u32;
             if app.is_update(src[v as usize], out[r]) {
-                changed.push(v);
+                marker.mark(v);
             }
         }
         Ok(())
     }
 
-    fn load_shard(&self, shard_id: u32) -> Result<std::sync::Arc<Shard>> {
+    /// Load one shard: cache hit (decode-once), else disk read + parse +
+    /// cache admission.  Runs on the prefetcher's I/O threads when the
+    /// pipeline is on, inline on workers otherwise.
+    fn load_shard(&self, shard_id: u32) -> Result<Arc<Shard>> {
         if let Some(s) = self.cache.get(shard_id)? {
             return Ok(s);
         }
         let bytes = self.disk.read_file(&self.dir.shard_path(shard_id))?;
-        let shard = Shard::from_bytes(&bytes)?;
-        self.cache.admit(shard_id, &bytes);
-        Ok(std::sync::Arc::new(shard))
+        let shard = Arc::new(Shard::from_bytes(&bytes)?);
+        // hand the parsed shard over so mode 1 doesn't re-parse and
+        // compressed modes seed their decode memo
+        self.cache.admit_with(shard_id, &bytes, &shard);
+        Ok(shard)
     }
 }
 
@@ -616,6 +732,7 @@ mod tests {
     use crate::graph::rmat::{rmat, RmatParams};
     use crate::graph::{Csr, Edge, EdgeList};
     use crate::prep::{preprocess_into, PrepConfig};
+    use crate::storage::disk::DiskProfile;
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("graphmp_engine_{name}"))
@@ -793,10 +910,143 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_equals_inline_loading() {
+        let g = rmat(9, 6_000, 67, RmatParams::default());
+        let seq = EngineConfig { workers: 1, prefetch_depth: 0, ..Default::default() };
+        let pipe = EngineConfig {
+            workers: 4,
+            prefetch_depth: 3,
+            prefetch_threads: 2,
+            ..Default::default()
+        };
+        let (mut e1, _) = open_engine(&g, "pipe_seq", seq, false);
+        let (mut e2, _) = open_engine(&g, "pipe_on", pipe, false);
+        let (v1, _) = e1.run_to_values(&PageRank::new(), 6).unwrap();
+        let (v2, _) = e2.run_to_values(&PageRank::new(), 6).unwrap();
+        assert_eq!(v1, v2, "prefetch pipeline changed results");
+    }
+
+    #[test]
+    fn pipeline_counters_are_consistent() {
+        let g = rmat(9, 5_000, 71, RmatParams::default());
+        let cfg = EngineConfig {
+            selective: false,
+            cache_mode: Some(CacheMode::M0None),
+            ..Default::default()
+        };
+        let (mut e, _) = open_engine(&g, "pipe_ctr", cfg, false);
+        let run = e.run(&PageRank::new(), 3).unwrap();
+        for m in &run.iterations {
+            assert!(m.shards_processed > 0);
+            assert_eq!(m.shards_prefetched, m.shards_processed);
+            assert_eq!(m.ready_hits + m.ready_misses, m.shards_processed);
+            assert_eq!(m.shards_skipped, 0);
+        }
+    }
+
+    #[test]
+    fn overlap_accounting_matches_prefetch_mode() {
+        let g = rmat(9, 5_000, 73, RmatParams::default());
+        let mk = |prefetch_depth: usize, name: &str| {
+            let root = tmp(name);
+            let _ = std::fs::remove_dir_all(&root);
+            let disk = Disk::new(DiskProfile::hdd_raid5());
+            let prep = PrepConfig { edges_per_shard: 2048, weighted: false, ..Default::default() };
+            let (dir, _) = preprocess_into(&g, &root, &disk, prep).unwrap();
+            let cfg = EngineConfig {
+                cache_mode: Some(CacheMode::M0None),
+                selective: false,
+                prefetch_depth,
+                ..Default::default()
+            };
+            VswEngine::open(&dir, &disk, cfg).unwrap()
+        };
+        let run_on = mk(4, "ov_on").run(&PageRank::new(), 2).unwrap();
+        for m in &run_on.iterations {
+            assert!(m.sim_disk_seconds > 0.0, "HDD profile must charge sim time");
+            assert!(m.overlapped_sim_seconds > 0.0, "pipeline must overlap sim disk");
+            assert!(m.overlapped_sim_seconds <= m.sim_disk_seconds + 1e-12);
+            assert!(m.elapsed_seconds() >= m.wall.as_secs_f64() - 1e-12);
+        }
+        assert!(run_on.total_overlapped_sim_seconds > 0.0);
+        let run_off = mk(0, "ov_off").run(&PageRank::new(), 2).unwrap();
+        for m in &run_off.iterations {
+            assert_eq!(m.overlapped_sim_seconds, 0.0, "no overlap without prefetch");
+            assert_eq!(m.shards_prefetched, 0);
+        }
+    }
+
+    #[test]
+    fn compressed_hits_decode_at_most_once_per_iteration() {
+        let g = rmat(9, 5_000, 79, RmatParams::default());
+        // generous memo budget: steady-state hits must not decode at all
+        let cfg = EngineConfig {
+            cache_mode: Some(CacheMode::M3Zlib1),
+            cache_capacity: 64 << 20,
+            selective: false,
+            ..Default::default()
+        };
+        let (mut e, _) = open_engine(&g, "decode_once", cfg, false);
+        let run = e.run(&PageRank::new(), 4).unwrap();
+        for m in &run.iterations {
+            assert!(
+                m.cache.decodes <= m.shards_processed as u64,
+                "iter {}: {} decodes for {} shards",
+                m.iteration,
+                m.cache.decodes,
+                m.shards_processed
+            );
+        }
+        let steady: u64 = run.iterations[1..].iter().map(|m| m.cache.decodes).sum();
+        assert_eq!(steady, 0, "memo budget must eliminate steady-state re-parses");
+        let skips: u64 = run.iterations[1..].iter().map(|m| m.cache.decode_skips).sum();
+        assert!(skips > 0);
+
+        // without a memo budget the decode count is still bounded by one
+        // per scheduled shard per iteration (prefetcher decodes, worker
+        // reuses)
+        let cfg0 = EngineConfig {
+            cache_mode: Some(CacheMode::M3Zlib1),
+            cache_capacity: 64 << 20,
+            selective: false,
+            decode_memo_budget: 0,
+            ..Default::default()
+        };
+        let (mut e0, _) = open_engine(&g, "decode_once0", cfg0, false);
+        let run0 = e0.run(&PageRank::new(), 4).unwrap();
+        for m in &run0.iterations[1..] {
+            assert_eq!(m.cache.decodes, m.shards_processed as u64);
+        }
+    }
+
+    #[test]
     fn rejects_weighted_app_on_unweighted_dir() {
         let g = rmat(8, 1_000, 61, RmatParams::default());
         let (mut e, _) = open_engine(&g, "wreject", EngineConfig::default(), false);
         assert!(e.run(&Sssp::new(0), 5).is_err());
+    }
+
+    #[test]
+    fn run_and_run_to_values_report_identical_metrics() {
+        let g = rmat(9, 4_000, 83, RmatParams::default());
+        let (mut e1, _) = open_engine(&g, "dedup_run", EngineConfig::default(), false);
+        let (mut e2, _) = open_engine(&g, "dedup_rtv", EngineConfig::default(), false);
+        let r1 = e1.run(&PageRank::new(), 4).unwrap();
+        let (_, r2) = e2.run_to_values(&PageRank::new(), 4).unwrap();
+        assert_eq!(r1.iterations.len(), r2.iterations.len());
+        // the old run_to_values dropped sim accounting entirely; both
+        // paths now share run_impl
+        assert_eq!(
+            r1.iterations
+                .iter()
+                .map(|m| m.shards_processed)
+                .collect::<Vec<_>>(),
+            r2.iterations
+                .iter()
+                .map(|m| m.shards_processed)
+                .collect::<Vec<_>>()
+        );
+        assert!((r1.total_sim_disk_seconds - r2.total_sim_disk_seconds).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,282 @@
+//! Bounded shard prefetcher: the pipeline half of the VSW engine.
+//!
+//! Dedicated I/O threads walk the iteration's scheduled worklist, read +
+//! decompress + parse each shard (cache or disk) and push the decoded
+//! `Arc<Shard>` into a small bounded ready queue ahead of the compute
+//! workers.  Simulated disk time thereby overlaps compute instead of
+//! serialising with it (NXgraph-style streaming, PAPERS.md), and workers
+//! never decode on the critical path.
+//!
+//! The queue is a `sync_channel`: its depth bounds how many decoded
+//! shards can be in flight, which bounds the pipeline's extra memory to
+//! `depth + workers` shards.  The producer side never blocks
+//! indefinitely — [`io_thread`] polls the abort flag while the queue is
+//! full, so a dead consumer (worker error *or panic*, flagged by
+//! [`AbortOnPanic`]) lets `thread::scope` join and propagate instead of
+//! hanging.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, Mutex, TryLockError};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::storage::shard::Shard;
+
+/// One fetched shard travelling from an I/O thread to a compute worker:
+/// the scheduled shard id plus the load result (errors ride the queue so
+/// the first failure reaches the iteration barrier).
+pub type Fetched = (u32, Result<Arc<Shard>>);
+
+/// Shared counters of one iteration's pipeline (atomics: touched from
+/// both I/O and compute threads).
+#[derive(Debug, Default)]
+pub struct PipelineCounters {
+    /// Shards fetched (cache or disk) by the I/O threads.
+    pub prefetched: AtomicU32,
+    /// Worker requests served without waiting (item staged, queue lock
+    /// uncontended).
+    pub ready_hits: AtomicU32,
+    /// Worker requests that waited — on the prefetcher directly, or on a
+    /// sibling worker that was itself parked waiting for the prefetcher.
+    pub ready_misses: AtomicU32,
+}
+
+/// Sets the abort flag when dropped during a panic.  Compute workers hold
+/// one so an unwinding worker releases the I/O threads (which poll the
+/// flag) — otherwise `thread::scope` would wait forever on producers
+/// blocked against a queue nobody drains.
+pub struct AbortOnPanic<'a>(pub &'a AtomicBool);
+
+impl Drop for AbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The consumer side of the ready queue, shareable across workers.
+pub struct ReadyQueue {
+    rx: Mutex<Receiver<Fetched>>,
+}
+
+impl ReadyQueue {
+    /// Build a queue of the given depth (≥ 1) and return it with the
+    /// producer handle; clone the sender once per I/O thread and drop the
+    /// original so the queue closes when the last thread finishes.
+    pub fn with_sender(depth: usize) -> (ReadyQueue, SyncSender<Fetched>) {
+        let (tx, rx) = sync_channel(depth.max(1));
+        (ReadyQueue { rx: Mutex::new(rx) }, tx)
+    }
+
+    /// Next fetched shard for a compute worker, recording whether it was
+    /// already staged (ready hit) or the worker had to wait (miss).
+    /// Contention on the queue lock counts as a miss too: it means a
+    /// sibling worker is parked inside `recv`, i.e. the prefetcher is
+    /// behind for everyone.  `None` once the queue is closed and drained.
+    pub fn next(&self, counters: &PipelineCounters) -> Option<Fetched> {
+        let (rx, waited) = match self.rx.try_lock() {
+            Ok(guard) => (guard, false),
+            Err(TryLockError::WouldBlock) => (self.rx.lock().unwrap(), true),
+            Err(TryLockError::Poisoned(e)) => (e.into_inner(), true),
+        };
+        match rx.try_recv() {
+            Ok(item) => {
+                if waited {
+                    counters.ready_misses.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    counters.ready_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(item)
+            }
+            Err(TryRecvError::Empty) => match rx.recv() {
+                Ok(item) => {
+                    counters.ready_misses.fetch_add(1, Ordering::Relaxed);
+                    Some(item)
+                }
+                Err(_) => None,
+            },
+            Err(TryRecvError::Disconnected) => None,
+        }
+    }
+}
+
+/// Fetch loop run by each dedicated I/O thread: claim the next worklist
+/// index, load the shard, push it to the ready queue.  Stops at worklist
+/// end, on the abort signal (a shard failed or a worker died), or when
+/// the queue closes (all consumers gone).
+pub fn io_thread<L>(
+    load: L,
+    worklist: &[u32],
+    next: &AtomicUsize,
+    abort: &AtomicBool,
+    tx: SyncSender<Fetched>,
+    counters: &PipelineCounters,
+) where
+    L: Fn(u32) -> Result<Arc<Shard>>,
+{
+    loop {
+        if abort.load(Ordering::Relaxed) {
+            return;
+        }
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= worklist.len() {
+            return;
+        }
+        let id = worklist[i];
+        let res = load(id);
+        counters.prefetched.fetch_add(1, Ordering::Relaxed);
+        // bounded-blocking send: poll the abort flag while the queue is
+        // full so a vanished consumer can't strand this thread in `send`
+        let mut item = (id, res);
+        loop {
+            match tx.try_send(item) {
+                Ok(()) => break,
+                Err(TrySendError::Full(back)) => {
+                    if abort.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    item = back;
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+                Err(TrySendError::Disconnected(_)) => return,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Csr, Edge};
+
+    fn mk_shard(id: u32) -> Arc<Shard> {
+        let edges = vec![Edge::new(0, 5), Edge::new(1, 6)];
+        Arc::new(Shard { id, start_vertex: 5, csr: Csr::from_edges(&edges, 5, 2, false) })
+    }
+
+    #[test]
+    fn io_threads_deliver_every_scheduled_shard_once() {
+        let worklist: Vec<u32> = (0..37).collect();
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let counters = PipelineCounters::default();
+        let (queue, tx) = ReadyQueue::with_sender(4);
+        let mut got = Vec::new();
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                let tx = tx.clone();
+                let (worklist, next, abort, counters) = (&worklist, &next, &abort, &counters);
+                scope.spawn(move || {
+                    io_thread(|id| Ok(mk_shard(id)), worklist, next, abort, tx, counters);
+                });
+            }
+            drop(tx);
+            while let Some((id, res)) = queue.next(&counters) {
+                assert_eq!(res.unwrap().id, id);
+                got.push(id);
+            }
+        });
+        got.sort_unstable();
+        assert_eq!(got, worklist);
+        assert_eq!(counters.prefetched.load(Ordering::Relaxed), 37);
+        let hits = counters.ready_hits.load(Ordering::Relaxed);
+        let misses = counters.ready_misses.load(Ordering::Relaxed);
+        assert_eq!(hits + misses, 37, "every delivery counts exactly once");
+    }
+
+    #[test]
+    fn errors_ride_the_queue() {
+        let worklist = vec![0u32, 1, 2];
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let counters = PipelineCounters::default();
+        let (queue, tx) = ReadyQueue::with_sender(2);
+        std::thread::scope(|scope| {
+            let (worklist, next, abort, counters) = (&worklist, &next, &abort, &counters);
+            scope.spawn(move || {
+                io_thread(
+                    |id| {
+                        if id == 1 {
+                            anyhow::bail!("boom on shard {id}")
+                        } else {
+                            Ok(mk_shard(id))
+                        }
+                    },
+                    worklist,
+                    next,
+                    abort,
+                    tx,
+                    counters,
+                );
+            });
+            let mut errs = 0;
+            let mut oks = 0;
+            while let Some((_, res)) = queue.next(counters) {
+                match res {
+                    Ok(_) => oks += 1,
+                    Err(e) => {
+                        assert!(e.to_string().contains("boom"));
+                        errs += 1;
+                    }
+                }
+            }
+            assert_eq!((oks, errs), (2, 1));
+        });
+    }
+
+    #[test]
+    fn abort_stops_fetching() {
+        let worklist: Vec<u32> = (0..1000).collect();
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(true); // pre-aborted
+        let counters = PipelineCounters::default();
+        let (_queue, tx) = ReadyQueue::with_sender(1);
+        io_thread(|id| Ok(mk_shard(id)), &worklist, &next, &abort, tx, &counters);
+        assert_eq!(counters.prefetched.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn abort_unblocks_a_full_queue() {
+        // a producer stuck against a full queue with no consumer must
+        // exit once abort is raised — this is what keeps a panicking
+        // worker from deadlocking thread::scope
+        let worklist: Vec<u32> = (0..100).collect();
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let counters = PipelineCounters::default();
+        let (queue, tx) = ReadyQueue::with_sender(1);
+        std::thread::scope(|scope| {
+            let (worklist, next, abort, counters) = (&worklist, &next, &abort, &counters);
+            scope.spawn(move || {
+                io_thread(|id| Ok(mk_shard(id)), worklist, next, abort, tx, counters);
+            });
+            // let it fill the depth-1 queue, then abort without consuming
+            std::thread::sleep(Duration::from_millis(20));
+            abort.store(true, Ordering::Relaxed);
+            // scope joins here: hangs if the producer ignores abort
+        });
+        assert!(counters.prefetched.load(Ordering::Relaxed) >= 1);
+        drop(queue);
+    }
+
+    #[test]
+    fn abort_on_panic_fires_only_during_unwind() {
+        let flag = AtomicBool::new(false);
+        {
+            let _g = AbortOnPanic(&flag);
+        }
+        assert!(!flag.load(Ordering::Relaxed), "normal drop must not abort");
+        let flag2 = std::sync::Arc::new(AtomicBool::new(false));
+        let f2 = std::sync::Arc::clone(&flag2);
+        let res = std::thread::spawn(move || {
+            let _g = AbortOnPanic(&f2);
+            panic!("boom");
+        })
+        .join();
+        assert!(res.is_err());
+        assert!(flag2.load(Ordering::Relaxed), "panic must raise the flag");
+    }
+}

@@ -1,0 +1,192 @@
+//! Per-iteration shard scheduling and the bitset-backed active set.
+//!
+//! Selective scheduling (paper §2.4.1) used to run as inline per-worker
+//! Bloom probes on the critical path; the scheduler instead computes the
+//! iteration's active-shard worklist up front with one batched pass
+//! ([`BloomSet::probe_active`]), so the prefetcher knows exactly which
+//! shards to stage and workers never touch a filter.
+//!
+//! The active set itself is rebuilt through [`ActiveBits`]: workers mark
+//! activated vertices into a shared atomic bitset (word-buffered, one
+//! atomic OR per 64 contiguous rows) and the barrier scans it into a
+//! sorted `Vec` — replacing the old `Mutex<Vec<VertexId>>` append plus
+//! global sort, and making the rebuild deterministic in worker count.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::bloom::BloomSet;
+use crate::graph::VertexId;
+
+/// Compute the iteration's shard worklist (ascending shard ids) and the
+/// number of shards skipped.  With selective scheduling off every shard
+/// is scheduled; on, a shard is scheduled iff its Bloom filter (possibly)
+/// contains an active vertex — identical semantics to the old inline
+/// `contains_any` probes, decided once instead of per worker.
+pub fn shard_worklist(
+    blooms: &BloomSet,
+    num_shards: usize,
+    active: &[VertexId],
+    selective_on: bool,
+) -> (Vec<u32>, u32) {
+    if !selective_on {
+        return ((0..num_shards as u32).collect(), 0);
+    }
+    let hot = blooms.probe_active(active);
+    let worklist: Vec<u32> = (0..num_shards as u32)
+        .filter(|&s| hot[s as usize])
+        .collect();
+    let skipped = num_shards as u32 - worklist.len() as u32;
+    (worklist, skipped)
+}
+
+/// A fixed-size atomic bitset over the vertex space.  Workers mark
+/// activated vertices concurrently (shard intervals are disjoint, so
+/// contention is limited to boundary words); the iteration barrier scans
+/// it into a sorted, duplicate-free vertex list.
+pub struct ActiveBits {
+    words: Vec<AtomicU64>,
+}
+
+impl ActiveBits {
+    pub fn new(num_vertices: usize) -> Self {
+        ActiveBits {
+            words: (0..num_vertices.div_ceil(64)).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Mark a single vertex active.
+    pub fn mark(&self, v: VertexId) {
+        self.words[(v / 64) as usize].fetch_or(1 << (v % 64), Ordering::Relaxed);
+    }
+
+    /// Word-buffered marker: one atomic OR per touched word instead of one
+    /// per activation — the fast path for a worker walking a shard's
+    /// contiguous ascending rows.
+    pub fn marker(&self) -> RangeMarker<'_> {
+        RangeMarker { bits: self, word: usize::MAX, acc: 0 }
+    }
+
+    /// Scan into the sorted active-vertex list (ascending, no duplicates).
+    pub fn to_sorted_vec(&self) -> Vec<VertexId> {
+        let mut out = Vec::new();
+        for (wi, w) in self.words.iter().enumerate() {
+            let mut bits = w.load(Ordering::Relaxed);
+            while bits != 0 {
+                let b = bits.trailing_zeros();
+                out.push((wi as u32) * 64 + b);
+                bits &= bits - 1;
+            }
+        }
+        out
+    }
+}
+
+/// See [`ActiveBits::marker`].  Call [`flush`](Self::flush) when done.
+pub struct RangeMarker<'a> {
+    bits: &'a ActiveBits,
+    word: usize,
+    acc: u64,
+}
+
+impl RangeMarker<'_> {
+    pub fn mark(&mut self, v: VertexId) {
+        let w = (v / 64) as usize;
+        if w != self.word {
+            self.flush();
+            self.word = w;
+        }
+        self.acc |= 1 << (v % 64);
+    }
+
+    /// Publish the buffered word (no-op when nothing is pending).
+    pub fn flush(&mut self) {
+        if self.word != usize::MAX && self.acc != 0 {
+            self.bits.words[self.word].fetch_or(self.acc, Ordering::Relaxed);
+        }
+        self.word = usize::MAX;
+        self.acc = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bloom::BloomFilter;
+
+    fn bloom_set() -> BloomSet {
+        let mut filters = Vec::new();
+        for s in 0..3u32 {
+            let mut f = BloomFilter::with_rate(32, 0.0001);
+            for v in 0..16u32 {
+                f.insert(s * 100 + v);
+            }
+            filters.push(f);
+        }
+        BloomSet { filters }
+    }
+
+    #[test]
+    fn worklist_all_shards_when_not_selective() {
+        let (wl, skipped) = shard_worklist(&bloom_set(), 3, &[], false);
+        assert_eq!(wl, vec![0, 1, 2]);
+        assert_eq!(skipped, 0);
+    }
+
+    #[test]
+    fn worklist_matches_per_shard_probes() {
+        let set = bloom_set();
+        for active in [vec![], vec![5u32], vec![105, 205], vec![999]] {
+            let (wl, skipped) = shard_worklist(&set, 3, &active, true);
+            let expect: Vec<u32> = (0..3u32)
+                .filter(|&s| set.filters[s as usize].contains_any(&active))
+                .collect();
+            assert_eq!(wl, expect, "active {active:?}");
+            assert_eq!(skipped as usize, 3 - expect.len());
+        }
+    }
+
+    #[test]
+    fn active_bits_sorted_and_deduplicated() {
+        let bits = ActiveBits::new(300);
+        for v in [299u32, 0, 64, 63, 65, 0, 130] {
+            bits.mark(v);
+        }
+        assert_eq!(bits.to_sorted_vec(), vec![0, 63, 64, 65, 130, 299]);
+    }
+
+    #[test]
+    fn range_marker_flushes_word_boundaries() {
+        let bits = ActiveBits::new(256);
+        let mut m = bits.marker();
+        for v in [10u32, 11, 63, 64, 65, 200] {
+            m.mark(v);
+        }
+        m.flush();
+        assert_eq!(bits.to_sorted_vec(), vec![10, 11, 63, 64, 65, 200]);
+        // flush with nothing pending is a no-op
+        let mut m2 = bits.marker();
+        m2.flush();
+        assert_eq!(bits.to_sorted_vec().len(), 6);
+    }
+
+    #[test]
+    fn concurrent_marking_is_exact() {
+        let bits = ActiveBits::new(64 * 8);
+        std::thread::scope(|scope| {
+            for t in 0..4u32 {
+                let bits = &bits;
+                scope.spawn(move || {
+                    let mut m = bits.marker();
+                    // overlapping word ranges across threads
+                    for v in (t * 96)..(t * 96 + 96) {
+                        m.mark(v % 512);
+                    }
+                    m.flush();
+                });
+            }
+        });
+        let got = bits.to_sorted_vec();
+        assert_eq!(got.len(), 384); // 4 disjoint 96-wide ranges mod 512
+        assert!(got.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -61,7 +61,8 @@ USAGE:
   graphmp run        --dir <graphdir> --app pagerank|sssp|cc|bfs [--iters N]
                      [--source V] [--backend native|pjrt] [--artifacts DIR]
                      [--cache-mode cache-0..4] [--cache-mb N] [--no-selective]
-                     [--workers N] [--disk hdd|ssd|none]
+                     [--workers N] [--disk hdd|ssd|none] [--no-prefetch]
+                     [--prefetch-depth N] [--prefetch-threads N] [--memo-mb N]
   graphmp info       --dir <graphdir>
 
 datasets: twitter-sim uk2007-sim uk2014-sim eu2015-sim"
@@ -162,8 +163,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         other => anyhow::bail!("unknown backend {other}"),
     };
 
+    let defaults = EngineConfig::default();
     let cfg = EngineConfig {
-        workers: args.parse_opt_or("workers", EngineConfig::default().workers)?,
+        workers: args.parse_opt_or("workers", defaults.workers)?,
         cache_capacity: args.parse_opt_or("cache-mb", 256u64)? * 1024 * 1024,
         cache_mode: match args.opt("cache-mode") {
             Some(m) => Some(CacheMode::parse(m).with_context(|| format!("bad cache mode {m}"))?),
@@ -171,6 +173,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         },
         selective: !args.flag("no-selective"),
         active_threshold: args.parse_opt_or("active-threshold", 0.001f64)?,
+        prefetch_depth: if args.flag("no-prefetch") {
+            0
+        } else {
+            args.parse_opt_or("prefetch-depth", defaults.prefetch_depth)?
+        },
+        prefetch_threads: args.parse_opt_or("prefetch-threads", defaults.prefetch_threads)?,
+        decode_memo_budget: args
+            .parse_opt_or("memo-mb", defaults.decode_memo_budget / (1024 * 1024))?
+            * 1024
+            * 1024,
         backend,
     };
     let mut engine = VswEngine::open(&dir, &disk, cfg)?;
@@ -184,12 +196,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     let run = engine.run(app.as_ref(), iters)?;
     for m in &run.iterations {
         println!(
-            "iter {:>3}: {:>9.3}s  active={:<9} processed={:<4} skipped={:<4} read={}",
+            "iter {:>3}: {:>9.3}s  active={:<9} processed={:<4} skipped={:<4} overlap={:>6.3}s read={}",
             m.iteration,
             m.elapsed_seconds(),
             m.active_vertices,
             m.shards_processed,
             m.shards_skipped,
+            m.overlapped_sim_seconds,
             human_bytes(m.io.bytes_read),
         );
     }
@@ -200,6 +213,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         if run.converged { ", converged" } else { "" },
         human_bytes(run.memory_bytes),
     );
+    println!("{}", graphmp::benchutil::pipeline_summary(&run));
     Ok(())
 }
 

@@ -18,19 +18,40 @@ pub struct IterationMetrics {
     pub wall: Duration,
     /// Simulated disk seconds charged during the iteration.
     pub sim_disk_seconds: f64,
+    /// The share of `sim_disk_seconds` hidden behind compute by the shard
+    /// pipeline (dedicated I/O threads); 0 when prefetching is off.
+    pub overlapped_sim_seconds: f64,
     pub active_vertices: u64,
     pub active_ratio: f64,
     pub shards_processed: u32,
     pub shards_skipped: u32,
+    /// Shards fetched ahead by the pipeline's I/O threads.
+    pub shards_prefetched: u32,
+    /// Worker shard requests served without blocking on the ready queue.
+    pub ready_hits: u32,
+    /// Worker shard requests that had to wait for the prefetcher.
+    pub ready_misses: u32,
     pub io: IoSnapshot,
     pub cache: CacheSnapshot,
 }
 
 impl IterationMetrics {
-    /// The reported per-iteration time: wall compute + simulated device
-    /// time (what the run would have cost on the paper's HDD box).
+    /// The reported per-iteration time: wall compute + the *non-overlapped*
+    /// simulated device time (what the run would have cost on the paper's
+    /// HDD box, where prefetched reads proceed while workers compute).
     pub fn elapsed_seconds(&self) -> f64 {
-        self.wall.as_secs_f64() + self.sim_disk_seconds
+        self.wall.as_secs_f64() + (self.sim_disk_seconds - self.overlapped_sim_seconds)
+    }
+
+    /// Fraction of worker shard requests the ready queue served without
+    /// blocking (1.0 = the prefetcher always stayed ahead).
+    pub fn ready_hit_ratio(&self) -> f64 {
+        let total = self.ready_hits + self.ready_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.ready_hits as f64 / total as f64
+        }
     }
 }
 
@@ -44,11 +65,14 @@ pub struct RunMetrics {
     pub converged: bool,
     pub total_wall: Duration,
     pub total_sim_disk_seconds: f64,
+    /// Simulated disk seconds hidden behind compute across all iterations.
+    pub total_overlapped_sim_seconds: f64,
 }
 
 impl RunMetrics {
     pub fn total_seconds(&self) -> f64 {
-        self.total_wall.as_secs_f64() + self.total_sim_disk_seconds
+        self.total_wall.as_secs_f64()
+            + (self.total_sim_disk_seconds - self.total_overlapped_sim_seconds)
     }
 
     pub fn total_minutes(&self) -> f64 {
@@ -77,6 +101,8 @@ pub struct MemoryAccount {
     pub degree_arrays: u64,
     pub blooms: u64,
     pub cache: u64,
+    /// Parsed shards pinned by the decode-once memo budget.
+    pub decoded_pool: u64,
     pub inflight_shards: u64,
     pub other: u64,
 }
@@ -87,6 +113,7 @@ impl MemoryAccount {
             + self.degree_arrays
             + self.blooms
             + self.cache
+            + self.decoded_pool
             + self.inflight_shards
             + self.other
     }
@@ -104,6 +131,33 @@ mod tests {
             ..Default::default()
         };
         assert!((m.elapsed_seconds() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn elapsed_subtracts_overlapped_sim_time() {
+        let m = IterationMetrics {
+            wall: Duration::from_millis(500),
+            sim_disk_seconds: 1.5,
+            overlapped_sim_seconds: 0.5,
+            ..Default::default()
+        };
+        assert!((m.elapsed_seconds() - 1.5).abs() < 1e-9);
+        let mut r = RunMetrics {
+            total_wall: Duration::from_secs(1),
+            total_sim_disk_seconds: 3.0,
+            total_overlapped_sim_seconds: 2.0,
+            ..Default::default()
+        };
+        assert!((r.total_seconds() - 2.0).abs() < 1e-9);
+        r.total_overlapped_sim_seconds = 0.0;
+        assert!((r.total_seconds() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ready_hit_ratio_math() {
+        let m = IterationMetrics { ready_hits: 3, ready_misses: 1, ..Default::default() };
+        assert!((m.ready_hit_ratio() - 0.75).abs() < 1e-9);
+        assert_eq!(IterationMetrics::default().ready_hit_ratio(), 0.0);
     }
 
     #[test]

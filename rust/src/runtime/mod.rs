@@ -8,13 +8,20 @@
 //! Interchange is HLO *text*: jax ≥ 0.5 emits serialized protos with
 //! 64-bit instruction ids, which xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` crate only exists in the vendored toolchain, so the whole
+//! PJRT path is gated behind the `pjrt` cargo feature; without it,
+//! [`ShardExecutor::load`] returns an error and the engine's native
+//! backend (the default) is unaffected.
 
 pub mod manifest;
 
 use std::path::Path;
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 pub use manifest::{Artifact, Manifest};
 
@@ -33,26 +40,33 @@ pub struct ShardExecutor {
     // the xla crate, so they are neither Send nor Sync.  A single Mutex
     // serialises *all* access (execute + drop paths) to everything that
     // touches those Rcs.
+    #[allow(dead_code)]
     inner: Mutex<Inner>,
 }
 
+#[cfg(feature = "pjrt")]
 struct Inner {
     pagerank: xla::PjRtLoadedExecutable,
     relax: xla::PjRtLoadedExecutable,
 }
+
+#[cfg(not(feature = "pjrt"))]
+struct Inner;
 
 // SAFETY: the only non-Send/Sync state is the Rc-shared PJRT client inside
 // `Inner`.  `Inner` is accessible exclusively through the Mutex, so no two
 // threads ever manipulate those Rcs concurrently, and `Arc<ShardExecutor>`
 // guarantees a single drop (which happens while no other handle exists).
 // The engine additionally runs a single worker on the PJRT backend, so the
-// lock is uncontended in practice.
+// lock is uncontended in practice.  (Without the `pjrt` feature `Inner` is
+// a unit struct and these impls are trivially sound.)
 unsafe impl Send for ShardExecutor {}
 unsafe impl Sync for ShardExecutor {}
 
 impl ShardExecutor {
     /// Load + compile the two shard executables of `variant` from the
     /// artifact directory.
+    #[cfg(feature = "pjrt")]
     pub fn load(artifacts_dir: &Path, variant: &str) -> Result<ShardExecutor> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
@@ -81,11 +95,23 @@ impl ShardExecutor {
         })
     }
 
+    /// Stub without the `pjrt` feature: always errors (the CLI and tests
+    /// fall back to / stay on the native backend).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(artifacts_dir: &Path, variant: &str) -> Result<ShardExecutor> {
+        let _ = (artifacts_dir, variant);
+        anyhow::bail!(
+            "PJRT backend unavailable: graphmp was built without the `pjrt` \
+             feature (rebuild with `--features pjrt` and the vendored `xla` crate)"
+        )
+    }
+
     /// PageRank shard call: returns `base + damping·Σ src[col]·inv_deg[col]·w`
     /// for the first `rows` destination rows.
     ///
     /// `src`/`inv_deg` are the full vertex arrays (len ≤ vc); `col`/`seg`/`w`
     /// one edge chunk (len ≤ ec); padding is appended here.
+    #[cfg(feature = "pjrt")]
     pub fn pagerank(
         &self,
         src: &[f32],
@@ -110,7 +136,23 @@ impl ShardExecutor {
         Ok(out[..rows].to_vec())
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[allow(clippy::too_many_arguments)]
+    pub fn pagerank(
+        &self,
+        _src: &[f32],
+        _inv_deg: &[f32],
+        _col: &[u32],
+        _seg: &[u32],
+        _w: &[f32],
+        _base: f32,
+        _rows: usize,
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("PJRT backend unavailable (built without the `pjrt` feature)")
+    }
+
     /// Min-relaxation shard call: `min(cur, min src[col]+w)` per row.
+    #[cfg(feature = "pjrt")]
     pub fn relax_min(
         &self,
         src: &[f32],
@@ -132,9 +174,22 @@ impl ShardExecutor {
         let out = execute1(&inner.relax, &[src_l, col_l, seg_l, w_l, cur_l])?;
         Ok(out[..rows].to_vec())
     }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn relax_min(
+        &self,
+        _src: &[f32],
+        _col: &[u32],
+        _seg: &[u32],
+        _w: &[f32],
+        _cur: &[f32],
+    ) -> Result<Vec<f32>> {
+        anyhow::bail!("PJRT backend unavailable (built without the `pjrt` feature)")
+    }
 }
 
 /// Run a compiled executable whose HLO returns a 1-tuple of f32[_].
+#[cfg(feature = "pjrt")]
 fn execute1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<f32>> {
     let result = exe.execute::<xla::Literal>(args).map_err(to_anyhow)?;
     let lit = result[0][0].to_literal_sync().map_err(to_anyhow)?;
@@ -143,6 +198,7 @@ fn execute1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Ve
     out.to_vec::<f32>().map_err(to_anyhow)
 }
 
+#[cfg(feature = "pjrt")]
 fn lit_f32_padded(v: &[f32], len: usize, pad: f32) -> xla::Literal {
     let mut buf = Vec::with_capacity(len);
     buf.extend_from_slice(v);
@@ -150,6 +206,7 @@ fn lit_f32_padded(v: &[f32], len: usize, pad: f32) -> xla::Literal {
     xla::Literal::vec1(&buf)
 }
 
+#[cfg(feature = "pjrt")]
 fn lit_i32_padded(v: &[u32], len: usize) -> xla::Literal {
     let mut buf: Vec<i32> = Vec::with_capacity(len);
     buf.extend(v.iter().map(|&x| x as i32));
@@ -157,6 +214,7 @@ fn lit_i32_padded(v: &[u32], len: usize) -> xla::Literal {
     xla::Literal::vec1(&buf)
 }
 
+#[cfg(feature = "pjrt")]
 fn to_anyhow(e: xla::Error) -> anyhow::Error {
     anyhow::anyhow!("xla: {e}")
 }
@@ -170,7 +228,7 @@ mod tests {
     }
 
     fn have_artifacts() -> bool {
-        artifacts_dir().join("manifest.txt").exists()
+        cfg!(feature = "pjrt") && artifacts_dir().join("manifest.txt").exists()
     }
 
     #[test]
@@ -238,5 +296,14 @@ mod tests {
         assert!(ex
             .pagerank(&big, &big, &[], &[], &[], 0.0, 1)
             .is_err());
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn stub_load_reports_missing_feature() {
+        let err = ShardExecutor::load(std::path::Path::new("/nonexistent"), "tiny")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pjrt"), "{err}");
     }
 }

@@ -9,7 +9,7 @@
 
 use graphmp::apps::{Cc, PageRank, Sssp, VertexProgram};
 use graphmp::baselines::{inmem::InMemEngine, BaselineConfig, BaselineEngine};
-use graphmp::benchutil::{banner, scale, Table};
+use graphmp::benchutil::{banner, pipeline_summary, scale, Table};
 use graphmp::engine::{EngineConfig, VswEngine};
 use graphmp::graph::datasets::Dataset;
 use graphmp::prep::{preprocess_into, PrepConfig};
@@ -138,6 +138,10 @@ fn main() {
             ]);
         }
         tbl.print(&format!("Fig 10: {} per-iteration (twitter-sim, first {iters} iters)", app.name()));
+        // both engines run the shared execution core, so the same
+        // per-iteration counter set exists on each side
+        println!("GraphMat {}", pipeline_summary(&gm_run));
+        println!("GraphMP  {}", pipeline_summary(&vsw_run));
         let tg: f64 = gm_run.iterations.iter().map(|m| m.elapsed_seconds()).sum();
         // exclude GraphMP's cache-fill first iteration, as the paper does
         let tv: f64 = vsw_run.iterations.iter().skip(1).map(|m| m.elapsed_seconds()).sum();

@@ -12,12 +12,13 @@ use graphmp::apps::{Cc, PageRank, Sssp, VertexProgram};
 use graphmp::baselines::{
     dsw::DswEngine, esg::EsgEngine, psw::PswEngine, BaselineConfig, BaselineEngine,
 };
-use graphmp::benchutil::{banner, scale, Table};
+use graphmp::benchutil::{banner, pipeline_summary, scale, Table};
 use graphmp::cluster::{ClusterConfig, DistEngine, DistSystem};
 use graphmp::compress::CacheMode;
 use graphmp::engine::{EngineConfig, VswEngine};
 use graphmp::graph::datasets::ALL;
 use graphmp::graph::EdgeList;
+use graphmp::metrics::RunMetrics;
 use graphmp::prep::{preprocess_into, PrepConfig};
 use graphmp::storage::disk::Disk;
 
@@ -27,13 +28,20 @@ fn fmt(v: Option<f64>) -> String {
     v.map_or("-".to_string(), |s| format!("{s:.2}"))
 }
 
-/// first-10-iteration seconds of a baseline engine on a fresh HDD disk.
-fn run_baseline(mk: &dyn Fn() -> Box<dyn BaselineEngine>, g: &EdgeList, app: &dyn VertexProgram) -> Option<f64> {
+/// first-10-iteration metrics of a baseline engine on a fresh HDD disk
+/// (every engine runs the shared execution core, so the full counter set
+/// — prefetched shards, ready-queue hits, overlapped sim seconds — is
+/// available for each).
+fn run_baseline(
+    mk: &dyn Fn() -> Box<dyn BaselineEngine>,
+    g: &EdgeList,
+    app: &dyn VertexProgram,
+) -> Option<(f64, RunMetrics)> {
     let disk = scale::bench_disk();
     let mut e = mk();
     e.preprocess(g, &disk).ok()?;
     let run = e.run(app, ITERS, &disk).ok()?;
-    Some(run.first_n_seconds(ITERS as usize))
+    Some((run.first_n_seconds(ITERS as usize), run))
 }
 
 fn run_cluster(sys: DistSystem, g: &EdgeList, app: &dyn VertexProgram) -> Option<f64> {
@@ -50,7 +58,7 @@ fn run_graphmp(
     dir: &graphmp::storage::GraphDir,
     app: &dyn VertexProgram,
     cached: bool,
-) -> Option<f64> {
+) -> Option<(f64, RunMetrics)> {
     let disk = scale::bench_disk();
     let cfg = EngineConfig {
         cache_mode: if cached { None } else { Some(CacheMode::M0None) },
@@ -61,7 +69,7 @@ fn run_graphmp(
     };
     let mut e = VswEngine::open(dir, &disk, cfg).ok()?;
     let run = e.run(app, ITERS).ok()?;
-    Some(run.first_n_seconds(ITERS as usize))
+    Some((run.first_n_seconds(ITERS as usize), run))
 }
 
 fn main() {
@@ -90,6 +98,7 @@ fn main() {
         ("Table 7: CC", &Cc, true),
     ];
     let mut tables: Vec<Table> = apps.iter().map(|_| Table::new(header.clone())).collect();
+    let mut counter_lines: Vec<String> = Vec::new();
 
     for ds in ALL {
         println!("running {} ...", ds.name());
@@ -125,18 +134,38 @@ fn main() {
                 &dir_pr
             };
             let cfg = BaselineConfig { p: 16, ..Default::default() };
+            let psw = run_baseline(&|| Box::new(PswEngine::new(cfg)), gg, *app);
+            let esg = run_baseline(&|| Box::new(EsgEngine::new(cfg)), gg, *app);
+            let dsw = run_baseline(&|| Box::new(DswEngine::new(cfg)), gg, *app);
+            let gmp_nc = run_graphmp(dir, *app, false);
+            let gmp_c = run_graphmp(dir, *app, true);
+            if ai == 0 && ds.name() == "twitter-sim" {
+                // the unified core reports one counter set for every
+                // engine; sample it once on PageRank/twitter-sim
+                for (name, run) in [
+                    ("GraphChi", &psw),
+                    ("X-Stream", &esg),
+                    ("GridGraph", &dsw),
+                    ("GMP-NC", &gmp_nc),
+                    ("GMP-C", &gmp_c),
+                ] {
+                    if let Some((_, r)) = run {
+                        counter_lines.push(format!("{name:<10} {}", pipeline_summary(r)));
+                    }
+                }
+            }
             let row = vec![
                 ds.name().to_string(),
-                fmt(run_baseline(&|| Box::new(PswEngine::new(cfg)), gg, *app)),
-                fmt(run_baseline(&|| Box::new(EsgEngine::new(cfg)), gg, *app)),
-                fmt(run_baseline(&|| Box::new(DswEngine::new(cfg)), gg, *app)),
+                fmt(psw.map(|(s, _)| s)),
+                fmt(esg.map(|(s, _)| s)),
+                fmt(dsw.map(|(s, _)| s)),
                 fmt(run_cluster(DistSystem::PregelPlus, gg, *app)),
                 fmt(run_cluster(DistSystem::PowerGraph, gg, *app)),
                 fmt(run_cluster(DistSystem::PowerLyra, gg, *app)),
                 fmt(run_cluster(DistSystem::GraphD, gg, *app)),
                 fmt(run_cluster(DistSystem::Chaos, gg, *app)),
-                fmt(run_graphmp(dir, *app, false)),
-                fmt(run_graphmp(dir, *app, true)),
+                fmt(gmp_nc.map(|(s, _)| s)),
+                fmt(gmp_c.map(|(s, _)| s)),
             ];
             tables[ai].row(row);
         }
@@ -144,6 +173,11 @@ fn main() {
 
     for (ti, (title, _, _)) in apps.iter().enumerate() {
         tables[ti].print(&format!("{title} — first {ITERS} iterations, seconds"));
+    }
+
+    println!("\nshared-pipeline counters (PageRank, twitter-sim):");
+    for line in &counter_lines {
+        println!("  {line}");
     }
 
     println!("\npaper shape checks:");

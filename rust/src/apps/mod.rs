@@ -1,18 +1,32 @@
-//! Vertex programs: PageRank, SSSP, CC (paper Algorithm 3) + BFS extension.
+//! Vertex programs (paper Algorithm 3) and the generalized shard kernel.
 //!
-//! The paper's `Init`/`Update` API specialises, for all three evaluated
-//! applications, to one of two shard reductions — a weighted neighbour sum
-//! (PageRank) or a min-relaxation (SSSP, CC) — which is exactly the pair of
-//! AOT-compiled L2 artifacts.  A [`VertexProgram`] therefore declares its
-//! [`ShardCompute`] kind plus init/activation rules; the engine executes
-//! the kind on either backend (native rust or PJRT).
+//! The paper's `Init`/`Update` API specialises to a small algebra: every
+//! evaluated application folds each vertex's in-edges with an
+//! **associative combine** (sum, min or max) over per-edge **gathered**
+//! contributions, then **applies** the folded accumulator to the old
+//! value, and activates the vertex when the app's **activation
+//! predicate** fires.  [`ShardKernel`] captures exactly that triple over
+//! `f32` lanes, so one execution core ([`crate::exec`]) runs every app on
+//! every engine:
+//!
+//! | app          | combine | gather                      | apply                      |
+//! |--------------|---------|-----------------------------|----------------------------|
+//! | PageRank     | sum     | `src[u] · 1/outdeg(u)`      | `(1-d)/n + d·acc`          |
+//! | PPR          | sum     | `src[u] · 1/outdeg(u)`      | `(1-d)·reset(v) + d·acc`   |
+//! | SSSP         | min     | `src[u] + w`                | `min(old, acc)`            |
+//! | BFS          | min     | `src[u] + 1`                | `min(old, acc)`            |
+//! | CC           | min     | `src[u]`                    | `min(old, acc)`            |
+//! | widest path  | max     | `min(src[u], w)`            | `max(old, acc)`            |
+//!
+//! A [`VertexProgram`] therefore declares its kernel plus init rules; the
+//! engines execute the kernel on either backend (native rust or PJRT).
 
 use crate::graph::VertexId;
 
-/// The per-edge cost fed to the min-relaxation.
+/// The per-edge cost fed to path-style gathers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EdgeCost {
-    /// Use the shard's edge weights (SSSP).
+    /// Use the shard's edge weights (SSSP, widest path).
     Weights,
     /// Unit cost per hop (BFS levels).
     Unit,
@@ -31,13 +45,182 @@ impl EdgeCost {
     }
 }
 
-/// The two shard-update shapes the engine (and the AOT artifacts) know.
+/// The associative reduction folding a vertex's in-edge contributions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Combine {
+    Sum,
+    Min,
+    Max,
+}
+
+/// How one edge `(u → v, w)` turns into a contribution for `v`.
 #[derive(Clone, Copy, Debug, PartialEq)]
-pub enum ShardCompute {
-    /// `dst[r] = base + damping * Σ_{e→r} src[col_e] * inv_out_deg[col_e]`
-    PageRankSum { damping: f32 },
-    /// `dst[r] = min(src[r], min_{e→r} src[col_e] + cost(w_e))`
-    RelaxMin { cost: EdgeCost },
+pub enum EdgeGather {
+    /// `src[u] · inv_out_deg[u]` — degree-normalised rank mass.  The
+    /// execution core pre-folds this product once per iteration into the
+    /// `contrib` array (|V| multiplies instead of |E|).
+    DegreeMass,
+    /// `src[u] + cost(w)` — path length (SSSP/BFS) or raw label (CC).
+    AddCost(EdgeCost),
+    /// `min(src[u], cost(w))` — path bottleneck width (widest path).
+    MinCapacity(EdgeCost),
+}
+
+/// Where a sum kernel's teleport/base mass lands.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BaseMass {
+    /// `mass / n` at every vertex (PageRank).
+    Uniform { mass: f32 },
+    /// All of `mass` at one reset vertex (personalized PageRank).
+    Single { vertex: VertexId, mass: f32 },
+}
+
+impl BaseMass {
+    /// The base value of vertex `v` in an `n`-vertex graph.
+    #[inline]
+    pub fn at(&self, v: VertexId, n: u32) -> f32 {
+        match *self {
+            BaseMass::Uniform { mass } => mass / n as f32,
+            BaseMass::Single { vertex, mass } => {
+                if v == vertex {
+                    mass
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// How the folded accumulator becomes the vertex's next value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Apply {
+    /// `base(v) + scale · acc` — sum kernels (PageRank family).
+    Affine { scale: f32, base: BaseMass },
+    /// `combine(old, acc)` — monotone relaxations keep their best value.
+    MeetOld,
+}
+
+/// A generalized shard update: associative combine + per-edge gather +
+/// apply + activation predicate over `f32` vertex lanes.  Copyable and
+/// engine-agnostic — the whole contract between an app and the execution
+/// core.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardKernel {
+    pub combine: Combine,
+    pub gather: EdgeGather,
+    pub apply: Apply,
+}
+
+impl ShardKernel {
+    /// The classic PageRank kernel.
+    pub fn pagerank(damping: f32) -> ShardKernel {
+        ShardKernel {
+            combine: Combine::Sum,
+            gather: EdgeGather::DegreeMass,
+            apply: Apply::Affine { scale: damping, base: BaseMass::Uniform { mass: 1.0 - damping } },
+        }
+    }
+
+    /// Personalized PageRank: teleport mass concentrated on one vertex.
+    pub fn personalized_pagerank(damping: f32, seed: VertexId) -> ShardKernel {
+        ShardKernel {
+            combine: Combine::Sum,
+            gather: EdgeGather::DegreeMass,
+            apply: Apply::Affine {
+                scale: damping,
+                base: BaseMass::Single { vertex: seed, mass: 1.0 - damping },
+            },
+        }
+    }
+
+    /// Min-relaxation over `src[u] + cost(w)` (SSSP/BFS/CC).
+    pub fn relax_min(cost: EdgeCost) -> ShardKernel {
+        ShardKernel {
+            combine: Combine::Min,
+            gather: EdgeGather::AddCost(cost),
+            apply: Apply::MeetOld,
+        }
+    }
+
+    /// Max–min relaxation: widest (bottleneck) paths.
+    pub fn widest_path(cost: EdgeCost) -> ShardKernel {
+        ShardKernel {
+            combine: Combine::Max,
+            gather: EdgeGather::MinCapacity(cost),
+            apply: Apply::MeetOld,
+        }
+    }
+
+    /// Identity element of the combine.
+    #[inline]
+    pub fn identity(&self) -> f32 {
+        match self.combine {
+            Combine::Sum => 0.0,
+            Combine::Min => f32::INFINITY,
+            Combine::Max => f32::NEG_INFINITY,
+        }
+    }
+
+    /// Fold one contribution into the accumulator.
+    #[inline]
+    pub fn combine(&self, acc: f32, contribution: f32) -> f32 {
+        match self.combine {
+            Combine::Sum => acc + contribution,
+            Combine::Min => acc.min(contribution),
+            Combine::Max => acc.max(contribution),
+        }
+    }
+
+    /// One edge's contribution, from the source value (`src_val`), the
+    /// source's out-degree inverse and the edge weight.  Degree-mass
+    /// kernels normally read the pre-folded `contrib` array instead —
+    /// `src_val * inv_u` here rounds identically, so both paths agree
+    /// bit-for-bit.
+    #[inline]
+    pub fn edge_value(&self, src_val: f32, inv_u: f32, w: f32) -> f32 {
+        match self.gather {
+            EdgeGather::DegreeMass => src_val * inv_u,
+            EdgeGather::AddCost(cost) => src_val + cost.apply(w),
+            EdgeGather::MinCapacity(cost) => src_val.min(cost.apply(w)),
+        }
+    }
+
+    /// Produce the vertex's next value from the folded accumulator.
+    #[inline]
+    pub fn apply(&self, v: VertexId, n: u32, old: f32, acc: f32) -> f32 {
+        match self.apply {
+            Apply::Affine { scale, base } => base.at(v, n) + scale * acc,
+            Apply::MeetOld => self.combine(old, acc),
+        }
+    }
+
+    /// Activation predicate: sum kernels re-activate on any change,
+    /// monotone kernels only on strict improvement.
+    #[inline]
+    pub fn is_update(&self, old: f32, new: f32) -> bool {
+        match self.combine {
+            Combine::Sum => old != new,
+            Combine::Min => new < old,
+            Combine::Max => new > old,
+        }
+    }
+
+    /// Whether the execution core should pre-fold the per-vertex
+    /// `src · inv_out_deg` contribution array for this kernel.
+    #[inline]
+    pub fn uses_contrib(&self) -> bool {
+        matches!(self.gather, EdgeGather::DegreeMass)
+    }
+
+    /// Whether shard weights must be present on disk.
+    #[inline]
+    pub fn needs_weights(&self) -> bool {
+        matches!(
+            self.gather,
+            EdgeGather::AddCost(EdgeCost::Weights) | EdgeGather::MinCapacity(EdgeCost::Weights)
+        )
+    }
 }
 
 /// A vertex-centric application (paper §2.3 `Init` + `Update`).
@@ -47,30 +230,23 @@ pub trait VertexProgram: Sync {
     /// Initial vertex values and the initially-active vertex set.
     fn init(&self, num_vertices: u32) -> (Vec<f32>, Vec<VertexId>);
 
-    /// Which shard reduction drives `Update`.
-    fn compute(&self) -> ShardCompute;
+    /// The shard kernel driving `Update`.
+    fn kernel(&self) -> ShardKernel;
 
-    /// Does a value change count as "activation"? PageRank: any change;
-    /// min-apps: strict decrease (monotone lattice).
+    /// Does a value change count as "activation"?
     #[inline]
     fn is_update(&self, old: f32, new: f32) -> bool {
-        match self.compute() {
-            ShardCompute::PageRankSum { .. } => old != new,
-            ShardCompute::RelaxMin { .. } => new < old,
-        }
+        self.kernel().is_update(old, new)
     }
 
-    /// Whether the app needs the out-degree array (PageRank only).
+    /// Whether the app needs the out-degree array (sum kernels only).
     fn uses_out_degrees(&self) -> bool {
-        matches!(self.compute(), ShardCompute::PageRankSum { .. })
+        self.kernel().uses_contrib()
     }
 
     /// Whether shard weights must be present on disk.
     fn needs_weights(&self) -> bool {
-        matches!(
-            self.compute(),
-            ShardCompute::RelaxMin { cost: EdgeCost::Weights }
-        )
+        self.kernel().needs_weights()
     }
 }
 
@@ -102,8 +278,42 @@ impl VertexProgram for PageRank {
         (v, (0..n).collect())
     }
 
-    fn compute(&self) -> ShardCompute {
-        ShardCompute::PageRankSum { damping: self.damping }
+    fn kernel(&self) -> ShardKernel {
+        ShardKernel::pagerank(self.damping)
+    }
+}
+
+/// Personalized PageRank: random walks teleport back to one seed vertex
+/// instead of the uniform reset vector — the same sum kernel as PageRank
+/// with a different base-mass distribution.
+#[derive(Clone, Copy, Debug)]
+pub struct Ppr {
+    pub damping: f32,
+    pub seed: VertexId,
+}
+
+impl Ppr {
+    pub fn new(seed: VertexId) -> Self {
+        Ppr { damping: 0.85, seed }
+    }
+}
+
+impl VertexProgram for Ppr {
+    fn name(&self) -> &'static str {
+        "ppr"
+    }
+
+    fn init(&self, n: u32) -> (Vec<f32>, Vec<VertexId>) {
+        // walk mass starts entirely at the seed
+        let mut v = vec![0.0f32; n as usize];
+        if self.seed < n {
+            v[self.seed as usize] = 1.0;
+        }
+        (v, (0..n).collect())
+    }
+
+    fn kernel(&self) -> ShardKernel {
+        ShardKernel::personalized_pagerank(self.damping, self.seed)
     }
 }
 
@@ -132,14 +342,14 @@ impl VertexProgram for Sssp {
         (v, vec![self.source])
     }
 
-    fn compute(&self) -> ShardCompute {
-        ShardCompute::RelaxMin { cost: EdgeCost::Weights }
+    fn kernel(&self) -> ShardKernel {
+        ShardKernel::relax_min(EdgeCost::Weights)
     }
 }
 
 /// Weakly connected components via min-label propagation (Algorithm 3
 /// lines 26–36; run on the symmetrised graph).  Labels are carried as f32
-/// — exact for ids < 2²⁴, asserted by the engine.
+/// — exact for ids < 2²⁴, asserted by the execution core.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Cc;
 
@@ -152,13 +362,12 @@ impl VertexProgram for Cc {
         ((0..n).map(|i| i as f32).collect(), (0..n).collect())
     }
 
-    fn compute(&self) -> ShardCompute {
-        ShardCompute::RelaxMin { cost: EdgeCost::Zero }
+    fn kernel(&self) -> ShardKernel {
+        ShardKernel::relax_min(EdgeCost::Zero)
     }
 }
 
-/// BFS levels — a paper-adjacent extension app exercising the same
-/// min-relaxation with unit costs.
+/// BFS levels — the same min-relaxation with unit costs.
 #[derive(Clone, Copy, Debug)]
 pub struct Bfs {
     pub source: VertexId,
@@ -183,8 +392,42 @@ impl VertexProgram for Bfs {
         (v, vec![self.source])
     }
 
-    fn compute(&self) -> ShardCompute {
-        ShardCompute::RelaxMin { cost: EdgeCost::Unit }
+    fn kernel(&self) -> ShardKernel {
+        ShardKernel::relax_min(EdgeCost::Unit)
+    }
+}
+
+/// Widest path (maximum-bottleneck path) from one source: the max–min
+/// dual of SSSP.  A path's width is its narrowest edge; each vertex keeps
+/// the widest width over all paths from the source.
+#[derive(Clone, Copy, Debug)]
+pub struct Widest {
+    pub source: VertexId,
+}
+
+impl Widest {
+    pub fn new(source: VertexId) -> Self {
+        Widest { source }
+    }
+}
+
+impl VertexProgram for Widest {
+    fn name(&self) -> &'static str {
+        "widest"
+    }
+
+    fn init(&self, n: u32) -> (Vec<f32>, Vec<VertexId>) {
+        // unreachable vertices stay at width 0 (capacities are positive);
+        // the source itself has unconstrained width
+        let mut v = vec![0.0f32; n as usize];
+        if self.source < n {
+            v[self.source as usize] = f32::INFINITY;
+        }
+        (v, vec![self.source])
+    }
+
+    fn kernel(&self) -> ShardKernel {
+        ShardKernel::widest_path(EdgeCost::Weights)
     }
 }
 
@@ -215,6 +458,21 @@ mod tests {
     }
 
     #[test]
+    fn ppr_init_mass_at_seed() {
+        let (v, active) = Ppr::new(1).init(3);
+        assert_eq!(v, vec![0.0, 1.0, 0.0]);
+        assert_eq!(active.len(), 3);
+    }
+
+    #[test]
+    fn widest_init_source_unbounded() {
+        let (v, active) = Widest::new(0).init(3);
+        assert!(v[0].is_infinite());
+        assert_eq!(v[1], 0.0);
+        assert_eq!(active, vec![0]);
+    }
+
+    #[test]
     fn update_semantics() {
         let pr = PageRank::new();
         assert!(pr.is_update(0.5, 0.6));
@@ -224,6 +482,9 @@ mod tests {
         assert!(ss.is_update(5.0, 3.0));
         assert!(!ss.is_update(3.0, 5.0));
         assert!(!ss.is_update(3.0, 3.0));
+        let wd = Widest::new(0);
+        assert!(wd.is_update(3.0, 5.0));
+        assert!(!wd.is_update(5.0, 3.0));
     }
 
     #[test]
@@ -234,11 +495,45 @@ mod tests {
     }
 
     #[test]
+    fn kernel_algebra() {
+        let pr = ShardKernel::pagerank(0.85);
+        assert_eq!(pr.identity(), 0.0);
+        assert_eq!(pr.combine(1.0, 2.0), 3.0);
+        assert_eq!(pr.edge_value(0.5, 0.25, 7.0), 0.125);
+        // apply = 0.15/4 + 0.85*acc
+        let n = 4;
+        assert!((pr.apply(0, n, 0.0, 1.0) - (0.15 / 4.0 + 0.85)).abs() < 1e-7);
+
+        let ss = ShardKernel::relax_min(EdgeCost::Weights);
+        assert_eq!(ss.identity(), f32::INFINITY);
+        assert_eq!(ss.combine(3.0, 5.0), 3.0);
+        assert_eq!(ss.edge_value(1.0, 0.0, 2.0), 3.0);
+        assert_eq!(ss.apply(0, n, 2.5, 3.0), 2.5);
+
+        let wd = ShardKernel::widest_path(EdgeCost::Weights);
+        assert_eq!(wd.identity(), f32::NEG_INFINITY);
+        assert_eq!(wd.combine(3.0, 5.0), 5.0);
+        assert_eq!(wd.edge_value(4.0, 0.0, 2.0), 2.0);
+        assert_eq!(wd.apply(0, n, 3.0, 2.0), 3.0);
+    }
+
+    #[test]
+    fn base_mass_distribution() {
+        let u = BaseMass::Uniform { mass: 0.15 };
+        assert!((u.at(0, 3) - 0.05).abs() < 1e-7);
+        let s = BaseMass::Single { vertex: 2, mass: 0.15 };
+        assert_eq!(s.at(2, 3), 0.15);
+        assert_eq!(s.at(0, 3), 0.0);
+    }
+
+    #[test]
     fn aux_requirements() {
         assert!(PageRank::new().uses_out_degrees());
+        assert!(Ppr::new(0).uses_out_degrees());
         assert!(!Sssp::new(0).uses_out_degrees());
         assert!(Sssp::new(0).needs_weights());
         assert!(!Cc.needs_weights());
         assert!(!Bfs::new(0).needs_weights());
+        assert!(Widest::new(0).needs_weights());
     }
 }

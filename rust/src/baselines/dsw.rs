@@ -4,20 +4,31 @@
 //! by (source row, destination column).  Processing goes column by column:
 //! for column j, stream every block in that column (reading each source
 //! chunk: `C√P|V|` over the iteration, plus `D|E|` of edges) and keep the
-//! destination chunk resident, writing it once per column (`C√P|V|`...
-//! precisely `C|V|` per full column sweep ⇒ `C√P|V|` counting the paper's
-//! convention).  Memory: two vertex chunks, `2C|V|/√P`.
+//! destination chunk resident, writing it once per column.  Memory: two
+//! vertex chunks, `2C|V|/√P`.
+//!
+//! Runs through the shared execution core: one pipeline unit per grid
+//! *column* — loading a column streams its √P blocks (reads charged on
+//! the load path, overlapping compute when prefetched), compute owns the
+//! destination chunk exclusively.  Blocks are sorted by source at
+//! preprocessing and concatenated in ascending row order, so each
+//! destination folds its in-edges in the repo-wide canonical
+//! ascending-source order.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::apps::VertexProgram;
-use crate::graph::{Edge, EdgeList};
-use crate::metrics::{IterationMetrics, RunMetrics};
+use crate::exec::{
+    fold_edges_interval, mark_interval, ExecCore, IterCtx, RangeMarker, ShardSource, SharedDst,
+    UnitOutput,
+};
+use crate::graph::{Edge, EdgeList, VertexId};
+use crate::metrics::RunMetrics;
 use crate::storage::disk::Disk;
 
-use super::{count_updates, inv_out_degrees, sweep, BaselineConfig, BaselineEngine, C_VERTEX, D_EDGE};
+use super::{inv_out_degrees, BaselineConfig, BaselineEngine, C_VERTEX, D_EDGE};
 
 pub struct DswEngine {
     cfg: BaselineConfig,
@@ -71,6 +82,14 @@ impl BaselineEngine for DswEngine {
         disk.account_write(de);
         disk.account_read(de);
         disk.account_write(de);
+        // canonical per-destination order: column sweeps concatenate
+        // blocks in ascending source-chunk order; sorting within a block
+        // makes the full column ascending by source
+        for row in &mut blocks {
+            for block in row {
+                block.sort_unstable_by_key(|e| e.src);
+            }
+        }
         self.blocks = blocks;
         self.sqrt_p = sqrt_p;
         self.chunk_span = span;
@@ -83,56 +102,11 @@ impl BaselineEngine for DswEngine {
 
     fn run(&mut self, app: &dyn VertexProgram, iters: u32, disk: &Disk) -> Result<RunMetrics> {
         anyhow::ensure!(!self.blocks.is_empty(), "preprocess first");
-        let n = self.num_vertices;
-        let (mut src, _) = app.init(n);
-        let mut run = RunMetrics::default();
-        let start = Instant::now();
-        let sim_start = disk.snapshot().sim_nanos;
-        let chunk_bytes = C_VERTEX * self.chunk_span as u64;
-        for iter in 0..iters {
-            let t0 = Instant::now();
-            let io0 = disk.snapshot();
-            let mut dst = src.clone();
-            // column-major sweep: destination chunk j stays resident
-            for j in 0..self.sqrt_p as usize {
-                let lo = (j as u32 * self.chunk_span).min(n) as usize;
-                let hi = ((j as u32 + 1) * self.chunk_span).min(n) as usize;
-                // fresh accumulation for this destination chunk
-                let mut col_edges: Vec<Edge> = Vec::new();
-                for (_i, row) in self.blocks.iter().enumerate() {
-                    let block = &row[j];
-                    disk.account_read(chunk_bytes); // source chunk i
-                    disk.account_read(D_EDGE * block.len() as u64);
-                    col_edges.extend_from_slice(block);
-                }
-                let col_new = sweep(app.compute(), &col_edges, n, &self.inv_out_deg, &src);
-                dst[lo..hi].copy_from_slice(&col_new[lo..hi]);
-                disk.account_write(chunk_bytes); // destination chunk j
-            }
-            let active = count_updates(app, &src, &dst);
-            src = dst;
-            let io1 = disk.snapshot();
-            run.iterations.push(IterationMetrics {
-                iteration: iter,
-                wall: t0.elapsed(),
-                sim_disk_seconds: (io1.sim_nanos - io0.sim_nanos) as f64 / 1e9,
-                active_vertices: active,
-                active_ratio: active as f64 / n.max(1) as f64,
-                shards_processed: (self.sqrt_p * self.sqrt_p) as u32,
-                shards_skipped: 0,
-                io: io1.since(&io0),
-                cache: Default::default(),
-                ..Default::default()
-            });
-            if active == 0 {
-                run.converged = true;
-                break;
-            }
-        }
-        run.total_wall = start.elapsed();
-        run.total_sim_disk_seconds = (disk.snapshot().sim_nanos - sim_start) as f64 / 1e9;
-        run.memory_bytes = self.memory_bytes();
-        self.values = src;
+        let source = DswSource { eng: self, disk };
+        let mut core = ExecCore::new(self.cfg.exec(), disk, None);
+        let (vals, run) =
+            core.run(&source, app, self.num_vertices, &self.inv_out_deg, iters)?;
+        self.values = vals;
         Ok(run)
     }
 
@@ -146,10 +120,67 @@ impl BaselineEngine for DswEngine {
     }
 }
 
+struct DswSource<'e> {
+    eng: &'e DswEngine,
+    disk: &'e Disk,
+}
+
+impl ShardSource for DswSource<'_> {
+    /// The column's concatenated edge stream (ascending source order).
+    type Item = Vec<Edge>;
+
+    fn schedule(&self, _iteration: u32, _active: &[VertexId]) -> (Vec<u32>, u32) {
+        // one unit per grid column; GridGraph sweeps all of them
+        ((0..self.eng.sqrt_p).collect(), 0)
+    }
+
+    fn load(&self, j: u32) -> Result<Vec<Edge>> {
+        // stream every block of column j: each source chunk + its edges
+        let eng = self.eng;
+        let chunk_bytes = C_VERTEX * eng.chunk_span as u64;
+        let mut col_edges = Vec::new();
+        for row in eng.blocks.iter() {
+            let block = &row[j as usize];
+            self.disk.account_read(chunk_bytes); // source chunk i
+            self.disk.account_read(D_EDGE * block.len() as u64);
+            col_edges.extend_from_slice(block);
+        }
+        Ok(col_edges)
+    }
+
+    fn compute(
+        &self,
+        j: u32,
+        col_edges: Vec<Edge>,
+        ctx: &IterCtx<'_>,
+        dst: &SharedDst,
+        marker: &mut RangeMarker<'_>,
+    ) -> Result<UnitOutput> {
+        let eng = self.eng;
+        let n = eng.num_vertices;
+        let lo = (j * eng.chunk_span).min(n);
+        let hi = ((j + 1) * eng.chunk_span).min(n);
+        if lo < hi {
+            // SAFETY: destination chunks are disjoint by construction.
+            let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
+            fold_edges_interval(ctx, &col_edges, lo, out);
+            mark_interval(ctx, lo, out, marker);
+        }
+        let chunk_bytes = C_VERTEX * eng.chunk_span as u64;
+        self.disk.account_write(chunk_bytes); // destination chunk j
+        Ok(UnitOutput::InPlace)
+    }
+
+    fn residency_bytes(&self) -> u64 {
+        self.eng.memory_bytes()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::apps::{Cc, PageRank};
+    use crate::baselines::sweep;
     use crate::graph::rmat::{rmat, RmatParams};
 
     #[test]
@@ -190,7 +221,7 @@ mod tests {
         e.run(&Cc, 30, &disk).unwrap();
         let (mut src, _) = Cc.init(g.num_vertices);
         for _ in 0..30 {
-            let next = sweep(Cc.compute(), &g.edges, g.num_vertices, &[], &src);
+            let next = sweep(Cc.kernel(), &g.edges, g.num_vertices, &[], &src);
             if next == src {
                 break;
             }

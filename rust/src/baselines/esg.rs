@@ -6,24 +6,28 @@
 //! (read `C|V| + D|E|`, write `C|E|`); (2) gather — stream updates, apply
 //! to vertex values (read `C|E|`, write `C|V|`).  Only one partition's
 //! vertices are resident: `C|V|/P`.
+//!
+//! Runs through the shared execution core: one pipeline unit per
+//! partition whose compute is the scatter (producing an
+//! [`UnitOutput::Updates`] stream); the core folds all streams at the
+//! barrier in partition order — X-Stream's gather — and
+//! [`ShardSource::end_iteration`] charges the gather's I/O.  Partitions
+//! are sorted by source at preprocessing so the folded per-destination
+//! order is the repo-wide canonical ascending-source order.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::apps::{ShardCompute, VertexProgram};
-use crate::graph::{Edge, EdgeList};
-use crate::metrics::{IterationMetrics, RunMetrics};
+use crate::apps::VertexProgram;
+use crate::exec::{
+    ExecCore, IterCtx, RangeMarker, ShardSource, SharedDst, UnitOutput, Update,
+};
+use crate::graph::{Edge, EdgeList, VertexId};
+use crate::metrics::RunMetrics;
 use crate::storage::disk::Disk;
 
-use super::{count_updates, inv_out_degrees, BaselineConfig, BaselineEngine, C_VERTEX, D_EDGE};
-
-/// An in-flight update record (dst, value) — the C-sized "update" of §3.2.
-#[derive(Clone, Copy, Debug)]
-struct Update {
-    dst: u32,
-    val: f32,
-}
+use super::{inv_out_degrees, BaselineConfig, BaselineEngine, C_VERTEX, D_EDGE};
 
 pub struct EsgEngine {
     cfg: BaselineConfig,
@@ -57,7 +61,7 @@ impl BaselineEngine for EsgEngine {
         let t = Instant::now();
         let sim0 = disk.snapshot().sim_nanos;
         // one streaming pass: read edges, append to partition files — no
-        // sorting, no index (X-Stream's whole preprocessing, 2D|E|)
+        // index (X-Stream's whole preprocessing, 2D|E|)
         let de = D_EDGE * g.num_edges();
         disk.account_read(de);
         disk.account_write(de);
@@ -66,6 +70,13 @@ impl BaselineEngine for EsgEngine {
         let mut partitions: Vec<Vec<Edge>> = vec![Vec::new(); p as usize];
         for e in &g.edges {
             partitions[(e.src / span) as usize].push(*e);
+        }
+        // canonical per-destination order for cross-engine bit-identity:
+        // partitions cover ascending source ranges and are gathered in
+        // partition order, so an in-partition source sort makes every
+        // destination's updates arrive in ascending source order
+        for part in &mut partitions {
+            part.sort_unstable_by_key(|e| e.src);
         }
         self.partitions = partitions;
         self.num_vertices = g.num_vertices;
@@ -77,84 +88,10 @@ impl BaselineEngine for EsgEngine {
 
     fn run(&mut self, app: &dyn VertexProgram, iters: u32, disk: &Disk) -> Result<RunMetrics> {
         anyhow::ensure!(!self.partitions.is_empty(), "preprocess first");
-        let n = self.num_vertices;
-        let (mut vals, _) = app.init(n);
-        let mut run = RunMetrics::default();
-        let start = Instant::now();
-        let sim_start = disk.snapshot().sim_nanos;
-        for iter in 0..iters {
-            let t0 = Instant::now();
-            let io0 = disk.snapshot();
-            // ---- phase 1: scatter (stream edges, emit updates) ----------
-            let mut updates: Vec<Update> = Vec::new();
-            for part in &self.partitions {
-                disk.account_read(C_VERTEX * n as u64 / self.partitions.len() as u64);
-                disk.account_read(D_EDGE * part.len() as u64);
-                match app.compute() {
-                    ShardCompute::PageRankSum { .. } => {
-                        for e in part {
-                            updates.push(Update {
-                                dst: e.dst,
-                                val: vals[e.src as usize] * self.inv_out_deg[e.src as usize],
-                            });
-                        }
-                    }
-                    ShardCompute::RelaxMin { cost } => {
-                        for e in part {
-                            updates.push(Update {
-                                dst: e.dst,
-                                val: vals[e.src as usize] + cost.apply(e.weight),
-                            });
-                        }
-                    }
-                }
-                disk.account_write(C_VERTEX * part.len() as u64); // update stream
-            }
-            // ---- phase 2: gather (stream updates, fold into vertices) ---
-            disk.account_read(C_VERTEX * updates.len() as u64);
-            let dst = match app.compute() {
-                ShardCompute::PageRankSum { damping } => {
-                    let base = (1.0 - damping) / n as f32;
-                    let mut sum = vec![0.0f32; n as usize];
-                    for u in &updates {
-                        sum[u.dst as usize] += u.val;
-                    }
-                    sum.iter().map(|s| base + damping * s).collect::<Vec<f32>>()
-                }
-                ShardCompute::RelaxMin { .. } => {
-                    let mut out = vals.clone();
-                    for u in &updates {
-                        if u.val < out[u.dst as usize] {
-                            out[u.dst as usize] = u.val;
-                        }
-                    }
-                    out
-                }
-            };
-            disk.account_write(C_VERTEX * n as u64);
-            let active = count_updates(app, &vals, &dst);
-            vals = dst;
-            let io1 = disk.snapshot();
-            run.iterations.push(IterationMetrics {
-                iteration: iter,
-                wall: t0.elapsed(),
-                sim_disk_seconds: (io1.sim_nanos - io0.sim_nanos) as f64 / 1e9,
-                active_vertices: active,
-                active_ratio: active as f64 / n.max(1) as f64,
-                shards_processed: self.partitions.len() as u32,
-                shards_skipped: 0,
-                io: io1.since(&io0),
-                cache: Default::default(),
-                ..Default::default()
-            });
-            if active == 0 {
-                run.converged = true;
-                break;
-            }
-        }
-        run.total_wall = start.elapsed();
-        run.total_sim_disk_seconds = (disk.snapshot().sim_nanos - sim_start) as f64 / 1e9;
-        run.memory_bytes = self.memory_bytes();
+        let source = EsgSource { eng: self, disk };
+        let mut core = ExecCore::new(self.cfg.exec(), disk, None);
+        let (vals, run) =
+            core.run(&source, app, self.num_vertices, &self.inv_out_deg, iters)?;
         self.values = vals;
         Ok(run)
     }
@@ -166,6 +103,59 @@ impl BaselineEngine for EsgEngine {
     fn memory_bytes(&self) -> u64 {
         // C|V|/P — only one partition's vertex set resident
         C_VERTEX * self.num_vertices as u64 / self.partitions.len().max(1) as u64
+    }
+}
+
+struct EsgSource<'e> {
+    eng: &'e EsgEngine,
+    disk: &'e Disk,
+}
+
+impl ShardSource for EsgSource<'_> {
+    type Item = ();
+
+    fn schedule(&self, _iteration: u32, _active: &[VertexId]) -> (Vec<u32>, u32) {
+        // X-Stream streams every partition every iteration
+        ((0..self.eng.partitions.len() as u32).collect(), 0)
+    }
+
+    fn load(&self, id: u32) -> Result<()> {
+        // scatter phase input: the partition's vertex chunk + its edges
+        let eng = self.eng;
+        self.disk
+            .account_read(C_VERTEX * eng.num_vertices as u64 / eng.partitions.len() as u64);
+        self.disk
+            .account_read(D_EDGE * eng.partitions[id as usize].len() as u64);
+        Ok(())
+    }
+
+    /// Scatter: stream the partition's out-edges into an update stream.
+    fn compute(
+        &self,
+        id: u32,
+        _item: (),
+        ctx: &IterCtx<'_>,
+        _dst: &SharedDst,
+        _marker: &mut RangeMarker<'_>,
+    ) -> Result<UnitOutput> {
+        let part = &self.eng.partitions[id as usize];
+        let updates: Vec<Update> = part
+            .iter()
+            .map(|e| Update { dst: e.dst, val: ctx.edge_value(e) })
+            .collect();
+        self.disk.account_write(C_VERTEX * part.len() as u64); // update stream
+        Ok(UnitOutput::Updates(updates))
+    }
+
+    /// Gather: the core folded the update streams; charge their re-read
+    /// plus the vertex write-back.
+    fn end_iteration(&self, _ctx: &IterCtx<'_>, updates_folded: u64) {
+        self.disk.account_read(C_VERTEX * updates_folded);
+        self.disk.account_write(C_VERTEX * self.eng.num_vertices as u64);
+    }
+
+    fn residency_bytes(&self) -> u64 {
+        self.eng.memory_bytes()
     }
 }
 
@@ -220,7 +210,7 @@ mod tests {
         let (mut src, _) = PageRank::new().init(g.num_vertices);
         for _ in 0..5 {
             src = super::super::sweep(
-                PageRank::new().compute(),
+                PageRank::new().kernel(),
                 &g.edges,
                 g.num_vertices,
                 &inv,

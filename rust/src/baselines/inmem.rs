@@ -8,19 +8,25 @@
 //! fails with OOM — reproducing GraphMat's crashes on UK-2007/UK-2014/
 //! EU-2015 under 128GB.
 //!
-//! Optionally executes through the AOT `pagerank_power` artifact (the L2
-//! lax.scan whole-graph power iteration) instead of native loops.
+//! Runs through the shared execution core as a single whole-graph unit:
+//! the same pipeline, kernels and CSR row loop as the VSW engine
+//! (`engine::native_update`), with edges sorted `(dst, src)` at load so
+//! the per-destination fold order is the repo-wide canonical
+//! ascending-source order.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::apps::VertexProgram;
-use crate::graph::{Csr, EdgeList};
-use crate::metrics::{IterationMetrics, RunMetrics};
+use crate::exec::{
+    mark_interval, ExecCore, IterCtx, RangeMarker, ShardSource, SharedDst, UnitOutput,
+};
+use crate::graph::{Csr, EdgeList, VertexId};
+use crate::metrics::RunMetrics;
 use crate::storage::disk::Disk;
 
-use super::{count_updates, inv_out_degrees, BaselineConfig, BaselineEngine, C_VERTEX, D_EDGE};
+use super::{inv_out_degrees, BaselineConfig, BaselineEngine, C_VERTEX, D_EDGE};
 
 pub struct InMemEngine {
     cfg: BaselineConfig,
@@ -74,49 +80,11 @@ impl BaselineEngine for InMemEngine {
 
     fn run(&mut self, app: &dyn VertexProgram, iters: u32, disk: &Disk) -> Result<RunMetrics> {
         anyhow::ensure!(self.csr.is_some(), "load first (InMemEngine::load)");
-        let n = self.num_vertices;
-        let csr = self.csr.as_ref().unwrap();
-        let (mut src, _) = app.init(n);
-        let mut run = RunMetrics::default();
-        let start = Instant::now();
-        let sim_start = disk.snapshot().sim_nanos;
-        for iter in 0..iters {
-            let t0 = Instant::now();
-            let mut dst = src.clone();
-            crate::engine::native_update(
-                app.compute(),
-                &crate::storage::shard::Shard {
-                    id: 0,
-                    start_vertex: 0,
-                    csr: csr.clone(),
-                },
-                &src,
-                &self.inv_out_deg,
-                &mut dst,
-            );
-            let active = count_updates(app, &src, &dst);
-            src = dst;
-            run.iterations.push(IterationMetrics {
-                iteration: iter,
-                wall: t0.elapsed(),
-                sim_disk_seconds: 0.0,
-                active_vertices: active,
-                active_ratio: active as f64 / n.max(1) as f64,
-                shards_processed: 1,
-                shards_skipped: 0,
-                io: Default::default(),
-                cache: Default::default(),
-                ..Default::default()
-            });
-            if active == 0 {
-                run.converged = true;
-                break;
-            }
-        }
-        run.total_wall = start.elapsed();
-        run.total_sim_disk_seconds = (disk.snapshot().sim_nanos - sim_start) as f64 / 1e9;
-        run.memory_bytes = self.memory_bytes();
-        self.values = src;
+        let source = InMemSource { eng: self };
+        let mut core = ExecCore::new(self.cfg.exec(), disk, None);
+        let (vals, run) =
+            core.run(&source, app, self.num_vertices, &self.inv_out_deg, iters)?;
+        self.values = vals;
         Ok(run)
     }
 
@@ -161,6 +129,44 @@ impl InMemEngine {
     }
 }
 
+struct InMemSource<'e> {
+    eng: &'e InMemEngine,
+}
+
+impl ShardSource for InMemSource<'_> {
+    type Item = ();
+
+    fn schedule(&self, _iteration: u32, _active: &[VertexId]) -> (Vec<u32>, u32) {
+        // one whole-graph unit; everything is already resident
+        (vec![0], 0)
+    }
+
+    fn load(&self, _id: u32) -> Result<()> {
+        Ok(()) // zero per-iteration disk I/O by design
+    }
+
+    fn compute(
+        &self,
+        _id: u32,
+        _item: (),
+        ctx: &IterCtx<'_>,
+        dst: &SharedDst,
+        marker: &mut RangeMarker<'_>,
+    ) -> Result<UnitOutput> {
+        let csr = self.eng.csr.as_ref().expect("run checks csr");
+        let n = self.eng.num_vertices as usize;
+        // SAFETY: the single unit owns the whole vertex range.
+        let out = unsafe { dst.claim(0, n) };
+        crate::engine::native_update(ctx, csr, 0, out);
+        mark_interval(ctx, 0, out, marker);
+        Ok(UnitOutput::InPlace)
+    }
+
+    fn residency_bytes(&self) -> u64 {
+        self.eng.memory_bytes()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,7 +206,13 @@ mod tests {
         let inv = inv_out_degrees(&g);
         let (mut src, _) = PageRank::new().init(g.num_vertices);
         for _ in 0..5 {
-            src = super::super::sweep(PageRank::new().compute(), &g.edges, g.num_vertices, &inv, &src);
+            src = super::super::sweep(
+                PageRank::new().kernel(),
+                &g.edges,
+                g.num_vertices,
+                &inv,
+                &src,
+            );
         }
         for (a, b) in e.values().iter().zip(&src) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");

@@ -1,17 +1,31 @@
 //! Baseline graph engines — the systems the paper compares against.
 //!
 //! [`psw`] (GraphChi), [`esg`] (X-Stream), [`dsw`] (GridGraph) are
-//! faithful re-implementations of each paper's *computation model*: the
-//! same partitioning, the same per-iteration I/O schedule (§3.1–3.4 of the
-//! GraphMP paper, matching Table 3's closed forms), the same memory
-//! residency — executed against the shared [`Disk`] so measured I/O
-//! volumes and simulated device time are directly comparable with
-//! GraphMP's VSW engine.  [`inmem`] is the GraphMat-like in-memory SpMV
-//! engine (crashes by design when the RAM budget is exceeded).
+//! faithful re-implementations of each paper's *I/O schedule*: the same
+//! partitioning, the same per-iteration reads and writes (§3.1–3.4 of
+//! the GraphMP paper, matching Table 3's closed forms), the same memory
+//! residency.  [`inmem`] is the GraphMat-like in-memory SpMV engine
+//! (crashes by design when the RAM budget is exceeded).
 //!
-//! The vertex *math* is identical across engines (the paper's premise:
-//! all run the same vertex programs; the systems differ in I/O), so all
-//! engines must agree on results — tested in `rust/tests/`.
+//! Since the unified-execution refactor every baseline is a
+//! [`crate::exec::ShardSource`] plug-in for the shared
+//! [`crate::exec::ExecCore`] — the *same* schedule→prefetch→compute
+//! pipeline, active-set tracking and iteration accounting the VSW engine
+//! uses.  An engine contributes only:
+//!
+//! - its **unit decomposition** (PSW: destination-interval shards; ESG:
+//!   source partitions; DSW: grid columns; inmem: the whole graph);
+//! - its **per-unit I/O charges** on the load/compute paths (so
+//!   simulated disk time overlaps compute exactly as it does for VSW,
+//!   making Figs 9/10 and Tables 5–7 like-for-like);
+//! - its **residency model** (Fig 11).
+//!
+//! The vertex *math* is the shared [`crate::apps::ShardKernel`] algebra
+//! (the paper's premise: all systems run the same vertex programs and
+//! differ only in I/O), and every engine keeps each destination's
+//! in-edges in the canonical ascending-source order — so all five
+//! engines agree **bit-identically** on every app, enforced by
+//! `rust/tests/cross_engine.rs`.
 
 pub mod dsw;
 pub mod esg;
@@ -20,7 +34,8 @@ pub mod psw;
 
 use anyhow::Result;
 
-use crate::apps::{ShardCompute, VertexProgram};
+use crate::apps::{Combine, ShardKernel, VertexProgram};
+use crate::exec::ExecConfig;
 use crate::graph::EdgeList;
 use crate::metrics::RunMetrics;
 use crate::storage::disk::Disk;
@@ -38,11 +53,37 @@ pub struct BaselineConfig {
     /// exceeds it fail with an OOM error (reproducing the paper's crashes
     /// of in-memory systems on the big graphs).
     pub ram_budget: u64,
+    /// Compute workers of the shared execution pipeline.
+    pub workers: usize,
+    /// Ready-queue depth of the shared prefetcher (0 = sequential
+    /// reference path, as for the VSW engine).
+    pub prefetch_depth: usize,
+    /// Dedicated I/O threads of the shared prefetcher.
+    pub prefetch_threads: usize,
 }
 
 impl Default for BaselineConfig {
     fn default() -> Self {
-        BaselineConfig { p: 16, ram_budget: u64::MAX }
+        let exec = ExecConfig::default();
+        BaselineConfig {
+            p: 16,
+            ram_budget: u64::MAX,
+            workers: exec.workers,
+            prefetch_depth: exec.prefetch_depth,
+            prefetch_threads: exec.prefetch_threads,
+        }
+    }
+}
+
+impl BaselineConfig {
+    /// The shared-core pipeline configuration this baseline runs with.
+    pub fn exec(&self) -> ExecConfig {
+        ExecConfig {
+            workers: self.workers,
+            prefetch_depth: self.prefetch_depth,
+            prefetch_auto: false,
+            prefetch_threads: self.prefetch_threads,
+        }
     }
 }
 
@@ -55,8 +96,9 @@ pub trait BaselineEngine {
     /// (wall + simulated disk).
     fn preprocess(&mut self, g: &EdgeList, disk: &Disk) -> Result<f64>;
 
-    /// Run `app` for `iters` iterations, charging the model's I/O per
-    /// iteration. Engines do the real vertex math.
+    /// Run `app` for `iters` iterations through the shared execution
+    /// core, charging the model's I/O per iteration. Engines do the real
+    /// vertex math.
     fn run(&mut self, app: &dyn VertexProgram, iters: u32, disk: &Disk) -> Result<RunMetrics>;
 
     /// Final vertex values of the last `run`.
@@ -66,33 +108,36 @@ pub trait BaselineEngine {
     fn memory_bytes(&self) -> u64;
 }
 
-/// One push-style sweep over an edge list: the shared vertex math all
-/// baselines execute (identical numerics to the VSW native backend when
-/// edges are destination-ordered).
+/// One push-style sweep over a destination-grouped edge list: the simple
+/// reference implementation of a [`ShardKernel`] iteration, used by
+/// tests and the simulated distributed engines.  Matches the engines
+/// bit-for-bit when each destination's edges arrive in the same order.
 pub fn sweep(
-    kind: ShardCompute,
+    kernel: ShardKernel,
     edges_by_dst: &[crate::graph::Edge],
     num_vertices: u32,
     inv_out_deg: &[f32],
     src: &[f32],
 ) -> Vec<f32> {
     let n = num_vertices as usize;
-    match kind {
-        ShardCompute::PageRankSum { damping } => {
-            let base = (1.0 - damping) / n as f32;
-            let mut sum = vec![0.0f32; n];
+    match kernel.combine {
+        Combine::Sum => {
+            let mut acc = vec![0.0f32; n];
             for e in edges_by_dst {
-                sum[e.dst as usize] += src[e.src as usize] * inv_out_deg[e.src as usize];
+                let u = e.src as usize;
+                acc[e.dst as usize] += kernel.edge_value(src[u], inv_out_deg[u], e.weight);
             }
-            sum.iter().map(|s| base + damping * s).collect()
+            acc.iter()
+                .enumerate()
+                .map(|(v, &a)| kernel.apply(v as u32, num_vertices, src[v], a))
+                .collect()
         }
-        ShardCompute::RelaxMin { cost } => {
+        Combine::Min | Combine::Max => {
             let mut out = src.to_vec();
             for e in edges_by_dst {
-                let cand = src[e.src as usize] + cost.apply(e.weight);
-                if cand < out[e.dst as usize] {
-                    out[e.dst as usize] = cand;
-                }
+                let u = e.src as usize;
+                let cand = kernel.edge_value(src[u], 0.0, e.weight);
+                out[e.dst as usize] = kernel.combine(out[e.dst as usize], cand);
             }
             out
         }
@@ -107,7 +152,7 @@ pub fn count_updates(app: &dyn VertexProgram, src: &[f32], dst: &[f32]) -> u64 {
         .count() as u64
 }
 
-/// Shared out-degree inverse used by PageRank.
+/// Shared out-degree inverse used by the sum kernels.
 pub fn inv_out_degrees(g: &EdgeList) -> Vec<f32> {
     g.out_degrees()
         .iter()
@@ -127,13 +172,7 @@ mod tests {
         let g = EdgeList { num_vertices: 2, edges: vec![Edge::new(0, 1)] };
         let inv = inv_out_degrees(&g);
         let src = vec![0.5f32, 0.5];
-        let out = sweep(
-            ShardCompute::PageRankSum { damping: 0.85 },
-            &g.edges,
-            2,
-            &inv,
-            &src,
-        );
+        let out = sweep(ShardKernel::pagerank(0.85), &g.edges, 2, &inv, &src);
         let base = 0.15 / 2.0;
         assert!((out[0] - base).abs() < 1e-7);
         assert!((out[1] - (base + 0.85 * 0.5)).abs() < 1e-7);
@@ -143,14 +182,33 @@ mod tests {
     fn sweep_relax_min() {
         let edges = vec![Edge::weighted(0, 1, 3.0)];
         let src = vec![0.0f32, f32::INFINITY];
+        let out = sweep(ShardKernel::relax_min(EdgeCost::Weights), &edges, 2, &[], &src);
+        assert_eq!(out, vec![0.0, 3.0]);
+    }
+
+    #[test]
+    fn sweep_widest_path() {
+        let edges = vec![Edge::weighted(0, 1, 3.0), Edge::weighted(0, 2, 7.0)];
+        let src = vec![f32::INFINITY, 0.0, 0.0];
+        let out = sweep(ShardKernel::widest_path(EdgeCost::Weights), &edges, 3, &[], &src);
+        assert_eq!(out, vec![f32::INFINITY, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn sweep_personalized_pagerank_base_at_seed() {
+        let g = EdgeList { num_vertices: 3, edges: vec![Edge::new(0, 1)] };
+        let inv = inv_out_degrees(&g);
+        let src = vec![1.0f32, 0.0, 0.0];
         let out = sweep(
-            ShardCompute::RelaxMin { cost: EdgeCost::Weights },
-            &edges,
-            2,
-            &[],
+            ShardKernel::personalized_pagerank(0.85, 0),
+            &g.edges,
+            3,
+            &inv,
             &src,
         );
-        assert_eq!(out, vec![0.0, 3.0]);
+        assert!((out[0] - 0.15).abs() < 1e-7, "seed keeps the teleport mass");
+        assert!((out[1] - 0.85).abs() < 1e-7);
+        assert_eq!(out[2], 0.0);
     }
 
     #[test]

@@ -7,22 +7,32 @@
 //! (reading `C|V| + 2(C+D)|E|`), updates, and writes everything back
 //! (another `C|V| + 2(C+D)|E|`).  Memory holds one interval's subgraph:
 //! `(C|V| + 2(C+D)|E|)/P`.
+//!
+//! Runs through the shared execution core: one pipeline unit per shard,
+//! reads charged on the load path (overlapping compute when prefetched),
+//! the interval's rows computed in place via the shared kernel fold.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::apps::VertexProgram;
-use crate::graph::{Edge, EdgeList};
-use crate::metrics::{IterationMetrics, RunMetrics};
+use crate::exec::{
+    fold_edges_interval, mark_interval, ExecCore, IterCtx, RangeMarker, ShardSource, SharedDst,
+    UnitOutput,
+};
+use crate::graph::{Edge, EdgeList, VertexId};
+use crate::metrics::RunMetrics;
 use crate::storage::disk::Disk;
 
-use super::{count_updates, inv_out_degrees, sweep, BaselineConfig, BaselineEngine, C_VERTEX, D_EDGE};
+use super::{inv_out_degrees, BaselineConfig, BaselineEngine, C_VERTEX, D_EDGE};
 
 pub struct PswEngine {
     cfg: BaselineConfig,
     /// Edges of shard `s` (destination in interval `s`), sorted by source.
     shards: Vec<Vec<Edge>>,
+    /// Destination interval of each shard (disjoint, covering `[0, n)`).
+    intervals: Vec<(u32, u32)>,
     num_vertices: u32,
     num_edges: u64,
     inv_out_deg: Vec<f32>,
@@ -34,6 +44,7 @@ impl PswEngine {
         PswEngine {
             cfg,
             shards: Vec::new(),
+            intervals: Vec::new(),
             num_vertices: 0,
             num_edges: 0,
             inv_out_deg: Vec::new(),
@@ -83,12 +94,15 @@ impl BaselineEngine for PswEngine {
             shards[shard_of[e.dst as usize] as usize].push(*e);
         }
         // step 3: sort each shard by source, write compact (read D|E|,
-        // write (C+D)|E| — GraphChi attaches vertex data to edges)
+        // write (C+D)|E| — GraphChi attaches vertex data to edges).  The
+        // source sort is also the repo-wide canonical per-destination
+        // edge order, so results agree bit-for-bit with every engine.
         disk.account_read(de);
         disk.account_write((C_VERTEX + D_EDGE) * g.num_edges());
         for s in &mut shards {
             s.sort_unstable_by_key(|e| e.src);
         }
+        self.intervals = bounds.windows(2).map(|w| (w[0], w[1])).collect();
         self.shards = shards;
         self.num_vertices = g.num_vertices;
         self.num_edges = g.num_edges();
@@ -99,61 +113,11 @@ impl BaselineEngine for PswEngine {
 
     fn run(&mut self, app: &dyn VertexProgram, iters: u32, disk: &Disk) -> Result<RunMetrics> {
         anyhow::ensure!(!self.shards.is_empty(), "preprocess first");
-        let n = self.num_vertices;
-        let (mut src, _) = app.init(n);
-        let mut run = RunMetrics::default();
-        let start = Instant::now();
-        let sim_start = disk.snapshot().sim_nanos;
-        for iter in 0..iters {
-            let t0 = Instant::now();
-            let io0 = disk.snapshot();
-            let mut dst = vec![0.0f32; n as usize];
-            let mut first = true;
-            for shard in &self.shards {
-                // load interval vertices + in-edges + the sliding windows
-                // of out-edges from all other shards
-                disk.account_read(C_VERTEX * n as u64 / self.shards.len() as u64);
-                disk.account_read(2 * (C_VERTEX + D_EDGE) * shard.len() as u64);
-                let part = sweep(app.compute(), shard, n, &self.inv_out_deg, &src);
-                if first {
-                    dst = part;
-                    first = false;
-                } else {
-                    // merge the interval's rows (each shard owns its
-                    // destination rows exclusively)
-                    for e in shard.iter() {
-                        dst[e.dst as usize] = part[e.dst as usize];
-                    }
-                }
-                // write back vertices + updated edge values (both
-                // directions, §3.1)
-                disk.account_write(C_VERTEX * n as u64 / self.shards.len() as u64);
-                disk.account_write(2 * (C_VERTEX + D_EDGE) * shard.len() as u64);
-            }
-            let active = count_updates(app, &src, &dst);
-            src = dst;
-            let io1 = disk.snapshot();
-            run.iterations.push(IterationMetrics {
-                iteration: iter,
-                wall: t0.elapsed(),
-                sim_disk_seconds: (io1.sim_nanos - io0.sim_nanos) as f64 / 1e9,
-                active_vertices: active,
-                active_ratio: active as f64 / n.max(1) as f64,
-                shards_processed: self.shards.len() as u32,
-                shards_skipped: 0,
-                io: io1.since(&io0),
-                cache: Default::default(),
-                ..Default::default()
-            });
-            if active == 0 {
-                run.converged = true;
-                break;
-            }
-        }
-        run.total_wall = start.elapsed();
-        run.total_sim_disk_seconds = (disk.snapshot().sim_nanos - sim_start) as f64 / 1e9;
-        run.memory_bytes = self.memory_bytes();
-        self.values = src;
+        let source = PswSource { eng: self, disk };
+        let mut core = ExecCore::new(self.cfg.exec(), disk, None);
+        let (vals, run) =
+            core.run(&source, app, self.num_vertices, &self.inv_out_deg, iters)?;
+        self.values = vals;
         Ok(run)
     }
 
@@ -165,6 +129,60 @@ impl BaselineEngine for PswEngine {
         // (C|V| + 2(C+D)|E|) / P
         (C_VERTEX * self.num_vertices as u64 + 2 * (C_VERTEX + D_EDGE) * self.num_edges)
             / self.shards.len().max(1) as u64
+    }
+}
+
+struct PswSource<'e> {
+    eng: &'e PswEngine,
+    disk: &'e Disk,
+}
+
+impl ShardSource for PswSource<'_> {
+    type Item = ();
+
+    fn schedule(&self, _iteration: u32, _active: &[VertexId]) -> (Vec<u32>, u32) {
+        // GraphChi sweeps every shard every iteration (no selective
+        // scheduling in the modelled schedule)
+        ((0..self.eng.shards.len() as u32).collect(), 0)
+    }
+
+    fn load(&self, id: u32) -> Result<()> {
+        // load interval vertices + in-edges + the sliding windows of
+        // out-edges from all other shards
+        let eng = self.eng;
+        let p = eng.shards.len() as u64;
+        self.disk.account_read(C_VERTEX * eng.num_vertices as u64 / p);
+        self.disk
+            .account_read(2 * (C_VERTEX + D_EDGE) * eng.shards[id as usize].len() as u64);
+        Ok(())
+    }
+
+    fn compute(
+        &self,
+        id: u32,
+        _item: (),
+        ctx: &IterCtx<'_>,
+        dst: &SharedDst,
+        marker: &mut RangeMarker<'_>,
+    ) -> Result<UnitOutput> {
+        let eng = self.eng;
+        let (lo, hi) = eng.intervals[id as usize];
+        let edges = &eng.shards[id as usize];
+        // SAFETY: shard intervals are disjoint by construction (bounds
+        // are strictly increasing).
+        let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
+        fold_edges_interval(ctx, edges, lo, out);
+        mark_interval(ctx, lo, out, marker);
+        // write back vertices + updated edge values (both directions,
+        // §3.1)
+        let p = eng.shards.len() as u64;
+        self.disk.account_write(C_VERTEX * eng.num_vertices as u64 / p);
+        self.disk.account_write(2 * (C_VERTEX + D_EDGE) * edges.len() as u64);
+        Ok(UnitOutput::InPlace)
+    }
+
+    fn residency_bytes(&self) -> u64 {
+        self.eng.memory_bytes()
     }
 }
 
@@ -215,6 +233,20 @@ mod tests {
         assert_eq!(s.bytes_written, de + ce + de);
         // total = (C+5D)|E|
         assert_eq!(s.bytes_read + s.bytes_written, ce + 5 * de);
+    }
+
+    #[test]
+    fn psw_reports_pipeline_counters() {
+        let g = rmat(8, 2_000, 75, RmatParams::default());
+        let disk = Disk::unthrottled();
+        let mut e = PswEngine::new(BaselineConfig::default());
+        e.preprocess(&g, &disk).unwrap();
+        let run = e.run(&PageRank::new(), 2, &disk).unwrap();
+        for m in &run.iterations {
+            assert!(m.shards_processed > 0);
+            assert_eq!(m.shards_prefetched, m.shards_processed);
+            assert_eq!(m.ready_hits + m.ready_misses, m.shards_processed);
+        }
     }
 
     #[test]

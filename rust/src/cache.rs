@@ -2,23 +2,28 @@
 //!
 //! Capacity-bounded, shard-id-keyed.  On a hit the shard is decompressed
 //! from RAM (throughput ≫ disk); on a miss the caller loads from disk and
-//! offers the bytes back with [`EdgeCache::admit`].  No eviction policy is
-//! needed: the shard set is fixed after preprocessing, so the cache simply
-//! fills until capacity (matching the paper, which caches "as many shards
-//! as possible") — an LRU would only churn identical-value entries.
+//! offers the bytes back with [`EdgeCache::admit`].  The *compressed*
+//! entries need no eviction policy: the shard set is fixed after
+//! preprocessing, so the cache simply fills until capacity (matching the
+//! paper, which caches "as many shards as possible") — an LRU there
+//! would only churn identical-value entries.
 //!
-//! Compressed entries additionally memoize their parsed [`Shard`] while
-//! the decode-memo byte budget lasts, so a hit is an `Arc` clone, not a
-//! zlib inflate + full `Shard::from_bytes`.  The memo is permanent and
-//! strictly budget-bounded (it is real extra RAM, accounted as
-//! `memo_bytes` / Fig 11's decoded pool); beyond the budget a hit decodes
-//! — at most once per scheduled shard per iteration, because the engine's
-//! prefetcher fetches each shard exactly once and hands the decoded `Arc`
-//! to the compute worker through the ready queue.
+//! Compressed entries additionally memoize their parsed [`Shard`] in the
+//! **decoded pool**, so a hit is an `Arc` clone, not a zlib inflate +
+//! full `Shard::from_bytes`.  The pool is strictly budget-bounded (it is
+//! real extra RAM, accounted as `memo_bytes` / Fig 11's decoded pool)
+//! and — unlike the compressed entries — **LRU-evicted**: when pinning a
+//! freshly decoded shard would exceed the budget, the least-recently-hit
+//! pins are released first, so long runs on small budgets keep the
+//! *hot* shards decoded instead of freezing whichever shards happened to
+//! be touched first.  Beyond the budget a hit decodes — at most once per
+//! scheduled shard per iteration, because the execution core's
+//! prefetcher fetches each shard exactly once and hands the decoded
+//! `Arc` to the compute worker through the ready queue.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::Result;
 
@@ -79,10 +84,14 @@ pub struct EdgeCache {
     mode: CacheMode,
     capacity_bytes: u64,
     used_bytes: AtomicU64,
-    /// Byte budget for permanently memoizing parsed shards of compressed
-    /// entries (0 = no decode memo).
+    /// Byte budget of the decoded pool (parsed shards pinned beside their
+    /// compressed entries; 0 = no decode memo).
     memo_budget: u64,
     memo_used: AtomicU64,
+    /// Pinned shard ids in hit order (front = least recently hit).  All
+    /// pin/unpin/touch traffic serialises on this lock, which also
+    /// orders the per-entry memo-slot writes it protects.
+    memo_lru: Mutex<Vec<u32>>,
     entries: RwLock<HashMap<u32, Arc<Entry>>>,
     /// Shards already rejected on capacity — the shard set is static, so
     /// re-offering them would only repeat the (possibly expensive)
@@ -99,6 +108,7 @@ impl EdgeCache {
             used_bytes: AtomicU64::new(0),
             memo_budget: 0,
             memo_used: AtomicU64::new(0),
+            memo_lru: Mutex::new(Vec::new()),
             entries: RwLock::new(HashMap::new()),
             rejected_ids: RwLock::new(HashSet::new()),
             stats: CacheStats::default(),
@@ -146,14 +156,18 @@ impl EdgeCache {
                 match &*e {
                     Entry::Parsed(shard) => Ok(Some(Arc::clone(shard))),
                     Entry::Compressed { bytes, memo } => {
-                        if let Some(shard) = memo.read().unwrap().as_ref() {
+                        // clone out of the slot before touching the LRU:
+                        // lock order is always memo_lru → slot
+                        let pinned = memo.read().unwrap().clone();
+                        if let Some(shard) = pinned {
                             self.stats.decode_skips.fetch_add(1, Ordering::Relaxed);
-                            return Ok(Some(Arc::clone(shard)));
+                            self.touch_memo(shard_id);
+                            return Ok(Some(shard));
                         }
                         let raw = self.mode.decompress(bytes)?;
                         let shard = Arc::new(Shard::from_bytes(&raw)?);
                         self.stats.decodes.fetch_add(1, Ordering::Relaxed);
-                        self.memoize(memo, &shard);
+                        self.memoize(shard_id, memo, &shard);
                         Ok(Some(shard))
                     }
                 }
@@ -236,29 +250,68 @@ impl EdgeCache {
             self.stats.admitted.fetch_add(1, Ordering::Relaxed);
         }
         if let (Entry::Compressed { memo, .. }, Some(sh)) = (&*entry, parsed) {
-            self.memoize(memo, sh);
+            self.memoize(shard_id, memo, sh);
         }
         true
     }
 
-    /// Pin `shard` as the entry's parsed memo while the budget lasts.
-    /// Beyond the budget the entry simply stays decode-on-hit: pinning
-    /// more would hold the decoded graph in RAM unaccounted, defeating
-    /// the compressed cache's memory bound.
-    fn memoize(&self, slot: &RwLock<Option<Arc<Shard>>>, shard: &Arc<Shard>) {
+    /// Move a pinned shard to the most-recently-hit end of the locked LRU.
+    fn touch_locked(lru: &mut Vec<u32>, shard_id: u32) {
+        if let Some(pos) = lru.iter().position(|&id| id == shard_id) {
+            lru.remove(pos);
+            lru.push(shard_id);
+        }
+    }
+
+    /// Move a pinned shard to the most-recently-hit end of the LRU.
+    fn touch_memo(&self, shard_id: u32) {
+        Self::touch_locked(&mut self.memo_lru.lock().unwrap(), shard_id);
+    }
+
+    /// Pin `shard` as the entry's parsed memo, LRU-evicting older pins
+    /// until it fits the budget.  A shard larger than the whole budget is
+    /// never pinned (it would evict everything for one entry); its hits
+    /// simply stay decode-on-hit — anything else would hold the decoded
+    /// graph in RAM unaccounted, defeating the compressed cache's memory
+    /// bound.
+    fn memoize(&self, shard_id: u32, slot: &RwLock<Option<Arc<Shard>>>, shard: &Arc<Shard>) {
         if self.memo_budget == 0 {
             return;
         }
-        let mut w = slot.write().unwrap();
-        if w.is_some() {
-            return; // raced: already pinned
-        }
         let sz = (shard.csr.size_bytes() + 32) as u64;
-        let prev = self.memo_used.fetch_add(sz, Ordering::Relaxed);
-        if prev + sz <= self.memo_budget {
-            *w = Some(Arc::clone(shard));
-        } else {
-            self.memo_used.fetch_sub(sz, Ordering::Relaxed);
+        if sz > self.memo_budget {
+            return;
+        }
+        let mut lru = self.memo_lru.lock().unwrap();
+        {
+            let mut w = slot.write().unwrap();
+            if w.is_some() {
+                // raced: another thread pinned it first — count the hit
+                Self::touch_locked(&mut lru, shard_id);
+                return;
+            }
+            // evict least-recently-hit pins until this one fits
+            while self.memo_used.load(Ordering::Relaxed) + sz > self.memo_budget
+                && !lru.is_empty()
+            {
+                let victim = lru.remove(0);
+                let entry = self.entries.read().unwrap().get(&victim).cloned();
+                if let Some(entry) = entry {
+                    if let Entry::Compressed { memo, .. } = &*entry {
+                        if let Some(evicted) = memo.write().unwrap().take() {
+                            self.memo_used.fetch_sub(
+                                (evicted.csr.size_bytes() + 32) as u64,
+                                Ordering::Relaxed,
+                            );
+                        }
+                    }
+                }
+            }
+            if self.memo_used.load(Ordering::Relaxed) + sz <= self.memo_budget {
+                *w = Some(Arc::clone(shard));
+                self.memo_used.fetch_add(sz, Ordering::Relaxed);
+                lru.push(shard_id);
+            }
         }
     }
 
@@ -408,6 +461,74 @@ mod tests {
         let snap = cache.snapshot();
         assert_eq!(snap.decodes, 2);
         assert_eq!(snap.memo_bytes, 0, "over-budget pin must roll back");
+    }
+
+    #[test]
+    fn memo_lru_evicts_least_recently_hit() {
+        let s1 = mk_shard(1, 500);
+        let s2 = mk_shard(2, 500);
+        let s3 = mk_shard(3, 500);
+        let one = (s1.csr.size_bytes() + 32) as u64;
+        // budget fits exactly two pinned shards
+        let mut cache = EdgeCache::new(CacheMode::M3Zlib1, 1 << 20);
+        cache.set_decode_memo_budget(2 * one);
+        for (id, s) in [(1u32, &s1), (2, &s2), (3, &s3)] {
+            assert!(cache.admit(id, &s.to_bytes()));
+        }
+        // note: admit without a parsed handle pins nothing yet
+        assert_eq!(cache.snapshot().memo_bytes, 0);
+        cache.get(1).unwrap().unwrap(); // decode + pin 1
+        cache.get(2).unwrap().unwrap(); // decode + pin 2 (pool full)
+        cache.get(1).unwrap().unwrap(); // touch 1 → LRU order [2, 1]
+        assert_eq!(cache.snapshot().decodes, 2);
+        assert_eq!(cache.snapshot().decode_skips, 1);
+        cache.get(3).unwrap().unwrap(); // decode + pin 3, evicting 2
+        assert!(cache.snapshot().memo_bytes <= 2 * one, "pool over budget");
+        // 1 and 3 are pinned (skip), 2 was evicted (re-decodes)
+        cache.get(1).unwrap().unwrap();
+        cache.get(3).unwrap().unwrap();
+        assert_eq!(cache.snapshot().decode_skips, 3);
+        let decodes_before = cache.snapshot().decodes;
+        cache.get(2).unwrap().unwrap();
+        assert_eq!(
+            cache.snapshot().decodes,
+            decodes_before + 1,
+            "evicted shard must decode again"
+        );
+    }
+
+    #[test]
+    fn memo_lru_keeps_hot_shards_across_many_rounds() {
+        // regression for the permanent-pin policy: with a pool smaller
+        // than the shard set, the *recently hit* shards must stay pinned
+        // instead of whichever were touched first
+        let shards: Vec<Shard> = (0..6u32).map(|id| mk_shard(id, 400)).collect();
+        let one = (shards[0].csr.size_bytes() + 32) as u64;
+        let mut cache = EdgeCache::new(CacheMode::M3Zlib1, 1 << 20);
+        cache.set_decode_memo_budget(3 * one);
+        for (id, s) in shards.iter().enumerate() {
+            assert!(cache.admit(id as u32, &s.to_bytes()));
+        }
+        // several rounds over a hot subset {0,1,2} after touching all
+        for s in 0..6u32 {
+            cache.get(s).unwrap().unwrap();
+        }
+        let cold_decodes = cache.snapshot().decodes;
+        for _ in 0..4 {
+            for s in 0..3u32 {
+                cache.get(s).unwrap().unwrap();
+            }
+        }
+        let snap = cache.snapshot();
+        assert!(snap.memo_bytes <= 3 * one);
+        // the hot subset converges onto the pool: at most one round of
+        // re-decodes before all three stay pinned
+        assert!(
+            snap.decodes - cold_decodes <= 3,
+            "hot set kept thrashing: {} extra decodes",
+            snap.decodes - cold_decodes
+        );
+        assert!(snap.decode_skips >= 9);
     }
 
     #[test]

@@ -68,6 +68,23 @@ impl Args {
     {
         Ok(self.parse_opt(name)?.unwrap_or(default))
     }
+
+    /// Parse `--name <N>|auto`: `Ok(None)` when the value is the literal
+    /// `auto`, `Ok(Some(v))` for a typed value, `Ok(Some(default))` when
+    /// absent.  Used by knobs with a measured self-tuning mode (e.g.
+    /// `--prefetch-depth auto`).
+    pub fn parse_auto_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<Option<T>>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.opt(name) {
+            None => Ok(Some(default)),
+            Some("auto") => Ok(None),
+            Some(s) => Ok(Some(
+                s.parse::<T>().with_context(|| format!("bad --{name}: {s}"))?,
+            )),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -110,5 +127,17 @@ mod tests {
     fn bad_typed_value() {
         let a = args("run --iters xyz");
         assert!(a.parse_opt::<u32>("iters").is_err());
+    }
+
+    #[test]
+    fn auto_or_typed_or_default() {
+        let a = args("run --prefetch-depth auto");
+        assert_eq!(a.parse_auto_or::<usize>("prefetch-depth", 4).unwrap(), None);
+        let a = args("run --prefetch-depth 7");
+        assert_eq!(a.parse_auto_or::<usize>("prefetch-depth", 4).unwrap(), Some(7));
+        let a = args("run");
+        assert_eq!(a.parse_auto_or::<usize>("prefetch-depth", 4).unwrap(), Some(4));
+        let a = args("run --prefetch-depth xyz");
+        assert!(a.parse_auto_or::<usize>("prefetch-depth", 4).is_err());
     }
 }

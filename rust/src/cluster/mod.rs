@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::apps::{ShardCompute, VertexProgram};
+use crate::apps::{ShardKernel, VertexProgram};
 use crate::baselines::{count_updates, inv_out_degrees, C_VERTEX, D_EDGE};
 use crate::graph::{Edge, EdgeList};
 use crate::metrics::{IterationMetrics, RunMetrics};
@@ -301,7 +301,7 @@ impl DistEngine {
             let t0 = Instant::now();
             let active_frac = active as f64 / n.max(1) as f64;
             let dst = crate::baselines::sweep(
-                adapt_kind(app.compute()),
+                adapt_kind(app.kernel()),
                 &self.g.edges,
                 n,
                 &self.inv_out_deg,
@@ -364,10 +364,10 @@ impl DistEngine {
     }
 }
 
-/// Distributed engines run the same math; kinds pass through unchanged
+/// Distributed engines run the same math; kernels pass through unchanged
 /// (hook point for system-specific semantics, e.g. combiner rounding).
-fn adapt_kind(kind: ShardCompute) -> ShardCompute {
-    kind
+fn adapt_kind(kernel: ShardKernel) -> ShardKernel {
+    kernel
 }
 
 /// Convenience: partition quality diagnostics used by the benches.
@@ -437,7 +437,7 @@ mod tests {
         let (mut src, _) = PageRank::new().init(g.num_vertices);
         for _ in 0..5 {
             src = crate::baselines::sweep(
-                PageRank::new().compute(),
+                PageRank::new().kernel(),
                 &g.edges,
                 g.num_vertices,
                 &inv,

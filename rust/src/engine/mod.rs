@@ -1,57 +1,49 @@
 //! The VSW (vertex-centric sliding window) engine — paper §2.3/§2.4.
 //!
-//! All vertices live in RAM for the whole run (`SrcVertexArray` +
-//! `DstVertexArray`); edges stream from disk shard-by-shard through the
-//! compressed edge cache; inactive shards are skipped via per-shard Bloom
-//! filters once the active ratio drops below the threshold.  Workers write
-//! disjoint `DstVertexArray` intervals with no locks or atomics
-//! ([`dst::SharedDst`]).
+//! All vertices live in RAM for the whole run; edges stream from disk
+//! shard-by-shard through the compressed edge cache; inactive shards are
+//! skipped via per-shard Bloom filters once the active ratio drops below
+//! the threshold.  Workers write disjoint `DstVertexArray` intervals with
+//! no locks or atomics ([`crate::exec::SharedDst`]).
 //!
-//! Each iteration runs as a three-stage pipeline:
-//! 1. a **scheduler** ([`schedule::shard_worklist`]) computes the
-//!    active-shard worklist up front with one batched Bloom pass;
-//! 2. a bounded **prefetcher** ([`prefetch`]) stages upcoming shards —
-//!    read, decompress, parse — on dedicated I/O threads so (simulated)
-//!    disk time overlaps compute instead of serialising with it;
-//! 3. **compute workers** drain the ready queue and only ever touch
-//!    decoded shards; activated vertices land in a shared bitset
-//!    ([`schedule::ActiveBits`]) that the barrier scans into the next
-//!    sorted active set.
+//! Since the unified-execution refactor this module is only the VSW
+//! *plug-in* for the shared execution core: [`VswEngine`] owns the
+//! graph directory, the Bloom set and the edge cache, and implements
+//! [`ShardSource`] —
 //!
-//! Reported iteration time is `wall + (sim − overlapped)`: simulated disk
-//! seconds charged while the pipeline kept compute busy are overlap, not
-//! critical path.  Results are bit-identical to the sequential
-//! (`workers = 1`, `prefetch_depth = 0`) engine for PageRank/SSSP/CC —
-//! see `rust/tests/determinism.rs`.
+//! - **schedule**: the active-shard worklist via one batched Bloom pass
+//!   ([`crate::exec::schedule::shard_worklist`], §2.4.1);
+//! - **load**: cache probe (decode-once) or disk read + parse + cache
+//!   admission, on the core's I/O threads;
+//! - **compute**: the shard's exclusive interval of the dst array,
+//!   executed by a [`Backend`] (native rust loops or the AOT-compiled
+//!   JAX+Pallas artifacts via PJRT).
 //!
-//! Two compute backends execute the shard update itself:
-//! - [`Backend::Native`] — hand-written rust loops (the fast path);
-//! - [`Backend::Pjrt`] — the AOT-compiled L2/L1 JAX+Pallas artifacts via
-//!   the PJRT CPU client (proves the three-layer composition; ablation
-//!   `--backend pjrt`).
+//! The iteration loop itself — prefetch pipeline, active-set rebuild,
+//! overlap accounting, adaptive depth — lives in [`crate::exec::ExecCore`]
+//! and is shared verbatim with every baseline engine, so Figs 9/10 and
+//! Tables 5–7 compare I/O schedules, not execution loops.  Results are
+//! bit-identical to the sequential (`workers = 1`, `prefetch_depth = 0`)
+//! reference for every app — see `rust/tests/determinism.rs` and
+//! `rust/tests/cross_engine.rs`.
 
-pub mod dst;
-pub mod prefetch;
-pub mod schedule;
-
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::apps::{ShardCompute, VertexProgram};
+use crate::apps::{Apply, Combine, VertexProgram};
 use crate::bloom::BloomSet;
 use crate::cache::EdgeCache;
 use crate::compress::CacheMode;
-use crate::graph::VertexId;
-use crate::metrics::{IterationMetrics, MemoryAccount, RunMetrics};
+use crate::exec::{
+    schedule, ExecConfig, ExecCore, IterCtx, RangeMarker, ShardSource, SharedDst, UnitOutput,
+};
+use crate::graph::{Csr, VertexId};
+use crate::metrics::{MemoryAccount, RunMetrics};
 use crate::runtime::ShardExecutor;
 use crate::storage::disk::Disk;
 use crate::storage::shard::Shard;
 use crate::storage::{GraphDir, Property, VertexInfo};
-use dst::SharedDst;
-use schedule::ActiveBits;
 
 /// Shard-update execution backend.
 #[derive(Clone)]
@@ -90,32 +82,33 @@ pub struct EngineConfig {
     /// the pipeline off (shards load inline on the worker, the pre-PR
     /// behaviour and the determinism baseline).
     pub prefetch_depth: usize,
+    /// Resize the ready queue each iteration from the measured
+    /// decode-vs-compute rate (CLI: `--prefetch-depth auto`);
+    /// `prefetch_depth` then only seeds the first iteration.
+    pub prefetch_auto: bool,
     /// Dedicated I/O threads feeding the ready queue; 1–2 is enough to
     /// keep the (simulated) disk continuously busy.
     pub prefetch_threads: usize,
-    /// Byte budget for permanently memoizing parsed shards of compressed
-    /// cache entries (decode-once hot path).  0 disables the memo; the
-    /// prefetcher still decodes each scheduled shard only once per
-    /// iteration, on the I/O threads.
+    /// Byte budget for the decoded pool: parsed shards of compressed
+    /// cache entries memoized under LRU eviction (decode-once hot path).
+    /// 0 disables the memo; the prefetcher still decodes each scheduled
+    /// shard only once per iteration, on the I/O threads.
     pub decode_memo_budget: u64,
     pub backend: Backend,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
+        let exec = ExecConfig::default();
         EngineConfig {
-            // capped at the paper's core count: more workers than that
-            // only adds context switches (and inflates the in-flight
-            // shard memory account) with no modelled benefit
-            workers: std::thread::available_parallelism()
-                .map_or(1, |n| n.get())
-                .min(12),
+            workers: exec.workers,
             cache_capacity: 256 * 1024 * 1024,
             cache_mode: None,
             selective: true,
             active_threshold: 0.001,
-            prefetch_depth: 4,
-            prefetch_threads: 2,
+            prefetch_depth: exec.prefetch_depth,
+            prefetch_auto: exec.prefetch_auto,
+            prefetch_threads: exec.prefetch_threads,
             decode_memo_budget: 256 * 1024 * 1024,
             backend: Backend::Native,
         }
@@ -225,26 +218,17 @@ impl VswEngine {
         self.run_impl(app, max_iters)
     }
 
-    /// The single run loop behind [`run`](Self::run) and
-    /// [`run_to_values`](Self::run_to_values) (they used to be separate
-    /// copies that drifted — `run_to_values` silently dropped the sim-disk
-    /// accounting).
+    /// Build the VSW shard source and hand the run to the shared
+    /// execution core ([`ExecCore`]).
     fn run_impl(
         &mut self,
         app: &dyn VertexProgram,
         max_iters: u32,
     ) -> Result<(Vec<f32>, RunMetrics)> {
-        let n = self.prop.num_vertices;
-        anyhow::ensure!(
-            n < (1 << 24),
-            "f32 vertex values require ids < 2^24 (got {n})"
-        );
         if app.needs_weights() {
             anyhow::ensure!(self.prop.weighted, "{} needs a weighted graph dir", app.name());
         }
-        let (mut src, mut active) = app.init(n);
-        anyhow::ensure!(src.len() == n as usize, "init length mismatch");
-        let inv_out_deg: Arc<Vec<f32>> = Arc::new(if app.uses_out_degrees() {
+        let inv_out_deg: Vec<f32> = if app.uses_out_degrees() {
             self.info
                 .out_degree
                 .iter()
@@ -252,288 +236,27 @@ impl VswEngine {
                 .collect()
         } else {
             Vec::new()
-        });
-
-        let mut run = RunMetrics::default();
-        let run_start = Instant::now();
-        let sim_start = self.disk.snapshot().sim_nanos;
-
-        for iter in 0..max_iters {
-            if active.is_empty() {
-                run.converged = true;
-                break;
-            }
-            let m = self.run_iteration(app, iter, &mut src, &mut active, &inv_out_deg)?;
-            run.iterations.push(m);
-        }
-        if active.is_empty() {
-            run.converged = true;
-        }
-        run.total_wall = run_start.elapsed();
-        run.total_sim_disk_seconds =
-            (self.disk.snapshot().sim_nanos - sim_start) as f64 / 1e9;
-        run.total_overlapped_sim_seconds =
-            run.iterations.iter().map(|m| m.overlapped_sim_seconds).sum();
-        run.memory_bytes = self.memory_account().total();
-        Ok((src, run))
-    }
-
-    /// One iteration of Algorithm 2 as a schedule → prefetch → compute
-    /// pipeline with a barrier swap at the end.
-    fn run_iteration(
-        &self,
-        app: &dyn VertexProgram,
-        iter: u32,
-        src: &mut Vec<f32>,
-        active: &mut Vec<VertexId>,
-        inv_out_deg: &Arc<Vec<f32>>,
-    ) -> Result<IterationMetrics> {
-        let n = self.prop.num_vertices as usize;
-        let num_shards = self.prop.num_shards as usize;
-        let active_ratio = active.len() as f64 / n.max(1) as f64;
-        // Algorithm 2 line 5: only pay the Bloom probes when the active
-        // set is small enough for skipping to plausibly win.
-        let selective_on = self.cfg.selective && active_ratio < self.cfg.active_threshold;
-
-        let io_before = self.disk.snapshot();
-        let cache_before = self.cache.snapshot();
-        let t0 = Instant::now();
-
-        // stage 1: the scheduler decides the whole shard worklist up front
-        let (worklist, skipped) =
-            schedule::shard_worklist(&self.blooms, num_shards, active, selective_on);
-
-        // §Perf: for PageRank, fold src·inv_out_deg once per iteration
-        // (|V| multiplies) instead of once per edge (|E| ≫ |V| gathers).
-        let contrib: Arc<Vec<f32>> = Arc::new(match app.compute() {
-            ShardCompute::PageRankSum { .. } => src
-                .iter()
-                .zip(inv_out_deg.iter())
-                .map(|(&v, &d)| v * d)
-                .collect(),
-            ShardCompute::RelaxMin { .. } => Vec::new(),
-        });
-
-        let dst = SharedDst::new(src.clone());
-        let bits = ActiveBits::new(n);
-        let next_fetch = AtomicUsize::new(0);
-        let processed = AtomicU32::new(0);
-        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-        let abort = AtomicBool::new(false);
-        let counters = prefetch::PipelineCounters::default();
-
+        };
         let workers = match &self.cfg.backend {
             // PJRT executions serialise on the executable lock; extra
             // workers would only contend.
             Backend::Pjrt(_) => 1,
             Backend::Native => self.cfg.workers.max(1),
         };
-        let pipelined = self.cfg.prefetch_depth > 0 && self.cfg.prefetch_threads > 0;
-
-        // shared per-shard worker body (both acquisition modes): execute
-        // the shard or route its error to the barrier.  One copy, so the
-        // pipelined path can never drift from the sequential reference —
-        // the same hazard the run/run_to_values dedup fixes.
-        let src_view: &[f32] = src;
-        let inv_view: &[f32] = inv_out_deg;
-        let contrib_view: &[f32] = &contrib;
-        let dst_ref = &dst;
-        let consume = |marker: &mut schedule::RangeMarker<'_>,
-                       id: u32,
-                       res: Result<Arc<Shard>>| {
-            let outcome = match res {
-                Ok(shard) => self.process_shard(
-                    app,
-                    id,
-                    &shard,
-                    src_view,
-                    inv_view,
-                    contrib_view,
-                    dst_ref,
-                    marker,
-                ),
-                Err(e) => Err(e),
-            };
-            match outcome {
-                Ok(()) => {
-                    processed.fetch_add(1, Ordering::Relaxed);
-                }
-                Err(e) => {
-                    let mut fe = first_err.lock().unwrap();
-                    if fe.is_none() {
-                        *fe = Some(e);
-                    }
-                    abort.store(true, Ordering::Relaxed);
-                }
-            }
+        let exec_cfg = ExecConfig {
+            workers,
+            prefetch_depth: self.cfg.prefetch_depth,
+            prefetch_auto: self.cfg.prefetch_auto,
+            prefetch_threads: self.cfg.prefetch_threads,
         };
-        let consume = &consume;
-
-        // stages 2+3: I/O threads stage shards into the bounded ready
-        // queue; compute workers drain it.  Without prefetching, workers
-        // load inline (the sequential reference path).
-        let (queue_opt, tx_opt) = if pipelined {
-            let (q, tx) = prefetch::ReadyQueue::with_sender(self.cfg.prefetch_depth);
-            (Some(q), Some(tx))
-        } else {
-            (None, None)
-        };
-        std::thread::scope(|scope| {
-            if let (Some(queue), Some(tx)) = (&queue_opt, tx_opt) {
-                for _ in 0..self.cfg.prefetch_threads.max(1) {
-                    let tx = tx.clone();
-                    let worklist = &worklist;
-                    let next_fetch = &next_fetch;
-                    let abort = &abort;
-                    let counters = &counters;
-                    scope.spawn(move || {
-                        prefetch::io_thread(
-                            |id| self.load_shard(id),
-                            worklist,
-                            next_fetch,
-                            abort,
-                            tx,
-                            counters,
-                        );
-                    });
-                }
-                drop(tx); // queue closes when the last I/O thread finishes
-                for _ in 0..workers {
-                    let counters = &counters;
-                    let abort = &abort;
-                    let bits = &bits;
-                    scope.spawn(move || {
-                        let _guard = prefetch::AbortOnPanic(abort);
-                        let mut marker = bits.marker();
-                        while let Some((id, res)) = queue.next(counters) {
-                            if abort.load(Ordering::Relaxed) {
-                                // keep draining so I/O threads never block
-                                // forever on a full queue after a failure
-                                continue;
-                            }
-                            consume(&mut marker, id, res);
-                        }
-                        marker.flush();
-                    });
-                }
-            } else {
-                for _ in 0..workers {
-                    let worklist = &worklist;
-                    let next_fetch = &next_fetch;
-                    let abort = &abort;
-                    let bits = &bits;
-                    scope.spawn(move || {
-                        let mut marker = bits.marker();
-                        loop {
-                            // an error recorded by any worker stops the
-                            // sweep (consume raised the abort flag)
-                            if abort.load(Ordering::Relaxed) {
-                                break;
-                            }
-                            let i = next_fetch.fetch_add(1, Ordering::Relaxed);
-                            if i >= worklist.len() {
-                                break;
-                            }
-                            let id = worklist[i];
-                            consume(&mut marker, id, self.load_shard(id));
-                        }
-                        marker.flush();
-                    });
-                }
-            }
-        });
-        if let Some(e) = first_err.into_inner().unwrap() {
-            return Err(e);
-        }
-
-        dst.release_all();
-        *src = dst.into_inner();
-        *active = bits.to_sorted_vec();
-
-        let wall = t0.elapsed();
-        let io_after = self.disk.snapshot();
-        let sim_disk_seconds = (io_after.sim_nanos - io_before.sim_nanos) as f64 / 1e9;
-        // Pipeline overlap model: with dedicated I/O threads the (simulated)
-        // device streams concurrently with compute, so the iteration costs
-        // max(wall, sim) instead of wall + sim — i.e. min(wall, sim) of the
-        // charged device time is hidden.  Without prefetching every charge
-        // sits on the critical path, exactly the pre-pipeline accounting.
-        let overlapped_sim_seconds = if pipelined {
-            sim_disk_seconds.min(wall.as_secs_f64())
-        } else {
-            0.0
-        };
-        Ok(IterationMetrics {
-            iteration: iter,
-            wall,
-            sim_disk_seconds,
-            overlapped_sim_seconds,
-            active_vertices: active.len() as u64,
-            active_ratio: active.len() as f64 / n.max(1) as f64,
-            shards_processed: processed.load(Ordering::Relaxed),
-            shards_skipped: skipped,
-            shards_prefetched: counters.prefetched.load(Ordering::Relaxed),
-            ready_hits: counters.ready_hits.load(Ordering::Relaxed),
-            ready_misses: counters.ready_misses.load(Ordering::Relaxed),
-            io: io_after.since(&io_before),
-            cache: {
-                let c = self.cache.snapshot();
-                crate::cache::CacheSnapshot {
-                    hits: c.hits - cache_before.hits,
-                    misses: c.misses - cache_before.misses,
-                    admitted: c.admitted - cache_before.admitted,
-                    rejected: c.rejected - cache_before.rejected,
-                    used_bytes: c.used_bytes,
-                    decodes: c.decodes - cache_before.decodes,
-                    decode_skips: c.decode_skips - cache_before.decode_skips,
-                    memo_bytes: c.memo_bytes,
-                }
-            },
-        })
-    }
-
-    /// Execute one decoded shard: write its interval of dst and mark
-    /// activated vertices in the shared bitset.
-    #[allow(clippy::too_many_arguments)]
-    fn process_shard(
-        &self,
-        app: &dyn VertexProgram,
-        shard_id: u32,
-        shard: &Shard,
-        src: &[f32],
-        inv_out_deg: &[f32],
-        contrib: &[f32],
-        dst: &SharedDst,
-        marker: &mut schedule::RangeMarker<'_>,
-    ) -> Result<()> {
-        let (a, b) = self.prop.intervals[shard_id as usize];
-        debug_assert_eq!(shard.start_vertex, a);
-        let rows = (b - a) as usize;
-        // SAFETY: shard intervals are disjoint (prep::compute_intervals
-        // invariant, verified by its tests + the debug registry).
-        let out = unsafe { dst.claim(a as usize, rows) };
-        match &self.cfg.backend {
-            Backend::Native => match app.compute() {
-                ShardCompute::PageRankSum { damping } => {
-                    native_update_pagerank_contrib(shard, contrib, damping, out);
-                }
-                kind => native_update(kind, shard, src, inv_out_deg, out),
-            },
-            Backend::Pjrt(exe) => {
-                pjrt_update(app.compute(), exe, shard, src, inv_out_deg, out)?;
-            }
-        }
-        for r in 0..rows {
-            let v = a + r as u32;
-            if app.is_update(src[v as usize], out[r]) {
-                marker.mark(v);
-            }
-        }
-        Ok(())
+        let this = &*self;
+        let source = VswSource { eng: this };
+        let mut core = ExecCore::new(exec_cfg, &this.disk, Some(&this.cache));
+        core.run(&source, app, this.prop.num_vertices, &inv_out_deg, max_iters)
     }
 
     /// Load one shard: cache hit (decode-once), else disk read + parse +
-    /// cache admission.  Runs on the prefetcher's I/O threads when the
+    /// cache admission.  Runs on the core's I/O threads when the
     /// pipeline is on, inline on workers otherwise.
     fn load_shard(&self, shard_id: u32) -> Result<Arc<Shard>> {
         if let Some(s) = self.cache.get(shard_id)? {
@@ -548,66 +271,98 @@ impl VswEngine {
     }
 }
 
-/// PageRank fast path: contributions pre-folded per iteration, so the
-/// inner loop does one gather + one add per edge (`Σ contrib[col[e]]`).
-/// Bit-identical to `native_update`'s PageRankSum (the `src·inv` product
-/// rounds in the same place either way).
-pub fn native_update_pagerank_contrib(
-    shard: &Shard,
-    contrib: &[f32],
-    damping: f32,
-    out: &mut [f32],
-) {
-    let rows = shard.rows();
-    debug_assert_eq!(out.len(), rows);
-    let base = (1.0 - damping) / contrib.len() as f32;
-    let ro = &shard.csr.row_offsets;
-    let col = &shard.csr.col;
-    for r in 0..rows {
-        let mut sum = 0.0f32;
-        for &c in &col[ro[r] as usize..ro[r + 1] as usize] {
-            sum += contrib[c as usize];
+/// The [`ShardSource`] plug-in exposing a [`VswEngine`] to the shared
+/// execution core.
+struct VswSource<'e> {
+    eng: &'e VswEngine,
+}
+
+impl ShardSource for VswSource<'_> {
+    type Item = Arc<Shard>;
+
+    fn schedule(&self, _iteration: u32, active: &[VertexId]) -> (Vec<u32>, u32) {
+        let eng = self.eng;
+        let n = eng.prop.num_vertices as usize;
+        let active_ratio = active.len() as f64 / n.max(1) as f64;
+        // Algorithm 2 line 5: only pay the Bloom probes when the active
+        // set is small enough for skipping to plausibly win.
+        let selective_on = eng.cfg.selective && active_ratio < eng.cfg.active_threshold;
+        schedule::shard_worklist(
+            &eng.blooms,
+            eng.prop.num_shards as usize,
+            active,
+            selective_on,
+        )
+    }
+
+    fn load(&self, id: u32) -> Result<Arc<Shard>> {
+        self.eng.load_shard(id)
+    }
+
+    /// Execute one decoded shard: write its interval of dst and mark
+    /// activated vertices in the shared bitset.
+    fn compute(
+        &self,
+        id: u32,
+        shard: Arc<Shard>,
+        ctx: &IterCtx<'_>,
+        dst: &SharedDst,
+        marker: &mut RangeMarker<'_>,
+    ) -> Result<UnitOutput> {
+        let (a, b) = self.eng.prop.intervals[id as usize];
+        debug_assert_eq!(shard.start_vertex, a);
+        let rows = (b - a) as usize;
+        // SAFETY: shard intervals are disjoint (prep::compute_intervals
+        // invariant, verified by its tests + the debug registry).
+        let out = unsafe { dst.claim(a as usize, rows) };
+        match &self.eng.cfg.backend {
+            Backend::Native => native_update(ctx, &shard.csr, a, out),
+            Backend::Pjrt(exe) => pjrt_update(ctx, exe, &shard, out)?,
         }
-        out[r] = base + damping * sum;
+        crate::exec::mark_interval(ctx, a, out, marker);
+        Ok(UnitOutput::InPlace)
+    }
+
+    fn residency_bytes(&self) -> u64 {
+        self.eng.memory_account().total()
     }
 }
 
-/// Native shard update: the paper's `Update` loop over the shard CSR.
-/// `out` must enter holding the current values of the shard's interval.
-pub fn native_update(
-    kind: ShardCompute,
-    shard: &Shard,
-    src: &[f32],
-    inv_out_deg: &[f32],
-    out: &mut [f32],
-) {
-    let rows = shard.rows();
+/// Native shard update: the paper's `Update` loop over the shard CSR,
+/// generalized over [`ShardKernel`].  `out` must enter holding the
+/// current values of the shard's interval `[start_vertex, ..)`.
+///
+/// Sum kernels read the iteration's pre-folded `contrib` array (one
+/// gather + one add per edge); monotone kernels fold from the old value.
+/// Bit-identical to [`crate::exec::fold_edges_interval`] over the same
+/// per-destination edge order (canonically: ascending source id).
+pub fn native_update(ctx: &IterCtx<'_>, csr: &Csr, start_vertex: u32, out: &mut [f32]) {
+    let kernel = ctx.kernel;
+    let rows = csr.rows();
     debug_assert_eq!(out.len(), rows);
-    let ro = &shard.csr.row_offsets;
-    let col = &shard.csr.col;
-    match kind {
-        ShardCompute::PageRankSum { damping } => {
-            let base = (1.0 - damping) / src.len() as f32;
+    let ro = &csr.row_offsets;
+    let col = &csr.col;
+    match kernel.combine {
+        Combine::Sum => {
+            let contrib = ctx.contrib;
             for r in 0..rows {
                 let mut sum = 0.0f32;
-                for i in ro[r] as usize..ro[r + 1] as usize {
-                    let u = col[i] as usize;
-                    sum += src[u] * inv_out_deg[u];
+                for &c in &col[ro[r] as usize..ro[r + 1] as usize] {
+                    sum += contrib[c as usize];
                 }
-                out[r] = base + damping * sum;
+                let v = start_vertex + r as u32;
+                out[r] = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
             }
         }
-        ShardCompute::RelaxMin { cost } => {
-            let weights = shard.csr.weights.as_deref();
+        Combine::Min | Combine::Max => {
+            let weights = csr.weights.as_deref();
+            let src = ctx.src;
             for r in 0..rows {
                 let mut m = out[r]; // current value (== src of this row)
                 for i in ro[r] as usize..ro[r + 1] as usize {
                     let u = col[i] as usize;
-                    let w = cost.apply(weights.map_or(1.0, |ws| ws[i]));
-                    let cand = src[u] + w;
-                    if cand < m {
-                        m = cand;
-                    }
+                    let w = weights.map_or(1.0, |ws| ws[i]);
+                    m = kernel.combine(m, kernel.edge_value(src[u], 0.0, w));
                 }
                 out[r] = m;
             }
@@ -616,34 +371,43 @@ pub fn native_update(
 }
 
 /// PJRT shard update: expand CSR to (col, seg, w) chunks within the
-/// artifact's static capacities and combine partial results.
+/// artifact's static capacities and combine partial results.  Affine sum
+/// kernels run the `pagerank` artifact (base mass added natively at the
+/// end, so PPR's reset vector works unchanged); min-relaxations run
+/// `relax_min`.  Max kernels (widest path) have no AOT artifact yet.
 pub fn pjrt_update(
-    kind: ShardCompute,
+    ctx: &IterCtx<'_>,
     exe: &ShardExecutor,
     shard: &Shard,
-    src: &[f32],
-    inv_out_deg: &[f32],
     out: &mut [f32],
 ) -> Result<()> {
+    let kernel = ctx.kernel;
     let rows = shard.rows();
     let ro = &shard.csr.row_offsets;
     let col = &shard.csr.col;
     let weights = shard.csr.weights.as_deref();
 
+    // For affine sum kernels we accumulate raw scaled Σ terms (base
+    // passed as 0) and add the per-vertex base mass once at the end.
+    let base = match kernel.apply {
+        Apply::Affine { base, .. } => {
+            out.fill(0.0);
+            Some(base)
+        }
+        Apply::MeetOld => {
+            anyhow::ensure!(
+                kernel.combine == Combine::Min,
+                "no AOT artifact for {:?} relaxations; use --backend native",
+                kernel.combine
+            );
+            None
+        }
+    };
+
     // Chunk rows so each call fits (rc rows, ec edges).  A single row
     // wider than ec is split across calls (partials combine exactly for
     // both sum and min).
     let mut row_start = 0usize;
-    // For PageRankSum we accumulate raw 0.85·Σ terms (base passed as 0)
-    // and add the teleport base once at the end.
-    let damping_base = match kind {
-        ShardCompute::PageRankSum { damping } => {
-            out.fill(0.0);
-            (1.0 - damping) / src.len() as f32
-        }
-        ShardCompute::RelaxMin { .. } => 0.0,
-    };
-
     while row_start < rows {
         let mut row_end = row_start;
         // grow the row window up to rc rows / ec edges
@@ -663,7 +427,7 @@ pub fn pjrt_update(
                 let cols: Vec<u32> = col[off..off + take].to_vec();
                 let segs = vec![0u32; take];
                 run_chunk(
-                    kind, exe, src, inv_out_deg, &cols, &segs, weights.map(|w| &w[off..off + take]),
+                    ctx, exe, &cols, &segs, weights.map(|w| &w[off..off + take]),
                     &mut out[row_start..row_start + 1],
                 )?;
                 off += take;
@@ -681,44 +445,47 @@ pub fn pjrt_update(
             }
         }
         run_chunk(
-            kind, exe, src, inv_out_deg, &cols, &segs, weights.map(|w| &w[lo..hi]),
+            ctx, exe, &cols, &segs, weights.map(|w| &w[lo..hi]),
             &mut out[row_start..row_end],
         )?;
         row_start = row_end;
     }
 
-    if let ShardCompute::PageRankSum { .. } = kind {
-        for o in out.iter_mut() {
-            *o += damping_base;
+    if let Some(base) = base {
+        for (r, o) in out.iter_mut().enumerate() {
+            *o += base.at(shard.start_vertex + r as u32, ctx.num_vertices);
         }
     }
     Ok(())
 }
 
 fn run_chunk(
-    kind: ShardCompute,
+    ctx: &IterCtx<'_>,
     exe: &ShardExecutor,
-    src: &[f32],
-    inv_out_deg: &[f32],
     cols: &[u32],
     segs: &[u32],
     weights: Option<&[f32]>,
     out: &mut [f32],
 ) -> Result<()> {
-    match kind {
-        ShardCompute::PageRankSum { .. } => {
+    match ctx.kernel.apply {
+        Apply::Affine { .. } => {
             let w = vec![1.0f32; cols.len()];
-            let part = exe.pagerank(src, inv_out_deg, cols, segs, &w, 0.0, out.len())?;
+            let part =
+                exe.pagerank(ctx.src, ctx.inv_out_deg, cols, segs, &w, 0.0, out.len())?;
             for (o, p) in out.iter_mut().zip(part) {
                 *o += p;
             }
         }
-        ShardCompute::RelaxMin { cost } => {
+        Apply::MeetOld => {
+            let cost = match ctx.kernel.gather {
+                crate::apps::EdgeGather::AddCost(c) => c,
+                g => anyhow::bail!("unsupported PJRT gather {g:?}"),
+            };
             let w: Vec<f32> = match weights {
                 Some(ws) => ws.iter().map(|&x| cost.apply(x)).collect(),
                 None => vec![cost.apply(1.0); cols.len()],
             };
-            let part = exe.relax_min(src, cols, segs, &w, out)?;
+            let part = exe.relax_min(ctx.src, cols, segs, &w, out)?;
             out.copy_from_slice(&part);
         }
     }
@@ -728,9 +495,9 @@ fn run_chunk(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::{Cc, PageRank, Sssp};
+    use crate::apps::{Cc, PageRank, Ppr, ShardKernel, Sssp, Widest};
     use crate::graph::rmat::{rmat, RmatParams};
-    use crate::graph::{Csr, Edge, EdgeList};
+    use crate::graph::{Edge, EdgeList};
     use crate::prep::{preprocess_into, PrepConfig};
     use crate::storage::disk::DiskProfile;
 
@@ -845,6 +612,59 @@ mod tests {
     }
 
     #[test]
+    fn ppr_mass_concentrates_near_seed() {
+        let g = rmat(9, 5_000, 33, RmatParams::default());
+        let (mut e, _) = open_engine(&g, "ppr_ref", EngineConfig::default(), false);
+        let seed = 3u32;
+        let (vals, _) = e.run_to_values(&Ppr::new(seed), 20).unwrap();
+        // dense reference
+        let n = g.num_vertices as usize;
+        let outd = g.out_degrees();
+        let mut ranks = vec![0.0f32; n];
+        ranks[seed as usize] = 1.0;
+        for _ in 0..20 {
+            let mut next = vec![0.0f32; n];
+            next[seed as usize] = 0.15;
+            // dangling vertices drop their mass, as in the engine
+            for edge in &g.edges {
+                next[edge.dst as usize] +=
+                    0.85 * ranks[edge.src as usize] / outd[edge.src as usize].max(1) as f32;
+            }
+            ranks = next;
+        }
+        for (i, (a, b)) in vals.iter().zip(&ranks).enumerate() {
+            assert!((a - b).abs() < 1e-5, "vertex {i}: {a} vs {b}");
+        }
+        // the seed holds the teleport mass
+        assert!(vals[seed as usize] >= 0.15 - 1e-6);
+    }
+
+    #[test]
+    fn widest_path_matches_dense_relaxation() {
+        let g = rmat(8, 3_000, 39, RmatParams::default());
+        let (mut e, _) = open_engine(&g, "widest_ref", EngineConfig::default(), true);
+        let (vals, run) = e.run_to_values(&Widest::new(0), 200).unwrap();
+        assert!(run.converged);
+        let n = g.num_vertices as usize;
+        let mut width = vec![0.0f32; n];
+        width[0] = f32::INFINITY;
+        loop {
+            let mut changed = false;
+            for edge in &g.edges {
+                let cand = width[edge.src as usize].min(edge.weight);
+                if cand > width[edge.dst as usize] {
+                    width[edge.dst as usize] = cand;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        assert_eq!(vals, width);
+    }
+
+    #[test]
     fn selective_scheduling_skips_shards_and_preserves_results() {
         let g = rmat(9, 5_000, 43, RmatParams::default());
         // 512-vertex test graph: the paper's 1e-3 threshold would never
@@ -924,6 +744,26 @@ mod tests {
         let (v1, _) = e1.run_to_values(&PageRank::new(), 6).unwrap();
         let (v2, _) = e2.run_to_values(&PageRank::new(), 6).unwrap();
         assert_eq!(v1, v2, "prefetch pipeline changed results");
+    }
+
+    #[test]
+    fn adaptive_prefetch_matches_fixed_depth_results() {
+        let g = rmat(9, 6_000, 69, RmatParams::default());
+        let fixed = EngineConfig { prefetch_depth: 4, ..Default::default() };
+        let auto = EngineConfig { prefetch_auto: true, ..Default::default() };
+        let (mut e1, _) = open_engine(&g, "auto_fixed", fixed, false);
+        let (mut e2, _) = open_engine(&g, "auto_on", auto, false);
+        let (v1, _) = e1.run_to_values(&PageRank::new(), 6).unwrap();
+        let (v2, r2) = e2.run_to_values(&PageRank::new(), 6).unwrap();
+        assert_eq!(v1, v2, "adaptive depth changed results");
+        for m in &r2.iterations {
+            assert!(
+                (1..=crate::exec::MAX_AUTO_DEPTH as u32).contains(&m.prefetch_depth_used),
+                "iter {}: depth {} out of bounds",
+                m.iteration,
+                m.prefetch_depth_used
+            );
+        }
     }
 
     #[test]
@@ -1024,6 +864,7 @@ mod tests {
         let g = rmat(8, 1_000, 61, RmatParams::default());
         let (mut e, _) = open_engine(&g, "wreject", EngineConfig::default(), false);
         assert!(e.run(&Sssp::new(0), 5).is_err());
+        assert!(e.run(&Widest::new(0), 5).is_err());
     }
 
     #[test]
@@ -1034,8 +875,6 @@ mod tests {
         let r1 = e1.run(&PageRank::new(), 4).unwrap();
         let (_, r2) = e2.run_to_values(&PageRank::new(), 4).unwrap();
         assert_eq!(r1.iterations.len(), r2.iterations.len());
-        // the old run_to_values dropped sim accounting entirely; both
-        // paths now share run_impl
         assert_eq!(
             r1.iterations
                 .iter()
@@ -1051,20 +890,22 @@ mod tests {
 
     #[test]
     fn native_update_pagerank_basic() {
-        // 2 vertices, edges 0->1 twice from different sources
+        // 2 vertices, edges 0->1 and 1->0
         let edges = vec![Edge::new(0, 1), Edge::new(1, 0)];
         let csr = Csr::from_edges(&edges, 0, 2, false);
-        let shard = Shard { id: 0, start_vertex: 0, csr };
         let src = vec![0.5f32, 0.5];
         let inv = vec![1.0f32, 1.0];
+        let contrib: Vec<f32> = src.iter().zip(&inv).map(|(&v, &d)| v * d).collect();
+        let ctx = IterCtx {
+            kernel: ShardKernel::pagerank(0.85),
+            num_vertices: 2,
+            src: &src,
+            inv_out_deg: &inv,
+            contrib: &contrib,
+            iteration: 0,
+        };
         let mut out = src.clone();
-        native_update(
-            ShardCompute::PageRankSum { damping: 0.85 },
-            &shard,
-            &src,
-            &inv,
-            &mut out,
-        );
+        native_update(&ctx, &csr, 0, &mut out);
         let base = 0.15 / 2.0;
         assert!((out[0] - (base + 0.85 * 0.5)).abs() < 1e-6);
         assert!((out[1] - (base + 0.85 * 0.5)).abs() < 1e-6);

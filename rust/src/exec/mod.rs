@@ -1,0 +1,706 @@
+//! The unified execution core: one schedule→prefetch→compute pipeline
+//! for every engine.
+//!
+//! GraphMP's headline comparison (Tables 5–7, Figs 9–10) only holds up
+//! when the *execution loop* is identical across systems and just the
+//! I/O schedule differs — NXgraph (arXiv:1510.06916) shows that loop
+//! differences otherwise dominate the measured gaps.  This module is
+//! that shared loop:
+//!
+//! - [`ShardSource`] is the engine-specific half: what to load per
+//!   iteration (schedule + load, with the engine's model I/O charged on
+//!   the load path), how a loaded unit computes, and what residency to
+//!   charge.  The VSW engine, GraphChi-PSW, X-Stream-ESG, GridGraph-DSW
+//!   and the GraphMat-like in-memory engine all implement it.
+//! - [`ExecCore`] is the engine-agnostic half: the iteration loop
+//!   (convergence, active-set rebuild through [`schedule::ActiveBits`]),
+//!   the contribution pre-fold for sum kernels, the bounded prefetch
+//!   pipeline ([`pipeline::run_worklist`]), deterministic gathering of
+//!   scatter-style units, iteration accounting (wall + simulated disk +
+//!   overlap), cache-delta attachment, and the adaptive prefetch depth.
+//!
+//! Determinism: in-place units write disjoint [`SharedDst`] intervals;
+//! scatter units ([`UnitOutput::Updates`]) are folded at the barrier in
+//! worklist order regardless of completion order — so results are
+//! bit-identical in worker count, prefetch depth, and engine (see
+//! `rust/tests/cross_engine.rs`).
+
+pub mod dst;
+pub mod pipeline;
+pub mod schedule;
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::apps::{Combine, ShardKernel, VertexProgram};
+use crate::cache::EdgeCache;
+use crate::graph::{Edge, VertexId};
+use crate::metrics::{IterationMetrics, RunMetrics};
+use crate::storage::disk::Disk;
+pub use dst::SharedDst;
+pub use schedule::{ActiveBits, RangeMarker};
+
+/// Execution knobs shared by every engine (the paper's settings).
+#[derive(Clone, Copy, Debug)]
+pub struct ExecConfig {
+    /// Compute worker threads (paper: one shard per CPU core at a time).
+    pub workers: usize,
+    /// Ready-queue depth of the prefetcher: how many loaded units the
+    /// I/O threads may stage ahead of the compute workers.  0 turns the
+    /// pipeline off (units load inline on the worker — the sequential
+    /// reference path and the determinism baseline).
+    pub prefetch_depth: usize,
+    /// Adapt the queue depth each iteration from the measured
+    /// load-vs-compute rate of the previous one (`prefetch_depth` then
+    /// only seeds iteration 0).
+    pub prefetch_auto: bool,
+    /// Dedicated I/O threads feeding the ready queue; 1–2 is enough to
+    /// keep the (simulated) disk continuously busy.
+    pub prefetch_threads: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig {
+            // capped at the paper's core count: more workers than that
+            // only adds context switches with no modelled benefit
+            workers: std::thread::available_parallelism()
+                .map_or(1, |n| n.get())
+                .min(12),
+            prefetch_depth: 4,
+            prefetch_auto: false,
+            prefetch_threads: 2,
+        }
+    }
+}
+
+/// Hard cap on the adaptive queue depth (bounds in-flight unit memory).
+pub const MAX_AUTO_DEPTH: usize = 16;
+
+/// Per-iteration read-only context handed to [`ShardSource::compute`].
+pub struct IterCtx<'a> {
+    pub kernel: ShardKernel,
+    pub num_vertices: u32,
+    /// The previous iteration's vertex values (read-only this iteration).
+    pub src: &'a [f32],
+    pub inv_out_deg: &'a [f32],
+    /// Pre-folded `src · inv_out_deg` for sum kernels (|V| multiplies
+    /// once, instead of |E| per-edge products); empty otherwise.
+    pub contrib: &'a [f32],
+    pub iteration: u32,
+}
+
+impl IterCtx<'_> {
+    /// One edge's gathered contribution.  Degree-mass kernels read the
+    /// pre-folded array; everything else folds from `src` + weight.
+    #[inline]
+    pub fn edge_value(&self, e: &Edge) -> f32 {
+        if self.kernel.uses_contrib() {
+            self.contrib[e.src as usize]
+        } else {
+            self.kernel.edge_value(self.src[e.src as usize], 0.0, e.weight)
+        }
+    }
+}
+
+/// A deferred write produced by scatter-style units (X-Stream's update
+/// stream): folded deterministically at the iteration barrier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Update {
+    pub dst: VertexId,
+    pub val: f32,
+}
+
+/// What one unit's compute produced.
+pub enum UnitOutput {
+    /// The unit wrote its exclusive destination rows in place (and marked
+    /// activations itself).
+    InPlace,
+    /// Scatter-style updates for the barrier to fold in worklist order.
+    Updates(Vec<Update>),
+}
+
+/// The engine-specific half of the execution core: an I/O schedule over
+/// loadable units plus the per-unit compute.
+pub trait ShardSource: Sync {
+    /// A loaded unit travelling from the I/O stage to a compute worker.
+    type Item: Send;
+
+    /// Schedule stage: this iteration's unit worklist plus the number of
+    /// units skipped (selective scheduling; engines without it return
+    /// the full worklist and 0).
+    fn schedule(&self, iteration: u32, active: &[VertexId]) -> (Vec<u32>, u32);
+
+    /// Load stage — runs on the dedicated I/O threads when pipelined,
+    /// inline on workers otherwise.  Engines charge their per-unit read
+    /// model (or perform real reads) here so (simulated) disk time
+    /// overlaps compute.
+    fn load(&self, id: u32) -> Result<Self::Item>;
+
+    /// Compute stage — runs on the compute workers.  In-place units
+    /// claim their exclusive rows from `dst` and mark activations into
+    /// `marker`; scatter units return their update stream.  Per-unit
+    /// write-back charges belong here (they are part of processing the
+    /// unit, not of the barrier).
+    fn compute(
+        &self,
+        id: u32,
+        item: Self::Item,
+        ctx: &IterCtx<'_>,
+        dst: &SharedDst,
+        marker: &mut RangeMarker<'_>,
+    ) -> Result<UnitOutput>;
+
+    /// Barrier stage: residual per-iteration charges (e.g. the gather
+    /// phase's update-stream read and vertex write-back).
+    fn end_iteration(&self, _ctx: &IterCtx<'_>, _updates_folded: u64) {}
+
+    /// The engine's resident-memory model in bytes (Fig 11 / Table 3's
+    /// memory column) — recorded on the run's metrics.
+    fn residency_bytes(&self) -> u64;
+}
+
+/// Fold destination-grouped `edges` into `out`, which covers the vertex
+/// rows `[lo, lo + out.len())` and enters holding their current values.
+/// Bit-identical to the CSR row loop (`engine::native_update`) as long as
+/// each destination's edges arrive in the same order — the repo-wide
+/// canonical layout is ascending source id.
+pub fn fold_edges_interval(ctx: &IterCtx<'_>, edges: &[Edge], lo: u32, out: &mut [f32]) {
+    let kernel = ctx.kernel;
+    match kernel.combine {
+        Combine::Sum => {
+            // fold into per-row accumulators first, then apply: rows with
+            // no in-edges still get their base mass
+            let mut acc = vec![0.0f32; out.len()];
+            for e in edges {
+                acc[(e.dst - lo) as usize] += ctx.edge_value(e);
+            }
+            for (r, a) in acc.iter().enumerate() {
+                let v = lo + r as u32;
+                out[r] = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], *a);
+            }
+        }
+        Combine::Min | Combine::Max => {
+            for e in edges {
+                let r = (e.dst - lo) as usize;
+                out[r] = kernel.combine(out[r], ctx.edge_value(e));
+            }
+        }
+    }
+}
+
+/// Mark every row of `[lo, lo + out.len())` whose new value activates it.
+pub fn mark_interval(ctx: &IterCtx<'_>, lo: u32, out: &[f32], marker: &mut RangeMarker<'_>) {
+    for (r, &new) in out.iter().enumerate() {
+        let v = lo + r as u32;
+        if ctx.kernel.is_update(ctx.src[v as usize], new) {
+            marker.mark(v);
+        }
+    }
+}
+
+/// The engine-agnostic execution driver.  Holds the run-scoped state the
+/// iterations share: the disk (for I/O deltas), an optional attached
+/// cache (for cache-counter deltas), and the adaptive prefetch depth.
+pub struct ExecCore<'a> {
+    cfg: ExecConfig,
+    disk: &'a Disk,
+    cache: Option<&'a EdgeCache>,
+    auto_depth: usize,
+}
+
+impl<'a> ExecCore<'a> {
+    pub fn new(cfg: ExecConfig, disk: &'a Disk, cache: Option<&'a EdgeCache>) -> Self {
+        let seed = cfg.prefetch_depth.clamp(1, MAX_AUTO_DEPTH);
+        ExecCore { cfg, disk, cache, auto_depth: seed }
+    }
+
+    /// Run `app` through `source` for at most `max_iters` iterations
+    /// (stopping early once no vertex is active, Algorithm 2 line 2) and
+    /// return the final vertex values with the run's metrics.
+    pub fn run<S: ShardSource>(
+        &mut self,
+        source: &S,
+        app: &dyn VertexProgram,
+        num_vertices: u32,
+        inv_out_deg: &[f32],
+        max_iters: u32,
+    ) -> Result<(Vec<f32>, RunMetrics)> {
+        let n = num_vertices;
+        anyhow::ensure!(
+            n < (1 << 24),
+            "f32 vertex values require ids < 2^24 (got {n})"
+        );
+        let kernel = app.kernel();
+        if kernel.uses_contrib() {
+            anyhow::ensure!(
+                inv_out_deg.len() == n as usize,
+                "{} needs the out-degree array",
+                app.name()
+            );
+        }
+        let (mut src, mut active) = app.init(n);
+        anyhow::ensure!(src.len() == n as usize, "init length mismatch");
+
+        let mut run = RunMetrics::default();
+        let run_start = Instant::now();
+        let sim_start = self.disk.snapshot().sim_nanos;
+
+        for iter in 0..max_iters {
+            if active.is_empty() {
+                run.converged = true;
+                break;
+            }
+            let m = self.run_iteration(source, kernel, iter, &mut src, &mut active, inv_out_deg)?;
+            run.iterations.push(m);
+        }
+        if active.is_empty() {
+            run.converged = true;
+        }
+        run.total_wall = run_start.elapsed();
+        run.total_sim_disk_seconds =
+            (self.disk.snapshot().sim_nanos - sim_start) as f64 / 1e9;
+        run.total_overlapped_sim_seconds =
+            run.iterations.iter().map(|m| m.overlapped_sim_seconds).sum();
+        run.memory_bytes = source.residency_bytes();
+        Ok((src, run))
+    }
+
+    /// One iteration of Algorithm 2 as a schedule → prefetch → compute
+    /// pipeline with a barrier swap at the end.
+    fn run_iteration<S: ShardSource>(
+        &mut self,
+        source: &S,
+        kernel: ShardKernel,
+        iter: u32,
+        src: &mut Vec<f32>,
+        active: &mut Vec<VertexId>,
+        inv_out_deg: &[f32],
+    ) -> Result<IterationMetrics> {
+        let n = src.len();
+        let io_before = self.disk.snapshot();
+        let cache_before = self.cache.map(|c| c.snapshot()).unwrap_or_default();
+        let t0 = Instant::now();
+
+        // stage 1: the scheduler decides the whole unit worklist up front
+        let (worklist, skipped) = source.schedule(iter, active);
+
+        // §Perf: for sum kernels, fold src·inv_out_deg once per iteration
+        // (|V| multiplies) instead of once per edge (|E| ≫ |V| gathers).
+        let contrib: Vec<f32> = if kernel.uses_contrib() {
+            src.iter().zip(inv_out_deg).map(|(&v, &d)| v * d).collect()
+        } else {
+            Vec::new()
+        };
+        let ctx = IterCtx {
+            kernel,
+            num_vertices: n as u32,
+            src: src.as_slice(),
+            inv_out_deg,
+            contrib: &contrib,
+            iteration: iter,
+        };
+
+        let depth = if self.cfg.prefetch_depth == 0 {
+            0 // pipeline off: the sequential reference path wins outright
+        } else if self.cfg.prefetch_auto {
+            self.auto_depth
+        } else {
+            self.cfg.prefetch_depth
+        };
+
+        let dst = SharedDst::new(src.clone());
+        let bits = ActiveBits::new(n);
+        // scatter-unit outputs, slot-indexed by worklist position so the
+        // barrier fold is deterministic in completion order
+        let slots: Mutex<Vec<Option<Vec<Update>>>> =
+            Mutex::new((0..worklist.len()).map(|_| None).collect());
+
+        // stages 2+3: I/O threads stage units into the bounded ready
+        // queue; compute workers drain it.
+        let outcome = pipeline::run_worklist(
+            &worklist,
+            self.cfg.workers,
+            depth,
+            self.cfg.prefetch_threads,
+            |id| source.load(id),
+            || bits.marker(),
+            |marker, index, id, item| {
+                match source.compute(id, item, &ctx, &dst, marker)? {
+                    UnitOutput::InPlace => {}
+                    UnitOutput::Updates(u) => {
+                        slots.lock().unwrap()[index] = Some(u);
+                    }
+                }
+                Ok(())
+            },
+        )?;
+
+        dst.release_all();
+        let mut next = dst.into_inner();
+        // Snapshot at the end of the pipeline phase: only simulated disk
+        // time charged while the load/compute stages were running can
+        // overlap compute.  Barrier-stage charges (a scatter engine's
+        // gather read + write-back in `end_iteration`) happen after all
+        // compute finished and stay on the critical path.
+        let io_pipeline = self.disk.snapshot();
+        let wall_pipeline = t0.elapsed();
+        // barrier: fold scatter streams (worklist order) and charge the
+        // engine's residual iteration I/O
+        let slots = slots.into_inner().unwrap();
+        let updates_folded = if slots.iter().any(Option::is_some) {
+            fold_updates(&ctx, slots, &mut next, &bits)
+        } else {
+            0
+        };
+        source.end_iteration(&ctx, updates_folded);
+
+        *src = next;
+        *active = bits.to_sorted_vec();
+
+        let wall = t0.elapsed();
+        let io_after = self.disk.snapshot();
+        let sim_disk_seconds = (io_after.sim_nanos - io_before.sim_nanos) as f64 / 1e9;
+        // Pipeline overlap model: with dedicated I/O threads the (simulated)
+        // device streams concurrently with compute, so the pipeline phase
+        // costs max(wall, sim) instead of wall + sim — i.e. min(wall, sim)
+        // of the device time charged *during that phase* is hidden.
+        // Without prefetching every charge sits on the critical path,
+        // exactly the pre-pipeline accounting.
+        let sim_pipeline_seconds =
+            (io_pipeline.sim_nanos - io_before.sim_nanos) as f64 / 1e9;
+        let pipelined = depth > 0 && self.cfg.prefetch_threads > 0;
+        let overlapped_sim_seconds = if pipelined {
+            sim_pipeline_seconds.min(wall_pipeline.as_secs_f64())
+        } else {
+            0.0
+        };
+
+        if self.cfg.prefetch_auto {
+            self.auto_depth = adaptive_depth(&outcome, self.cfg.workers, self.auto_depth);
+        }
+
+        Ok(IterationMetrics {
+            iteration: iter,
+            wall,
+            sim_disk_seconds,
+            overlapped_sim_seconds,
+            active_vertices: active.len() as u64,
+            active_ratio: active.len() as f64 / n.max(1) as f64,
+            shards_processed: outcome.processed,
+            shards_skipped: skipped,
+            shards_prefetched: outcome.prefetched,
+            ready_hits: outcome.ready_hits,
+            ready_misses: outcome.ready_misses,
+            prefetch_depth_used: depth as u32,
+            io: io_after.since(&io_before),
+            cache: match self.cache {
+                Some(c) => {
+                    let after = c.snapshot();
+                    crate::cache::CacheSnapshot {
+                        hits: after.hits - cache_before.hits,
+                        misses: after.misses - cache_before.misses,
+                        admitted: after.admitted - cache_before.admitted,
+                        rejected: after.rejected - cache_before.rejected,
+                        used_bytes: after.used_bytes,
+                        decodes: after.decodes - cache_before.decodes,
+                        decode_skips: after.decode_skips - cache_before.decode_skips,
+                        memo_bytes: after.memo_bytes,
+                    }
+                }
+                None => Default::default(),
+            },
+        })
+    }
+}
+
+/// Fold scatter-unit update streams into `out` in worklist order,
+/// marking activated vertices.  Sum kernels rebuild every lane from the
+/// folded accumulator (X-Stream's gather recomputes all vertices);
+/// monotone kernels meet each update into the current value.
+fn fold_updates(
+    ctx: &IterCtx<'_>,
+    slots: Vec<Option<Vec<Update>>>,
+    out: &mut [f32],
+    bits: &ActiveBits,
+) -> u64 {
+    let kernel = ctx.kernel;
+    let mut folded = 0u64;
+    let mut marker = bits.marker();
+    match kernel.combine {
+        Combine::Sum => {
+            let mut acc = vec![0.0f32; out.len()];
+            for slot in slots.into_iter().flatten() {
+                folded += slot.len() as u64;
+                for u in slot {
+                    acc[u.dst as usize] += u.val;
+                }
+            }
+            for (v, a) in acc.iter().enumerate() {
+                let old = ctx.src[v];
+                let new = kernel.apply(v as u32, ctx.num_vertices, old, *a);
+                if kernel.is_update(old, new) {
+                    marker.mark(v as u32);
+                }
+                out[v] = new;
+            }
+        }
+        Combine::Min | Combine::Max => {
+            for slot in slots.into_iter().flatten() {
+                folded += slot.len() as u64;
+                for u in slot {
+                    let cur = out[u.dst as usize];
+                    let new = kernel.combine(cur, u.val);
+                    if new != cur {
+                        out[u.dst as usize] = new;
+                        marker.mark(u.dst);
+                    }
+                }
+            }
+        }
+    }
+    folded
+}
+
+/// Size the next iteration's ready queue from the measured load-vs-
+/// compute rate: with per-unit load time `t_io` and per-unit compute
+/// time `t_c`, the workers drain roughly `t_io / t_c` units while one
+/// load is in flight per worker, so that ratio (× workers, bounded)
+/// keeps the queue from starving without hoarding decoded units.
+fn adaptive_depth(
+    outcome: &pipeline::WorklistOutcome,
+    workers: usize,
+    previous: usize,
+) -> usize {
+    let loads = outcome.prefetched.max(outcome.processed).max(1) as f64;
+    let units = outcome.processed.max(1) as f64;
+    let t_io = outcome.io_busy.as_secs_f64() / loads;
+    let t_c = outcome.compute_busy.as_secs_f64() / units;
+    if t_c <= 0.0 || !t_io.is_finite() {
+        return previous;
+    }
+    let ratio = (t_io / t_c) * workers.max(1) as f64;
+    (ratio.ceil() as usize).clamp(1, MAX_AUTO_DEPTH)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{EdgeCost, PageRank, Sssp};
+    use std::time::Duration;
+
+    /// A miniature in-memory source: one unit per destination interval,
+    /// in-place compute via the shared fold helper.
+    struct ToySource {
+        intervals: Vec<(u32, u32)>,
+        edges: Vec<Vec<Edge>>,
+    }
+
+    impl ShardSource for ToySource {
+        type Item = usize;
+
+        fn schedule(&self, _iter: u32, _active: &[VertexId]) -> (Vec<u32>, u32) {
+            ((0..self.intervals.len() as u32).collect(), 0)
+        }
+
+        fn load(&self, id: u32) -> Result<usize> {
+            Ok(id as usize)
+        }
+
+        fn compute(
+            &self,
+            id: u32,
+            item: usize,
+            ctx: &IterCtx<'_>,
+            dst: &SharedDst,
+            marker: &mut RangeMarker<'_>,
+        ) -> Result<UnitOutput> {
+            assert_eq!(id as usize, item);
+            let (lo, hi) = self.intervals[item];
+            let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
+            fold_edges_interval(ctx, &self.edges[item], lo, out);
+            mark_interval(ctx, lo, out, marker);
+            Ok(UnitOutput::InPlace)
+        }
+
+        fn residency_bytes(&self) -> u64 {
+            42
+        }
+    }
+
+    /// Scatter flavour of the same graph (ESG-shaped).
+    struct ToyScatter {
+        parts: Vec<Vec<Edge>>,
+    }
+
+    impl ShardSource for ToyScatter {
+        type Item = usize;
+
+        fn schedule(&self, _iter: u32, _active: &[VertexId]) -> (Vec<u32>, u32) {
+            ((0..self.parts.len() as u32).collect(), 0)
+        }
+
+        fn load(&self, id: u32) -> Result<usize> {
+            Ok(id as usize)
+        }
+
+        fn compute(
+            &self,
+            _id: u32,
+            item: usize,
+            ctx: &IterCtx<'_>,
+            _dst: &SharedDst,
+            _marker: &mut RangeMarker<'_>,
+        ) -> Result<UnitOutput> {
+            Ok(UnitOutput::Updates(
+                self.parts[item]
+                    .iter()
+                    .map(|e| Update { dst: e.dst, val: ctx.edge_value(e) })
+                    .collect(),
+            ))
+        }
+
+        fn residency_bytes(&self) -> u64 {
+            7
+        }
+    }
+
+    fn toy_graph() -> (u32, Vec<Edge>) {
+        // 6 vertices, a little DAG with weights
+        let edges = vec![
+            Edge::weighted(0, 1, 2.0),
+            Edge::weighted(0, 2, 5.0),
+            Edge::weighted(1, 3, 1.0),
+            Edge::weighted(2, 3, 1.0),
+            Edge::weighted(3, 4, 4.0),
+            Edge::weighted(1, 5, 9.0),
+        ];
+        (6, edges)
+    }
+
+    fn interval_source(n: u32, edges: &[Edge]) -> ToySource {
+        let intervals = vec![(0u32, 3u32), (3, n)];
+        let mut per = vec![Vec::new(), Vec::new()];
+        for e in edges {
+            per[if e.dst < 3 { 0 } else { 1 }].push(*e);
+        }
+        for p in &mut per {
+            p.sort_unstable_by_key(|e| e.src);
+        }
+        ToySource { intervals, edges: per }
+    }
+
+    #[test]
+    fn inplace_and_scatter_sources_agree_bitwise() {
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let inv = vec![0.5f32, 0.5, 1.0, 1.0, 0.0, 0.0];
+        let inplace = interval_source(n, &edges);
+        let mut parts = vec![Vec::new(), Vec::new()];
+        for e in &edges {
+            parts[if e.src < 3 { 0 } else { 1 }].push(*e);
+        }
+        for p in &mut parts {
+            p.sort_unstable_by_key(|e| e.src);
+        }
+        let scatter = ToyScatter { parts };
+        for app in [&Sssp::new(0) as &dyn VertexProgram, &PageRank::new()] {
+            let mut c1 = ExecCore::new(ExecConfig::default(), &disk, None);
+            let (v1, r1) = c1.run(&inplace, app, n, &inv, 5).unwrap();
+            let mut c2 = ExecCore::new(ExecConfig::default(), &disk, None);
+            let (v2, r2) = c2.run(&scatter, app, n, &inv, 5).unwrap();
+            assert_eq!(v1, v2, "{}: scatter diverged from in-place", app.name());
+            assert_eq!(
+                r1.iterations.len(),
+                r2.iterations.len(),
+                "{}: iteration counts differ",
+                app.name()
+            );
+            for (a, b) in r1.iterations.iter().zip(&r2.iterations) {
+                assert_eq!(a.active_vertices, b.active_vertices, "{}", app.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_and_pipelined_agree_bitwise() {
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let src = interval_source(n, &edges);
+        let seq = ExecConfig { workers: 1, prefetch_depth: 0, ..Default::default() };
+        let pipe = ExecConfig { workers: 4, prefetch_depth: 3, ..Default::default() };
+        let (v1, _) = ExecCore::new(seq, &disk, None)
+            .run(&src, &Sssp::new(0), n, &[], 10)
+            .unwrap();
+        let (v2, _) = ExecCore::new(pipe, &disk, None)
+            .run(&src, &Sssp::new(0), n, &[], 10)
+            .unwrap();
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn residency_recorded_and_convergence_detected() {
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let src = interval_source(n, &edges);
+        let (_, run) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run(&src, &Sssp::new(0), n, &[], 100)
+            .unwrap();
+        assert!(run.converged);
+        assert_eq!(run.memory_bytes, 42);
+        assert!(run.iterations.len() < 100);
+    }
+
+    #[test]
+    fn rejects_sum_kernel_without_degrees() {
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let src = interval_source(n, &edges);
+        let err = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run(&src, &PageRank::new(), n, &[], 3)
+            .unwrap_err();
+        assert!(err.to_string().contains("out-degree"), "{err}");
+    }
+
+    #[test]
+    fn fold_edges_interval_matches_manual_relax() {
+        let (_, edges) = toy_graph();
+        let src = vec![0.0f32, 2.0, 5.0, 3.0, f32::INFINITY, f32::INFINITY];
+        let kernel = ShardKernel::relax_min(EdgeCost::Weights);
+        let ctx = IterCtx {
+            kernel,
+            num_vertices: 6,
+            src: &src,
+            inv_out_deg: &[],
+            contrib: &[],
+            iteration: 0,
+        };
+        let mut out = src[3..6].to_vec();
+        let mut es: Vec<Edge> = edges.iter().filter(|e| e.dst >= 3).copied().collect();
+        es.sort_unstable_by_key(|e| e.src);
+        fold_edges_interval(&ctx, &es, 3, &mut out);
+        assert_eq!(out, vec![3.0, 7.0, 11.0]);
+    }
+
+    #[test]
+    fn adaptive_depth_tracks_io_to_compute_ratio() {
+        let mk = |io_ms: u64, c_ms: u64| pipeline::WorklistOutcome {
+            processed: 10,
+            prefetched: 10,
+            io_busy: Duration::from_millis(io_ms),
+            compute_busy: Duration::from_millis(c_ms),
+            ..Default::default()
+        };
+        // I/O-bound: deep queue (capped)
+        assert_eq!(adaptive_depth(&mk(1000, 10), 4, 4), MAX_AUTO_DEPTH);
+        // compute-bound: shallow queue
+        assert_eq!(adaptive_depth(&mk(1, 100), 4, 4), 1);
+        // balanced-ish: a few units per worker
+        let d = adaptive_depth(&mk(10, 10), 4, 4);
+        assert!((1..=MAX_AUTO_DEPTH).contains(&d));
+        // degenerate measurements keep the previous depth
+        assert_eq!(adaptive_depth(&mk(0, 0), 4, 7), 7);
+    }
+}

@@ -1,0 +1,484 @@
+//! The generic schedule→prefetch→compute worklist pipeline.
+//!
+//! Dedicated I/O threads walk an iteration's scheduled worklist, load
+//! each unit (read + decompress + parse for VSW shards; model-charged
+//! streaming for the baselines) and push the result into a small bounded
+//! ready queue ahead of the compute workers.  (Simulated) disk time
+//! thereby overlaps compute instead of serialising with it
+//! (NXgraph-style streaming, PAPERS.md), and workers never load on the
+//! critical path.
+//!
+//! The queue is a `sync_channel`: its depth bounds how many loaded units
+//! can be in flight, which bounds the pipeline's extra memory to
+//! `depth + workers` units.  The producer side never blocks indefinitely
+//! — [`io_thread`] polls the abort flag while the queue is full, so a
+//! dead consumer (worker error *or panic*, flagged by [`AbortOnPanic`])
+//! lets `thread::scope` join and propagate instead of hanging.
+//!
+//! [`run_worklist`] is the engine-agnostic driver used by
+//! [`crate::exec::ExecCore`] for every engine: with `depth == 0` the
+//! pipeline is off and workers load inline (the sequential reference
+//! path); otherwise stages 2+3 run concurrently.  Per-stage busy time is
+//! measured so the adaptive prefetch mode can size the queue from the
+//! observed load-vs-compute rate.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Mutex, TryLockError};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+/// One loaded unit travelling from an I/O thread to a compute worker:
+/// the worklist position, the scheduled unit id, and the load result
+/// (errors ride the queue so the first failure reaches the barrier).
+pub type Fetched<T> = (usize, u32, Result<T>);
+
+/// Shared counters of one iteration's pipeline (atomics: touched from
+/// both I/O and compute threads).
+#[derive(Debug, Default)]
+pub struct PipelineCounters {
+    /// Units fetched ahead by the I/O threads.
+    pub prefetched: AtomicU32,
+    /// Worker requests served without waiting (item staged, queue lock
+    /// uncontended).
+    pub ready_hits: AtomicU32,
+    /// Worker requests that waited — on the prefetcher directly, or on a
+    /// sibling worker that was itself parked waiting for the prefetcher.
+    pub ready_misses: AtomicU32,
+    /// Nanoseconds the I/O threads (or inline loads) spent loading.
+    pub io_busy_nanos: AtomicU64,
+    /// Nanoseconds the compute workers spent inside `consume`.
+    pub compute_busy_nanos: AtomicU64,
+}
+
+/// Sets the abort flag when dropped during a panic.  Compute workers hold
+/// one so an unwinding worker releases the I/O threads (which poll the
+/// flag) — otherwise `thread::scope` would wait forever on producers
+/// blocked against a queue nobody drains.
+pub struct AbortOnPanic<'a>(pub &'a AtomicBool);
+
+impl Drop for AbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The consumer side of the ready queue, shareable across workers.
+pub struct ReadyQueue<T> {
+    rx: Mutex<Receiver<Fetched<T>>>,
+}
+
+impl<T> ReadyQueue<T> {
+    /// Build a queue of the given depth (≥ 1) and return it with the
+    /// producer handle; clone the sender once per I/O thread and drop the
+    /// original so the queue closes when the last thread finishes.
+    pub fn with_sender(depth: usize) -> (ReadyQueue<T>, SyncSender<Fetched<T>>) {
+        let (tx, rx) = sync_channel(depth.max(1));
+        (ReadyQueue { rx: Mutex::new(rx) }, tx)
+    }
+
+    /// Next loaded unit for a compute worker, recording whether it was
+    /// already staged (ready hit) or the worker had to wait (miss).
+    /// Contention on the queue lock counts as a miss too: it means a
+    /// sibling worker is parked inside `recv`, i.e. the prefetcher is
+    /// behind for everyone.  `None` once the queue is closed and drained.
+    pub fn next(&self, counters: &PipelineCounters) -> Option<Fetched<T>> {
+        let (rx, waited) = match self.rx.try_lock() {
+            Ok(guard) => (guard, false),
+            Err(TryLockError::WouldBlock) => (self.rx.lock().unwrap(), true),
+            Err(TryLockError::Poisoned(e)) => (e.into_inner(), true),
+        };
+        match rx.try_recv() {
+            Ok(item) => {
+                if waited {
+                    counters.ready_misses.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    counters.ready_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(item)
+            }
+            Err(TryRecvError::Empty) => match rx.recv() {
+                Ok(item) => {
+                    counters.ready_misses.fetch_add(1, Ordering::Relaxed);
+                    Some(item)
+                }
+                Err(_) => None,
+            },
+            Err(TryRecvError::Disconnected) => None,
+        }
+    }
+}
+
+/// Fetch loop run by each dedicated I/O thread: claim the next worklist
+/// index, load the unit, push it to the ready queue.  Stops at worklist
+/// end, on the abort signal (a unit failed or a worker died), or when
+/// the queue closes (all consumers gone).
+pub fn io_thread<T, L>(
+    load: L,
+    worklist: &[u32],
+    next: &AtomicUsize,
+    abort: &AtomicBool,
+    tx: SyncSender<Fetched<T>>,
+    counters: &PipelineCounters,
+) where
+    L: Fn(u32) -> Result<T>,
+{
+    loop {
+        if abort.load(Ordering::Relaxed) {
+            return;
+        }
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= worklist.len() {
+            return;
+        }
+        let id = worklist[i];
+        let t = Instant::now();
+        let res = load(id);
+        counters
+            .io_busy_nanos
+            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        counters.prefetched.fetch_add(1, Ordering::Relaxed);
+        // bounded-blocking send: poll the abort flag while the queue is
+        // full so a vanished consumer can't strand this thread in `send`
+        let mut item = (i, id, res);
+        loop {
+            match tx.try_send(item) {
+                Ok(()) => break,
+                Err(TrySendError::Full(back)) => {
+                    if abort.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    item = back;
+                    std::thread::sleep(Duration::from_micros(100));
+                }
+                Err(TrySendError::Disconnected(_)) => return,
+            }
+        }
+    }
+}
+
+/// Aggregated result of one worklist pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorklistOutcome {
+    pub processed: u32,
+    pub prefetched: u32,
+    pub ready_hits: u32,
+    pub ready_misses: u32,
+    /// Aggregate load time across I/O threads (or inline loads).
+    pub io_busy: Duration,
+    /// Aggregate `consume` time across compute workers.
+    pub compute_busy: Duration,
+}
+
+/// Run one iteration's worklist through the pipeline: `load` runs on
+/// `io_threads` dedicated threads feeding a depth-bounded ready queue
+/// (or inline on the workers when `depth == 0` — the sequential
+/// reference path), `consume` runs on `workers` compute workers, each
+/// with its own `mk_worker()` state (e.g. a [`super::RangeMarker`],
+/// flushed on drop).  The first error from either stage aborts the
+/// sweep and is returned after all threads join.
+pub fn run_worklist<T, W, L, MK, C>(
+    worklist: &[u32],
+    workers: usize,
+    depth: usize,
+    io_threads: usize,
+    load: L,
+    mk_worker: MK,
+    consume: C,
+) -> Result<WorklistOutcome>
+where
+    T: Send,
+    L: Fn(u32) -> Result<T> + Sync,
+    MK: Fn() -> W + Sync,
+    C: Fn(&mut W, usize, u32, T) -> Result<()> + Sync,
+{
+    let workers = workers.max(1);
+    let pipelined = depth > 0 && io_threads > 0;
+    let counters = PipelineCounters::default();
+    let next_fetch = AtomicUsize::new(0);
+    let processed = AtomicU32::new(0);
+    let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let abort = AtomicBool::new(false);
+
+    // shared per-unit worker body (both acquisition modes): execute the
+    // unit or route its error to the barrier.  One copy, so the pipelined
+    // path can never drift from the sequential reference.
+    let consume_one = |state: &mut W, index: usize, id: u32, res: Result<T>| {
+        let t = Instant::now();
+        let outcome = res.and_then(|item| consume(state, index, id, item));
+        counters
+            .compute_busy_nanos
+            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        match outcome {
+            Ok(()) => {
+                processed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                let mut fe = first_err.lock().unwrap();
+                if fe.is_none() {
+                    *fe = Some(e);
+                }
+                abort.store(true, Ordering::Relaxed);
+            }
+        }
+    };
+    let consume_one = &consume_one;
+
+    let (queue_opt, tx_opt) = if pipelined {
+        let (q, tx) = ReadyQueue::with_sender(depth);
+        (Some(q), Some(tx))
+    } else {
+        (None, None)
+    };
+    std::thread::scope(|scope| {
+        if let (Some(queue), Some(tx)) = (&queue_opt, tx_opt) {
+            for _ in 0..io_threads.max(1) {
+                let tx = tx.clone();
+                let (load, worklist, next_fetch, abort, counters) =
+                    (&load, worklist, &next_fetch, &abort, &counters);
+                scope.spawn(move || {
+                    io_thread(load, worklist, next_fetch, abort, tx, counters);
+                });
+            }
+            // queue closes when the last I/O thread finishes (tx_opt was
+            // moved into this branch and its clones die with the threads)
+            for _ in 0..workers {
+                let (mk_worker, abort, counters) = (&mk_worker, &abort, &counters);
+                scope.spawn(move || {
+                    let _guard = AbortOnPanic(abort);
+                    let mut state = mk_worker();
+                    while let Some((index, id, res)) = queue.next(counters) {
+                        if abort.load(Ordering::Relaxed) {
+                            // keep draining so I/O threads never block
+                            // forever on a full queue after a failure
+                            continue;
+                        }
+                        consume_one(&mut state, index, id, res);
+                    }
+                });
+            }
+        } else {
+            for _ in 0..workers {
+                let (load, mk_worker, worklist, next_fetch, abort, counters) =
+                    (&load, &mk_worker, worklist, &next_fetch, &abort, &counters);
+                scope.spawn(move || {
+                    let mut state = mk_worker();
+                    loop {
+                        // an error recorded by any worker stops the sweep
+                        if abort.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = next_fetch.fetch_add(1, Ordering::Relaxed);
+                        if i >= worklist.len() {
+                            break;
+                        }
+                        let id = worklist[i];
+                        let t = Instant::now();
+                        let res = load(id);
+                        counters
+                            .io_busy_nanos
+                            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        consume_one(&mut state, i, id, res);
+                    }
+                });
+            }
+        }
+    });
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    Ok(WorklistOutcome {
+        processed: processed.load(Ordering::Relaxed),
+        prefetched: counters.prefetched.load(Ordering::Relaxed),
+        ready_hits: counters.ready_hits.load(Ordering::Relaxed),
+        ready_misses: counters.ready_misses.load(Ordering::Relaxed),
+        io_busy: Duration::from_nanos(counters.io_busy_nanos.load(Ordering::Relaxed)),
+        compute_busy: Duration::from_nanos(counters.compute_busy_nanos.load(Ordering::Relaxed)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32 as TestCounter;
+
+    #[test]
+    fn io_threads_deliver_every_scheduled_unit_once() {
+        let worklist: Vec<u32> = (0..37).collect();
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let counters = PipelineCounters::default();
+        let (queue, tx) = ReadyQueue::with_sender(4);
+        let mut got = Vec::new();
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                let tx = tx.clone();
+                let (worklist, next, abort, counters) = (&worklist, &next, &abort, &counters);
+                scope.spawn(move || {
+                    io_thread(|id| Ok(id * 10), worklist, next, abort, tx, counters);
+                });
+            }
+            drop(tx);
+            while let Some((index, id, res)) = queue.next(&counters) {
+                assert_eq!(res.unwrap(), id * 10);
+                assert_eq!(worklist[index], id);
+                got.push(id);
+            }
+        });
+        got.sort_unstable();
+        assert_eq!(got, worklist);
+        assert_eq!(counters.prefetched.load(Ordering::Relaxed), 37);
+        let hits = counters.ready_hits.load(Ordering::Relaxed);
+        let misses = counters.ready_misses.load(Ordering::Relaxed);
+        assert_eq!(hits + misses, 37, "every delivery counts exactly once");
+    }
+
+    #[test]
+    fn errors_ride_the_queue() {
+        let worklist = vec![0u32, 1, 2];
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let counters = PipelineCounters::default();
+        let (queue, tx) = ReadyQueue::with_sender(2);
+        std::thread::scope(|scope| {
+            let (worklist, next, abort, counters) = (&worklist, &next, &abort, &counters);
+            scope.spawn(move || {
+                io_thread(
+                    |id| {
+                        if id == 1 {
+                            anyhow::bail!("boom on unit {id}")
+                        } else {
+                            Ok(id)
+                        }
+                    },
+                    worklist,
+                    next,
+                    abort,
+                    tx,
+                    counters,
+                );
+            });
+            let mut errs = 0;
+            let mut oks = 0;
+            while let Some((_, _, res)) = queue.next(counters) {
+                match res {
+                    Ok(_) => oks += 1,
+                    Err(e) => {
+                        assert!(e.to_string().contains("boom"));
+                        errs += 1;
+                    }
+                }
+            }
+            assert_eq!((oks, errs), (2, 1));
+        });
+    }
+
+    #[test]
+    fn abort_stops_fetching() {
+        let worklist: Vec<u32> = (0..1000).collect();
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(true); // pre-aborted
+        let counters = PipelineCounters::default();
+        let (_queue, tx) = ReadyQueue::<u32>::with_sender(1);
+        io_thread(|id| Ok(id), &worklist, &next, &abort, tx, &counters);
+        assert_eq!(counters.prefetched.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn abort_unblocks_a_full_queue() {
+        // a producer stuck against a full queue with no consumer must
+        // exit once abort is raised — this is what keeps a panicking
+        // worker from deadlocking thread::scope
+        let worklist: Vec<u32> = (0..100).collect();
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        let counters = PipelineCounters::default();
+        let (queue, tx) = ReadyQueue::with_sender(1);
+        std::thread::scope(|scope| {
+            let (worklist, next, abort, counters) = (&worklist, &next, &abort, &counters);
+            scope.spawn(move || {
+                io_thread(|id| Ok(id), worklist, next, abort, tx, counters);
+            });
+            // let it fill the depth-1 queue, then abort without consuming
+            std::thread::sleep(Duration::from_millis(20));
+            abort.store(true, Ordering::Relaxed);
+            // scope joins here: hangs if the producer ignores abort
+        });
+        assert!(counters.prefetched.load(Ordering::Relaxed) >= 1);
+        drop(queue);
+    }
+
+    #[test]
+    fn abort_on_panic_fires_only_during_unwind() {
+        let flag = AtomicBool::new(false);
+        {
+            let _g = AbortOnPanic(&flag);
+        }
+        assert!(!flag.load(Ordering::Relaxed), "normal drop must not abort");
+        let flag2 = std::sync::Arc::new(AtomicBool::new(false));
+        let f2 = std::sync::Arc::clone(&flag2);
+        let res = std::thread::spawn(move || {
+            let _g = AbortOnPanic(&f2);
+            panic!("boom");
+        })
+        .join();
+        assert!(res.is_err());
+        assert!(flag2.load(Ordering::Relaxed), "panic must raise the flag");
+    }
+
+    #[test]
+    fn run_worklist_pipelined_and_inline_agree() {
+        let worklist: Vec<u32> = (0..53).collect();
+        for depth in [0usize, 3] {
+            let sum = TestCounter::new(0);
+            let out = run_worklist(
+                &worklist,
+                4,
+                depth,
+                2,
+                |id| Ok(id + 1),
+                || (),
+                |_, index, id, item| {
+                    assert_eq!(worklist[index], id);
+                    sum.fetch_add(item, Ordering::Relaxed);
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(out.processed, 53);
+            assert_eq!(sum.load(Ordering::Relaxed), (1..=53).sum::<u32>());
+            if depth == 0 {
+                assert_eq!(out.prefetched, 0, "inline loads are not prefetches");
+                assert_eq!(out.ready_hits + out.ready_misses, 0);
+            } else {
+                assert_eq!(out.prefetched, 53);
+                assert_eq!(out.ready_hits + out.ready_misses, 53);
+            }
+        }
+    }
+
+    #[test]
+    fn run_worklist_routes_first_error() {
+        let worklist: Vec<u32> = (0..20).collect();
+        let err = run_worklist(
+            &worklist,
+            2,
+            2,
+            1,
+            |id| {
+                if id == 7 {
+                    anyhow::bail!("load failed on {id}")
+                } else {
+                    Ok(id)
+                }
+            },
+            || (),
+            |_, _, _, _| Ok(()),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("load failed"));
+    }
+}

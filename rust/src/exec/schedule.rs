@@ -81,11 +81,18 @@ impl ActiveBits {
     }
 }
 
-/// See [`ActiveBits::marker`].  Call [`flush`](Self::flush) when done.
+/// See [`ActiveBits::marker`].  The buffered word is published by
+/// [`flush`](Self::flush) or automatically on drop (worker exit).
 pub struct RangeMarker<'a> {
     bits: &'a ActiveBits,
     word: usize,
     acc: u64,
+}
+
+impl Drop for RangeMarker<'_> {
+    fn drop(&mut self) {
+        self.flush();
+    }
 }
 
 impl RangeMarker<'_> {

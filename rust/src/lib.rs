@@ -39,6 +39,7 @@ pub mod cache;
 pub mod cluster;
 pub mod compress;
 pub mod engine;
+pub mod exec;
 pub mod graph;
 pub mod metrics;
 pub mod model;

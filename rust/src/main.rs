@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use graphmp::apps::{Bfs, Cc, PageRank, Sssp, VertexProgram};
+use graphmp::apps::{Bfs, Cc, PageRank, Ppr, Sssp, VertexProgram, Widest};
 use graphmp::cli::Args;
 use graphmp::compress::CacheMode;
 use graphmp::engine::{Backend, EngineConfig, VswEngine};
@@ -58,11 +58,13 @@ USAGE:
   graphmp generate   --dataset <name> --out <file.csv>
   graphmp preprocess --dataset <name> --dir <graphdir> [--weighted] [--undirected]
                      [--edges-per-shard N] [--small]
-  graphmp run        --dir <graphdir> --app pagerank|sssp|cc|bfs [--iters N]
-                     [--source V] [--backend native|pjrt] [--artifacts DIR]
+  graphmp run        --dir <graphdir> --app pagerank|ppr|sssp|cc|bfs|widest
+                     [--iters N] [--source V] [--damping F]
+                     [--backend native|pjrt] [--artifacts DIR]
                      [--cache-mode cache-0..4] [--cache-mb N] [--no-selective]
                      [--workers N] [--disk hdd|ssd|none] [--no-prefetch]
-                     [--prefetch-depth N] [--prefetch-threads N] [--memo-mb N]
+                     [--prefetch-depth N|auto] [--prefetch-threads N]
+                     [--memo-mb N]
   graphmp info       --dir <graphdir>
 
 datasets: twitter-sim uk2007-sim uk2014-sim eu2015-sim"
@@ -126,11 +128,14 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
 
 fn app_of(args: &Args) -> Result<Box<dyn VertexProgram>> {
     let source: u32 = args.parse_opt_or("source", 0u32)?;
+    let damping: f32 = args.parse_opt_or("damping", 0.85f32)?;
     Ok(match args.opt_or("app", "pagerank") {
-        "pagerank" => Box::new(PageRank::new()),
+        "pagerank" => Box::new(PageRank { damping }),
+        "ppr" => Box::new(Ppr { damping, seed: source }),
         "sssp" => Box::new(Sssp::new(source)),
         "cc" => Box::new(Cc),
         "bfs" => Box::new(Bfs::new(source)),
+        "widest" => Box::new(Widest::new(source)),
         other => anyhow::bail!("unknown app {other}"),
     })
 }
@@ -164,6 +169,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
 
     let defaults = EngineConfig::default();
+    let prefetch_depth_opt = args.parse_auto_or("prefetch-depth", defaults.prefetch_depth)?;
     let cfg = EngineConfig {
         workers: args.parse_opt_or("workers", defaults.workers)?,
         cache_capacity: args.parse_opt_or("cache-mb", 256u64)? * 1024 * 1024,
@@ -173,11 +179,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         },
         selective: !args.flag("no-selective"),
         active_threshold: args.parse_opt_or("active-threshold", 0.001f64)?,
+        // `--prefetch-depth auto` self-tunes (None from parse_auto_or);
+        // the fixed default then only seeds the first iteration
         prefetch_depth: if args.flag("no-prefetch") {
             0
         } else {
-            args.parse_opt_or("prefetch-depth", defaults.prefetch_depth)?
+            prefetch_depth_opt.unwrap_or(defaults.prefetch_depth)
         },
+        prefetch_auto: !args.flag("no-prefetch") && prefetch_depth_opt.is_none(),
         prefetch_threads: args.parse_opt_or("prefetch-threads", defaults.prefetch_threads)?,
         decode_memo_budget: args
             .parse_opt_or("memo-mb", defaults.decode_memo_budget / (1024 * 1024))?

@@ -31,6 +31,9 @@ pub struct IterationMetrics {
     pub ready_hits: u32,
     /// Worker shard requests that had to wait for the prefetcher.
     pub ready_misses: u32,
+    /// Ready-queue depth the pipeline ran with this iteration (varies
+    /// under adaptive prefetch; 0 = sequential reference path).
+    pub prefetch_depth_used: u32,
     pub io: IoSnapshot,
     pub cache: CacheSnapshot,
 }

@@ -129,6 +129,12 @@ pub fn preprocess(
     for e in &g.edges {
         buckets[owner[e.dst as usize] as usize].push(*e);
     }
+    // canonical in-shard layout: ascending source id within each CSR row,
+    // so every engine folds a destination's in-edges in the same order
+    // and f32 sums agree bit-for-bit across engines (cross_engine.rs)
+    for bucket in &mut buckets {
+        bucket.sort_unstable_by_key(|e| e.src);
+    }
     disk.account_write(g.num_edges() * edge_rec); // scratch file append
     let s2 = t1.elapsed().as_secs_f64();
 

@@ -1,0 +1,163 @@
+//! Cross-engine agreement: VSW and all four baselines (PSW, ESG, DSW,
+//! in-memory) must produce **bit-identical** vertex values for every app
+//! — PageRank, personalized PageRank, SSSP, CC, BFS and widest-path — on
+//! RMAT and dataset fixtures.
+//!
+//! This is the acceptance gate for the unified execution core: all five
+//! engines run the same schedule→prefetch→compute pipeline and the same
+//! [`graphmp::apps::ShardKernel`] algebra, keeping each destination's
+//! in-edges in the canonical ascending-source order, so even the
+//! order-sensitive f32 sums of the PageRank family agree exactly.
+//! Differences between engines are thereby confined to their I/O
+//! schedules — the paper's premise for Tables 5–7 and Figs 9/10.
+
+use graphmp::apps::{Bfs, Cc, PageRank, Ppr, Sssp, VertexProgram, Widest};
+use graphmp::baselines::{
+    dsw::DswEngine, esg::EsgEngine, inmem::InMemEngine, psw::PswEngine, BaselineConfig,
+    BaselineEngine,
+};
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::datasets::Dataset;
+use graphmp::graph::rmat::{rmat, RmatParams};
+use graphmp::graph::EdgeList;
+use graphmp::metrics::RunMetrics;
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::storage::disk::Disk;
+
+/// (app, max_iters, needs the symmetrised graph)
+fn apps() -> Vec<(Box<dyn VertexProgram>, u32, bool)> {
+    vec![
+        (Box::new(PageRank::new()) as Box<dyn VertexProgram>, 6, false),
+        (Box::new(Ppr::new(1)), 6, false),
+        (Box::new(Sssp::new(0)), 80, false),
+        (Box::new(Cc), 120, true),
+        (Box::new(Bfs::new(0)), 60, false),
+        (Box::new(Widest::new(0)), 80, false),
+    ]
+}
+
+fn vsw_values(
+    g: &EdgeList,
+    name: &str,
+    app: &dyn VertexProgram,
+    iters: u32,
+) -> (Vec<f32>, RunMetrics) {
+    let root = std::env::temp_dir().join(format!("graphmp_xeng_{name}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let disk = Disk::unthrottled();
+    let prep = PrepConfig {
+        edges_per_shard: 2048,
+        max_rows_per_shard: 512,
+        weighted: true,
+        ..Default::default()
+    };
+    let (dir, _) = preprocess_into(g, &root, &disk, prep).unwrap();
+    // pipelined, multi-worker: the hardest configuration must still agree
+    let cfg = EngineConfig {
+        workers: 4,
+        prefetch_depth: 3,
+        prefetch_threads: 2,
+        ..Default::default()
+    };
+    let mut e = VswEngine::open(&dir, &disk, cfg).unwrap();
+    e.run_to_values(app, iters).unwrap()
+}
+
+fn assert_all_engines_agree(g: &EdgeList, gu: &EdgeList, tag: &str) {
+    for (app, iters, undirected) in apps() {
+        let app = app.as_ref();
+        let gg = if undirected { gu } else { g };
+        let (vsw_vals, vsw_run) =
+            vsw_values(gg, &format!("{tag}_{}", app.name()), app, iters);
+
+        let cfg = BaselineConfig { p: 8, ..Default::default() };
+        let mut engines: Vec<Box<dyn BaselineEngine>> = vec![
+            Box::new(PswEngine::new(cfg)),
+            Box::new(EsgEngine::new(cfg)),
+            Box::new(DswEngine::new(cfg)),
+        ];
+        let disk = Disk::unthrottled();
+        for e in engines.iter_mut() {
+            e.preprocess(gg, &disk).unwrap();
+            let run = e.run(app, iters, &disk).unwrap();
+            assert_eq!(
+                e.values(),
+                &vsw_vals[..],
+                "{tag}/{}: {} diverged from VSW",
+                app.name(),
+                e.name()
+            );
+            assert_eq!(
+                run.iterations.len(),
+                vsw_run.iterations.len(),
+                "{tag}/{}: {} iteration count differs",
+                app.name(),
+                e.name()
+            );
+            // the unified core also makes the per-iteration counter set
+            // comparable: identical activation trajectories everywhere
+            for (a, b) in run.iterations.iter().zip(&vsw_run.iterations) {
+                assert_eq!(
+                    a.active_vertices,
+                    b.active_vertices,
+                    "{tag}/{}: {} activation trajectory differs at iter {}",
+                    app.name(),
+                    e.name(),
+                    a.iteration
+                );
+            }
+        }
+
+        let mut im = InMemEngine::new(cfg);
+        im.load(gg, &disk).unwrap();
+        im.run(app, iters, &disk).unwrap();
+        assert_eq!(
+            im.values(),
+            &vsw_vals[..],
+            "{tag}/{}: inmem diverged from VSW",
+            app.name()
+        );
+    }
+}
+
+#[test]
+fn all_engines_bit_identical_on_rmat() {
+    let g = rmat(10, 14_000, 4242, RmatParams::default());
+    let gu = g.to_undirected();
+    assert_all_engines_agree(&g, &gu, "rmat");
+}
+
+#[test]
+fn all_engines_bit_identical_on_dataset_fixture() {
+    let g = Dataset::TwitterSim.generate_small();
+    let gu = g.to_undirected();
+    assert_all_engines_agree(&g, &gu, "twsim");
+}
+
+#[test]
+fn baselines_report_pipeline_counters() {
+    // the PR-1 overlap/prefetch counters must now exist for baselines too
+    let g = rmat(9, 5_000, 777, RmatParams::default());
+    let disk = Disk::unthrottled();
+    let cfg = BaselineConfig { p: 8, ..Default::default() };
+    let mut engines: Vec<Box<dyn BaselineEngine>> = vec![
+        Box::new(PswEngine::new(cfg)),
+        Box::new(EsgEngine::new(cfg)),
+        Box::new(DswEngine::new(cfg)),
+    ];
+    for e in engines.iter_mut() {
+        e.preprocess(&g, &disk).unwrap();
+        let run = e.run(&PageRank::new(), 3, &disk).unwrap();
+        for m in &run.iterations {
+            assert!(m.shards_processed > 0, "{}", e.name());
+            assert_eq!(m.shards_prefetched, m.shards_processed, "{}", e.name());
+            assert_eq!(
+                m.ready_hits + m.ready_misses,
+                m.shards_processed,
+                "{}",
+                e.name()
+            );
+            assert!(m.prefetch_depth_used > 0, "{}", e.name());
+        }
+    }
+}

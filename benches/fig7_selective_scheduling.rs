@@ -8,6 +8,7 @@
 //! (~6–10%).
 
 use graphmp::apps::{Cc, PageRank, Sssp, VertexProgram};
+use graphmp::baselines::{psw::PswEngine, BaselineConfig, BaselineEngine};
 use graphmp::benchutil::{banner, pipeline_summary, scale, Table};
 use graphmp::compress::CacheMode;
 use graphmp::engine::{EngineConfig, VswEngine};
@@ -113,7 +114,26 @@ fn main() {
     let cc_nss = run_app(&dir_u, &disk, &Cc, false, iters);
     report("CC", &cc_ss, &cc_nss);
 
+    // ---- the same skip under a non-VSW layout: GraphChi-PSW's native
+    // per-interval scheduler (exact source bitsets instead of Blooms),
+    // so the paper's Fig 7 claim is shown to generalise beyond VSW ----
+    let run_psw = |selective: bool| {
+        let disk = scale::bench_disk();
+        let mut e = PswEngine::new(BaselineConfig {
+            p: 32,
+            selective,
+            active_threshold: 0.02,
+            ..Default::default()
+        });
+        e.preprocess(&g, &disk).unwrap();
+        e.run(&Sssp::new(0), iters, &disk).unwrap()
+    };
+    let psw_ss = run_psw(true);
+    let psw_nss = run_psw(false);
+    report("SSSP on GraphChi-PSW (native scheduler)", &psw_ss, &psw_nss);
+
     println!("\npaper shape check: SSSP benefits most; SS never slower than NSS");
-    println!("after the activation ratio crosses the threshold.");
+    println!("after the activation ratio crosses the threshold; the PSW rows");
+    println!("show the same frontier-driven skip under GraphChi's layout.");
     let _ = std::fs::remove_dir_all(&tmp);
 }

@@ -1,0 +1,226 @@
+//! Hot-loop microbench (PR 3): zero-copy shard decode vs deep parse, and
+//! monomorphized vs enum-dispatch kernel folds — the two per-edge /
+//! per-shard costs the zero-copy refactor removes.  Also records a
+//! fig7-style PageRank iteration series (twitter-sim, compressed cache)
+//! and emits everything as `BENCH_PR3.json`, the first point of the perf
+//! trajectory.
+
+use std::sync::Arc;
+
+use graphmp::apps::{PageRank, ShardKernel, Sssp, VertexProgram, Widest};
+use graphmp::benchutil::{banner, pipeline_summary, scale, stats, time_n, Table};
+use graphmp::compress::CacheMode;
+use graphmp::engine::{EngineConfig, VswEngine};
+// `reference_fold_csr` is the doc(hidden) enum-dispatch oracle the unit
+// tests also assert against — one shared baseline, no drift
+use graphmp::exec::kernel::{fold_csr, reference_fold_csr};
+use graphmp::exec::IterCtx;
+use graphmp::graph::datasets::Dataset;
+use graphmp::graph::rmat::{rmat, RmatParams};
+use graphmp::graph::{Csr, Edge};
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::storage::shard::Shard;
+use graphmp::storage::view::{AlignedBuf, ShardView};
+use graphmp::util::rng::Xoshiro256;
+
+fn big_shard(rows: u32, edges: usize, seed: u64) -> Shard {
+    let mut rng = Xoshiro256::new(seed);
+    let es: Vec<Edge> = (0..edges)
+        .map(|_| {
+            Edge::weighted(
+                rng.next_below(1 << 20) as u32,
+                rng.next_below(rows as u64) as u32,
+                rng.next_range_f32(0.1, 9.0),
+            )
+        })
+        .collect();
+    Shard {
+        id: 0,
+        start_vertex: 0,
+        csr: Csr::from_edges(&es, 0, rows as usize, true),
+    }
+}
+
+fn main() {
+    banner("hot_loop", "PR 3 microbench: zero-copy decode + monomorphized folds");
+    let mut json = String::from("{\n");
+
+    // ------------------------------------------------ decode microbench
+    let shard = big_shard(8_192, 400_000, 42);
+    let bytes = shard.to_bytes();
+    let mb = bytes.len() as f64 / (1024.0 * 1024.0);
+    let deep = stats(&time_n(3, 15, || {
+        let s = Shard::from_bytes(&bytes).unwrap();
+        std::hint::black_box(&s);
+    }));
+    let view = stats(&time_n(3, 15, || {
+        let v = ShardView::parse(AlignedBuf::from_bytes(&bytes)).unwrap();
+        std::hint::black_box(&v);
+    }));
+    let view_nocrc = stats(&time_n(3, 15, || {
+        let v = ShardView::parse_unverified(AlignedBuf::from_bytes(&bytes)).unwrap();
+        std::hint::black_box(&v);
+    }));
+    // the steady-state hot path: the view already exists, a serving is an
+    // Arc clone
+    let arc = Arc::new(ShardView::parse(AlignedBuf::from_bytes(&bytes)).unwrap());
+    let clone = stats(&time_n(3, 15, || {
+        for _ in 0..1000 {
+            std::hint::black_box(Arc::clone(&arc));
+        }
+    }));
+
+    let mut tbl = Table::new(vec!["decode path", "mean (ms)", "MB/s", "speedup vs deep"]);
+    for (name, s) in [
+        ("Shard::from_bytes (copy, CRC)", deep),
+        ("ShardView::parse (zero-copy, CRC)", view),
+        ("ShardView::parse_unverified", view_nocrc),
+    ] {
+        tbl.row(vec![
+            name.to_string(),
+            format!("{:.3}", s.mean * 1e3),
+            format!("{:.0}", mb / s.mean),
+            format!("{:.2}x", deep.mean / s.mean),
+        ]);
+    }
+    tbl.row(vec![
+        "Arc clone (memo hit) x1000".to_string(),
+        format!("{:.5}", clone.mean * 1e3),
+        "-".to_string(),
+        format!("{:.0}x", deep.mean / (clone.mean / 1000.0)),
+    ]);
+    tbl.print(&format!("shard decode, {:.1}MiB / {} edges", mb, shard.num_edges()));
+    json.push_str(&format!(
+        "  \"decode\": {{\"shard_mib\": {:.3}, \"deep_parse_ms\": {:.4}, \"view_crc_ms\": {:.4}, \"view_nocrc_ms\": {:.4}, \"arc_clone_ns\": {:.1}}},\n",
+        mb,
+        deep.mean * 1e3,
+        view.mean * 1e3,
+        view_nocrc.mean * 1e3,
+        clone.mean / 1000.0 * 1e9
+    ));
+
+    // -------------------------------------------------- fold microbench
+    let n: u32 = 1 << 20;
+    let src: Vec<f32> = (0..n).map(|v| 0.25 + (v % 7) as f32).collect();
+    let inv: Vec<f32> = (0..n).map(|v| 1.0 / (1.0 + (v % 5) as f32)).collect();
+    let contrib: Vec<f32> = src.iter().zip(&inv).map(|(&v, &d)| v * d).collect();
+    let kernels: Vec<(&str, ShardKernel)> = vec![
+        ("pagerank", PageRank::new().kernel()),
+        ("sssp", Sssp::new(0).kernel()),
+        ("widest", Widest::new(0).kernel()),
+    ];
+    let edges = shard.num_edges() as f64;
+    let mut tbl = Table::new(vec![
+        "kernel", "enum (ns/edge)", "mono (ns/edge)", "speedup",
+    ]);
+    json.push_str("  \"fold\": {\n");
+    for (i, (name, k)) in kernels.iter().enumerate() {
+        let ctx = IterCtx {
+            kernel: *k,
+            num_vertices: n,
+            src: &src,
+            inv_out_deg: &inv,
+            contrib: &contrib,
+            iteration: 0,
+        };
+        // oracle check first: both folds must agree bit-for-bit
+        let mut a = vec![0.5f32; shard.rows()];
+        let mut b = a.clone();
+        fold_csr(&ctx, shard.csr.slices(), 0, &mut a);
+        reference_fold_csr(&ctx, shard.csr.slices(), 0, &mut b);
+        assert_eq!(a, b, "{name}: monomorphized fold diverged");
+
+        let mut out = vec![0.5f32; shard.rows()];
+        let mono = stats(&time_n(2, 10, || {
+            out.fill(0.5);
+            fold_csr(&ctx, shard.csr.slices(), 0, &mut out);
+            std::hint::black_box(&out);
+        }));
+        let en = stats(&time_n(2, 10, || {
+            out.fill(0.5);
+            reference_fold_csr(&ctx, shard.csr.slices(), 0, &mut out);
+            std::hint::black_box(&out);
+        }));
+        tbl.row(vec![
+            name.to_string(),
+            format!("{:.2}", en.mean / edges * 1e9),
+            format!("{:.2}", mono.mean / edges * 1e9),
+            format!("{:.2}x", en.mean / mono.mean),
+        ]);
+        json.push_str(&format!(
+            "    \"{}\": {{\"enum_ns_per_edge\": {:.3}, \"mono_ns_per_edge\": {:.3}}}{}\n",
+            name, // keys are [a-z]+ literals from the kernels table
+            en.mean / edges * 1e9,
+            mono.mean / edges * 1e9,
+            if i + 1 == kernels.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  },\n");
+    tbl.print("kernel fold, enum dispatch vs monomorphized (400K-edge shard)");
+
+    // --------------------------------- fig7-style PageRank trajectory
+    let g = if std::env::args().any(|a| a == "--small") {
+        rmat(10, 20_000, 7, RmatParams::default())
+    } else {
+        Dataset::TwitterSim.generate()
+    };
+    let tmp = std::env::temp_dir().join("graphmp_bench_hot_loop");
+    let _ = std::fs::remove_dir_all(&tmp);
+    let disk = scale::bench_disk();
+    let prep = PrepConfig {
+        edges_per_shard: scale::EDGES_PER_SHARD / 4,
+        max_rows_per_shard: scale::MAX_ROWS,
+        weighted: false,
+        ..Default::default()
+    };
+    let (dir, _) = preprocess_into(&g, &tmp, &disk, prep).unwrap();
+    let cfg = EngineConfig {
+        cache_mode: Some(CacheMode::M3Zlib1),
+        cache_capacity: scale::CACHE_CAPACITY,
+        selective: false,
+        ..Default::default()
+    };
+    let mut e = VswEngine::open(&dir, &disk, cfg).unwrap();
+    let iters = 20u32;
+    let run = e.run(&PageRank::new(), iters).unwrap();
+    let mut tbl = Table::new(vec!["iter", "time (s)", "decodes", "crc skips", "read (B)"]);
+    for m in run.iterations.iter().step_by(4) {
+        tbl.row(vec![
+            format!("{}", m.iteration),
+            format!("{:.4}", m.elapsed_seconds()),
+            format!("{}", m.cache.decodes),
+            format!("{}", m.cache.crc_verifies_skipped),
+            format!("{}", m.io.bytes_read),
+        ]);
+    }
+    tbl.print("fig7-style PageRank iterations (twitter-sim, cache-3)");
+    println!("{}", pipeline_summary(&run));
+    let steady_decodes: u64 = run.iterations.iter().skip(1).map(|m| m.cache.decodes).sum();
+    let steady_verifies: u64 = run
+        .iterations
+        .iter()
+        .skip(1)
+        .map(|m| m.cache.crc_verifies)
+        .sum();
+    println!(
+        "steady state: {steady_decodes} decodes, {steady_verifies} CRC verifies after the fill iteration"
+    );
+
+    json.push_str("  \"pagerank_iters\": [");
+    for (i, m) in run.iterations.iter().enumerate() {
+        json.push_str(&format!(
+            "{}{:.6}",
+            if i == 0 { "" } else { ", " },
+            m.elapsed_seconds()
+        ));
+    }
+    json.push_str("],\n");
+    json.push_str(&format!(
+        "  \"pagerank_total_s\": {:.6},\n  \"steady_decodes\": {steady_decodes},\n  \"steady_crc_verifies\": {steady_verifies}\n}}\n",
+        run.total_seconds()
+    ));
+
+    std::fs::write("BENCH_PR3.json", &json).unwrap();
+    println!("\nwrote BENCH_PR3.json");
+    let _ = std::fs::remove_dir_all(&tmp);
+}

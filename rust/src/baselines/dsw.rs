@@ -21,8 +21,8 @@ use anyhow::Result;
 
 use crate::apps::VertexProgram;
 use crate::exec::{
-    fold_edges_interval, mark_interval, ExecCore, IterCtx, RangeMarker, ShardSource, SharedDst,
-    UnitOutput,
+    fold_edges_interval, mark_interval, ExecCore, IterCtx, RangeMarker, Scratch, ShardSource,
+    SharedDst, UnitOutput,
 };
 use crate::graph::{Edge, EdgeList, VertexId};
 use crate::metrics::RunMetrics;
@@ -155,6 +155,7 @@ impl ShardSource for DswSource<'_> {
         ctx: &IterCtx<'_>,
         dst: &SharedDst,
         marker: &mut RangeMarker<'_>,
+        scratch: &mut Scratch<'_>,
     ) -> Result<UnitOutput> {
         let eng = self.eng;
         let n = eng.num_vertices;
@@ -163,7 +164,7 @@ impl ShardSource for DswSource<'_> {
         if lo < hi {
             // SAFETY: destination chunks are disjoint by construction.
             let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
-            fold_edges_interval(ctx, &col_edges, lo, out);
+            fold_edges_interval(ctx, &col_edges, lo, out, scratch);
             mark_interval(ctx, lo, out, marker);
         }
         let chunk_bytes = C_VERTEX * eng.chunk_span as u64;

@@ -21,7 +21,7 @@ use anyhow::Result;
 
 use crate::apps::VertexProgram;
 use crate::exec::{
-    ExecCore, IterCtx, RangeMarker, ShardSource, SharedDst, UnitOutput, Update,
+    ExecCore, IterCtx, RangeMarker, Scratch, ShardSource, SharedDst, UnitOutput,
 };
 use crate::graph::{Edge, EdgeList, VertexId};
 use crate::metrics::RunMetrics;
@@ -129,7 +129,8 @@ impl ShardSource for EsgSource<'_> {
         Ok(())
     }
 
-    /// Scatter: stream the partition's out-edges into an update stream.
+    /// Scatter: stream the partition's out-edges into an update stream —
+    /// monomorphized gather, buffer reused through the scratch arena.
     fn compute(
         &self,
         id: u32,
@@ -137,12 +138,11 @@ impl ShardSource for EsgSource<'_> {
         ctx: &IterCtx<'_>,
         _dst: &SharedDst,
         _marker: &mut RangeMarker<'_>,
+        scratch: &mut Scratch<'_>,
     ) -> Result<UnitOutput> {
         let part = &self.eng.partitions[id as usize];
-        let updates: Vec<Update> = part
-            .iter()
-            .map(|e| Update { dst: e.dst, val: ctx.edge_value(e) })
-            .collect();
+        let mut updates = scratch.take_updates();
+        crate::exec::kernel::scatter_list(ctx, part, &mut updates);
         self.disk.account_write(C_VERTEX * part.len() as u64); // update stream
         Ok(UnitOutput::Updates(updates))
     }

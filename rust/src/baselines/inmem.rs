@@ -20,7 +20,7 @@ use anyhow::Result;
 
 use crate::apps::VertexProgram;
 use crate::exec::{
-    mark_interval, ExecCore, IterCtx, RangeMarker, ShardSource, SharedDst, UnitOutput,
+    mark_interval, ExecCore, IterCtx, RangeMarker, Scratch, ShardSource, SharedDst, UnitOutput,
 };
 use crate::graph::{Csr, EdgeList, VertexId};
 use crate::metrics::RunMetrics;
@@ -152,12 +152,13 @@ impl ShardSource for InMemSource<'_> {
         ctx: &IterCtx<'_>,
         dst: &SharedDst,
         marker: &mut RangeMarker<'_>,
+        _scratch: &mut Scratch<'_>,
     ) -> Result<UnitOutput> {
         let csr = self.eng.csr.as_ref().expect("run checks csr");
         let n = self.eng.num_vertices as usize;
         // SAFETY: the single unit owns the whole vertex range.
         let out = unsafe { dst.claim(0, n) };
-        crate::engine::native_update(ctx, csr, 0, out);
+        crate::engine::native_update(ctx, csr.slices(), 0, out);
         mark_interval(ctx, 0, out, marker);
         Ok(UnitOutput::InPlace)
     }

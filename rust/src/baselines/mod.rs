@@ -60,6 +60,15 @@ pub struct BaselineConfig {
     pub prefetch_depth: usize,
     /// Dedicated I/O threads of the shared prefetcher.
     pub prefetch_threads: usize,
+    /// Enable the engine's *native* selective scheduling, where the
+    /// modelled system has one (GraphChi-PSW skips intervals with no
+    /// active in-edge source — its "scheduler"; X-Stream/GridGraph sweep
+    /// everything and ignore this flag).  Off by default: the paper's
+    /// baseline tables run the systems in their default full-sweep mode.
+    pub selective: bool,
+    /// Active-ratio threshold below which the skip pass runs (same rule
+    /// as `EngineConfig::active_threshold`; sim graphs want ~0.02).
+    pub active_threshold: f64,
 }
 
 impl Default for BaselineConfig {
@@ -71,6 +80,8 @@ impl Default for BaselineConfig {
             workers: exec.workers,
             prefetch_depth: exec.prefetch_depth,
             prefetch_threads: exec.prefetch_threads,
+            selective: false,
+            active_threshold: 0.02,
         }
     }
 }

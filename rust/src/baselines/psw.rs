@@ -11,6 +11,14 @@
 //! Runs through the shared execution core: one pipeline unit per shard,
 //! reads charged on the load path (overlapping compute when prefetched),
 //! the interval's rows computed in place via the shared kernel fold.
+//!
+//! GraphChi has *native* selective scheduling (its "scheduler": skip an
+//! interval when nothing scheduled touches it).  With
+//! `BaselineConfig::selective` on, the schedule stage consults exact
+//! per-shard source bitsets built at preprocessing — a shard is skipped
+//! iff no active vertex has an in-edge into its interval, so results
+//! stay bit-identical (same rule the VSW engine's Bloom pass
+//! approximates) while Fig 7's effect reproduces under a non-VSW layout.
 
 use std::time::Instant;
 
@@ -18,8 +26,8 @@ use anyhow::Result;
 
 use crate::apps::VertexProgram;
 use crate::exec::{
-    fold_edges_interval, mark_interval, ExecCore, IterCtx, RangeMarker, ShardSource, SharedDst,
-    UnitOutput,
+    fold_edges_interval, mark_interval, ExecCore, IterCtx, RangeMarker, Scratch, ShardSource,
+    SharedDst, UnitOutput,
 };
 use crate::graph::{Edge, EdgeList, VertexId};
 use crate::metrics::RunMetrics;
@@ -33,6 +41,10 @@ pub struct PswEngine {
     shards: Vec<Vec<Edge>>,
     /// Destination interval of each shard (disjoint, covering `[0, n)`).
     intervals: Vec<(u32, u32)>,
+    /// Per-shard bitset over the vertex space: bit `v` set iff `v` has an
+    /// out-edge into the shard's interval (exact, unlike VSW's Blooms —
+    /// GraphChi keeps this as per-interval scheduling state).
+    src_bits: Vec<Vec<u64>>,
     num_vertices: u32,
     num_edges: u64,
     inv_out_deg: Vec<f32>,
@@ -45,6 +57,7 @@ impl PswEngine {
             cfg,
             shards: Vec::new(),
             intervals: Vec::new(),
+            src_bits: Vec::new(),
             num_vertices: 0,
             num_edges: 0,
             inv_out_deg: Vec::new(),
@@ -102,6 +115,17 @@ impl BaselineEngine for PswEngine {
         for s in &mut shards {
             s.sort_unstable_by_key(|e| e.src);
         }
+        // per-shard source-presence bitsets for the native scheduler
+        // (built during the same layout pass; |P|·|V|/8 bytes)
+        let words = (g.num_vertices as usize).div_ceil(64);
+        let mut src_bits = vec![vec![0u64; words]; shards.len()];
+        for (s, edges) in shards.iter().enumerate() {
+            let bits = &mut src_bits[s];
+            for e in edges {
+                bits[(e.src / 64) as usize] |= 1 << (e.src % 64);
+            }
+        }
+        self.src_bits = src_bits;
         self.intervals = bounds.windows(2).map(|w| (w[0], w[1])).collect();
         self.shards = shards;
         self.num_vertices = g.num_vertices;
@@ -140,10 +164,39 @@ struct PswSource<'e> {
 impl ShardSource for PswSource<'_> {
     type Item = ();
 
-    fn schedule(&self, _iteration: u32, _active: &[VertexId]) -> (Vec<u32>, u32) {
-        // GraphChi sweeps every shard every iteration (no selective
-        // scheduling in the modelled schedule)
-        ((0..self.eng.shards.len() as u32).collect(), 0)
+    fn schedule(&self, _iteration: u32, active: &[VertexId]) -> (Vec<u32>, u32) {
+        let eng = self.eng;
+        let p = eng.shards.len() as u32;
+        let n = eng.num_vertices as usize;
+        let active_ratio = active.len() as f64 / n.max(1) as f64;
+        // default GraphChi sweeps every shard every iteration; with its
+        // native scheduler on, skip intervals none of whose in-edge
+        // sources are active (exact — a skipped interval's fold would
+        // reproduce its current values bit-for-bit)
+        if !eng.cfg.selective || active_ratio >= eng.cfg.active_threshold {
+            return ((0..p).collect(), 0);
+        }
+        // fold the (sorted) active list into word/mask pairs once, then
+        // AND word-wise against each shard's source bitset: O(|active|)
+        // build + O(P · touched_words) probes instead of O(P · |active|)
+        // single-bit tests
+        let mut active_words: Vec<(usize, u64)> = Vec::new();
+        for &v in active {
+            let w = (v / 64) as usize;
+            let m = 1u64 << (v % 64);
+            match active_words.last_mut() {
+                Some((lw, lm)) if *lw == w => *lm |= m,
+                _ => active_words.push((w, m)),
+            }
+        }
+        let worklist: Vec<u32> = (0..p)
+            .filter(|&s| {
+                let bits = &eng.src_bits[s as usize];
+                active_words.iter().any(|&(w, m)| bits[w] & m != 0)
+            })
+            .collect();
+        let skipped = p - worklist.len() as u32;
+        (worklist, skipped)
     }
 
     fn load(&self, id: u32) -> Result<()> {
@@ -164,6 +217,7 @@ impl ShardSource for PswSource<'_> {
         ctx: &IterCtx<'_>,
         dst: &SharedDst,
         marker: &mut RangeMarker<'_>,
+        scratch: &mut Scratch<'_>,
     ) -> Result<UnitOutput> {
         let eng = self.eng;
         let (lo, hi) = eng.intervals[id as usize];
@@ -171,7 +225,7 @@ impl ShardSource for PswSource<'_> {
         // SAFETY: shard intervals are disjoint by construction (bounds
         // are strictly increasing).
         let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
-        fold_edges_interval(ctx, edges, lo, out);
+        fold_edges_interval(ctx, edges, lo, out, scratch);
         mark_interval(ctx, lo, out, marker);
         // write back vertices + updated edge values (both directions,
         // §3.1)
@@ -254,5 +308,37 @@ mod tests {
         let disk = Disk::unthrottled();
         let mut e = PswEngine::new(BaselineConfig::default());
         assert!(e.run(&PageRank::new(), 1, &disk).is_err());
+    }
+
+    #[test]
+    fn psw_selective_skips_shards_and_preserves_results() {
+        use crate::apps::Sssp;
+        let g = rmat(9, 5_000, 77, RmatParams::default());
+        let run_with = |selective: bool| {
+            let disk = Disk::unthrottled();
+            let mut e = PswEngine::new(BaselineConfig {
+                p: 16,
+                selective,
+                active_threshold: 0.2,
+                ..Default::default()
+            });
+            e.preprocess(&g, &disk).unwrap();
+            let run = e.run(&Sssp::new(0), 100, &disk).unwrap();
+            (e.values().to_vec(), run)
+        };
+        let (v_on, r_on) = run_with(true);
+        let (v_off, r_off) = run_with(false);
+        assert_eq!(v_on, v_off, "native scheduler changed results");
+        assert_eq!(r_on.iterations.len(), r_off.iterations.len());
+        let skipped: u32 = r_on.iterations.iter().map(|m| m.shards_skipped).sum();
+        assert!(skipped > 0, "SSSP frontier must let PSW skip intervals");
+        // skipped shards also skip their modelled I/O
+        let read_on: u64 = r_on.iterations.iter().map(|m| m.io.bytes_read).sum();
+        let read_off: u64 = r_off.iterations.iter().map(|m| m.io.bytes_read).sum();
+        assert!(read_on < read_off, "skips must save modelled reads");
+        // and the activation trajectories stay identical
+        for (a, b) in r_on.iterations.iter().zip(&r_off.iterations) {
+            assert_eq!(a.active_vertices, b.active_vertices);
+        }
     }
 }

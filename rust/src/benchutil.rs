@@ -105,13 +105,18 @@ pub fn pipeline_summary(run: &crate::metrics::RunMetrics) -> String {
     let misses: u64 = run.iterations.iter().map(|m| m.ready_misses as u64).sum();
     let decodes: u64 = run.iterations.iter().map(|m| m.cache.decodes).sum();
     let skips: u64 = run.iterations.iter().map(|m| m.cache.decode_skips).sum();
+    let crc_skips: u64 = run
+        .iterations
+        .iter()
+        .map(|m| m.cache.crc_verifies_skipped)
+        .sum();
     let ready_pct = if hits + misses == 0 {
         0.0
     } else {
         100.0 * hits as f64 / (hits + misses) as f64
     };
     format!(
-        "pipeline: prefetched {prefetched}, ready-hit {ready_pct:.0}%, decodes {decodes} (memo-skipped {skips}), overlapped sim {:.3}s of {:.3}s",
+        "pipeline: prefetched {prefetched}, ready-hit {ready_pct:.0}%, decodes {decodes} (memo-skipped {skips}, crc-skipped {crc_skips}), overlapped sim {:.3}s of {:.3}s",
         run.total_overlapped_sim_seconds, run.total_sim_disk_seconds
     )
 }

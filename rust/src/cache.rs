@@ -1,4 +1,5 @@
-//! The compressed edge cache (paper §2.4.2) with a decode-once hot path.
+//! The compressed edge cache (paper §2.4.2) with a decode-once,
+//! verify-once, zero-copy hot path.
 //!
 //! Capacity-bounded, shard-id-keyed.  On a hit the shard is decompressed
 //! from RAM (throughput ≫ disk); on a miss the caller loads from disk and
@@ -8,18 +9,27 @@
 //! paper, which caches "as many shards as possible") — an LRU there
 //! would only churn identical-value entries.
 //!
-//! Compressed entries additionally memoize their parsed [`Shard`] in the
-//! **decoded pool**, so a hit is an `Arc` clone, not a zlib inflate +
-//! full `Shard::from_bytes`.  The pool is strictly budget-bounded (it is
-//! real extra RAM, accounted as `memo_bytes` / Fig 11's decoded pool)
-//! and — unlike the compressed entries — **LRU-evicted**: when pinning a
-//! freshly decoded shard would exceed the budget, the least-recently-hit
-//! pins are released first, so long runs on small budgets keep the
-//! *hot* shards decoded instead of freezing whichever shards happened to
-//! be touched first.  Beyond the budget a hit decodes — at most once per
-//! scheduled shard per iteration, because the execution core's
-//! prefetcher fetches each shard exactly once and hands the decoded
-//! `Arc` to the compute worker through the ready queue.
+//! Served shards are zero-copy [`ShardView`]s: mode 1 stores the view of
+//! the aligned file image directly, and compressed entries memoize their
+//! decoded view in the **decoded pool**, so a hit is an `Arc` clone —
+//! no inflate, no parse, no allocation.  The pool is strictly
+//! budget-bounded (it is real extra RAM, accounted as `memo_bytes` /
+//! Fig 11's decoded pool) and — unlike the compressed entries —
+//! **LRU-evicted**: when pinning a freshly decoded shard would exceed
+//! the budget, the least-recently-hit pins are released first, so long
+//! runs on small budgets keep the *hot* shards decoded instead of
+//! freezing whichever shards happened to be touched first.  Beyond the
+//! budget a hit decodes — at most once per scheduled shard per
+//! iteration, because the execution core's prefetcher fetches each shard
+//! exactly once and hands the decoded `Arc` to the compute worker
+//! through the ready queue.
+//!
+//! **CRC lifecycle**: shard bytes are verified exactly once — on the
+//! load path (the engine's disk read, recorded via
+//! [`EdgeCache::note_crc_verified`]) or at admission when the caller
+//! offers unverified bytes.  Every later serving (parsed entry, memo
+//! hit, or memo-miss decode of admission-verified bytes) skips the hash
+//! pass and counts `crc_verifies_skipped` instead.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -28,7 +38,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use anyhow::Result;
 
 use crate::compress::CacheMode;
-use crate::storage::shard::Shard;
+use crate::storage::view::{AlignedBuf, ShardView};
 
 /// Hit/miss counters (atomics: workers probe concurrently).
 #[derive(Debug, Default)]
@@ -41,6 +51,11 @@ pub struct CacheStats {
     pub decodes: AtomicU64,
     /// Compressed-entry hits served from the parsed memo (no decode).
     pub decode_skips: AtomicU64,
+    /// CRC passes actually performed (load path + unverified admissions).
+    pub crc_verified: AtomicU64,
+    /// Shard servings that skipped the CRC pass because the bytes were
+    /// verified at admission / first load.
+    pub crc_skipped: AtomicU64,
 }
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -52,6 +67,10 @@ pub struct CacheSnapshot {
     pub used_bytes: u64,
     pub decodes: u64,
     pub decode_skips: u64,
+    /// CRC passes performed (admission / first load).
+    pub crc_verifies: u64,
+    /// Servings that skipped re-verification (decode-once lifecycle).
+    pub crc_verifies_skipped: u64,
     /// Bytes of parsed shards pinned by the decode-memo budget.
     pub memo_bytes: u64,
 }
@@ -68,14 +87,14 @@ impl CacheSnapshot {
 }
 
 enum Entry {
-    /// Mode 1 stores the shard parsed once — a cache hit is an Arc clone
-    /// (zero-copy), not a re-parse of ~MBs of CSR bytes (§Perf log).
-    Parsed(Arc<Shard>),
+    /// Mode 1 stores the zero-copy view of the shard's file image — a
+    /// cache hit is an Arc clone, never a re-parse.
+    Parsed(Arc<ShardView>),
     /// Compressed modes store bytes; a hit decodes unless the parsed
-    /// shard is pinned in the budget-bounded memo.
+    /// view is pinned in the budget-bounded memo.
     Compressed {
         bytes: Vec<u8>,
-        memo: RwLock<Option<Arc<Shard>>>,
+        memo: RwLock<Option<Arc<ShardView>>>,
     },
 }
 
@@ -139,9 +158,18 @@ impl EdgeCache {
         self.capacity_bytes
     }
 
+    /// Record a CRC verification performed by the caller on the load
+    /// path — the once-per-shard "verify" of the decode-once lifecycle
+    /// (every cache serving afterwards skips the hash pass).
+    pub fn note_crc_verified(&self) {
+        self.stats.crc_verified.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Probe for a shard; a hit is an Arc clone when the entry is parsed
     /// (mode 1) or memoized; otherwise it decodes (and tries to memoize).
-    pub fn get(&self, shard_id: u32) -> Result<Option<Arc<Shard>>> {
+    /// Served bytes were CRC-verified at admission, so no serving re-runs
+    /// the hash (`crc_verifies_skipped` counts them).
+    pub fn get(&self, shard_id: u32) -> Result<Option<Arc<ShardView>>> {
         if self.mode == CacheMode::M0None {
             self.stats.misses.fetch_add(1, Ordering::Relaxed);
             return Ok(None);
@@ -153,22 +181,24 @@ impl EdgeCache {
         match entry {
             Some(e) => {
                 self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                self.stats.crc_skipped.fetch_add(1, Ordering::Relaxed);
                 match &*e {
-                    Entry::Parsed(shard) => Ok(Some(Arc::clone(shard))),
+                    Entry::Parsed(view) => Ok(Some(Arc::clone(view))),
                     Entry::Compressed { bytes, memo } => {
                         // clone out of the slot before touching the LRU:
                         // lock order is always memo_lru → slot
                         let pinned = memo.read().unwrap().clone();
-                        if let Some(shard) = pinned {
+                        if let Some(view) = pinned {
                             self.stats.decode_skips.fetch_add(1, Ordering::Relaxed);
                             self.touch_memo(shard_id);
-                            return Ok(Some(shard));
+                            return Ok(Some(view));
                         }
                         let raw = self.mode.decompress(bytes)?;
-                        let shard = Arc::new(Shard::from_bytes(&raw)?);
+                        let view =
+                            Arc::new(ShardView::parse_unverified(AlignedBuf::from_bytes(&raw))?);
                         self.stats.decodes.fetch_add(1, Ordering::Relaxed);
-                        self.memoize(shard_id, memo, &shard);
-                        Ok(Some(shard))
+                        self.memoize(shard_id, memo, &view);
+                        Ok(Some(view))
                     }
                 }
             }
@@ -180,19 +210,26 @@ impl EdgeCache {
     }
 
     /// Offer freshly-loaded shard bytes; stored if capacity allows.
-    /// Returns whether the shard was admitted.
+    /// Returns whether the shard was admitted.  Unverified bytes are
+    /// CRC-checked once here (corrupt bytes never enter the cache), so
+    /// every later serving can skip the hash pass.
     pub fn admit(&self, shard_id: u32, raw_bytes: &[u8]) -> bool {
         self.admit_impl(shard_id, raw_bytes, None)
     }
 
-    /// [`admit`](Self::admit) when the caller already parsed the bytes:
-    /// mode 1 reuses the given `Arc` instead of re-parsing, compressed
-    /// modes seed the decode memo with it.
-    pub fn admit_with(&self, shard_id: u32, raw_bytes: &[u8], parsed: &Arc<Shard>) -> bool {
+    /// [`admit`](Self::admit) when the caller already parsed (and
+    /// CRC-verified) the bytes: mode 1 reuses the given `Arc` instead of
+    /// re-parsing, compressed modes seed the decode memo with it.
+    pub fn admit_with(&self, shard_id: u32, raw_bytes: &[u8], parsed: &Arc<ShardView>) -> bool {
         self.admit_impl(shard_id, raw_bytes, Some(parsed))
     }
 
-    fn admit_impl(&self, shard_id: u32, raw_bytes: &[u8], parsed: Option<&Arc<Shard>>) -> bool {
+    fn admit_impl(
+        &self,
+        shard_id: u32,
+        raw_bytes: &[u8],
+        parsed: Option<&Arc<ShardView>>,
+    ) -> bool {
         if self.mode == CacheMode::M0None {
             return false;
         }
@@ -213,14 +250,20 @@ impl EdgeCache {
             self.stats.rejected.fetch_add(1, Ordering::Relaxed);
             return false;
         }
+        // the admission-time "verify once": bytes the caller did not
+        // already parse are structurally validated + CRC-checked here
+        let verified = match parsed {
+            Some(view) => Some(Arc::clone(view)),
+            None => match ShardView::parse(AlignedBuf::from_bytes(raw_bytes)) {
+                Ok(view) => {
+                    self.stats.crc_verified.fetch_add(1, Ordering::Relaxed);
+                    Some(Arc::new(view))
+                }
+                Err(_) => return false, // corrupt bytes never enter the cache
+            },
+        };
         let entry = if self.mode == CacheMode::M1Raw {
-            match parsed {
-                Some(sh) => Entry::Parsed(Arc::clone(sh)),
-                None => match Shard::from_bytes(raw_bytes) {
-                    Ok(sh) => Entry::Parsed(Arc::new(sh)),
-                    Err(_) => return false, // corrupt bytes never enter the cache
-                },
-            }
+            Entry::Parsed(verified.expect("verified above"))
         } else {
             Entry::Compressed {
                 bytes: self.mode.compress(raw_bytes),
@@ -228,7 +271,7 @@ impl EdgeCache {
             }
         };
         let sz = match &entry {
-            Entry::Parsed(sh) => (sh.csr.size_bytes() + 32) as u64,
+            Entry::Parsed(view) => (view.size_bytes() + 32) as u64,
             Entry::Compressed { bytes, .. } => bytes.len() as u64,
         };
         // optimistic reservation
@@ -249,8 +292,11 @@ impl EdgeCache {
             map.insert(shard_id, Arc::clone(&entry));
             self.stats.admitted.fetch_add(1, Ordering::Relaxed);
         }
-        if let (Entry::Compressed { memo, .. }, Some(sh)) = (&*entry, parsed) {
-            self.memoize(shard_id, memo, sh);
+        // only caller-parsed views seed the decode memo: a plain `admit`
+        // verifies and drops its parse, pinning nothing (the pool fills
+        // on first hit instead)
+        if let (Entry::Compressed { memo, .. }, Some(view)) = (&*entry, parsed) {
+            self.memoize(shard_id, memo, view);
         }
         true
     }
@@ -268,17 +314,17 @@ impl EdgeCache {
         Self::touch_locked(&mut self.memo_lru.lock().unwrap(), shard_id);
     }
 
-    /// Pin `shard` as the entry's parsed memo, LRU-evicting older pins
+    /// Pin `view` as the entry's decoded memo, LRU-evicting older pins
     /// until it fits the budget.  A shard larger than the whole budget is
     /// never pinned (it would evict everything for one entry); its hits
     /// simply stay decode-on-hit — anything else would hold the decoded
     /// graph in RAM unaccounted, defeating the compressed cache's memory
     /// bound.
-    fn memoize(&self, shard_id: u32, slot: &RwLock<Option<Arc<Shard>>>, shard: &Arc<Shard>) {
+    fn memoize(&self, shard_id: u32, slot: &RwLock<Option<Arc<ShardView>>>, view: &Arc<ShardView>) {
         if self.memo_budget == 0 {
             return;
         }
-        let sz = (shard.csr.size_bytes() + 32) as u64;
+        let sz = (view.size_bytes() + 32) as u64;
         if sz > self.memo_budget {
             return;
         }
@@ -300,7 +346,7 @@ impl EdgeCache {
                     if let Entry::Compressed { memo, .. } = &*entry {
                         if let Some(evicted) = memo.write().unwrap().take() {
                             self.memo_used.fetch_sub(
-                                (evicted.csr.size_bytes() + 32) as u64,
+                                (evicted.size_bytes() + 32) as u64,
                                 Ordering::Relaxed,
                             );
                         }
@@ -308,7 +354,7 @@ impl EdgeCache {
                 }
             }
             if self.memo_used.load(Ordering::Relaxed) + sz <= self.memo_budget {
-                *w = Some(Arc::clone(shard));
+                *w = Some(Arc::clone(view));
                 self.memo_used.fetch_add(sz, Ordering::Relaxed);
                 lru.push(shard_id);
             }
@@ -332,6 +378,8 @@ impl EdgeCache {
             used_bytes: self.used_bytes.load(Ordering::Relaxed),
             decodes: self.stats.decodes.load(Ordering::Relaxed),
             decode_skips: self.stats.decode_skips.load(Ordering::Relaxed),
+            crc_verifies: self.stats.crc_verified.load(Ordering::Relaxed),
+            crc_verifies_skipped: self.stats.crc_skipped.load(Ordering::Relaxed),
             memo_bytes: self.memo_used.load(Ordering::Relaxed),
         }
     }
@@ -341,12 +389,17 @@ impl EdgeCache {
 mod tests {
     use super::*;
     use crate::graph::{Csr, Edge};
+    use crate::storage::shard::Shard;
 
     fn mk_shard(id: u32, edges: usize) -> Shard {
         let es: Vec<Edge> = (0..edges)
             .map(|i| Edge::new((i % 97) as u32, 100 + (i % 8) as u32))
             .collect();
         Shard { id, start_vertex: 100, csr: Csr::from_edges(&es, 100, 8, false) }
+    }
+
+    fn mk_view(s: &Shard) -> Arc<ShardView> {
+        Arc::new(ShardView::parse(AlignedBuf::from_bytes(&s.to_bytes())).unwrap())
     }
 
     #[test]
@@ -356,11 +409,37 @@ mod tests {
         assert!(cache.get(0).unwrap().is_none());
         assert!(cache.admit(0, &s.to_bytes()));
         let got = cache.get(0).unwrap().unwrap();
-        assert_eq!(*got, s);
+        assert_eq!(got.to_shard(), s);
         let snap = cache.snapshot();
         assert_eq!(snap.hits, 1);
         assert_eq!(snap.misses, 1);
         assert!(snap.used_bytes > 0);
+    }
+
+    #[test]
+    fn crc_verified_once_at_admission_then_skipped() {
+        let mut cache = EdgeCache::new(CacheMode::M3Zlib1, 1 << 20);
+        cache.set_decode_memo_budget(1 << 20);
+        let s = mk_shard(11, 400);
+        assert!(cache.admit(11, &s.to_bytes()));
+        assert_eq!(cache.snapshot().crc_verifies, 1, "admission verifies once");
+        cache.get(11).unwrap().unwrap(); // decode (memo-miss), no re-verify
+        cache.get(11).unwrap().unwrap(); // memo hit
+        let snap = cache.snapshot();
+        assert_eq!(snap.crc_verifies, 1, "no serving re-verifies");
+        assert_eq!(snap.crc_verifies_skipped, 2);
+        assert_eq!(snap.decodes, 1);
+    }
+
+    #[test]
+    fn corrupt_bytes_rejected_at_admission_in_all_modes() {
+        for mode in [CacheMode::M1Raw, CacheMode::M2Fast, CacheMode::M3Zlib1] {
+            let cache = EdgeCache::new(mode, 1 << 20);
+            let mut b = mk_shard(12, 200).to_bytes();
+            b[40] ^= 0x5a; // payload corruption: only the CRC catches it
+            assert!(!cache.admit(12, &b), "{}", mode.name());
+            assert!(cache.get(12).unwrap().is_none(), "{}", mode.name());
+        }
     }
 
     #[test]
@@ -428,8 +507,8 @@ mod tests {
         let cache = EdgeCache::new(CacheMode::M3Zlib1, 1 << 20);
         let s = mk_shard(5, 500);
         assert!(cache.admit(5, &s.to_bytes()));
-        assert_eq!(*cache.get(5).unwrap().unwrap(), s);
-        assert_eq!(*cache.get(5).unwrap().unwrap(), s);
+        assert_eq!(cache.get(5).unwrap().unwrap().to_shard(), s);
+        assert_eq!(cache.get(5).unwrap().unwrap().to_shard(), s);
         let snap = cache.snapshot();
         assert_eq!(snap.decodes, 2, "no budget: every hit re-decodes");
         assert_eq!(snap.decode_skips, 0);
@@ -442,8 +521,8 @@ mod tests {
         cache.set_decode_memo_budget(1 << 20);
         let s = mk_shard(6, 500);
         assert!(cache.admit(6, &s.to_bytes()));
-        assert_eq!(*cache.get(6).unwrap().unwrap(), s);
-        assert_eq!(*cache.get(6).unwrap().unwrap(), s);
+        assert_eq!(cache.get(6).unwrap().unwrap().to_shard(), s);
+        assert_eq!(cache.get(6).unwrap().unwrap().to_shard(), s);
         let snap = cache.snapshot();
         assert_eq!(snap.decodes, 1, "budgeted memo must decode exactly once");
         assert_eq!(snap.decode_skips, 1);
@@ -468,7 +547,7 @@ mod tests {
         let s1 = mk_shard(1, 500);
         let s2 = mk_shard(2, 500);
         let s3 = mk_shard(3, 500);
-        let one = (s1.csr.size_bytes() + 32) as u64;
+        let one = (s1.to_bytes().len() + 32) as u64;
         // budget fits exactly two pinned shards
         let mut cache = EdgeCache::new(CacheMode::M3Zlib1, 1 << 20);
         cache.set_decode_memo_budget(2 * one);
@@ -503,7 +582,7 @@ mod tests {
         // than the shard set, the *recently hit* shards must stay pinned
         // instead of whichever were touched first
         let shards: Vec<Shard> = (0..6u32).map(|id| mk_shard(id, 400)).collect();
-        let one = (shards[0].csr.size_bytes() + 32) as u64;
+        let one = (shards[0].to_bytes().len() + 32) as u64;
         let mut cache = EdgeCache::new(CacheMode::M3Zlib1, 1 << 20);
         cache.set_decode_memo_budget(3 * one);
         for (id, s) in shards.iter().enumerate() {
@@ -536,18 +615,21 @@ mod tests {
         let mut cache = EdgeCache::new(CacheMode::M3Zlib1, 1 << 20);
         cache.set_decode_memo_budget(1 << 20);
         let s = mk_shard(7, 300);
-        let arc = Arc::new(s.clone());
+        let arc = mk_view(&s);
         assert!(cache.admit_with(7, &s.to_bytes(), &arc));
         let got = cache.get(7).unwrap().unwrap();
         assert!(Arc::ptr_eq(&got, &arc), "memoized hit must be the same Arc");
         assert_eq!(cache.snapshot().decodes, 0);
+        // the caller verified (and accounts its own pass via
+        // `note_crc_verified`); admission must not re-hash
+        assert_eq!(cache.snapshot().crc_verifies, 0);
     }
 
     #[test]
     fn admit_with_reuses_parsed_for_mode1() {
         let cache = EdgeCache::new(CacheMode::M1Raw, 1 << 20);
         let s = mk_shard(8, 300);
-        let arc = Arc::new(s.clone());
+        let arc = mk_view(&s);
         assert!(cache.admit_with(8, &s.to_bytes(), &arc));
         let got = cache.get(8).unwrap().unwrap();
         assert!(Arc::ptr_eq(&got, &arc));

@@ -19,7 +19,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::apps::{ShardKernel, VertexProgram};
+use crate::apps::{EdgeCost, EdgeGather, ShardKernel, VertexProgram};
 use crate::baselines::{count_updates, inv_out_degrees, C_VERTEX, D_EDGE};
 use crate::graph::{Edge, EdgeList};
 use crate::metrics::{IterationMetrics, RunMetrics};
@@ -101,6 +101,8 @@ impl DistSystem {
     /// framework costs (message construction, (de)serialisation, vertex
     /// dispatch) — far above a bare SpMV loop, which is why distributed
     /// engines need 9 machines to match one tight single-machine engine.
+    /// The calibration workload is PageRank; other kernels scale through
+    /// [`per_edge_cost_for`](Self::per_edge_cost_for).
     pub fn per_edge_cost(&self) -> f64 {
         match self {
             DistSystem::PregelPlus => 41e-9,
@@ -111,11 +113,43 @@ impl DistSystem {
         }
     }
 
+    /// Kernel-adjusted per-edge cost: the PageRank-calibrated base times
+    /// the kernel's gather-class factor ([`kernel_cost_factor`]).
+    pub fn per_edge_cost_for(&self, kernel: &ShardKernel) -> f64 {
+        self.per_edge_cost() * kernel_cost_factor(kernel)
+    }
+
     /// Whether compute scales with the active fraction (vertex-level
     /// selective execution: Pregel+/GraphD process only active vertices;
     /// the GAS engines and Chaos sweep everything each round).
     pub fn active_scaled(&self) -> bool {
         matches!(self, DistSystem::PregelPlus | DistSystem::GraphD)
+    }
+}
+
+/// Relative per-edge compute cost of a kernel against the PageRank-family
+/// gather the Table 5 calibration anchors.  PPR shares PageRank's gather
+/// (`DegreeMass`) exactly — only its teleport differs, and that is
+/// per-vertex, not per-edge — so it inherits factor 1.  Unweighted path
+/// relaxations (BFS/CC) skip the degree lookup; weighted ones (SSSP)
+/// fetch the edge weight; capacity gathers (widest path) fetch the
+/// weight *and* take the extra `min` of the max–min relaxation.
+pub fn kernel_cost_factor(kernel: &ShardKernel) -> f64 {
+    match kernel.gather {
+        EdgeGather::DegreeMass => 1.0,
+        EdgeGather::AddCost(EdgeCost::Weights) => 1.05,
+        EdgeGather::AddCost(_) => 0.9,
+        EdgeGather::MinCapacity(_) => 1.2,
+    }
+}
+
+/// Per-message payload bytes of a kernel's updates: rank mass travels as
+/// the paper's C-byte (double) vertex record; path/capacity relaxations
+/// ship one f32 candidate.
+pub fn message_payload_bytes(kernel: &ShardKernel) -> f64 {
+    match kernel.gather {
+        EdgeGather::DegreeMass => C_VERTEX as f64,
+        EdgeGather::AddCost(_) | EdgeGather::MinCapacity(_) => 4.0,
     }
 }
 
@@ -211,12 +245,14 @@ impl DistEngine {
     }
 
     /// Simulated network seconds for one iteration, given how many values
-    /// actually changed (message-generating vertices).
-    fn network_seconds(&self, active_frac: f64) -> f64 {
+    /// actually changed (message-generating vertices) and the kernel
+    /// (payload size differs: rank records vs f32 relaxation candidates).
+    fn network_seconds(&self, active_frac: f64, kernel: &ShardKernel) -> f64 {
         let msg_bytes = match self.system {
-            // one message per cross-partition edge whose source is active
+            // one message per cross-partition edge whose source is active:
+            // 4B destination id + the kernel's payload
             DistSystem::PregelPlus | DistSystem::GraphD => {
-                (self.cross_edges as f64 * active_frac) * (4.0 + C_VERTEX as f64)
+                (self.cross_edges as f64 * active_frac) * (4.0 + message_payload_bytes(kernel))
             }
             // GAS: gather+apply+scatter sync per replica
             DistSystem::PowerGraph => {
@@ -239,20 +275,23 @@ impl DistEngine {
     }
 
     /// Simulated per-machine disk seconds per iteration (out-of-core only).
-    fn disk_seconds(&self, active_frac: f64) -> f64 {
+    fn disk_seconds(&self, active_frac: f64, kernel: &ShardKernel) -> f64 {
         let per_machine_edges =
             self.machine_edges.iter().copied().max().unwrap_or(0) as f64;
         match self.system {
             DistSystem::GraphD => {
                 // stream edges + write/read the recoverable message
-                // streams (message volume tracks the active frontier)
+                // streams (message volume tracks the active frontier and
+                // the kernel's payload size)
                 let bytes = per_machine_edges
-                    * (D_EDGE as f64 + 2.0 * C_VERTEX as f64 * active_frac.max(0.05));
+                    * (D_EDGE as f64
+                        + 2.0 * message_payload_bytes(kernel) * active_frac.max(0.05));
                 bytes / self.cfg.disk_bw as f64
             }
             DistSystem::Chaos => {
                 // scatter + gather passes over edge/update files
-                let bytes = per_machine_edges * (D_EDGE as f64 + C_VERTEX as f64);
+                let bytes =
+                    per_machine_edges * (D_EDGE as f64 + message_payload_bytes(kernel));
                 bytes / self.cfg.disk_bw as f64
             }
             _ => 0.0,
@@ -280,6 +319,7 @@ impl DistEngine {
     /// model and the streamed-disk model.
     pub fn run(&mut self, app: &dyn VertexProgram, iters: u32) -> Result<RunMetrics> {
         let n = self.g.num_vertices;
+        let kernel = app.kernel();
         let (mut src, active0) = app.init(n);
         let mut active = active0.len() as u64;
         let mut run = RunMetrics::default();
@@ -301,7 +341,7 @@ impl DistEngine {
             let t0 = Instant::now();
             let active_frac = active as f64 / n.max(1) as f64;
             let dst = crate::baselines::sweep(
-                adapt_kind(app.kernel()),
+                adapt_kind(kernel),
                 &self.g.edges,
                 n,
                 &self.inv_out_deg,
@@ -314,12 +354,12 @@ impl DistEngine {
                 1.0
             };
             let compute_sim = self.g.num_edges() as f64
-                * self.system.per_edge_cost()
+                * self.system.per_edge_cost_for(&kernel)
                 * compute_scale
                 / eff_machines;
             let mut sim = compute_sim
-                + self.network_seconds(active_frac)
-                + self.disk_seconds(active_frac)
+                + self.network_seconds(active_frac, &kernel)
+                + self.disk_seconds(active_frac, &kernel)
                 + self.cfg.barrier_seconds;
             if iter == 0 {
                 sim += self.load_seconds();
@@ -400,7 +440,7 @@ pub fn symmetrized(edges: &[Edge]) -> Vec<Edge> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::{PageRank, Sssp};
+    use crate::apps::{Bfs, PageRank, Ppr, Sssp, Widest};
     use crate::graph::rmat::{rmat, RmatParams};
 
     fn graph() -> EdgeList {
@@ -486,6 +526,52 @@ mod tests {
             }
         }
         assert_eq!(eng.values(), &d[..]);
+    }
+
+    #[test]
+    fn kernel_cost_models_are_ordered_and_anchored() {
+        let pr = PageRank::new().kernel();
+        let ppr = Ppr::new(1).kernel();
+        let ss = Sssp::new(0).kernel();
+        let bf = Bfs::new(0).kernel();
+        let wd = Widest::new(0).kernel();
+        // PPR shares PageRank's gather: identical per-edge model
+        assert_eq!(kernel_cost_factor(&pr), 1.0, "PageRank is the anchor");
+        assert_eq!(kernel_cost_factor(&ppr), kernel_cost_factor(&pr));
+        // widest path's weight fetch + extra min is the priciest gather
+        for sys in ALL_SYSTEMS {
+            assert!(sys.per_edge_cost_for(&wd) > sys.per_edge_cost_for(&pr), "{sys:?}");
+            assert!(sys.per_edge_cost_for(&bf) < sys.per_edge_cost_for(&pr), "{sys:?}");
+            assert!(sys.per_edge_cost_for(&ss) > sys.per_edge_cost_for(&bf), "{sys:?}");
+        }
+        // rank mass ships C-byte records; relaxations ship f32 candidates
+        assert_eq!(message_payload_bytes(&pr), C_VERTEX as f64);
+        assert_eq!(message_payload_bytes(&ppr), C_VERTEX as f64);
+        assert_eq!(message_payload_bytes(&wd), 4.0);
+        assert_eq!(message_payload_bytes(&bf), 4.0);
+    }
+
+    #[test]
+    fn ppr_and_widest_run_and_match_sweep_reference() {
+        let g = graph();
+        let inv = inv_out_degrees(&g);
+        for (app, iters) in [
+            (&Ppr::new(2) as &dyn crate::apps::VertexProgram, 6u32),
+            (&Widest::new(0), 40),
+        ] {
+            let mut eng =
+                DistEngine::new(DistSystem::GraphD, ClusterConfig::default(), g.clone())
+                    .unwrap();
+            let run = eng.run(app, iters).unwrap();
+            let (mut src, _) = app.init(g.num_vertices);
+            for _ in 0..run.iterations.len() {
+                src = crate::baselines::sweep(app.kernel(), &g.edges, g.num_vertices, &inv, &src);
+            }
+            assert_eq!(eng.values(), &src[..], "{}", app.name());
+            for m in &run.iterations {
+                assert!(m.sim_disk_seconds > 0.0, "{}: no simulated cost", app.name());
+            }
+        }
     }
 
     #[test]

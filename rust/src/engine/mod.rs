@@ -36,13 +36,14 @@ use crate::bloom::BloomSet;
 use crate::cache::EdgeCache;
 use crate::compress::CacheMode;
 use crate::exec::{
-    schedule, ExecConfig, ExecCore, IterCtx, RangeMarker, ShardSource, SharedDst, UnitOutput,
+    schedule, ExecConfig, ExecCore, IterCtx, RangeMarker, Scratch, ShardSource, SharedDst,
+    UnitOutput,
 };
-use crate::graph::{Csr, VertexId};
+use crate::graph::{CsrRef, VertexId};
 use crate::metrics::{MemoryAccount, RunMetrics};
 use crate::runtime::ShardExecutor;
 use crate::storage::disk::Disk;
-use crate::storage::shard::Shard;
+use crate::storage::view::ShardView;
 use crate::storage::{GraphDir, Property, VertexInfo};
 
 /// Shard-update execution backend.
@@ -255,19 +256,22 @@ impl VswEngine {
         core.run(&source, app, this.prop.num_vertices, &inv_out_deg, max_iters)
     }
 
-    /// Load one shard: cache hit (decode-once), else disk read + parse +
-    /// cache admission.  Runs on the core's I/O threads when the
-    /// pipeline is on, inline on workers otherwise.
-    fn load_shard(&self, shard_id: u32) -> Result<Arc<Shard>> {
-        if let Some(s) = self.cache.get(shard_id)? {
-            return Ok(s);
+    /// Load one shard: cache hit (decode-once, zero-copy), else an
+    /// aligned disk read + one header parse + one CRC pass + cache
+    /// admission.  Runs on the core's I/O threads when the pipeline is
+    /// on, inline on workers otherwise.
+    fn load_shard(&self, shard_id: u32) -> Result<Arc<ShardView>> {
+        if let Some(v) = self.cache.get(shard_id)? {
+            return Ok(v);
         }
-        let bytes = self.disk.read_file(&self.dir.shard_path(shard_id))?;
-        let shard = Arc::new(Shard::from_bytes(&bytes)?);
-        // hand the parsed shard over so mode 1 doesn't re-parse and
+        let buf = self.disk.read_file_aligned(&self.dir.shard_path(shard_id))?;
+        // the decode-once lifecycle's single CRC verification
+        let view = Arc::new(ShardView::parse(buf)?);
+        self.cache.note_crc_verified();
+        // hand the parsed view over so mode 1 doesn't re-parse and
         // compressed modes seed their decode memo
-        self.cache.admit_with(shard_id, &bytes, &shard);
-        Ok(shard)
+        self.cache.admit_with(shard_id, view.bytes(), &view);
+        Ok(view)
     }
 }
 
@@ -278,7 +282,7 @@ struct VswSource<'e> {
 }
 
 impl ShardSource for VswSource<'_> {
-    type Item = Arc<Shard>;
+    type Item = Arc<ShardView>;
 
     fn schedule(&self, _iteration: u32, active: &[VertexId]) -> (Vec<u32>, u32) {
         let eng = self.eng;
@@ -295,7 +299,7 @@ impl ShardSource for VswSource<'_> {
         )
     }
 
-    fn load(&self, id: u32) -> Result<Arc<Shard>> {
+    fn load(&self, id: u32) -> Result<Arc<ShardView>> {
         self.eng.load_shard(id)
     }
 
@@ -304,19 +308,20 @@ impl ShardSource for VswSource<'_> {
     fn compute(
         &self,
         id: u32,
-        shard: Arc<Shard>,
+        shard: Arc<ShardView>,
         ctx: &IterCtx<'_>,
         dst: &SharedDst,
         marker: &mut RangeMarker<'_>,
+        _scratch: &mut Scratch<'_>,
     ) -> Result<UnitOutput> {
         let (a, b) = self.eng.prop.intervals[id as usize];
-        debug_assert_eq!(shard.start_vertex, a);
+        debug_assert_eq!(shard.start_vertex(), a);
         let rows = (b - a) as usize;
         // SAFETY: shard intervals are disjoint (prep::compute_intervals
         // invariant, verified by its tests + the debug registry).
         let out = unsafe { dst.claim(a as usize, rows) };
         match &self.eng.cfg.backend {
-            Backend::Native => native_update(ctx, &shard.csr, a, out),
+            Backend::Native => native_update(ctx, shard.csr_ref(), a, out),
             Backend::Pjrt(exe) => pjrt_update(ctx, exe, &shard, out)?,
         }
         crate::exec::mark_interval(ctx, a, out, marker);
@@ -329,45 +334,18 @@ impl ShardSource for VswSource<'_> {
 }
 
 /// Native shard update: the paper's `Update` loop over the shard CSR,
-/// generalized over [`ShardKernel`].  `out` must enter holding the
-/// current values of the shard's interval `[start_vertex, ..)`.
+/// generalized over [`crate::apps::ShardKernel`] and monomorphized by
+/// [`crate::exec::kernel::fold_csr`] — the (combine × gather) pair is
+/// dispatched once per shard, so the per-edge loop is branch-free.
+/// `out` must enter holding the current values of the shard's interval
+/// `[start_vertex, ..)`.
 ///
 /// Sum kernels read the iteration's pre-folded `contrib` array (one
 /// gather + one add per edge); monotone kernels fold from the old value.
 /// Bit-identical to [`crate::exec::fold_edges_interval`] over the same
 /// per-destination edge order (canonically: ascending source id).
-pub fn native_update(ctx: &IterCtx<'_>, csr: &Csr, start_vertex: u32, out: &mut [f32]) {
-    let kernel = ctx.kernel;
-    let rows = csr.rows();
-    debug_assert_eq!(out.len(), rows);
-    let ro = &csr.row_offsets;
-    let col = &csr.col;
-    match kernel.combine {
-        Combine::Sum => {
-            let contrib = ctx.contrib;
-            for r in 0..rows {
-                let mut sum = 0.0f32;
-                for &c in &col[ro[r] as usize..ro[r + 1] as usize] {
-                    sum += contrib[c as usize];
-                }
-                let v = start_vertex + r as u32;
-                out[r] = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
-            }
-        }
-        Combine::Min | Combine::Max => {
-            let weights = csr.weights.as_deref();
-            let src = ctx.src;
-            for r in 0..rows {
-                let mut m = out[r]; // current value (== src of this row)
-                for i in ro[r] as usize..ro[r + 1] as usize {
-                    let u = col[i] as usize;
-                    let w = weights.map_or(1.0, |ws| ws[i]);
-                    m = kernel.combine(m, kernel.edge_value(src[u], 0.0, w));
-                }
-                out[r] = m;
-            }
-        }
-    }
+pub fn native_update(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: &mut [f32]) {
+    crate::exec::kernel::fold_csr(ctx, csr, start_vertex, out);
 }
 
 /// PJRT shard update: expand CSR to (col, seg, w) chunks within the
@@ -378,14 +356,14 @@ pub fn native_update(ctx: &IterCtx<'_>, csr: &Csr, start_vertex: u32, out: &mut 
 pub fn pjrt_update(
     ctx: &IterCtx<'_>,
     exe: &ShardExecutor,
-    shard: &Shard,
+    shard: &ShardView,
     out: &mut [f32],
 ) -> Result<()> {
     let kernel = ctx.kernel;
     let rows = shard.rows();
-    let ro = &shard.csr.row_offsets;
-    let col = &shard.csr.col;
-    let weights = shard.csr.weights.as_deref();
+    let ro = shard.row_offsets();
+    let col = shard.col();
+    let weights = shard.weights();
 
     // For affine sum kernels we accumulate raw scaled Σ terms (base
     // passed as 0) and add the per-vertex base mass once at the end.
@@ -453,7 +431,7 @@ pub fn pjrt_update(
 
     if let Some(base) = base {
         for (r, o) in out.iter_mut().enumerate() {
-            *o += base.at(shard.start_vertex + r as u32, ctx.num_vertices);
+            *o += base.at(shard.start_vertex() + r as u32, ctx.num_vertices);
         }
     }
     Ok(())
@@ -497,7 +475,7 @@ mod tests {
     use super::*;
     use crate::apps::{Cc, PageRank, Ppr, ShardKernel, Sssp, Widest};
     use crate::graph::rmat::{rmat, RmatParams};
-    use crate::graph::{Edge, EdgeList};
+    use crate::graph::{Csr, Edge, EdgeList};
     use crate::prep::{preprocess_into, PrepConfig};
     use crate::storage::disk::DiskProfile;
 
@@ -860,6 +838,43 @@ mod tests {
     }
 
     #[test]
+    fn steady_state_decode_path_is_allocation_and_verify_free() {
+        // The zero-copy acceptance gate: with a compressed cache and a
+        // generous decode memo, every steady-state shard serving must be
+        // an Arc clone — zero decodes (no inflate, no parse, no fresh
+        // Vecs) and zero CRC passes.  The counters are the proxy: a
+        // decode or a verify is exactly where the old path allocated.
+        let g = rmat(9, 5_000, 91, RmatParams::default());
+        let cfg = EngineConfig {
+            cache_mode: Some(CacheMode::M3Zlib1),
+            cache_capacity: 64 << 20,
+            selective: false,
+            ..Default::default()
+        };
+        let (mut e, _) = open_engine(&g, "zero_decode", cfg, false);
+        let run = e.run(&PageRank::new(), 4).unwrap();
+        let fill = &run.iterations[0];
+        assert_eq!(
+            fill.cache.crc_verifies, fill.shards_processed as u64,
+            "first load verifies each shard exactly once"
+        );
+        for m in &run.iterations[1..] {
+            assert_eq!(m.cache.decodes, 0, "iter {}: decoded on the hot path", m.iteration);
+            assert_eq!(
+                m.cache.crc_verifies, 0,
+                "iter {}: re-verified on the hot path",
+                m.iteration
+            );
+            assert_eq!(
+                m.cache.crc_verifies_skipped, m.shards_processed as u64,
+                "iter {}: every serving must be a verified-bytes Arc clone",
+                m.iteration
+            );
+            assert_eq!(m.io.bytes_read, 0);
+        }
+    }
+
+    #[test]
     fn rejects_weighted_app_on_unweighted_dir() {
         let g = rmat(8, 1_000, 61, RmatParams::default());
         let (mut e, _) = open_engine(&g, "wreject", EngineConfig::default(), false);
@@ -905,7 +920,7 @@ mod tests {
             iteration: 0,
         };
         let mut out = src.clone();
-        native_update(&ctx, &csr, 0, &mut out);
+        native_update(&ctx, csr.slices(), 0, &mut out);
         let base = 0.15 / 2.0;
         assert!((out[0] - (base + 0.85 * 0.5)).abs() < 1e-6);
         assert!((out[1] - (base + 0.85 * 0.5)).abs() < 1e-6);

@@ -1,0 +1,401 @@
+//! Monomorphized kernel hot loops.
+//!
+//! [`ShardKernel`](crate::apps::ShardKernel) is a runtime value, so
+//! folding edges through its enum methods pays a gather `match` (and,
+//! via `IterCtx::edge_value`, a `uses_contrib` branch) **per edge**.
+//! GridGraph's edge loop wins by being branch-free; this module gets the
+//! same shape by dispatching the (combine × gather) pair **once per
+//! unit**: [`with_gather!`] maps the runtime kernel onto a closure whose
+//! type monomorphizes the generic fold bodies, so the inner loops compile
+//! to straight-line arithmetic.
+//!
+//! Every specialized instance performs the *same f32 operations in the
+//! same order* as the enum-dispatch reference (`ShardKernel::combine` /
+//! `edge_value` / `apply`), so results stay bit-identical — gated by
+//! `rust/tests/determinism.rs` and `rust/tests/cross_engine.rs`, and
+//! cross-checked against an enum-dispatch fold in `benches/hot_loop.rs`.
+//!
+//! Three fold shapes cover every engine:
+//!
+//! - [`fold_csr`] — CSR rows (VSW shards, the in-memory engine);
+//! - [`fold_list`] — destination-grouped edge lists (PSW intervals, DSW
+//!   grid columns), with the caller's reusable sum-accumulator arena;
+//! - [`scatter_list`] — X-Stream-style update streams (ESG), into the
+//!   caller's reusable buffer.
+
+use super::{IterCtx, Update};
+use crate::apps::{Combine, EdgeCost, EdgeGather};
+use crate::exec::schedule::RangeMarker;
+use crate::graph::{CsrRef, Edge};
+
+/// Bind `$g` to a gather closure specialized for `$ctx.kernel.gather`
+/// and evaluate `$body` once per variant — the single dispatch point
+/// that keeps the edge loops branch-free.  Each closure mirrors
+/// `ShardKernel::edge_value` (with `DegreeMass` reading the pre-folded
+/// `contrib` array, as `IterCtx::edge_value` does) bit-for-bit.
+macro_rules! with_gather {
+    ($ctx:expr, $g:ident => $body:expr) => {{
+        let src = $ctx.src;
+        let contrib = $ctx.contrib;
+        match $ctx.kernel.gather {
+            EdgeGather::DegreeMass => {
+                let $g = |u: u32, _w: f32| contrib[u as usize];
+                $body
+            }
+            EdgeGather::AddCost(EdgeCost::Weights) => {
+                let $g = |u: u32, w: f32| src[u as usize] + w;
+                $body
+            }
+            EdgeGather::AddCost(EdgeCost::Unit) => {
+                let $g = |u: u32, _w: f32| src[u as usize] + 1.0;
+                $body
+            }
+            EdgeGather::AddCost(EdgeCost::Zero) => {
+                let $g = |u: u32, _w: f32| src[u as usize] + 0.0;
+                $body
+            }
+            EdgeGather::MinCapacity(EdgeCost::Weights) => {
+                let $g = |u: u32, w: f32| src[u as usize].min(w);
+                $body
+            }
+            EdgeGather::MinCapacity(EdgeCost::Unit) => {
+                let $g = |u: u32, _w: f32| src[u as usize].min(1.0);
+                $body
+            }
+            EdgeGather::MinCapacity(EdgeCost::Zero) => {
+                let $g = |u: u32, _w: f32| src[u as usize].min(0.0);
+                $body
+            }
+        }
+    }};
+}
+
+/// The paper's `Update` loop over one shard's CSR rows, monomorphized.
+/// `out` must enter holding the current values of rows
+/// `[start_vertex, start_vertex + out.len())`.
+pub fn fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), csr.rows());
+    match ctx.kernel.combine {
+        Combine::Sum => with_gather!(ctx, g => sum_csr(ctx, g, csr, start_vertex, out)),
+        Combine::Min => {
+            with_gather!(ctx, g => meet_csr(g, |a: f32, b: f32| a.min(b), csr, out))
+        }
+        Combine::Max => {
+            with_gather!(ctx, g => meet_csr(g, |a: f32, b: f32| a.max(b), csr, out))
+        }
+    }
+}
+
+fn sum_csr<G: Fn(u32, f32) -> f32>(
+    ctx: &IterCtx<'_>,
+    g: G,
+    csr: CsrRef<'_>,
+    start_vertex: u32,
+    out: &mut [f32],
+) {
+    let kernel = ctx.kernel;
+    let ro = csr.row_offsets;
+    match csr.weights {
+        Some(ws) => {
+            for (r, o) in out.iter_mut().enumerate() {
+                let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
+                let mut sum = 0.0f32;
+                for (&u, &w) in csr.col[lo..hi].iter().zip(&ws[lo..hi]) {
+                    sum += g(u, w);
+                }
+                let v = start_vertex + r as u32;
+                *o = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
+            }
+        }
+        None => {
+            for (r, o) in out.iter_mut().enumerate() {
+                let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
+                let mut sum = 0.0f32;
+                for &u in &csr.col[lo..hi] {
+                    sum += g(u, 1.0);
+                }
+                let v = start_vertex + r as u32;
+                *o = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
+            }
+        }
+    }
+}
+
+fn meet_csr<G, C>(g: G, cb: C, csr: CsrRef<'_>, out: &mut [f32])
+where
+    G: Fn(u32, f32) -> f32,
+    C: Fn(f32, f32) -> f32,
+{
+    let ro = csr.row_offsets;
+    match csr.weights {
+        Some(ws) => {
+            for (r, o) in out.iter_mut().enumerate() {
+                let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
+                let mut m = *o; // current value (== src of this row)
+                for (&u, &w) in csr.col[lo..hi].iter().zip(&ws[lo..hi]) {
+                    m = cb(m, g(u, w));
+                }
+                *o = m;
+            }
+        }
+        None => {
+            for (r, o) in out.iter_mut().enumerate() {
+                let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
+                let mut m = *o;
+                for &u in &csr.col[lo..hi] {
+                    m = cb(m, g(u, 1.0));
+                }
+                *o = m;
+            }
+        }
+    }
+}
+
+/// Destination-grouped edge-list fold (PSW intervals, DSW grid columns,
+/// the toy sources).  `out` covers rows `[lo, lo + out.len())` and enters
+/// holding their current values; `acc` is the caller's reusable
+/// sum-accumulator arena (cleared and resized here, allocated at most
+/// once per worker lifetime).  Bit-identical to [`fold_csr`] over the
+/// same per-destination edge order — canonically ascending source id.
+pub fn fold_list(
+    ctx: &IterCtx<'_>,
+    edges: &[Edge],
+    lo: u32,
+    out: &mut [f32],
+    acc: &mut Vec<f32>,
+) {
+    let kernel = ctx.kernel;
+    match kernel.combine {
+        Combine::Sum => {
+            // fold into per-row accumulators first, then apply: rows with
+            // no in-edges still get their base mass
+            acc.clear();
+            acc.resize(out.len(), 0.0);
+            with_gather!(ctx, g => {
+                for e in edges {
+                    acc[(e.dst - lo) as usize] += g(e.src, e.weight);
+                }
+            });
+            for (r, (o, a)) in out.iter_mut().zip(acc.iter()).enumerate() {
+                let v = lo + r as u32;
+                *o = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], *a);
+            }
+        }
+        Combine::Min => {
+            with_gather!(ctx, g => meet_list(g, |a: f32, b: f32| a.min(b), edges, lo, out))
+        }
+        Combine::Max => {
+            with_gather!(ctx, g => meet_list(g, |a: f32, b: f32| a.max(b), edges, lo, out))
+        }
+    }
+}
+
+fn meet_list<G, C>(g: G, cb: C, edges: &[Edge], lo: u32, out: &mut [f32])
+where
+    G: Fn(u32, f32) -> f32,
+    C: Fn(f32, f32) -> f32,
+{
+    for e in edges {
+        let r = (e.dst - lo) as usize;
+        out[r] = cb(out[r], g(e.src, e.weight));
+    }
+}
+
+/// Scatter one unit's edges into deferred updates (X-Stream's scatter
+/// phase), monomorphized; `out` is the caller's reusable buffer.
+pub fn scatter_list(ctx: &IterCtx<'_>, edges: &[Edge], out: &mut Vec<Update>) {
+    out.reserve(edges.len());
+    with_gather!(ctx, g => {
+        for e in edges {
+            out.push(Update { dst: e.dst, val: g(e.src, e.weight) });
+        }
+    });
+}
+
+/// The pre-monomorphization fold: per-edge enum dispatch through the
+/// [`crate::apps::ShardKernel`] methods (`uses_contrib` branch + gather
+/// `match` per edge), in the exact shape of the old `native_update`.
+/// Kept as the single bit-identity oracle — the kernel unit tests assert
+/// against it and `benches/hot_loop.rs` measures it as the baseline.
+/// Not part of the public API.
+#[doc(hidden)]
+pub fn reference_fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start: u32, out: &mut [f32]) {
+    let kernel = ctx.kernel;
+    let ro = csr.row_offsets;
+    for r in 0..out.len() {
+        let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
+        match kernel.combine {
+            Combine::Sum => {
+                let mut sum = 0.0f32;
+                for i in lo..hi {
+                    let u = csr.col[i];
+                    let w = csr.weights.map_or(1.0, |ws| ws[i]);
+                    sum += if kernel.uses_contrib() {
+                        ctx.contrib[u as usize]
+                    } else {
+                        kernel.edge_value(ctx.src[u as usize], 0.0, w)
+                    };
+                }
+                let v = start + r as u32;
+                out[r] = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
+            }
+            Combine::Min | Combine::Max => {
+                let mut m = out[r]; // current value (== src of this row)
+                for i in lo..hi {
+                    let u = csr.col[i];
+                    let w = csr.weights.map_or(1.0, |ws| ws[i]);
+                    m = kernel.combine(m, kernel.edge_value(ctx.src[u as usize], 0.0, w));
+                }
+                out[r] = m;
+            }
+        }
+    }
+}
+
+/// Activation marking for rows `[lo, lo + out.len())`, with the
+/// activation predicate dispatched once per unit instead of per row.
+pub fn mark_rows(ctx: &IterCtx<'_>, lo: u32, out: &[f32], marker: &mut RangeMarker<'_>) {
+    match ctx.kernel.combine {
+        Combine::Sum => mark_if(|old, new| old != new, ctx, lo, out, marker),
+        Combine::Min => mark_if(|old, new| new < old, ctx, lo, out, marker),
+        Combine::Max => mark_if(|old, new| new > old, ctx, lo, out, marker),
+    }
+}
+
+fn mark_if<F: Fn(f32, f32) -> bool>(
+    activates: F,
+    ctx: &IterCtx<'_>,
+    lo: u32,
+    out: &[f32],
+    marker: &mut RangeMarker<'_>,
+) {
+    for (r, &new) in out.iter().enumerate() {
+        let v = lo + r as u32;
+        if activates(ctx.src[v as usize], new) {
+            marker.mark(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{ShardKernel, VertexProgram};
+    use crate::graph::Csr;
+
+    fn all_kernels() -> Vec<ShardKernel> {
+        vec![
+            crate::apps::PageRank::new().kernel(),
+            crate::apps::Ppr::new(2).kernel(),
+            crate::apps::Sssp::new(0).kernel(),
+            crate::apps::Bfs::new(0).kernel(),
+            crate::apps::Cc.kernel(),
+            crate::apps::Widest::new(0).kernel(),
+        ]
+    }
+
+    fn fixture(n: u32, seed: u64) -> (Vec<Edge>, Vec<f32>, Vec<f32>) {
+        let mut rng = crate::util::rng::Xoshiro256::new(seed);
+        let mut edges = Vec::new();
+        for _ in 0..(n as usize * 4) {
+            edges.push(Edge::weighted(
+                rng.next_below(n as u64) as u32,
+                rng.next_below(n as u64) as u32,
+                rng.next_range_f32(0.1, 9.0),
+            ));
+        }
+        edges.sort_unstable_by_key(|e| (e.dst, e.src));
+        let src: Vec<f32> = (0..n).map(|v| 0.25 + (v % 7) as f32).collect();
+        let inv: Vec<f32> = (0..n).map(|v| 1.0 / (1.0 + (v % 5) as f32)).collect();
+        (edges, src, inv)
+    }
+
+    #[test]
+    fn monomorphized_folds_match_enum_dispatch_bitwise() {
+        let n = 64u32;
+        let (edges, src, inv) = fixture(n, 99);
+        let contrib: Vec<f32> = src.iter().zip(&inv).map(|(&v, &d)| v * d).collect();
+        let csr = Csr::from_edges(&edges, 0, n as usize, true);
+        for kernel in all_kernels() {
+            let ctx = IterCtx {
+                kernel,
+                num_vertices: n,
+                src: &src,
+                inv_out_deg: &inv,
+                contrib: &contrib,
+                iteration: 0,
+            };
+            let mut a = src.clone();
+            let mut b = src.clone();
+            fold_csr(&ctx, csr.slices(), 0, &mut a);
+            reference_fold_csr(&ctx, csr.slices(), 0, &mut b);
+            assert_eq!(a, b, "fold_csr diverged for {kernel:?}");
+
+            // list fold over the same destination-grouped order
+            let mut c = src.clone();
+            let mut acc = Vec::new();
+            fold_list(&ctx, &edges, 0, &mut c, &mut acc);
+            assert_eq!(c, a, "fold_list diverged for {kernel:?}");
+
+            // scatter gathers the same per-edge values
+            let mut ups = Vec::new();
+            scatter_list(&ctx, &edges, &mut ups);
+            assert_eq!(ups.len(), edges.len());
+            for (e, u) in edges.iter().zip(&ups) {
+                assert_eq!(u.dst, e.dst);
+                assert_eq!(u.val, ctx.edge_value(e), "scatter diverged for {kernel:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn unweighted_csr_defaults_to_unit_weight() {
+        let n = 16u32;
+        let (edges, src, inv) = fixture(n, 7);
+        let contrib: Vec<f32> = src.iter().zip(&inv).map(|(&v, &d)| v * d).collect();
+        let csr = Csr::from_edges(&edges, 0, n as usize, false);
+        for kernel in [
+            crate::apps::Bfs::new(0).kernel(),
+            crate::apps::Cc.kernel(),
+            crate::apps::PageRank::new().kernel(),
+        ] {
+            let ctx = IterCtx {
+                kernel,
+                num_vertices: n,
+                src: &src,
+                inv_out_deg: &inv,
+                contrib: &contrib,
+                iteration: 0,
+            };
+            let mut a = src.clone();
+            let mut b = src.clone();
+            fold_csr(&ctx, csr.slices(), 0, &mut a);
+            reference_fold_csr(&ctx, csr.slices(), 0, &mut b);
+            assert_eq!(a, b, "unweighted fold diverged for {kernel:?}");
+        }
+    }
+
+    #[test]
+    fn fold_list_reuses_the_acc_arena() {
+        let n = 8u32;
+        let (edges, src, inv) = fixture(n, 3);
+        let contrib: Vec<f32> = src.iter().zip(&inv).map(|(&v, &d)| v * d).collect();
+        let ctx = IterCtx {
+            kernel: crate::apps::PageRank::new().kernel(),
+            num_vertices: n,
+            src: &src,
+            inv_out_deg: &inv,
+            contrib: &contrib,
+            iteration: 0,
+        };
+        let mut acc = Vec::new();
+        let mut out1 = src.clone();
+        fold_list(&ctx, &edges, 0, &mut out1, &mut acc);
+        let cap = acc.capacity();
+        assert!(cap >= n as usize);
+        let mut out2 = src.clone();
+        fold_list(&ctx, &edges, 0, &mut out2, &mut acc);
+        assert_eq!(acc.capacity(), cap, "second fold must not reallocate");
+        assert_eq!(out1, out2);
+    }
+}

@@ -26,6 +26,7 @@
 //! `rust/tests/cross_engine.rs`).
 
 pub mod dst;
+pub mod kernel;
 pub mod pipeline;
 pub mod schedule;
 
@@ -122,6 +123,68 @@ pub enum UnitOutput {
     Updates(Vec<Update>),
 }
 
+/// Run-scoped free lists backing the per-worker [`Scratch`] arenas.
+///
+/// The steady-state iteration used to allocate per *unit*: a fresh
+/// `vec![0.0; rows]` sum accumulator in the list fold and a fresh
+/// `Vec<Update>` per scatter unit.  The pool keeps those buffers alive
+/// across units *and iterations*: workers lease a [`Scratch`] at spawn
+/// (buffers return on drop), and the barrier recycles drained scatter
+/// buffers — so after warm-up the compute path performs no per-unit heap
+/// allocation.
+#[derive(Default)]
+pub struct ScratchPool {
+    accs: Mutex<Vec<Vec<f32>>>,
+    update_bufs: Mutex<Vec<Vec<Update>>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lease a worker scratch; its buffers return to the pool on drop.
+    pub fn scratch(&self) -> Scratch<'_> {
+        Scratch {
+            pool: self,
+            acc: self.accs.lock().unwrap().pop().unwrap_or_default(),
+        }
+    }
+
+    /// Return a drained scatter buffer for reuse (capacity preserved).
+    pub fn recycle_updates(&self, mut buf: Vec<Update>) {
+        buf.clear();
+        self.update_bufs.lock().unwrap().push(buf);
+    }
+}
+
+/// Per-worker reusable buffers, threaded through `run_worklist`'s worker
+/// state into every [`ShardSource::compute`] call.
+pub struct Scratch<'p> {
+    pool: &'p ScratchPool,
+    acc: Vec<f32>,
+}
+
+impl Scratch<'_> {
+    /// The sum-kernel accumulator arena (sized by the fold that uses it).
+    fn acc_buf(&mut self) -> &mut Vec<f32> {
+        &mut self.acc
+    }
+
+    /// Take an empty scatter buffer (capacity reused across iterations);
+    /// hand it back through [`UnitOutput::Updates`] — the barrier
+    /// recycles it after folding.
+    pub fn take_updates(&self) -> Vec<Update> {
+        self.pool.update_bufs.lock().unwrap().pop().unwrap_or_default()
+    }
+}
+
+impl Drop for Scratch<'_> {
+    fn drop(&mut self) {
+        self.pool.accs.lock().unwrap().push(std::mem::take(&mut self.acc));
+    }
+}
+
 /// The engine-specific half of the execution core: an I/O schedule over
 /// loadable units plus the per-unit compute.
 pub trait ShardSource: Sync {
@@ -141,7 +204,8 @@ pub trait ShardSource: Sync {
 
     /// Compute stage — runs on the compute workers.  In-place units
     /// claim their exclusive rows from `dst` and mark activations into
-    /// `marker`; scatter units return their update stream.  Per-unit
+    /// `marker`; scatter units return their update stream (take the
+    /// buffer from `scratch` so its capacity is reused).  Per-unit
     /// write-back charges belong here (they are part of processing the
     /// unit, not of the barrier).
     fn compute(
@@ -151,6 +215,7 @@ pub trait ShardSource: Sync {
         ctx: &IterCtx<'_>,
         dst: &SharedDst,
         marker: &mut RangeMarker<'_>,
+        scratch: &mut Scratch<'_>,
     ) -> Result<UnitOutput>;
 
     /// Barrier stage: residual per-iteration charges (e.g. the gather
@@ -164,41 +229,24 @@ pub trait ShardSource: Sync {
 
 /// Fold destination-grouped `edges` into `out`, which covers the vertex
 /// rows `[lo, lo + out.len())` and enters holding their current values.
+/// Dispatches into the monomorphized [`kernel::fold_list`] (branch-free
+/// per edge, sum accumulator from the worker's scratch arena).
 /// Bit-identical to the CSR row loop (`engine::native_update`) as long as
 /// each destination's edges arrive in the same order — the repo-wide
 /// canonical layout is ascending source id.
-pub fn fold_edges_interval(ctx: &IterCtx<'_>, edges: &[Edge], lo: u32, out: &mut [f32]) {
-    let kernel = ctx.kernel;
-    match kernel.combine {
-        Combine::Sum => {
-            // fold into per-row accumulators first, then apply: rows with
-            // no in-edges still get their base mass
-            let mut acc = vec![0.0f32; out.len()];
-            for e in edges {
-                acc[(e.dst - lo) as usize] += ctx.edge_value(e);
-            }
-            for (r, a) in acc.iter().enumerate() {
-                let v = lo + r as u32;
-                out[r] = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], *a);
-            }
-        }
-        Combine::Min | Combine::Max => {
-            for e in edges {
-                let r = (e.dst - lo) as usize;
-                out[r] = kernel.combine(out[r], ctx.edge_value(e));
-            }
-        }
-    }
+pub fn fold_edges_interval(
+    ctx: &IterCtx<'_>,
+    edges: &[Edge],
+    lo: u32,
+    out: &mut [f32],
+    scratch: &mut Scratch<'_>,
+) {
+    kernel::fold_list(ctx, edges, lo, out, scratch.acc_buf());
 }
 
 /// Mark every row of `[lo, lo + out.len())` whose new value activates it.
 pub fn mark_interval(ctx: &IterCtx<'_>, lo: u32, out: &[f32], marker: &mut RangeMarker<'_>) {
-    for (r, &new) in out.iter().enumerate() {
-        let v = lo + r as u32;
-        if ctx.kernel.is_update(ctx.src[v as usize], new) {
-            marker.mark(v);
-        }
-    }
+    kernel::mark_rows(ctx, lo, out, marker);
 }
 
 /// The engine-agnostic execution driver.  Holds the run-scoped state the
@@ -209,12 +257,14 @@ pub struct ExecCore<'a> {
     disk: &'a Disk,
     cache: Option<&'a EdgeCache>,
     auto_depth: usize,
+    /// Worker scratch arenas, reused across units and iterations.
+    scratch: ScratchPool,
 }
 
 impl<'a> ExecCore<'a> {
     pub fn new(cfg: ExecConfig, disk: &'a Disk, cache: Option<&'a EdgeCache>) -> Self {
         let seed = cfg.prefetch_depth.clamp(1, MAX_AUTO_DEPTH);
-        ExecCore { cfg, disk, cache, auto_depth: seed }
+        ExecCore { cfg, disk, cache, auto_depth: seed, scratch: ScratchPool::new() }
     }
 
     /// Run `app` through `source` for at most `max_iters` iterations
@@ -319,16 +369,19 @@ impl<'a> ExecCore<'a> {
             Mutex::new((0..worklist.len()).map(|_| None).collect());
 
         // stages 2+3: I/O threads stage units into the bounded ready
-        // queue; compute workers drain it.
+        // queue; compute workers drain it.  Each worker leases a scratch
+        // arena alongside its activation marker.
+        let pool = &self.scratch;
         let outcome = pipeline::run_worklist(
             &worklist,
             self.cfg.workers,
             depth,
             self.cfg.prefetch_threads,
             |id| source.load(id),
-            || bits.marker(),
-            |marker, index, id, item| {
-                match source.compute(id, item, &ctx, &dst, marker)? {
+            || (bits.marker(), pool.scratch()),
+            |state, index, id, item| {
+                let (marker, scratch) = state;
+                match source.compute(id, item, &ctx, &dst, marker, scratch)? {
                     UnitOutput::InPlace => {}
                     UnitOutput::Updates(u) => {
                         slots.lock().unwrap()[index] = Some(u);
@@ -351,7 +404,7 @@ impl<'a> ExecCore<'a> {
         // engine's residual iteration I/O
         let slots = slots.into_inner().unwrap();
         let updates_folded = if slots.iter().any(Option::is_some) {
-            fold_updates(&ctx, slots, &mut next, &bits)
+            fold_updates(&ctx, slots, &mut next, &bits, pool)
         } else {
             0
         };
@@ -407,6 +460,9 @@ impl<'a> ExecCore<'a> {
                         used_bytes: after.used_bytes,
                         decodes: after.decodes - cache_before.decodes,
                         decode_skips: after.decode_skips - cache_before.decode_skips,
+                        crc_verifies: after.crc_verifies - cache_before.crc_verifies,
+                        crc_verifies_skipped: after.crc_verifies_skipped
+                            - cache_before.crc_verifies_skipped,
                         memo_bytes: after.memo_bytes,
                     }
                 }
@@ -419,24 +475,30 @@ impl<'a> ExecCore<'a> {
 /// Fold scatter-unit update streams into `out` in worklist order,
 /// marking activated vertices.  Sum kernels rebuild every lane from the
 /// folded accumulator (X-Stream's gather recomputes all vertices);
-/// monotone kernels meet each update into the current value.
+/// monotone kernels meet each update into the current value.  Drained
+/// buffers (and the barrier accumulator) go back to the scratch pool so
+/// the next iteration's scatter units reuse their capacity.
 fn fold_updates(
     ctx: &IterCtx<'_>,
     slots: Vec<Option<Vec<Update>>>,
     out: &mut [f32],
     bits: &ActiveBits,
+    pool: &ScratchPool,
 ) -> u64 {
     let kernel = ctx.kernel;
     let mut folded = 0u64;
     let mut marker = bits.marker();
     match kernel.combine {
         Combine::Sum => {
-            let mut acc = vec![0.0f32; out.len()];
-            for slot in slots.into_iter().flatten() {
+            let mut acc = pool.accs.lock().unwrap().pop().unwrap_or_default();
+            acc.clear();
+            acc.resize(out.len(), 0.0);
+            for mut slot in slots.into_iter().flatten() {
                 folded += slot.len() as u64;
-                for u in slot {
+                for u in slot.drain(..) {
                     acc[u.dst as usize] += u.val;
                 }
+                pool.recycle_updates(slot);
             }
             for (v, a) in acc.iter().enumerate() {
                 let old = ctx.src[v];
@@ -446,11 +508,12 @@ fn fold_updates(
                 }
                 out[v] = new;
             }
+            pool.accs.lock().unwrap().push(acc);
         }
         Combine::Min | Combine::Max => {
-            for slot in slots.into_iter().flatten() {
+            for mut slot in slots.into_iter().flatten() {
                 folded += slot.len() as u64;
-                for u in slot {
+                for u in slot.drain(..) {
                     let cur = out[u.dst as usize];
                     let new = kernel.combine(cur, u.val);
                     if new != cur {
@@ -458,6 +521,7 @@ fn fold_updates(
                         marker.mark(u.dst);
                     }
                 }
+                pool.recycle_updates(slot);
             }
         }
     }
@@ -516,11 +580,12 @@ mod tests {
             ctx: &IterCtx<'_>,
             dst: &SharedDst,
             marker: &mut RangeMarker<'_>,
+            scratch: &mut Scratch<'_>,
         ) -> Result<UnitOutput> {
             assert_eq!(id as usize, item);
             let (lo, hi) = self.intervals[item];
             let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
-            fold_edges_interval(ctx, &self.edges[item], lo, out);
+            fold_edges_interval(ctx, &self.edges[item], lo, out, scratch);
             mark_interval(ctx, lo, out, marker);
             Ok(UnitOutput::InPlace)
         }
@@ -553,13 +618,11 @@ mod tests {
             ctx: &IterCtx<'_>,
             _dst: &SharedDst,
             _marker: &mut RangeMarker<'_>,
+            scratch: &mut Scratch<'_>,
         ) -> Result<UnitOutput> {
-            Ok(UnitOutput::Updates(
-                self.parts[item]
-                    .iter()
-                    .map(|e| Update { dst: e.dst, val: ctx.edge_value(e) })
-                    .collect(),
-            ))
+            let mut updates = scratch.take_updates();
+            kernel::scatter_list(ctx, &self.parts[item], &mut updates);
+            Ok(UnitOutput::Updates(updates))
         }
 
         fn residency_bytes(&self) -> u64 {
@@ -680,8 +743,29 @@ mod tests {
         let mut out = src[3..6].to_vec();
         let mut es: Vec<Edge> = edges.iter().filter(|e| e.dst >= 3).copied().collect();
         es.sort_unstable_by_key(|e| e.src);
-        fold_edges_interval(&ctx, &es, 3, &mut out);
+        let pool = ScratchPool::new();
+        let mut scratch = pool.scratch();
+        fold_edges_interval(&ctx, &es, 3, &mut out, &mut scratch);
         assert_eq!(out, vec![3.0, 7.0, 11.0]);
+    }
+
+    #[test]
+    fn scratch_pool_reuses_buffers() {
+        let pool = ScratchPool::new();
+        {
+            let mut s = pool.scratch();
+            s.acc_buf().resize(100, 0.0);
+            let u = s.take_updates();
+            assert!(u.is_empty());
+            let mut u = u;
+            u.reserve(64);
+            pool.recycle_updates(u);
+        }
+        // the dropped scratch returned its accumulator; the recycled
+        // update buffer kept its capacity
+        let mut s2 = pool.scratch();
+        assert!(s2.acc_buf().capacity() >= 100);
+        assert!(s2.take_updates().capacity() >= 64);
     }
 
     #[test]

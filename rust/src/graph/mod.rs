@@ -175,6 +175,11 @@ impl Csr {
             + self.weights.as_ref().map_or(0, |w| w.len() * 4)
     }
 
+    /// Borrow the CSR arrays — see [`CsrRef`].
+    pub fn slices(&self) -> CsrRef<'_> {
+        CsrRef::from(self)
+    }
+
     /// Iterate `(local_row, src, weight)` triples.
     pub fn iter_edges(&self) -> impl Iterator<Item = (u32, VertexId, f32)> + '_ {
         (0..self.rows()).flat_map(move |r| {
@@ -185,6 +190,37 @@ impl Csr {
                 (r as u32, self.col[i], w)
             })
         })
+    }
+}
+
+/// Borrowed CSR arrays — the zero-copy counterpart of [`Csr`], produced
+/// either from an owned `Csr` or straight out of a shard file buffer
+/// (`storage::view::ShardView::csr_ref`).  The kernel hot loops consume
+/// this form so owned and memory-mapped-style shards share one code path.
+#[derive(Clone, Copy, Debug)]
+pub struct CsrRef<'a> {
+    pub row_offsets: &'a [u32],
+    pub col: &'a [VertexId],
+    pub weights: Option<&'a [f32]>,
+}
+
+impl CsrRef<'_> {
+    pub fn rows(&self) -> usize {
+        self.row_offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.col.len()
+    }
+}
+
+impl<'a> From<&'a Csr> for CsrRef<'a> {
+    fn from(c: &'a Csr) -> CsrRef<'a> {
+        CsrRef {
+            row_offsets: &c.row_offsets,
+            col: &c.col,
+            weights: c.weights.as_deref(),
+        }
     }
 }
 

@@ -156,6 +156,21 @@ impl Disk {
         Ok(data)
     }
 
+    /// Read a whole file into a 4-byte-aligned buffer (zero-copy shard
+    /// views borrow typed sections straight out of it).  Metered exactly
+    /// like [`read_file`](Self::read_file).
+    pub fn read_file_aligned(&self, path: &Path) -> Result<super::view::AlignedBuf> {
+        use std::io::Read;
+        let mut f =
+            fs::File::open(path).with_context(|| format!("read {}", path.display()))?;
+        let len = f.metadata()?.len() as usize;
+        let mut buf = super::view::AlignedBuf::with_len(len);
+        f.read_exact(buf.as_bytes_mut())
+            .with_context(|| format!("read {}", path.display()))?;
+        self.account_read(len as u64);
+        Ok(buf)
+    }
+
     /// Write a whole file.
     pub fn write_file(&self, path: &Path, bytes: &[u8]) -> Result<()> {
         if let Some(parent) = path.parent() {
@@ -220,6 +235,23 @@ mod tests {
         assert_eq!(s.bytes_read, 1000);
         assert_eq!(s.read_ops, 1);
         assert_eq!(s.sim_nanos, 0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn aligned_read_matches_plain_read() {
+        let dir = std::env::temp_dir().join("graphmp_disk_aligned_test");
+        let _ = fs::remove_dir_all(&dir);
+        let disk = Disk::unthrottled();
+        let p = dir.join("a.bin");
+        let data: Vec<u8> = (0..1001u32).map(|i| (i % 251) as u8).collect();
+        disk.write_file(&p, &data).unwrap();
+        let buf = disk.read_file_aligned(&p).unwrap();
+        assert_eq!(buf.as_bytes(), &data[..]);
+        assert_eq!(buf.as_bytes().as_ptr() as usize % 4, 0);
+        let s = disk.snapshot();
+        assert_eq!(s.bytes_read, 1001);
+        assert_eq!(s.read_ops, 1);
         fs::remove_dir_all(&dir).unwrap();
     }
 

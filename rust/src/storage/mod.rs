@@ -3,6 +3,7 @@
 
 pub mod disk;
 pub mod shard;
+pub mod view;
 
 use std::path::{Path, PathBuf};
 

@@ -23,7 +23,7 @@ use crate::util::{bytes_as_f32s, bytes_as_u32s, f32s_as_bytes, u32s_as_bytes};
 
 use super::disk::Disk;
 
-const MAGIC: &[u8; 4] = b"GMPS";
+pub(crate) const MAGIC: &[u8; 4] = b"GMPS";
 
 /// A fully materialised shard: interval metadata + CSR edges.
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,152 @@
+//! Fig 12 (PR 4): scan-shared multi-job runtime — disk I/O per job as a
+//! function of batch size.  N PPR queries with different reset vectors
+//! run (a) back-to-back, each paying the full per-iteration shard scan,
+//! and (b) batched, where every iteration loads the union worklist once
+//! and serves all N jobs.  Per-job results are asserted bit-identical
+//! either way; the headline series is effective bytes read per job
+//! falling as ~1/N.  Emits `BENCH_PR4.json`.
+
+use graphmp::apps::Ppr;
+use graphmp::benchutil::{banner, batch_summary, scale, Table};
+use graphmp::compress::CacheMode;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::exec::BatchJob;
+use graphmp::graph::datasets::Dataset;
+use graphmp::graph::rmat::{rmat, RmatParams};
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::storage::disk::Disk;
+use graphmp::storage::GraphDir;
+
+const ITERS: u32 = 10;
+
+fn engine(dir: &GraphDir, disk: &Disk, mode: CacheMode) -> VswEngine {
+    let cfg = EngineConfig {
+        cache_mode: Some(mode),
+        cache_capacity: scale::CACHE_CAPACITY,
+        // full sweeps: PPR queries all-active at this scale, and fixed
+        // worklists make the batched-vs-sequential comparison exact
+        selective: false,
+        ..Default::default()
+    };
+    VswEngine::open(dir, disk, cfg).unwrap()
+}
+
+fn main() {
+    banner(
+        "fig12_scan_sharing",
+        "PR 4: one shard pass serves N concurrent PPR queries (I/O per job ~1/N)",
+    );
+    let small = std::env::args().any(|a| a == "--small");
+    let g = if small {
+        rmat(10, 20_000, 7, RmatParams::default())
+    } else {
+        Dataset::TwitterSim.generate()
+    };
+    let tmp = std::env::temp_dir().join("graphmp_bench_fig12");
+    let _ = std::fs::remove_dir_all(&tmp);
+    let disk = scale::bench_disk();
+    let prep = PrepConfig {
+        edges_per_shard: scale::EDGES_PER_SHARD / 4,
+        max_rows_per_shard: scale::MAX_ROWS,
+        weighted: false,
+        ..Default::default()
+    };
+    let (dir, report) = preprocess_into(&g, &tmp, &disk, prep).unwrap();
+    println!(
+        "graph: |V|={} |E|={} shards={}",
+        g.num_vertices,
+        g.num_edges(),
+        report.num_shards
+    );
+
+    let batch_sizes: &[u32] = if small { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"iters\": {ITERS},\n"));
+
+    for (mi, mode) in [CacheMode::M0None, CacheMode::M3Zlib1].iter().enumerate() {
+        let mut tbl = Table::new(vec![
+            "N jobs",
+            "seq bytes/job",
+            "batched bytes/job",
+            "reduction",
+            "amortized loads",
+        ]);
+        let mut rows_json = Vec::new();
+        let mut prev_per_job = f64::INFINITY;
+        for &n in batch_sizes {
+            let seeds: Vec<u32> = (0..n).map(|j| 1 + 37 * j).collect();
+            let apps: Vec<Ppr> = seeds.iter().map(|&s| Ppr::new(s)).collect();
+
+            // sequential: one engine per query, full price each
+            let before = disk.snapshot();
+            let mut solo_values = Vec::new();
+            for app in &apps {
+                let (v, _) = engine(&dir, &disk, *mode).run_to_values(app, ITERS).unwrap();
+                solo_values.push(v);
+            }
+            let seq_bytes = disk.snapshot().since(&before).bytes_read;
+
+            // batched: one engine, one JobSet-sized pass per iteration
+            let jobs: Vec<BatchJob<'_>> = apps
+                .iter()
+                .map(|a| BatchJob { app: a, max_iters: ITERS })
+                .collect();
+            let before = disk.snapshot();
+            let (outs, batch) = engine(&dir, &disk, *mode).run_jobs(&jobs).unwrap();
+            let batch_bytes = disk.snapshot().since(&before).bytes_read;
+
+            // the non-negotiable gate: batching never changes results
+            for (j, (v, _)) in outs.iter().enumerate() {
+                assert_eq!(
+                    v, &solo_values[j],
+                    "{}: job {j} diverged between batched and solo",
+                    mode.name()
+                );
+            }
+
+            let seq_per_job = seq_bytes as f64 / n as f64;
+            let batch_per_job = batch_bytes as f64 / n as f64;
+            assert!(
+                batch_per_job <= prev_per_job * 1.001,
+                "{}: per-job bytes must fall monotonically with N",
+                mode.name()
+            );
+            prev_per_job = batch_per_job;
+            let reduction = if batch_per_job > 0.0 { seq_per_job / batch_per_job } else { 0.0 };
+            tbl.row(vec![
+                format!("{n}"),
+                format!("{:.0}", seq_per_job),
+                format!("{:.0}", batch_per_job),
+                format!("{reduction:.2}x"),
+                format!("{:.2}x", batch.shard_loads_amortized()),
+            ]);
+            println!("{}", batch_summary(&batch));
+            rows_json.push(format!(
+                "{{\"n\": {n}, \"seq_bytes_per_job\": {seq_per_job:.1}, \"batched_bytes_per_job\": {batch_per_job:.1}, \"reduction\": {reduction:.4}, \"amortized_loads\": {:.4}}}",
+                batch.shard_loads_amortized()
+            ));
+            if n == 8 {
+                assert!(
+                    reduction >= 3.0,
+                    "{}: acceptance gate — need >=3x I/O reduction at N=8, got {reduction:.2}x",
+                    mode.name()
+                );
+            }
+        }
+        tbl.print(&format!(
+            "Fig 12: effective disk bytes per PPR query vs batch size ({})",
+            mode.name()
+        ));
+        json.push_str(&format!(
+            "  \"{}\": [{}]{}\n",
+            mode.name(),
+            rows_json.join(", "),
+            if mi == 0 { "," } else { "" }
+        ));
+    }
+
+    json.push_str("}\n");
+    std::fs::write("BENCH_PR4.json", &json).unwrap();
+    println!("\nwrote BENCH_PR4.json");
+    let _ = std::fs::remove_dir_all(&tmp);
+}

@@ -116,16 +116,24 @@ impl BaselineEngine for PswEngine {
             s.sort_unstable_by_key(|e| e.src);
         }
         // per-shard source-presence bitsets for the native scheduler
-        // (built during the same layout pass; |P|·|V|/8 bytes)
-        let words = (g.num_vertices as usize).div_ceil(64);
-        let mut src_bits = vec![vec![0u64; words]; shards.len()];
-        for (s, edges) in shards.iter().enumerate() {
-            let bits = &mut src_bits[s];
-            for e in edges {
-                bits[(e.src / 64) as usize] |= 1 << (e.src % 64);
+        // (built during the same layout pass).  Only built when the
+        // scheduler is on: they cost P·|V|/8 bytes of *resident* RAM —
+        // GraphChi keeps this scheduling state live — and the residency
+        // model below charges them, so Fig 11 stays honest for
+        // selective PSW.
+        self.src_bits = if self.cfg.selective {
+            let words = (g.num_vertices as usize).div_ceil(64);
+            let mut src_bits = vec![vec![0u64; words]; shards.len()];
+            for (s, edges) in shards.iter().enumerate() {
+                let bits = &mut src_bits[s];
+                for e in edges {
+                    bits[(e.src / 64) as usize] |= 1 << (e.src % 64);
+                }
             }
-        }
-        self.src_bits = src_bits;
+            src_bits
+        } else {
+            Vec::new()
+        };
         self.intervals = bounds.windows(2).map(|w| (w[0], w[1])).collect();
         self.shards = shards;
         self.num_vertices = g.num_vertices;
@@ -150,9 +158,13 @@ impl BaselineEngine for PswEngine {
     }
 
     fn memory_bytes(&self) -> u64 {
-        // (C|V| + 2(C+D)|E|) / P
+        // (C|V| + 2(C+D)|E|) / P, plus the native scheduler's resident
+        // per-shard source bitsets (P·|V|/8 bytes) when selective is on
+        let scheduler_state: u64 =
+            self.src_bits.iter().map(|b| 8 * b.len() as u64).sum();
         (C_VERTEX * self.num_vertices as u64 + 2 * (C_VERTEX + D_EDGE) * self.num_edges)
             / self.shards.len().max(1) as u64
+            + scheduler_state
     }
 }
 
@@ -308,6 +320,26 @@ mod tests {
         let disk = Disk::unthrottled();
         let mut e = PswEngine::new(BaselineConfig::default());
         assert!(e.run(&PageRank::new(), 1, &disk).is_err());
+    }
+
+    #[test]
+    fn selective_scheduler_state_is_charged_to_residency() {
+        let g = rmat(8, 2_000, 79, RmatParams::default());
+        let disk = Disk::unthrottled();
+        let mk = |selective: bool| {
+            let mut e = PswEngine::new(BaselineConfig { p: 8, selective, ..Default::default() });
+            e.preprocess(&g, &disk).unwrap();
+            e
+        };
+        let off = mk(false);
+        let on = mk(true);
+        let words = (g.num_vertices as usize).div_ceil(64) as u64;
+        assert_eq!(
+            on.memory_bytes() - off.memory_bytes(),
+            on.shards.len() as u64 * words * 8,
+            "selective PSW must charge its P·|V|/8 scheduler bitsets"
+        );
+        assert!(off.src_bits.is_empty(), "no scheduler state without selective");
     }
 
     #[test]

@@ -121,6 +121,21 @@ pub fn pipeline_summary(run: &crate::metrics::RunMetrics) -> String {
     )
 }
 
+/// One-line scan-sharing summary of a batch: loads vs job-servings,
+/// the amortization factor and the per-job effective disk bytes — what
+/// the `--jobs` CLI path and the Fig 12 bench report.
+pub fn batch_summary(b: &crate::metrics::BatchMetrics) -> String {
+    format!(
+        "scan sharing: {} jobs x {} passes, {} shard loads served {} job-consumptions ({:.2}x amortized), {:.1} KiB read/job effective",
+        b.jobs,
+        b.passes,
+        b.shard_loads,
+        b.shard_servings,
+        b.shard_loads_amortized(),
+        b.effective_bytes_read_per_job() / 1024.0
+    )
+}
+
 /// Shared bench banner so `cargo bench` output is self-describing.
 pub fn banner(name: &str, paper_ref: &str) {
     println!("\n################################################################");
@@ -210,6 +225,22 @@ mod tests {
     fn table_rejects_ragged() {
         let mut t = Table::new(vec!["a"]);
         t.row(vec!["x", "y"]);
+    }
+
+    #[test]
+    fn batch_summary_formats_amortization() {
+        let b = crate::metrics::BatchMetrics {
+            jobs: 8,
+            passes: 10,
+            shard_loads: 100,
+            shard_servings: 800,
+            bytes_read: 8 * 1024 * 100,
+            ..Default::default()
+        };
+        let s = batch_summary(&b);
+        assert!(s.contains("8 jobs"), "{s}");
+        assert!(s.contains("8.00x amortized"), "{s}");
+        assert!(s.contains("100.0 KiB read/job"), "{s}");
     }
 
     #[test]

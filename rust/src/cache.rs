@@ -56,6 +56,10 @@ pub struct CacheStats {
     /// Shard servings that skipped the CRC pass because the bytes were
     /// verified at admission / first load.
     pub crc_skipped: AtomicU64,
+    /// Scan-sharing attribution: (unit, job) consumptions the execution
+    /// core fanned each pass's probes out to — `job_servings / (hits +
+    /// misses)` is how many jobs each cache probe (and admission) served.
+    pub job_servings: AtomicU64,
 }
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -73,6 +77,9 @@ pub struct CacheSnapshot {
     pub crc_verifies_skipped: u64,
     /// Bytes of parsed shards pinned by the decode-memo budget.
     pub memo_bytes: u64,
+    /// Per-job attribution of scan sharing: (unit, job) consumptions
+    /// served out of this cache's shard passes (== servings solo).
+    pub job_servings: u64,
 }
 
 impl CacheSnapshot {
@@ -91,9 +98,12 @@ enum Entry {
     /// cache hit is an Arc clone, never a re-parse.
     Parsed(Arc<ShardView>),
     /// Compressed modes store bytes; a hit decodes unless the parsed
-    /// view is pinned in the budget-bounded memo.
+    /// view is pinned in the budget-bounded memo.  `raw_len` is the
+    /// uncompressed size, so a decode can inflate straight into an
+    /// exactly-sized [`AlignedBuf`] (no intermediate `Vec` copy).
     Compressed {
         bytes: Vec<u8>,
+        raw_len: usize,
         memo: RwLock<Option<Arc<ShardView>>>,
     },
 }
@@ -165,6 +175,14 @@ impl EdgeCache {
         self.stats.crc_verified.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record how many (unit, job) consumptions this pass's shard
+    /// servings fanned out to — the execution core calls this once per
+    /// scan-shared pass, so `job_servings / (hits + misses)` reports the
+    /// per-job amortization of every probe and admission.
+    pub fn note_job_servings(&self, servings: u64) {
+        self.stats.job_servings.fetch_add(servings, Ordering::Relaxed);
+    }
+
     /// Probe for a shard; a hit is an Arc clone when the entry is parsed
     /// (mode 1) or memoized; otherwise it decodes (and tries to memoize).
     /// Served bytes were CRC-verified at admission, so no serving re-runs
@@ -184,7 +202,7 @@ impl EdgeCache {
                 self.stats.crc_skipped.fetch_add(1, Ordering::Relaxed);
                 match &*e {
                     Entry::Parsed(view) => Ok(Some(Arc::clone(view))),
-                    Entry::Compressed { bytes, memo } => {
+                    Entry::Compressed { bytes, raw_len, memo } => {
                         // clone out of the slot before touching the LRU:
                         // lock order is always memo_lru → slot
                         let pinned = memo.read().unwrap().clone();
@@ -193,9 +211,12 @@ impl EdgeCache {
                             self.touch_memo(shard_id);
                             return Ok(Some(view));
                         }
-                        let raw = self.mode.decompress(bytes)?;
-                        let view =
-                            Arc::new(ShardView::parse_unverified(AlignedBuf::from_bytes(&raw))?);
+                        // inflate straight into the aligned buffer — the
+                        // stored raw length sizes it exactly, so the old
+                        // Vec<u8> → AlignedBuf copy is gone
+                        let mut buf = AlignedBuf::with_len(*raw_len);
+                        self.mode.decompress_into(bytes, buf.as_bytes_mut())?;
+                        let view = Arc::new(ShardView::parse_unverified(buf)?);
                         self.stats.decodes.fetch_add(1, Ordering::Relaxed);
                         self.memoize(shard_id, memo, &view);
                         Ok(Some(view))
@@ -267,6 +288,7 @@ impl EdgeCache {
         } else {
             Entry::Compressed {
                 bytes: self.mode.compress(raw_bytes),
+                raw_len: raw_bytes.len(),
                 memo: RwLock::new(None),
             }
         };
@@ -381,6 +403,7 @@ impl EdgeCache {
             crc_verifies: self.stats.crc_verified.load(Ordering::Relaxed),
             crc_verifies_skipped: self.stats.crc_skipped.load(Ordering::Relaxed),
             memo_bytes: self.memo_used.load(Ordering::Relaxed),
+            job_servings: self.stats.job_servings.load(Ordering::Relaxed),
         }
     }
 }

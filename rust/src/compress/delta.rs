@@ -53,6 +53,32 @@ pub fn decompress_bytes(data: &[u8]) -> Result<Vec<u8>> {
     Ok(crate::util::u32s_as_bytes(&decode_u32s(data)?))
 }
 
+/// Decode directly into a caller-sized output buffer (the cache knows
+/// every entry's raw length): each u32 is written to its final position
+/// as it is decoded, with no intermediate `Vec` allocation or copy.
+pub fn decompress_bytes_into(data: &[u8], out: &mut [u8]) -> Result<()> {
+    anyhow::ensure!(out.len() % 4 == 0, "delta: output not u32-aligned");
+    let mut pos = 0usize;
+    let n = varint::read_u64(data, &mut pos)
+        .ok_or_else(|| anyhow::anyhow!("delta: bad header"))? as usize;
+    anyhow::ensure!(
+        n == out.len() / 4,
+        "delta: entry holds {n} u32s, expected {}",
+        out.len() / 4
+    );
+    let mut prev = 0i64;
+    for slot in out.chunks_exact_mut(4) {
+        let z = varint::read_u64(data, &mut pos)
+            .ok_or_else(|| anyhow::anyhow!("delta: truncated"))?;
+        let v = prev + varint::unzigzag(z);
+        anyhow::ensure!((0..=u32::MAX as i64).contains(&v), "delta: value {v} out of range");
+        slot.copy_from_slice(&(v as u32).to_le_bytes());
+        prev = v;
+    }
+    anyhow::ensure!(pos == data.len(), "delta: {} trailing bytes", data.len() - pos);
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +127,22 @@ mod tests {
     #[test]
     fn byte_adapter_rejects_ragged() {
         assert!(compress_bytes(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn into_variant_matches_vec_variant() {
+        let vals: Vec<u32> = (0..5_000u32).map(|i| i.wrapping_mul(2654435761)).collect();
+        let bytes = crate::util::u32s_as_bytes(&vals);
+        let enc = compress_bytes(&bytes).unwrap();
+        let mut out = vec![0u8; bytes.len()];
+        decompress_bytes_into(&enc, &mut out).unwrap();
+        assert_eq!(out, bytes);
+        assert_eq!(out, decompress_bytes(&enc).unwrap());
+        // wrong output size is an error, not a partial write
+        let mut short = vec![0u8; bytes.len() - 4];
+        assert!(decompress_bytes_into(&enc, &mut short).is_err());
+        let mut ragged = vec![0u8; 3];
+        assert!(decompress_bytes_into(&enc, &mut ragged).is_err());
     }
 
     #[test]

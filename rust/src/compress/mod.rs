@@ -101,6 +101,63 @@ impl CacheMode {
             CacheMode::M3Zlib1 | CacheMode::M4Zlib3 => zlib_decompress(data),
         }
     }
+
+    /// Inflate `data` directly into `out`, whose exact uncompressed size
+    /// the caller knows (the edge cache stores each entry's raw length).
+    /// This is the decompress path of the decode-once lifecycle: the
+    /// zlib modes stream into the aligned buffer and the delta codec
+    /// writes its u32s in place, so the old inflate-to-`Vec`-then-copy
+    /// double pass is gone.  The byte-LZ fallback of mode 2 still
+    /// routes through a `Vec` — shard payloads are always u32-aligned,
+    /// so that branch never serves shards.
+    pub fn decompress_into(&self, data: &[u8], out: &mut [u8]) -> Result<()> {
+        match self {
+            CacheMode::M0None | CacheMode::M1Raw => {
+                anyhow::ensure!(
+                    data.len() == out.len(),
+                    "raw entry length {} != expected {}",
+                    data.len(),
+                    out.len()
+                );
+                out.copy_from_slice(data);
+                Ok(())
+            }
+            CacheMode::M2Fast => {
+                let (tag, body) = data
+                    .split_last()
+                    .ok_or_else(|| anyhow::anyhow!("fast codec: empty payload"))?;
+                match tag {
+                    1 => delta::decompress_bytes_into(body, out),
+                    0 => {
+                        let raw = lzp::decompress(body)?;
+                        anyhow::ensure!(
+                            raw.len() == out.len(),
+                            "lzp entry length {} != expected {}",
+                            raw.len(),
+                            out.len()
+                        );
+                        out.copy_from_slice(&raw);
+                        Ok(())
+                    }
+                    t => anyhow::bail!("fast codec: unknown tag {t}"),
+                }
+            }
+            CacheMode::M3Zlib1 | CacheMode::M4Zlib3 => {
+                use flate2::read::ZlibDecoder;
+                use std::io::Read;
+                let mut dec = ZlibDecoder::new(data);
+                dec.read_exact(out).map_err(|e| {
+                    anyhow::anyhow!("zlib entry shorter than expected {}: {e}", out.len())
+                })?;
+                anyhow::ensure!(
+                    dec.read(&mut [0u8; 1])? == 0,
+                    "zlib entry longer than expected {}",
+                    out.len()
+                );
+                Ok(())
+            }
+        }
+    }
 }
 
 fn zlib_compress(data: &[u8], level: u32) -> Vec<u8> {
@@ -172,6 +229,22 @@ mod tests {
         let c4 = CacheMode::M4Zlib3.compress(&data);
         assert!(c3.len() < data.len() / 2);
         assert!(c4.len() <= c3.len() + c3.len() / 10);
+    }
+
+    #[test]
+    fn decompress_into_matches_vec_path_in_every_mode() {
+        let data = shard_like_payload();
+        for m in ALL_MODES {
+            let c = m.compress(&data);
+            let mut out = vec![0u8; data.len()];
+            m.decompress_into(&c, &mut out).unwrap();
+            assert_eq!(out, data, "{}", m.name());
+            // a wrong expected size is an error in every mode
+            let mut short = vec![0u8; data.len() - 4];
+            assert!(m.decompress_into(&c, &mut short).is_err(), "{}", m.name());
+            let mut long = vec![0u8; data.len() + 4];
+            assert!(m.decompress_into(&c, &mut long).is_err(), "{}", m.name());
+        }
     }
 
     #[test]

@@ -36,14 +36,14 @@ use crate::bloom::BloomSet;
 use crate::cache::EdgeCache;
 use crate::compress::CacheMode;
 use crate::exec::{
-    schedule, ExecConfig, ExecCore, IterCtx, RangeMarker, Scratch, ShardSource, SharedDst,
-    UnitOutput,
+    schedule, BatchJob, ExecConfig, ExecCore, IterCtx, RangeMarker, Scratch, ShardSource,
+    SharedDst, UnitOutput,
 };
 use crate::graph::{CsrRef, VertexId};
-use crate::metrics::{MemoryAccount, RunMetrics};
+use crate::metrics::{BatchMetrics, MemoryAccount, RunMetrics};
 use crate::runtime::ShardExecutor;
 use crate::storage::disk::Disk;
-use crate::storage::view::ShardView;
+use crate::storage::view::{BufPool, ShardView};
 use crate::storage::{GraphDir, Property, VertexInfo};
 
 /// Shard-update execution backend.
@@ -126,6 +126,9 @@ pub struct VswEngine {
     blooms: BloomSet,
     cache: EdgeCache,
     shard_bytes: u64,
+    /// Recycles shard read buffers across iterations (mode-0 runs
+    /// otherwise allocate one per shard per iteration).
+    buf_pool: Arc<BufPool>,
 }
 
 impl VswEngine {
@@ -152,6 +155,9 @@ impl VswEngine {
             None => EdgeCache::auto(shard_bytes, cfg.cache_capacity),
         };
         cache.set_decode_memo_budget(cfg.decode_memo_budget);
+        // steady state keeps ≤ workers + prefetch_depth shard buffers in
+        // flight; idle capacity beyond that would be dead RAM
+        let buf_pool = BufPool::new(cfg.workers + cfg.prefetch_depth.max(1));
         Ok(VswEngine {
             dir: dir.clone(),
             disk: disk.clone(),
@@ -161,6 +167,7 @@ impl VswEngine {
             blooms,
             cache,
             shard_bytes,
+            buf_pool,
         })
     }
 
@@ -200,8 +207,15 @@ impl VswEngine {
             // queue, sized by the average shard
             inflight_shards: ((self.cfg.workers + self.cfg.prefetch_depth) as u64)
                 * (self.shard_bytes / self.prop.num_shards.max(1) as u64),
-            other: 0,
+            // idle recycled read buffers are resident RAM too
+            other: self.buf_pool.idle_bytes(),
         }
+    }
+
+    /// The shard-buffer recycling pool (observability: `(reused, fresh)`
+    /// take counts via [`BufPool::stats`]).
+    pub fn buf_pool(&self) -> &Arc<BufPool> {
+        &self.buf_pool
     }
 
     /// Run `app` for at most `max_iters` iterations (stops early when no
@@ -219,17 +233,28 @@ impl VswEngine {
         self.run_impl(app, max_iters)
     }
 
-    /// Build the VSW shard source and hand the run to the shared
-    /// execution core ([`ExecCore`]).
-    fn run_impl(
+    /// Run a scan-shared batch of jobs over this graph: every iteration
+    /// loads the union of the member jobs' active shards exactly once
+    /// and hands each decoded `Arc<ShardView>` to every job whose own
+    /// Bloom-filtered worklist selected it.  Per-job results are
+    /// bit-identical to back-to-back solo runs while per-job disk I/O
+    /// falls as ~1/N (`rust/tests/scan_sharing.rs`, Fig 12 bench).
+    pub fn run_jobs(
         &mut self,
-        app: &dyn VertexProgram,
-        max_iters: u32,
-    ) -> Result<(Vec<f32>, RunMetrics)> {
-        if app.needs_weights() {
-            anyhow::ensure!(self.prop.weighted, "{} needs a weighted graph dir", app.name());
+        jobs: &[BatchJob<'_>],
+    ) -> Result<(Vec<crate::exec::JobOutput>, BatchMetrics)> {
+        let mut degrees_needed = false;
+        for job in jobs {
+            if job.app.needs_weights() {
+                anyhow::ensure!(
+                    self.prop.weighted,
+                    "{} needs a weighted graph dir",
+                    job.app.name()
+                );
+            }
+            degrees_needed |= job.app.uses_out_degrees();
         }
-        let inv_out_deg: Vec<f32> = if app.uses_out_degrees() {
+        let inv_out_deg: Vec<f32> = if degrees_needed {
             self.info
                 .out_degree
                 .iter()
@@ -253,7 +278,19 @@ impl VswEngine {
         let this = &*self;
         let source = VswSource { eng: this };
         let mut core = ExecCore::new(exec_cfg, &this.disk, Some(&this.cache));
-        core.run(&source, app, this.prop.num_vertices, &inv_out_deg, max_iters)
+        core.run_batch(&source, jobs, this.prop.num_vertices, &inv_out_deg)
+    }
+
+    /// Build the VSW shard source and hand the run to the shared
+    /// execution core ([`ExecCore`]) — the single-job special case of
+    /// [`run_jobs`](Self::run_jobs).
+    fn run_impl(
+        &mut self,
+        app: &dyn VertexProgram,
+        max_iters: u32,
+    ) -> Result<(Vec<f32>, RunMetrics)> {
+        let (mut outs, _) = self.run_jobs(&[BatchJob { app, max_iters }])?;
+        Ok(outs.pop().expect("one job in, one result out"))
     }
 
     /// Load one shard: cache hit (decode-once, zero-copy), else an
@@ -264,7 +301,9 @@ impl VswEngine {
         if let Some(v) = self.cache.get(shard_id)? {
             return Ok(v);
         }
-        let buf = self.disk.read_file_aligned(&self.dir.shard_path(shard_id))?;
+        let buf = self
+            .disk
+            .read_file_aligned_pooled(&self.dir.shard_path(shard_id), &self.buf_pool)?;
         // the decode-once lifecycle's single CRC verification
         let view = Arc::new(ShardView::parse(buf)?);
         self.cache.note_crc_verified();
@@ -692,6 +731,55 @@ mod tests {
         let run = e.run(&PageRank::new(), 3).unwrap();
         for m in &run.iterations {
             assert!(m.io.bytes_read > 0, "mode0 must hit disk each iteration");
+        }
+    }
+
+    #[test]
+    fn mode0_recycles_pooled_read_buffers() {
+        let g = rmat(8, 3_000, 57, RmatParams::default());
+        let cfg = EngineConfig {
+            cache_mode: Some(CacheMode::M0None),
+            selective: false,
+            ..Default::default()
+        };
+        let (mut e, _) = open_engine(&g, "mode0_pool", cfg, false);
+        e.run(&PageRank::new(), 4).unwrap();
+        let (reused, _fresh) = e.buf_pool().stats();
+        assert!(reused > 0, "steady-state mode-0 reads must reuse buffers");
+        // idle pooled capacity is charged to the memory account
+        assert!(e.memory_account().other > 0, "idle pool bytes must be accounted");
+    }
+
+    #[test]
+    fn scan_shared_batch_matches_solo_runs_and_amortizes_loads() {
+        let g = rmat(9, 5_000, 97, RmatParams::default());
+        let mk = |name: &str| open_engine(&g, name, EngineConfig::default(), false).0;
+        let (v_pr_solo, r_pr_solo) =
+            mk("batch_solo_pr").run_to_values(&PageRank::new(), 5).unwrap();
+        let (v_ppr_solo, _) = mk("batch_solo_ppr").run_to_values(&Ppr::new(3), 5).unwrap();
+        let mut e = mk("batch_both");
+        let (mut outs, batch) = e
+            .run_jobs(&[
+                BatchJob { app: &PageRank::new(), max_iters: 5 },
+                BatchJob { app: &Ppr::new(3), max_iters: 5 },
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        let (v_ppr, r_ppr) = outs.pop().unwrap();
+        let (v_pr, r_pr) = outs.pop().unwrap();
+        assert_eq!(v_pr, v_pr_solo, "batched PageRank diverged from solo");
+        assert_eq!(v_ppr, v_ppr_solo, "batched PPR diverged from solo");
+        assert_eq!(r_pr.iterations.len(), r_pr_solo.iterations.len());
+        assert_eq!(r_ppr.iterations.len(), 5);
+        // both jobs sweep every shard, so each load serves both
+        assert!(
+            (batch.shard_loads_amortized() - 2.0).abs() < 1e-9,
+            "expected 2x amortization, got {}",
+            batch.shard_loads_amortized()
+        );
+        for m in &r_pr.iterations {
+            assert_eq!(m.jobs_in_pass, 2);
+            assert_eq!(m.shard_servings, 2 * m.shards_processed);
         }
     }
 

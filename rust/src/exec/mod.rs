@@ -24,6 +24,18 @@
 //! worklist order regardless of completion order — so results are
 //! bit-identical in worker count, prefetch depth, and engine (see
 //! `rust/tests/cross_engine.rs`).
+//!
+//! Scan sharing (PR 4): [`ExecCore::run_batch`] runs a [`BatchJob`] set
+//! of concurrent jobs over one shard pass per iteration — the per-pass
+//! worklist is the **union** of the member jobs' active-shard worklists
+//! (each job's own Bloom/`ActiveBits` selection still skips units
+//! *within* the pass), every loaded unit is handed to each member job
+//! whose worklist contains it, and per-job vertex lanes / scratch /
+//! convergence stay isolated (a converged job drops out of the union
+//! mid-batch).  Each unit's I/O is charged once per pass, so disk bytes
+//! per job fall as ~1/N while per-job results stay bit-identical to N
+//! back-to-back solo runs (`rust/tests/scan_sharing.rs`).
+//! [`ExecCore::run`] is the single-job special case.
 
 pub mod dst;
 pub mod kernel;
@@ -38,7 +50,7 @@ use anyhow::Result;
 use crate::apps::{Combine, ShardKernel, VertexProgram};
 use crate::cache::EdgeCache;
 use crate::graph::{Edge, VertexId};
-use crate::metrics::{IterationMetrics, RunMetrics};
+use crate::metrics::{BatchMetrics, IterationMetrics, RunMetrics};
 use crate::storage::disk::Disk;
 pub use dst::SharedDst;
 pub use schedule::{ActiveBits, RangeMarker};
@@ -79,6 +91,22 @@ impl Default for ExecConfig {
 
 /// Hard cap on the adaptive queue depth (bounds in-flight unit memory).
 pub const MAX_AUTO_DEPTH: usize = 16;
+
+/// Hard cap on the jobs one scan-shared batch may hold: unit membership
+/// travels as a 64-bit mask.  [`crate::runtime::jobs::JobSet`] chunks
+/// larger queues into successive batches.
+pub const MAX_BATCH_JOBS: usize = 64;
+
+/// One member of a scan-shared batch: the vertex program plus its own
+/// iteration budget.  All members run over the same graph through the
+/// same [`ShardSource`].
+pub struct BatchJob<'a> {
+    pub app: &'a dyn VertexProgram,
+    pub max_iters: u32,
+}
+
+/// One job's outcome: final vertex values plus its run metrics.
+pub type JobOutput = (Vec<f32>, RunMetrics);
 
 /// Per-iteration read-only context handed to [`ShardSource::compute`].
 pub struct IterCtx<'a> {
@@ -189,7 +217,11 @@ impl Drop for Scratch<'_> {
 /// loadable units plus the per-unit compute.
 pub trait ShardSource: Sync {
     /// A loaded unit travelling from the I/O stage to a compute worker.
-    type Item: Send;
+    /// `Clone` is the multi-consumer contract of scan sharing: a unit in
+    /// several member jobs' worklists is loaded once and handed to each
+    /// of them (engines stage cheaply-cloneable items — the VSW engine an
+    /// `Arc<ShardView>`, the modelled baselines unit markers).
+    type Item: Send + Clone;
 
     /// Schedule stage: this iteration's unit worklist plus the number of
     /// units skipped (selective scheduling; engines without it return
@@ -269,7 +301,8 @@ impl<'a> ExecCore<'a> {
 
     /// Run `app` through `source` for at most `max_iters` iterations
     /// (stopping early once no vertex is active, Algorithm 2 line 2) and
-    /// return the final vertex values with the run's metrics.
+    /// return the final vertex values with the run's metrics.  The
+    /// single-job special case of [`run_batch`](Self::run_batch).
     pub fn run<S: ShardSource>(
         &mut self,
         source: &S,
@@ -278,80 +311,148 @@ impl<'a> ExecCore<'a> {
         inv_out_deg: &[f32],
         max_iters: u32,
     ) -> Result<(Vec<f32>, RunMetrics)> {
+        let (mut outs, _) =
+            self.run_batch(source, &[BatchJob { app, max_iters }], num_vertices, inv_out_deg)?;
+        Ok(outs.pop().expect("one job in, one result out"))
+    }
+
+    /// Run a scan-shared batch: every pass loads the **union** of the
+    /// member jobs' active-shard worklists exactly once and hands each
+    /// loaded unit to every job whose own worklist contains it, while
+    /// per-job vertex lanes, activation bitsets and convergence stay
+    /// isolated.  Returns per-job `(values, metrics)` in submission
+    /// order (bit-identical to solo runs) plus the batch aggregate.
+    pub fn run_batch<S: ShardSource>(
+        &mut self,
+        source: &S,
+        jobs: &[BatchJob<'_>],
+        num_vertices: u32,
+        inv_out_deg: &[f32],
+    ) -> Result<(Vec<JobOutput>, BatchMetrics)> {
+        anyhow::ensure!(!jobs.is_empty(), "empty job batch");
+        anyhow::ensure!(
+            jobs.len() <= MAX_BATCH_JOBS,
+            "at most {MAX_BATCH_JOBS} jobs per batch (got {})",
+            jobs.len()
+        );
         let n = num_vertices;
         anyhow::ensure!(
             n < (1 << 24),
             "f32 vertex values require ids < 2^24 (got {n})"
         );
-        let kernel = app.kernel();
-        if kernel.uses_contrib() {
-            anyhow::ensure!(
-                inv_out_deg.len() == n as usize,
-                "{} needs the out-degree array",
-                app.name()
-            );
+        let mut lanes = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let kernel = job.app.kernel();
+            if kernel.uses_contrib() {
+                anyhow::ensure!(
+                    inv_out_deg.len() == n as usize,
+                    "{} needs the out-degree array",
+                    job.app.name()
+                );
+            }
+            let (src, active) = job.app.init(n);
+            anyhow::ensure!(src.len() == n as usize, "init length mismatch");
+            lanes.push(JobLane {
+                kernel,
+                src,
+                active,
+                contrib: Vec::new(),
+                run: RunMetrics::default(),
+                max_iters: job.max_iters,
+                done: false,
+            });
         }
-        let (mut src, mut active) = app.init(n);
-        anyhow::ensure!(src.len() == n as usize, "init length mismatch");
 
-        let mut run = RunMetrics::default();
         let run_start = Instant::now();
         let sim_start = self.disk.snapshot().sim_nanos;
-
-        for iter in 0..max_iters {
-            if active.is_empty() {
-                run.converged = true;
+        let mut batch = BatchMetrics { jobs: jobs.len() as u32, ..Default::default() };
+        let mut pass = 0u32;
+        loop {
+            // lane lifecycle at the pass boundary: converged jobs (empty
+            // active set) and exhausted budgets drop out of the union
+            let mut running = Vec::new();
+            for (l, lane) in lanes.iter_mut().enumerate() {
+                if lane.done {
+                    continue;
+                }
+                if lane.active.is_empty() {
+                    lane.run.converged = true;
+                    lane.done = true;
+                } else if pass >= lane.max_iters {
+                    lane.done = true;
+                } else {
+                    running.push(l);
+                }
+            }
+            if running.is_empty() {
                 break;
             }
-            let m = self.run_iteration(source, kernel, iter, &mut src, &mut active, inv_out_deg)?;
-            run.iterations.push(m);
+            let stats = self.run_pass(source, &mut lanes, &running, pass, inv_out_deg)?;
+            batch.shard_loads += stats.loads;
+            batch.shard_servings += stats.servings;
+            batch.bytes_read += stats.bytes_read;
+            pass += 1;
         }
-        if active.is_empty() {
-            run.converged = true;
-        }
-        run.total_wall = run_start.elapsed();
-        run.total_sim_disk_seconds =
+        batch.passes = pass;
+        batch.total_wall = run_start.elapsed();
+        batch.total_sim_disk_seconds =
             (self.disk.snapshot().sim_nanos - sim_start) as f64 / 1e9;
-        run.total_overlapped_sim_seconds =
-            run.iterations.iter().map(|m| m.overlapped_sim_seconds).sum();
-        run.memory_bytes = source.residency_bytes();
-        Ok((src, run))
+
+        let outs = lanes
+            .into_iter()
+            .map(|mut lane| {
+                lane.run.total_wall = batch.total_wall;
+                lane.run.total_sim_disk_seconds = batch.total_sim_disk_seconds;
+                lane.run.total_overlapped_sim_seconds =
+                    lane.run.iterations.iter().map(|m| m.overlapped_sim_seconds).sum();
+                lane.run.memory_bytes = source.residency_bytes();
+                (lane.src, lane.run)
+            })
+            .collect();
+        Ok((outs, batch))
     }
 
-    /// One iteration of Algorithm 2 as a schedule → prefetch → compute
-    /// pipeline with a barrier swap at the end.
-    fn run_iteration<S: ShardSource>(
+    /// One shard pass of Algorithm 2 over the `running` lanes: per-job
+    /// schedules merged into the union worklist, one schedule → prefetch
+    /// → compute pipeline over it (each loaded unit fanned out to its
+    /// member jobs), then a per-job barrier swap.
+    fn run_pass<S: ShardSource>(
         &mut self,
         source: &S,
-        kernel: ShardKernel,
-        iter: u32,
-        src: &mut Vec<f32>,
-        active: &mut Vec<VertexId>,
+        lanes: &mut [JobLane],
+        running: &[usize],
+        pass: u32,
         inv_out_deg: &[f32],
-    ) -> Result<IterationMetrics> {
-        let n = src.len();
+    ) -> Result<PassStats> {
+        let n = lanes[running[0]].src.len();
+        let nr = running.len();
         let io_before = self.disk.snapshot();
         let cache_before = self.cache.map(|c| c.snapshot()).unwrap_or_default();
         let t0 = Instant::now();
 
-        // stage 1: the scheduler decides the whole unit worklist up front
-        let (worklist, skipped) = source.schedule(iter, active);
+        // stage 1: each job's scheduler decides its own worklist (per-job
+        // Bloom/active selection), then the scan-sharing union merges them
+        let mut wls: Vec<Vec<u32>> = Vec::with_capacity(nr);
+        let mut skips: Vec<u32> = Vec::with_capacity(nr);
+        for &l in running {
+            let (wl, sk) = source.schedule(pass, &lanes[l].active);
+            wls.push(wl);
+            skips.push(sk);
+        }
+        let (union_wl, members) = schedule::union_worklists(&wls);
+        let servings: u64 = members.iter().map(|m| u64::from(m.count_ones())).sum();
 
         // §Perf: for sum kernels, fold src·inv_out_deg once per iteration
         // (|V| multiplies) instead of once per edge (|E| ≫ |V| gathers).
-        let contrib: Vec<f32> = if kernel.uses_contrib() {
-            src.iter().zip(inv_out_deg).map(|(&v, &d)| v * d).collect()
-        } else {
-            Vec::new()
-        };
-        let ctx = IterCtx {
-            kernel,
-            num_vertices: n as u32,
-            src: src.as_slice(),
-            inv_out_deg,
-            contrib: &contrib,
-            iteration: iter,
-        };
+        // The per-lane buffer keeps its capacity across passes.
+        for &l in running {
+            let lane = &mut lanes[l];
+            if lane.kernel.uses_contrib() {
+                lane.contrib.clear();
+                lane.contrib
+                    .extend(lane.src.iter().zip(inv_out_deg).map(|(&v, &d)| v * d));
+            }
+        }
 
         let depth = if self.cfg.prefetch_depth == 0 {
             0 // pipeline off: the sequential reference path wins outright
@@ -361,38 +462,72 @@ impl<'a> ExecCore<'a> {
             self.cfg.prefetch_depth
         };
 
-        let dst = SharedDst::new(src.clone());
-        let bits = ActiveBits::new(n);
-        // scatter-unit outputs, slot-indexed by worklist position so the
-        // barrier fold is deterministic in completion order
+        let lanes_ro: &[JobLane] = lanes;
+        let ctxs: Vec<IterCtx<'_>> = running
+            .iter()
+            .map(|&l| {
+                let lane = &lanes_ro[l];
+                IterCtx {
+                    kernel: lane.kernel,
+                    num_vertices: n as u32,
+                    src: &lane.src,
+                    inv_out_deg,
+                    contrib: &lane.contrib,
+                    iteration: pass,
+                }
+            })
+            .collect();
+        let dsts: Vec<SharedDst> = running
+            .iter()
+            .map(|&l| SharedDst::new(lanes_ro[l].src.clone()))
+            .collect();
+        let bits: Vec<ActiveBits> = (0..nr).map(|_| ActiveBits::new(n)).collect();
+        // scatter-unit outputs, slot-indexed by (union position × job) so
+        // each job's barrier fold is deterministic in completion order
         let slots: Mutex<Vec<Option<Vec<Update>>>> =
-            Mutex::new((0..worklist.len()).map(|_| None).collect());
+            Mutex::new((0..union_wl.len() * nr).map(|_| None).collect());
 
-        // stages 2+3: I/O threads stage units into the bounded ready
-        // queue; compute workers drain it.  Each worker leases a scratch
-        // arena alongside its activation marker.
+        // stages 2+3: I/O threads stage each union unit into the bounded
+        // ready queue exactly once; a compute worker fans it out to every
+        // member job (the last member takes the item, earlier ones clone).
         let pool = &self.scratch;
         let outcome = pipeline::run_worklist(
-            &worklist,
+            &union_wl,
             self.cfg.workers,
             depth,
             self.cfg.prefetch_threads,
             |id| source.load(id),
-            || (bits.marker(), pool.scratch()),
-            |state, index, id, item| {
-                let (marker, scratch) = state;
-                match source.compute(id, item, &ctx, &dst, marker, scratch)? {
-                    UnitOutput::InPlace => {}
-                    UnitOutput::Updates(u) => {
-                        slots.lock().unwrap()[index] = Some(u);
+            || pool.scratch(),
+            |scratch, index, id, item| {
+                let mut item = Some(item);
+                let mut mask = members[index];
+                while mask != 0 {
+                    let r = mask.trailing_zeros() as usize;
+                    mask &= mask - 1;
+                    let it = if mask == 0 {
+                        item.take().expect("item taken once")
+                    } else {
+                        item.as_ref().expect("item present").clone()
+                    };
+                    let mut marker = bits[r].marker();
+                    match source.compute(id, it, &ctxs[r], &dsts[r], &mut marker, scratch)? {
+                        UnitOutput::InPlace => {}
+                        UnitOutput::Updates(u) => {
+                            slots.lock().unwrap()[index * nr + r] = Some(u);
+                        }
                     }
                 }
                 Ok(())
             },
         )?;
 
-        dst.release_all();
-        let mut next = dst.into_inner();
+        let mut nexts: Vec<Vec<f32>> = dsts
+            .into_iter()
+            .map(|d| {
+                d.release_all();
+                d.into_inner()
+            })
+            .collect();
         // Snapshot at the end of the pipeline phase: only simulated disk
         // time charged while the load/compute stages were running can
         // overlap compute.  Barrier-stage charges (a scatter engine's
@@ -400,18 +535,25 @@ impl<'a> ExecCore<'a> {
         // compute finished and stay on the critical path.
         let io_pipeline = self.disk.snapshot();
         let wall_pipeline = t0.elapsed();
-        // barrier: fold scatter streams (worklist order) and charge the
-        // engine's residual iteration I/O
-        let slots = slots.into_inner().unwrap();
-        let updates_folded = if slots.iter().any(Option::is_some) {
-            fold_updates(&ctx, slots, &mut next, &bits, pool)
-        } else {
-            0
-        };
-        source.end_iteration(&ctx, updates_folded);
-
-        *src = next;
-        *active = bits.to_sorted_vec();
+        // barrier: per job, fold its scatter streams (union-worklist
+        // order) and charge the engine's residual iteration I/O
+        let mut slots = slots.into_inner().unwrap();
+        for r in 0..nr {
+            let mine: Vec<Option<Vec<Update>>> =
+                (0..union_wl.len()).map(|i| slots[i * nr + r].take()).collect();
+            let updates_folded = if mine.iter().any(Option::is_some) {
+                fold_updates(&ctxs[r], mine, &mut nexts[r], &bits[r], pool)
+            } else {
+                0
+            };
+            source.end_iteration(&ctxs[r], updates_folded);
+        }
+        // per-job cache attribution: one admission/probe served `servings`
+        // job-consumptions this pass
+        if let Some(c) = self.cache {
+            c.note_job_servings(servings);
+        }
+        drop(ctxs);
 
         let wall = t0.elapsed();
         let io_after = self.disk.snapshot();
@@ -435,41 +577,76 @@ impl<'a> ExecCore<'a> {
             self.auto_depth = adaptive_depth(&outcome, self.cfg.workers, self.auto_depth);
         }
 
-        Ok(IterationMetrics {
-            iteration: iter,
-            wall,
-            sim_disk_seconds,
-            overlapped_sim_seconds,
-            active_vertices: active.len() as u64,
-            active_ratio: active.len() as f64 / n.max(1) as f64,
-            shards_processed: outcome.processed,
-            shards_skipped: skipped,
-            shards_prefetched: outcome.prefetched,
-            ready_hits: outcome.ready_hits,
-            ready_misses: outcome.ready_misses,
-            prefetch_depth_used: depth as u32,
-            io: io_after.since(&io_before),
-            cache: match self.cache {
-                Some(c) => {
-                    let after = c.snapshot();
-                    crate::cache::CacheSnapshot {
-                        hits: after.hits - cache_before.hits,
-                        misses: after.misses - cache_before.misses,
-                        admitted: after.admitted - cache_before.admitted,
-                        rejected: after.rejected - cache_before.rejected,
-                        used_bytes: after.used_bytes,
-                        decodes: after.decodes - cache_before.decodes,
-                        decode_skips: after.decode_skips - cache_before.decode_skips,
-                        crc_verifies: after.crc_verifies - cache_before.crc_verifies,
-                        crc_verifies_skipped: after.crc_verifies_skipped
-                            - cache_before.crc_verifies_skipped,
-                        memo_bytes: after.memo_bytes,
-                    }
+        let io_delta = io_after.since(&io_before);
+        let cache_delta = match self.cache {
+            Some(c) => {
+                let after = c.snapshot();
+                crate::cache::CacheSnapshot {
+                    hits: after.hits - cache_before.hits,
+                    misses: after.misses - cache_before.misses,
+                    admitted: after.admitted - cache_before.admitted,
+                    rejected: after.rejected - cache_before.rejected,
+                    used_bytes: after.used_bytes,
+                    decodes: after.decodes - cache_before.decodes,
+                    decode_skips: after.decode_skips - cache_before.decode_skips,
+                    crc_verifies: after.crc_verifies - cache_before.crc_verifies,
+                    crc_verifies_skipped: after.crc_verifies_skipped
+                        - cache_before.crc_verifies_skipped,
+                    memo_bytes: after.memo_bytes,
+                    job_servings: after.job_servings - cache_before.job_servings,
                 }
-                None => Default::default(),
-            },
+            }
+            None => Default::default(),
+        };
+
+        for (r, &l) in running.iter().enumerate() {
+            let lane = &mut lanes[l];
+            lane.src = std::mem::take(&mut nexts[r]);
+            lane.active = bits[r].to_sorted_vec();
+            lane.run.iterations.push(IterationMetrics {
+                iteration: pass,
+                wall,
+                sim_disk_seconds,
+                overlapped_sim_seconds,
+                active_vertices: lane.active.len() as u64,
+                active_ratio: lane.active.len() as f64 / n.max(1) as f64,
+                shards_processed: wls[r].len() as u32,
+                shards_skipped: skips[r],
+                shards_prefetched: outcome.prefetched,
+                ready_hits: outcome.ready_hits,
+                ready_misses: outcome.ready_misses,
+                prefetch_depth_used: depth as u32,
+                jobs_in_pass: nr as u32,
+                shard_servings: servings as u32,
+                io: io_delta,
+                cache: cache_delta,
+            });
+        }
+        Ok(PassStats {
+            loads: u64::from(outcome.processed),
+            servings,
+            bytes_read: io_delta.bytes_read,
         })
     }
+}
+
+/// Per-job state of a scan-shared batch: its own vertex lane, active
+/// set, pre-folded contribution buffer and metrics.
+struct JobLane {
+    kernel: ShardKernel,
+    src: Vec<f32>,
+    active: Vec<VertexId>,
+    contrib: Vec<f32>,
+    run: RunMetrics,
+    max_iters: u32,
+    done: bool,
+}
+
+/// What one pass contributed to the batch aggregate.
+struct PassStats {
+    loads: u64,
+    servings: u64,
+    bytes_read: u64,
 }
 
 /// Fold scatter-unit update streams into `out` in worklist order,
@@ -701,6 +878,102 @@ mod tests {
             .run(&src, &Sssp::new(0), n, &[], 10)
             .unwrap();
         assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn batched_jobs_match_solo_runs_bitwise() {
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let inv = vec![0.5f32, 0.5, 1.0, 1.0, 0.0, 0.0];
+        let src = interval_source(n, &edges);
+        let (v_sssp, r_sssp) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run(&src, &Sssp::new(0), n, &inv, 10)
+            .unwrap();
+        let (v_pr, r_pr) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run(&src, &PageRank::new(), n, &inv, 5)
+            .unwrap();
+        let (outs, batch) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run_batch(
+                &src,
+                &[
+                    BatchJob { app: &Sssp::new(0), max_iters: 10 },
+                    BatchJob { app: &PageRank::new(), max_iters: 5 },
+                ],
+                n,
+                &inv,
+            )
+            .unwrap();
+        assert_eq!(outs[0].0, v_sssp, "batched SSSP diverged");
+        assert_eq!(outs[1].0, v_pr, "batched PageRank diverged");
+        assert_eq!(outs[0].1.iterations.len(), r_sssp.iterations.len());
+        assert_eq!(outs[1].1.iterations.len(), r_pr.iterations.len());
+        assert!(outs[0].1.converged, "SSSP must converge in-batch");
+        assert_eq!(outs[1].1.converged, r_pr.converged);
+        assert_eq!(batch.jobs, 2);
+        assert_eq!(
+            batch.passes as usize,
+            r_sssp.iterations.len().max(r_pr.iterations.len())
+        );
+        // while both jobs run, every unit serves both; the amortization
+        // sits strictly between 1x (solo) and 2x (full overlap) because
+        // one job outlives the other
+        let am = batch.shard_loads_amortized();
+        assert!(am > 1.0 && am <= 2.0, "amortization {am}");
+        // both jobs are members of the first pass
+        assert_eq!(outs[1].1.iterations[0].jobs_in_pass, 2);
+        assert_eq!(outs[1].1.iterations[0].shard_servings, 4, "2 units x 2 jobs");
+    }
+
+    #[test]
+    fn batched_scatter_jobs_fold_independently() {
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let inv = vec![0.5f32, 0.5, 1.0, 1.0, 0.0, 0.0];
+        let mut parts = vec![Vec::new(), Vec::new()];
+        for e in &edges {
+            parts[if e.src < 3 { 0 } else { 1 }].push(*e);
+        }
+        for p in &mut parts {
+            p.sort_unstable_by_key(|e| e.src);
+        }
+        let scatter = ToyScatter { parts };
+        let (v_solo, _) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run(&scatter, &PageRank::new(), n, &inv, 4)
+            .unwrap();
+        let (outs, _) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run_batch(
+                &scatter,
+                &[
+                    BatchJob { app: &PageRank::new(), max_iters: 4 },
+                    BatchJob { app: &PageRank::new(), max_iters: 4 },
+                ],
+                n,
+                &inv,
+            )
+            .unwrap();
+        for (v, _) in &outs {
+            assert_eq!(v, &v_solo, "batched scatter job diverged from solo");
+        }
+    }
+
+    #[test]
+    fn run_batch_rejects_bad_batches() {
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let src = interval_source(n, &edges);
+        let err = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run_batch(&src, &[], n, &[])
+            .unwrap_err();
+        assert!(err.to_string().contains("empty job batch"), "{err}");
+        let apps: Vec<Sssp> = (0..MAX_BATCH_JOBS + 1).map(|_| Sssp::new(0)).collect();
+        let jobs: Vec<BatchJob<'_>> = apps
+            .iter()
+            .map(|a| BatchJob { app: a, max_iters: 1 })
+            .collect();
+        let err = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run_batch(&src, &jobs, n, &[])
+            .unwrap_err();
+        assert!(err.to_string().contains("per batch"), "{err}");
     }
 
     #[test]

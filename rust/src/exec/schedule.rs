@@ -39,6 +39,25 @@ pub fn shard_worklist(
     (worklist, skipped)
 }
 
+/// Merge per-job ascending unit worklists into one deduplicated union
+/// worklist (ascending) plus a per-unit membership bitmask: bit `j` of
+/// `members[i]` is set iff job `j`'s worklist contains `union[i]`.
+///
+/// This is the scan-sharing merge (PR 4): the pipeline loads each unit
+/// of the union exactly once and hands it to every member job, while a
+/// job still computes *only* the units its own (Bloom-filtered) worklist
+/// selected — so per-job results stay bit-identical to a solo run.
+pub fn union_worklists(lists: &[Vec<u32>]) -> (Vec<u32>, Vec<u64>) {
+    assert!(lists.len() <= 64, "membership masks hold at most 64 jobs");
+    let mut map: std::collections::BTreeMap<u32, u64> = std::collections::BTreeMap::new();
+    for (j, wl) in lists.iter().enumerate() {
+        for &u in wl {
+            *map.entry(u).or_insert(0) |= 1u64 << j;
+        }
+    }
+    map.into_iter().unzip()
+}
+
 /// A fixed-size atomic bitset over the vertex space.  Workers mark
 /// activated vertices concurrently (shard intervals are disjoint, so
 /// contention is limited to boundary words); the iteration barrier scans
@@ -150,6 +169,19 @@ mod tests {
             assert_eq!(wl, expect, "active {active:?}");
             assert_eq!(skipped as usize, 3 - expect.len());
         }
+    }
+
+    #[test]
+    fn union_worklists_merges_and_tracks_membership() {
+        let (u, m) = union_worklists(&[vec![0, 2, 5], vec![2, 3], vec![]]);
+        assert_eq!(u, vec![0, 2, 3, 5]);
+        assert_eq!(m, vec![0b001, 0b011, 0b010, 0b001]);
+        // single-job union is the worklist itself, all bits = job 0
+        let (u, m) = union_worklists(&[vec![4, 7]]);
+        assert_eq!(u, vec![4, 7]);
+        assert_eq!(m, vec![1, 1]);
+        let (u, m) = union_worklists(&[]);
+        assert!(u.is_empty() && m.is_empty());
     }
 
     #[test]

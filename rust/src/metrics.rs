@@ -34,6 +34,14 @@ pub struct IterationMetrics {
     /// Ready-queue depth the pipeline ran with this iteration (varies
     /// under adaptive prefetch; 0 = sequential reference path).
     pub prefetch_depth_used: u32,
+    /// Jobs that participated in this shard pass (1 outside scan-shared
+    /// batches).  In a batch, `wall`/`io`/`cache` below are the *shared*
+    /// pass costs — every member job's record carries the same values,
+    /// while `shards_processed`/`active_*` stay job-specific.
+    pub jobs_in_pass: u32,
+    /// (unit, job) computes this pass: each loaded unit counts once per
+    /// member job it was handed to (== `shards_processed` solo).
+    pub shard_servings: u32,
     pub io: IoSnapshot,
     pub cache: CacheSnapshot,
 }
@@ -94,6 +102,49 @@ impl RunMetrics {
             return 0.0;
         }
         edges_per_iter as f64 * self.iterations.len() as f64 / s
+    }
+}
+
+/// Aggregate record of one scan-shared batch (PR 4): N jobs sharing
+/// every shard pass.  The headline quantity is the amortization — how
+/// many job-servings each loaded unit (and its disk bytes) paid for.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchMetrics {
+    /// Jobs in the batch.
+    pub jobs: u32,
+    /// Shard passes run (the max over member jobs' iteration counts).
+    pub passes: u32,
+    /// Union-worklist units loaded across all passes (each unit's I/O —
+    /// real or modelled — was charged exactly once per pass).
+    pub shard_loads: u64,
+    /// (unit, job) computes across all passes: what N back-to-back solo
+    /// runs would have loaded.
+    pub shard_servings: u64,
+    /// Disk bytes read by the whole batch.
+    pub bytes_read: u64,
+    pub total_wall: Duration,
+    pub total_sim_disk_seconds: f64,
+}
+
+impl BatchMetrics {
+    /// Servings per load: ~N when the member worklists overlap fully,
+    /// 1.0 for a solo run (no sharing to be had).
+    pub fn shard_loads_amortized(&self) -> f64 {
+        if self.shard_loads == 0 {
+            0.0
+        } else {
+            self.shard_servings as f64 / self.shard_loads as f64
+        }
+    }
+
+    /// Effective disk bytes each job paid — the per-job I/O that falls
+    /// as ~1/N with batch size (Fig 12).
+    pub fn effective_bytes_read_per_job(&self) -> f64 {
+        if self.jobs == 0 {
+            0.0
+        } else {
+            self.bytes_read as f64 / self.jobs as f64
+        }
     }
 }
 
@@ -175,6 +226,22 @@ mod tests {
         }
         assert!((r.first_n_seconds(3) - 3.0).abs() < 1e-9);
         assert!((r.first_n_seconds(10) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_amortization_math() {
+        let b = BatchMetrics {
+            jobs: 4,
+            shard_loads: 10,
+            shard_servings: 40,
+            bytes_read: 1000,
+            ..Default::default()
+        };
+        assert!((b.shard_loads_amortized() - 4.0).abs() < 1e-12);
+        assert!((b.effective_bytes_read_per_job() - 250.0).abs() < 1e-12);
+        let z = BatchMetrics::default();
+        assert_eq!(z.shard_loads_amortized(), 0.0);
+        assert_eq!(z.effective_bytes_read_per_job(), 0.0);
     }
 
     #[test]

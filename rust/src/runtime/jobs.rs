@@ -1,0 +1,254 @@
+//! Job submission and lifecycle for the scan-shared multi-job runtime.
+//!
+//! A production deployment of GraphMP serves many queries over one
+//! preprocessed graph: without sharing, every query re-scans the same
+//! shards and the engine's whole I/O discipline (VSW + selective
+//! scheduling + compressed cache, §2.4) is paid once *per query*.
+//! [`JobSet`] is the front door to scan sharing: callers submit jobs
+//! (app + iteration budget), and [`run_all`](JobSet::run_all) drains the
+//! queue in batches through [`crate::engine::VswEngine::run_jobs`], so
+//! one shard pass per iteration serves every member job.  A job's
+//! lifecycle is `Queued → Running → Converged | IterLimit`; per-job
+//! results are bit-identical to solo runs (`rust/tests/scan_sharing.rs`).
+
+use anyhow::Result;
+
+use crate::apps::VertexProgram;
+use crate::engine::VswEngine;
+use crate::exec::{BatchJob, MAX_BATCH_JOBS};
+use crate::metrics::{BatchMetrics, RunMetrics};
+
+pub type JobId = u32;
+
+/// Lifecycle of a submitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Submitted, not yet part of a batch.
+    Queued,
+    /// Member of the batch currently executing (or of one that failed).
+    Running,
+    /// Finished with an empty active set within its iteration budget.
+    Converged,
+    /// Finished by exhausting `max_iters` with vertices still active
+    /// (normal for PageRank-family fixed-iteration queries).
+    IterLimit,
+}
+
+/// What to run: the vertex program plus its per-job iteration budget.
+pub struct JobSpec {
+    /// Display label (CLI/bench output); not interpreted.
+    pub label: String,
+    pub app: Box<dyn VertexProgram>,
+    pub max_iters: u32,
+}
+
+/// A submitted job with its lifecycle state and (once finished) results.
+pub struct Job {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub status: JobStatus,
+    pub values: Option<Vec<f32>>,
+    pub run: Option<RunMetrics>,
+}
+
+/// Aggregate of one [`JobSet::run_all`] drain: one [`BatchMetrics`] per
+/// executed batch.
+#[derive(Clone, Debug, Default)]
+pub struct BatchReport {
+    pub batches: Vec<BatchMetrics>,
+}
+
+impl BatchReport {
+    /// Fold the per-batch records into one aggregate [`BatchMetrics`]
+    /// (batches run back-to-back, so counters and times add) — the one
+    /// definition of the drain-wide amortization numbers.
+    pub fn aggregate(&self) -> BatchMetrics {
+        let mut agg = BatchMetrics::default();
+        for b in &self.batches {
+            agg.jobs += b.jobs;
+            agg.passes += b.passes;
+            agg.shard_loads += b.shard_loads;
+            agg.shard_servings += b.shard_servings;
+            agg.bytes_read += b.bytes_read;
+            agg.total_wall += b.total_wall;
+            agg.total_sim_disk_seconds += b.total_sim_disk_seconds;
+        }
+        agg
+    }
+
+    pub fn shard_loads(&self) -> u64 {
+        self.aggregate().shard_loads
+    }
+
+    pub fn shard_servings(&self) -> u64 {
+        self.aggregate().shard_servings
+    }
+
+    pub fn bytes_read(&self) -> u64 {
+        self.aggregate().bytes_read
+    }
+
+    /// Servings per load across all batches (~N for N overlapping jobs).
+    pub fn shard_loads_amortized(&self) -> f64 {
+        self.aggregate().shard_loads_amortized()
+    }
+}
+
+/// The job queue: submit many, run them batched.
+pub struct JobSet {
+    jobs: Vec<Job>,
+    batch_cap: usize,
+}
+
+impl Default for JobSet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JobSet {
+    pub fn new() -> JobSet {
+        JobSet { jobs: Vec::new(), batch_cap: MAX_BATCH_JOBS }
+    }
+
+    /// Cap the number of jobs per batch (clamped to `1..=MAX_BATCH_JOBS`);
+    /// larger queues drain as successive batches.
+    pub fn with_batch_cap(batch_cap: usize) -> JobSet {
+        JobSet { jobs: Vec::new(), batch_cap: batch_cap.clamp(1, MAX_BATCH_JOBS) }
+    }
+
+    /// Enqueue a job; it runs on the next [`run_all`](Self::run_all).
+    pub fn submit(&mut self, spec: JobSpec) -> JobId {
+        let id = self.jobs.len() as JobId;
+        self.jobs.push(Job { id, spec, status: JobStatus::Queued, values: None, run: None });
+        id
+    }
+
+    pub fn jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(id as usize)
+    }
+
+    pub fn status(&self, id: JobId) -> Option<JobStatus> {
+        self.job(id).map(|j| j.status)
+    }
+
+    /// Jobs still waiting for a batch.
+    pub fn queued(&self) -> usize {
+        self.jobs.iter().filter(|j| j.status == JobStatus::Queued).count()
+    }
+
+    /// Take a finished job's vertex values (leaves metrics in place).
+    pub fn take_values(&mut self, id: JobId) -> Option<Vec<f32>> {
+        self.jobs.get_mut(id as usize).and_then(|j| j.values.take())
+    }
+
+    /// Drain the queue: batches of at most `batch_cap` queued jobs run
+    /// scan-shared through `engine` until none remain.  On error the
+    /// current batch's jobs are left `Running` (their results unset) and
+    /// the error is returned.
+    pub fn run_all(&mut self, engine: &mut VswEngine) -> Result<BatchReport> {
+        let mut report = BatchReport::default();
+        loop {
+            let batch: Vec<usize> = self
+                .jobs
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| j.status == JobStatus::Queued)
+                .map(|(i, _)| i)
+                .take(self.batch_cap)
+                .collect();
+            if batch.is_empty() {
+                break;
+            }
+            for &i in &batch {
+                self.jobs[i].status = JobStatus::Running;
+            }
+            let specs: Vec<BatchJob<'_>> = batch
+                .iter()
+                .map(|&i| BatchJob {
+                    app: self.jobs[i].spec.app.as_ref(),
+                    max_iters: self.jobs[i].spec.max_iters,
+                })
+                .collect();
+            let (outs, metrics) = engine.run_jobs(&specs)?;
+            drop(specs);
+            for (&i, (values, run)) in batch.iter().zip(outs) {
+                let job = &mut self.jobs[i];
+                job.status = if run.converged {
+                    JobStatus::Converged
+                } else {
+                    JobStatus::IterLimit
+                };
+                job.values = Some(values);
+                job.run = Some(run);
+            }
+            report.batches.push(metrics);
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{PageRank, Ppr, Sssp};
+
+    fn spec(label: &str, app: Box<dyn VertexProgram>, iters: u32) -> JobSpec {
+        JobSpec { label: label.to_string(), app, max_iters: iters }
+    }
+
+    #[test]
+    fn submit_tracks_lifecycle_metadata() {
+        let mut set = JobSet::new();
+        let a = set.submit(spec("pr", Box::new(PageRank::new()), 5));
+        let b = set.submit(spec("ppr", Box::new(Ppr::new(3)), 5));
+        assert_eq!((a, b), (0, 1));
+        assert_eq!(set.status(a), Some(JobStatus::Queued));
+        assert_eq!(set.queued(), 2);
+        assert_eq!(set.job(b).unwrap().spec.label, "ppr");
+        assert_eq!(set.status(99), None);
+        assert!(set.take_values(a).is_none(), "no values before running");
+    }
+
+    #[test]
+    fn batch_cap_is_clamped() {
+        assert_eq!(JobSet::with_batch_cap(0).batch_cap, 1);
+        assert_eq!(JobSet::with_batch_cap(7).batch_cap, 7);
+        assert_eq!(JobSet::with_batch_cap(1000).batch_cap, MAX_BATCH_JOBS);
+    }
+
+    #[test]
+    fn report_amortization_math() {
+        let mut r = BatchReport::default();
+        r.batches.push(BatchMetrics {
+            jobs: 2,
+            shard_loads: 10,
+            shard_servings: 20,
+            bytes_read: 100,
+            ..Default::default()
+        });
+        r.batches.push(BatchMetrics {
+            jobs: 1,
+            shard_loads: 10,
+            shard_servings: 10,
+            bytes_read: 50,
+            ..Default::default()
+        });
+        assert_eq!(r.shard_loads(), 20);
+        assert_eq!(r.shard_servings(), 30);
+        assert_eq!(r.bytes_read(), 150);
+        assert!((r.shard_loads_amortized() - 1.5).abs() < 1e-12);
+        assert_eq!(BatchReport::default().shard_loads_amortized(), 0.0);
+    }
+
+    // end-to-end JobSet × engine runs live in rust/tests/scan_sharing.rs
+    #[test]
+    fn sssp_spec_type_erases() {
+        let s = spec("sssp", Box::new(Sssp::new(0)), 10);
+        assert_eq!(s.app.name(), "sssp");
+    }
+}

@@ -1,4 +1,7 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute shard updates.
+//! Runtime services: the multi-job scheduler ([`jobs`]) and the PJRT
+//! backend (below).
+//!
+//! # PJRT backend
 //!
 //! `make artifacts` runs `python/compile/aot.py` once; after that the rust
 //! binary is self-contained — this module compiles the HLO text with the
@@ -14,6 +17,7 @@
 //! [`ShardExecutor::load`] returns an error and the engine's native
 //! backend (the default) is unaffected.
 
+pub mod jobs;
 pub mod manifest;
 
 use std::path::Path;
@@ -23,6 +27,7 @@ use anyhow::Result;
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 
+pub use jobs::{BatchReport, Job, JobId, JobSet, JobSpec, JobStatus};
 pub use manifest::{Artifact, Manifest};
 
 /// A compiled pair of shard-update executables for one size variant.

@@ -160,11 +160,33 @@ impl Disk {
     /// views borrow typed sections straight out of it).  Metered exactly
     /// like [`read_file`](Self::read_file).
     pub fn read_file_aligned(&self, path: &Path) -> Result<super::view::AlignedBuf> {
+        self.read_file_aligned_with(path, super::view::AlignedBuf::with_len)
+    }
+
+    /// [`read_file_aligned`](Self::read_file_aligned) into a buffer
+    /// leased from `pool`: mode-0 runs re-read every shard per iteration,
+    /// and the pool recycles the buffers across iterations instead of
+    /// allocating one per shard (PR-3 follow-up).
+    pub fn read_file_aligned_pooled(
+        &self,
+        path: &Path,
+        pool: &Arc<super::view::BufPool>,
+    ) -> Result<super::view::AlignedBuf> {
+        self.read_file_aligned_with(path, |len| super::view::BufPool::take(pool, len))
+    }
+
+    /// The one metered aligned-read path: `alloc` supplies the
+    /// destination buffer (fresh or pooled) for the file's length.
+    fn read_file_aligned_with(
+        &self,
+        path: &Path,
+        alloc: impl FnOnce(usize) -> super::view::AlignedBuf,
+    ) -> Result<super::view::AlignedBuf> {
         use std::io::Read;
         let mut f =
             fs::File::open(path).with_context(|| format!("read {}", path.display()))?;
         let len = f.metadata()?.len() as usize;
-        let mut buf = super::view::AlignedBuf::with_len(len);
+        let mut buf = alloc(len);
         f.read_exact(buf.as_bytes_mut())
             .with_context(|| format!("read {}", path.display()))?;
         self.account_read(len as u64);
@@ -252,6 +274,25 @@ mod tests {
         let s = disk.snapshot();
         assert_eq!(s.bytes_read, 1001);
         assert_eq!(s.read_ops, 1);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pooled_aligned_read_matches_and_recycles() {
+        let dir = std::env::temp_dir().join("graphmp_disk_pooled_test");
+        let _ = fs::remove_dir_all(&dir);
+        let disk = Disk::unthrottled();
+        let p = dir.join("a.bin");
+        let data: Vec<u8> = (0..777u32).map(|i| (i % 253) as u8).collect();
+        disk.write_file(&p, &data).unwrap();
+        let pool = crate::storage::view::BufPool::new(4);
+        let buf = disk.read_file_aligned_pooled(&p, &pool).unwrap();
+        assert_eq!(buf.as_bytes(), &data[..]);
+        drop(buf);
+        let buf2 = disk.read_file_aligned_pooled(&p, &pool).unwrap();
+        assert_eq!(buf2.as_bytes(), &data[..]);
+        assert_eq!(pool.stats().0, 1, "second read must reuse the buffer");
+        assert_eq!(disk.snapshot().bytes_read, 2 * 777, "metering unchanged");
         fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -24,6 +24,9 @@
 //! `util::bytes_as_u32s`); the views reinterpret file bytes directly, so
 //! that assumption is enforced at compile time here.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
 use anyhow::Result;
 
 use crate::graph::{Csr, CsrRef, VertexId};
@@ -32,15 +35,118 @@ use crate::storage::shard::{Shard, MAGIC};
 #[cfg(target_endian = "big")]
 compile_error!("ShardView reinterprets little-endian shard files in place");
 
+/// A free list of [`AlignedBuf`] backing stores.
+///
+/// Mode-0 runs (no edge cache) re-read every scheduled shard from disk
+/// each iteration, and each read used to allocate a fresh buffer that
+/// died at the iteration barrier.  Buffers taken through
+/// [`BufPool::take`] return their backing words here when the last
+/// `Arc<ShardView>` holding them drops, so steady-state mode-0
+/// iterations recycle at most `workers + prefetch_depth` buffers
+/// instead of allocating one per shard.  Idle capacity is bounded
+/// (`max_idle` buffers) and visible to the memory accounting via
+/// [`idle_bytes`](Self::idle_bytes).
+pub struct BufPool {
+    bufs: Mutex<Vec<Vec<u32>>>,
+    max_idle: usize,
+    reused: AtomicU64,
+    fresh: AtomicU64,
+}
+
+impl BufPool {
+    /// A pool keeping at most `max_idle` buffers on the free list.
+    pub fn new(max_idle: usize) -> Arc<BufPool> {
+        Arc::new(BufPool {
+            bufs: Mutex::new(Vec::new()),
+            max_idle,
+            reused: AtomicU64::new(0),
+            fresh: AtomicU64::new(0),
+        })
+    }
+
+    /// A pooled buffer of `len` bytes: reuses a free-listed backing
+    /// store when one exists, allocating (zeroed) otherwise.  The buffer
+    /// returns its words to `pool` on drop.
+    ///
+    /// Unlike [`AlignedBuf::with_len`], a *recycled* buffer's contents
+    /// are unspecified — the caller must fill all `len` bytes before
+    /// reading (the disk read path does, via `read_exact`).  Re-zeroing
+    /// a recycled shard-sized buffer would cost a full memset per read,
+    /// most of what the pool exists to save.
+    pub fn take(pool: &Arc<BufPool>, len: usize) -> AlignedBuf {
+        let words_len = len.div_ceil(4);
+        let recycled = pool.bufs.lock().unwrap().pop();
+        let words = match recycled {
+            Some(mut w) => {
+                pool.reused.fetch_add(1, Ordering::Relaxed);
+                // grow-with-zeros / truncate only: the live prefix is
+                // overwritten by the caller, and bytes past `len` are
+                // never exposed
+                w.resize(words_len, 0);
+                w
+            }
+            None => {
+                pool.fresh.fetch_add(1, Ordering::Relaxed);
+                vec![0u32; words_len]
+            }
+        };
+        AlignedBuf { words, len, pool: Some(Arc::clone(pool)) }
+    }
+
+    fn put(&self, words: Vec<u32>) {
+        if words.capacity() == 0 {
+            return;
+        }
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < self.max_idle {
+            bufs.push(words);
+        }
+    }
+
+    /// Bytes held by idle free-listed buffers (charged by the engine's
+    /// memory account — pooled capacity is real resident RAM).
+    pub fn idle_bytes(&self) -> u64 {
+        self.bufs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|w| 4 * w.capacity() as u64)
+            .sum()
+    }
+
+    /// `(reused, fresh)` take counts.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.reused.load(Ordering::Relaxed),
+            self.fresh.load(Ordering::Relaxed),
+        )
+    }
+}
+
 /// A byte buffer whose base address is 4-byte aligned, so `u32`/`f32`
 /// sections at 4-byte offsets can be borrowed as typed slices.
 ///
 /// Backed by a `Vec<u32>` (alignment 4 guaranteed by the allocator); the
-/// logical byte length may be shorter than the backing words.
-#[derive(Clone)]
+/// logical byte length may be shorter than the backing words.  Buffers
+/// handed out by a [`BufPool`] return their backing store to it on drop.
 pub struct AlignedBuf {
     words: Vec<u32>,
     len: usize,
+    pool: Option<Arc<BufPool>>,
+}
+
+impl Clone for AlignedBuf {
+    fn clone(&self) -> Self {
+        AlignedBuf { words: self.words.clone(), len: self.len, pool: self.pool.clone() }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.put(std::mem::take(&mut self.words));
+        }
+    }
 }
 
 impl std::fmt::Debug for AlignedBuf {
@@ -53,7 +159,7 @@ impl AlignedBuf {
     /// A zero-filled buffer of `len` bytes (fill via
     /// [`as_bytes_mut`](Self::as_bytes_mut)).
     pub fn with_len(len: usize) -> AlignedBuf {
-        AlignedBuf { words: vec![0u32; len.div_ceil(4)], len }
+        AlignedBuf { words: vec![0u32; len.div_ceil(4)], len, pool: None }
     }
 
     /// Copy `b` into a fresh aligned buffer.
@@ -293,6 +399,56 @@ mod tests {
             assert_eq!(buf.len(), len);
             assert_eq!(buf.as_bytes(), &data[..]);
         }
+    }
+
+    #[test]
+    fn buf_pool_recycles_backing_stores() {
+        let pool = BufPool::new(4);
+        {
+            let mut a = BufPool::take(&pool, 100);
+            a.as_bytes_mut()[0] = 7;
+            assert_eq!(a.len(), 100);
+        } // drop returns the words
+        assert!(pool.idle_bytes() >= 100);
+        let mut b = BufPool::take(&pool, 60);
+        assert_eq!(b.len(), 60);
+        // recycled contents are unspecified: the caller fills them
+        b.as_bytes_mut().fill(9);
+        assert_eq!(b.as_bytes(), &[9u8; 60][..]);
+        let (reused, fresh) = pool.stats();
+        assert_eq!((reused, fresh), (1, 1));
+        assert_eq!(pool.idle_bytes(), 0, "the only idle buffer was taken");
+        drop(b);
+
+        // a pooled buffer behaves exactly like a plain one
+        let data: Vec<u8> = (0..97u8).collect();
+        let mut c = BufPool::take(&pool, data.len());
+        c.as_bytes_mut().copy_from_slice(&data);
+        assert_eq!(c.as_bytes(), &data[..]);
+        assert_eq!(c.as_bytes().as_ptr() as usize % 4, 0);
+    }
+
+    #[test]
+    fn buf_pool_bounds_idle_buffers() {
+        let pool = BufPool::new(2);
+        let bufs: Vec<AlignedBuf> = (0..5).map(|_| BufPool::take(&pool, 64)).collect();
+        drop(bufs);
+        assert!(pool.idle_bytes() <= 2 * 64 + 8, "idle list must stay bounded");
+        let n_idle = { pool.bufs.lock().unwrap().len() };
+        assert_eq!(n_idle, 2);
+    }
+
+    #[test]
+    fn pooled_shard_view_round_trips() {
+        let pool = BufPool::new(4);
+        let s = sample(true);
+        let bytes = s.to_bytes();
+        let mut buf = BufPool::take(&pool, bytes.len());
+        buf.as_bytes_mut().copy_from_slice(&bytes);
+        let v = ShardView::parse(buf).unwrap();
+        assert_eq!(v.to_shard(), s);
+        drop(v);
+        assert!(pool.idle_bytes() > 0, "view drop must return the buffer");
     }
 
     #[test]

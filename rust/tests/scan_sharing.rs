@@ -1,0 +1,247 @@
+//! Scan-sharing determinism gate (PR 4): a batched N-job run must be
+//! **bit-identical per job** to N back-to-back solo runs — across apps
+//! (pagerank / ppr / widest), across cache modes, with a job converging
+//! mid-batch — while per-job disk I/O amortizes as ~1/N.  This is the
+//! acceptance gate for the multi-job runtime: sharing a shard pass must
+//! never change any job's results, iteration count or activation
+//! trajectory.  Runs in debug and `--release` in CI (the f32 kernel
+//! paths are codegen-sensitive).
+
+use graphmp::apps::{PageRank, Ppr, Sssp, VertexProgram, Widest};
+use graphmp::compress::CacheMode;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::exec::BatchJob;
+use graphmp::graph::rmat::{rmat, RmatParams};
+use graphmp::metrics::RunMetrics;
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::runtime::{JobSet, JobSpec, JobStatus};
+use graphmp::storage::disk::Disk;
+use graphmp::storage::GraphDir;
+
+fn prep_graph(name: &str) -> (GraphDir, Disk) {
+    let g = rmat(10, 14_000, 2026, RmatParams::default());
+    let root = std::env::temp_dir().join(format!("graphmp_scan_{name}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let disk = Disk::unthrottled();
+    let cfg = PrepConfig {
+        edges_per_shard: 2048,
+        max_rows_per_shard: 512,
+        weighted: true,
+        ..Default::default()
+    };
+    let (dir, _) = preprocess_into(&g, &root, &disk, cfg).unwrap();
+    (dir, disk)
+}
+
+fn engine(dir: &GraphDir, disk: &Disk, mode: CacheMode) -> VswEngine {
+    let cfg = EngineConfig {
+        workers: 4,
+        prefetch_depth: 3,
+        prefetch_threads: 2,
+        cache_mode: Some(mode),
+        cache_capacity: 64 << 20,
+        // sim-scale threshold so SSSP-style frontiers actually trigger
+        // per-job selective skipping inside shared passes
+        active_threshold: 0.05,
+        ..Default::default()
+    };
+    VswEngine::open(dir, disk, cfg).unwrap()
+}
+
+fn solo(
+    dir: &GraphDir,
+    disk: &Disk,
+    mode: CacheMode,
+    app: &dyn VertexProgram,
+    iters: u32,
+) -> (Vec<f32>, RunMetrics) {
+    engine(dir, disk, mode).run_to_values(app, iters).unwrap()
+}
+
+#[test]
+fn batched_jobs_bit_identical_across_apps_and_cache_modes() {
+    let (dir, disk) = prep_graph("apps_modes");
+    let apps: Vec<Box<dyn VertexProgram>> = vec![
+        Box::new(PageRank::new()),
+        Box::new(Ppr::new(3)),
+        Box::new(Ppr::new(17)),
+        Box::new(Widest::new(0)),
+    ];
+    let iters = 12u32;
+    for mode in [CacheMode::M0None, CacheMode::M1Raw, CacheMode::M3Zlib1] {
+        let solos: Vec<(Vec<f32>, RunMetrics)> = apps
+            .iter()
+            .map(|a| solo(&dir, &disk, mode, a.as_ref(), iters))
+            .collect();
+        let jobs: Vec<BatchJob<'_>> = apps
+            .iter()
+            .map(|a| BatchJob { app: a.as_ref(), max_iters: iters })
+            .collect();
+        let (outs, batch) = engine(&dir, &disk, mode).run_jobs(&jobs).unwrap();
+        assert_eq!(outs.len(), apps.len());
+        for (j, ((v_b, r_b), (v_s, r_s))) in outs.iter().zip(&solos).enumerate() {
+            assert_eq!(
+                v_b,
+                v_s,
+                "{} (job {j}) under {}: batched diverged from solo",
+                apps[j].name(),
+                mode.name()
+            );
+            assert_eq!(
+                r_b.iterations.len(),
+                r_s.iterations.len(),
+                "{} (job {j}) under {}: iteration counts differ",
+                apps[j].name(),
+                mode.name()
+            );
+            assert_eq!(r_b.converged, r_s.converged, "job {j} under {}", mode.name());
+            // identical per-iteration activation + selection trajectories
+            for (a, b) in r_b.iterations.iter().zip(&r_s.iterations) {
+                assert_eq!(a.active_vertices, b.active_vertices, "job {j}");
+                assert_eq!(a.shards_processed, b.shards_processed, "job {j}");
+                assert_eq!(a.shards_skipped, b.shards_skipped, "job {j}");
+            }
+        }
+        // all four jobs start all-active, so at least the first pass
+        // serves every unit to several jobs (later passes may diverge:
+        // each job's own Bloom selection still skips within the pass)
+        assert!(
+            batch.shard_servings > batch.shard_loads,
+            "{}: overlapping jobs must share loads ({} servings / {} loads)",
+            mode.name(),
+            batch.shard_servings,
+            batch.shard_loads
+        );
+    }
+}
+
+#[test]
+fn job_converging_mid_batch_drops_out_and_stays_exact() {
+    let (dir, disk) = prep_graph("mid_converge");
+    let mode = CacheMode::M1Raw;
+    // SSSP converges; give PageRank a budget a little past that point so
+    // the batch provably outlives the converging job (PageRank's f32
+    // fixpoint takes ~log(eps)/log(d) ≈ 100 iterations, far beyond it)
+    let (v_sssp_solo, r_sssp_solo) = solo(&dir, &disk, mode, &Sssp::new(0), 100);
+    assert!(r_sssp_solo.converged, "test needs a converging job");
+    let k = r_sssp_solo.iterations.len() as u32;
+    let pr_budget = k + 5;
+    let (v_pr_solo, _) = solo(&dir, &disk, mode, &PageRank::new(), pr_budget);
+
+    let (outs, batch) = engine(&dir, &disk, mode)
+        .run_jobs(&[
+            BatchJob { app: &Sssp::new(0), max_iters: 100 },
+            BatchJob { app: &PageRank::new(), max_iters: pr_budget },
+        ])
+        .unwrap();
+    let (v_sssp, r_sssp) = &outs[0];
+    let (v_pr, r_pr) = &outs[1];
+    assert_eq!(v_sssp, &v_sssp_solo, "batched SSSP diverged");
+    assert_eq!(v_pr, &v_pr_solo, "batched PageRank diverged");
+    assert!(r_sssp.converged);
+    assert_eq!(r_sssp.iterations.len(), r_sssp_solo.iterations.len());
+    assert_eq!(r_pr.iterations.len(), pr_budget as usize);
+    assert_eq!(batch.passes, pr_budget, "batch runs until its longest job ends");
+    // after SSSP converges its lane leaves the union: later PageRank
+    // passes report a single member
+    let after: Vec<_> = r_pr
+        .iterations
+        .iter()
+        .skip(r_sssp.iterations.len())
+        .collect();
+    assert!(!after.is_empty());
+    for m in after {
+        assert_eq!(m.jobs_in_pass, 1, "iter {}: converged job still in pass", m.iteration);
+        assert_eq!(m.shard_servings, m.shards_processed);
+    }
+}
+
+#[test]
+fn scan_sharing_amortizes_mode0_disk_reads() {
+    let (dir, disk) = prep_graph("amortize");
+    let iters = 8u32;
+    let n_jobs = 4u32;
+    let seeds = [2u32, 5, 11, 23];
+    // selective off pins every job's worklist to the full shard set, so
+    // the batched-vs-sequential byte ratio is exactly 1/N
+    let full_sweep = |disk: &Disk| {
+        let cfg = EngineConfig {
+            workers: 4,
+            prefetch_depth: 3,
+            prefetch_threads: 2,
+            cache_mode: Some(CacheMode::M0None),
+            selective: false,
+            ..Default::default()
+        };
+        VswEngine::open(&dir, disk, cfg).unwrap()
+    };
+    // back-to-back: each query pays the full per-iteration re-read
+    // (engines open outside the metering window: only shard-pass bytes
+    // are compared)
+    let mut seq_bytes = 0u64;
+    for &s in &seeds {
+        let mut eng = full_sweep(&disk);
+        let before = disk.snapshot();
+        let (_, r) = eng.run_to_values(&Ppr::new(s), iters).unwrap();
+        seq_bytes += disk.snapshot().since(&before).bytes_read;
+        assert_eq!(r.iterations.len(), iters as usize, "seed {s} converged early");
+    }
+
+    // batched: the union pass reads each shard once for all four
+    let apps: Vec<Ppr> = seeds.iter().map(|&s| Ppr::new(s)).collect();
+    let jobs: Vec<BatchJob<'_>> = apps
+        .iter()
+        .map(|a| BatchJob { app: a, max_iters: iters })
+        .collect();
+    let mut eng = full_sweep(&disk);
+    let before = disk.snapshot();
+    let (_, batch) = eng.run_jobs(&jobs).unwrap();
+    let batch_bytes = disk.snapshot().since(&before).bytes_read;
+
+    assert_eq!(batch.bytes_read, batch_bytes, "BatchMetrics must meter the batch");
+    assert_eq!(
+        seq_bytes,
+        batch_bytes * n_jobs as u64,
+        "identical worklists: batched I/O must be exactly 1/N of sequential"
+    );
+    assert!((batch.shard_loads_amortized() - n_jobs as f64).abs() < 1e-9);
+}
+
+#[test]
+fn jobset_lifecycle_and_chunked_batches() {
+    let (dir, disk) = prep_graph("jobset");
+    let mut eng = engine(&dir, &disk, CacheMode::M1Raw);
+    // cap 2 → three jobs drain as two batches
+    let mut set = JobSet::with_batch_cap(2);
+    let a = set.submit(JobSpec {
+        label: "pr".into(),
+        app: Box::new(PageRank::new()),
+        max_iters: 5,
+    });
+    let b = set.submit(JobSpec {
+        label: "ppr".into(),
+        // seed 0: rmat's hottest vertex, so mass keeps circulating and
+        // the job can't converge inside its 5-iteration budget
+        app: Box::new(Ppr::new(0)),
+        max_iters: 5,
+    });
+    let c = set.submit(JobSpec {
+        label: "sssp".into(),
+        app: Box::new(Sssp::new(0)),
+        max_iters: 100,
+    });
+    assert_eq!(set.queued(), 3);
+    let report = set.run_all(&mut eng).unwrap();
+    assert_eq!(report.batches.len(), 2, "cap 2 must split 3 jobs into 2 batches");
+    assert_eq!(set.queued(), 0);
+    assert_eq!(set.status(a), Some(JobStatus::IterLimit));
+    assert_eq!(set.status(b), Some(JobStatus::IterLimit));
+    assert_eq!(set.status(c), Some(JobStatus::Converged));
+    // results are the same solo answers, reachable through the set
+    let (v_pr_solo, _) = solo(&dir, &disk, CacheMode::M1Raw, &PageRank::new(), 5);
+    assert_eq!(set.take_values(a).unwrap(), v_pr_solo);
+    assert!(set.take_values(a).is_none(), "values are taken once");
+    assert!(set.job(c).unwrap().run.as_ref().unwrap().converged);
+    // a second run_all with nothing queued is a no-op
+    assert!(set.run_all(&mut eng).unwrap().batches.is_empty());
+}

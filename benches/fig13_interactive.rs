@@ -1,0 +1,237 @@
+//! Fig 13 (PR 5): the interactive scan-shared scheduler.
+//!
+//! Two experiments, both asserting bit-identity against solo runs:
+//!
+//! 1. **Arrivals** — N PPR queries join one batch on a staggered
+//!    schedule (job j arrives at pass j·K).  Mid-batch admission
+//!    warm-starts each job's lanes at its boundary; the series is
+//!    per-job latency (the shared-pass seconds its own iterations span)
+//!    and the per-job meter (kernel compute, shards served, effective
+//!    bytes) versus arrival offset.
+//! 2. **(unit × job) fan-out** — jobs ≫ units: one giant shard, many
+//!    jobs, more workers than units.  Serially (PR-4 shape) the one
+//!    claiming worker computes every member job; with the fan-out the
+//!    sub-tasks spread across idle workers.  The headline is the
+//!    wall-clock speedup at identical results.
+//!
+//! Emits `BENCH_PR5.json`.
+
+use graphmp::apps::Ppr;
+use graphmp::benchutil::{banner, batch_summary, job_summary, scale, Table};
+use graphmp::compress::CacheMode;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::exec::BatchJob;
+use graphmp::graph::rmat::{rmat, RmatParams};
+use graphmp::graph::EdgeList;
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::runtime::{JobSet, JobSpec};
+use graphmp::storage::disk::Disk;
+use graphmp::storage::GraphDir;
+
+const ITERS: u32 = 10;
+const ARRIVAL_STEP: u32 = 2;
+
+fn prep(g: &EdgeList, name: &str, disk: &Disk, edges_per_shard: u32) -> GraphDir {
+    let tmp = std::env::temp_dir().join(format!("graphmp_bench_fig13_{name}"));
+    let _ = std::fs::remove_dir_all(&tmp);
+    let cfg = PrepConfig {
+        edges_per_shard,
+        max_rows_per_shard: 1 << 20,
+        weighted: false,
+        ..Default::default()
+    };
+    let (dir, report) = preprocess_into(g, &tmp, disk, cfg).unwrap();
+    println!(
+        "{name}: |V|={} |E|={} shards={}",
+        g.num_vertices,
+        g.num_edges(),
+        report.num_shards
+    );
+    dir
+}
+
+/// Experiment 1: staggered arrivals through the JobSet replay path.
+fn bench_arrivals(small: bool, json: &mut String) {
+    let g = if small {
+        rmat(10, 20_000, 7, RmatParams::default())
+    } else {
+        rmat(12, 120_000, 7, RmatParams::default())
+    };
+    let disk = scale::bench_disk();
+    let dir = prep(&g, "arrivals", &disk, scale::EDGES_PER_SHARD / 8);
+    let n_jobs = 4u32;
+    let mk_engine = |disk: &Disk| {
+        let cfg = EngineConfig {
+            cache_mode: Some(CacheMode::M1Raw),
+            cache_capacity: scale::CACHE_CAPACITY,
+            selective: false,
+            ..Default::default()
+        };
+        VswEngine::open(&dir, disk, cfg).unwrap()
+    };
+
+    // ground truth: each query run solo
+    let solo_values: Vec<Vec<f32>> = (0..n_jobs)
+        .map(|j| {
+            let (v, _) = mk_engine(&disk)
+                .run_to_values(&Ppr::new(1 + 37 * j), ITERS)
+                .unwrap();
+            v
+        })
+        .collect();
+
+    // replay: job j arrives at pass j·K of one interactive batch
+    let mut set = JobSet::new();
+    for j in 0..n_jobs {
+        set.submit_at(
+            j * ARRIVAL_STEP,
+            JobSpec {
+                label: format!("ppr#{j}"),
+                app: Box::new(Ppr::new(1 + 37 * j)),
+                max_iters: ITERS,
+            },
+        );
+    }
+    let mut eng = mk_engine(&disk);
+    let report = set.run_all(&mut eng).unwrap();
+    assert_eq!(report.batches.len(), 1, "staggered jobs must share one batch");
+    let batch = &report.batches[0];
+    println!("{}", batch_summary(batch));
+    assert_eq!(batch.admitted_mid_batch, n_jobs - 1);
+
+    let mut tbl = Table::new(vec![
+        "job", "arrival", "iters", "latency s", "compute ms", "shards", "edges", "eff KiB",
+    ]);
+    let mut rows = Vec::new();
+    for job in set.jobs() {
+        let run = job.run.as_ref().unwrap();
+        assert_eq!(
+            job.values.as_ref().unwrap(),
+            &solo_values[job.id as usize],
+            "job {}: admission changed results",
+            job.id
+        );
+        let latency: f64 = run.iterations.iter().map(|m| m.elapsed_seconds()).sum();
+        let jm = &run.job;
+        println!("{}", job_summary(jm));
+        tbl.row(vec![
+            format!("{}", job.id),
+            format!("{}", jm.admitted_pass),
+            format!("{}", jm.iterations),
+            format!("{latency:.4}"),
+            format!("{:.3}", jm.compute.as_secs_f64() * 1e3),
+            format!("{}", jm.units_served),
+            format!("{}", jm.edges_processed),
+            format!("{:.1}", jm.effective_bytes_read / 1024.0),
+        ]);
+        rows.push(format!(
+            "{{\"job\": {}, \"arrival\": {}, \"iters\": {}, \"latency_s\": {latency:.6}, \"compute_ms\": {:.4}, \"units\": {}, \"edges\": {}, \"effective_kib\": {:.2}}}",
+            job.id,
+            jm.admitted_pass,
+            jm.iterations,
+            jm.compute.as_secs_f64() * 1e3,
+            jm.units_served,
+            jm.edges_processed,
+            jm.effective_bytes_read / 1024.0
+        ));
+    }
+    tbl.print("Fig 13a: per-job latency & accounting vs arrival offset");
+    json.push_str(&format!("  \"arrivals\": [{}],\n", rows.join(", ")));
+}
+
+/// Experiment 2: fan-out speedup at jobs ≫ units.
+fn bench_fanout(small: bool, json: &mut String) {
+    let g = if small {
+        rmat(11, 60_000, 11, RmatParams::default())
+    } else {
+        rmat(12, 250_000, 11, RmatParams::default())
+    };
+    // wall-clock comparison: no simulated device, compute dominates
+    let disk = Disk::unthrottled();
+    let dir = prep(&g, "fanout", &disk, 1 << 22); // one giant shard
+    let n_jobs = 12u32;
+    let workers = 8usize;
+    let seeds: Vec<u32> = (0..n_jobs).map(|j| 1 + 37 * j).collect();
+    let apps: Vec<Ppr> = seeds.iter().map(|&s| Ppr::new(s)).collect();
+
+    let run_with = |fan_out: bool| {
+        let jobs: Vec<BatchJob<'_>> = apps
+            .iter()
+            .map(|a| BatchJob { app: a, max_iters: ITERS })
+            .collect();
+        let cfg = EngineConfig {
+            workers,
+            fan_out,
+            cache_mode: Some(CacheMode::M1Raw),
+            cache_capacity: 256 << 20,
+            selective: false,
+            ..Default::default()
+        };
+        let mut eng = VswEngine::open(&dir, &disk, cfg).unwrap();
+        // warm the cache so both timings measure compute, not the first read
+        let _ = eng.run(&Ppr::new(0), 1).unwrap();
+        eng.run_jobs(&jobs).unwrap()
+    };
+
+    // best-of-3 per shape to shave scheduler noise
+    let mut serial_wall = f64::INFINITY;
+    let mut fan_wall = f64::INFINITY;
+    let mut o_serial = None;
+    let mut o_fan = None;
+    let mut fanned = 0u64;
+    for _ in 0..3 {
+        let (o, b) = run_with(false);
+        serial_wall = serial_wall.min(b.total_wall.as_secs_f64());
+        assert_eq!(b.shard_servings_fanned, 0);
+        o_serial = Some(o);
+        let (o, b) = run_with(true);
+        fan_wall = fan_wall.min(b.total_wall.as_secs_f64());
+        assert!(b.shard_servings_fanned > 0, "fan-out must engage at jobs >> units");
+        fanned = b.shard_servings_fanned;
+        o_fan = Some(o);
+    }
+    let (o_serial, o_fan) = (o_serial.unwrap(), o_fan.unwrap());
+    for (j, ((v1, _), (v2, _))) in o_fan.iter().zip(&o_serial).enumerate() {
+        assert_eq!(v1, v2, "job {j}: fan-out changed results");
+    }
+    let speedup = serial_wall / fan_wall.max(1e-12);
+
+    let mut tbl = Table::new(vec!["shape", "wall s", "speedup"]);
+    tbl.row(vec!["serial members (PR 4)".to_string(), format!("{serial_wall:.4}"), "1.00x".into()]);
+    tbl.row(vec![
+        "(unit x job) fan-out".to_string(),
+        format!("{fan_wall:.4}"),
+        format!("{speedup:.2}x"),
+    ]);
+    tbl.print(&format!(
+        "Fig 13b: {n_jobs} jobs on 1 unit, {workers} workers — member compute wall clock"
+    ));
+
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    if !small && cores >= 4 {
+        assert!(
+            speedup >= 1.05,
+            "acceptance gate: fan-out must beat serial member compute at jobs >> units \
+             (got {speedup:.2}x on {cores} cores)"
+        );
+    }
+    json.push_str(&format!(
+        "  \"fanout\": {{\"jobs\": {n_jobs}, \"units\": 1, \"workers\": {workers}, \"cores\": {cores}, \"serial_wall_s\": {serial_wall:.6}, \"fan_wall_s\": {fan_wall:.6}, \"speedup\": {speedup:.4}, \"servings_fanned\": {fanned}}}\n"
+    ));
+}
+
+fn main() {
+    banner(
+        "fig13_interactive",
+        "PR 5: mid-batch admission latency + (unit x job) fan-out speedup",
+    );
+    let small = std::env::args().any(|a| a == "--small");
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"iters\": {ITERS},\n"));
+    json.push_str(&format!("  \"arrival_step\": {ARRIVAL_STEP},\n"));
+    bench_arrivals(small, &mut json);
+    bench_fanout(small, &mut json);
+    json.push_str("}\n");
+    std::fs::write("BENCH_PR5.json", &json).unwrap();
+    println!("\nwrote BENCH_PR5.json");
+}

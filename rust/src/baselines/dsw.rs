@@ -148,6 +148,10 @@ impl ShardSource for DswSource<'_> {
         Ok(col_edges)
     }
 
+    fn unit_edges(&self, _id: u32, col_edges: &Vec<Edge>) -> u64 {
+        col_edges.len() as u64
+    }
+
     fn compute(
         &self,
         j: u32,

@@ -129,6 +129,10 @@ impl ShardSource for EsgSource<'_> {
         Ok(())
     }
 
+    fn unit_edges(&self, id: u32, _item: &()) -> u64 {
+        self.eng.partitions[id as usize].len() as u64
+    }
+
     /// Scatter: stream the partition's out-edges into an update stream —
     /// monomorphized gather, buffer reused through the scratch arena.
     fn compute(

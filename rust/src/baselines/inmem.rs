@@ -145,6 +145,11 @@ impl ShardSource for InMemSource<'_> {
         Ok(()) // zero per-iteration disk I/O by design
     }
 
+    fn unit_edges(&self, _id: u32, _item: &()) -> u64 {
+        // the single unit is the whole resident graph
+        self.eng.num_edges
+    }
+
     fn compute(
         &self,
         _id: u32,

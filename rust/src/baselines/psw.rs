@@ -222,6 +222,10 @@ impl ShardSource for PswSource<'_> {
         Ok(())
     }
 
+    fn unit_edges(&self, id: u32, _item: &()) -> u64 {
+        self.eng.shards[id as usize].len() as u64
+    }
+
     fn compute(
         &self,
         id: u32,

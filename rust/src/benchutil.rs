@@ -123,9 +123,10 @@ pub fn pipeline_summary(run: &crate::metrics::RunMetrics) -> String {
 
 /// One-line scan-sharing summary of a batch: loads vs job-servings,
 /// the amortization factor and the per-job effective disk bytes — what
-/// the `--jobs` CLI path and the Fig 12 bench report.
+/// the `--jobs` CLI path and the Fig 12/13 benches report.  Interactive
+/// batches append their admission and fan-out counters.
 pub fn batch_summary(b: &crate::metrics::BatchMetrics) -> String {
-    format!(
+    let mut s = format!(
         "scan sharing: {} jobs x {} passes, {} shard loads served {} job-consumptions ({:.2}x amortized), {:.1} KiB read/job effective",
         b.jobs,
         b.passes,
@@ -133,6 +134,33 @@ pub fn batch_summary(b: &crate::metrics::BatchMetrics) -> String {
         b.shard_servings,
         b.shard_loads_amortized(),
         b.effective_bytes_read_per_job() / 1024.0
+    );
+    if b.admitted_mid_batch > 0 {
+        s.push_str(&format!(
+            ", {} admitted mid-batch ({} deferred)",
+            b.admitted_mid_batch, b.admissions_deferred
+        ));
+    }
+    if b.shard_servings_fanned > 0 {
+        s.push_str(&format!(
+            ", {} servings fanned to idle workers",
+            b.shard_servings_fanned
+        ));
+    }
+    s
+}
+
+/// One-line per-job accounting summary ([`crate::metrics::JobMetrics`]):
+/// the attribution a serving scheduler would bill the query.
+pub fn job_summary(j: &crate::metrics::JobMetrics) -> String {
+    format!(
+        "job: arrived pass {}, {} iters, {:.3}ms compute, {} shards served, {} edges, {:.1} KiB effective read",
+        j.admitted_pass,
+        j.iterations,
+        j.compute.as_secs_f64() * 1e3,
+        j.units_served,
+        j.edges_processed,
+        j.effective_bytes_read / 1024.0
     )
 }
 
@@ -241,6 +269,41 @@ mod tests {
         assert!(s.contains("8 jobs"), "{s}");
         assert!(s.contains("8.00x amortized"), "{s}");
         assert!(s.contains("100.0 KiB read/job"), "{s}");
+        assert!(!s.contains("mid-batch"), "plain batches omit admission info: {s}");
+    }
+
+    #[test]
+    fn batch_summary_reports_interactive_counters() {
+        let b = crate::metrics::BatchMetrics {
+            jobs: 3,
+            admitted_mid_batch: 2,
+            admissions_deferred: 1,
+            shard_loads: 10,
+            shard_servings: 20,
+            shard_servings_fanned: 6,
+            ..Default::default()
+        };
+        let s = batch_summary(&b);
+        assert!(s.contains("2 admitted mid-batch (1 deferred)"), "{s}");
+        assert!(s.contains("6 servings fanned"), "{s}");
+    }
+
+    #[test]
+    fn job_summary_formats_attribution() {
+        let j = crate::metrics::JobMetrics {
+            admitted_pass: 4,
+            iterations: 7,
+            compute: std::time::Duration::from_millis(12),
+            units_served: 21,
+            edges_processed: 1234,
+            effective_bytes_read: 2048.0,
+        };
+        let s = job_summary(&j);
+        assert!(s.contains("arrived pass 4"), "{s}");
+        assert!(s.contains("7 iters"), "{s}");
+        assert!(s.contains("12.000ms compute"), "{s}");
+        assert!(s.contains("21 shards served"), "{s}");
+        assert!(s.contains("2.0 KiB effective read"), "{s}");
     }
 
     #[test]

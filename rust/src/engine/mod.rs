@@ -95,6 +95,11 @@ pub struct EngineConfig {
     /// 0 disables the memo; the prefetcher still decodes each scheduled
     /// shard only once per iteration, on the I/O threads.
     pub decode_memo_budget: u64,
+    /// Split (unit × job) sub-tasks of a scan-shared batch pass across
+    /// idle workers when the union worklist is shorter than the worker
+    /// pool (CLI: `--no-fanout` turns it off).  Bit-identical results
+    /// either way; off reproduces the PR-4 serial member compute.
+    pub fan_out: bool,
     pub backend: Backend,
 }
 
@@ -111,6 +116,7 @@ impl Default for EngineConfig {
             prefetch_auto: exec.prefetch_auto,
             prefetch_threads: exec.prefetch_threads,
             decode_memo_budget: 256 * 1024 * 1024,
+            fan_out: exec.fan_out,
             backend: Backend::Native,
         }
     }
@@ -243,6 +249,38 @@ impl VswEngine {
         &mut self,
         jobs: &[BatchJob<'_>],
     ) -> Result<(Vec<crate::exec::JobOutput>, BatchMetrics)> {
+        // closed batches can't fill via an intake, so empty means a bug
+        anyhow::ensure!(!jobs.is_empty(), "empty job batch");
+        self.run_jobs_inner(jobs, |_, _| Vec::new(), false)
+    }
+
+    /// [`run_jobs`](Self::run_jobs) plus interactive admission: `intake`
+    /// is polled at every pass boundary with `(pass, running_jobs)` and
+    /// may return newly arrived jobs, which warm-start at that boundary
+    /// without disturbing running jobs (see
+    /// [`ExecCore::run_batch_interactive`]).  This is how
+    /// [`crate::runtime::JobSet`] replays staggered arrival schedules
+    /// (`graphmp run --jobs N --arrivals …`).
+    pub fn run_jobs_interactive<'j, F>(
+        &mut self,
+        jobs: &[BatchJob<'j>],
+        intake: F,
+    ) -> Result<(Vec<crate::exec::JobOutput>, BatchMetrics)>
+    where
+        F: FnMut(u32, usize) -> Vec<BatchJob<'j>>,
+    {
+        self.run_jobs_inner(jobs, intake, true)
+    }
+
+    fn run_jobs_inner<'j, F>(
+        &mut self,
+        jobs: &[BatchJob<'j>],
+        intake: F,
+        interactive: bool,
+    ) -> Result<(Vec<crate::exec::JobOutput>, BatchMetrics)>
+    where
+        F: FnMut(u32, usize) -> Vec<BatchJob<'j>>,
+    {
         let mut degrees_needed = false;
         for job in jobs {
             if job.app.needs_weights() {
@@ -254,7 +292,11 @@ impl VswEngine {
             }
             degrees_needed |= job.app.uses_out_degrees();
         }
-        let inv_out_deg: Vec<f32> = if degrees_needed {
+        // mid-batch admissions can't re-check degree needs here, so
+        // interactive batches always materialize the degree array —
+        // admitted sum-kernel jobs then find it in place.  Closed
+        // batches keep the cheap gate: no sum kernel, no O(|V|) pass.
+        let inv_out_deg: Vec<f32> = if degrees_needed || interactive {
             self.info
                 .out_degree
                 .iter()
@@ -274,11 +316,47 @@ impl VswEngine {
             prefetch_depth: self.cfg.prefetch_depth,
             prefetch_auto: self.cfg.prefetch_auto,
             prefetch_threads: self.cfg.prefetch_threads,
+            fan_out: self.cfg.fan_out,
+        };
+        // Backstop for direct API callers: arrivals bypass the up-front
+        // weights check above, so re-check them at admission and surface
+        // the error once the batch drains.  (`JobSet::run_all`
+        // pre-validates its whole queue against the graph dir before
+        // starting a batch, so the scheduler path never burns a batch's
+        // work on an invalid arrival.)
+        let weighted = self.prop.weighted;
+        let mut intake = intake;
+        let mut admission_err: Option<anyhow::Error> = None;
+        let wrapped = |pass: u32, running: usize| {
+            if admission_err.is_some() {
+                return Vec::new();
+            }
+            let arrivals = intake(pass, running);
+            for job in &arrivals {
+                if job.app.needs_weights() && !weighted {
+                    admission_err = Some(anyhow::anyhow!(
+                        "{} needs a weighted graph dir",
+                        job.app.name()
+                    ));
+                    return Vec::new();
+                }
+            }
+            arrivals
         };
         let this = &*self;
         let source = VswSource { eng: this };
         let mut core = ExecCore::new(exec_cfg, &this.disk, Some(&this.cache));
-        core.run_batch(&source, jobs, this.prop.num_vertices, &inv_out_deg)
+        let out = core.run_batch_interactive(
+            &source,
+            jobs,
+            this.prop.num_vertices,
+            &inv_out_deg,
+            wrapped,
+        );
+        if let Some(e) = admission_err {
+            return Err(e);
+        }
+        out
     }
 
     /// Build the VSW shard source and hand the run to the shared
@@ -340,6 +418,10 @@ impl ShardSource for VswSource<'_> {
 
     fn load(&self, id: u32) -> Result<Arc<ShardView>> {
         self.eng.load_shard(id)
+    }
+
+    fn unit_edges(&self, _id: u32, item: &Arc<ShardView>) -> u64 {
+        item.num_edges() as u64
     }
 
     /// Execute one decoded shard: write its interval of dst and mark

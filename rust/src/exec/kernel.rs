@@ -5,7 +5,7 @@
 //! via `IterCtx::edge_value`, a `uses_contrib` branch) **per edge**.
 //! GridGraph's edge loop wins by being branch-free; this module gets the
 //! same shape by dispatching the (combine × gather) pair **once per
-//! unit**: [`with_gather!`] maps the runtime kernel onto a closure whose
+//! unit**: the `with_gather!` macro maps the runtime kernel onto a closure whose
 //! type monomorphizes the generic fold bodies, so the inner loops compile
 //! to straight-line arithmetic.
 //!

@@ -36,21 +36,34 @@
 //! per job fall as ~1/N while per-job results stay bit-identical to N
 //! back-to-back solo runs (`rust/tests/scan_sharing.rs`).
 //! [`ExecCore::run`] is the single-job special case.
+//!
+//! Interactive scheduling (PR 5): [`ExecCore::run_batch_interactive`]
+//! additionally polls an *intake* at every pass boundary, so new jobs
+//! can join a batch already in flight — the admitted job's lanes
+//! warm-start at that boundary with their own local iteration clock
+//! (its trajectory is bit-identical to a solo run started then), and
+//! running jobs are undisturbed.  When the union worklist is shorter
+//! than the worker pool, (unit × job) sub-tasks are split across idle
+//! workers ([`pipeline::FanOut`]); and each job's kernel time, served
+//! units and processed edges are metered per (unit, job) into
+//! [`crate::metrics::JobMetrics`] for fair per-query billing.
 
 pub mod dst;
 pub mod kernel;
 pub mod pipeline;
 pub mod schedule;
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::apps::{Combine, ShardKernel, VertexProgram};
 use crate::cache::EdgeCache;
 use crate::graph::{Edge, VertexId};
-use crate::metrics::{BatchMetrics, IterationMetrics, RunMetrics};
+use crate::metrics::{BatchMetrics, IterationMetrics, JobMetrics, RunMetrics};
 use crate::storage::disk::Disk;
 pub use dst::SharedDst;
 pub use schedule::{ActiveBits, RangeMarker};
@@ -72,6 +85,12 @@ pub struct ExecConfig {
     /// Dedicated I/O threads feeding the ready queue; 1–2 is enough to
     /// keep the (simulated) disk continuously busy.
     pub prefetch_threads: usize,
+    /// Split (unit × job) sub-tasks of a scan-shared pass across idle
+    /// workers when the union worklist is shorter than the worker pool
+    /// (jobs ≫ units).  Results are bit-identical either way; off means
+    /// a unit's member jobs always compute serially on the claiming
+    /// worker (the PR-4 behaviour, kept as the comparison baseline).
+    pub fan_out: bool,
 }
 
 impl Default for ExecConfig {
@@ -85,6 +104,7 @@ impl Default for ExecConfig {
             prefetch_depth: 4,
             prefetch_auto: false,
             prefetch_threads: 2,
+            fan_out: true,
         }
     }
 }
@@ -250,6 +270,13 @@ pub trait ShardSource: Sync {
         scratch: &mut Scratch<'_>,
     ) -> Result<UnitOutput>;
 
+    /// Edges one loaded unit holds — drives the per-job
+    /// `edges_processed` meter ([`crate::metrics::JobMetrics`]).  Engines
+    /// that don't track per-unit edge counts keep the default 0.
+    fn unit_edges(&self, _id: u32, _item: &Self::Item) -> u64 {
+        0
+    }
+
     /// Barrier stage: residual per-iteration charges (e.g. the gather
     /// phase's update-stream read and vertex write-back).
     fn end_iteration(&self, _ctx: &IterCtx<'_>, _updates_folded: u64) {}
@@ -322,6 +349,8 @@ impl<'a> ExecCore<'a> {
     /// per-job vertex lanes, activation bitsets and convergence stay
     /// isolated.  Returns per-job `(values, metrics)` in submission
     /// order (bit-identical to solo runs) plus the batch aggregate.
+    /// For mid-batch admission see
+    /// [`run_batch_interactive`](Self::run_batch_interactive).
     pub fn run_batch<S: ShardSource>(
         &mut self,
         source: &S,
@@ -330,6 +359,42 @@ impl<'a> ExecCore<'a> {
         inv_out_deg: &[f32],
     ) -> Result<(Vec<JobOutput>, BatchMetrics)> {
         anyhow::ensure!(!jobs.is_empty(), "empty job batch");
+        self.run_batch_interactive(source, jobs, num_vertices, inv_out_deg, |_, _| Vec::new())
+    }
+
+    /// [`run_batch`](Self::run_batch) plus **interactive admission**: at
+    /// every pass boundary `intake(pass, running)` is polled for newly
+    /// arrived jobs, which warm-start at that boundary — fresh lanes
+    /// (`SharedDst`, activation bitset, scatter slots), a job-local
+    /// iteration clock starting at 0, and their schedules folded into
+    /// the union worklist from the next pass on.  Admission never
+    /// perturbs running jobs: their per-lane state is isolated, so an
+    /// admitted job's trajectory is bit-identical to a solo run started
+    /// at its admission, and running jobs' trajectories are unchanged.
+    ///
+    /// Admission control: at most [`MAX_BATCH_JOBS`] jobs run
+    /// concurrently (unit membership travels as a 64-bit mask).  Arrivals
+    /// beyond the cap wait, FIFO, for a boundary where capacity freed up
+    /// (counted in [`BatchMetrics::admissions_deferred`]).  The batch
+    /// ends at a boundary where nothing is running, nothing is waiting,
+    /// and the intake returns no new jobs — callers replaying a finite
+    /// arrival schedule should release overdue arrivals when `running`
+    /// is 0 so a fully converged batch fast-forwards to them.
+    ///
+    /// Per-job outputs are returned in admission order: the initial
+    /// `jobs` first, then mid-batch admissions as they were admitted.
+    pub fn run_batch_interactive<'j, S, F>(
+        &mut self,
+        source: &S,
+        jobs: &[BatchJob<'j>],
+        num_vertices: u32,
+        inv_out_deg: &[f32],
+        mut intake: F,
+    ) -> Result<(Vec<JobOutput>, BatchMetrics)>
+    where
+        S: ShardSource,
+        F: FnMut(u32, usize) -> Vec<BatchJob<'j>>,
+    {
         anyhow::ensure!(
             jobs.len() <= MAX_BATCH_JOBS,
             "at most {MAX_BATCH_JOBS} jobs per batch (got {})",
@@ -340,32 +405,16 @@ impl<'a> ExecCore<'a> {
             n < (1 << 24),
             "f32 vertex values require ids < 2^24 (got {n})"
         );
-        let mut lanes = Vec::with_capacity(jobs.len());
+        let mut lanes: Vec<JobLane> = Vec::with_capacity(jobs.len());
         for job in jobs {
-            let kernel = job.app.kernel();
-            if kernel.uses_contrib() {
-                anyhow::ensure!(
-                    inv_out_deg.len() == n as usize,
-                    "{} needs the out-degree array",
-                    job.app.name()
-                );
-            }
-            let (src, active) = job.app.init(n);
-            anyhow::ensure!(src.len() == n as usize, "init length mismatch");
-            lanes.push(JobLane {
-                kernel,
-                src,
-                active,
-                contrib: Vec::new(),
-                run: RunMetrics::default(),
-                max_iters: job.max_iters,
-                done: false,
-            });
+            lanes.push(JobLane::new(job, n, inv_out_deg)?);
         }
 
         let run_start = Instant::now();
         let sim_start = self.disk.snapshot().sim_nanos;
         let mut batch = BatchMetrics { jobs: jobs.len() as u32, ..Default::default() };
+        // arrivals validated but waiting for a boundary with capacity
+        let mut waiting: VecDeque<JobLane> = VecDeque::new();
         let mut pass = 0u32;
         loop {
             // lane lifecycle at the pass boundary: converged jobs (empty
@@ -378,18 +427,50 @@ impl<'a> ExecCore<'a> {
                 if lane.active.is_empty() {
                     lane.run.converged = true;
                     lane.done = true;
-                } else if pass >= lane.max_iters {
+                } else if pass - lane.admit_pass >= lane.max_iters {
                     lane.done = true;
                 } else {
                     running.push(l);
                 }
             }
+            // interactive admission: poll the intake, then warm-start as
+            // many waiting arrivals as fit under the concurrency cap
+            for job in intake(pass, running.len()) {
+                batch.jobs += 1;
+                waiting.push_back(JobLane::new(&job, n, inv_out_deg)?);
+            }
+            while running.len() < MAX_BATCH_JOBS {
+                let Some(mut lane) = waiting.pop_front() else { break };
+                lane.admit_pass = pass;
+                if pass > 0 {
+                    batch.admitted_mid_batch += 1;
+                }
+                if lane.active.is_empty() {
+                    // degenerate: converged at init
+                    lane.run.converged = true;
+                    lane.done = true;
+                } else if lane.max_iters == 0 {
+                    lane.done = true;
+                }
+                lanes.push(lane);
+                if !lanes.last().unwrap().done {
+                    running.push(lanes.len() - 1);
+                }
+            }
+            for lane in waiting.iter_mut() {
+                if !lane.deferred {
+                    lane.deferred = true;
+                    batch.admissions_deferred += 1;
+                }
+            }
             if running.is_empty() {
+                debug_assert!(waiting.is_empty(), "capacity exists, so waiting drained");
                 break;
             }
             let stats = self.run_pass(source, &mut lanes, &running, pass, inv_out_deg)?;
             batch.shard_loads += stats.loads;
             batch.shard_servings += stats.servings;
+            batch.shard_servings_fanned += stats.fanned;
             batch.bytes_read += stats.bytes_read;
             pass += 1;
         }
@@ -398,6 +479,7 @@ impl<'a> ExecCore<'a> {
         batch.total_sim_disk_seconds =
             (self.disk.snapshot().sim_nanos - sim_start) as f64 / 1e9;
 
+        let total_servings = batch.shard_servings.max(1);
         let outs = lanes
             .into_iter()
             .map(|mut lane| {
@@ -406,6 +488,19 @@ impl<'a> ExecCore<'a> {
                 lane.run.total_overlapped_sim_seconds =
                     lane.run.iterations.iter().map(|m| m.overlapped_sim_seconds).sum();
                 lane.run.memory_bytes = source.residency_bytes();
+                // per-job attribution: this job's servings-weighted share
+                // of the batch's disk bytes plus its metered kernel time
+                lane.run.job = JobMetrics {
+                    admitted_pass: lane.admit_pass,
+                    iterations: lane.run.iterations.len() as u32,
+                    compute: lane.meter_compute,
+                    units_served: lane.meter_units,
+                    edges_processed: lane.meter_edges,
+                    effective_bytes_read: batch.bytes_read as f64
+                        * lane.meter_units as f64
+                        / total_servings as f64,
+                };
+                batch.per_job.push(lane.run.job);
                 (lane.src, lane.run)
             })
             .collect();
@@ -415,7 +510,11 @@ impl<'a> ExecCore<'a> {
     /// One shard pass of Algorithm 2 over the `running` lanes: per-job
     /// schedules merged into the union worklist, one schedule → prefetch
     /// → compute pipeline over it (each loaded unit fanned out to its
-    /// member jobs), then a per-job barrier swap.
+    /// member jobs — serially on the claiming worker, or split across
+    /// idle workers when the union is short), then a per-job barrier
+    /// swap.  Lanes admitted mid-batch see their *local* iteration
+    /// number everywhere (schedule, kernel context, metrics), so their
+    /// trajectory matches a solo run started at their admission.
     fn run_pass<S: ShardSource>(
         &mut self,
         source: &S,
@@ -435,7 +534,8 @@ impl<'a> ExecCore<'a> {
         let mut wls: Vec<Vec<u32>> = Vec::with_capacity(nr);
         let mut skips: Vec<u32> = Vec::with_capacity(nr);
         for &l in running {
-            let (wl, sk) = source.schedule(pass, &lanes[l].active);
+            let lane = &lanes[l];
+            let (wl, sk) = source.schedule(pass - lane.admit_pass, &lane.active);
             wls.push(wl);
             skips.push(sk);
         }
@@ -473,7 +573,7 @@ impl<'a> ExecCore<'a> {
                     src: &lane.src,
                     inv_out_deg,
                     contrib: &lane.contrib,
-                    iteration: pass,
+                    iteration: pass - lane.admit_pass,
                 }
             })
             .collect();
@@ -486,37 +586,46 @@ impl<'a> ExecCore<'a> {
         // each job's barrier fold is deterministic in completion order
         let slots: Mutex<Vec<Option<Vec<Update>>>> =
             Mutex::new((0..union_wl.len() * nr).map(|_| None).collect());
+        // per-(unit, job) meters, indexed by running position (atomics:
+        // sub-tasks of one job may run on several workers at once)
+        let meters: Vec<PassMeter> = (0..nr).map(|_| PassMeter::default()).collect();
+
+        // (unit × job) fan-out: when the union worklist can't occupy the
+        // worker pool on its own, member-job sub-tasks spread to idle
+        // workers instead of queueing behind the claiming one
+        let fan_counts: Vec<u32> = members.iter().map(|m| m.count_ones()).collect();
+        let split = self.cfg.fan_out && nr > 1 && union_wl.len() < self.cfg.workers.max(1);
 
         // stages 2+3: I/O threads stage each union unit into the bounded
-        // ready queue exactly once; a compute worker fans it out to every
-        // member job (the last member takes the item, earlier ones clone).
+        // ready queue exactly once; the pipeline hands it to every member
+        // job as a (unit, job) sub-task (see `pipeline::FanOut`).
         let pool = &self.scratch;
         let outcome = pipeline::run_worklist(
             &union_wl,
+            pipeline::FanOut { counts: &fan_counts, split },
             self.cfg.workers,
             depth,
             self.cfg.prefetch_threads,
             |id| source.load(id),
             || pool.scratch(),
-            |scratch, index, id, item| {
-                let mut item = Some(item);
-                let mut mask = members[index];
-                while mask != 0 {
-                    let r = mask.trailing_zeros() as usize;
-                    mask &= mask - 1;
-                    let it = if mask == 0 {
-                        item.take().expect("item taken once")
-                    } else {
-                        item.as_ref().expect("item present").clone()
-                    };
-                    let mut marker = bits[r].marker();
-                    match source.compute(id, it, &ctxs[r], &dsts[r], &mut marker, scratch)? {
-                        UnitOutput::InPlace => {}
-                        UnitOutput::Updates(u) => {
-                            slots.lock().unwrap()[index * nr + r] = Some(u);
-                        }
+            |scratch, index, id, sub, item| {
+                let r = nth_member(members[index], sub);
+                let edges = source.unit_edges(id, &item);
+                let t = Instant::now();
+                let mut marker = bits[r].marker();
+                let out = source.compute(id, item, &ctxs[r], &dsts[r], &mut marker, scratch)?;
+                drop(marker);
+                let dt = t.elapsed().as_nanos() as u64;
+                match out {
+                    UnitOutput::InPlace => {}
+                    UnitOutput::Updates(u) => {
+                        slots.lock().unwrap()[index * nr + r] = Some(u);
                     }
                 }
+                let m = &meters[r];
+                m.compute_nanos.fetch_add(dt, Ordering::Relaxed);
+                m.units.fetch_add(1, Ordering::Relaxed);
+                m.edges.fetch_add(edges, Ordering::Relaxed);
                 Ok(())
             },
         )?;
@@ -601,10 +710,15 @@ impl<'a> ExecCore<'a> {
 
         for (r, &l) in running.iter().enumerate() {
             let lane = &mut lanes[l];
+            let m = &meters[r];
+            let compute_nanos = m.compute_nanos.load(Ordering::Relaxed);
+            lane.meter_compute += Duration::from_nanos(compute_nanos);
+            lane.meter_units += m.units.load(Ordering::Relaxed);
+            lane.meter_edges += m.edges.load(Ordering::Relaxed);
             lane.src = std::mem::take(&mut nexts[r]);
             lane.active = bits[r].to_sorted_vec();
             lane.run.iterations.push(IterationMetrics {
-                iteration: pass,
+                iteration: pass - lane.admit_pass,
                 wall,
                 sim_disk_seconds,
                 overlapped_sim_seconds,
@@ -618,20 +732,23 @@ impl<'a> ExecCore<'a> {
                 prefetch_depth_used: depth as u32,
                 jobs_in_pass: nr as u32,
                 shard_servings: servings as u32,
+                shard_servings_fanned: outcome.fanned,
+                job_compute_seconds: compute_nanos as f64 / 1e9,
                 io: io_delta,
                 cache: cache_delta,
             });
         }
         Ok(PassStats {
-            loads: u64::from(outcome.processed),
+            loads: u64::from(outcome.units),
             servings,
+            fanned: u64::from(outcome.fanned),
             bytes_read: io_delta.bytes_read,
         })
     }
 }
 
 /// Per-job state of a scan-shared batch: its own vertex lane, active
-/// set, pre-folded contribution buffer and metrics.
+/// set, pre-folded contribution buffer, metrics and per-job meter.
 struct JobLane {
     kernel: ShardKernel,
     src: Vec<f32>,
@@ -639,13 +756,76 @@ struct JobLane {
     contrib: Vec<f32>,
     run: RunMetrics,
     max_iters: u32,
+    /// Pass boundary this lane joined the batch at (0 = founding member);
+    /// its iteration clock is `pass - admit_pass`.
+    admit_pass: u32,
     done: bool,
+    /// Whether the lane ever waited for admission capacity (counted once
+    /// in [`BatchMetrics::admissions_deferred`]).
+    deferred: bool,
+    meter_compute: Duration,
+    meter_units: u64,
+    meter_edges: u64,
+}
+
+impl JobLane {
+    /// Validate and warm-start a lane for `job` (fresh vertex values and
+    /// activation set from the app's `init`).
+    fn new(job: &BatchJob<'_>, n: u32, inv_out_deg: &[f32]) -> Result<JobLane> {
+        let kernel = job.app.kernel();
+        if kernel.uses_contrib() {
+            anyhow::ensure!(
+                inv_out_deg.len() == n as usize,
+                "{} needs the out-degree array",
+                job.app.name()
+            );
+        }
+        let (src, active) = job.app.init(n);
+        anyhow::ensure!(src.len() == n as usize, "init length mismatch");
+        Ok(JobLane {
+            kernel,
+            src,
+            active,
+            contrib: Vec::new(),
+            run: RunMetrics::default(),
+            max_iters: job.max_iters,
+            admit_pass: 0,
+            done: false,
+            deferred: false,
+            meter_compute: Duration::ZERO,
+            meter_units: 0,
+            meter_edges: 0,
+        })
+    }
+}
+
+/// One pass's per-job meter: kernel time, units and edges served to the
+/// job at this running position (atomics — split sub-tasks of one job
+/// may run on several workers concurrently).
+#[derive(Default)]
+struct PassMeter {
+    compute_nanos: AtomicU64,
+    units: AtomicU64,
+    edges: AtomicU64,
+}
+
+/// Position of the `sub`-th set bit of a membership mask — which running
+/// lane a (unit, sub) sub-task belongs to.  `sub` < `mask.count_ones()`
+/// is the pipeline's contract.
+#[inline]
+fn nth_member(mut mask: u64, sub: u32) -> usize {
+    debug_assert!(sub < mask.count_ones());
+    for _ in 0..sub {
+        mask &= mask - 1;
+    }
+    mask.trailing_zeros() as usize
 }
 
 /// What one pass contributed to the batch aggregate.
 struct PassStats {
     loads: u64,
     servings: u64,
+    fanned: u64,
     bytes_read: u64,
 }
 
@@ -715,10 +895,11 @@ fn adaptive_depth(
     workers: usize,
     previous: usize,
 ) -> usize {
-    let loads = outcome.prefetched.max(outcome.processed).max(1) as f64;
-    let units = outcome.processed.max(1) as f64;
+    let loads = outcome.prefetched.max(outcome.units).max(1) as f64;
+    // per-task compute rate: sub-tasks are the unit of worker occupancy
+    let tasks = outcome.processed.max(1) as f64;
     let t_io = outcome.io_busy.as_secs_f64() / loads;
-    let t_c = outcome.compute_busy.as_secs_f64() / units;
+    let t_c = outcome.compute_busy.as_secs_f64() / tasks;
     if t_c <= 0.0 || !t_io.is_finite() {
         return previous;
     }
@@ -765,6 +946,10 @@ mod tests {
             fold_edges_interval(ctx, &self.edges[item], lo, out, scratch);
             mark_interval(ctx, lo, out, marker);
             Ok(UnitOutput::InPlace)
+        }
+
+        fn unit_edges(&self, _id: u32, item: &usize) -> u64 {
+            self.edges[*item].len() as u64
         }
 
         fn residency_bytes(&self) -> u64 {
@@ -974,6 +1159,171 @@ mod tests {
             .run_batch(&src, &jobs, n, &[])
             .unwrap_err();
         assert!(err.to_string().contains("per batch"), "{err}");
+    }
+
+    #[test]
+    fn mid_batch_admission_is_bit_identical_and_isolated() {
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let inv = vec![0.5f32, 0.5, 1.0, 1.0, 0.0, 0.0];
+        let src = interval_source(n, &edges);
+        let (v_pr_solo, r_pr_solo) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run(&src, &PageRank::new(), n, &inv, 6)
+            .unwrap();
+        let (v_sssp_solo, r_sssp_solo) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run(&src, &Sssp::new(0), n, &inv, 10)
+            .unwrap();
+        let sssp = Sssp::new(0);
+        let (outs, batch) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run_batch_interactive(
+                &src,
+                &[BatchJob { app: &PageRank::new(), max_iters: 6 }],
+                n,
+                &inv,
+                |pass, _running| {
+                    if pass == 2 {
+                        vec![BatchJob { app: &sssp, max_iters: 10 }]
+                    } else {
+                        Vec::new()
+                    }
+                },
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 2, "founding job + one admission");
+        let (v_pr, r_pr) = &outs[0];
+        let (v_sssp, r_sssp) = &outs[1];
+        // the admitted job's trajectory equals a solo run from its
+        // admission: same values, same iteration count, local clock
+        assert_eq!(v_sssp, &v_sssp_solo, "admitted job diverged from solo");
+        assert_eq!(r_sssp.iterations.len(), r_sssp_solo.iterations.len());
+        assert_eq!(r_sssp.iterations[0].iteration, 0, "job-local iteration clock");
+        assert_eq!(r_sssp.job.admitted_pass, 2);
+        assert_eq!(r_sssp.converged, r_sssp_solo.converged);
+        // the running job is undisturbed by the admission
+        assert_eq!(v_pr, &v_pr_solo, "running job perturbed by admission");
+        assert_eq!(r_pr.iterations.len(), r_pr_solo.iterations.len());
+        for (a, b) in r_pr.iterations.iter().zip(&r_pr_solo.iterations) {
+            assert_eq!(a.active_vertices, b.active_vertices);
+            assert_eq!(a.shards_processed, b.shards_processed);
+        }
+        assert_eq!(batch.jobs, 2);
+        assert_eq!(batch.admitted_mid_batch, 1);
+        assert_eq!(
+            batch.passes as usize,
+            r_pr_solo.iterations.len().max(2 + r_sssp_solo.iterations.len())
+        );
+        assert_eq!(batch.per_job.len(), 2);
+        assert_eq!(batch.per_job[1].admitted_pass, 2);
+    }
+
+    #[test]
+    fn fan_out_split_matches_serial_member_compute() {
+        // 2 units, 3 jobs, 8 workers: the union worklist is shorter than
+        // the worker pool, so fan-out splits (unit, job) sub-tasks across
+        // workers — results must be bit-identical to serial member compute
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let inv = vec![0.5f32, 0.5, 1.0, 1.0, 0.0, 0.0];
+        let src = interval_source(n, &edges);
+        let pr = PageRank::new();
+        let s0 = Sssp::new(0);
+        let s1 = Sssp::new(1);
+        let run_with = |fan_out: bool| {
+            let cfg = ExecConfig { workers: 8, fan_out, ..Default::default() };
+            ExecCore::new(cfg, &disk, None)
+                .run_batch(
+                    &src,
+                    &[
+                        BatchJob { app: &pr, max_iters: 8 },
+                        BatchJob { app: &s0, max_iters: 8 },
+                        BatchJob { app: &s1, max_iters: 8 },
+                    ],
+                    n,
+                    &inv,
+                )
+                .unwrap()
+        };
+        let (o_fan, b_fan) = run_with(true);
+        let (o_serial, b_serial) = run_with(false);
+        for (j, ((v1, r1), (v2, r2))) in o_fan.iter().zip(&o_serial).enumerate() {
+            assert_eq!(v1, v2, "job {j}: fan-out changed results");
+            assert_eq!(r1.iterations.len(), r2.iterations.len(), "job {j}");
+        }
+        assert!(b_fan.shard_servings_fanned > 0, "2 units < 8 workers must fan out");
+        assert_eq!(b_serial.shard_servings_fanned, 0, "fan_out=false stays serial");
+        assert_eq!(b_fan.shard_servings, b_serial.shard_servings);
+    }
+
+    #[test]
+    fn per_job_meter_accounts_units_and_edges() {
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let src = interval_source(n, &edges);
+        let (_, run) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run(&src, &Sssp::new(0), n, &[], 20)
+            .unwrap();
+        // ToySource schedules both units every pass, so the job is served
+        // 2 units (and all 6 edges) per iteration
+        let iters = run.iterations.len() as u64;
+        assert!(iters > 0);
+        assert_eq!(run.job.units_served, 2 * iters);
+        assert_eq!(run.job.edges_processed, edges.len() as u64 * iters);
+        assert_eq!(run.job.iterations as u64, iters);
+        assert_eq!(run.job.admitted_pass, 0);
+        assert_eq!(
+            run.job.units_served,
+            run.iterations.iter().map(|m| m.shards_processed as u64).sum::<u64>()
+        );
+        // nothing read from disk → no effective bytes to attribute
+        assert_eq!(run.job.effective_bytes_read, 0.0);
+        // per-pass compute attribution is recorded
+        assert!(run.iterations.iter().all(|m| m.job_compute_seconds >= 0.0));
+    }
+
+    #[test]
+    fn admission_defers_past_the_batch_cap() {
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let src = interval_source(n, &edges);
+        let apps: Vec<Sssp> = (0..MAX_BATCH_JOBS).map(|_| Sssp::new(0)).collect();
+        let jobs: Vec<BatchJob<'_>> = apps
+            .iter()
+            .map(|a| BatchJob { app: a, max_iters: 20 })
+            .collect();
+        let extra = Sssp::new(0);
+        let (v_solo, r_solo) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run(&src, &extra, n, &[], 20)
+            .unwrap();
+        let (outs, batch) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run_batch_interactive(&src, &jobs, n, &[], |pass, _running| {
+                if pass == 0 {
+                    vec![BatchJob { app: &extra, max_iters: 20 }]
+                } else {
+                    Vec::new()
+                }
+            })
+            .unwrap();
+        assert_eq!(outs.len(), MAX_BATCH_JOBS + 1);
+        assert_eq!(batch.jobs as usize, MAX_BATCH_JOBS + 1);
+        assert_eq!(batch.admissions_deferred, 1, "the 65th job must wait, once");
+        assert_eq!(batch.admitted_mid_batch, 1);
+        let (v_last, r_last) = &outs[MAX_BATCH_JOBS];
+        assert_eq!(v_last, &v_solo, "deferred job diverged from solo");
+        assert_eq!(r_last.iterations.len(), r_solo.iterations.len());
+        assert!(
+            r_last.job.admitted_pass > 0,
+            "the deferred job can only start after capacity frees"
+        );
+    }
+
+    #[test]
+    fn nth_member_picks_set_bits_in_order() {
+        let mask = 0b1011_0100u64;
+        assert_eq!(nth_member(mask, 0), 2);
+        assert_eq!(nth_member(mask, 1), 4);
+        assert_eq!(nth_member(mask, 2), 5);
+        assert_eq!(nth_member(mask, 3), 7);
+        assert_eq!(nth_member(1u64 << 63, 0), 63);
     }
 
     #[test]

@@ -21,13 +21,51 @@
 //! path); otherwise stages 2+3 run concurrently.  Per-stage busy time is
 //! measured so the adaptive prefetch mode can size the queue from the
 //! observed load-vs-compute rate.
+//!
+//! Scan-shared batches hand each loaded unit to several member jobs.
+//! [`FanOut`] controls how those (unit × job) sub-tasks execute: serially
+//! on the claiming worker (the long-worklist default, zero coordination),
+//! or — when the union worklist is shorter than the worker count and
+//! cores would otherwise idle — *split* across workers through a shared
+//! sub-task queue, each worker computing one (unit, job) pair (the item
+//! is `Clone`, an `Arc` for real shards, so the hand-off is cheap).
+//! Either way every sub-task writes job-isolated state, so results are
+//! bit-identical between the two execution shapes.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Mutex, TryLockError};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
+
+/// How a loaded unit's sub-tasks (one per member job of a scan-shared
+/// batch) are executed — see the module docs.
+#[derive(Clone, Copy, Debug)]
+pub struct FanOut<'a> {
+    /// Per-worklist-index sub-task counts (empty ⇒ one per unit, the
+    /// single-job shape).  A count of 0 skips the unit's compute.
+    pub counts: &'a [u32],
+    /// Split sub-tasks across workers instead of running them serially on
+    /// the worker that claimed the unit.  Worth it only when the worklist
+    /// is shorter than the worker pool; identical results either way.
+    pub split: bool,
+}
+
+impl FanOut<'_> {
+    /// No fanning: every unit is one task on its claiming worker.
+    pub const NONE: FanOut<'static> = FanOut { counts: &[], split: false };
+
+    #[inline]
+    fn of(&self, index: usize) -> u32 {
+        if self.counts.is_empty() {
+            1
+        } else {
+            self.counts[index]
+        }
+    }
+}
 
 /// One loaded unit travelling from an I/O thread to a compute worker:
 /// the worklist position, the scheduled unit id, and the load result
@@ -163,7 +201,14 @@ pub fn io_thread<T, L>(
 /// Aggregated result of one worklist pass.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct WorklistOutcome {
+    /// Sub-tasks (unit × member job) consumed successfully — equals
+    /// `units` outside scan-shared batches.
     pub processed: u32,
+    /// Distinct units delivered to the compute stage (each loaded once).
+    pub units: u32,
+    /// Sub-tasks dispatched through the shared fan-out queue (0 when
+    /// sub-tasks run serially on the claiming worker).
+    pub fanned: u32,
     pub prefetched: u32,
     pub ready_hits: u32,
     pub ready_misses: u32,
@@ -178,10 +223,15 @@ pub struct WorklistOutcome {
 /// (or inline on the workers when `depth == 0` — the sequential
 /// reference path), `consume` runs on `workers` compute workers, each
 /// with its own `mk_worker()` state (e.g. a [`super::RangeMarker`],
-/// flushed on drop).  The first error from either stage aborts the
-/// sweep and is returned after all threads join.
+/// flushed on drop).  Each loaded unit is consumed once per sub-task
+/// (`fan`, one per member job of a scan-shared batch; `sub` identifies
+/// which), serially on the claiming worker or split across workers —
+/// see [`FanOut`].  The first error from either stage aborts the sweep
+/// and is returned after all threads join.
+#[allow(clippy::too_many_arguments)]
 pub fn run_worklist<T, W, L, MK, C>(
     worklist: &[u32],
+    fan: FanOut<'_>,
     workers: usize,
     depth: usize,
     io_threads: usize,
@@ -190,25 +240,47 @@ pub fn run_worklist<T, W, L, MK, C>(
     consume: C,
 ) -> Result<WorklistOutcome>
 where
-    T: Send,
+    T: Send + Clone,
     L: Fn(u32) -> Result<T> + Sync,
     MK: Fn() -> W + Sync,
-    C: Fn(&mut W, usize, u32, T) -> Result<()> + Sync,
+    C: Fn(&mut W, usize, u32, u32, T) -> Result<()> + Sync,
 {
+    assert!(
+        fan.counts.is_empty() || fan.counts.len() == worklist.len(),
+        "fan counts must cover the worklist"
+    );
     let workers = workers.max(1);
     let pipelined = depth > 0 && io_threads > 0;
     let counters = PipelineCounters::default();
     let next_fetch = AtomicUsize::new(0);
     let processed = AtomicU32::new(0);
+    let units = AtomicU32::new(0);
+    let fanned = AtomicU32::new(0);
     let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
     let abort = AtomicBool::new(false);
+    // split mode: sub-tasks 1..k of a claimed unit wait here for any idle
+    // worker; `fan_pending` counts queued-but-unconsumed entries so
+    // workers know when the pass is truly drained
+    let fan_queue: Mutex<VecDeque<(usize, u32, u32, T)>> = Mutex::new(VecDeque::new());
+    let fan_pending = AtomicUsize::new(0);
 
-    // shared per-unit worker body (both acquisition modes): execute the
-    // unit or route its error to the barrier.  One copy, so the pipelined
-    // path can never drift from the sequential reference.
-    let consume_one = |state: &mut W, index: usize, id: u32, res: Result<T>| {
+    // first error wins and raises the abort flag (load and compute
+    // failures share this one path)
+    let record_err = |e: anyhow::Error| {
+        let mut fe = first_err.lock().unwrap();
+        if fe.is_none() {
+            *fe = Some(e);
+        }
+        abort.store(true, Ordering::Relaxed);
+    };
+    let record_err = &record_err;
+
+    // one sub-task: execute it or route its error to the barrier.  One
+    // copy shared by every acquisition mode, so the pipelined and split
+    // paths can never drift from the sequential reference.
+    let consume_one = |state: &mut W, index: usize, id: u32, sub: u32, item: T| {
         let t = Instant::now();
-        let outcome = res.and_then(|item| consume(state, index, id, item));
+        let outcome = consume(state, index, id, sub, item);
         counters
             .compute_busy_nanos
             .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -216,16 +288,73 @@ where
             Ok(()) => {
                 processed.fetch_add(1, Ordering::Relaxed);
             }
-            Err(e) => {
-                let mut fe = first_err.lock().unwrap();
-                if fe.is_none() {
-                    *fe = Some(e);
-                }
-                abort.store(true, Ordering::Relaxed);
-            }
+            Err(e) => record_err(e),
         }
     };
     let consume_one = &consume_one;
+
+    // a delivered unit: fan its sub-tasks out (split) or run them here
+    let handle_unit = |state: &mut W, index: usize, id: u32, res: Result<T>| {
+        units.fetch_add(1, Ordering::Relaxed);
+        let k = fan.of(index);
+        let item = match res {
+            Ok(item) => item,
+            Err(e) => {
+                record_err(e);
+                return;
+            }
+        };
+        if k == 0 {
+            return; // loaded for no member (shouldn't happen, but harmless)
+        }
+        if fan.split && k > 1 {
+            fan_pending.fetch_add((k - 1) as usize, Ordering::Relaxed);
+            fanned.fetch_add(k - 1, Ordering::Relaxed);
+            {
+                let mut q = fan_queue.lock().unwrap();
+                for sub in 1..k {
+                    q.push_back((index, id, sub, item.clone()));
+                }
+            }
+            consume_one(state, index, id, 0, item);
+        } else {
+            let mut item = Some(item);
+            for sub in 0..k {
+                if abort.load(Ordering::Relaxed) {
+                    break;
+                }
+                let it = if sub + 1 == k {
+                    item.take().expect("item moved once")
+                } else {
+                    item.as_ref().expect("item present").clone()
+                };
+                consume_one(state, index, id, sub, it);
+            }
+        }
+    };
+    let handle_unit = &handle_unit;
+
+    // pop one fanned sub-task and run it; returns false when none queued
+    let steal_fanned = |state: &mut W| -> bool {
+        if !fan.split {
+            return false;
+        }
+        let task = fan_queue.lock().unwrap().pop_front();
+        match task {
+            Some((index, id, sub, item)) => {
+                if !abort.load(Ordering::Relaxed) {
+                    consume_one(state, index, id, sub, item);
+                }
+                // decrement even when aborted so waiters can exit
+                fan_pending.fetch_sub(1, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    };
+    let steal_fanned = &steal_fanned;
+    let fan_drained =
+        || !fan.split || fan_pending.load(Ordering::Relaxed) == 0 || abort.load(Ordering::Relaxed);
 
     let (queue_opt, tx_opt) = if pipelined {
         let (q, tx) = ReadyQueue::with_sender(depth);
@@ -246,34 +375,71 @@ where
             // queue closes when the last I/O thread finishes (tx_opt was
             // moved into this branch and its clones die with the threads)
             for _ in 0..workers {
-                let (mk_worker, abort, counters) = (&mk_worker, &abort, &counters);
+                let (mk_worker, abort, counters, fan_drained) =
+                    (&mk_worker, &abort, &counters, &fan_drained);
                 scope.spawn(move || {
                     let _guard = AbortOnPanic(abort);
                     let mut state = mk_worker();
-                    while let Some((index, id, res)) = queue.next(counters) {
-                        if abort.load(Ordering::Relaxed) {
-                            // keep draining so I/O threads never block
-                            // forever on a full queue after a failure
+                    let mut queue_open = true;
+                    loop {
+                        // fanned sub-tasks first: ready compute, no I/O
+                        if steal_fanned(&mut state) {
                             continue;
                         }
-                        consume_one(&mut state, index, id, res);
+                        if queue_open {
+                            match queue.next(counters) {
+                                Some((index, id, res)) => {
+                                    if abort.load(Ordering::Relaxed) {
+                                        // keep draining so I/O threads never
+                                        // block forever on a full queue
+                                        continue;
+                                    }
+                                    handle_unit(&mut state, index, id, res);
+                                }
+                                None => queue_open = false,
+                            }
+                            continue;
+                        }
+                        // queue drained; wait out in-flight fanned work
+                        if fan_drained() {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_micros(50));
                     }
                 });
             }
         } else {
             for _ in 0..workers {
-                let (load, mk_worker, worklist, next_fetch, abort, counters) =
-                    (&load, &mk_worker, worklist, &next_fetch, &abort, &counters);
+                let (load, mk_worker, worklist, next_fetch, abort, counters, fan_drained) = (
+                    &load,
+                    &mk_worker,
+                    worklist,
+                    &next_fetch,
+                    &abort,
+                    &counters,
+                    &fan_drained,
+                );
                 scope.spawn(move || {
+                    // a panicking worker raises abort so siblings waiting
+                    // on fanned sub-tasks can exit and the scope can join
+                    let _guard = AbortOnPanic(abort);
                     let mut state = mk_worker();
                     loop {
+                        if steal_fanned(&mut state) {
+                            continue;
+                        }
                         // an error recorded by any worker stops the sweep
                         if abort.load(Ordering::Relaxed) {
                             break;
                         }
                         let i = next_fetch.fetch_add(1, Ordering::Relaxed);
                         if i >= worklist.len() {
-                            break;
+                            // worklist exhausted; wait out fanned work
+                            if fan_drained() {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_micros(50));
+                            continue;
                         }
                         let id = worklist[i];
                         let t = Instant::now();
@@ -281,7 +447,7 @@ where
                         counters
                             .io_busy_nanos
                             .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                        consume_one(&mut state, i, id, res);
+                        handle_unit(&mut state, i, id, res);
                     }
                 });
             }
@@ -292,6 +458,8 @@ where
     }
     Ok(WorklistOutcome {
         processed: processed.load(Ordering::Relaxed),
+        units: units.load(Ordering::Relaxed),
+        fanned: fanned.load(Ordering::Relaxed),
         prefetched: counters.prefetched.load(Ordering::Relaxed),
         ready_hits: counters.ready_hits.load(Ordering::Relaxed),
         ready_misses: counters.ready_misses.load(Ordering::Relaxed),
@@ -436,19 +604,23 @@ mod tests {
             let sum = TestCounter::new(0);
             let out = run_worklist(
                 &worklist,
+                FanOut::NONE,
                 4,
                 depth,
                 2,
                 |id| Ok(id + 1),
                 || (),
-                |_, index, id, item| {
+                |_, index, id, sub, item| {
                     assert_eq!(worklist[index], id);
+                    assert_eq!(sub, 0, "no fanning means one sub-task per unit");
                     sum.fetch_add(item, Ordering::Relaxed);
                     Ok(())
                 },
             )
             .unwrap();
             assert_eq!(out.processed, 53);
+            assert_eq!(out.units, 53);
+            assert_eq!(out.fanned, 0);
             assert_eq!(sum.load(Ordering::Relaxed), (1..=53).sum::<u32>());
             if depth == 0 {
                 assert_eq!(out.prefetched, 0, "inline loads are not prefetches");
@@ -465,6 +637,7 @@ mod tests {
         let worklist: Vec<u32> = (0..20).collect();
         let err = run_worklist(
             &worklist,
+            FanOut::NONE,
             2,
             2,
             1,
@@ -476,9 +649,101 @@ mod tests {
                 }
             },
             || (),
-            |_, _, _, _| Ok(()),
+            |_, _, _, _, _| Ok(()),
         )
         .unwrap_err();
         assert!(err.to_string().contains("load failed"));
+    }
+
+    #[test]
+    fn fanned_sub_tasks_each_run_exactly_once() {
+        // 3 units with fan counts 4/1/3: every (unit, sub) pair must be
+        // consumed exactly once — serial, split-pipelined, and
+        // split-inline all agree.  One unit is loaded per index either
+        // way (that's the scan-sharing I/O contract).
+        let worklist: Vec<u32> = vec![10, 20, 30];
+        let fan_counts = vec![4u32, 1, 3];
+        for (depth, split) in [(0usize, false), (3, false), (0, true), (3, true)] {
+            let seen: Mutex<Vec<(usize, u32)>> = Mutex::new(Vec::new());
+            let loads = TestCounter::new(0);
+            let out = run_worklist(
+                &worklist,
+                FanOut { counts: &fan_counts, split },
+                8,
+                depth,
+                2,
+                |id| {
+                    loads.fetch_add(1, Ordering::Relaxed);
+                    Ok(id)
+                },
+                || (),
+                |_, index, id, sub, item| {
+                    assert_eq!(worklist[index], id);
+                    assert_eq!(item, id);
+                    seen.lock().unwrap().push((index, sub));
+                    Ok(())
+                },
+            )
+            .unwrap();
+            let mut got = seen.into_inner().unwrap();
+            got.sort_unstable();
+            let want: Vec<(usize, u32)> = fan_counts
+                .iter()
+                .enumerate()
+                .flat_map(|(i, &k)| (0..k).map(move |s| (i, s)))
+                .collect();
+            assert_eq!(got, want, "depth {depth} split {split}");
+            assert_eq!(out.processed, 8, "depth {depth} split {split}");
+            assert_eq!(out.units, 3);
+            assert_eq!(loads.load(Ordering::Relaxed), 3, "each unit loads once");
+            if split {
+                assert_eq!(out.fanned, 5, "subs 1.. of units 0 and 2 are fanned");
+            } else {
+                assert_eq!(out.fanned, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn split_mode_routes_sub_task_errors() {
+        let worklist: Vec<u32> = vec![0, 1];
+        let err = run_worklist(
+            &worklist,
+            FanOut { counts: &[3, 3], split: true },
+            4,
+            2,
+            1,
+            |id| Ok(id),
+            || (),
+            |_, _, id, sub, _| {
+                if id == 1 && sub == 2 {
+                    anyhow::bail!("sub-task failed")
+                }
+                Ok(())
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("sub-task failed"));
+    }
+
+    #[test]
+    fn zero_fan_units_load_but_skip_compute() {
+        let worklist: Vec<u32> = vec![0, 1, 2];
+        let out = run_worklist(
+            &worklist,
+            FanOut { counts: &[1, 0, 2], split: false },
+            2,
+            0,
+            0,
+            |id| Ok(id),
+            || (),
+            |_, _, id, _, _| {
+                assert_ne!(id, 1, "fan count 0 must skip the unit");
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(out.processed, 3);
+        assert_eq!(out.units, 3);
     }
 }

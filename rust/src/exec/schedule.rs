@@ -185,6 +185,41 @@ mod tests {
     }
 
     #[test]
+    fn union_worklists_empty_member_schedules_cost_nothing() {
+        // a member with an empty schedule (converged frontier this pass)
+        // contributes no units but keeps its mask position
+        let (u, m) = union_worklists(&[vec![], vec![3, 8], vec![]]);
+        assert_eq!(u, vec![3, 8]);
+        assert_eq!(m, vec![0b010, 0b010]);
+        // all members empty: an empty pass
+        let (u, m) = union_worklists(&[vec![], vec![]]);
+        assert!(u.is_empty() && m.is_empty());
+    }
+
+    #[test]
+    fn union_worklists_mask_holds_exactly_64_jobs() {
+        // job 63 sets the top bit without overflow…
+        let lists: Vec<Vec<u32>> = (0..64)
+            .map(|j| if j == 63 { vec![9] } else { Vec::new() })
+            .collect();
+        let (u, m) = union_worklists(&lists);
+        assert_eq!(u, vec![9]);
+        assert_eq!(m, vec![1u64 << 63]);
+        // …and a shared unit across all 64 jobs fills the mask
+        let lists: Vec<Vec<u32>> = (0..64).map(|_| vec![5]).collect();
+        let (u, m) = union_worklists(&lists);
+        assert_eq!(u, vec![5]);
+        assert_eq!(m, vec![u64::MAX]);
+    }
+
+    #[test]
+    #[should_panic(expected = "membership masks hold at most 64 jobs")]
+    fn union_worklists_rejects_more_than_64_jobs() {
+        let lists: Vec<Vec<u32>> = (0..65).map(|_| vec![0]).collect();
+        let _ = union_worklists(&lists);
+    }
+
+    #[test]
     fn active_bits_sorted_and_deduplicated() {
         let bits = ActiveBits::new(300);
         for v in [299u32, 0, 64, 63, 65, 0, 130] {

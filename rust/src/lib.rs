@@ -13,7 +13,39 @@
 //! - **Runtime** — [`runtime`] loads the HLO artifacts through the PJRT C
 //!   API (`xla` crate) so Python never runs on the iteration path.
 //!
-//! Quickstart (see `examples/quickstart.rs`):
+//! ## Module map
+//!
+//! Data flows `storage → cache → exec → engine / baselines → runtime`
+//! (see `docs/ARCHITECTURE.md` for the full tour):
+//!
+//! - [`graph`] — edge lists, CSR, RMAT generators and the sim datasets.
+//! - [`prep`] — one-time preprocessing: partition into shards, build
+//!   Bloom filters, write the graph directory.
+//! - [`storage`] — the on-disk graph directory, the simulated [`storage::disk::Disk`]
+//!   (paper hardware profiles), and zero-copy [`storage::view::ShardView`]s.
+//! - [`compress`] / [`cache`] — the five cache modes (§2.4.2) and the
+//!   decode-once, verify-once compressed edge cache.
+//! - [`bloom`] — per-shard Bloom filters for selective scheduling (§2.4.1).
+//! - [`exec`] — the engine-agnostic execution core: one
+//!   schedule→prefetch→compute pipeline ([`exec::ExecCore`]), scan-shared
+//!   multi-job batches with interactive admission, (unit × job) fan-out
+//!   and per-job metering.
+//! - [`apps`] — vertex programs ([`apps::ShardKernel`]): PageRank, PPR,
+//!   SSSP, BFS, CC, widest path.
+//! - [`engine`] — the VSW engine ([`engine::VswEngine`]), GraphMP itself.
+//! - [`baselines`] — GraphChi-PSW, X-Stream-ESG, GridGraph-DSW and the
+//!   GraphMat-like in-memory engine on the same execution core.
+//! - [`cluster`] — analytical models of the distributed baselines
+//!   (Pregel+, PowerGraph/PowerLyra).
+//! - [`runtime`] — the scan-shared job scheduler ([`runtime::JobSet`])
+//!   and the PJRT artifact executor.
+//! - [`metrics`] / [`model`] / [`benchutil`] — run metrics (incl. per-job
+//!   [`metrics::JobMetrics`] accounting), the paper's I/O cost models,
+//!   and the bench harness behind `benches/fig*_*.rs`.
+//!
+//! ## Quickstart
+//!
+//! Library (see `examples/quickstart.rs`):
 //!
 //! ```no_run
 //! use graphmp::graph::datasets::Dataset;
@@ -28,6 +60,14 @@
 //! let mut engine = VswEngine::open(&dir, &disk, EngineConfig::default()).unwrap();
 //! let run = engine.run(&PageRank::new(), 10).unwrap();
 //! println!("10 iterations in {:.2}s", run.total_seconds());
+//! ```
+//!
+//! CLI (see the `README.md` quickstart for the full tour):
+//!
+//! ```text
+//! graphmp preprocess --dataset twitter-sim --dir /tmp/g --small
+//! graphmp run --dir /tmp/g --app pagerank --iters 10
+//! graphmp run --dir /tmp/g --app ppr --jobs 8 --arrivals every:2
 //! ```
 
 pub mod apps;

@@ -63,7 +63,16 @@ USAGE:
                      [--jobs N]  (scan-shared batch: N concurrent queries
                                   share every shard pass; seeded apps offset
                                   --source by the job index, e.g. N PPR
-                                  reset vectors — disk I/O per job ~1/N)
+                                  reset vectors — disk I/O per job ~1/N;
+                                  N > 64 drains as multiple batches)
+                     [--arrivals a0,a1,..|every:K]
+                                 (staggered arrival schedule: job j joins
+                                  its batch at pass a_j — admitted mid-batch
+                                  without disturbing running jobs; every:K
+                                  means job j arrives at pass j*K)
+                     [--no-fanout] (keep member jobs serial per shard even
+                                  when the worklist is shorter than the
+                                  worker pool)
                      [--backend native|pjrt] [--artifacts DIR]
                      [--cache-mode cache-0..4] [--cache-mb N] [--no-selective]
                      [--workers N] [--disk hdd|ssd|none] [--no-prefetch]
@@ -203,6 +212,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             .parse_opt_or("memo-mb", defaults.decode_memo_budget / (1024 * 1024))?
             * 1024
             * 1024,
+        fan_out: !args.flag("no-fanout"),
         backend,
     };
     let mut engine = VswEngine::open(&dir, &disk, cfg)?;
@@ -214,7 +224,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         engine.cache().mode().name(),
     );
     let jobs: u32 = args.parse_opt_or("jobs", 1u32)?;
-    if jobs > 1 {
+    anyhow::ensure!(jobs >= 1, "--jobs must be at least 1 (got 0)");
+    if jobs > 1 || args.opt("arrivals").is_some() {
         return run_batched(args, &mut engine, jobs, iters);
     }
     let run = engine.run(app.as_ref(), iters)?;
@@ -241,22 +252,63 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--arrivals`: either a comma-separated list of per-job arrival
+/// passes (length must equal `--jobs`) or `every:K` for a uniform
+/// stagger (job j arrives at pass j·K).
+fn parse_arrivals(spec: &str, jobs: u32) -> Result<Vec<u32>> {
+    if let Some(step) = spec.strip_prefix("every:") {
+        let k: u32 = step
+            .parse()
+            .with_context(|| format!("bad --arrivals stagger step {step}"))?;
+        return Ok((0..jobs).map(|j| j.saturating_mul(k)).collect());
+    }
+    let passes: Vec<u32> = spec
+        .split(',')
+        .map(|p| {
+            p.trim()
+                .parse::<u32>()
+                .with_context(|| format!("bad --arrivals entry {p}"))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(
+        passes.len() == jobs as usize,
+        "--arrivals lists {} passes for --jobs {jobs}",
+        passes.len()
+    );
+    Ok(passes)
+}
+
 /// `graphmp run --jobs N`: submit N concurrent queries through the
 /// scan-shared job runtime — one shard pass per iteration serves the
-/// whole batch, so effective disk I/O per query falls as ~1/N.
+/// whole batch, so effective disk I/O per query falls as ~1/N.  With
+/// `--arrivals`, jobs join mid-batch at their scheduled pass instead of
+/// all starting together.
 fn run_batched(args: &Args, engine: &mut VswEngine, jobs: u32, iters: u32) -> Result<()> {
+    use graphmp::exec::MAX_BATCH_JOBS;
     use graphmp::runtime::{JobSet, JobSpec, JobStatus};
+    if jobs as usize > MAX_BATCH_JOBS {
+        println!(
+            "note: {jobs} jobs exceed the {MAX_BATCH_JOBS}-job batch cap; \
+             draining as {} scan-shared batches",
+            (jobs as usize).div_ceil(MAX_BATCH_JOBS)
+        );
+    }
+    let arrivals = match args.opt("arrivals") {
+        Some(spec) => parse_arrivals(spec, jobs)?,
+        None => vec![0; jobs as usize],
+    };
     let mut set = JobSet::new();
     for j in 0..jobs {
         let app = app_of_job(args, j)?;
         let label = format!("{}#{j}", app.name());
-        set.submit(JobSpec { label, app, max_iters: iters });
+        set.submit_at(arrivals[j as usize], JobSpec { label, app, max_iters: iters });
     }
     let report = set.run_all(engine)?;
     for job in set.jobs() {
         let run = job.run.as_ref().expect("run_all fills every job");
         println!(
-            "job {:>3} {:<12} {:>9} iters={:<3} read/job={}",
+            "job {:>3} {:<12} {:>9} arrive={:<3} iters={:<3} compute={:>8.3}ms \
+             shards={:<5} edges={:<9} read/job={}",
             job.id,
             job.spec.label,
             match job.status {
@@ -264,8 +316,12 @@ fn run_batched(args: &Args, engine: &mut VswEngine, jobs: u32, iters: u32) -> Re
                 JobStatus::IterLimit => "iter-limit",
                 _ => "unfinished",
             },
+            run.job.admitted_pass,
             run.iterations.len(),
-            human_bytes(report.bytes_read() / jobs as u64),
+            run.job.compute.as_secs_f64() * 1e3,
+            run.job.units_served,
+            human_count(run.job.edges_processed),
+            human_bytes(run.job.effective_bytes_read as u64),
         );
     }
     for b in &report.batches {
@@ -278,6 +334,20 @@ fn run_batched(args: &Args, engine: &mut VswEngine, jobs: u32, iters: u32) -> Re
         report.shard_loads_amortized(),
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_parse_list_and_stagger() {
+        assert_eq!(parse_arrivals("0,2,5", 3).unwrap(), vec![0, 2, 5]);
+        assert_eq!(parse_arrivals("every:3", 4).unwrap(), vec![0, 3, 6, 9]);
+        assert!(parse_arrivals("0,2", 3).is_err(), "length must match --jobs");
+        assert!(parse_arrivals("every:x", 2).is_err());
+        assert!(parse_arrivals("1,zap", 2).is_err());
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

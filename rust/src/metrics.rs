@@ -42,6 +42,15 @@ pub struct IterationMetrics {
     /// (unit, job) computes this pass: each loaded unit counts once per
     /// member job it was handed to (== `shards_processed` solo).
     pub shard_servings: u32,
+    /// (unit, job) sub-tasks this pass that were split out to idle
+    /// workers instead of running serially on the claiming worker (PR 5
+    /// fan-out; 0 outside short-worklist batch passes).
+    pub shard_servings_fanned: u32,
+    /// *This job's* compute seconds inside the pass — the sum of its
+    /// per-(unit, job) kernel times.  Unlike `wall` (shared across the
+    /// batch), this is per-job attribution: the basis for billing heavy
+    /// queries fairly.
+    pub job_compute_seconds: f64,
     pub io: IoSnapshot,
     pub cache: CacheSnapshot,
 }
@@ -66,6 +75,44 @@ impl IterationMetrics {
     }
 }
 
+/// Per-job accounting of a scan-shared batch (PR 5): what *this* job
+/// consumed out of the shared passes.  Pass-level `wall`/`io` records
+/// are shared by every member; this is the per-job attribution a
+/// serving scheduler can bill — compute seconds actually spent in the
+/// job's kernels, units and edges served to it, and its servings-weighted
+/// share of the batch's disk bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct JobMetrics {
+    /// Batch pass at which the job was admitted (0 = founding member;
+    /// > 0 = admitted mid-batch at that pass boundary).
+    pub admitted_pass: u32,
+    /// Job-local iterations run (its own count, not the batch's).
+    pub iterations: u32,
+    /// Wall time spent inside this job's per-(unit, job) kernel computes,
+    /// summed across all passes.
+    pub compute: Duration,
+    /// Units (shards) served to this job across all passes.
+    pub units_served: u64,
+    /// Edges processed for this job (0 when the engine doesn't track
+    /// per-unit edge counts).
+    pub edges_processed: u64,
+    /// This job's servings-weighted share of the batch's disk bytes —
+    /// the per-job effective I/O cost under scan sharing.
+    pub effective_bytes_read: f64,
+}
+
+impl JobMetrics {
+    /// Edges per compute second — the job's kernel throughput.
+    pub fn edges_per_compute_second(&self) -> f64 {
+        let s = self.compute.as_secs_f64();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.edges_processed as f64 / s
+        }
+    }
+}
+
 /// Whole-run summary.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
@@ -78,6 +125,9 @@ pub struct RunMetrics {
     pub total_sim_disk_seconds: f64,
     /// Simulated disk seconds hidden behind compute across all iterations.
     pub total_overlapped_sim_seconds: f64,
+    /// Per-job attribution of this run within its batch (solo runs are
+    /// the N=1 batch, so the meter is filled there too).
+    pub job: JobMetrics,
 }
 
 impl RunMetrics {
@@ -108,11 +158,17 @@ impl RunMetrics {
 /// Aggregate record of one scan-shared batch (PR 4): N jobs sharing
 /// every shard pass.  The headline quantity is the amortization — how
 /// many job-servings each loaded unit (and its disk bytes) paid for.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct BatchMetrics {
-    /// Jobs in the batch.
+    /// Jobs in the batch (founding members + mid-batch admissions).
     pub jobs: u32,
-    /// Shard passes run (the max over member jobs' iteration counts).
+    /// Of those, jobs admitted at a pass boundary > 0 (PR 5 interactive
+    /// admission).
+    pub admitted_mid_batch: u32,
+    /// Admissions that had to wait at least one pass boundary because the
+    /// batch was already at [`crate::exec::MAX_BATCH_JOBS`] running jobs.
+    pub admissions_deferred: u32,
+    /// Shard passes run (the max over member jobs' iteration spans).
     pub passes: u32,
     /// Union-worklist units loaded across all passes (each unit's I/O —
     /// real or modelled — was charged exactly once per pass).
@@ -120,10 +176,16 @@ pub struct BatchMetrics {
     /// (unit, job) computes across all passes: what N back-to-back solo
     /// runs would have loaded.
     pub shard_servings: u64,
+    /// Of those, sub-tasks split out to idle workers by the (unit × job)
+    /// fan-out (PR 5); the rest ran serially on the claiming worker.
+    pub shard_servings_fanned: u64,
     /// Disk bytes read by the whole batch.
     pub bytes_read: u64,
     pub total_wall: Duration,
     pub total_sim_disk_seconds: f64,
+    /// Per-job attribution, in admission order (founding members in
+    /// submission order, then mid-batch admissions as they arrived).
+    pub per_job: Vec<JobMetrics>,
 }
 
 impl BatchMetrics {
@@ -242,6 +304,17 @@ mod tests {
         let z = BatchMetrics::default();
         assert_eq!(z.shard_loads_amortized(), 0.0);
         assert_eq!(z.effective_bytes_read_per_job(), 0.0);
+    }
+
+    #[test]
+    fn job_metrics_throughput_math() {
+        let j = JobMetrics {
+            compute: Duration::from_secs(2),
+            edges_processed: 1000,
+            ..Default::default()
+        };
+        assert!((j.edges_per_compute_second() - 500.0).abs() < 1e-9);
+        assert_eq!(JobMetrics::default().edges_per_compute_second(), 0.0);
     }
 
     #[test]

@@ -6,10 +6,19 @@
 //! scheduling + compressed cache, §2.4) is paid once *per query*.
 //! [`JobSet`] is the front door to scan sharing: callers submit jobs
 //! (app + iteration budget), and [`run_all`](JobSet::run_all) drains the
-//! queue in batches through [`crate::engine::VswEngine::run_jobs`], so
-//! one shard pass per iteration serves every member job.  A job's
-//! lifecycle is `Queued → Running → Converged | IterLimit`; per-job
-//! results are bit-identical to solo runs (`rust/tests/scan_sharing.rs`).
+//! queue in batches through
+//! [`crate::engine::VswEngine::run_jobs_interactive`], so one shard pass
+//! per iteration serves every member job.  A job's lifecycle is
+//! `Queued → Running → Converged | IterLimit`; per-job results are
+//! bit-identical to solo runs (`rust/tests/scan_sharing.rs`).
+//!
+//! Interactive arrivals (PR 5): [`submit_at`](JobSet::submit_at) tags a
+//! job with an arrival pass; when its batch runs, the job is admitted at
+//! that pass boundary — warm-started mid-batch without disturbing
+//! running jobs — replaying a staggered arrival schedule (CLI:
+//! `graphmp run --jobs N --arrivals <spec>`).  If every running job
+//! finishes before an arrival's pass, the batch fast-forwards to it
+//! rather than ending with work still queued.
 
 use anyhow::Result;
 
@@ -47,6 +56,9 @@ pub struct Job {
     pub id: JobId,
     pub spec: JobSpec,
     pub status: JobStatus,
+    /// Batch pass boundary the job asks to arrive at (0 = founding
+    /// member of its batch; set by [`JobSet::submit_at`]).
+    pub arrive_pass: u32,
     pub values: Option<Vec<f32>>,
     pub run: Option<RunMetrics>,
 }
@@ -66,12 +78,16 @@ impl BatchReport {
         let mut agg = BatchMetrics::default();
         for b in &self.batches {
             agg.jobs += b.jobs;
+            agg.admitted_mid_batch += b.admitted_mid_batch;
+            agg.admissions_deferred += b.admissions_deferred;
             agg.passes += b.passes;
             agg.shard_loads += b.shard_loads;
             agg.shard_servings += b.shard_servings;
+            agg.shard_servings_fanned += b.shard_servings_fanned;
             agg.bytes_read += b.bytes_read;
             agg.total_wall += b.total_wall;
             agg.total_sim_disk_seconds += b.total_sim_disk_seconds;
+            agg.per_job.extend(b.per_job.iter().copied());
         }
         agg
     }
@@ -117,10 +133,28 @@ impl JobSet {
         JobSet { jobs: Vec::new(), batch_cap: batch_cap.clamp(1, MAX_BATCH_JOBS) }
     }
 
-    /// Enqueue a job; it runs on the next [`run_all`](Self::run_all).
+    /// Enqueue a job; it runs on the next [`run_all`](Self::run_all) as a
+    /// founding member of its batch.
     pub fn submit(&mut self, spec: JobSpec) -> JobId {
+        self.submit_at(0, spec)
+    }
+
+    /// Enqueue a job that *arrives* at batch pass `arrive_pass`: when its
+    /// batch runs, the job is admitted mid-batch at that pass boundary
+    /// (warm-started, running jobs undisturbed).  Arrival passes are
+    /// relative *within the batch*: the earliest arrival anchors pass 0
+    /// (so `3,5` behaves as `0,2`), and if all running jobs finish before
+    /// an arrival is due, the batch fast-forwards and admits it early.
+    pub fn submit_at(&mut self, arrive_pass: u32, spec: JobSpec) -> JobId {
         let id = self.jobs.len() as JobId;
-        self.jobs.push(Job { id, spec, status: JobStatus::Queued, values: None, run: None });
+        self.jobs.push(Job {
+            id,
+            spec,
+            status: JobStatus::Queued,
+            arrive_pass,
+            values: None,
+            run: None,
+        });
         id
     }
 
@@ -147,9 +181,14 @@ impl JobSet {
     }
 
     /// Drain the queue: batches of at most `batch_cap` queued jobs run
-    /// scan-shared through `engine` until none remain.  On error the
-    /// current batch's jobs are left `Running` (their results unset) and
-    /// the error is returned.
+    /// scan-shared through `engine` until none remain.  Queues larger
+    /// than the cap split into successive batches (never truncated).
+    /// Within a batch, jobs submitted with [`submit_at`](Self::submit_at)
+    /// are admitted mid-batch at their arrival pass.  A batch whose
+    /// members fail pre-validation (e.g. a weighted app on an unweighted
+    /// dir) errors before anything runs, leaving its jobs `Queued`; an
+    /// execution error leaves the current batch's jobs `Running` (their
+    /// results unset) and is returned.
     pub fn run_all(&mut self, engine: &mut VswEngine) -> Result<BatchReport> {
         let mut report = BatchReport::default();
         loop {
@@ -164,19 +203,82 @@ impl JobSet {
             if batch.is_empty() {
                 break;
             }
+            // pre-validate every member against the graph dir *before*
+            // anything runs: a mid-batch arrival failing admission would
+            // otherwise burn (and then discard) the whole batch's work
+            for &i in &batch {
+                let app = self.jobs[i].spec.app.as_ref();
+                anyhow::ensure!(
+                    !app.needs_weights() || engine.property().weighted,
+                    "{} (job {}) needs a weighted graph dir",
+                    app.name(),
+                    self.jobs[i].id
+                );
+            }
             for &i in &batch {
                 self.jobs[i].status = JobStatus::Running;
             }
-            let specs: Vec<BatchJob<'_>> = batch
+            // Arrival passes are *relative within the batch*: rebase on
+            // the earliest member so the batch always has founders — a
+            // founderless schedule (`--arrivals 3,5`) or an overflow
+            // chunk whose members all carry large absolute passes would
+            // otherwise drip in serially with no scan sharing.  The
+            // earliest arrivals start at pass 0; the rest join at their
+            // offset, in (arrive_pass, id) order.
+            let base = batch
                 .iter()
-                .map(|&i| BatchJob {
-                    app: self.jobs[i].spec.app.as_ref(),
-                    max_iters: self.jobs[i].spec.max_iters,
-                })
+                .map(|&i| self.jobs[i].arrive_pass)
+                .min()
+                .unwrap_or(0);
+            let founders: Vec<usize> = batch
+                .iter()
+                .copied()
+                .filter(|&i| self.jobs[i].arrive_pass == base)
                 .collect();
-            let (outs, metrics) = engine.run_jobs(&specs)?;
+            let mut arrivals: Vec<usize> = batch
+                .iter()
+                .copied()
+                .filter(|&i| self.jobs[i].arrive_pass > base)
+                .collect();
+            arrivals.sort_by_key(|&i| (self.jobs[i].arrive_pass, i));
+
+            let jobs_ref: &[Job] = &self.jobs;
+            let as_batch_job = |i: usize| BatchJob {
+                app: jobs_ref[i].spec.app.as_ref(),
+                max_iters: jobs_ref[i].spec.max_iters,
+            };
+            let specs: Vec<BatchJob<'_>> = founders.iter().map(|&i| as_batch_job(i)).collect();
+            let mut cursor = 0usize;
+            let intake = |pass: u32, running: usize| {
+                let mut out = Vec::new();
+                while cursor < arrivals.len() {
+                    let i = arrivals[cursor];
+                    let due = jobs_ref[i].arrive_pass - base <= pass;
+                    // fast-forward: nothing running and nothing due —
+                    // release the earliest arrival so the batch doesn't
+                    // end with work still queued
+                    if due || (running == 0 && out.is_empty()) {
+                        out.push(as_batch_job(i));
+                        cursor += 1;
+                    } else {
+                        break;
+                    }
+                }
+                out
+            };
+            // no staggered arrivals → the closed batch path (skips the
+            // interactive-only degree-array materialization)
+            let (outs, metrics) = if arrivals.is_empty() {
+                engine.run_jobs(&specs)?
+            } else {
+                engine.run_jobs_interactive(&specs, intake)?
+            };
             drop(specs);
-            for (&i, (values, run)) in batch.iter().zip(outs) {
+            // outputs come back in admission order: founders first, then
+            // arrivals in the order the intake released them
+            let order: Vec<usize> = founders.iter().chain(&arrivals).copied().collect();
+            debug_assert_eq!(order.len(), outs.len());
+            for (&i, (values, run)) in order.iter().zip(outs) {
                 let job = &mut self.jobs[i];
                 job.status = if run.converged {
                     JobStatus::Converged
@@ -212,6 +314,41 @@ mod tests {
         assert_eq!(set.job(b).unwrap().spec.label, "ppr");
         assert_eq!(set.status(99), None);
         assert!(set.take_values(a).is_none(), "no values before running");
+    }
+
+    #[test]
+    fn submit_at_records_arrival_pass() {
+        let mut set = JobSet::new();
+        let a = set.submit(spec("pr", Box::new(PageRank::new()), 5));
+        let b = set.submit_at(3, spec("ppr", Box::new(Ppr::new(1)), 5));
+        assert_eq!(set.job(a).unwrap().arrive_pass, 0, "submit is arrival 0");
+        assert_eq!(set.job(b).unwrap().arrive_pass, 3);
+        assert_eq!(set.status(b), Some(JobStatus::Queued));
+        assert_eq!(set.queued(), 2, "arrivals count as queued until their batch runs");
+    }
+
+    #[test]
+    fn report_aggregates_interactive_counters() {
+        let mut r = BatchReport::default();
+        r.batches.push(BatchMetrics {
+            jobs: 3,
+            admitted_mid_batch: 2,
+            admissions_deferred: 1,
+            shard_servings_fanned: 4,
+            per_job: vec![Default::default(); 3],
+            ..Default::default()
+        });
+        r.batches.push(BatchMetrics {
+            jobs: 1,
+            per_job: vec![Default::default()],
+            ..Default::default()
+        });
+        let agg = r.aggregate();
+        assert_eq!(agg.jobs, 4);
+        assert_eq!(agg.admitted_mid_batch, 2);
+        assert_eq!(agg.admissions_deferred, 1);
+        assert_eq!(agg.shard_servings_fanned, 4);
+        assert_eq!(agg.per_job.len(), 4);
     }
 
     #[test]

@@ -6,6 +6,11 @@
 //! never change any job's results, iteration count or activation
 //! trajectory.  Runs in debug and `--release` in CI (the f32 kernel
 //! paths are codegen-sensitive).
+//!
+//! PR 5 extends the gate to the interactive scheduler: a job admitted
+//! *mid-batch* must be bit-identical to the same job run solo from its
+//! admission iteration, already-running jobs must be unperturbed by the
+//! admission, and the (unit × job) fan-out must not change any result.
 
 use graphmp::apps::{PageRank, Ppr, Sssp, VertexProgram, Widest};
 use graphmp::compress::CacheMode;
@@ -205,6 +210,224 @@ fn scan_sharing_amortizes_mode0_disk_reads() {
         "identical worklists: batched I/O must be exactly 1/N of sequential"
     );
     assert!((batch.shard_loads_amortized() - n_jobs as f64).abs() < 1e-9);
+}
+
+#[test]
+fn job_admitted_mid_batch_is_bit_identical_and_non_disruptive() {
+    let (dir, disk) = prep_graph("admission");
+    let mode = CacheMode::M1Raw;
+    let admit_at = 4u32;
+    let (v_pr_solo, r_pr_solo) = solo(&dir, &disk, mode, &PageRank::new(), 10);
+    let (v_ppr_solo, r_ppr_solo) = solo(&dir, &disk, mode, &Ppr::new(7), 8);
+
+    let ppr = Ppr::new(7);
+    let (outs, batch) = engine(&dir, &disk, mode)
+        .run_jobs_interactive(
+            &[BatchJob { app: &PageRank::new(), max_iters: 10 }],
+            |pass, _running| {
+                if pass == admit_at {
+                    vec![BatchJob { app: &ppr, max_iters: 8 }]
+                } else {
+                    Vec::new()
+                }
+            },
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 2);
+    let (v_pr, r_pr) = &outs[0];
+    let (v_ppr, r_ppr) = &outs[1];
+
+    // acceptance: the admitted job's values are bit-identical to a solo
+    // run from its admission iteration (its own clock starts at 0)…
+    assert_eq!(v_ppr, &v_ppr_solo, "admitted PPR diverged from solo");
+    assert_eq!(r_ppr.iterations.len(), r_ppr_solo.iterations.len());
+    assert_eq!(r_ppr.iterations[0].iteration, 0, "job-local iteration clock");
+    assert_eq!(r_ppr.job.admitted_pass, admit_at);
+    // …and the already-running job is bit-identical to its own solo run
+    assert_eq!(v_pr, &v_pr_solo, "admission perturbed the running job");
+    assert_eq!(r_pr.iterations.len(), r_pr_solo.iterations.len());
+    for (a, b) in r_pr.iterations.iter().zip(&r_pr_solo.iterations) {
+        assert_eq!(a.active_vertices, b.active_vertices);
+        assert_eq!(a.shards_processed, b.shards_processed);
+        assert_eq!(a.shards_skipped, b.shards_skipped);
+    }
+    assert_eq!(batch.jobs, 2);
+    assert_eq!(batch.admitted_mid_batch, 1);
+    let ppr_span = admit_at + r_ppr_solo.iterations.len() as u32;
+    assert_eq!(
+        batch.passes,
+        ppr_span.max(r_pr_solo.iterations.len() as u32),
+        "batch spans the offset union of both jobs' spans"
+    );
+    // shared passes serve both jobs
+    let shared = &r_pr.iterations[admit_at as usize];
+    assert_eq!(shared.jobs_in_pass, 2, "pass {admit_at} runs both jobs");
+    // per-job metering is populated for both members, and the per-job
+    // effective bytes partition the batch's bytes
+    assert!(r_pr.job.units_served > 0);
+    assert!(r_ppr.job.units_served > 0);
+    assert!(r_pr.job.edges_processed > 0);
+    let attributed: f64 = batch.per_job.iter().map(|j| j.effective_bytes_read).sum();
+    assert!(
+        (attributed - batch.bytes_read as f64).abs() < 1.0,
+        "attributed {attributed} vs read {}",
+        batch.bytes_read
+    );
+}
+
+#[test]
+fn jobset_arrival_schedule_replays_mid_batch() {
+    let (dir, disk) = prep_graph("arrivals");
+    let mode = CacheMode::M1Raw;
+    let (v_pr_solo, r_pr_solo) = solo(&dir, &disk, mode, &PageRank::new(), 9);
+    let (v_ppr_solo, r_ppr_solo) = solo(&dir, &disk, mode, &Ppr::new(5), 6);
+    let (v_sssp_solo, r_sssp_solo) = solo(&dir, &disk, mode, &Sssp::new(0), 100);
+    assert!(r_sssp_solo.converged);
+    let expect = |r: &RunMetrics| {
+        if r.converged {
+            JobStatus::Converged
+        } else {
+            JobStatus::IterLimit
+        }
+    };
+
+    let mut set = JobSet::new();
+    let a = set.submit(JobSpec {
+        label: "pr".into(),
+        app: Box::new(PageRank::new()),
+        max_iters: 9,
+    });
+    let b = set.submit_at(
+        3,
+        JobSpec { label: "ppr".into(), app: Box::new(Ppr::new(5)), max_iters: 6 },
+    );
+    let c = set.submit_at(
+        5,
+        JobSpec { label: "sssp".into(), app: Box::new(Sssp::new(0)), max_iters: 100 },
+    );
+    let mut eng = engine(&dir, &disk, mode);
+    let report = set.run_all(&mut eng).unwrap();
+    assert_eq!(report.batches.len(), 1, "arrivals join the same batch");
+    assert_eq!(report.batches[0].admitted_mid_batch, 2);
+    assert_eq!(set.status(a), Some(expect(&r_pr_solo)));
+    assert_eq!(set.status(b), Some(expect(&r_ppr_solo)));
+    assert_eq!(set.status(c), Some(JobStatus::Converged));
+    assert_eq!(set.take_values(a).unwrap(), v_pr_solo);
+    assert_eq!(set.take_values(b).unwrap(), v_ppr_solo);
+    assert_eq!(set.take_values(c).unwrap(), v_sssp_solo);
+    let run_b = set.job(b).unwrap().run.as_ref().unwrap();
+    assert_eq!(run_b.job.admitted_pass, 3);
+    let run_c = set.job(c).unwrap().run.as_ref().unwrap();
+    assert_eq!(run_c.job.admitted_pass, 5);
+    assert_eq!(run_c.iterations.len(), r_sssp_solo.iterations.len());
+}
+
+#[test]
+fn invalid_arrival_fails_fast_without_burning_the_batch() {
+    // weighted app queued against an unweighted dir: run_all must error
+    // during pre-validation — before any pass runs — leaving every job
+    // Queued instead of burning (and discarding) the batch's work
+    let g = rmat(9, 5_000, 2028, RmatParams::default());
+    let root = std::env::temp_dir().join("graphmp_scan_prevalidate");
+    let _ = std::fs::remove_dir_all(&root);
+    let disk = Disk::unthrottled();
+    let cfg = PrepConfig { edges_per_shard: 2048, weighted: false, ..Default::default() };
+    let (dir, _) = preprocess_into(&g, &root, &disk, cfg).unwrap();
+    let mut eng = VswEngine::open(&dir, &disk, EngineConfig::default()).unwrap();
+    let mut set = JobSet::new();
+    let a = set.submit(JobSpec {
+        label: "pr".into(),
+        app: Box::new(PageRank::new()),
+        max_iters: 5,
+    });
+    let b = set.submit_at(
+        3,
+        JobSpec { label: "sssp".into(), app: Box::new(Sssp::new(0)), max_iters: 10 },
+    );
+    let before = disk.snapshot();
+    let err = set.run_all(&mut eng).unwrap_err();
+    assert!(err.to_string().contains("weighted graph dir"), "{err}");
+    assert_eq!(set.status(a), Some(JobStatus::Queued), "nothing may start");
+    assert_eq!(set.status(b), Some(JobStatus::Queued));
+    assert_eq!(
+        disk.snapshot().since(&before).bytes_read,
+        0,
+        "pre-validation must reject before any shard pass runs"
+    );
+}
+
+#[test]
+fn founderless_arrival_schedule_rebases_to_pass_zero() {
+    // no job asks for pass 0 (`--arrivals 3,5`): the batch must rebase on
+    // the earliest arrival — anchor at pass 0, second job at offset 2 —
+    // instead of dripping jobs in serially with no scan sharing
+    let (dir, disk) = prep_graph("rebase");
+    let mode = CacheMode::M1Raw;
+    let (v_pr_solo, _) = solo(&dir, &disk, mode, &PageRank::new(), 9);
+    let (v_ppr_solo, _) = solo(&dir, &disk, mode, &Ppr::new(5), 6);
+
+    let mut set = JobSet::new();
+    let a = set.submit_at(
+        3,
+        JobSpec { label: "pr".into(), app: Box::new(PageRank::new()), max_iters: 9 },
+    );
+    let b = set.submit_at(
+        5,
+        JobSpec { label: "ppr".into(), app: Box::new(Ppr::new(5)), max_iters: 6 },
+    );
+    let mut eng = engine(&dir, &disk, mode);
+    let report = set.run_all(&mut eng).unwrap();
+    assert_eq!(report.batches.len(), 1);
+    let run_a = set.job(a).unwrap().run.as_ref().unwrap();
+    let run_b = set.job(b).unwrap().run.as_ref().unwrap();
+    assert_eq!(run_a.job.admitted_pass, 0, "earliest arrival anchors the batch");
+    assert_eq!(run_b.job.admitted_pass, 2, "5 - 3 = offset 2 after rebasing");
+    assert_eq!(report.batches[0].admitted_mid_batch, 1);
+    // rebasing preserves scan sharing: the overlapping passes serve both
+    assert!(report.batches[0].shard_servings > report.batches[0].shard_loads);
+    assert_eq!(set.take_values(a).unwrap(), v_pr_solo);
+    assert_eq!(set.take_values(b).unwrap(), v_ppr_solo);
+}
+
+#[test]
+fn fan_out_preserves_results_when_jobs_exceed_units() {
+    // few units, many jobs: prep with one giant shard so the union
+    // worklist (1) is far below the worker count (8) and the (unit × job)
+    // fan-out engages; results must be bit-identical to serial member
+    // compute
+    let g = rmat(10, 14_000, 2027, RmatParams::default());
+    let root = std::env::temp_dir().join("graphmp_scan_fanout");
+    let _ = std::fs::remove_dir_all(&root);
+    let disk = Disk::unthrottled();
+    let cfg = PrepConfig {
+        edges_per_shard: 1 << 20,
+        max_rows_per_shard: 1 << 20,
+        weighted: false,
+        ..Default::default()
+    };
+    let (dir, _) = preprocess_into(&g, &root, &disk, cfg).unwrap();
+    let seeds = [1u32, 5, 9, 13, 17, 21];
+    let apps: Vec<Ppr> = seeds.iter().map(|&s| Ppr::new(s)).collect();
+    let run_with = |fan_out: bool| {
+        let jobs: Vec<BatchJob<'_>> =
+            apps.iter().map(|a| BatchJob { app: a, max_iters: 6 }).collect();
+        let cfg = EngineConfig {
+            workers: 8,
+            fan_out,
+            cache_mode: Some(CacheMode::M1Raw),
+            ..Default::default()
+        };
+        let mut eng = VswEngine::open(&dir, &disk, cfg).unwrap();
+        eng.run_jobs(&jobs).unwrap()
+    };
+    let (o_fan, b_fan) = run_with(true);
+    let (o_serial, b_serial) = run_with(false);
+    for (j, ((v1, _), (v2, _))) in o_fan.iter().zip(&o_serial).enumerate() {
+        assert_eq!(v1, v2, "job {j} (seed {}): fan-out changed results", seeds[j]);
+    }
+    assert!(b_fan.shard_servings_fanned > 0, "jobs >> units must fan out sub-tasks");
+    assert_eq!(b_serial.shard_servings_fanned, 0);
+    assert_eq!(b_fan.shard_servings, b_serial.shard_servings);
 }
 
 #[test]

@@ -97,6 +97,7 @@ impl BaselineConfig {
             // the baselines model batch-free systems; the fan-out only
             // engages in scan-shared batches, which they never run
             fan_out: false,
+            isolate_failures: false,
         }
     }
 }

@@ -100,6 +100,11 @@ pub struct EngineConfig {
     /// pool (CLI: `--no-fanout` turns it off).  Bit-identical results
     /// either way; off reproduces the PR-4 serial member compute.
     pub fan_out: bool,
+    /// Contain hard per-shard I/O or compute errors to the member jobs
+    /// they hit (those jobs end `Failed`) instead of aborting the whole
+    /// batch.  Off by default — solo runs and historical callers keep
+    /// first-error-aborts semantics.
+    pub isolate_failures: bool,
     pub backend: Backend,
 }
 
@@ -117,6 +122,7 @@ impl Default for EngineConfig {
             prefetch_threads: exec.prefetch_threads,
             decode_memo_budget: 256 * 1024 * 1024,
             fan_out: exec.fan_out,
+            isolate_failures: exec.isolate_failures,
             backend: Backend::Native,
         }
     }
@@ -185,6 +191,12 @@ impl VswEngine {
         &self.cache
     }
 
+    /// The disk handle this engine reads through (checkpoint writers
+    /// share it so checkpoint I/O is metered with everything else).
+    pub fn disk(&self) -> &Disk {
+        &self.disk
+    }
+
     pub fn shard_bytes(&self) -> u64 {
         self.shard_bytes
     }
@@ -251,7 +263,7 @@ impl VswEngine {
     ) -> Result<(Vec<crate::exec::JobOutput>, BatchMetrics)> {
         // closed batches can't fill via an intake, so empty means a bug
         anyhow::ensure!(!jobs.is_empty(), "empty job batch");
-        self.run_jobs_inner(jobs, |_, _| Vec::new(), false)
+        self.run_jobs_inner(jobs, |_, _| Vec::new(), false, crate::exec::BatchOptions::default())
     }
 
     /// [`run_jobs`](Self::run_jobs) plus interactive admission: `intake`
@@ -269,7 +281,23 @@ impl VswEngine {
     where
         F: FnMut(u32, usize) -> Vec<BatchJob<'j>>,
     {
-        self.run_jobs_inner(jobs, intake, true)
+        self.run_jobs_inner(jobs, intake, true, crate::exec::BatchOptions::default())
+    }
+
+    /// [`run_jobs_interactive`](Self::run_jobs_interactive) plus crash
+    /// recovery plumbing: founding jobs may warm-start from checkpointed
+    /// [`crate::exec::ResumeState`], and a [`crate::exec::PassObserver`]
+    /// (the checkpoint writer) is called at every pass boundary.
+    pub fn run_jobs_with<'j, F>(
+        &mut self,
+        jobs: &[BatchJob<'j>],
+        intake: F,
+        opts: crate::exec::BatchOptions<'_>,
+    ) -> Result<(Vec<crate::exec::JobOutput>, BatchMetrics)>
+    where
+        F: FnMut(u32, usize) -> Vec<BatchJob<'j>>,
+    {
+        self.run_jobs_inner(jobs, intake, true, opts)
     }
 
     fn run_jobs_inner<'j, F>(
@@ -277,6 +305,7 @@ impl VswEngine {
         jobs: &[BatchJob<'j>],
         intake: F,
         interactive: bool,
+        opts: crate::exec::BatchOptions<'_>,
     ) -> Result<(Vec<crate::exec::JobOutput>, BatchMetrics)>
     where
         F: FnMut(u32, usize) -> Vec<BatchJob<'j>>,
@@ -317,6 +346,7 @@ impl VswEngine {
             prefetch_auto: self.cfg.prefetch_auto,
             prefetch_threads: self.cfg.prefetch_threads,
             fan_out: self.cfg.fan_out,
+            isolate_failures: self.cfg.isolate_failures,
         };
         // Backstop for direct API callers: arrivals bypass the up-front
         // weights check above, so re-check them at admission and surface
@@ -346,12 +376,13 @@ impl VswEngine {
         let this = &*self;
         let source = VswSource { eng: this };
         let mut core = ExecCore::new(exec_cfg, &this.disk, Some(&this.cache));
-        let out = core.run_batch_interactive(
+        let out = core.run_batch_with(
             &source,
             jobs,
             this.prop.num_vertices,
             &inv_out_deg,
             wrapped,
+            opts,
         );
         if let Some(e) = admission_err {
             return Err(e);
@@ -368,7 +399,13 @@ impl VswEngine {
         max_iters: u32,
     ) -> Result<(Vec<f32>, RunMetrics)> {
         let (mut outs, _) = self.run_jobs(&[BatchJob { app, max_iters }])?;
-        Ok(outs.pop().expect("one job in, one result out"))
+        let out = outs.pop().expect("one job in, one result out");
+        // a solo run has no batch to protect: an isolated failure is the
+        // run's failure
+        if let Some(msg) = &out.1.failed {
+            anyhow::bail!("{} failed: {msg}", app.name());
+        }
+        Ok(out)
     }
 
     /// Load one shard: cache hit (decode-once, zero-copy), else an
@@ -376,19 +413,24 @@ impl VswEngine {
     /// admission.  Runs on the core's I/O threads when the pipeline is
     /// on, inline on workers otherwise.
     fn load_shard(&self, shard_id: u32) -> Result<Arc<ShardView>> {
-        if let Some(v) = self.cache.get(shard_id)? {
-            return Ok(v);
-        }
-        let buf = self
-            .disk
-            .read_file_aligned_pooled(&self.dir.shard_path(shard_id), &self.buf_pool)?;
-        // the decode-once lifecycle's single CRC verification
-        let view = Arc::new(ShardView::parse(buf)?);
-        self.cache.note_crc_verified();
-        // hand the parsed view over so mode 1 doesn't re-parse and
-        // compressed modes seed their decode memo
-        self.cache.admit_with(shard_id, view.bytes(), &view);
-        Ok(view)
+        // every failure names the shard and its file: under failure
+        // isolation one bad shard fails its jobs, not the process, and
+        // the operator needs to know which file to look at
+        let path = self.dir.shard_path(shard_id);
+        (|| -> Result<Arc<ShardView>> {
+            if let Some(v) = self.cache.get(shard_id)? {
+                return Ok(v);
+            }
+            let buf = self.disk.read_file_aligned_pooled(&path, &self.buf_pool)?;
+            // the decode-once lifecycle's single CRC verification
+            let view = Arc::new(ShardView::parse(buf)?);
+            self.cache.note_crc_verified();
+            // hand the parsed view over so mode 1 doesn't re-parse and
+            // compressed modes seed their decode memo
+            self.cache.admit_with(shard_id, view.bytes(), &view);
+            Ok(view)
+        })()
+        .with_context(|| format!("shard {shard_id} ({})", path.display()))
     }
 }
 
@@ -422,6 +464,10 @@ impl ShardSource for VswSource<'_> {
 
     fn unit_edges(&self, _id: u32, item: &Arc<ShardView>) -> u64 {
         item.num_edges() as u64
+    }
+
+    fn unit_bytes(&self, _id: u32, item: &Arc<ShardView>) -> u64 {
+        item.size_bytes() as u64
     }
 
     /// Execute one decoded shard: write its interval of dst and mark

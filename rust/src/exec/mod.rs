@@ -91,6 +91,12 @@ pub struct ExecConfig {
     /// a unit's member jobs always compute serially on the claiming
     /// worker (the PR-4 behaviour, kept as the comparison baseline).
     pub fan_out: bool,
+    /// Contain load/compute errors to the affected member jobs: the lane
+    /// records the failure ([`crate::metrics::RunMetrics::failed`]) and
+    /// drops out at the next boundary while the rest of the batch keeps
+    /// running.  Off (the default), the first error aborts the whole
+    /// batch — the single-job and historical semantics.
+    pub isolate_failures: bool,
 }
 
 impl Default for ExecConfig {
@@ -105,6 +111,7 @@ impl Default for ExecConfig {
             prefetch_auto: false,
             prefetch_threads: 2,
             fan_out: true,
+            isolate_failures: false,
         }
     }
 }
@@ -127,6 +134,51 @@ pub struct BatchJob<'a> {
 
 /// One job's outcome: final vertex values plus its run metrics.
 pub type JobOutput = (Vec<f32>, RunMetrics);
+
+/// Warm-start state for one founding job of [`ExecCore::run_batch_with`]:
+/// the lane exactly as a checkpoint captured it at a pass boundary.  A
+/// resumed lane continues its own iteration clock at `iters_done`, so the
+/// remainder of the run is bit-identical to the uninterrupted one.
+#[derive(Clone, Debug, Default)]
+pub struct ResumeState {
+    pub values: Vec<f32>,
+    pub active: Vec<VertexId>,
+    /// Iterations the lane completed before the checkpoint.
+    pub iters_done: u32,
+    pub done: bool,
+    pub converged: bool,
+    pub failed: Option<String>,
+}
+
+/// Read-only view of one lane at a pass boundary, in admission order —
+/// what a [`PassObserver`] (the checkpoint writer) gets to persist.
+pub struct LaneSnapshot<'a> {
+    pub values: &'a [f32],
+    pub active: &'a [VertexId],
+    /// Job-local iterations completed so far (the lane's clock).
+    pub iters_done: u32,
+    pub done: bool,
+    pub converged: bool,
+    pub failed: Option<&'a str>,
+}
+
+/// Pass-boundary hook of [`ExecCore::run_batch_with`]: called at every
+/// boundary (pass 0 included) after lane lifecycle and admission, with
+/// every lane admitted so far.  An `Err` aborts the batch — which is
+/// exactly how the kill-at-iteration fault hook simulates a crash.
+pub trait PassObserver {
+    fn at_boundary(&mut self, pass: u32, lanes: &[LaneSnapshot<'_>]) -> Result<()>;
+}
+
+/// Extra controls for [`ExecCore::run_batch_with`] beyond the interactive
+/// intake: per-founder warm-start state and the boundary observer.
+#[derive(Default)]
+pub struct BatchOptions<'o> {
+    /// Entry `i` warm-starts `jobs[i]`; missing/`None` entries start fresh.
+    pub resume: Vec<Option<ResumeState>>,
+    /// Checkpoint/kill hook, called at every pass boundary.
+    pub observer: Option<&'o mut dyn PassObserver>,
+}
 
 /// Per-iteration read-only context handed to [`ShardSource::compute`].
 pub struct IterCtx<'a> {
@@ -277,6 +329,16 @@ pub trait ShardSource: Sync {
         0
     }
 
+    /// On-disk bytes of one loaded unit — weighs the per-job share of
+    /// [`crate::metrics::JobMetrics::effective_bytes_read`] by the bytes
+    /// each serving actually cost, not by serving counts (shards can
+    /// differ in size by orders of magnitude).  Engines without a
+    /// per-unit byte model keep the default 0, which falls back to
+    /// serving-count attribution.
+    fn unit_bytes(&self, _id: u32, _item: &Self::Item) -> u64 {
+        0
+    }
+
     /// Barrier stage: residual per-iteration charges (e.g. the gather
     /// phase's update-stream read and vertex write-back).
     fn end_iteration(&self, _ctx: &IterCtx<'_>, _updates_folded: u64) {}
@@ -389,7 +451,35 @@ impl<'a> ExecCore<'a> {
         jobs: &[BatchJob<'j>],
         num_vertices: u32,
         inv_out_deg: &[f32],
+        intake: F,
+    ) -> Result<(Vec<JobOutput>, BatchMetrics)>
+    where
+        S: ShardSource,
+        F: FnMut(u32, usize) -> Vec<BatchJob<'j>>,
+    {
+        self.run_batch_with(
+            source,
+            jobs,
+            num_vertices,
+            inv_out_deg,
+            intake,
+            BatchOptions::default(),
+        )
+    }
+
+    /// [`run_batch_interactive`](Self::run_batch_interactive) plus crash
+    /// recovery plumbing: founding jobs may warm-start from
+    /// [`ResumeState`] (their lanes continue the job-local iteration
+    /// clock a checkpoint captured), and a [`PassObserver`] is called at
+    /// every pass boundary to persist checkpoints or inject a kill.
+    pub fn run_batch_with<'j, S, F>(
+        &mut self,
+        source: &S,
+        jobs: &[BatchJob<'j>],
+        num_vertices: u32,
+        inv_out_deg: &[f32],
         mut intake: F,
+        mut opts: BatchOptions<'_>,
     ) -> Result<(Vec<JobOutput>, BatchMetrics)>
     where
         S: ShardSource,
@@ -406,8 +496,12 @@ impl<'a> ExecCore<'a> {
             "f32 vertex values require ids < 2^24 (got {n})"
         );
         let mut lanes: Vec<JobLane> = Vec::with_capacity(jobs.len());
-        for job in jobs {
-            lanes.push(JobLane::new(job, n, inv_out_deg)?);
+        for (i, job) in jobs.iter().enumerate() {
+            let mut lane = JobLane::new(job, n, inv_out_deg)?;
+            if let Some(Some(rs)) = opts.resume.get_mut(i) {
+                lane.restore(std::mem::take(rs), n)?;
+            }
+            lanes.push(lane);
         }
 
         let run_start = Instant::now();
@@ -424,10 +518,12 @@ impl<'a> ExecCore<'a> {
                 if lane.done {
                     continue;
                 }
-                if lane.active.is_empty() {
+                if lane.failed.is_some() {
+                    lane.done = true;
+                } else if lane.active.is_empty() {
                     lane.run.converged = true;
                     lane.done = true;
-                } else if pass - lane.admit_pass >= lane.max_iters {
+                } else if lane.iters_done >= lane.max_iters {
                     lane.done = true;
                 } else {
                     running.push(l);
@@ -463,11 +559,27 @@ impl<'a> ExecCore<'a> {
                     batch.admissions_deferred += 1;
                 }
             }
+            // boundary hook: the checkpoint writer persists every lane's
+            // post-admission state here (and the kill hook aborts here)
+            if let Some(obs) = opts.observer.as_mut() {
+                let snaps: Vec<LaneSnapshot<'_>> = lanes
+                    .iter()
+                    .map(|lane| LaneSnapshot {
+                        values: &lane.src,
+                        active: &lane.active,
+                        iters_done: lane.iters_done,
+                        done: lane.done,
+                        converged: lane.run.converged,
+                        failed: lane.failed.as_deref(),
+                    })
+                    .collect();
+                obs.at_boundary(pass, &snaps)?;
+            }
             if running.is_empty() {
                 debug_assert!(waiting.is_empty(), "capacity exists, so waiting drained");
                 break;
             }
-            let stats = self.run_pass(source, &mut lanes, &running, pass, inv_out_deg)?;
+            let stats = self.run_pass(source, &mut lanes, &running, inv_out_deg)?;
             batch.shard_loads += stats.loads;
             batch.shard_servings += stats.servings;
             batch.shard_servings_fanned += stats.fanned;
@@ -480,6 +592,11 @@ impl<'a> ExecCore<'a> {
             (self.disk.snapshot().sim_nanos - sim_start) as f64 / 1e9;
 
         let total_servings = batch.shard_servings.max(1);
+        // byte-weighted attribution: each serving is weighed by the bytes
+        // it actually cost (`ShardSource::unit_bytes`); engines without a
+        // per-unit byte model fall back to serving counts
+        let total_byte_weight: u64 = lanes.iter().map(|l| l.meter_bytes).sum();
+        batch.jobs_failed = lanes.iter().filter(|l| l.failed.is_some()).count() as u32;
         let outs = lanes
             .into_iter()
             .map(|mut lane| {
@@ -488,18 +605,23 @@ impl<'a> ExecCore<'a> {
                 lane.run.total_overlapped_sim_seconds =
                     lane.run.iterations.iter().map(|m| m.overlapped_sim_seconds).sum();
                 lane.run.memory_bytes = source.residency_bytes();
-                // per-job attribution: this job's servings-weighted share
-                // of the batch's disk bytes plus its metered kernel time
+                // per-job attribution: this job's weighted share of the
+                // batch's disk bytes plus its metered kernel time
                 lane.run.job = JobMetrics {
                     admitted_pass: lane.admit_pass,
                     iterations: lane.run.iterations.len() as u32,
                     compute: lane.meter_compute,
                     units_served: lane.meter_units,
                     edges_processed: lane.meter_edges,
-                    effective_bytes_read: batch.bytes_read as f64
-                        * lane.meter_units as f64
-                        / total_servings as f64,
+                    effective_bytes_read: if total_byte_weight > 0 {
+                        batch.bytes_read as f64 * lane.meter_bytes as f64
+                            / total_byte_weight as f64
+                    } else {
+                        batch.bytes_read as f64 * lane.meter_units as f64
+                            / total_servings as f64
+                    },
                 };
+                lane.run.failed = lane.failed;
                 batch.per_job.push(lane.run.job);
                 (lane.src, lane.run)
             })
@@ -520,7 +642,6 @@ impl<'a> ExecCore<'a> {
         source: &S,
         lanes: &mut [JobLane],
         running: &[usize],
-        pass: u32,
         inv_out_deg: &[f32],
     ) -> Result<PassStats> {
         let n = lanes[running[0]].src.len();
@@ -535,7 +656,7 @@ impl<'a> ExecCore<'a> {
         let mut skips: Vec<u32> = Vec::with_capacity(nr);
         for &l in running {
             let lane = &lanes[l];
-            let (wl, sk) = source.schedule(pass - lane.admit_pass, &lane.active);
+            let (wl, sk) = source.schedule(lane.iters_done, &lane.active);
             wls.push(wl);
             skips.push(sk);
         }
@@ -573,7 +694,7 @@ impl<'a> ExecCore<'a> {
                     src: &lane.src,
                     inv_out_deg,
                     contrib: &lane.contrib,
-                    iteration: pass - lane.admit_pass,
+                    iteration: lane.iters_done,
                 }
             })
             .collect();
@@ -599,6 +720,14 @@ impl<'a> ExecCore<'a> {
         // stages 2+3: I/O threads stage each union unit into the bounded
         // ready queue exactly once; the pipeline hands it to every member
         // job as a (unit, job) sub-task (see `pipeline::FanOut`).
+        //
+        // Load results travel through the ready queue as `Result` items:
+        // a failed load reaches every member job of the unit, where it
+        // either aborts the batch (the historical first-error semantics)
+        // or, with `isolate_failures`, marks just those lanes failed and
+        // lets the pass finish for everyone else.
+        let isolate = self.cfg.isolate_failures;
+        let fails: Mutex<Vec<(usize, u32, String)>> = Mutex::new(Vec::new());
         let pool = &self.scratch;
         let outcome = pipeline::run_worklist(
             &union_wl,
@@ -606,14 +735,38 @@ impl<'a> ExecCore<'a> {
             self.cfg.workers,
             depth,
             self.cfg.prefetch_threads,
-            |id| source.load(id),
+            |id| Ok(source.load(id).map_err(std::sync::Arc::new)),
             || pool.scratch(),
-            |scratch, index, id, sub, item| {
+            |scratch, index, id, sub, item: Result<S::Item, std::sync::Arc<anyhow::Error>>| {
                 let r = nth_member(members[index], sub);
+                let item = match item {
+                    Ok(item) => item,
+                    Err(e) => {
+                        let msg = format!("load unit {id}: {e:#}");
+                        if isolate {
+                            fails.lock().unwrap().push((r, id, msg));
+                            return Ok(());
+                        }
+                        return Err(anyhow::anyhow!("{msg}"));
+                    }
+                };
                 let edges = source.unit_edges(id, &item);
+                let bytes = source.unit_bytes(id, &item);
                 let t = Instant::now();
                 let mut marker = bits[r].marker();
-                let out = source.compute(id, item, &ctxs[r], &dsts[r], &mut marker, scratch)?;
+                let out =
+                    match source.compute(id, item, &ctxs[r], &dsts[r], &mut marker, scratch) {
+                        Ok(out) => out,
+                        Err(e) => {
+                            drop(marker);
+                            let msg = format!("compute unit {id}: {e:#}");
+                            if isolate {
+                                fails.lock().unwrap().push((r, id, msg));
+                                return Ok(());
+                            }
+                            return Err(anyhow::anyhow!("{msg}"));
+                        }
+                    };
                 drop(marker);
                 let dt = t.elapsed().as_nanos() as u64;
                 match out {
@@ -626,6 +779,7 @@ impl<'a> ExecCore<'a> {
                 m.compute_nanos.fetch_add(dt, Ordering::Relaxed);
                 m.units.fetch_add(1, Ordering::Relaxed);
                 m.edges.fetch_add(edges, Ordering::Relaxed);
+                m.bytes.fetch_add(bytes, Ordering::Relaxed);
                 Ok(())
             },
         )?;
@@ -715,10 +869,11 @@ impl<'a> ExecCore<'a> {
             lane.meter_compute += Duration::from_nanos(compute_nanos);
             lane.meter_units += m.units.load(Ordering::Relaxed);
             lane.meter_edges += m.edges.load(Ordering::Relaxed);
+            lane.meter_bytes += m.bytes.load(Ordering::Relaxed);
             lane.src = std::mem::take(&mut nexts[r]);
             lane.active = bits[r].to_sorted_vec();
             lane.run.iterations.push(IterationMetrics {
-                iteration: pass - lane.admit_pass,
+                iteration: lane.iters_done,
                 wall,
                 sim_disk_seconds,
                 overlapped_sim_seconds,
@@ -737,6 +892,18 @@ impl<'a> ExecCore<'a> {
                 io: io_delta,
                 cache: cache_delta,
             });
+            lane.iters_done += 1;
+        }
+        // apply contained failures (isolate_failures): the affected lanes
+        // keep their first failure by deterministic (lane, unit) order and
+        // drop out at the next boundary; everyone else is untouched
+        let mut failed_now = fails.into_inner().unwrap();
+        failed_now.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        for (r, _, msg) in failed_now {
+            let lane = &mut lanes[running[r]];
+            if lane.failed.is_none() {
+                lane.failed = Some(msg);
+            }
         }
         Ok(PassStats {
             loads: u64::from(outcome.units),
@@ -756,16 +923,25 @@ struct JobLane {
     contrib: Vec<f32>,
     run: RunMetrics,
     max_iters: u32,
-    /// Pass boundary this lane joined the batch at (0 = founding member);
-    /// its iteration clock is `pass - admit_pass`.
+    /// Pass boundary this lane joined the batch at (0 = founding member).
     admit_pass: u32,
+    /// The lane's own iteration clock: job-local iterations completed so
+    /// far.  Resumed lanes start it at the checkpointed value, so
+    /// `max_iters` stays a total budget across the interruption.
+    iters_done: u32,
     done: bool,
+    /// First contained failure (isolated mode): the lane drops out at the
+    /// next boundary and surfaces this in [`RunMetrics::failed`].
+    failed: Option<String>,
     /// Whether the lane ever waited for admission capacity (counted once
     /// in [`BatchMetrics::admissions_deferred`]).
     deferred: bool,
     meter_compute: Duration,
     meter_units: u64,
     meter_edges: u64,
+    /// Byte-weight of the servings this lane consumed (see
+    /// [`ShardSource::unit_bytes`]).
+    meter_bytes: u64,
 }
 
 impl JobLane {
@@ -790,12 +966,36 @@ impl JobLane {
             run: RunMetrics::default(),
             max_iters: job.max_iters,
             admit_pass: 0,
+            iters_done: 0,
             done: false,
+            failed: None,
             deferred: false,
             meter_compute: Duration::ZERO,
             meter_units: 0,
             meter_edges: 0,
+            meter_bytes: 0,
         })
+    }
+
+    /// Overwrite the fresh `init` state with a checkpointed lane: values,
+    /// active set, the job-local clock, and terminal flags.  The lane then
+    /// replays exactly the remainder of the interrupted run.
+    fn restore(&mut self, rs: ResumeState, n: u32) -> Result<()> {
+        anyhow::ensure!(
+            rs.values.len() == n as usize,
+            "resume state holds {} vertex values, graph has {n}",
+            rs.values.len()
+        );
+        if let Some(&v) = rs.active.iter().max() {
+            anyhow::ensure!(v < n, "resume state activates vertex {v} >= {n}");
+        }
+        self.src = rs.values;
+        self.active = rs.active;
+        self.iters_done = rs.iters_done;
+        self.done = rs.done;
+        self.run.converged = rs.converged;
+        self.failed = rs.failed;
+        Ok(())
     }
 }
 
@@ -807,6 +1007,7 @@ struct PassMeter {
     compute_nanos: AtomicU64,
     units: AtomicU64,
     edges: AtomicU64,
+    bytes: AtomicU64,
 }
 
 /// Position of the `sub`-th set bit of a membership mask — which running

@@ -20,7 +20,7 @@ use graphmp::compress::CacheMode;
 use graphmp::engine::{Backend, EngineConfig, VswEngine};
 use graphmp::graph::datasets::Dataset;
 use graphmp::prep::{preprocess_into, PrepConfig};
-use graphmp::runtime::{Manifest, ShardExecutor};
+use graphmp::runtime::{CheckpointConfig, Manifest, ShardExecutor};
 use graphmp::storage::disk::{Disk, DiskProfile};
 use graphmp::storage::GraphDir;
 use graphmp::util::{human_bytes, human_count, human_duration};
@@ -38,6 +38,7 @@ fn main() {
         Some("generate") => cmd_generate(&args),
         Some("preprocess") => cmd_preprocess(&args),
         Some("run") => cmd_run(&args),
+        Some("resume") => cmd_resume(&args),
         Some("info") => cmd_info(&args),
         _ => {
             usage();
@@ -78,6 +79,18 @@ USAGE:
                      [--workers N] [--disk hdd|ssd|none] [--no-prefetch]
                      [--prefetch-depth N|auto] [--prefetch-threads N]
                      [--memo-mb N]
+                     [--checkpoint-dir D] [--checkpoint-every K]
+                                 (crash safety: atomically persist the whole
+                                  batch state into D every K pass boundaries;
+                                  an interrupted run is picked up by
+                                  `graphmp resume --checkpoint-dir D`)
+  graphmp resume     --checkpoint-dir <D>
+                                 (restore an interrupted checkpointed run:
+                                  re-reads the original run arguments from
+                                  D/run_args.txt, warm-starts from the newest
+                                  valid checkpoint, finishes the drain —
+                                  final values bit-identical to an
+                                  uninterrupted run)
   graphmp info       --dir <graphdir>
 
 datasets: twitter-sim uk2007-sim uk2014-sim eu2015-sim"
@@ -160,11 +173,12 @@ fn app_of_job(args: &Args, job: u32) -> Result<Box<dyn VertexProgram>> {
     })
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
+/// Open the VSW engine exactly as `graphmp run` configures it (also the
+/// path `graphmp resume` uses to rebuild the engine from the persisted
+/// run arguments).
+fn open_engine(args: &Args) -> Result<VswEngine> {
     let dir = GraphDir::new(args.opt("dir").context("--dir required")?);
     let disk = disk(args);
-    let app = app_of(args)?;
-    let iters: u32 = args.parse_opt_or("iters", 10u32)?;
 
     let backend = match args.opt_or("backend", "native") {
         "native" => Backend::Native,
@@ -215,7 +229,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         fan_out: !args.flag("no-fanout"),
         backend,
     };
-    let mut engine = VswEngine::open(&dir, &disk, cfg)?;
+    let engine = VswEngine::open(&dir, &disk, cfg)?;
     println!(
         "graph: |V|={} |E|={} shards={} cache={}",
         human_count(engine.property().num_vertices as u64),
@@ -223,10 +237,24 @@ fn cmd_run(args: &Args) -> Result<()> {
         engine.property().num_shards,
         engine.cache().mode().name(),
     );
+    Ok(engine)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let app = app_of(args)?;
+    let iters: u32 = args.parse_opt_or("iters", 10u32)?;
+    let mut engine = open_engine(args)?;
     let jobs: u32 = args.parse_opt_or("jobs", 1u32)?;
     anyhow::ensure!(jobs >= 1, "--jobs must be at least 1 (got 0)");
-    if jobs > 1 || args.opt("arrivals").is_some() {
-        return run_batched(args, &mut engine, jobs, iters);
+    let ckpt = match args.opt("checkpoint-dir") {
+        Some(d) => {
+            let every: u32 = args.parse_opt_or("checkpoint-every", 4u32)?;
+            Some(CheckpointConfig::new(d, every))
+        }
+        None => None,
+    };
+    if jobs > 1 || args.opt("arrivals").is_some() || ckpt.is_some() {
+        return run_batched(args, &mut engine, jobs, iters, BatchMode::Run(ckpt));
     }
     let run = engine.run(app.as_ref(), iters)?;
     for m in &run.iterations {
@@ -278,12 +306,46 @@ fn parse_arrivals(spec: &str, jobs: u32) -> Result<Vec<u32>> {
     Ok(passes)
 }
 
+/// How a batched run executes: plain, checkpointed, or resumed from a
+/// checkpoint directory.
+enum BatchMode {
+    Run(Option<CheckpointConfig>),
+    Resume(CheckpointConfig),
+}
+
+/// `graphmp resume --checkpoint-dir D`: restore an interrupted
+/// checkpointed run.  The original `run` invocation's arguments were
+/// persisted into `D/run_args.txt`; resume re-parses them, rebuilds the
+/// same engine and job set, and warm-starts from the newest valid
+/// checkpoint — the remainder of the run is bit-identical to the
+/// uninterrupted one.
+fn cmd_resume(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.opt("checkpoint-dir").context("--checkpoint-dir required")?);
+    let path = dir.join("run_args.txt");
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!("read {} (was the run started with --checkpoint-dir?)", path.display())
+    })?;
+    let stored = Args::parse(text.lines().map(str::to_string))?;
+    let every: u32 = stored.parse_opt_or("checkpoint-every", 4u32)?;
+    let cfg = CheckpointConfig::new(dir, every);
+    let mut engine = open_engine(&stored)?;
+    let jobs: u32 = stored.parse_opt_or("jobs", 1u32)?;
+    let iters: u32 = stored.parse_opt_or("iters", 10u32)?;
+    run_batched(&stored, &mut engine, jobs, iters, BatchMode::Resume(cfg))
+}
+
 /// `graphmp run --jobs N`: submit N concurrent queries through the
 /// scan-shared job runtime — one shard pass per iteration serves the
 /// whole batch, so effective disk I/O per query falls as ~1/N.  With
 /// `--arrivals`, jobs join mid-batch at their scheduled pass instead of
 /// all starting together.
-fn run_batched(args: &Args, engine: &mut VswEngine, jobs: u32, iters: u32) -> Result<()> {
+fn run_batched(
+    args: &Args,
+    engine: &mut VswEngine,
+    jobs: u32,
+    iters: u32,
+    mode: BatchMode,
+) -> Result<()> {
     use graphmp::exec::MAX_BATCH_JOBS;
     use graphmp::runtime::{JobSet, JobSpec, JobStatus};
     if jobs as usize > MAX_BATCH_JOBS {
@@ -303,7 +365,20 @@ fn run_batched(args: &Args, engine: &mut VswEngine, jobs: u32, iters: u32) -> Re
         let label = format!("{}#{j}", app.name());
         set.submit_at(arrivals[j as usize], JobSpec { label, app, max_iters: iters });
     }
-    let report = set.run_all(engine)?;
+    // persist the run's arguments next to the checkpoints so `graphmp
+    // resume --checkpoint-dir D` can rebuild the same engine and job set
+    if let BatchMode::Run(Some(cfg)) = &mode {
+        std::fs::create_dir_all(&cfg.dir)
+            .with_context(|| format!("create checkpoint dir {}", cfg.dir.display()))?;
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        std::fs::write(cfg.dir.join("run_args.txt"), argv.join("\n"))
+            .with_context(|| format!("persist run args into {}", cfg.dir.display()))?;
+    }
+    let report = match &mode {
+        BatchMode::Run(None) => set.run_all(engine)?,
+        BatchMode::Run(Some(cfg)) => set.run_all_checkpointed(engine, cfg)?,
+        BatchMode::Resume(cfg) => set.resume(engine, cfg)?,
+    };
     for job in set.jobs() {
         let run = job.run.as_ref().expect("run_all fills every job");
         println!(
@@ -314,6 +389,7 @@ fn run_batched(args: &Args, engine: &mut VswEngine, jobs: u32, iters: u32) -> Re
             match job.status {
                 JobStatus::Converged => "converged",
                 JobStatus::IterLimit => "iter-limit",
+                JobStatus::Failed => "failed",
                 _ => "unfinished",
             },
             run.job.admitted_pass,
@@ -333,6 +409,21 @@ fn run_batched(args: &Args, engine: &mut VswEngine, jobs: u32, iters: u32) -> Re
         jobs,
         report.shard_loads_amortized(),
     );
+    let agg = report.aggregate();
+    if agg.checkpoints_written > 0 || matches!(mode, BatchMode::Resume(_)) {
+        println!(
+            "checkpoints: {} written ({}){}",
+            agg.checkpoints_written,
+            human_bytes(agg.checkpoint_bytes),
+            match agg.resumed_from_pass {
+                Some(p) => format!(", resumed from pass {p}"),
+                None => String::new(),
+            }
+        );
+    }
+    if agg.jobs_failed > 0 {
+        println!("jobs failed in isolation: {}", agg.jobs_failed);
+    }
     Ok(())
 }
 

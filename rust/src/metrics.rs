@@ -128,6 +128,10 @@ pub struct RunMetrics {
     /// Per-job attribution of this run within its batch (solo runs are
     /// the N=1 batch, so the meter is filled there too).
     pub job: JobMetrics,
+    /// Set when the job was failed in isolation (a hard I/O or compute
+    /// error contained to this job under `isolate_failures`): the first
+    /// failure, naming the unit and file.  `None` = the job ran clean.
+    pub failed: Option<String>,
 }
 
 impl RunMetrics {
@@ -183,6 +187,18 @@ pub struct BatchMetrics {
     pub bytes_read: u64,
     pub total_wall: Duration,
     pub total_sim_disk_seconds: f64,
+    /// Checkpoints persisted during the batch (0 when checkpointing off).
+    pub checkpoints_written: u32,
+    /// Bytes the persisted checkpoints cost on disk.
+    pub checkpoint_bytes: u64,
+    /// Wall seconds spent writing checkpoints (on the boundary, so fully
+    /// on the critical path).
+    pub checkpoint_seconds: f64,
+    /// Pass boundary this batch was resumed from (`None` = fresh run).
+    pub resumed_from_pass: Option<u32>,
+    /// Jobs that ended [`crate::runtime::jobs::JobStatus::Failed`] under
+    /// failure isolation.
+    pub jobs_failed: u32,
     /// Per-job attribution, in admission order (founding members in
     /// submission order, then mid-batch admissions as they arrived).
     pub per_job: Vec<JobMetrics>,

@@ -1,0 +1,777 @@
+//! Crash-safe checkpoint/recovery for the scan-shared runtime.
+//!
+//! At every `checkpoint_interval`-th pass boundary the [`CheckpointWriter`]
+//! (a [`crate::exec::PassObserver`]) persists the whole batch state — each
+//! admitted lane's vertex values, active set, job-local iteration clock and
+//! terminal flags, plus the roster of not-yet-admitted arrivals and the
+//! results of jobs finished in earlier batches of the drain — into a
+//! versioned, CRC-guarded checkpoint directory:
+//!
+//! ```text
+//! <dir>/ckpt_000004/
+//!   MANIFEST        text, modeled on runtime/manifest.rs; trailing
+//!                   `end crc=<hex>` guards every byte above it
+//!   job_000.bin     one GMPJ lane file per job record, its own
+//!   job_001.bin     trailing CRC32 guarding the payload
+//! ```
+//!
+//! Atomicity protocol: every file is written into a `.tmp_ckpt_*` staging
+//! directory with [`Disk::write_file_durable`] (write + fsync + parent
+//! fsync), the staging dir is renamed into place, and the checkpoint root
+//! is fsynced — a crash at any point leaves either the previous complete
+//! checkpoint or a staging dir the next write sweeps away, never a
+//! half-visible one.  [`load_latest`] scans newest-first, rejects
+//! truncated or bit-flipped candidates with a precise per-candidate
+//! reason, and falls back to the last good checkpoint.
+//!
+//! Recovery contract: a batch resumed from a checkpoint replays exactly
+//! the remainder of the interrupted run — resumed lanes continue their
+//! own iteration clocks, so final values are bit-identical to the
+//! uninterrupted run (`rust/tests/recovery.rs`).
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::exec::{LaneSnapshot, PassObserver, ResumeState};
+use crate::storage::disk::{sync_dir, Disk};
+
+/// Current checkpoint format version (the MANIFEST's first line).
+pub const CKPT_VERSION: &str = "graphmp-ckpt v1";
+
+/// Where, how often, and (for fault-injection tests) when to die.
+#[derive(Clone, Debug)]
+pub struct CheckpointConfig {
+    /// Checkpoint root; one `ckpt_<pass>` subdirectory per checkpoint.
+    pub dir: PathBuf,
+    /// Persist every `every` pass boundaries (0 = never write; the kill
+    /// hook below stays armed either way).
+    pub every: u32,
+    /// Checkpoints to retain; older ones are pruned after each write.
+    pub keep: usize,
+    /// Fault injection: abort the batch at this (global) pass boundary,
+    /// *after* any checkpoint due there — simulating a crash mid-run.
+    pub kill_at_pass: Option<u32>,
+}
+
+impl CheckpointConfig {
+    pub fn new(dir: impl Into<PathBuf>, every: u32) -> CheckpointConfig {
+        CheckpointConfig { dir: dir.into(), every, keep: 2, kill_at_pass: None }
+    }
+}
+
+/// One job's persisted state: the [`crate::runtime::jobs::JobSet`] id it
+/// maps back to, its batch-relative arrival pass, and the lane itself.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub id: u32,
+    pub arrive: u32,
+    pub state: ResumeState,
+}
+
+/// Everything one checkpoint holds, decoded and CRC-verified.
+#[derive(Clone, Debug, Default)]
+pub struct CheckpointState {
+    pub num_vertices: u32,
+    pub num_edges: u64,
+    /// Index of the interrupted batch within its drain.
+    pub batch_index: u32,
+    /// Global pass at which the interrupted batch began (0 for the first
+    /// batch of a drain).  `pass - start` is the batch-local boundary,
+    /// the clock [`JobRecord::arrive`] offsets are relative to.
+    pub start: u32,
+    /// The (global) pass boundary this checkpoint captured.
+    pub pass: u32,
+    /// Jobs that finished in earlier batches of the drain.
+    pub finished: Vec<JobRecord>,
+    /// Admitted lanes of the interrupted batch, in admission order.
+    pub lanes: Vec<JobRecord>,
+    /// Batch members not yet admitted: `(job id, arrival pass)`.
+    pub pending: Vec<(u32, u32)>,
+}
+
+/// Identity of the batch a [`CheckpointWriter`] persists: the graph
+/// fingerprint, the batch's position in its drain, the full member roster
+/// `(job id, arrival pass)` in admission order, and carried-forward
+/// results of jobs finished in earlier batches.
+#[derive(Clone, Debug, Default)]
+pub struct BatchMeta {
+    pub num_vertices: u32,
+    pub num_edges: u64,
+    pub batch_index: u32,
+    /// Global pass at which this batch began (its local pass 0).
+    pub start: u32,
+    pub roster: Vec<(u32, u32)>,
+    pub finished: Vec<JobRecord>,
+}
+
+/// The pass-boundary observer that writes checkpoints (and hosts the
+/// kill-at-iteration fault hook).  Plug into
+/// [`crate::exec::BatchOptions::observer`] or use the
+/// [`crate::runtime::jobs::JobSet`] front door.
+pub struct CheckpointWriter {
+    cfg: CheckpointConfig,
+    disk: Disk,
+    meta: BatchMeta,
+    /// Pass offset of a resumed batch: the observer sees batch-local
+    /// passes, checkpoints are numbered globally across interruptions.
+    base_pass: u32,
+    /// Checkpoints persisted by this writer.
+    pub checkpoints_written: u32,
+    /// Bytes those checkpoints cost on disk.
+    pub checkpoint_bytes: u64,
+    /// Wall seconds spent writing them (boundary work, on the critical
+    /// path).
+    pub checkpoint_seconds: f64,
+}
+
+impl CheckpointWriter {
+    pub fn new(cfg: CheckpointConfig, disk: Disk, meta: BatchMeta) -> CheckpointWriter {
+        CheckpointWriter {
+            cfg,
+            disk,
+            meta,
+            base_pass: 0,
+            checkpoints_written: 0,
+            checkpoint_bytes: 0,
+            checkpoint_seconds: 0.0,
+        }
+    }
+
+    /// Continue the global pass numbering of an interrupted run: the
+    /// resumed batch's local pass 0 is global pass `pass`.
+    pub fn with_base_pass(mut self, pass: u32) -> CheckpointWriter {
+        self.base_pass = pass;
+        self
+    }
+
+    /// Persist one checkpoint at (global) pass `global`: stage every file
+    /// durably in a temp dir, rename it into place, fsync the root, prune
+    /// old checkpoints.
+    fn write(&mut self, global: u32, lanes: &[LaneSnapshot<'_>]) -> Result<()> {
+        let t0 = Instant::now();
+        let written_before = self.disk.snapshot().bytes_written;
+        let name = format!("ckpt_{global:06}");
+        let tmp = self.cfg.dir.join(format!(".tmp_{name}"));
+        let final_dir = self.cfg.dir.join(&name);
+        let _ = std::fs::remove_dir_all(&tmp);
+
+        let mut man = String::new();
+        man.push_str(CKPT_VERSION);
+        man.push('\n');
+        man.push_str(&format!(
+            "graph vertices={} edges={}\n",
+            self.meta.num_vertices, self.meta.num_edges
+        ));
+        man.push_str(&format!(
+            "batch index={} start={} pass={} members={}\n",
+            self.meta.batch_index,
+            self.meta.start,
+            global,
+            self.meta.roster.len()
+        ));
+        let mut slot = 0usize;
+        for rec in &self.meta.finished {
+            let file = format!("job_{slot:03}.bin");
+            let bytes = encode_lane(&rec.state);
+            self.disk.write_file_durable(&tmp.join(&file), &bytes)?;
+            man.push_str(&format!(
+                "job kind=finished id={} arrive={} bytes={} file={file}\n",
+                rec.id,
+                rec.arrive,
+                bytes.len()
+            ));
+            slot += 1;
+        }
+        anyhow::ensure!(
+            lanes.len() <= self.meta.roster.len(),
+            "{} lanes at the boundary, roster holds {} members",
+            lanes.len(),
+            self.meta.roster.len()
+        );
+        for (lane, &(id, arrive)) in lanes.iter().zip(&self.meta.roster) {
+            let file = format!("job_{slot:03}.bin");
+            let bytes = encode_lane(&snapshot_state(lane));
+            self.disk.write_file_durable(&tmp.join(&file), &bytes)?;
+            man.push_str(&format!(
+                "job kind=lane id={id} arrive={arrive} bytes={} file={file}\n",
+                bytes.len()
+            ));
+            slot += 1;
+        }
+        for &(id, arrive) in self.meta.roster.iter().skip(lanes.len()) {
+            man.push_str(&format!("job kind=pending id={id} arrive={arrive}\n"));
+        }
+        man.push_str(&format!("end crc={:08x}\n", crc32fast::hash(man.as_bytes())));
+        self.disk.write_file_durable(&tmp.join("MANIFEST"), man.as_bytes())?;
+
+        if final_dir.exists() {
+            std::fs::remove_dir_all(&final_dir)
+                .with_context(|| format!("replace stale {}", final_dir.display()))?;
+        }
+        std::fs::rename(&tmp, &final_dir).with_context(|| {
+            format!("publish {} -> {}", tmp.display(), final_dir.display())
+        })?;
+        sync_dir(&self.cfg.dir)?;
+        self.prune()?;
+
+        self.checkpoints_written += 1;
+        self.checkpoint_bytes += self.disk.snapshot().bytes_written - written_before;
+        self.checkpoint_seconds += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Keep the newest `keep` checkpoints, drop the rest, and sweep any
+    /// staging dirs a crashed write left behind.
+    fn prune(&self) -> Result<()> {
+        let mut kept: Vec<(u32, PathBuf)> = Vec::new();
+        for entry in std::fs::read_dir(&self.cfg.dir)
+            .with_context(|| format!("checkpoint dir {}", self.cfg.dir.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(pass) = name.strip_prefix("ckpt_").and_then(|s| s.parse::<u32>().ok())
+            {
+                kept.push((pass, entry.path()));
+            } else if name.starts_with(".tmp_") {
+                let _ = std::fs::remove_dir_all(entry.path());
+            }
+        }
+        kept.sort_by(|a, b| b.0.cmp(&a.0));
+        for (_, path) in kept.into_iter().skip(self.cfg.keep.max(1)) {
+            std::fs::remove_dir_all(&path)
+                .with_context(|| format!("prune {}", path.display()))?;
+        }
+        Ok(())
+    }
+}
+
+impl PassObserver for CheckpointWriter {
+    fn at_boundary(&mut self, pass: u32, lanes: &[LaneSnapshot<'_>]) -> Result<()> {
+        let global = self.base_pass + pass;
+        // `global > base_pass` skips re-writing the checkpoint a resumed
+        // batch just restored from (its local pass 0).
+        if self.cfg.every > 0 && global > self.base_pass && global % self.cfg.every == 0 {
+            self.write(global, lanes)
+                .with_context(|| format!("checkpoint at pass {global}"))?;
+        }
+        if self.cfg.kill_at_pass == Some(global) {
+            anyhow::bail!("injected crash at pass boundary {global}");
+        }
+        Ok(())
+    }
+}
+
+/// What a newest-first scan of the checkpoint root found.
+#[derive(Debug, Default)]
+pub struct LoadOutcome {
+    /// The newest checkpoint that decoded and CRC-verified cleanly.
+    pub loaded: Option<(PathBuf, CheckpointState)>,
+    /// Newer candidates rejected on the way, each with the precise reason
+    /// (truncated manifest, CRC mismatch, bad version, …).
+    pub rejected: Vec<(PathBuf, String)>,
+}
+
+/// Scan `dir` for checkpoints, newest first, and load the first one that
+/// verifies; corrupt candidates land in [`LoadOutcome::rejected`] instead
+/// of failing the scan.  Reads go through `disk`, so they are metered and
+/// retried like every other read.
+pub fn load_latest(dir: &Path, disk: &Disk) -> Result<LoadOutcome> {
+    let mut candidates: Vec<(u32, PathBuf)> = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("checkpoint dir {}", dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(pass) = name.strip_prefix("ckpt_").and_then(|s| s.parse::<u32>().ok()) {
+            candidates.push((pass, entry.path()));
+        }
+    }
+    candidates.sort_by(|a, b| b.0.cmp(&a.0));
+    let mut rejected = Vec::new();
+    for (_, path) in candidates {
+        match load_checkpoint(&path, disk) {
+            Ok(state) => return Ok(LoadOutcome { loaded: Some((path, state)), rejected }),
+            Err(e) => rejected.push((path, format!("{e:#}"))),
+        }
+    }
+    Ok(LoadOutcome { loaded: None, rejected })
+}
+
+/// Load and fully verify one `ckpt_*` directory: manifest trailer CRC,
+/// format version, per-record fields (line-numbered errors), and each
+/// lane file's declared length + trailing CRC.
+pub fn load_checkpoint(dir: &Path, disk: &Disk) -> Result<CheckpointState> {
+    let mpath = dir.join("MANIFEST");
+    let raw = disk.read_file(&mpath)?;
+    let text = String::from_utf8(raw)
+        .map_err(|_| anyhow::anyhow!("{}: not UTF-8", mpath.display()))?;
+
+    // integrity trailer: the last line `end crc=<hex>` guards every byte
+    // before it — a truncated or bit-flipped manifest fails here
+    let idx = text
+        .rfind("\nend crc=")
+        .with_context(|| format!("{}: missing `end crc=` integrity trailer", mpath.display()))?;
+    let body = &text[..idx + 1];
+    let tail = text[idx + 1..].trim_end();
+    anyhow::ensure!(
+        !tail.contains('\n'),
+        "{}: trailing data after the integrity trailer",
+        mpath.display()
+    );
+    let hex = tail.strip_prefix("end crc=").expect("rfind matched this prefix");
+    let stored = u32::from_str_radix(hex, 16)
+        .with_context(|| format!("{}: bad trailer crc '{hex}'", mpath.display()))?;
+    let computed = crc32fast::hash(body.as_bytes());
+    anyhow::ensure!(
+        stored == computed,
+        "{}: CRC mismatch (stored {stored:08x}, computed {computed:08x}) — truncated or corrupt",
+        mpath.display()
+    );
+
+    let mut num_vertices: Option<u32> = None;
+    let mut num_edges = 0u64;
+    let mut batch_index = 0u32;
+    let mut start = 0u32;
+    let mut pass: Option<u32> = None;
+    let mut members = 0usize;
+    let mut finished: Vec<JobRecord> = Vec::new();
+    let mut lanes: Vec<JobRecord> = Vec::new();
+    let mut pending: Vec<(u32, u32)> = Vec::new();
+
+    for (ln0, line) in body.lines().enumerate() {
+        let ln = ln0 + 1;
+        let line = line.trim();
+        if ln == 1 {
+            anyhow::ensure!(
+                line == CKPT_VERSION,
+                "{}: unsupported checkpoint version '{line}' (want '{CKPT_VERSION}')",
+                mpath.display()
+            );
+            continue;
+        }
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let tag = it.next().expect("non-empty line");
+        let mut kv: Vec<(&str, &str)> = Vec::new();
+        for field in it {
+            let (k, v) = field.split_once('=').with_context(|| {
+                format!("{}: line {ln}: bad field '{field}'", mpath.display())
+            })?;
+            kv.push((k, v));
+        }
+        let get = |key: &str| -> Result<&str> {
+            kv.iter()
+                .find(|(k, _)| *k == key)
+                .map(|&(_, v)| v)
+                .with_context(|| format!("{}: line {ln}: missing {key}=", mpath.display()))
+        };
+        match tag {
+            "graph" => {
+                num_vertices = Some(parse_num(get("vertices")?, "vertices", ln, &mpath)?);
+                num_edges = parse_num(get("edges")?, "edges", ln, &mpath)?;
+            }
+            "batch" => {
+                batch_index = parse_num(get("index")?, "index", ln, &mpath)?;
+                start = parse_num(get("start")?, "start", ln, &mpath)?;
+                pass = Some(parse_num(get("pass")?, "pass", ln, &mpath)?);
+                members = parse_num(get("members")?, "members", ln, &mpath)?;
+            }
+            "job" => {
+                let id: u32 = parse_num(get("id")?, "id", ln, &mpath)?;
+                let arrive: u32 = parse_num(get("arrive")?, "arrive", ln, &mpath)?;
+                match get("kind")? {
+                    "pending" => pending.push((id, arrive)),
+                    kind @ ("finished" | "lane") => {
+                        let file = get("file")?;
+                        let declared: usize = parse_num(get("bytes")?, "bytes", ln, &mpath)?;
+                        let fpath = dir.join(file);
+                        let data = disk.read_file(&fpath)?;
+                        anyhow::ensure!(
+                            data.len() == declared,
+                            "{}: {} bytes on disk, manifest declares {declared}",
+                            fpath.display(),
+                            data.len()
+                        );
+                        let state = decode_lane(&data)
+                            .with_context(|| fpath.display().to_string())?;
+                        let rec = JobRecord { id, arrive, state };
+                        if kind == "finished" {
+                            finished.push(rec);
+                        } else {
+                            lanes.push(rec);
+                        }
+                    }
+                    other => anyhow::bail!(
+                        "{}: line {ln}: unknown job kind '{other}'",
+                        mpath.display()
+                    ),
+                }
+            }
+            other => {
+                anyhow::bail!("{}: line {ln}: unknown record '{other}'", mpath.display())
+            }
+        }
+    }
+
+    let num_vertices = num_vertices
+        .with_context(|| format!("{}: missing graph record", mpath.display()))?;
+    let pass = pass.with_context(|| format!("{}: missing batch record", mpath.display()))?;
+    anyhow::ensure!(
+        lanes.len() + pending.len() == members,
+        "{}: batch declares {members} members, found {} lanes + {} pending",
+        mpath.display(),
+        lanes.len(),
+        pending.len()
+    );
+    for rec in &lanes {
+        anyhow::ensure!(
+            rec.state.values.len() == num_vertices as usize,
+            "{}: lane of job {} holds {} values, graph has {num_vertices}",
+            mpath.display(),
+            rec.id,
+            rec.state.values.len()
+        );
+    }
+    let pass = pass.max(start);
+    Ok(CheckpointState {
+        num_vertices,
+        num_edges,
+        batch_index,
+        start,
+        pass,
+        finished,
+        lanes,
+        pending,
+    })
+}
+
+fn parse_num<T: std::str::FromStr>(v: &str, key: &str, ln: usize, path: &Path) -> Result<T>
+where
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
+    v.parse()
+        .with_context(|| format!("{}: line {ln}: bad {key}='{v}'", path.display()))
+}
+
+/// Own a boundary snapshot so it can be encoded (and later restored).
+pub fn snapshot_state(lane: &LaneSnapshot<'_>) -> ResumeState {
+    ResumeState {
+        values: lane.values.to_vec(),
+        active: lane.active.to_vec(),
+        iters_done: lane.iters_done,
+        done: lane.done,
+        converged: lane.converged,
+        failed: lane.failed.map(str::to_string),
+    }
+}
+
+const LANE_MAGIC: &[u8; 4] = b"GMPJ";
+const LANE_VERSION: u32 = 1;
+const LANE_HEADER: usize = 28; // magic + version + iters + flags + 3 lengths
+
+/// Serialize one lane: fixed header, f32 values as raw bits (exact
+/// round-trip — the bit-identity gate depends on it), active ids, the
+/// failure message, and a trailing CRC32 over everything before it.
+pub fn encode_lane(rs: &ResumeState) -> Vec<u8> {
+    let failed = rs.failed.as_deref().unwrap_or("");
+    let mut out = Vec::with_capacity(
+        LANE_HEADER + rs.values.len() * 4 + rs.active.len() * 4 + failed.len() + 4,
+    );
+    out.extend_from_slice(LANE_MAGIC);
+    out.extend_from_slice(&LANE_VERSION.to_le_bytes());
+    out.extend_from_slice(&rs.iters_done.to_le_bytes());
+    let flags = u32::from(rs.done)
+        | (u32::from(rs.converged) << 1)
+        | (u32::from(rs.failed.is_some()) << 2);
+    out.extend_from_slice(&flags.to_le_bytes());
+    out.extend_from_slice(&(rs.values.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(rs.active.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(failed.len() as u32).to_le_bytes());
+    for v in &rs.values {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for a in &rs.active {
+        out.extend_from_slice(&a.to_le_bytes());
+    }
+    out.extend_from_slice(failed.as_bytes());
+    out.extend_from_slice(&crc32fast::hash(&out).to_le_bytes());
+    out
+}
+
+/// Decode + verify one lane file (magic, version, declared lengths,
+/// trailing CRC).
+pub fn decode_lane(bytes: &[u8]) -> Result<ResumeState> {
+    anyhow::ensure!(
+        bytes.len() >= LANE_HEADER + 4,
+        "lane file truncated: {} bytes",
+        bytes.len()
+    );
+    let (body, tail) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(tail.try_into().expect("4-byte tail"));
+    let computed = crc32fast::hash(body);
+    anyhow::ensure!(
+        stored == computed,
+        "lane file CRC mismatch (stored {stored:08x}, computed {computed:08x}) — corrupt"
+    );
+    anyhow::ensure!(body[..4] == *LANE_MAGIC, "bad lane file magic");
+    let rd = |off: usize| u32::from_le_bytes(body[off..off + 4].try_into().expect("in bounds"));
+    let version = rd(4);
+    anyhow::ensure!(version == LANE_VERSION, "unsupported lane file version {version}");
+    let iters_done = rd(8);
+    let flags = rd(12);
+    let nv = rd(16) as usize;
+    let na = rd(20) as usize;
+    let nf = rd(24) as usize;
+    let need = LANE_HEADER + nv * 4 + na * 4 + nf;
+    anyhow::ensure!(
+        body.len() == need,
+        "lane file holds {} payload bytes, header declares {need}",
+        body.len()
+    );
+    let mut off = LANE_HEADER;
+    let mut values = Vec::with_capacity(nv);
+    for _ in 0..nv {
+        values.push(f32::from_bits(rd(off)));
+        off += 4;
+    }
+    let mut active = Vec::with_capacity(na);
+    for _ in 0..na {
+        active.push(rd(off));
+        off += 4;
+    }
+    let msg = std::str::from_utf8(&body[off..off + nf])
+        .context("lane failure message is not UTF-8")?;
+    Ok(ResumeState {
+        values,
+        active,
+        iters_done,
+        done: flags & 1 != 0,
+        converged: flags & 2 != 0,
+        failed: (flags & 4 != 0).then(|| msg.to_string()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("graphmp_ckpt_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn lane(values: Vec<f32>, active: Vec<u32>, iters: u32) -> ResumeState {
+        ResumeState { values, active, iters_done: iters, ..Default::default() }
+    }
+
+    fn snaps(states: &[ResumeState]) -> Vec<LaneSnapshot<'_>> {
+        states
+            .iter()
+            .map(|s| LaneSnapshot {
+                values: &s.values,
+                active: &s.active,
+                iters_done: s.iters_done,
+                done: s.done,
+                converged: s.converged,
+                failed: s.failed.as_deref(),
+            })
+            .collect()
+    }
+
+    fn writer(dir: &Path, every: u32, n: u32, roster: Vec<(u32, u32)>) -> CheckpointWriter {
+        CheckpointWriter::new(
+            CheckpointConfig::new(dir, every),
+            Disk::unthrottled(),
+            BatchMeta {
+                num_vertices: n,
+                num_edges: 9,
+                batch_index: 0,
+                roster,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn lane_round_trips_bit_exact() {
+        let mut rs = lane(vec![0.5, f32::INFINITY, -0.0, 1.0e-39], vec![0, 3], 7);
+        rs.done = true;
+        rs.converged = true;
+        rs.failed = Some("load unit 2: boom".to_string());
+        let enc = encode_lane(&rs);
+        let dec = decode_lane(&enc).unwrap();
+        assert_eq!(
+            dec.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            rs.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(dec.active, rs.active);
+        assert_eq!((dec.iters_done, dec.done, dec.converged), (7, true, true));
+        assert_eq!(dec.failed.as_deref(), Some("load unit 2: boom"));
+    }
+
+    #[test]
+    fn lane_bitflip_detected() {
+        let mut enc = encode_lane(&lane(vec![1.0, 2.0], vec![1], 1));
+        enc[LANE_HEADER + 2] ^= 0x40;
+        let err = decode_lane(&enc).unwrap_err().to_string();
+        assert!(err.contains("CRC mismatch"), "{err}");
+        let whole = encode_lane(&lane(vec![1.0], vec![], 0));
+        let err = decode_lane(&whole[..10]).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn write_load_round_trip_with_pending_and_finished() {
+        let dir = tdir("round_trip");
+        let states =
+            vec![lane(vec![1.0, 2.0, 3.0], vec![0, 2], 4), lane(vec![4.0, 5.0, 6.0], vec![1], 4)];
+        let mut w = writer(&dir, 2, 3, vec![(0, 0), (2, 1), (5, 6)]);
+        w.meta.finished = vec![JobRecord {
+            id: 9,
+            arrive: 0,
+            state: ResumeState { values: vec![7.0, 8.0, 9.0], done: true, ..Default::default() },
+        }];
+        w.at_boundary(4, &snaps(&states)).unwrap();
+        assert_eq!(w.checkpoints_written, 1);
+        assert!(w.checkpoint_bytes > 0);
+
+        let out = load_latest(&dir, &Disk::unthrottled()).unwrap();
+        assert!(out.rejected.is_empty());
+        let (path, st) = out.loaded.unwrap();
+        assert!(path.ends_with("ckpt_000004"));
+        assert_eq!((st.num_vertices, st.num_edges, st.pass), (3, 9, 4));
+        assert_eq!((st.batch_index, st.start), (0, 0));
+        assert_eq!(st.lanes.len(), 2);
+        assert_eq!((st.lanes[0].id, st.lanes[1].id), (0, 2));
+        assert_eq!(st.lanes[1].state.values, vec![4.0, 5.0, 6.0]);
+        assert_eq!(st.pending, vec![(5, 6)]);
+        assert_eq!(st.finished.len(), 1);
+        assert_eq!(st.finished[0].state.values, vec![7.0, 8.0, 9.0]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cadence_and_kill_hook() {
+        let dir = tdir("cadence");
+        let states = vec![lane(vec![0.0], vec![0], 0)];
+        let mut w = writer(&dir, 3, 1, vec![(0, 0)]);
+        w.cfg.kill_at_pass = Some(6);
+        w.at_boundary(0, &snaps(&states)).unwrap(); // pass 0: never written
+        w.at_boundary(3, &snaps(&states)).unwrap();
+        w.at_boundary(4, &snaps(&states)).unwrap(); // off-cadence
+        let err = w.at_boundary(6, &snaps(&states)).unwrap_err().to_string();
+        assert!(err.contains("injected crash at pass boundary 6"), "{err}");
+        assert_eq!(w.checkpoints_written, 2, "pass 6 checkpointed before the kill");
+        assert!(dir.join("ckpt_000006").join("MANIFEST").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resumed_writer_skips_its_base_pass() {
+        let dir = tdir("base_pass");
+        let states = vec![lane(vec![0.0], vec![0], 4)];
+        let mut w = writer(&dir, 2, 1, vec![(0, 0)]).with_base_pass(4);
+        w.at_boundary(0, &snaps(&states)).unwrap(); // global 4 == base: skip
+        assert_eq!(w.checkpoints_written, 0);
+        w.at_boundary(2, &snaps(&states)).unwrap(); // global 6
+        assert_eq!(w.checkpoints_written, 1);
+        assert!(dir.join("ckpt_000006").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn retention_keeps_newest_two() {
+        let dir = tdir("retention");
+        let states = vec![lane(vec![0.0], vec![0], 0)];
+        let mut w = writer(&dir, 1, 1, vec![(0, 0)]);
+        for pass in 1..=3 {
+            w.at_boundary(pass, &snaps(&states)).unwrap();
+        }
+        assert!(!dir.join("ckpt_000001").exists(), "oldest pruned");
+        assert!(dir.join("ckpt_000002").exists());
+        assert!(dir.join("ckpt_000003").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous_good() {
+        let dir = tdir("fallback");
+        let states = vec![lane(vec![1.0, 2.0], vec![0], 0)];
+        let mut w = writer(&dir, 1, 2, vec![(0, 0)]);
+        w.at_boundary(1, &snaps(&states)).unwrap();
+        w.at_boundary(2, &snaps(&states)).unwrap();
+        // bit-flip a value byte inside the newest checkpoint's lane file
+        let victim = dir.join("ckpt_000002").join("job_000.bin");
+        let mut data = std::fs::read(&victim).unwrap();
+        let n = data.len();
+        data[LANE_HEADER + 1] ^= 0x01;
+        std::fs::write(&victim, &data).unwrap();
+        assert_eq!(std::fs::read(&victim).unwrap().len(), n);
+
+        let out = load_latest(&dir, &Disk::unthrottled()).unwrap();
+        let (path, st) = out.loaded.unwrap();
+        assert!(path.ends_with("ckpt_000001"), "fell back to the previous good one");
+        assert_eq!(st.pass, 1);
+        assert_eq!(out.rejected.len(), 1);
+        assert!(out.rejected[0].1.contains("CRC mismatch"), "{}", out.rejected[0].1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_manifest_rejected_with_reason() {
+        let dir = tdir("truncated");
+        let states = vec![lane(vec![1.0], vec![0], 0)];
+        let mut w = writer(&dir, 1, 1, vec![(0, 0)]);
+        w.at_boundary(1, &snaps(&states)).unwrap();
+        let mpath = dir.join("ckpt_000001").join("MANIFEST");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, &text[..text.len() / 2]).unwrap();
+        let out = load_latest(&dir, &Disk::unthrottled()).unwrap();
+        assert!(out.loaded.is_none());
+        assert_eq!(out.rejected.len(), 1);
+        let why = &out.rejected[0].1;
+        assert!(
+            why.contains("integrity trailer") || why.contains("CRC mismatch"),
+            "{why}"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let dir = tdir("version");
+        let states = vec![lane(vec![1.0], vec![0], 0)];
+        let mut w = writer(&dir, 1, 1, vec![(0, 0)]);
+        w.at_boundary(1, &snaps(&states)).unwrap();
+        let mpath = dir.join("ckpt_000001").join("MANIFEST");
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        // rewrite with a bumped version and a *valid* trailer, so the
+        // version check itself is what rejects it
+        let body = text[..text.rfind("\nend crc=").unwrap() + 1]
+            .replacen("graphmp-ckpt v1", "graphmp-ckpt v9", 1);
+        let tampered = format!("{body}end crc={:08x}\n", crc32fast::hash(body.as_bytes()));
+        std::fs::write(&mpath, tampered).unwrap();
+        let err = load_checkpoint(&dir.join("ckpt_000001"), &Disk::unthrottled())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unsupported checkpoint version"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_dir_loads_nothing() {
+        let dir = tdir("empty");
+        let out = load_latest(&dir, &Disk::unthrottled()).unwrap();
+        assert!(out.loaded.is_none() && out.rejected.is_empty());
+        assert!(load_latest(&dir.join("missing"), &Disk::unthrottled()).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

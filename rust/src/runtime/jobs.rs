@@ -19,13 +19,23 @@
 //! `graphmp run --jobs N --arrivals <spec>`).  If every running job
 //! finishes before an arrival's pass, the batch fast-forwards to it
 //! rather than ending with work still queued.
+//!
+//! Crash safety (PR 6): [`run_all_checkpointed`](JobSet::run_all_checkpointed)
+//! persists the whole drain state every K pass boundaries through
+//! [`super::checkpoint`]; [`resume`](JobSet::resume) restores an
+//! interrupted drain from the newest valid checkpoint and replays
+//! exactly the remainder — final values are bit-identical to the
+//! uninterrupted run (`rust/tests/recovery.rs`).  A job whose I/O fails
+//! hard under failure isolation ends [`JobStatus::Failed`] without
+//! poisoning its batch.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
+use super::checkpoint::{self, BatchMeta, CheckpointConfig, CheckpointWriter};
 use crate::apps::VertexProgram;
 use crate::engine::VswEngine;
-use crate::exec::{BatchJob, MAX_BATCH_JOBS};
-use crate::metrics::{BatchMetrics, RunMetrics};
+use crate::exec::{BatchJob, BatchOptions, ResumeState, MAX_BATCH_JOBS};
+use crate::metrics::{BatchMetrics, JobMetrics, RunMetrics};
 
 pub type JobId = u32;
 
@@ -41,6 +51,11 @@ pub enum JobStatus {
     /// Finished by exhausting `max_iters` with vertices still active
     /// (normal for PageRank-family fixed-iteration queries).
     IterLimit,
+    /// Failed in isolation: a hard load/compute error was contained to
+    /// this job ([`crate::exec::ExecConfig::isolate_failures`]) while the
+    /// rest of its batch completed unperturbed.  The first failure is in
+    /// [`crate::metrics::RunMetrics::failed`].
+    Failed,
 }
 
 /// What to run: the vertex program plus its per-job iteration budget.
@@ -87,6 +102,13 @@ impl BatchReport {
             agg.bytes_read += b.bytes_read;
             agg.total_wall += b.total_wall;
             agg.total_sim_disk_seconds += b.total_sim_disk_seconds;
+            agg.checkpoints_written += b.checkpoints_written;
+            agg.checkpoint_bytes += b.checkpoint_bytes;
+            agg.checkpoint_seconds += b.checkpoint_seconds;
+            if agg.resumed_from_pass.is_none() {
+                agg.resumed_from_pass = b.resumed_from_pass;
+            }
+            agg.jobs_failed += b.jobs_failed;
             agg.per_job.extend(b.per_job.iter().copied());
         }
         agg
@@ -190,6 +212,59 @@ impl JobSet {
     /// execution error leaves the current batch's jobs `Running` (their
     /// results unset) and is returned.
     pub fn run_all(&mut self, engine: &mut VswEngine) -> Result<BatchReport> {
+        self.drain(engine, None, 0)
+    }
+
+    /// [`run_all`](Self::run_all) with crash safety: every batch runs
+    /// under a [`CheckpointWriter`] that atomically persists the full
+    /// drain state (per-job lanes, pending arrivals, earlier results)
+    /// into `cfg.dir` every `cfg.every` pass boundaries.  After a crash,
+    /// rebuild the same job set and call [`resume`](Self::resume).
+    pub fn run_all_checkpointed(
+        &mut self,
+        engine: &mut VswEngine,
+        cfg: &CheckpointConfig,
+    ) -> Result<BatchReport> {
+        self.drain(engine, Some(cfg), 0)
+    }
+
+    /// Carried-forward results of already-finished jobs, persisted into
+    /// every checkpoint so a resumed drain hands them back without
+    /// re-running anything.
+    fn finished_records(&self) -> Vec<checkpoint::JobRecord> {
+        self.jobs
+            .iter()
+            .filter(|j| {
+                matches!(
+                    j.status,
+                    JobStatus::Converged | JobStatus::IterLimit | JobStatus::Failed
+                )
+            })
+            .map(|j| checkpoint::JobRecord {
+                id: j.id,
+                arrive: 0,
+                state: ResumeState {
+                    values: j.values.clone().unwrap_or_default(),
+                    active: Vec::new(),
+                    iters_done: j.run.as_ref().map_or(0, |r| r.job.iterations),
+                    done: true,
+                    converged: j.status == JobStatus::Converged,
+                    failed: j.run.as_ref().and_then(|r| r.failed.clone()),
+                },
+            })
+            .collect()
+    }
+
+    /// `pass_base` numbers checkpoints *drain-globally*: each batch's
+    /// writer continues where the previous batch's passes ended, so
+    /// retention always keeps the genuinely newest checkpoints (per-batch
+    /// numbering would collide across batches and prune fresh ones).
+    fn drain(
+        &mut self,
+        engine: &mut VswEngine,
+        ckpt: Option<&CheckpointConfig>,
+        mut pass_base: u32,
+    ) -> Result<BatchReport> {
         let mut report = BatchReport::default();
         loop {
             let batch: Vec<usize> = self
@@ -242,6 +317,37 @@ impl JobSet {
                 .collect();
             arrivals.sort_by_key(|&i| (self.jobs[i].arrive_pass, i));
 
+            // the checkpoint writer snapshots membership up front: the
+            // roster (id, relative arrival) of every batch member plus
+            // the carried results of jobs finished in earlier batches
+            let mut writer = match ckpt {
+                Some(cfg) => {
+                    let roster: Vec<(u32, u32)> = founders
+                        .iter()
+                        .map(|&i| (self.jobs[i].id, 0))
+                        .chain(
+                            arrivals
+                                .iter()
+                                .map(|&i| (self.jobs[i].id, self.jobs[i].arrive_pass - base)),
+                        )
+                        .collect();
+                    let prop = engine.property();
+                    let meta = BatchMeta {
+                        num_vertices: prop.num_vertices,
+                        num_edges: prop.num_edges,
+                        batch_index: report.batches.len() as u32,
+                        start: pass_base,
+                        roster,
+                        finished: self.finished_records(),
+                    };
+                    Some(
+                        CheckpointWriter::new(cfg.clone(), engine.disk().clone(), meta)
+                            .with_base_pass(pass_base),
+                    )
+                }
+                None => None,
+            };
+
             let jobs_ref: &[Job] = &self.jobs;
             let as_batch_job = |i: usize| BatchJob {
                 app: jobs_ref[i].spec.app.as_ref(),
@@ -266,21 +372,32 @@ impl JobSet {
                 }
                 out
             };
-            // no staggered arrivals → the closed batch path (skips the
-            // interactive-only degree-array materialization)
-            let (outs, metrics) = if arrivals.is_empty() {
-                engine.run_jobs(&specs)?
-            } else {
-                engine.run_jobs_interactive(&specs, intake)?
+            // no staggered arrivals and no checkpointing → the closed
+            // batch path (skips the interactive-only degree-array
+            // materialization)
+            let (outs, mut metrics) = match writer.as_mut() {
+                Some(w) => {
+                    let opts = BatchOptions { resume: Vec::new(), observer: Some(w) };
+                    engine.run_jobs_with(&specs, intake, opts)?
+                }
+                None if arrivals.is_empty() => engine.run_jobs(&specs)?,
+                None => engine.run_jobs_interactive(&specs, intake)?,
             };
             drop(specs);
+            if let Some(w) = &writer {
+                metrics.checkpoints_written = w.checkpoints_written;
+                metrics.checkpoint_bytes = w.checkpoint_bytes;
+                metrics.checkpoint_seconds = w.checkpoint_seconds;
+            }
             // outputs come back in admission order: founders first, then
             // arrivals in the order the intake released them
             let order: Vec<usize> = founders.iter().chain(&arrivals).copied().collect();
             debug_assert_eq!(order.len(), outs.len());
             for (&i, (values, run)) in order.iter().zip(outs) {
                 let job = &mut self.jobs[i];
-                job.status = if run.converged {
+                job.status = if run.failed.is_some() {
+                    JobStatus::Failed
+                } else if run.converged {
                     JobStatus::Converged
                 } else {
                     JobStatus::IterLimit
@@ -288,8 +405,185 @@ impl JobSet {
                 job.values = Some(values);
                 job.run = Some(run);
             }
+            pass_base = pass_base.saturating_add(metrics.passes);
             report.batches.push(metrics);
         }
+        Ok(report)
+    }
+
+    /// Restore an interrupted
+    /// [`run_all_checkpointed`](Self::run_all_checkpointed) drain from
+    /// the newest valid checkpoint in `cfg.dir`.  Call it on a freshly
+    /// rebuilt job set holding the *same* submissions in the same order:
+    /// jobs that finished before the crash get their persisted results
+    /// back without re-running, the interrupted batch's admitted lanes
+    /// pick up exactly where the checkpoint captured them (the remainder
+    /// of the drain is bit-identical to the uninterrupted run),
+    /// not-yet-admitted members re-arrive at their remaining offset, and
+    /// batches that never started run afterwards — all under continued
+    /// checkpointing with globally continuing pass numbers.
+    ///
+    /// Corrupt or truncated checkpoints are rejected individually
+    /// (CRC/version/structure checks in [`super::checkpoint`]) and the
+    /// newest *valid* one wins; if none survives, the error lists every
+    /// candidate with its rejection reason.
+    pub fn resume(
+        &mut self,
+        engine: &mut VswEngine,
+        cfg: &CheckpointConfig,
+    ) -> Result<BatchReport> {
+        let disk = engine.disk().clone();
+        let outcome = checkpoint::load_latest(&cfg.dir, &disk)?;
+        let Some((path, state)) = outcome.loaded else {
+            let mut msg = format!("no valid checkpoint in {}", cfg.dir.display());
+            for (p, why) in &outcome.rejected {
+                msg.push_str(&format!("\n  rejected {}: {why}", p.display()));
+            }
+            anyhow::bail!("{msg}");
+        };
+        {
+            let prop = engine.property();
+            anyhow::ensure!(
+                state.num_vertices == prop.num_vertices && state.num_edges == prop.num_edges,
+                "{}: checkpoint is for a {}-vertex/{}-edge graph, this dir has {}/{}",
+                path.display(),
+                state.num_vertices,
+                state.num_edges,
+                prop.num_vertices,
+                prop.num_edges
+            );
+        }
+        // hand back the results of jobs that finished before the crash
+        for rec in &state.finished {
+            let job = self.jobs.get_mut(rec.id as usize).with_context(|| {
+                format!("{}: finished job {} is not in this job set", path.display(), rec.id)
+            })?;
+            anyhow::ensure!(
+                job.status == JobStatus::Queued,
+                "job {} already ran in this job set",
+                rec.id
+            );
+            job.status = if rec.state.failed.is_some() {
+                JobStatus::Failed
+            } else if rec.state.converged {
+                JobStatus::Converged
+            } else {
+                JobStatus::IterLimit
+            };
+            job.values = Some(rec.state.values.clone());
+            job.run = Some(RunMetrics {
+                converged: rec.state.converged,
+                failed: rec.state.failed.clone(),
+                job: JobMetrics { iterations: rec.state.iters_done, ..Default::default() },
+                ..Default::default()
+            });
+        }
+        let mut report = BatchReport::default();
+        let mut next_base = state.pass;
+        if !state.lanes.is_empty() {
+            let members: Vec<u32> = state
+                .lanes
+                .iter()
+                .map(|r| r.id)
+                .chain(state.pending.iter().map(|&(id, _)| id))
+                .collect();
+            for id in members {
+                let job = self.jobs.get_mut(id as usize).with_context(|| {
+                    format!("{}: batch member {id} is not in this job set", path.display())
+                })?;
+                anyhow::ensure!(
+                    job.status == JobStatus::Queued,
+                    "job {id} already ran in this job set"
+                );
+                anyhow::ensure!(
+                    !job.spec.app.needs_weights() || engine.property().weighted,
+                    "{} (job {id}) needs a weighted graph dir",
+                    job.spec.app.name()
+                );
+                job.status = JobStatus::Running;
+            }
+            let roster: Vec<(u32, u32)> = state
+                .lanes
+                .iter()
+                .map(|r| (r.id, r.arrive))
+                .chain(state.pending.iter().copied())
+                .collect();
+            let meta = BatchMeta {
+                num_vertices: state.num_vertices,
+                num_edges: state.num_edges,
+                batch_index: state.batch_index,
+                start: state.start,
+                roster,
+                finished: state.finished.clone(),
+            };
+            let mut writer =
+                CheckpointWriter::new(cfg.clone(), disk, meta).with_base_pass(state.pass);
+
+            let jobs_ref: &[Job] = &self.jobs;
+            let as_batch_job = |id: u32| BatchJob {
+                app: jobs_ref[id as usize].spec.app.as_ref(),
+                max_iters: jobs_ref[id as usize].spec.max_iters,
+            };
+            let specs: Vec<BatchJob<'_>> =
+                state.lanes.iter().map(|r| as_batch_job(r.id)).collect();
+            let resume_states: Vec<Option<ResumeState>> =
+                state.lanes.iter().map(|r| Some(r.state.clone())).collect();
+            // members the checkpoint had not yet admitted re-arrive at
+            // their *remaining* offset past the restored pass clock;
+            // arrivals are batch-local, so rebase on the batch-local
+            // checkpoint boundary (not the drain-global pass number)
+            let local_ckpt = state.pass - state.start;
+            let pending = &state.pending;
+            let mut cursor = 0usize;
+            let intake = |pass: u32, running: usize| {
+                let mut out = Vec::new();
+                while cursor < pending.len() {
+                    let (id, arrive) = pending[cursor];
+                    let due = arrive.saturating_sub(local_ckpt) <= pass;
+                    if due || (running == 0 && out.is_empty()) {
+                        out.push(as_batch_job(id));
+                        cursor += 1;
+                    } else {
+                        break;
+                    }
+                }
+                out
+            };
+            let opts = BatchOptions { resume: resume_states, observer: Some(&mut writer) };
+            let (outs, mut metrics) = engine.run_jobs_with(&specs, intake, opts)?;
+            drop(specs);
+            metrics.resumed_from_pass = Some(state.pass);
+            metrics.checkpoints_written = writer.checkpoints_written;
+            metrics.checkpoint_bytes = writer.checkpoint_bytes;
+            metrics.checkpoint_seconds = writer.checkpoint_seconds;
+            let order: Vec<u32> = state
+                .lanes
+                .iter()
+                .map(|r| r.id)
+                .chain(state.pending.iter().map(|&(id, _)| id))
+                .collect();
+            debug_assert_eq!(order.len(), outs.len());
+            for (&id, (values, run)) in order.iter().zip(outs) {
+                let job = &mut self.jobs[id as usize];
+                job.status = if run.failed.is_some() {
+                    JobStatus::Failed
+                } else if run.converged {
+                    JobStatus::Converged
+                } else {
+                    JobStatus::IterLimit
+                };
+                job.values = Some(values);
+                job.run = Some(run);
+            }
+            next_base = state.pass.saturating_add(metrics.passes);
+            report.batches.push(metrics);
+        }
+        // batches the crash never reached drain normally, still
+        // checkpointed under the same directory — with pass numbering
+        // continuing where the resumed batch ended, exactly as it would
+        // have in the uninterrupted drain
+        let rest = self.drain(engine, Some(cfg), next_base)?;
+        report.batches.extend(rest.batches);
         Ok(report)
     }
 }

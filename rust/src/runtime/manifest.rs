@@ -58,12 +58,20 @@ impl Manifest {
                     "rc" => rc = v.parse()?,
                     "iters" => iters = Some(v.parse()?),
                     "path" => path = v.to_string(),
-                    _ => {} // forward-compatible: ignore unknown keys
+                    _ => anyhow::bail!(
+                        "manifest line {}: unknown key '{k}' in field '{field}'",
+                        ln + 1
+                    ),
                 }
             }
             anyhow::ensure!(
                 !path.is_empty() && vc > 0 && ec > 0 && rc > 0,
                 "manifest line {}: incomplete artifact record",
+                ln + 1
+            );
+            anyhow::ensure!(
+                !artifacts.iter().any(|a: &Artifact| a.name == name),
+                "manifest line {}: duplicate artifact name '{name}'",
                 ln + 1
             );
             artifacts.push(Artifact { name, variant, vc, ec, rc, iters, path });
@@ -139,9 +147,27 @@ artifact pagerank_power_tiny variant=tiny vc=2048 ec=8192 rc=512 iters=10 path=p
     }
 
     #[test]
-    fn unknown_keys_ignored() {
-        let m =
-            Manifest::parse("artifact x variant=v vc=1 ec=1 rc=1 newkey=3 path=p\n").unwrap();
-        assert_eq!(m.artifacts.len(), 1);
+    fn rejects_unknown_keys_with_line_number() {
+        let err = Manifest::parse(
+            "artifact a variant=v vc=1 ec=1 rc=1 path=p\n\
+             artifact x variant=v vc=1 ec=1 rc=1 newkey=3 path=p\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("newkey"), "{err}");
+    }
+
+    #[test]
+    fn rejects_duplicate_names_with_line_number() {
+        let err = Manifest::parse(
+            "artifact x variant=v vc=1 ec=1 rc=1 path=p\n\
+             # comment\n\
+             artifact x variant=w vc=2 ec=2 rc=2 path=q\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("line 3"), "{err}");
+        assert!(err.contains("duplicate artifact name 'x'"), "{err}");
     }
 }

@@ -1,5 +1,5 @@
-//! Runtime services: the multi-job scheduler ([`jobs`]) and the PJRT
-//! backend (below).
+//! Runtime services: the multi-job scheduler ([`jobs`]), crash-safe
+//! checkpoint/recovery ([`checkpoint`]) and the PJRT backend (below).
 //!
 //! # PJRT backend
 //!
@@ -17,6 +17,7 @@
 //! [`ShardExecutor::load`] returns an error and the engine's native
 //! backend (the default) is unaffected.
 
+pub mod checkpoint;
 pub mod jobs;
 pub mod manifest;
 
@@ -27,6 +28,7 @@ use anyhow::Result;
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 
+pub use checkpoint::{CheckpointConfig, CheckpointState, CheckpointWriter};
 pub use jobs::{BatchReport, Job, JobId, JobSet, JobSpec, JobStatus};
 pub use manifest::{Artifact, Manifest};
 

@@ -13,7 +13,8 @@
 use std::fs;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -82,6 +83,8 @@ pub struct IoStats {
     pub write_ops: AtomicU64,
     /// Simulated device time in nanoseconds (0 when unthrottled).
     pub sim_nanos: AtomicU64,
+    /// Read attempts that failed and were retried (transient-error model).
+    pub read_retries: AtomicU64,
 }
 
 /// Point-in-time snapshot of [`IoStats`].
@@ -92,6 +95,7 @@ pub struct IoSnapshot {
     pub read_ops: u64,
     pub write_ops: u64,
     pub sim_nanos: u64,
+    pub read_retries: u64,
 }
 
 impl IoSnapshot {
@@ -107,7 +111,72 @@ impl IoSnapshot {
             read_ops: self.read_ops - earlier.read_ops,
             write_ops: self.write_ops - earlier.write_ops,
             sim_nanos: self.sim_nanos - earlier.sim_nanos,
+            read_retries: self.read_retries - earlier.read_retries,
         }
+    }
+}
+
+/// Bounded-retry policy applied to every read that goes through [`Disk`].
+/// Transient failures (injected or real) are retried with exponential
+/// backoff; `NotFound` is terminal immediately — retrying a missing file
+/// cannot help.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    pub backoff_base: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_retries: 3, backoff_base: Duration::from_micros(500) }
+    }
+}
+
+/// One injected read-failure rule, matched by path substring.
+#[derive(Clone, Debug)]
+struct FaultRule {
+    substr: String,
+    /// Matching attempts to let through before the rule starts firing.
+    skip: u32,
+    /// Remaining failures once firing; `None` = hard fault (fails forever).
+    remaining: Option<u32>,
+}
+
+/// Injectable failure plan shared by all clones of a [`Disk`] handle, so a
+/// test can arm faults on the handle it kept while the engine reads through
+/// its own clone.
+#[derive(Debug, Default)]
+struct FaultPlan {
+    rules: Mutex<Vec<FaultRule>>,
+    policy: Mutex<RetryPolicy>,
+}
+
+impl FaultPlan {
+    /// Consult the plan for one read attempt of `path`.  Returns
+    /// `Some(hard)` when the attempt must fail, updating rule state.
+    fn take_fault(&self, path: &Path) -> Option<bool> {
+        let s = path.to_string_lossy();
+        let mut rules = self.rules.lock().unwrap();
+        for i in 0..rules.len() {
+            if !s.contains(&rules[i].substr) {
+                continue;
+            }
+            if rules[i].skip > 0 {
+                rules[i].skip -= 1;
+                return None;
+            }
+            match &mut rules[i].remaining {
+                None => return Some(true),
+                Some(k) => {
+                    *k -= 1;
+                    if *k == 0 {
+                        rules.remove(i);
+                    }
+                    return Some(false);
+                }
+            }
+        }
+        None
     }
 }
 
@@ -116,11 +185,16 @@ impl IoSnapshot {
 pub struct Disk {
     profile: DiskProfile,
     stats: Arc<IoStats>,
+    faults: Arc<FaultPlan>,
 }
 
 impl Disk {
     pub fn new(profile: DiskProfile) -> Self {
-        Disk { profile, stats: Arc::new(IoStats::default()) }
+        Disk {
+            profile,
+            stats: Arc::new(IoStats::default()),
+            faults: Arc::new(FaultPlan::default()),
+        }
     }
 
     pub fn unthrottled() -> Self {
@@ -138,6 +212,7 @@ impl Disk {
             read_ops: self.stats.read_ops.load(Ordering::Relaxed),
             write_ops: self.stats.write_ops.load(Ordering::Relaxed),
             sim_nanos: self.stats.sim_nanos.load(Ordering::Relaxed),
+            read_retries: self.stats.read_retries.load(Ordering::Relaxed),
         }
     }
 
@@ -147,11 +222,91 @@ impl Disk {
         self.stats.read_ops.store(0, Ordering::Relaxed);
         self.stats.write_ops.store(0, Ordering::Relaxed);
         self.stats.sim_nanos.store(0, Ordering::Relaxed);
+        self.stats.read_retries.store(0, Ordering::Relaxed);
+    }
+
+    /// Arm a transient fault: after `skip` successful read attempts of any
+    /// path containing `substr`, the next `count` attempts fail.  With the
+    /// default [`RetryPolicy`] a job survives up to `max_retries` failures
+    /// per read.
+    pub fn inject_read_fault(&self, substr: &str, skip: u32, count: u32) {
+        assert!(count > 0, "transient fault needs count >= 1");
+        self.faults.rules.lock().unwrap().push(FaultRule {
+            substr: substr.to_string(),
+            skip,
+            remaining: Some(count),
+        });
+    }
+
+    /// Arm a hard fault: after `skip` successful attempts, every read of a
+    /// matching path fails — exceeding any retry budget.
+    pub fn inject_hard_read_fault(&self, substr: &str, skip: u32) {
+        self.faults.rules.lock().unwrap().push(FaultRule {
+            substr: substr.to_string(),
+            skip,
+            remaining: None,
+        });
+    }
+
+    pub fn clear_read_faults(&self) {
+        self.faults.rules.lock().unwrap().clear();
+    }
+
+    pub fn set_retry_policy(&self, policy: RetryPolicy) {
+        *self.faults.policy.lock().unwrap() = policy;
+    }
+
+    pub fn retry_policy(&self) -> RetryPolicy {
+        *self.faults.policy.lock().unwrap()
+    }
+
+    /// Run one logical read of `path` under the retry policy: each attempt
+    /// first consults the fault plan, then runs `op`.  Failed attempts are
+    /// retried with exponential backoff up to `max_retries` times, counted
+    /// in [`IoStats::read_retries`]; `NotFound` fails immediately.
+    fn with_read_retries<T>(
+        &self,
+        path: &Path,
+        mut op: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
+        let policy = self.retry_policy();
+        let mut attempt: u32 = 0;
+        loop {
+            let res = match self.faults.take_fault(path) {
+                Some(hard) => Err(anyhow::anyhow!(
+                    "injected {} read fault: {}",
+                    if hard { "hard" } else { "transient" },
+                    path.display()
+                )),
+                None => op(),
+            };
+            match res {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    let not_found = e
+                        .root_cause()
+                        .downcast_ref::<std::io::Error>()
+                        .is_some_and(|io| io.kind() == std::io::ErrorKind::NotFound);
+                    if not_found || attempt >= policy.max_retries {
+                        return Err(e.context(format!(
+                            "read {} failed after {} attempt(s)",
+                            path.display(),
+                            attempt + 1
+                        )));
+                    }
+                    std::thread::sleep(policy.backoff_base * 2u32.saturating_pow(attempt.min(10)));
+                    self.stats.read_retries.fetch_add(1, Ordering::Relaxed);
+                    attempt += 1;
+                }
+            }
+        }
     }
 
     /// Read a whole file, metering + simulating device time.
     pub fn read_file(&self, path: &Path) -> Result<Vec<u8>> {
-        let data = fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        let data = self.with_read_retries(path, || {
+            fs::read(path).with_context(|| format!("read {}", path.display()))
+        })?;
         self.account_read(data.len() as u64);
         Ok(data)
     }
@@ -180,16 +335,19 @@ impl Disk {
     fn read_file_aligned_with(
         &self,
         path: &Path,
-        alloc: impl FnOnce(usize) -> super::view::AlignedBuf,
+        alloc: impl Fn(usize) -> super::view::AlignedBuf,
     ) -> Result<super::view::AlignedBuf> {
         use std::io::Read;
-        let mut f =
-            fs::File::open(path).with_context(|| format!("read {}", path.display()))?;
-        let len = f.metadata()?.len() as usize;
-        let mut buf = alloc(len);
-        f.read_exact(buf.as_bytes_mut())
-            .with_context(|| format!("read {}", path.display()))?;
-        self.account_read(len as u64);
+        let buf = self.with_read_retries(path, || {
+            let mut f =
+                fs::File::open(path).with_context(|| format!("read {}", path.display()))?;
+            let len = f.metadata()?.len() as usize;
+            let mut buf = alloc(len);
+            f.read_exact(buf.as_bytes_mut())
+                .with_context(|| format!("read {}", path.display()))?;
+            Ok(buf)
+        })?;
+        self.account_read(buf.as_bytes().len() as u64);
         Ok(buf)
     }
 
@@ -200,6 +358,24 @@ impl Disk {
         }
         fs::write(path, bytes).with_context(|| format!("write {}", path.display()))?;
         self.account_write(bytes.len() as u64);
+        Ok(())
+    }
+
+    /// Durable write for checkpoint artifacts: write, fsync the file, then
+    /// fsync the parent directory so the new entry itself survives a crash.
+    pub fn write_file_durable(&self, path: &Path, bytes: &[u8]) -> Result<()> {
+        use std::io::Write;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f =
+            fs::File::create(path).with_context(|| format!("write {}", path.display()))?;
+        f.write_all(bytes).with_context(|| format!("write {}", path.display()))?;
+        f.sync_all().with_context(|| format!("fsync {}", path.display()))?;
+        self.account_write(bytes.len() as u64);
+        if let Some(parent) = path.parent() {
+            sync_dir(parent)?;
+        }
         Ok(())
     }
 
@@ -237,6 +413,13 @@ impl Disk {
         let nanos = self.profile.seek_nanos + bytes.saturating_mul(1_000_000_000) / bw;
         self.stats.sim_nanos.fetch_add(nanos, Ordering::Relaxed);
     }
+}
+
+/// fsync a directory, making renames/creations inside it durable.
+pub fn sync_dir(path: &Path) -> Result<()> {
+    let f = fs::File::open(path).with_context(|| format!("open dir {}", path.display()))?;
+    f.sync_all().with_context(|| format!("fsync dir {}", path.display()))?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -331,6 +514,88 @@ mod tests {
         disk.account_write(10);
         disk.reset();
         assert_eq!(disk.snapshot(), IoSnapshot::default());
+    }
+
+    fn fast_retry(disk: &Disk) {
+        disk.set_retry_policy(RetryPolicy {
+            max_retries: 3,
+            backoff_base: Duration::from_micros(10),
+        });
+    }
+
+    #[test]
+    fn transient_fault_retried_then_succeeds() {
+        let dir = std::env::temp_dir().join("graphmp_disk_transient_test");
+        let _ = fs::remove_dir_all(&dir);
+        let disk = Disk::unthrottled();
+        fast_retry(&disk);
+        let p = dir.join("flaky.bin");
+        disk.write_file(&p, b"payload").unwrap();
+        disk.inject_read_fault("flaky.bin", 0, 2);
+        let b = disk.read_file(&p).unwrap();
+        assert_eq!(b, b"payload");
+        assert_eq!(disk.snapshot().read_retries, 2);
+        // rule exhausted: next read is clean
+        disk.read_file(&p).unwrap();
+        assert_eq!(disk.snapshot().read_retries, 2);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn hard_fault_exhausts_retry_budget() {
+        let dir = std::env::temp_dir().join("graphmp_disk_hard_test");
+        let _ = fs::remove_dir_all(&dir);
+        let disk = Disk::unthrottled();
+        fast_retry(&disk);
+        let p = dir.join("dead.bin");
+        disk.write_file(&p, b"x").unwrap();
+        disk.inject_hard_read_fault("dead.bin", 1);
+        disk.read_file(&p).unwrap(); // skip=1: first read passes
+        let err = disk.read_file(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected hard read fault"), "{msg}");
+        assert!(msg.contains("dead.bin"), "{msg}");
+        assert!(msg.contains("after 4 attempt(s)"), "{msg}");
+        assert_eq!(disk.snapshot().read_retries, 3);
+        disk.clear_read_faults();
+        disk.read_file(&p).unwrap();
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_file_not_retried() {
+        let disk = Disk::unthrottled();
+        fast_retry(&disk);
+        let err = disk.read_file(Path::new("/nonexistent/graphmp/x.bin")).unwrap_err();
+        assert!(format!("{err:#}").contains("after 1 attempt(s)"));
+        assert_eq!(disk.snapshot().read_retries, 0);
+    }
+
+    #[test]
+    fn faults_shared_across_clones() {
+        let dir = std::env::temp_dir().join("graphmp_disk_clone_fault_test");
+        let _ = fs::remove_dir_all(&dir);
+        let disk = Disk::unthrottled();
+        fast_retry(&disk);
+        let p = dir.join("c.bin");
+        disk.write_file(&p, b"y").unwrap();
+        let clone = disk.clone();
+        disk.inject_read_fault("c.bin", 0, 1);
+        clone.read_file(&p).unwrap();
+        assert_eq!(disk.snapshot().read_retries, 1);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn durable_write_round_trips() {
+        let dir = std::env::temp_dir().join("graphmp_disk_durable_test");
+        let _ = fs::remove_dir_all(&dir);
+        let disk = Disk::unthrottled();
+        let p = dir.join("d.bin");
+        disk.write_file_durable(&p, b"durable").unwrap();
+        assert_eq!(disk.read_file(&p).unwrap(), b"durable");
+        assert_eq!(disk.snapshot().bytes_written, 7);
+        fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,0 +1,659 @@
+//! Crash-safety gate (PR 6): kill+resume must be **bit-identical** to the
+//! uninterrupted run, across apps (pagerank / ppr / sssp / widest) and
+//! across engines (the VSW engine through `JobSet`, and a raw
+//! `ShardSource` on the execution core).  Corrupt checkpoints (bit-flips,
+//! truncation) must be detected by CRC/version checks and rejected with a
+//! precise reason — falling back to the previous good checkpoint when one
+//! exists, failing with the full candidate list when none does.
+//!
+//! The fault-injection half of the gate: transient read errors are
+//! retried with backoff and surfaced in metrics without changing results;
+//! hard errors fail only the affected job (`JobStatus::Failed`) while the
+//! rest of the batch completes bit-identically.  Runs in debug and
+//! `--release` in CI (the f32 kernel paths are codegen-sensitive).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+use graphmp::apps::{PageRank, Ppr, Sssp, VertexProgram, Widest};
+use graphmp::baselines::inv_out_degrees;
+use graphmp::compress::CacheMode;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::exec::{
+    fold_edges_interval, mark_interval, BatchJob, BatchOptions, ExecConfig, ExecCore, IterCtx,
+    RangeMarker, ResumeState, Scratch, ShardSource, SharedDst, UnitOutput,
+};
+use graphmp::graph::rmat::{rmat, RmatParams};
+use graphmp::graph::{Edge, EdgeList, VertexId};
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::runtime::checkpoint::{self, BatchMeta, CheckpointConfig, CheckpointWriter};
+use graphmp::runtime::{JobId, JobSet, JobSpec, JobStatus};
+use graphmp::storage::disk::Disk;
+use graphmp::storage::GraphDir;
+
+fn prep_graph(name: &str) -> (GraphDir, Disk) {
+    let g = rmat(10, 14_000, 2026, RmatParams::default());
+    let root = std::env::temp_dir().join(format!("graphmp_rec_{name}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let disk = Disk::unthrottled();
+    let cfg = PrepConfig {
+        edges_per_shard: 2048,
+        max_rows_per_shard: 512,
+        weighted: true,
+        ..Default::default()
+    };
+    let (dir, _) = preprocess_into(&g, &root, &disk, cfg).unwrap();
+    (dir, disk)
+}
+
+fn engine(dir: &GraphDir, disk: &Disk, mode: CacheMode) -> VswEngine {
+    let cfg = EngineConfig {
+        workers: 4,
+        prefetch_depth: 3,
+        prefetch_threads: 2,
+        cache_mode: Some(mode),
+        cache_capacity: 64 << 20,
+        active_threshold: 0.05,
+        ..Default::default()
+    };
+    VswEngine::open(dir, disk, cfg).unwrap()
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn kept_checkpoints(dir: &Path) -> Vec<PathBuf> {
+    let mut v: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.file_name().is_some_and(|n| n.to_string_lossy().starts_with("ckpt_")))
+        .collect();
+    v.sort();
+    v
+}
+
+fn spec(label: &str, app: Box<dyn VertexProgram>, iters: u32) -> JobSpec {
+    JobSpec { label: label.to_string(), app, max_iters: iters }
+}
+
+/// Five jobs across four apps: two founders, a pass-3 and a pass-9
+/// arrival, and (with a batch cap of 4) a trailing second batch.
+fn submit_roster(set: &mut JobSet) -> [JobId; 5] {
+    [
+        set.submit(spec("pr", Box::new(PageRank::new()), 12)),
+        set.submit(spec("sssp", Box::new(Sssp::new(0)), 100)),
+        set.submit_at(3, spec("ppr3", Box::new(Ppr::new(3)), 8)),
+        set.submit_at(9, spec("ppr9", Box::new(Ppr::new(9)), 6)),
+        set.submit(spec("widest", Box::new(Widest::new(0)), 6)),
+    ]
+}
+
+// ---------------------------------------------------------------------
+// kill + resume, engine 1: the VSW engine through the JobSet front door
+// ---------------------------------------------------------------------
+
+#[test]
+fn jobset_kill_resume_bit_identical_vsw() {
+    let (dir, disk) = prep_graph("jobset");
+
+    // the uninterrupted drain is the ground truth
+    let mut base = JobSet::with_batch_cap(4);
+    let ids = submit_roster(&mut base);
+    base.run_all(&mut engine(&dir, &disk, CacheMode::M1Raw)).unwrap();
+    let want: Vec<(JobStatus, Vec<f32>)> = ids
+        .iter()
+        .map(|&id| (base.status(id).unwrap(), base.take_values(id).unwrap()))
+        .collect();
+
+    // crash at pass boundary 5; checkpoints every 2 passes → last good
+    // checkpoint is pass 4, with ppr9 still pending and widest unqueued
+    let ckdir = fresh_dir("graphmp_rec_ckpt_jobset");
+    let crash = CheckpointConfig { dir: ckdir.clone(), every: 2, keep: 2, kill_at_pass: Some(5) };
+    let mut killed = JobSet::with_batch_cap(4);
+    submit_roster(&mut killed);
+    let err = killed
+        .run_all_checkpointed(&mut engine(&dir, &disk, CacheMode::M1Raw), &crash)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("injected crash at pass boundary 5"), "{err:#}");
+    assert!(ckdir.join("ckpt_000004").join("MANIFEST").exists());
+
+    // rebuild the same submissions and resume: every job must come back
+    // bit-identical to the run that was never interrupted
+    let resume_cfg = CheckpointConfig::new(ckdir.clone(), 2);
+    let mut resumed = JobSet::with_batch_cap(4);
+    let rids = submit_roster(&mut resumed);
+    let report = resumed.resume(&mut engine(&dir, &disk, CacheMode::M1Raw), &resume_cfg).unwrap();
+
+    assert_eq!(report.batches.len(), 2, "resumed batch plus the trailing widest batch");
+    assert_eq!(report.batches[0].resumed_from_pass, Some(4));
+    assert_eq!(report.batches[1].resumed_from_pass, None);
+    assert!(report.aggregate().checkpoints_written > 0, "resumed run keeps checkpointing");
+    assert_eq!(report.aggregate().resumed_from_pass, Some(4));
+    for (&id, (status, values)) in rids.iter().zip(&want) {
+        assert_eq!(resumed.status(id), Some(*status), "job {id} status");
+        assert_eq!(
+            resumed.take_values(id).as_ref(),
+            Some(values),
+            "job {id} values must be bit-identical after kill+resume"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// kill + resume, engine 2: a raw ShardSource on the execution core
+// ---------------------------------------------------------------------
+
+/// A second, independent engine: one unit per destination interval with a
+/// modelled per-unit byte cost, run straight on [`ExecCore`].
+struct IntervalEngine {
+    intervals: Vec<(u32, u32)>,
+    edges: Vec<Vec<Edge>>,
+    bytes: Vec<u64>,
+    disk: Disk,
+}
+
+impl IntervalEngine {
+    fn build(g: &EdgeList, parts: u32, disk: &Disk) -> IntervalEngine {
+        let n = g.num_vertices;
+        let step = n.div_ceil(parts).max(1);
+        let mut intervals = Vec::new();
+        let mut lo = 0u32;
+        while lo < n {
+            let hi = (lo + step).min(n);
+            intervals.push((lo, hi));
+            lo = hi;
+        }
+        let mut edges = vec![Vec::new(); intervals.len()];
+        for e in &g.edges {
+            edges[(e.dst / step) as usize].push(*e);
+        }
+        for part in &mut edges {
+            part.sort_by_key(|e| (e.dst, e.src));
+        }
+        let bytes = edges.iter().map(|p| 16 + p.len() as u64 * 8).collect();
+        IntervalEngine { intervals, edges, bytes, disk: disk.clone() }
+    }
+}
+
+impl ShardSource for IntervalEngine {
+    type Item = u32;
+
+    fn schedule(&self, _iter: u32, _active: &[VertexId]) -> (Vec<u32>, u32) {
+        ((0..self.intervals.len() as u32).collect(), 0)
+    }
+
+    fn load(&self, id: u32) -> Result<u32> {
+        self.disk.account_read(self.bytes[id as usize]);
+        Ok(id)
+    }
+
+    fn compute(
+        &self,
+        _id: u32,
+        item: u32,
+        ctx: &IterCtx<'_>,
+        dst: &SharedDst,
+        marker: &mut RangeMarker<'_>,
+        scratch: &mut Scratch<'_>,
+    ) -> Result<UnitOutput> {
+        let (lo, hi) = self.intervals[item as usize];
+        let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
+        fold_edges_interval(ctx, &self.edges[item as usize], lo, out, scratch);
+        mark_interval(ctx, lo, out, marker);
+        Ok(UnitOutput::InPlace)
+    }
+
+    fn unit_edges(&self, _id: u32, item: &u32) -> u64 {
+        self.edges[*item as usize].len() as u64
+    }
+
+    fn unit_bytes(&self, _id: u32, item: &u32) -> u64 {
+        self.bytes[*item as usize]
+    }
+
+    fn residency_bytes(&self) -> u64 {
+        0
+    }
+}
+
+/// Small weighted rmat graph (SSSP needs varied edge weights).
+fn weighted_toy(seed: u64) -> EdgeList {
+    let g = rmat(8, 2_000, seed, RmatParams::default());
+    let edges = g
+        .edges
+        .iter()
+        .map(|e| Edge::weighted(e.src, e.dst, (e.src % 7 + e.dst % 5 + 1) as f32))
+        .collect();
+    EdgeList { num_vertices: g.num_vertices, edges }
+}
+
+fn exec_cfg(isolate: bool) -> ExecConfig {
+    ExecConfig {
+        workers: 2,
+        prefetch_depth: 2,
+        prefetch_auto: false,
+        prefetch_threads: 1,
+        fan_out: false,
+        isolate_failures: isolate,
+    }
+}
+
+#[test]
+fn exec_kill_resume_bit_identical_interval_engine() {
+    let g = weighted_toy(2029);
+    let n = g.num_vertices;
+    let disk = Disk::unthrottled();
+    let src = IntervalEngine::build(&g, 4, &disk);
+    let inv = inv_out_degrees(&g);
+    let pr = PageRank::new();
+    let sssp = Sssp::new(0);
+    let jobs = [BatchJob { app: &pr, max_iters: 10 }, BatchJob { app: &sssp, max_iters: 30 }];
+
+    let (ref_outs, ref_batch) =
+        ExecCore::new(exec_cfg(false), &disk, None).run_batch(&src, &jobs, n, &inv).unwrap();
+    assert!(ref_batch.passes > 4, "kill pass must land mid-batch");
+
+    let dir = fresh_dir("graphmp_rec_ckpt_exec");
+    let meta = || BatchMeta {
+        num_vertices: n,
+        num_edges: g.edges.len() as u64,
+        batch_index: 0,
+        start: 0,
+        roster: vec![(0, 0), (1, 0)],
+        finished: Vec::new(),
+    };
+    let crash = CheckpointConfig { dir: dir.clone(), every: 2, keep: 2, kill_at_pass: Some(4) };
+    let mut writer = CheckpointWriter::new(crash, disk.clone(), meta());
+    let err = ExecCore::new(exec_cfg(false), &disk, None)
+        .run_batch_with(
+            &src,
+            &jobs,
+            n,
+            &inv,
+            |_, _| Vec::new(),
+            BatchOptions { resume: Vec::new(), observer: Some(&mut writer) },
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("injected crash"), "{err:#}");
+
+    let outcome = checkpoint::load_latest(&dir, &disk).unwrap();
+    let (path, state) = outcome.loaded.expect("a checkpoint survived the crash");
+    assert_eq!(state.pass, 4, "latest checkpoint: {}", path.display());
+    assert_eq!(state.lanes.len(), 2, "both lanes captured (done or not)");
+
+    // warm-start both lanes from the checkpoint and run to completion
+    let resume: Vec<Option<ResumeState>> =
+        state.lanes.iter().map(|r| Some(r.state.clone())).collect();
+    let mut writer2 =
+        CheckpointWriter::new(CheckpointConfig::new(dir.clone(), 2), disk.clone(), meta())
+            .with_base_pass(state.pass);
+    let (outs, batch) = ExecCore::new(exec_cfg(false), &disk, None)
+        .run_batch_with(
+            &src,
+            &jobs,
+            n,
+            &inv,
+            |_, _| Vec::new(),
+            BatchOptions { resume, observer: Some(&mut writer2) },
+        )
+        .unwrap();
+
+    assert_eq!(
+        state.pass + batch.passes,
+        ref_batch.passes,
+        "resume must run exactly the remaining passes"
+    );
+    for (i, ((v, r), (rv, rr))) in outs.iter().zip(&ref_outs).enumerate() {
+        assert_eq!(v, rv, "job {i} values must be bit-identical after kill+resume");
+        assert_eq!(r.converged, rr.converged, "job {i} convergence flag");
+        assert_eq!(r.job.iterations, rr.job.iterations, "job {i} iteration clock");
+    }
+}
+
+// ---------------------------------------------------------------------
+// corrupt checkpoints: fallback, then precise failure when none is valid
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupt_checkpoint_falls_back_then_errors_when_none_valid() {
+    let (dir, disk) = prep_graph("corrupt");
+
+    let mut base = JobSet::new();
+    let b_pr = base.submit(spec("pr", Box::new(PageRank::new()), 10));
+    let b_ss = base.submit(spec("sssp", Box::new(Sssp::new(0)), 100));
+    base.run_all(&mut engine(&dir, &disk, CacheMode::M1Raw)).unwrap();
+    let v_pr = base.take_values(b_pr).unwrap();
+    let v_ss = base.take_values(b_ss).unwrap();
+
+    // checkpoint every pass, crash at 5: retention keeps passes 4 and 5
+    let ckdir = fresh_dir("graphmp_rec_ckpt_corrupt");
+    let crash = CheckpointConfig { dir: ckdir.clone(), every: 1, keep: 2, kill_at_pass: Some(5) };
+    let mut killed = JobSet::new();
+    killed.submit(spec("pr", Box::new(PageRank::new()), 10));
+    killed.submit(spec("sssp", Box::new(Sssp::new(0)), 100));
+    let err = killed
+        .run_all_checkpointed(&mut engine(&dir, &disk, CacheMode::M1Raw), &crash)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("injected crash"), "{err:#}");
+    let kept = kept_checkpoints(&ckdir);
+    assert_eq!(kept.len(), 2, "retention must keep two checkpoints: {kept:?}");
+    let newest = kept.last().unwrap();
+    assert!(newest.ends_with("ckpt_000005"), "{}", newest.display());
+
+    // flip one byte inside the newest checkpoint's first lane file: its
+    // CRC must fail and resume must fall back to the pass-4 checkpoint
+    let victim = newest.join("job_000.bin");
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&victim, &bytes).unwrap();
+
+    let resume_cfg = CheckpointConfig::new(ckdir.clone(), 1);
+    let mut resumed = JobSet::new();
+    let r_pr = resumed.submit(spec("pr", Box::new(PageRank::new()), 10));
+    let r_ss = resumed.submit(spec("sssp", Box::new(Sssp::new(0)), 100));
+    let report = resumed.resume(&mut engine(&dir, &disk, CacheMode::M1Raw), &resume_cfg).unwrap();
+    assert_eq!(
+        report.batches[0].resumed_from_pass,
+        Some(4),
+        "must fall back past the corrupt pass-5 checkpoint"
+    );
+    assert_eq!(resumed.take_values(r_pr).unwrap(), v_pr, "pagerank bit-identical via fallback");
+    assert_eq!(resumed.take_values(r_ss).unwrap(), v_ss, "sssp bit-identical via fallback");
+
+    // now truncate every surviving manifest: resume must refuse with the
+    // full per-candidate rejection list
+    for c in kept_checkpoints(&ckdir) {
+        let m = c.join("MANIFEST");
+        let text = std::fs::read(&m).unwrap();
+        std::fs::write(&m, &text[..8.min(text.len())]).unwrap();
+    }
+    let mut dead = JobSet::new();
+    dead.submit(spec("pr", Box::new(PageRank::new()), 10));
+    dead.submit(spec("sssp", Box::new(Sssp::new(0)), 100));
+    let err = dead.resume(&mut engine(&dir, &disk, CacheMode::M1Raw), &resume_cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no valid checkpoint"), "{msg}");
+    assert!(msg.contains("rejected"), "{msg}");
+}
+
+// ---------------------------------------------------------------------
+// fault injection: transient retry, hard per-job isolation
+// ---------------------------------------------------------------------
+
+#[test]
+fn transient_read_faults_retry_and_preserve_results() {
+    let (dir, disk) = prep_graph("transient");
+    let (v_clean, _) =
+        engine(&dir, &disk, CacheMode::M0None).run_to_values(&PageRank::new(), 6).unwrap();
+
+    let d2 = Disk::unthrottled();
+    let mut eng = engine(&dir, &d2, CacheMode::M0None);
+    // after one clean shard read, the next logical read fails three
+    // attempts in a row: bounded retry with backoff must absorb them
+    d2.inject_read_fault("shard_", 1, 3);
+    let (v_fault, run) = eng.run_to_values(&PageRank::new(), 6).unwrap();
+    assert_eq!(v_fault, v_clean, "retried reads must not change results");
+    let retries: u64 = run.iterations.iter().map(|m| m.io.read_retries).sum();
+    assert_eq!(retries, 3, "each injected transient fault costs exactly one retry");
+}
+
+#[test]
+fn hard_read_fault_fails_only_affected_job() {
+    let (dir, disk) = prep_graph("hard");
+    let mk = |d: &Disk| {
+        let cfg = EngineConfig {
+            workers: 4,
+            prefetch_depth: 3,
+            prefetch_threads: 2,
+            cache_mode: Some(CacheMode::M0None),
+            cache_capacity: 64 << 20,
+            // every pass reads every shard exactly once → the fault's
+            // skip count maps 1:1 onto a pass number
+            selective: false,
+            isolate_failures: true,
+            ..Default::default()
+        };
+        VswEngine::open(&dir, d, cfg).unwrap()
+    };
+    let (v_solo, r_solo) = mk(&disk).run_to_values(&Sssp::new(0), 100).unwrap();
+    assert!(r_solo.converged, "sssp must converge for the pass arithmetic below");
+    let s = r_solo.iterations.len() as u32;
+
+    let d2 = Disk::unthrottled();
+    let mut eng = mk(&d2);
+    // shard 0's (s+2)-th read happens in pass s+1 — after sssp converged
+    // at boundary s, so only pagerank is left to absorb the hard fault
+    d2.inject_hard_read_fault("shard_00000.bin", s + 1);
+
+    let mut set = JobSet::new();
+    let pr = set.submit(spec("pr", Box::new(PageRank::new()), s + 6));
+    let ss = set.submit(spec("sssp", Box::new(Sssp::new(0)), 100));
+    let report = set.run_all(&mut eng).unwrap();
+
+    assert_eq!(report.batches.len(), 1, "the batch completes despite the failure");
+    assert_eq!(set.status(ss), Some(JobStatus::Converged));
+    assert_eq!(
+        set.take_values(ss).unwrap(),
+        v_solo,
+        "the surviving job is bit-identical to its solo run"
+    );
+    assert_eq!(set.status(pr), Some(JobStatus::Failed));
+    let msg = set.job(pr).unwrap().run.as_ref().unwrap().failed.clone().expect("failure recorded");
+    assert!(msg.contains("shard_00000"), "error must name the failing shard file: {msg}");
+    assert_eq!(report.aggregate().jobs_failed, 1);
+}
+
+/// Wraps [`IntervalEngine`] and injects a compute fault into relax-min
+/// lanes (SSSP) at one iteration; the sum-kernel lane (PageRank) never
+/// trips it.
+struct FailingSource<'a> {
+    inner: &'a IntervalEngine,
+    fail_iter: u32,
+}
+
+impl ShardSource for FailingSource<'_> {
+    type Item = u32;
+
+    fn schedule(&self, iter: u32, active: &[VertexId]) -> (Vec<u32>, u32) {
+        self.inner.schedule(iter, active)
+    }
+
+    fn load(&self, id: u32) -> Result<u32> {
+        self.inner.load(id)
+    }
+
+    fn compute(
+        &self,
+        id: u32,
+        item: u32,
+        ctx: &IterCtx<'_>,
+        dst: &SharedDst,
+        marker: &mut RangeMarker<'_>,
+        scratch: &mut Scratch<'_>,
+    ) -> Result<UnitOutput> {
+        if !ctx.kernel.uses_contrib() && ctx.iteration == self.fail_iter {
+            anyhow::bail!("injected compute fault at iteration {} unit {id}", ctx.iteration);
+        }
+        self.inner.compute(id, item, ctx, dst, marker, scratch)
+    }
+
+    fn unit_edges(&self, id: u32, item: &u32) -> u64 {
+        self.inner.unit_edges(id, item)
+    }
+
+    fn unit_bytes(&self, id: u32, item: &u32) -> u64 {
+        self.inner.unit_bytes(id, item)
+    }
+
+    fn residency_bytes(&self) -> u64 {
+        self.inner.residency_bytes()
+    }
+}
+
+#[test]
+fn compute_fault_isolated_at_exec_level() {
+    let g = weighted_toy(2031);
+    let n = g.num_vertices;
+    let disk = Disk::unthrottled();
+    let src = IntervalEngine::build(&g, 4, &disk);
+    let inv = inv_out_degrees(&g);
+    let pr = PageRank::new();
+    let sssp = Sssp::new(0);
+
+    // ground truth: a batch that never contained the failing job
+    let (ref_outs, _) = ExecCore::new(exec_cfg(true), &disk, None)
+        .run_batch(&src, &[BatchJob { app: &pr, max_iters: 8 }], n, &inv)
+        .unwrap();
+
+    let failing = FailingSource { inner: &src, fail_iter: 1 };
+    let (outs, batch) = ExecCore::new(exec_cfg(true), &disk, None)
+        .run_batch(
+            &failing,
+            &[BatchJob { app: &pr, max_iters: 8 }, BatchJob { app: &sssp, max_iters: 30 }],
+            n,
+            &inv,
+        )
+        .unwrap();
+
+    let msg = outs[1].1.failed.as_deref().expect("sssp must be marked failed");
+    assert!(msg.contains("injected compute fault"), "{msg}");
+    assert_eq!(batch.jobs_failed, 1);
+    assert!(outs[0].1.failed.is_none(), "pagerank must be untouched");
+    assert_eq!(
+        outs[0].0,
+        ref_outs[0].0,
+        "survivor bit-identical to a batch never containing the failed job"
+    );
+}
+
+// ---------------------------------------------------------------------
+// byte-weighted per-job read attribution
+// ---------------------------------------------------------------------
+
+/// Two disconnected 4-vertex components in units whose modelled sizes
+/// differ by four orders of magnitude, with per-lane selective
+/// scheduling: a frontier confined to the tiny unit must only ever be
+/// charged for the tiny unit.
+struct TwoUnitSource {
+    intervals: [(u32, u32); 2],
+    edges: [Vec<Edge>; 2],
+    bytes: [u64; 2],
+    /// `feeds[v][u]`: vertex `v` has an out-edge into unit `u`.
+    feeds: Vec<[bool; 2]>,
+    disk: Disk,
+}
+
+fn two_unit_graph() -> (EdgeList, TwoUnitSource) {
+    let edges = vec![
+        Edge::weighted(0, 1, 1.0),
+        Edge::weighted(1, 2, 1.0),
+        Edge::weighted(2, 0, 1.0),
+        Edge::weighted(3, 0, 1.0),
+        Edge::weighted(4, 5, 1.0),
+        Edge::weighted(5, 6, 1.0),
+        Edge::weighted(6, 4, 1.0),
+        Edge::weighted(7, 4, 1.0),
+    ];
+    let g = EdgeList { num_vertices: 8, edges };
+    let mut parts: [Vec<Edge>; 2] = [Vec::new(), Vec::new()];
+    let mut feeds = vec![[false; 2]; 8];
+    for e in &g.edges {
+        let u = usize::from(e.dst >= 4);
+        parts[u].push(*e);
+        feeds[e.src as usize][u] = true;
+    }
+    for p in &mut parts {
+        p.sort_by_key(|e| (e.dst, e.src));
+    }
+    let src = TwoUnitSource {
+        intervals: [(0, 4), (4, 8)],
+        edges: parts,
+        bytes: [10, 100_000],
+        feeds,
+        disk: Disk::unthrottled(),
+    };
+    (g, src)
+}
+
+impl ShardSource for TwoUnitSource {
+    type Item = u32;
+
+    fn schedule(&self, _iter: u32, active: &[VertexId]) -> (Vec<u32>, u32) {
+        let mut need = [false; 2];
+        for &v in active {
+            let f = self.feeds[v as usize];
+            need[0] |= f[0];
+            need[1] |= f[1];
+        }
+        let w: Vec<u32> = (0..2u32).filter(|&u| need[u as usize]).collect();
+        let skipped = 2 - w.len() as u32;
+        (w, skipped)
+    }
+
+    fn load(&self, id: u32) -> Result<u32> {
+        self.disk.account_read(self.bytes[id as usize]);
+        Ok(id)
+    }
+
+    fn compute(
+        &self,
+        _id: u32,
+        item: u32,
+        ctx: &IterCtx<'_>,
+        dst: &SharedDst,
+        marker: &mut RangeMarker<'_>,
+        scratch: &mut Scratch<'_>,
+    ) -> Result<UnitOutput> {
+        let (lo, hi) = self.intervals[item as usize];
+        let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
+        fold_edges_interval(ctx, &self.edges[item as usize], lo, out, scratch);
+        mark_interval(ctx, lo, out, marker);
+        Ok(UnitOutput::InPlace)
+    }
+
+    fn unit_bytes(&self, _id: u32, item: &u32) -> u64 {
+        self.bytes[*item as usize]
+    }
+
+    fn residency_bytes(&self) -> u64 {
+        0
+    }
+}
+
+#[test]
+fn effective_bytes_weighted_by_unit_size() {
+    let (g, src) = two_unit_graph();
+    let disk = src.disk.clone();
+    let inv = inv_out_degrees(&g);
+    let pr = PageRank::new();
+    let sssp = Sssp::new(0);
+    // pagerank keeps every vertex active → pulls both units every pass;
+    // sssp's frontier never leaves component A → only the 10-byte unit
+    let jobs = [BatchJob { app: &pr, max_iters: 4 }, BatchJob { app: &sssp, max_iters: 4 }];
+    let (_outs, batch) = ExecCore::new(exec_cfg(false), &disk, None)
+        .run_batch(&src, &jobs, g.num_vertices, &inv)
+        .unwrap();
+
+    let total = batch.bytes_read as f64;
+    assert!(
+        total >= 4.0 * 100_000.0,
+        "pagerank must pull the big unit every pass (bytes_read {total})"
+    );
+    let pr_eff = batch.per_job[0].effective_bytes_read;
+    let ss_eff = batch.per_job[1].effective_bytes_read;
+    assert!(batch.per_job[1].units_served >= 1, "sssp was served at least once");
+    assert!(
+        (pr_eff + ss_eff - total).abs() < 1.0,
+        "attribution must partition bytes_read: {pr_eff} + {ss_eff} != {total}"
+    );
+    // serving-count attribution would charge sssp ~servings/total_servings
+    // of ~400 KB (tens of kilobytes); byte-weighted attribution charges it
+    // only the tiny unit's bytes
+    assert!(ss_eff < 100.0, "sssp share must be tiny, got {ss_eff}");
+    assert!(pr_eff > 0.95 * total, "pagerank carries the big unit: {pr_eff} of {total}");
+}

@@ -13,7 +13,9 @@
 //! destination chunk exclusively.  Blocks are sorted by source at
 //! preprocessing and concatenated in ascending row order, so each
 //! destination folds its in-edges in the repo-wide canonical
-//! ascending-source order.
+//! ascending-source order — through the same chunked multi-lane
+//! combines as every other engine, keeping cross-engine comparisons
+//! bit-identical (see `exec::kernel`).
 
 use std::time::Instant;
 

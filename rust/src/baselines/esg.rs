@@ -221,8 +221,10 @@ mod tests {
                 &src,
             );
         }
+        // relative gate: the barrier's chunked update sums reassociate
+        // f32 adds vs the sequential sweep (see exec::kernel docs)
         for (a, b) in e.values().iter().zip(&src) {
-            assert!((a - b).abs() < 1e-6);
+            assert!((a - b).abs() <= 1e-5 * a.abs().max(1e-3), "{a} vs {b}");
         }
     }
 }

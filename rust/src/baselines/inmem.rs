@@ -220,8 +220,10 @@ mod tests {
                 &src,
             );
         }
+        // relative gate: the engine's chunked row sums reassociate f32
+        // adds vs the sequential sweep reference (see exec::kernel docs)
         for (a, b) in e.values().iter().zip(&src) {
-            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+            assert!((a - b).abs() <= 1e-5 * a.abs().max(1e-3), "{a} vs {b}");
         }
     }
 

@@ -125,8 +125,12 @@ pub trait BaselineEngine {
 
 /// One push-style sweep over a destination-grouped edge list: the simple
 /// reference implementation of a [`ShardKernel`] iteration, used by
-/// tests and the simulated distributed engines.  Matches the engines
-/// bit-for-bit when each destination's edges arrive in the same order.
+/// tests and the simulated distributed engines.  When each destination's
+/// edges arrive in the same order, min/max kernels match the engines
+/// bit-for-bit; sum kernels agree only to a small relative epsilon,
+/// because this sweep adds sequentially while the engines fold rows
+/// through chunked multi-lane accumulators (see `exec::kernel`).
+/// Destinations with ≤ 3 in-edges stay bit-identical even for sums.
 pub fn sweep(
     kernel: ShardKernel,
     edges_by_dst: &[crate::graph::Edge],

@@ -10,7 +10,9 @@
 //!
 //! Runs through the shared execution core: one pipeline unit per shard,
 //! reads charged on the load path (overlapping compute when prefetched),
-//! the interval's rows computed in place via the shared kernel fold.
+//! the interval's rows computed in place via the shared kernel fold —
+//! the same chunked multi-lane combines as every other engine, so
+//! cross-engine comparisons stay bit-identical (see `exec::kernel`).
 //!
 //! GraphChi has *native* selective scheduling (its "scheduler": skip an
 //! interval when nothing scheduled touches it).  With

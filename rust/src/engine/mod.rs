@@ -503,14 +503,18 @@ impl ShardSource for VswSource<'_> {
 /// Native shard update: the paper's `Update` loop over the shard CSR,
 /// generalized over [`crate::apps::ShardKernel`] and monomorphized by
 /// [`crate::exec::kernel::fold_csr`] — the (combine × gather) pair is
-/// dispatched once per shard, so the per-edge loop is branch-free.
+/// dispatched once per shard, so the per-edge loop is branch-free and
+/// row combines run through the chunked multi-lane accumulators (PR 7).
 /// `out` must enter holding the current values of the shard's interval
 /// `[start_vertex, ..)`.
 ///
 /// Sum kernels read the iteration's pre-folded `contrib` array (one
 /// gather + one add per edge); monotone kernels fold from the old value.
 /// Bit-identical to [`crate::exec::fold_edges_interval`] over the same
-/// per-destination edge order (canonically: ascending source id).
+/// per-destination edge order (canonically: ascending source id) — both
+/// use the same fixed chunked-reduction scheme, which is also why the
+/// cross-engine gates stay exact while comparisons against *sequential*
+/// references (dense sweeps) need a small epsilon for sum kernels.
 pub fn native_update(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: &mut [f32]) {
     crate::exec::kernel::fold_csr(ctx, csr, start_vertex, out);
 }
@@ -686,8 +690,11 @@ mod tests {
         let (mut e, _) = open_engine(&g, "pr_ref", EngineConfig::default(), false);
         let (vals, run) = e.run_to_values(&PageRank::new(), 10).unwrap();
         let want = dense_pagerank(&g, 10);
+        // relative gate: the engine's chunked row sums reassociate f32
+        // adds, so high-degree vertices drift from the sequential dense
+        // reference by a few ulps per iteration (see exec::kernel docs)
         for (i, (a, b)) in vals.iter().zip(&want).enumerate() {
-            assert!((a - b).abs() < 1e-5, "vertex {i}: {a} vs {b}");
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1e-3), "vertex {i}: {a} vs {b}");
         }
         assert_eq!(run.iterations.len(), 10);
     }
@@ -777,8 +784,10 @@ mod tests {
             }
             ranks = next;
         }
+        // relative gate for the same reason as pagerank_matches_dense_reference:
+        // chunked row sums vs a sequential edge-order reference
         for (i, (a, b)) in vals.iter().zip(&ranks).enumerate() {
-            assert!((a - b).abs() < 1e-5, "vertex {i}: {a} vs {b}");
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1e-3), "vertex {i}: {a} vs {b}");
         }
         // the seed holds the teleport mass
         assert!(vals[seed as usize] >= 0.15 - 1e-6);

@@ -1,0 +1,104 @@
+//! 64-byte-aligned scratch arenas for the kernel accumulators.
+//!
+//! The chunked kernels in [`super::kernel`] fold rows through
+//! fixed-width lane accumulators ([`super::kernel::LANES`] f32 lanes per
+//! step).  Backing the per-worker fold scratch with cache-line-aligned
+//! storage keeps every lane block inside one line and satisfies the
+//! 64-byte alignment the `simd` feature's `f32x8` path prefers — the
+//! kernel entry points `debug_assert` it.
+//!
+//! A [`Line`] is one 64-byte cache line; [`AlignedArena`] hands out
+//! zeroed `f32`/`u32` slice views over a reusable `Vec<Line>`, so
+//! steady-state folds never reallocate and every view is 64-byte
+//! aligned at its base.  Arenas are recycled through
+//! [`super::ScratchPool`] at that same alignment (the alignment is a
+//! property of the `Line` type, not of any particular allocation).
+
+/// One zeroed cache line: sixteen 32-bit words, 64-byte aligned.
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct Line([u32; 16]);
+
+const WORDS_PER_LINE: usize = 16;
+
+/// A reusable 64-byte-aligned scratch buffer handing out zeroed
+/// `f32` / `u32` slice views.  Each `f32s`/`u32s` call resets the
+/// arena, so only one view is live at a time (enforced by the `&mut`
+/// borrow).
+#[derive(Default)]
+pub struct AlignedArena {
+    lines: Vec<Line>,
+}
+
+impl AlignedArena {
+    pub fn new() -> Self {
+        AlignedArena { lines: Vec::new() }
+    }
+
+    /// Zero exactly the lines needed for `words` 32-bit words, reusing
+    /// the existing capacity (same cost shape as the pre-arena
+    /// `acc.clear(); acc.resize(len, 0.0)` pattern).
+    fn reset(&mut self, words: usize) {
+        let need = words.div_ceil(WORDS_PER_LINE);
+        self.lines.clear();
+        self.lines.resize(need, Line([0; WORDS_PER_LINE]));
+    }
+
+    /// A zeroed `len`-element `f32` view, 64-byte aligned at its base.
+    pub fn f32s(&mut self, len: usize) -> &mut [f32] {
+        self.reset(len);
+        debug_assert_eq!(self.lines.as_ptr() as usize % 64, 0);
+        // SAFETY: the Vec holds at least `len` zeroed 32-bit words
+        // (zeroed bits are a valid f32), `Line` is `repr(C, align(64))`
+        // so the cast only lowers the alignment requirement, and the
+        // `&mut self` borrow pins the backing store for the view's
+        // lifetime.
+        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr() as *mut f32, len) }
+    }
+
+    /// A zeroed `len`-element `u32` view, 64-byte aligned at its base.
+    pub fn u32s(&mut self, len: usize) -> &mut [u32] {
+        self.reset(len);
+        debug_assert_eq!(self.lines.as_ptr() as usize % 64, 0);
+        // SAFETY: as in `f32s` — zeroed words, alignment only lowered.
+        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr() as *mut u32, len) }
+    }
+
+    /// Backing capacity in bytes (reuse assertions + memory accounting).
+    pub fn capacity_bytes(&self) -> usize {
+        self.lines.capacity() * std::mem::size_of::<Line>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn views_are_zeroed_aligned_and_reused() {
+        let mut a = AlignedArena::new();
+        {
+            let f = a.f32s(100);
+            assert_eq!(f.len(), 100);
+            assert!(f.iter().all(|&x| x == 0.0));
+            assert_eq!(f.as_ptr() as usize % 64, 0, "f32 view must be line-aligned");
+            f[99] = 7.0;
+        }
+        let cap = a.capacity_bytes();
+        assert!(cap >= 400, "arena must retain its backing store");
+        // a smaller request reuses the backing store and re-zeroes it
+        let u = a.u32s(64);
+        assert_eq!(u.len(), 64);
+        assert_eq!(u.as_ptr() as usize % 64, 0, "u32 view must be line-aligned");
+        assert!(u.iter().all(|&x| x == 0), "views are re-zeroed on reset");
+        assert_eq!(a.capacity_bytes(), cap, "shrinking request must not reallocate");
+    }
+
+    #[test]
+    fn empty_views_are_valid() {
+        let mut a = AlignedArena::new();
+        assert_eq!(a.f32s(0).len(), 0);
+        assert_eq!(a.u32s(0).len(), 0);
+        assert_eq!(a.capacity_bytes(), 0);
+    }
+}

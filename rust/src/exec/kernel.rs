@@ -1,32 +1,85 @@
-//! Monomorphized kernel hot loops.
+//! Monomorphized, chunk-vectorized kernel hot loops.
 //!
 //! [`ShardKernel`](crate::apps::ShardKernel) is a runtime value, so
 //! folding edges through its enum methods pays a gather `match` (and,
 //! via `IterCtx::edge_value`, a `uses_contrib` branch) **per edge**.
-//! GridGraph's edge loop wins by being branch-free; this module gets the
-//! same shape by dispatching the (combine × gather) pair **once per
-//! unit**: the `with_gather!` macro maps the runtime kernel onto a closure whose
-//! type monomorphizes the generic fold bodies, so the inner loops compile
-//! to straight-line arithmetic.
+//! This module removes both costs: the `with_gather!` macro dispatches
+//! the (combine × gather) pair **once per unit** so the inner loops
+//! compile to straight-line arithmetic, and the associative combines
+//! process edges in fixed-width chunks of [`LANES`] with explicit
+//! multi-lane accumulators, so the per-row fold carries [`LANES`]
+//! independent dependency chains instead of one serial f32 chain.
 //!
-//! Every specialized instance performs the *same f32 operations in the
-//! same order* as the enum-dispatch reference (`ShardKernel::combine` /
-//! `edge_value` / `apply`), so results stay bit-identical — gated by
-//! `rust/tests/determinism.rs` and `rust/tests/cross_engine.rs`, and
-//! cross-checked against an enum-dispatch fold in `benches/hot_loop.rs`.
+//! ## The chunked combine scheme
+//!
+//! Every sum folds with the same fixed scheme, everywhere:
+//!
+//! - lane `j` of a `[f32; LANES]` accumulator adds elements
+//!   `j, j+LANES, j+2·LANES, …` of the row (via `chunks_exact`);
+//! - the final partial chunk lands in lanes `0..rem` of a zero-padded
+//!   tail block (skipped entirely when the row length is a multiple of
+//!   [`LANES`]);
+//! - lanes reduce through the fixed tree
+//!   `((l0+l4)+(l1+l5)) + ((l2+l6)+(l3+l7))`.
+//!
+//! The default build writes this as plain `chunks_exact` loops the
+//! autovectorizer turns into vector code; with `--features simd`
+//! (nightly only) the lane-wise accumulate is a single portable
+//! [`std::simd`] `f32x8` add.  Both builds perform *bit-identical*
+//! arithmetic by construction — the only `cfg`-switched operation is
+//! [`add_lanes`], and a vertical lane add is the same eight f32
+//! additions either way.
+//!
+//! ## Where bit-identity is relaxed, and where it is not
+//!
+//! f32 addition is not associative, so the chunked sum **reassociates**:
+//! a row of `k ≥ 4` edges generally differs from the sequential
+//! left-to-right sum in the last few ulps (rows with `k ≤ 3` are exact:
+//! the zero-padded lanes vanish and the reduction tree degenerates to
+//! the sequential order).  Consequently:
+//!
+//! - **Across engines and build modes the gates stay exact.** All five
+//!   engines, both `chunks_exact` and `simd` builds, and every
+//!   worker/prefetch/batch shape run the *same* chunked scheme over the
+//!   *same* canonical ascending-source per-destination edge order, so
+//!   `determinism.rs` / `cross_engine.rs` / `scan_sharing.rs` /
+//!   `recovery.rs` still assert `==` on every app.
+//! - **Sum comparisons against *sequential* references are epsilon
+//!   gated.** [`scalar_fold_csr`] (the sequential monomorphized path)
+//!   and [`reference_fold_csr`] (the per-edge enum-dispatch oracle)
+//!   remain bit-identical to each other; the chunked [`fold_csr`] is
+//!   compared to them with a documented epsilon for `Combine::Sum`
+//!   (kernel tests, `rust/tests/kernel_equivalence.rs`,
+//!   `benches/hot_loop.rs`, and the dense references in engine tests).
+//! - **Min/max stay strictly bit-identical to the scalar oracle.** The
+//!   chunked meet initializes every lane with the row's current value
+//!   (the meet is idempotent) and reduces with the same `min`/`max`, so
+//!   for NaN-free lanes — all app value domains here are NaN-free and
+//!   signed-zero-free — the result is the multiset extremum regardless
+//!   of association.  SSSP/BFS/CC/widest assert `==` everywhere.
 //!
 //! Three fold shapes cover every engine:
 //!
 //! - [`fold_csr`] — CSR rows (VSW shards, the in-memory engine);
 //! - [`fold_list`] — destination-grouped edge lists (PSW intervals, DSW
-//!   grid columns), with the caller's reusable sum-accumulator arena;
-//! - [`scatter_list`] — X-Stream-style update streams (ESG), into the
-//!   caller's reusable buffer.
+//!   grid columns): sums bucket edge values per destination row into a
+//!   64-byte-aligned [`AlignedArena`] (counting sort by destination),
+//!   then run the same chunked row sum — bit-identical to [`fold_csr`]
+//!   over the same edge order;
+//! - [`scatter_list`] — X-Stream-style update streams (ESG), gathered
+//!   in [`LANES`] blocks into the caller's reusable buffer (per-edge
+//!   values are exact; the chunked fold happens at the barrier, see
+//!   `fold_updates` in [`super`]).
 
+use super::arena::AlignedArena;
 use super::{IterCtx, Update};
 use crate::apps::{Combine, EdgeCost, EdgeGather};
 use crate::exec::schedule::RangeMarker;
 use crate::graph::{CsrRef, Edge};
+
+/// Fixed chunk width of the vectorized combines: eight f32 lanes — two
+/// SSE vectors, one AVX2 vector, half a cache line.
+pub const LANES: usize = 8;
 
 /// Bind `$g` to a gather closure specialized for `$ctx.kernel.gather`
 /// and evaluate `$body` once per variant — the single dispatch point
@@ -70,9 +123,59 @@ macro_rules! with_gather {
     }};
 }
 
-/// The paper's `Update` loop over one shard's CSR rows, monomorphized.
-/// `out` must enter holding the current values of rows
-/// `[start_vertex, start_vertex + out.len())`.
+/// Lane-wise accumulate: `acc[j] += vals[j]` for every lane.  This is
+/// the **only** operation the `simd` feature switches — a vertical
+/// vector add performs the same eight f32 additions as the scalar lane
+/// loop, so both builds are bit-identical by construction.
+#[cfg(not(feature = "simd"))]
+#[inline(always)]
+fn add_lanes(acc: &mut [f32; LANES], vals: &[f32; LANES]) {
+    for j in 0..LANES {
+        acc[j] += vals[j];
+    }
+}
+
+/// Lane-wise accumulate via portable SIMD (`--features simd`, nightly).
+#[cfg(feature = "simd")]
+#[inline(always)]
+fn add_lanes(acc: &mut [f32; LANES], vals: &[f32; LANES]) {
+    use std::simd::prelude::*;
+    *acc = (f32x8::from_array(*acc) + f32x8::from_array(*vals)).to_array();
+}
+
+/// The fixed lane-reduction tree — part of the repo-wide canonical sum
+/// order, so it must never change shape.
+#[inline(always)]
+fn reduce_sum(acc: [f32; LANES]) -> f32 {
+    ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+}
+
+/// The canonical chunked sum over a contiguous value slice: full
+/// [`LANES`] chunks accumulate lane-wise, the remainder lands in lanes
+/// `0..rem` of a zero-padded tail, lanes reduce via [`reduce_sum`].
+/// Every sum in the system that feeds a `Combine::Sum` kernel reduces
+/// through this exact scheme (directly, or element-for-element in the
+/// fused gather loops of [`fold_csr`]).
+#[inline]
+pub(crate) fn chunked_sum(vals: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut chunks = vals.chunks_exact(LANES);
+    for c in &mut chunks {
+        let c: &[f32; LANES] = c.try_into().expect("chunks_exact yields LANES");
+        add_lanes(&mut acc, c);
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut tail = [0.0f32; LANES];
+        tail[..rem.len()].copy_from_slice(rem);
+        add_lanes(&mut acc, &tail);
+    }
+    reduce_sum(acc)
+}
+
+/// The paper's `Update` loop over one shard's CSR rows, monomorphized
+/// and chunk-vectorized.  `out` must enter holding the current values of
+/// rows `[start_vertex, start_vertex + out.len())`.
 pub fn fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: &mut [f32]) {
     debug_assert_eq!(out.len(), csr.rows());
     match ctx.kernel.combine {
@@ -86,7 +189,273 @@ pub fn fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: &mut
     }
 }
 
+/// One row's chunked sum with the gather fused into the chunk loop:
+/// element-for-element the same adds as `chunked_sum` over the gathered
+/// values (the gather itself is exact per edge).
+#[inline]
+fn sum_row_weighted<G: Fn(u32, f32) -> f32>(g: &G, col: &[u32], ws: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut vals = [0.0f32; LANES];
+    let mut cc = col.chunks_exact(LANES);
+    let mut cw = ws.chunks_exact(LANES);
+    for (c, w) in (&mut cc).zip(&mut cw) {
+        for j in 0..LANES {
+            vals[j] = g(c[j], w[j]);
+        }
+        add_lanes(&mut acc, &vals);
+    }
+    let rc = cc.remainder();
+    if !rc.is_empty() {
+        let mut tail = [0.0f32; LANES];
+        for (j, (&u, &w)) in rc.iter().zip(cw.remainder()).enumerate() {
+            tail[j] = g(u, w);
+        }
+        add_lanes(&mut acc, &tail);
+    }
+    reduce_sum(acc)
+}
+
+#[inline]
+fn sum_row_unweighted<G: Fn(u32, f32) -> f32>(g: &G, col: &[u32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut vals = [0.0f32; LANES];
+    let mut cc = col.chunks_exact(LANES);
+    for c in &mut cc {
+        for j in 0..LANES {
+            vals[j] = g(c[j], 1.0);
+        }
+        add_lanes(&mut acc, &vals);
+    }
+    let rc = cc.remainder();
+    if !rc.is_empty() {
+        let mut tail = [0.0f32; LANES];
+        for (j, &u) in rc.iter().enumerate() {
+            tail[j] = g(u, 1.0);
+        }
+        add_lanes(&mut acc, &tail);
+    }
+    reduce_sum(acc)
+}
+
 fn sum_csr<G: Fn(u32, f32) -> f32>(
+    ctx: &IterCtx<'_>,
+    g: G,
+    csr: CsrRef<'_>,
+    start_vertex: u32,
+    out: &mut [f32],
+) {
+    let kernel = ctx.kernel;
+    let ro = csr.row_offsets;
+    match csr.weights {
+        Some(ws) => {
+            for (r, o) in out.iter_mut().enumerate() {
+                let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
+                let sum = sum_row_weighted(&g, &csr.col[lo..hi], &ws[lo..hi]);
+                let v = start_vertex + r as u32;
+                *o = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
+            }
+        }
+        None => {
+            for (r, o) in out.iter_mut().enumerate() {
+                let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
+                let sum = sum_row_unweighted(&g, &csr.col[lo..hi]);
+                let v = start_vertex + r as u32;
+                *o = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
+            }
+        }
+    }
+}
+
+/// Chunked meets.  Every lane starts at the row's current value
+/// (`min`/`max` are idempotent, so the extra copies are identities),
+/// the remainder folds into lane 0, and the lanes reduce with the same
+/// meet — for NaN-free, signed-zero-free values (all app value domains
+/// here) the result is the multiset extremum, bit-identical to the
+/// sequential fold regardless of association.  No `simd` variant: the
+/// scalar lane loop autovectorizes, and one code path keeps the
+/// bit-identity argument trivial.
+fn meet_csr<G, C>(g: G, cb: C, csr: CsrRef<'_>, out: &mut [f32])
+where
+    G: Fn(u32, f32) -> f32,
+    C: Fn(f32, f32) -> f32,
+{
+    let ro = csr.row_offsets;
+    match csr.weights {
+        Some(ws) => {
+            for (r, o) in out.iter_mut().enumerate() {
+                let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
+                let cur = *o; // current value (== src of this row)
+                let mut acc = [cur; LANES];
+                let mut vals = [0.0f32; LANES];
+                let mut cc = csr.col[lo..hi].chunks_exact(LANES);
+                let mut cw = ws[lo..hi].chunks_exact(LANES);
+                for (c, w) in (&mut cc).zip(&mut cw) {
+                    for j in 0..LANES {
+                        vals[j] = g(c[j], w[j]);
+                    }
+                    for j in 0..LANES {
+                        acc[j] = cb(acc[j], vals[j]);
+                    }
+                }
+                for (&u, &w) in cc.remainder().iter().zip(cw.remainder()) {
+                    acc[0] = cb(acc[0], g(u, w));
+                }
+                *o = reduce_meet(&cb, acc);
+            }
+        }
+        None => {
+            for (r, o) in out.iter_mut().enumerate() {
+                let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
+                let cur = *o;
+                let mut acc = [cur; LANES];
+                let mut vals = [0.0f32; LANES];
+                let mut cc = csr.col[lo..hi].chunks_exact(LANES);
+                for c in &mut cc {
+                    for j in 0..LANES {
+                        vals[j] = g(c[j], 1.0);
+                    }
+                    for j in 0..LANES {
+                        acc[j] = cb(acc[j], vals[j]);
+                    }
+                }
+                for &u in cc.remainder() {
+                    acc[0] = cb(acc[0], g(u, 1.0));
+                }
+                *o = reduce_meet(&cb, acc);
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn reduce_meet<C: Fn(f32, f32) -> f32>(cb: &C, acc: [f32; LANES]) -> f32 {
+    cb(
+        cb(cb(acc[0], acc[4]), cb(acc[1], acc[5])),
+        cb(cb(acc[2], acc[6]), cb(acc[3], acc[7])),
+    )
+}
+
+/// Destination-grouped edge-list fold (PSW intervals, DSW grid columns,
+/// the toy sources).  `out` covers rows `[lo, lo + out.len())` and
+/// enters holding their current values.  `vals`/`idx` are the caller's
+/// reusable 64-byte-aligned scratch arenas (reset here, allocated at
+/// most once per worker lifetime): sums counting-sort the gathered edge
+/// values by destination row into `vals` (cursor offsets in `idx`),
+/// then run the canonical [`chunked_sum`] per row — **bit-identical**
+/// to [`fold_csr`] over the same per-destination edge order
+/// (canonically ascending source id), which the kernel tests assert
+/// with `==`.
+pub fn fold_list(
+    ctx: &IterCtx<'_>,
+    edges: &[Edge],
+    lo: u32,
+    out: &mut [f32],
+    vals: &mut AlignedArena,
+    idx: &mut AlignedArena,
+) {
+    let kernel = ctx.kernel;
+    match kernel.combine {
+        Combine::Sum => {
+            let nr = out.len();
+            // counting sort by destination row: count (offset by one) …
+            let idx = idx.u32s(nr + 1);
+            debug_assert_eq!(idx.as_ptr() as usize % 64, 0, "fold scratch must be 64B-aligned");
+            for e in edges {
+                idx[(e.dst - lo) as usize + 1] += 1;
+            }
+            // … exclusive prefix sum: idx[r] = start of row r …
+            for r in 0..nr {
+                idx[r + 1] += idx[r];
+            }
+            // … then fill, advancing idx[r] to the end of row r.  The
+            // fill is in edge order, so each row keeps the caller's
+            // per-destination order (canonical ascending source).
+            let vals = vals.f32s(edges.len());
+            debug_assert_eq!(vals.as_ptr() as usize % 64, 0, "fold scratch must be 64B-aligned");
+            with_gather!(ctx, g => {
+                for e in edges {
+                    let r = (e.dst - lo) as usize;
+                    vals[idx[r] as usize] = g(e.src, e.weight);
+                    idx[r] += 1;
+                }
+            });
+            for (r, o) in out.iter_mut().enumerate() {
+                let start = if r == 0 { 0 } else { idx[r - 1] as usize };
+                let sum = chunked_sum(&vals[start..idx[r] as usize]);
+                let v = lo + r as u32;
+                *o = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
+            }
+        }
+        Combine::Min => {
+            with_gather!(ctx, g => meet_list(g, |a: f32, b: f32| a.min(b), edges, lo, out))
+        }
+        Combine::Max => {
+            with_gather!(ctx, g => meet_list(g, |a: f32, b: f32| a.max(b), edges, lo, out))
+        }
+    }
+}
+
+/// Sequential meet over a destination-grouped list.  Destinations
+/// interleave, so there is no per-row chunk to vectorize; order
+/// insensitivity of NaN-free meets keeps this bit-identical to the
+/// chunked [`fold_csr`] meets.
+fn meet_list<G, C>(g: G, cb: C, edges: &[Edge], lo: u32, out: &mut [f32])
+where
+    G: Fn(u32, f32) -> f32,
+    C: Fn(f32, f32) -> f32,
+{
+    for e in edges {
+        let r = (e.dst - lo) as usize;
+        out[r] = cb(out[r], g(e.src, e.weight));
+    }
+}
+
+/// Scatter one unit's edges into deferred updates (X-Stream's scatter
+/// phase), monomorphized and gathered in [`LANES`] blocks; `out` is the
+/// caller's reusable buffer.  Per-edge values are exact (no combine
+/// happens here — the barrier's `fold_updates` runs the chunked sum).
+pub fn scatter_list(ctx: &IterCtx<'_>, edges: &[Edge], out: &mut Vec<Update>) {
+    out.reserve(edges.len());
+    with_gather!(ctx, g => {
+        let mut chunks = edges.chunks_exact(LANES);
+        let mut vals = [0.0f32; LANES];
+        for c in &mut chunks {
+            for j in 0..LANES {
+                vals[j] = g(c[j].src, c[j].weight);
+            }
+            for j in 0..LANES {
+                out.push(Update { dst: c[j].dst, val: vals[j] });
+            }
+        }
+        for e in chunks.remainder() {
+            out.push(Update { dst: e.dst, val: g(e.src, e.weight) });
+        }
+    });
+}
+
+/// The sequential monomorphized fold — the pre-vectorization [`fold_csr`]
+/// body, kept verbatim as the scalar oracle and bench baseline.
+/// Bit-identical to [`reference_fold_csr`] for every combine; the
+/// chunked [`fold_csr`] matches it exactly for min/max and within a
+/// documented epsilon for sums (reassociation).  Not part of the public
+/// API.
+#[doc(hidden)]
+pub fn scalar_fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), csr.rows());
+    match ctx.kernel.combine {
+        Combine::Sum => {
+            with_gather!(ctx, g => scalar_sum_csr(ctx, g, csr, start_vertex, out))
+        }
+        Combine::Min => {
+            with_gather!(ctx, g => scalar_meet_csr(g, |a: f32, b: f32| a.min(b), csr, out))
+        }
+        Combine::Max => {
+            with_gather!(ctx, g => scalar_meet_csr(g, |a: f32, b: f32| a.max(b), csr, out))
+        }
+    }
+}
+
+fn scalar_sum_csr<G: Fn(u32, f32) -> f32>(
     ctx: &IterCtx<'_>,
     g: G,
     csr: CsrRef<'_>,
@@ -121,7 +490,7 @@ fn sum_csr<G: Fn(u32, f32) -> f32>(
     }
 }
 
-fn meet_csr<G, C>(g: G, cb: C, csr: CsrRef<'_>, out: &mut [f32])
+fn scalar_meet_csr<G, C>(g: G, cb: C, csr: CsrRef<'_>, out: &mut [f32])
 where
     G: Fn(u32, f32) -> f32,
     C: Fn(f32, f32) -> f32,
@@ -151,73 +520,13 @@ where
     }
 }
 
-/// Destination-grouped edge-list fold (PSW intervals, DSW grid columns,
-/// the toy sources).  `out` covers rows `[lo, lo + out.len())` and enters
-/// holding their current values; `acc` is the caller's reusable
-/// sum-accumulator arena (cleared and resized here, allocated at most
-/// once per worker lifetime).  Bit-identical to [`fold_csr`] over the
-/// same per-destination edge order — canonically ascending source id.
-pub fn fold_list(
-    ctx: &IterCtx<'_>,
-    edges: &[Edge],
-    lo: u32,
-    out: &mut [f32],
-    acc: &mut Vec<f32>,
-) {
-    let kernel = ctx.kernel;
-    match kernel.combine {
-        Combine::Sum => {
-            // fold into per-row accumulators first, then apply: rows with
-            // no in-edges still get their base mass
-            acc.clear();
-            acc.resize(out.len(), 0.0);
-            with_gather!(ctx, g => {
-                for e in edges {
-                    acc[(e.dst - lo) as usize] += g(e.src, e.weight);
-                }
-            });
-            for (r, (o, a)) in out.iter_mut().zip(acc.iter()).enumerate() {
-                let v = lo + r as u32;
-                *o = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], *a);
-            }
-        }
-        Combine::Min => {
-            with_gather!(ctx, g => meet_list(g, |a: f32, b: f32| a.min(b), edges, lo, out))
-        }
-        Combine::Max => {
-            with_gather!(ctx, g => meet_list(g, |a: f32, b: f32| a.max(b), edges, lo, out))
-        }
-    }
-}
-
-fn meet_list<G, C>(g: G, cb: C, edges: &[Edge], lo: u32, out: &mut [f32])
-where
-    G: Fn(u32, f32) -> f32,
-    C: Fn(f32, f32) -> f32,
-{
-    for e in edges {
-        let r = (e.dst - lo) as usize;
-        out[r] = cb(out[r], g(e.src, e.weight));
-    }
-}
-
-/// Scatter one unit's edges into deferred updates (X-Stream's scatter
-/// phase), monomorphized; `out` is the caller's reusable buffer.
-pub fn scatter_list(ctx: &IterCtx<'_>, edges: &[Edge], out: &mut Vec<Update>) {
-    out.reserve(edges.len());
-    with_gather!(ctx, g => {
-        for e in edges {
-            out.push(Update { dst: e.dst, val: g(e.src, e.weight) });
-        }
-    });
-}
-
 /// The pre-monomorphization fold: per-edge enum dispatch through the
 /// [`crate::apps::ShardKernel`] methods (`uses_contrib` branch + gather
 /// `match` per edge), in the exact shape of the old `native_update`.
-/// Kept as the single bit-identity oracle — the kernel unit tests assert
-/// against it and `benches/hot_loop.rs` measures it as the baseline.
-/// Not part of the public API.
+/// Kept as the enum-dispatch oracle — bit-identical to
+/// [`scalar_fold_csr`], epsilon-compared to the chunked [`fold_csr`]
+/// for sums — and measured by `benches/hot_loop.rs` as the dispatch
+/// baseline.  Not part of the public API.
 #[doc(hidden)]
 pub fn reference_fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start: u32, out: &mut [f32]) {
     let kernel = ctx.kernel;
@@ -310,6 +619,18 @@ mod tests {
         (edges, src, inv)
     }
 
+    /// The documented sum gate: reassociation of a k-edge row perturbs
+    /// the last few ulps, so chunked-vs-sequential sum comparisons use
+    /// a small relative epsilon.  Everything else stays `==`.
+    fn assert_sum_close(a: &[f32], b: &[f32], what: &str) {
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-5 * x.abs().max(1.0),
+                "{what}: vertex {i}: {x} vs {y}"
+            );
+        }
+    }
+
     #[test]
     fn monomorphized_folds_match_enum_dispatch_bitwise() {
         let n = 64u32;
@@ -325,19 +646,34 @@ mod tests {
                 contrib: &contrib,
                 iteration: 0,
             };
-            let mut a = src.clone();
+            // the sequential monomorphized path is bit-identical to the
+            // per-edge enum-dispatch oracle, for every combine
+            let mut s = src.clone();
             let mut b = src.clone();
-            fold_csr(&ctx, csr.slices(), 0, &mut a);
+            scalar_fold_csr(&ctx, csr.slices(), 0, &mut s);
             reference_fold_csr(&ctx, csr.slices(), 0, &mut b);
-            assert_eq!(a, b, "fold_csr diverged for {kernel:?}");
+            assert_eq!(s, b, "scalar_fold_csr diverged for {kernel:?}");
 
-            // list fold over the same destination-grouped order
+            // the chunked fold: bit-identical for min/max, epsilon for
+            // sums (documented reassociation)
+            let mut a = src.clone();
+            fold_csr(&ctx, csr.slices(), 0, &mut a);
+            match kernel.combine {
+                Combine::Sum => assert_sum_close(&a, &s, "fold_csr (sum)"),
+                Combine::Min | Combine::Max => {
+                    assert_eq!(a, s, "fold_csr meet diverged for {kernel:?}")
+                }
+            }
+
+            // the list fold over the same destination-grouped order is
+            // bit-identical to the chunked CSR fold — same chunked
+            // scheme, same per-row value order
             let mut c = src.clone();
-            let mut acc = Vec::new();
-            fold_list(&ctx, &edges, 0, &mut c, &mut acc);
+            let (mut vals, mut idx) = (AlignedArena::new(), AlignedArena::new());
+            fold_list(&ctx, &edges, 0, &mut c, &mut vals, &mut idx);
             assert_eq!(c, a, "fold_list diverged for {kernel:?}");
 
-            // scatter gathers the same per-edge values
+            // scatter gathers the same per-edge values, exactly
             let mut ups = Vec::new();
             scatter_list(&ctx, &edges, &mut ups);
             assert_eq!(ups.len(), edges.len());
@@ -345,6 +681,40 @@ mod tests {
                 assert_eq!(u.dst, e.dst);
                 assert_eq!(u.val, ctx.edge_value(e), "scatter diverged for {kernel:?}");
             }
+        }
+    }
+
+    #[test]
+    fn short_rows_sum_exactly_like_the_scalar_path() {
+        // rows with ≤ 3 in-edges take the zero-padded tail block whose
+        // reduction tree degenerates to the sequential order — chunked
+        // sums of such rows are bit-identical to the scalar oracle
+        let n = 8u32;
+        let mut edges = Vec::new();
+        for r in 0..n {
+            for k in 0..(r % 4) {
+                edges.push(Edge::weighted((r + k + 1) % n, r, 0.3 + k as f32));
+            }
+        }
+        edges.sort_unstable_by_key(|e| (e.dst, e.src));
+        let src: Vec<f32> = (0..n).map(|v| 0.25 + (v % 7) as f32).collect();
+        let inv: Vec<f32> = (0..n).map(|v| 1.0 / (1.0 + (v % 5) as f32)).collect();
+        let contrib: Vec<f32> = src.iter().zip(&inv).map(|(&v, &d)| v * d).collect();
+        let csr = Csr::from_edges(&edges, 0, n as usize, true);
+        for kernel in all_kernels() {
+            let ctx = IterCtx {
+                kernel,
+                num_vertices: n,
+                src: &src,
+                inv_out_deg: &inv,
+                contrib: &contrib,
+                iteration: 0,
+            };
+            let mut a = src.clone();
+            let mut s = src.clone();
+            fold_csr(&ctx, csr.slices(), 0, &mut a);
+            scalar_fold_csr(&ctx, csr.slices(), 0, &mut s);
+            assert_eq!(a, s, "short rows must be exact for {kernel:?}");
         }
     }
 
@@ -371,12 +741,17 @@ mod tests {
             let mut b = src.clone();
             fold_csr(&ctx, csr.slices(), 0, &mut a);
             reference_fold_csr(&ctx, csr.slices(), 0, &mut b);
-            assert_eq!(a, b, "unweighted fold diverged for {kernel:?}");
+            match kernel.combine {
+                Combine::Sum => assert_sum_close(&a, &b, "unweighted fold (sum)"),
+                Combine::Min | Combine::Max => {
+                    assert_eq!(a, b, "unweighted fold diverged for {kernel:?}")
+                }
+            }
         }
     }
 
     #[test]
-    fn fold_list_reuses_the_acc_arena() {
+    fn fold_list_reuses_the_scratch_arenas() {
         let n = 8u32;
         let (edges, src, inv) = fixture(n, 3);
         let contrib: Vec<f32> = src.iter().zip(&inv).map(|(&v, &d)| v * d).collect();
@@ -388,14 +763,15 @@ mod tests {
             contrib: &contrib,
             iteration: 0,
         };
-        let mut acc = Vec::new();
+        let (mut vals, mut idx) = (AlignedArena::new(), AlignedArena::new());
         let mut out1 = src.clone();
-        fold_list(&ctx, &edges, 0, &mut out1, &mut acc);
-        let cap = acc.capacity();
-        assert!(cap >= n as usize);
+        fold_list(&ctx, &edges, 0, &mut out1, &mut vals, &mut idx);
+        let (cv, ci) = (vals.capacity_bytes(), idx.capacity_bytes());
+        assert!(cv >= edges.len() * 4);
         let mut out2 = src.clone();
-        fold_list(&ctx, &edges, 0, &mut out2, &mut acc);
-        assert_eq!(acc.capacity(), cap, "second fold must not reallocate");
+        fold_list(&ctx, &edges, 0, &mut out2, &mut vals, &mut idx);
+        assert_eq!(vals.capacity_bytes(), cv, "second fold must not reallocate");
+        assert_eq!(idx.capacity_bytes(), ci, "second fold must not reallocate");
         assert_eq!(out1, out2);
     }
 }

@@ -48,6 +48,7 @@
 //! units and processed edges are metered per (unit, job) into
 //! [`crate::metrics::JobMetrics`] for fair per-query billing.
 
+pub mod arena;
 pub mod dst;
 pub mod kernel;
 pub mod pipeline;
@@ -65,6 +66,7 @@ use crate::cache::EdgeCache;
 use crate::graph::{Edge, VertexId};
 use crate::metrics::{BatchMetrics, IterationMetrics, JobMetrics, RunMetrics};
 use crate::storage::disk::Disk;
+use arena::AlignedArena;
 pub use dst::SharedDst;
 pub use schedule::{ActiveBits, RangeMarker};
 
@@ -231,10 +233,13 @@ pub enum UnitOutput {
 /// across units *and iterations*: workers lease a [`Scratch`] at spawn
 /// (buffers return on drop), and the barrier recycles drained scatter
 /// buffers — so after warm-up the compute path performs no per-unit heap
-/// allocation.
+/// allocation.  Fold scratch is backed by 64-byte-aligned
+/// [`AlignedArena`]s (one value arena + one cursor arena per lease) so
+/// the chunked kernels' accumulators sit on cache-line boundaries, and
+/// arenas are recycled at that same alignment.
 #[derive(Default)]
 pub struct ScratchPool {
-    accs: Mutex<Vec<Vec<f32>>>,
+    arenas: Mutex<Vec<AlignedArena>>,
     update_bufs: Mutex<Vec<Vec<Update>>>,
 }
 
@@ -243,12 +248,25 @@ impl ScratchPool {
         Self::default()
     }
 
-    /// Lease a worker scratch; its buffers return to the pool on drop.
+    /// Lease a worker scratch; its arenas return to the pool on drop.
     pub fn scratch(&self) -> Scratch<'_> {
-        Scratch {
-            pool: self,
-            acc: self.accs.lock().unwrap().pop().unwrap_or_default(),
-        }
+        let (vals, idx) = self.take_arenas();
+        Scratch { pool: self, vals, idx }
+    }
+
+    /// Pop a (value, cursor) arena pair — shared by worker leases and
+    /// the barrier's update fold.
+    fn take_arenas(&self) -> (AlignedArena, AlignedArena) {
+        let mut arenas = self.arenas.lock().unwrap();
+        let vals = arenas.pop().unwrap_or_default();
+        let idx = arenas.pop().unwrap_or_default();
+        (vals, idx)
+    }
+
+    fn put_arenas(&self, vals: AlignedArena, idx: AlignedArena) {
+        let mut arenas = self.arenas.lock().unwrap();
+        arenas.push(vals);
+        arenas.push(idx);
     }
 
     /// Return a drained scatter buffer for reuse (capacity preserved).
@@ -262,13 +280,15 @@ impl ScratchPool {
 /// state into every [`ShardSource::compute`] call.
 pub struct Scratch<'p> {
     pool: &'p ScratchPool,
-    acc: Vec<f32>,
+    vals: AlignedArena,
+    idx: AlignedArena,
 }
 
 impl Scratch<'_> {
-    /// The sum-kernel accumulator arena (sized by the fold that uses it).
-    fn acc_buf(&mut self) -> &mut Vec<f32> {
-        &mut self.acc
+    /// The fold's 64-byte-aligned scratch arenas — value buckets and
+    /// counting-sort cursors, sized by the fold that uses them.
+    fn arenas(&mut self) -> (&mut AlignedArena, &mut AlignedArena) {
+        (&mut self.vals, &mut self.idx)
     }
 
     /// Take an empty scatter buffer (capacity reused across iterations);
@@ -281,7 +301,7 @@ impl Scratch<'_> {
 
 impl Drop for Scratch<'_> {
     fn drop(&mut self) {
-        self.pool.accs.lock().unwrap().push(std::mem::take(&mut self.acc));
+        self.pool.put_arenas(std::mem::take(&mut self.vals), std::mem::take(&mut self.idx));
     }
 }
 
@@ -350,11 +370,13 @@ pub trait ShardSource: Sync {
 
 /// Fold destination-grouped `edges` into `out`, which covers the vertex
 /// rows `[lo, lo + out.len())` and enters holding their current values.
-/// Dispatches into the monomorphized [`kernel::fold_list`] (branch-free
-/// per edge, sum accumulator from the worker's scratch arena).
-/// Bit-identical to the CSR row loop (`engine::native_update`) as long as
-/// each destination's edges arrive in the same order — the repo-wide
-/// canonical layout is ascending source id.
+/// Dispatches into the monomorphized, chunk-vectorized
+/// [`kernel::fold_list`] (branch-free per edge; sums bucket values by
+/// destination into the worker's 64-byte-aligned scratch arenas and run
+/// the canonical chunked row sum).  Bit-identical to the CSR row loop
+/// (`engine::native_update`) as long as each destination's edges arrive
+/// in the same order — the repo-wide canonical layout is ascending
+/// source id.
 pub fn fold_edges_interval(
     ctx: &IterCtx<'_>,
     edges: &[Edge],
@@ -362,7 +384,8 @@ pub fn fold_edges_interval(
     out: &mut [f32],
     scratch: &mut Scratch<'_>,
 ) {
-    kernel::fold_list(ctx, edges, lo, out, scratch.acc_buf());
+    let (vals, idx) = scratch.arenas();
+    kernel::fold_list(ctx, edges, lo, out, vals, idx);
 }
 
 /// Mark every row of `[lo, lo + out.len())` whose new value activates it.
@@ -1031,11 +1054,15 @@ struct PassStats {
 }
 
 /// Fold scatter-unit update streams into `out` in worklist order,
-/// marking activated vertices.  Sum kernels rebuild every lane from the
-/// folded accumulator (X-Stream's gather recomputes all vertices);
-/// monotone kernels meet each update into the current value.  Drained
-/// buffers (and the barrier accumulator) go back to the scratch pool so
-/// the next iteration's scatter units reuse their capacity.
+/// marking activated vertices.  Sum kernels bucket the update values by
+/// destination (counting sort into the pool's 64-byte-aligned arenas —
+/// slots arrive in worklist order, so each destination's bucket keeps
+/// the canonical ascending-source order) and rebuild every lane through
+/// the same chunked sum the CSR fold uses, keeping the scatter engines
+/// bit-identical to the in-place ones; monotone kernels meet each
+/// update into the current value (order-insensitive).  Drained buffers
+/// and the barrier arenas go back to the scratch pool so the next
+/// iteration reuses their capacity.
 fn fold_updates(
     ctx: &IterCtx<'_>,
     slots: Vec<Option<Vec<Update>>>,
@@ -1048,25 +1075,41 @@ fn fold_updates(
     let mut marker = bits.marker();
     match kernel.combine {
         Combine::Sum => {
-            let mut acc = pool.accs.lock().unwrap().pop().unwrap_or_default();
-            acc.clear();
-            acc.resize(out.len(), 0.0);
+            let (mut vals_a, mut idx_a) = pool.take_arenas();
+            let total: usize = slots.iter().flatten().map(|s| s.len()).sum();
+            // counting sort by destination: count (offset by one), …
+            let idx = idx_a.u32s(out.len() + 1);
+            for slot in slots.iter().flatten() {
+                for u in slot {
+                    idx[u.dst as usize + 1] += 1;
+                }
+            }
+            // … exclusive prefix (idx[v] = start of vertex v's bucket), …
+            for v in 0..out.len() {
+                idx[v + 1] += idx[v];
+            }
+            // … then fill, advancing idx[v] to the bucket's end
+            let vals = vals_a.f32s(total);
             for mut slot in slots.into_iter().flatten() {
                 folded += slot.len() as u64;
                 for u in slot.drain(..) {
-                    acc[u.dst as usize] += u.val;
+                    let v = u.dst as usize;
+                    vals[idx[v] as usize] = u.val;
+                    idx[v] += 1;
                 }
                 pool.recycle_updates(slot);
             }
-            for (v, a) in acc.iter().enumerate() {
+            for v in 0..out.len() {
+                let start = if v == 0 { 0 } else { idx[v - 1] as usize };
+                let a = crate::exec::kernel::chunked_sum(&vals[start..idx[v] as usize]);
                 let old = ctx.src[v];
-                let new = kernel.apply(v as u32, ctx.num_vertices, old, *a);
+                let new = kernel.apply(v as u32, ctx.num_vertices, old, a);
                 if kernel.is_update(old, new) {
                     marker.mark(v as u32);
                 }
                 out[v] = new;
             }
-            pool.accs.lock().unwrap().push(acc);
+            pool.put_arenas(vals_a, idx_a);
         }
         Combine::Min | Combine::Max => {
             for mut slot in slots.into_iter().flatten() {
@@ -1578,17 +1621,24 @@ mod tests {
         let pool = ScratchPool::new();
         {
             let mut s = pool.scratch();
-            s.acc_buf().resize(100, 0.0);
+            let (vals, idx) = s.arenas();
+            assert_eq!(vals.f32s(100).as_ptr() as usize % 64, 0);
+            assert_eq!(idx.u32s(100).as_ptr() as usize % 64, 0);
             let u = s.take_updates();
             assert!(u.is_empty());
             let mut u = u;
             u.reserve(64);
             pool.recycle_updates(u);
         }
-        // the dropped scratch returned its accumulator; the recycled
-        // update buffer kept its capacity
+        // the dropped scratch returned its arenas (still 64B-capable,
+        // capacity retained); the recycled update buffer kept its
+        // capacity
         let mut s2 = pool.scratch();
-        assert!(s2.acc_buf().capacity() >= 100);
+        let (vals, idx) = s2.arenas();
+        assert!(vals.capacity_bytes() >= 400, "value arena must be recycled");
+        assert!(idx.capacity_bytes() >= 400, "cursor arena must be recycled");
+        assert_eq!(vals.f32s(100).as_ptr() as usize % 64, 0);
+        assert_eq!(idx.u32s(100).as_ptr() as usize % 64, 0);
         assert!(s2.take_updates().capacity() >= 64);
     }
 

@@ -27,15 +27,20 @@
 //! on the claiming worker (the long-worklist default, zero coordination),
 //! or — when the union worklist is shorter than the worker count and
 //! cores would otherwise idle — *split* across workers through a shared
-//! sub-task queue, each worker computing one (unit, job) pair (the item
-//! is `Clone`, an `Arc` for real shards, so the hand-off is cheap).
-//! Either way every sub-task writes job-isolated state, so results are
-//! bit-identical between the two execution shapes.
+//! condvar-backed sub-task queue ([`FanQueue`]), each worker computing
+//! one (unit, job) pair (the item is `Clone`, an `Arc` for real shards,
+//! so the hand-off is cheap).  In split mode workers never park in a
+//! blocking ready-queue receive: they poll the ready queue and wait on
+//! the fan queue's condvar, so a worker idling while a slow load is in
+//! flight wakes *immediately* when a sibling fans sub-tasks out — fanned
+//! work no longer waits for the ready queue to close when I/O is slow
+//! and jobs ≫ units.  Either way every sub-task writes job-isolated
+//! state, so results are bit-identical between the execution shapes.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError, TrySendError};
-use std::sync::{Mutex, TryLockError};
+use std::sync::{Condvar, Mutex, TryLockError};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -148,6 +153,116 @@ impl<T> ReadyQueue<T> {
             Err(TryRecvError::Disconnected) => None,
         }
     }
+
+    /// Non-blocking variant of [`Self::next`] for split-mode workers,
+    /// which must stay responsive to the fan queue instead of parking
+    /// inside `recv`.  `waited` is per-worker state threaded across
+    /// calls so the hit/miss accounting matches `next`: a delivery
+    /// counts as a hit only if this worker never came up empty (or
+    /// lock-contended) since its previous delivery.
+    pub fn poll(&self, counters: &PipelineCounters, waited: &mut bool) -> Polled<Fetched<T>> {
+        let rx = match self.rx.try_lock() {
+            Ok(guard) => guard,
+            Err(TryLockError::WouldBlock) => {
+                // a sibling holds the lock — the prefetcher is behind
+                // for everyone, same signal as lock contention in `next`
+                *waited = true;
+                return Polled::Empty;
+            }
+            Err(TryLockError::Poisoned(e)) => e.into_inner(),
+        };
+        match rx.try_recv() {
+            Ok(item) => {
+                if *waited {
+                    counters.ready_misses.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    counters.ready_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                *waited = false;
+                Polled::Item(item)
+            }
+            Err(TryRecvError::Empty) => {
+                *waited = true;
+                Polled::Empty
+            }
+            Err(TryRecvError::Disconnected) => Polled::Closed,
+        }
+    }
+}
+
+/// Outcome of one [`ReadyQueue::poll`].
+pub enum Polled<T> {
+    /// A loaded unit was staged and is now this worker's.
+    Item(T),
+    /// Nothing staged right now; the queue may still produce.
+    Empty,
+    /// The queue is closed and drained — no more units will arrive.
+    Closed,
+}
+
+/// Split-mode sub-task queue: sub-tasks 1..k of a claimed unit wait here
+/// for any idle worker.  `pending` counts queued *plus in-flight*
+/// (popped but not yet finished) entries, so `drained` only reports true
+/// once every fanned sub-task has actually run.  The condvar is the
+/// hand-off that lets queue-blocked workers steal while the ready queue
+/// is still open: pushers `notify_all`, idle workers wait here (with a
+/// short timeout so they also re-poll the ready queue) instead of
+/// parking in a blocking `recv`.
+struct FanQueue<T> {
+    state: Mutex<FanState<T>>,
+    work: Condvar,
+}
+
+struct FanState<T> {
+    queue: VecDeque<(usize, u32, u32, T)>,
+    pending: usize,
+}
+
+impl<T> FanQueue<T> {
+    fn new() -> Self {
+        FanQueue {
+            state: Mutex::new(FanState { queue: VecDeque::new(), pending: 0 }),
+            work: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a unit's fanned sub-tasks and wake every waiting worker.
+    fn push_subs(&self, subs: impl Iterator<Item = (usize, u32, u32, T)>) {
+        let mut state = self.state.lock().unwrap();
+        let before = state.queue.len();
+        state.queue.extend(subs);
+        state.pending += state.queue.len() - before;
+        self.work.notify_all();
+    }
+
+    fn try_pop(&self) -> Option<(usize, u32, u32, T)> {
+        self.state.lock().unwrap().queue.pop_front()
+    }
+
+    /// A popped sub-task finished (or was discarded under abort).  The
+    /// last one wakes waiters so they can observe `drained`.
+    fn task_done(&self) {
+        let mut state = self.state.lock().unwrap();
+        state.pending -= 1;
+        if state.pending == 0 {
+            self.work.notify_all();
+        }
+    }
+
+    fn drained(&self) -> bool {
+        self.state.lock().unwrap().pending == 0
+    }
+
+    /// Park until fanned work may be available: returns on a push, when
+    /// the last in-flight sub-task completes, or after a 100 µs timeout
+    /// (matching the I/O threads' poll cadence) so callers re-check
+    /// their other wake sources — the ready queue and the abort flag.
+    fn wait_for_work(&self) {
+        let state = self.state.lock().unwrap();
+        if state.queue.is_empty() {
+            let _woken = self.work.wait_timeout(state, Duration::from_micros(100)).unwrap();
+        }
+    }
 }
 
 /// Fetch loop run by each dedicated I/O thread: claim the next worklist
@@ -258,11 +373,7 @@ where
     let fanned = AtomicU32::new(0);
     let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
     let abort = AtomicBool::new(false);
-    // split mode: sub-tasks 1..k of a claimed unit wait here for any idle
-    // worker; `fan_pending` counts queued-but-unconsumed entries so
-    // workers know when the pass is truly drained
-    let fan_queue: Mutex<VecDeque<(usize, u32, u32, T)>> = Mutex::new(VecDeque::new());
-    let fan_pending = AtomicUsize::new(0);
+    let fan_queue: FanQueue<T> = FanQueue::new();
 
     // first error wins and raises the abort flag (load and compute
     // failures share this one path)
@@ -308,14 +419,8 @@ where
             return; // loaded for no member (shouldn't happen, but harmless)
         }
         if fan.split && k > 1 {
-            fan_pending.fetch_add((k - 1) as usize, Ordering::Relaxed);
             fanned.fetch_add(k - 1, Ordering::Relaxed);
-            {
-                let mut q = fan_queue.lock().unwrap();
-                for sub in 1..k {
-                    q.push_back((index, id, sub, item.clone()));
-                }
-            }
+            fan_queue.push_subs((1..k).map(|sub| (index, id, sub, item.clone())));
             consume_one(state, index, id, 0, item);
         } else {
             let mut item = Some(item);
@@ -339,22 +444,20 @@ where
         if !fan.split {
             return false;
         }
-        let task = fan_queue.lock().unwrap().pop_front();
-        match task {
+        match fan_queue.try_pop() {
             Some((index, id, sub, item)) => {
                 if !abort.load(Ordering::Relaxed) {
                     consume_one(state, index, id, sub, item);
                 }
-                // decrement even when aborted so waiters can exit
-                fan_pending.fetch_sub(1, Ordering::Relaxed);
+                // mark done even when aborted so waiters can exit
+                fan_queue.task_done();
                 true
             }
             None => false,
         }
     };
     let steal_fanned = &steal_fanned;
-    let fan_drained =
-        || !fan.split || fan_pending.load(Ordering::Relaxed) == 0 || abort.load(Ordering::Relaxed);
+    let fan_drained = || !fan.split || fan_queue.drained() || abort.load(Ordering::Relaxed);
 
     let (queue_opt, tx_opt) = if pipelined {
         let (q, tx) = ReadyQueue::with_sender(depth);
@@ -375,50 +478,65 @@ where
             // queue closes when the last I/O thread finishes (tx_opt was
             // moved into this branch and its clones die with the threads)
             for _ in 0..workers {
-                let (mk_worker, abort, counters, fan_drained) =
-                    (&mk_worker, &abort, &counters, &fan_drained);
+                let (mk_worker, abort, counters, fan_drained, fan_queue) =
+                    (&mk_worker, &abort, &counters, &fan_drained, &fan_queue);
                 scope.spawn(move || {
                     let _guard = AbortOnPanic(abort);
                     let mut state = mk_worker();
                     let mut queue_open = true;
-                    loop {
-                        // fanned sub-tasks first: ready compute, no I/O
-                        if steal_fanned(&mut state) {
-                            continue;
-                        }
-                        if queue_open {
-                            match queue.next(counters) {
-                                Some((index, id, res)) => {
-                                    if abort.load(Ordering::Relaxed) {
-                                        // keep draining so I/O threads never
-                                        // block forever on a full queue
-                                        continue;
-                                    }
-                                    handle_unit(&mut state, index, id, res);
-                                }
-                                None => queue_open = false,
+                    if fan.split {
+                        // split mode: never park in a blocking recv —
+                        // poll the ready queue and wait on the fan
+                        // queue's condvar, so fanned sub-tasks pushed by
+                        // a sibling are stolen immediately even while a
+                        // slow load keeps the ready queue open but empty
+                        let mut waited = false;
+                        loop {
+                            // fanned sub-tasks first: ready compute, no I/O
+                            if steal_fanned(&mut state) {
+                                continue;
                             }
-                            continue;
+                            if queue_open {
+                                match queue.poll(counters, &mut waited) {
+                                    Polled::Item((index, id, res)) => {
+                                        if abort.load(Ordering::Relaxed) {
+                                            // keep draining so I/O threads
+                                            // never block on a full queue
+                                            continue;
+                                        }
+                                        handle_unit(&mut state, index, id, res);
+                                    }
+                                    Polled::Closed => queue_open = false,
+                                    Polled::Empty => fan_queue.wait_for_work(),
+                                }
+                                continue;
+                            }
+                            // queue drained; wait out in-flight fanned work
+                            if fan_drained() {
+                                break;
+                            }
+                            fan_queue.wait_for_work();
                         }
-                        // queue drained; wait out in-flight fanned work
-                        if fan_drained() {
-                            break;
+                    } else {
+                        // no fanning: the blocking receive is the
+                        // cheapest wait (no polling, OS wakes us)
+                        while let Some((index, id, res)) = queue.next(counters) {
+                            if abort.load(Ordering::Relaxed) {
+                                // keep draining so I/O threads never
+                                // block forever on a full queue
+                                continue;
+                            }
+                            handle_unit(&mut state, index, id, res);
                         }
-                        std::thread::sleep(Duration::from_micros(50));
                     }
                 });
             }
         } else {
             for _ in 0..workers {
-                let (load, mk_worker, worklist, next_fetch, abort, counters, fan_drained) = (
-                    &load,
-                    &mk_worker,
-                    worklist,
-                    &next_fetch,
-                    &abort,
-                    &counters,
-                    &fan_drained,
-                );
+                let (load, mk_worker, worklist, next_fetch) =
+                    (&load, &mk_worker, worklist, &next_fetch);
+                let (abort, counters, fan_drained, fan_queue) =
+                    (&abort, &counters, &fan_drained, &fan_queue);
                 scope.spawn(move || {
                     // a panicking worker raises abort so siblings waiting
                     // on fanned sub-tasks can exit and the scope can join
@@ -438,7 +556,7 @@ where
                             if fan_drained() {
                                 break;
                             }
-                            std::thread::sleep(Duration::from_micros(50));
+                            fan_queue.wait_for_work();
                             continue;
                         }
                         let id = worklist[i];
@@ -702,6 +820,62 @@ mod tests {
                 assert_eq!(out.fanned, 0);
             }
         }
+    }
+
+    #[test]
+    fn queue_blocked_workers_steal_fanned_subtasks() {
+        // the condvar hand-off contract: while the ready queue is still
+        // OPEN (a slow load is in flight), idle workers must wake and
+        // steal fanned sub-tasks instead of parking until the queue
+        // closes.  Unit 0 fans 6 sub-tasks that each block until ≥ 2 run
+        // concurrently — only stealing siblings can make that happen,
+        // because the claiming worker runs its sub-tasks one at a time.
+        // Unit 1's load (the only I/O thread) blocks until the overlap
+        // is observed, pinning the queue open the whole time.  Deadlines
+        // bound the failure mode to a slow assert, never a hang.
+        let worklist: Vec<u32> = vec![0, 1];
+        let fan_counts = vec![6u32, 1];
+        let inflight = TestCounter::new(0);
+        let peak_ok = AtomicBool::new(false);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let out = run_worklist(
+            &worklist,
+            FanOut { counts: &fan_counts, split: true },
+            8,
+            2,
+            1,
+            |id| {
+                if id == 1 {
+                    // keep the ready queue open until sub-tasks overlapped
+                    while !peak_ok.load(Ordering::SeqCst) && Instant::now() < deadline {
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
+                }
+                Ok(id)
+            },
+            || (),
+            |_, index, _, _, _| {
+                if index == 0 {
+                    let cur = inflight.fetch_add(1, Ordering::SeqCst) + 1;
+                    if cur >= 2 {
+                        peak_ok.store(true, Ordering::SeqCst);
+                    }
+                    while !peak_ok.load(Ordering::SeqCst) && Instant::now() < deadline {
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                }
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(out.processed, 7);
+        assert_eq!(out.units, 2);
+        assert_eq!(out.fanned, 5);
+        assert!(
+            peak_ok.load(Ordering::SeqCst),
+            "idle workers must steal fanned sub-tasks while the ready queue is open"
+        );
     }
 
     #[test]

@@ -70,6 +70,12 @@
 //! graphmp run --dir /tmp/g --app ppr --jobs 8 --arrivals every:2
 //! ```
 
+// The `simd` feature swaps the kernel's lane-add for `std::simd::f32x8`
+// (see `exec::kernel::add_lanes`).  Portable SIMD is nightly-only, so
+// the feature gate pulls in the unstable feature flag; stable builds
+// never see it.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod apps;
 pub mod baselines;
 pub mod benchutil;

@@ -1,4 +1,4 @@
-//! Zero-copy shard views over 4-byte-aligned file buffers.
+//! Zero-copy shard views over cache-line-aligned file buffers.
 //!
 //! `Shard::from_bytes` materialises three fresh `Vec`s (row offsets,
 //! columns, weights) out of every shard file — at steady state that copy
@@ -7,8 +7,17 @@
 //! pre-laid-out binary blocks with no per-block parse; [`ShardView`] is
 //! that idea for the GraphMP shard format: the on-disk layout has a
 //! 24-byte header followed by `u32`/`f32` sections, so when the whole
-//! file sits in a 4-byte-aligned buffer ([`AlignedBuf`]) every section
-//! can be *borrowed* as a typed slice instead of copied.
+//! file sits in an aligned buffer ([`AlignedBuf`]) every section can be
+//! *borrowed* as a typed slice instead of copied.
+//!
+//! Alignment contract: the buffer *base* is 64-byte aligned (one cache
+//! line, same contract as `exec::arena`), so streaming a shard never
+//! splits its first bytes across lines and whole-buffer reads start
+//! line-aligned.  The borrowed *sections* are only guaranteed 4-byte
+//! alignment — the 24-byte header shifts them off the line — which is
+//! exactly what the chunked kernels assume: they gather CSR values
+//! scalarly and run their lane arithmetic on the 64-byte-aligned
+//! accumulator arenas, not on these borrowed slices.
 //!
 //! Decode-once lifecycle (see `cache.rs`):
 //!
@@ -35,6 +44,14 @@ use crate::storage::shard::{Shard, MAGIC};
 #[cfg(target_endian = "big")]
 compile_error!("ShardView reinterprets little-endian shard files in place");
 
+/// One 64-byte cache line of backing storage (mirrors `exec::arena`:
+/// the alignment is a property of the type, so recycled buffers keep it).
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct Line([u32; 16]);
+
+const LINE_BYTES: usize = 64;
+
 /// A free list of [`AlignedBuf`] backing stores.
 ///
 /// Mode-0 runs (no edge cache) re-read every scheduled shard from disk
@@ -47,7 +64,7 @@ compile_error!("ShardView reinterprets little-endian shard files in place");
 /// (`max_idle` buffers) and visible to the memory accounting via
 /// [`idle_bytes`](Self::idle_bytes).
 pub struct BufPool {
-    bufs: Mutex<Vec<Vec<u32>>>,
+    bufs: Mutex<Vec<Vec<Line>>>,
     max_idle: usize,
     reused: AtomicU64,
     fresh: AtomicU64,
@@ -74,32 +91,32 @@ impl BufPool {
     /// a recycled shard-sized buffer would cost a full memset per read,
     /// most of what the pool exists to save.
     pub fn take(pool: &Arc<BufPool>, len: usize) -> AlignedBuf {
-        let words_len = len.div_ceil(4);
+        let lines_len = len.div_ceil(LINE_BYTES);
         let recycled = pool.bufs.lock().unwrap().pop();
-        let words = match recycled {
+        let lines = match recycled {
             Some(mut w) => {
                 pool.reused.fetch_add(1, Ordering::Relaxed);
                 // grow-with-zeros / truncate only: the live prefix is
                 // overwritten by the caller, and bytes past `len` are
                 // never exposed
-                w.resize(words_len, 0);
+                w.resize(lines_len, Line([0; 16]));
                 w
             }
             None => {
                 pool.fresh.fetch_add(1, Ordering::Relaxed);
-                vec![0u32; words_len]
+                vec![Line([0; 16]); lines_len]
             }
         };
-        AlignedBuf { words, len, pool: Some(Arc::clone(pool)) }
+        AlignedBuf { lines, len, pool: Some(Arc::clone(pool)) }
     }
 
-    fn put(&self, words: Vec<u32>) {
-        if words.capacity() == 0 {
+    fn put(&self, lines: Vec<Line>) {
+        if lines.capacity() == 0 {
             return;
         }
         let mut bufs = self.bufs.lock().unwrap();
         if bufs.len() < self.max_idle {
-            bufs.push(words);
+            bufs.push(lines);
         }
     }
 
@@ -110,7 +127,7 @@ impl BufPool {
             .lock()
             .unwrap()
             .iter()
-            .map(|w| 4 * w.capacity() as u64)
+            .map(|w| (LINE_BYTES * w.capacity()) as u64)
             .sum()
     }
 
@@ -123,28 +140,30 @@ impl BufPool {
     }
 }
 
-/// A byte buffer whose base address is 4-byte aligned, so `u32`/`f32`
-/// sections at 4-byte offsets can be borrowed as typed slices.
+/// A byte buffer whose base address is 64-byte (cache-line) aligned, so
+/// `u32`/`f32` sections at 4-byte offsets can be borrowed as typed
+/// slices and whole-buffer operations start line-aligned.
 ///
-/// Backed by a `Vec<u32>` (alignment 4 guaranteed by the allocator); the
-/// logical byte length may be shorter than the backing words.  Buffers
-/// handed out by a [`BufPool`] return their backing store to it on drop.
+/// Backed by a `Vec<Line>` (alignment 64 guaranteed by the `Line` type,
+/// for fresh and recycled allocations alike); the logical byte length
+/// may be shorter than the backing lines.  Buffers handed out by a
+/// [`BufPool`] return their backing store to it on drop.
 pub struct AlignedBuf {
-    words: Vec<u32>,
+    lines: Vec<Line>,
     len: usize,
     pool: Option<Arc<BufPool>>,
 }
 
 impl Clone for AlignedBuf {
     fn clone(&self) -> Self {
-        AlignedBuf { words: self.words.clone(), len: self.len, pool: self.pool.clone() }
+        AlignedBuf { lines: self.lines.clone(), len: self.len, pool: self.pool.clone() }
     }
 }
 
 impl Drop for AlignedBuf {
     fn drop(&mut self) {
         if let Some(pool) = self.pool.take() {
-            pool.put(std::mem::take(&mut self.words));
+            pool.put(std::mem::take(&mut self.lines));
         }
     }
 }
@@ -159,7 +178,7 @@ impl AlignedBuf {
     /// A zero-filled buffer of `len` bytes (fill via
     /// [`as_bytes_mut`](Self::as_bytes_mut)).
     pub fn with_len(len: usize) -> AlignedBuf {
-        AlignedBuf { words: vec![0u32; len.div_ceil(4)], len, pool: None }
+        AlignedBuf { lines: vec![Line([0; 16]); len.div_ceil(LINE_BYTES)], len, pool: None }
     }
 
     /// Copy `b` into a fresh aligned buffer.
@@ -178,26 +197,27 @@ impl AlignedBuf {
     }
 
     pub fn as_bytes(&self) -> &[u8] {
-        // SAFETY: the Vec<u32> allocation covers >= len bytes and u8 has
-        // no alignment or validity requirements.
-        unsafe { std::slice::from_raw_parts(self.words.as_ptr().cast::<u8>(), self.len) }
+        // SAFETY: the Vec<Line> allocation covers >= len bytes and u8
+        // has no alignment or validity requirements.
+        unsafe { std::slice::from_raw_parts(self.lines.as_ptr().cast::<u8>(), self.len) }
     }
 
     pub fn as_bytes_mut(&mut self) -> &mut [u8] {
         // SAFETY: as for `as_bytes`, plus `&mut self` guarantees
         // exclusive access.
-        unsafe { std::slice::from_raw_parts_mut(self.words.as_mut_ptr().cast::<u8>(), self.len) }
+        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr().cast::<u8>(), self.len) }
     }
 
     /// Borrow `n` little-endian `u32`s starting at `byte_off`.
     fn u32s(&self, byte_off: usize, n: usize) -> &[u32] {
         assert!(byte_off % 4 == 0, "unaligned u32 view at {byte_off}");
         assert!(byte_off + n * 4 <= self.len, "u32 view out of bounds");
-        // SAFETY: in bounds (asserted), 4-byte aligned (base is 4-aligned
-        // and byte_off % 4 == 0), and every bit pattern is a valid u32.
+        // SAFETY: in bounds (asserted), 4-byte aligned (base is
+        // 64-aligned and byte_off % 4 == 0), and every bit pattern is a
+        // valid u32.
         unsafe {
             std::slice::from_raw_parts(
-                self.words.as_ptr().cast::<u8>().add(byte_off).cast::<u32>(),
+                self.lines.as_ptr().cast::<u8>().add(byte_off).cast::<u32>(),
                 n,
             )
         }
@@ -211,7 +231,7 @@ impl AlignedBuf {
         // payloads included).
         unsafe {
             std::slice::from_raw_parts(
-                self.words.as_ptr().cast::<u8>().add(byte_off).cast::<f32>(),
+                self.lines.as_ptr().cast::<u8>().add(byte_off).cast::<f32>(),
                 n,
             )
         }
@@ -425,7 +445,11 @@ mod tests {
         let mut c = BufPool::take(&pool, data.len());
         c.as_bytes_mut().copy_from_slice(&data);
         assert_eq!(c.as_bytes(), &data[..]);
-        assert_eq!(c.as_bytes().as_ptr() as usize % 4, 0);
+        assert_eq!(
+            c.as_bytes().as_ptr() as usize % 64,
+            0,
+            "pooled buffers keep the 64-byte base alignment"
+        );
     }
 
     #[test]
@@ -452,10 +476,12 @@ mod tests {
     }
 
     #[test]
-    fn sections_are_4_byte_aligned() {
+    fn base_is_line_aligned_sections_are_4_byte_aligned() {
         let s = sample(true);
         let v = ShardView::parse(AlignedBuf::from_bytes(&s.to_bytes())).unwrap();
-        assert_eq!(v.bytes().as_ptr() as usize % 4, 0);
+        // buffer base: one cache line (the 24-byte header then shifts
+        // the sections off the line, so they only guarantee 4 bytes)
+        assert_eq!(v.bytes().as_ptr() as usize % 64, 0, "buffer base must be line-aligned");
         assert_eq!(v.row_offsets().as_ptr() as usize % 4, 0);
         assert_eq!(v.col().as_ptr() as usize % 4, 0);
         assert_eq!(v.weights().unwrap().as_ptr() as usize % 4, 0);

@@ -70,9 +70,12 @@ fn native_and_pjrt_backends_agree_on_pagerank() {
     );
     let (vn, _) = nat.run_to_values(&PageRank::new(), 5).unwrap();
     let (vp, _) = pj.run_to_values(&PageRank::new(), 5).unwrap();
+    // native rows fold through chunked multi-lane accumulators, the PJRT
+    // artifact reduces in its own order — both reassociate f32 sums, so
+    // this comparison is relative by construction (see exec::kernel docs)
     for (i, (a, b)) in vn.iter().zip(&vp).enumerate() {
         assert!(
-            (a - b).abs() <= 1e-5 * a.abs().max(1e-3),
+            (a - b).abs() <= 1e-4 * a.abs().max(1e-3),
             "vertex {i}: native {a} vs pjrt {b}"
         );
     }

@@ -1,0 +1,166 @@
+//! Chunk-boundary equivalence gate for the vectorized kernels.
+//!
+//! Sweeps per-row edge counts across every chunk-remainder boundary
+//! (0, 1, W-1, W, W+1, 2W, 3W+k for the lane width W) and asserts, for
+//! every app kernel:
+//!
+//! - `scalar_fold_csr` (sequential monomorphized) is **bit-identical**
+//!   to `reference_fold_csr` (per-edge enum dispatch) — the oracle pair;
+//! - the chunked `fold_csr` is bit-identical to the oracle for min/max
+//!   combines, and within the documented relative epsilon for sums
+//!   (chunked reassociation, see `exec::kernel`);
+//! - rows with ≤ 3 edges are bit-identical even for sums (the
+//!   zero-padded tail's reduction tree degenerates to sequential order);
+//! - `fold_list` over the same destination-grouped edge order is
+//!   bit-identical to `fold_csr` — both run the same chunked scheme.
+//!
+//! CI runs this suite in debug and release, with and without
+//! `--features simd`; the simd build must satisfy the *same* exact/
+//! epsilon contract against the scalar oracle, which is how "chunked vs
+//! simd agreement" is gated without needing two binaries in one test.
+
+use graphmp::apps::{Combine, ShardKernel, VertexProgram};
+use graphmp::exec::arena::AlignedArena;
+use graphmp::exec::kernel::{fold_csr, fold_list, reference_fold_csr, scalar_fold_csr, LANES};
+use graphmp::exec::IterCtx;
+use graphmp::graph::{Csr, Edge};
+
+fn all_kernels() -> Vec<ShardKernel> {
+    vec![
+        graphmp::apps::PageRank::new().kernel(),
+        graphmp::apps::Ppr::new(2).kernel(),
+        graphmp::apps::Sssp::new(0).kernel(),
+        graphmp::apps::Bfs::new(0).kernel(),
+        graphmp::apps::Cc.kernel(),
+        graphmp::apps::Widest::new(0).kernel(),
+    ]
+}
+
+/// A graph of `n` rows where *every* row has exactly `k` in-edges, in
+/// the repo-wide canonical per-destination order (ascending source).
+fn uniform_degree_edges(n: u32, k: usize) -> Vec<Edge> {
+    let mut edges = Vec::with_capacity(n as usize * k);
+    for r in 0..n {
+        for j in 0..k {
+            let src = (r as usize * 5 + j * 3 + 1) as u32 % n;
+            let w = 0.1 + ((r as usize + j) % 13) as f32 * 0.37;
+            edges.push(Edge::weighted(src, r, w));
+        }
+    }
+    edges.sort_unstable_by_key(|e| (e.dst, e.src));
+    edges
+}
+
+/// The documented sum gate: chunked-vs-sequential comparisons get a
+/// small relative epsilon; everything else must be exact.
+fn assert_sum_close(a: &[f32], b: &[f32], what: &str) {
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-5 * x.abs().max(1.0),
+            "{what}: vertex {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn chunk_boundary_sweep_matches_the_scalar_oracle() {
+    let n = 24u32;
+    let src: Vec<f32> = (0..n).map(|v| 0.25 + (v % 7) as f32).collect();
+    let inv: Vec<f32> = (0..n).map(|v| 1.0 / (1.0 + (v % 5) as f32)).collect();
+    let contrib: Vec<f32> = src.iter().zip(&inv).map(|(&v, &d)| v * d).collect();
+    let counts = [
+        0,
+        1,
+        LANES - 1,
+        LANES,
+        LANES + 1,
+        2 * LANES,
+        3 * LANES + 5,
+    ];
+    for &k in &counts {
+        let edges = uniform_degree_edges(n, k);
+        let csr = Csr::from_edges(&edges, 0, n as usize, true);
+        for kernel in all_kernels() {
+            let ctx = IterCtx {
+                kernel,
+                num_vertices: n,
+                src: &src,
+                inv_out_deg: &inv,
+                contrib: &contrib,
+                iteration: 0,
+            };
+            let what = format!("{kernel:?} with {k} edges/row");
+
+            // oracle pair: sequential monomorphized == enum dispatch
+            let mut scalar = src.clone();
+            let mut oracle = src.clone();
+            scalar_fold_csr(&ctx, csr.slices(), 0, &mut scalar);
+            reference_fold_csr(&ctx, csr.slices(), 0, &mut oracle);
+            assert_eq!(scalar, oracle, "oracle pair diverged: {what}");
+
+            // chunked fold vs the oracle: exact meets, epsilon sums —
+            // and exact sums too while the tail tree is degenerate
+            let mut chunked = src.clone();
+            fold_csr(&ctx, csr.slices(), 0, &mut chunked);
+            match kernel.combine {
+                Combine::Sum if k <= 3 => {
+                    assert_eq!(chunked, scalar, "short-row sums must be exact: {what}")
+                }
+                Combine::Sum => assert_sum_close(&chunked, &scalar, &what),
+                Combine::Min | Combine::Max => {
+                    assert_eq!(chunked, scalar, "meets must be exact: {what}")
+                }
+            }
+
+            // list fold over the same per-destination order must equal
+            // the chunked CSR fold bitwise (same chunked scheme)
+            let mut listed = src.clone();
+            let (mut vals, mut idx) = (AlignedArena::new(), AlignedArena::new());
+            fold_list(&ctx, &edges, 0, &mut listed, &mut vals, &mut idx);
+            assert_eq!(listed, chunked, "fold_list diverged: {what}");
+        }
+    }
+}
+
+#[test]
+fn ragged_rows_cross_boundaries_within_one_unit() {
+    // mixed degrees inside one fold: row r has r % (3W+2) in-edges, so
+    // a single unit exercises full chunks, tails and empty rows at once
+    let n = 3 * LANES as u32 + 11;
+    let mut edges = Vec::new();
+    for r in 0..n {
+        for j in 0..(r as usize % (3 * LANES + 2)) {
+            let srcv = (r as usize * 7 + j) as u32 % n;
+            edges.push(Edge::weighted(srcv, r, 0.2 + (j % 9) as f32 * 0.55));
+        }
+    }
+    edges.sort_unstable_by_key(|e| (e.dst, e.src));
+    let src: Vec<f32> = (0..n).map(|v| 0.25 + (v % 7) as f32).collect();
+    let inv: Vec<f32> = (0..n).map(|v| 1.0 / (1.0 + (v % 5) as f32)).collect();
+    let contrib: Vec<f32> = src.iter().zip(&inv).map(|(&v, &d)| v * d).collect();
+    let csr = Csr::from_edges(&edges, 0, n as usize, true);
+    for kernel in all_kernels() {
+        let ctx = IterCtx {
+            kernel,
+            num_vertices: n,
+            src: &src,
+            inv_out_deg: &inv,
+            contrib: &contrib,
+            iteration: 0,
+        };
+        let mut scalar = src.clone();
+        let mut chunked = src.clone();
+        scalar_fold_csr(&ctx, csr.slices(), 0, &mut scalar);
+        fold_csr(&ctx, csr.slices(), 0, &mut chunked);
+        match kernel.combine {
+            Combine::Sum => assert_sum_close(&chunked, &scalar, &format!("{kernel:?} ragged")),
+            Combine::Min | Combine::Max => {
+                assert_eq!(chunked, scalar, "meets must be exact for {kernel:?}")
+            }
+        }
+        let mut listed = src.clone();
+        let (mut vals, mut idx) = (AlignedArena::new(), AlignedArena::new());
+        fold_list(&ctx, &edges, 0, &mut listed, &mut vals, &mut idx);
+        assert_eq!(listed, chunked, "fold_list diverged for {kernel:?}");
+    }
+}

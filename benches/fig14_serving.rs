@@ -1,0 +1,184 @@
+//! Fig 14 (PR 8): the `graphmp serve` resident daemon under load.
+//!
+//! Two experiments on the in-process daemon (socket framing skipped —
+//! the wire is exercised by `rust/tests/serve.rs` and the CI smoke job;
+//! here we measure the serving loop itself):
+//!
+//! 1. **Latency vs offered load** — bursts of 1..16 PPR queries with
+//!    rotating priority classes land on an idle daemon at once, then the
+//!    queue drains.  The series is per-class mean/max submit→result
+//!    latency and batch wall clock versus burst size; job 0's values
+//!    are asserted bit-identical to its solo run at every load.
+//! 2. **Backpressure** — a burst far beyond the bounded queue: the
+//!    accepted prefix completes, the overflow is rejected with a retry
+//!    hint, nothing queues unboundedly.
+//!
+//! Emits `BENCH_PR8.json`.
+
+use graphmp::apps::Ppr;
+use graphmp::benchutil::{banner, scale, Table};
+use graphmp::compress::CacheMode;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::rmat::{rmat, RmatParams};
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::runtime::protocol::{Priority, SubmitSpec};
+use graphmp::runtime::serve::{ServeConfig, ServeDaemon, SubmitOutcome};
+use graphmp::storage::disk::Disk;
+use graphmp::storage::GraphDir;
+
+const ITERS: u32 = 8;
+const LOADS: [u32; 5] = [1, 2, 4, 8, 16];
+
+fn prep(small: bool, disk: &Disk) -> GraphDir {
+    let g = if small {
+        rmat(10, 20_000, 7, RmatParams::default())
+    } else {
+        rmat(12, 120_000, 7, RmatParams::default())
+    };
+    let tmp = std::env::temp_dir().join("graphmp_bench_fig14");
+    let _ = std::fs::remove_dir_all(&tmp);
+    let cfg = PrepConfig {
+        edges_per_shard: scale::EDGES_PER_SHARD / 8,
+        max_rows_per_shard: 1 << 20,
+        weighted: false,
+        ..Default::default()
+    };
+    let (dir, report) = preprocess_into(&g, &tmp, disk, cfg).unwrap();
+    println!(
+        "serving graph: |V|={} |E|={} shards={}",
+        g.num_vertices,
+        g.num_edges(),
+        report.num_shards
+    );
+    dir
+}
+
+fn engine(dir: &GraphDir, disk: &Disk) -> VswEngine {
+    let cfg = EngineConfig {
+        cache_mode: Some(CacheMode::M1Raw),
+        cache_capacity: scale::CACHE_CAPACITY,
+        selective: false,
+        ..Default::default()
+    };
+    VswEngine::open(dir, disk, cfg).unwrap()
+}
+
+fn spec(j: u32) -> SubmitSpec {
+    SubmitSpec {
+        app: "ppr".to_string(),
+        source: 1 + 37 * j,
+        max_iters: ITERS,
+        priority: Priority::ALL[(j % 3) as usize],
+        ..Default::default()
+    }
+}
+
+fn ms(d: std::time::Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// Experiment 1: burst size sweep, per-class submit→result latency.
+fn bench_load(dir: &GraphDir, disk: &Disk, v_solo: &[f32], json: &mut String) {
+    let mut tbl = Table::new(vec![
+        "offered", "wall s", "hi mean ms", "no mean ms", "lo mean ms", "max ms",
+    ]);
+    let mut rows = Vec::new();
+    for &load in &LOADS {
+        let mut daemon = ServeDaemon::new(ServeConfig::default());
+        let h = daemon.handle();
+        for j in 0..load {
+            match h.submit(spec(j)) {
+                SubmitOutcome::Accepted(id) => assert_eq!(id, j),
+                other => panic!("idle daemon rejected job {j}: {other:?}"),
+            }
+        }
+        h.drain();
+        let start = std::time::Instant::now();
+        let summary = daemon.run(&mut engine(dir, disk)).unwrap();
+        let wall = start.elapsed().as_secs_f64();
+        let m = &summary.metrics;
+        assert_eq!(m.completed, u64::from(load), "every accepted job completes");
+        assert_eq!(
+            h.values(0).unwrap(),
+            v_solo,
+            "job 0 at load {load}: serving changed results"
+        );
+        let class_ms: Vec<f64> = Priority::ALL
+            .iter()
+            .map(|p| ms(m.per_class[p.index()].mean_latency()))
+            .collect();
+        let max_ms = Priority::ALL
+            .iter()
+            .map(|p| ms(m.per_class[p.index()].max_latency))
+            .fold(0.0, f64::max);
+        tbl.row(vec![
+            format!("{load}"),
+            format!("{wall:.4}"),
+            format!("{:.3}", class_ms[0]),
+            format!("{:.3}", class_ms[1]),
+            format!("{:.3}", class_ms[2]),
+            format!("{max_ms:.3}"),
+        ]);
+        rows.push(format!(
+            "{{\"offered\": {load}, \"wall_s\": {wall:.6}, \"high_mean_ms\": {:.4}, \"normal_mean_ms\": {:.4}, \"low_mean_ms\": {:.4}, \"max_ms\": {max_ms:.4}, \"batches\": {}}}",
+            class_ms[0], class_ms[1], class_ms[2], m.batches
+        ));
+    }
+    tbl.print("Fig 14a: submit->result latency vs offered load (burst, then drain)");
+    json.push_str(&format!("  \"loads\": [{}],\n", rows.join(", ")));
+}
+
+/// Experiment 2: a burst far beyond the bounded queue.
+fn bench_backpressure(dir: &GraphDir, disk: &Disk, json: &mut String) {
+    let cap = 8usize;
+    let offered = 32u32;
+    let mut daemon = ServeDaemon::new(ServeConfig { queue_cap: cap, ..Default::default() });
+    let h = daemon.handle();
+    let mut busy = 0u32;
+    for j in 0..offered {
+        match h.submit(spec(j)) {
+            SubmitOutcome::Accepted(_) => {}
+            SubmitOutcome::Busy { .. } => busy += 1,
+            SubmitOutcome::Rejected(msg) => panic!("unexpected rejection: {msg}"),
+        }
+    }
+    h.drain();
+    let summary = daemon.run(&mut engine(dir, disk)).unwrap();
+    let m = &summary.metrics;
+    assert_eq!(busy, offered - cap as u32, "overflow answered with backpressure");
+    assert_eq!(m.completed, cap as u64, "the accepted prefix drains to completion");
+    assert_eq!(m.rejected, u64::from(busy));
+
+    let mut tbl = Table::new(vec!["queue cap", "offered", "accepted", "busy"]);
+    tbl.row(vec![
+        format!("{cap}"),
+        format!("{offered}"),
+        format!("{}", m.completed),
+        format!("{busy}"),
+    ]);
+    tbl.print("Fig 14b: bounded admission queue under a flood");
+    json.push_str(&format!(
+        "  \"backpressure\": {{\"queue_cap\": {cap}, \"offered\": {offered}, \"accepted\": {}, \"busy\": {busy}}}\n",
+        m.completed
+    ));
+}
+
+fn main() {
+    banner(
+        "fig14_serving",
+        "PR 8: serve daemon submit->result latency vs offered load + backpressure",
+    );
+    let small = std::env::args().any(|a| a == "--small");
+    let disk = scale::bench_disk();
+    let dir = prep(small, &disk);
+    // ground truth for job 0 (high class, source 1 + 37*0)
+    let (v_solo, _) = engine(&dir, &disk).run_to_values(&Ppr::new(1), ITERS).unwrap();
+
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"iters\": {ITERS},\n"));
+    bench_load(&dir, &disk, &v_solo, &mut json);
+    bench_backpressure(&dir, &disk, &mut json);
+    json.push_str("}\n");
+    std::fs::write("BENCH_PR8.json", &json).unwrap();
+    println!("\nwrote BENCH_PR8.json");
+}

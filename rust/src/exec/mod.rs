@@ -172,14 +172,53 @@ pub trait PassObserver {
     fn at_boundary(&mut self, pass: u32, lanes: &[LaneSnapshot<'_>]) -> Result<()>;
 }
 
+/// Verdict of a [`LaneArbiter`] for one still-running lane at a pass
+/// boundary.
+pub enum LaneVerdict {
+    /// Keep running.
+    Continue,
+    /// End the lane at this boundary: it keeps its current values and
+    /// job-local clock (the PR 6 lane-snapshot state), drops out of the
+    /// union worklist before the next pass, and surfaces the reason in
+    /// [`crate::metrics::RunMetrics::evicted`].  Surviving lanes are
+    /// untouched — lane isolation makes their remainder bit-identical to
+    /// a run without the evicted member.
+    Evict(String),
+}
+
+/// Admission-control hook of [`ExecCore::run_batch_with`] (PR 8): lets a
+/// scheduler end individual lanes (deadlines, wall-clock timeouts,
+/// cancellations) or freeze the whole batch (graceful daemon shutdown) at
+/// pass boundaries, without aborting like a [`PassObserver`] error does.
+pub trait LaneArbiter {
+    /// Per-lane decision, called for every lane that would otherwise run
+    /// the next pass (admission order, before the boundary observer — an
+    /// eviction is visible in the same boundary's checkpoint).
+    fn decide(&mut self, _pass: u32, _lane: usize, _snap: &LaneSnapshot<'_>) -> LaneVerdict {
+        LaneVerdict::Continue
+    }
+
+    /// Batch-level stop, checked after the boundary observer ran: `true`
+    /// ends the batch cleanly with every unfinished lane frozen at its
+    /// current state and marked evicted (reason "batch stopped …").  A
+    /// checkpoint written at this same boundary captured those lanes
+    /// *unfinished*, so a resumed batch continues them.
+    fn stop_batch(&mut self, _pass: u32) -> bool {
+        false
+    }
+}
+
 /// Extra controls for [`ExecCore::run_batch_with`] beyond the interactive
-/// intake: per-founder warm-start state and the boundary observer.
+/// intake: per-founder warm-start state, the boundary observer, and the
+/// eviction arbiter.
 #[derive(Default)]
 pub struct BatchOptions<'o> {
     /// Entry `i` warm-starts `jobs[i]`; missing/`None` entries start fresh.
     pub resume: Vec<Option<ResumeState>>,
     /// Checkpoint/kill hook, called at every pass boundary.
     pub observer: Option<&'o mut dyn PassObserver>,
+    /// Eviction/stop hook, consulted at every pass boundary.
+    pub arbiter: Option<&'o mut dyn LaneArbiter>,
 }
 
 /// Per-iteration read-only context handed to [`ShardSource::compute`].
@@ -549,7 +588,30 @@ impl<'a> ExecCore<'a> {
                 } else if lane.iters_done >= lane.max_iters {
                     lane.done = true;
                 } else {
-                    running.push(l);
+                    // arbiter check: deadlines / timeouts / cancellations
+                    // end the lane here, its snapshot state preserved
+                    let verdict = match opts.arbiter.as_mut() {
+                        Some(arb) => {
+                            let snap = LaneSnapshot {
+                                values: &lane.src,
+                                active: &lane.active,
+                                iters_done: lane.iters_done,
+                                done: false,
+                                converged: false,
+                                failed: None,
+                            };
+                            arb.decide(pass, l, &snap)
+                        }
+                        None => LaneVerdict::Continue,
+                    };
+                    match verdict {
+                        LaneVerdict::Continue => running.push(l),
+                        LaneVerdict::Evict(reason) => {
+                            lane.evicted = Some(reason);
+                            lane.done = true;
+                            batch.jobs_evicted += 1;
+                        }
+                    }
                 }
             }
             // interactive admission: poll the intake, then warm-start as
@@ -598,6 +660,31 @@ impl<'a> ExecCore<'a> {
                     .collect();
                 obs.at_boundary(pass, &snaps)?;
             }
+            // batch-level stop (graceful shutdown): freeze every unfinished
+            // lane — the observer above already persisted them *unfinished*,
+            // so a resumed batch picks them up at exactly this boundary
+            if opts.arbiter.as_mut().is_some_and(|arb| arb.stop_batch(pass)) {
+                let reason = format!("batch stopped at pass boundary {pass}");
+                for lane in lanes.iter_mut() {
+                    if !lane.done {
+                        lane.evicted = Some(reason.clone());
+                        lane.done = true;
+                        batch.jobs_evicted += 1;
+                    }
+                }
+                // arrivals still waiting for capacity were persisted as
+                // pending; surface them as evicted outputs too so callers
+                // get one output per admitted job
+                while let Some(mut lane) = waiting.pop_front() {
+                    lane.admit_pass = pass;
+                    lane.evicted = Some(reason.clone());
+                    lane.done = true;
+                    batch.jobs_evicted += 1;
+                    lanes.push(lane);
+                }
+                batch.stopped_at_pass = Some(pass);
+                break;
+            }
             if running.is_empty() {
                 debug_assert!(waiting.is_empty(), "capacity exists, so waiting drained");
                 break;
@@ -645,6 +732,7 @@ impl<'a> ExecCore<'a> {
                     },
                 };
                 lane.run.failed = lane.failed;
+                lane.run.evicted = lane.evicted;
                 batch.per_job.push(lane.run.job);
                 (lane.src, lane.run)
             })
@@ -956,6 +1044,9 @@ struct JobLane {
     /// First contained failure (isolated mode): the lane drops out at the
     /// next boundary and surfaces this in [`RunMetrics::failed`].
     failed: Option<String>,
+    /// Eviction reason when a [`LaneArbiter`] ended this lane at a pass
+    /// boundary (surfaced in [`RunMetrics::evicted`]).
+    evicted: Option<String>,
     /// Whether the lane ever waited for admission capacity (counted once
     /// in [`BatchMetrics::admissions_deferred`]).
     deferred: bool,
@@ -992,6 +1083,7 @@ impl JobLane {
             iters_done: 0,
             done: false,
             failed: None,
+            evicted: None,
             deferred: false,
             meter_compute: Duration::ZERO,
             meter_units: 0,

@@ -37,7 +37,10 @@
 //!   GraphMat-like in-memory engine on the same execution core.
 //! - [`cluster`] — analytical models of the distributed baselines
 //!   (Pregel+, PowerGraph/PowerLyra).
-//! - [`runtime`] — the scan-shared job scheduler ([`runtime::JobSet`])
+//! - [`runtime`] — the scan-shared job scheduler ([`runtime::JobSet`]),
+//!   crash-safe checkpoint/recovery ([`runtime::checkpoint`]), the
+//!   resident serving daemon ([`runtime::serve`], `graphmp serve`) with
+//!   its newline-delimited JSON wire protocol ([`runtime::protocol`]),
 //!   and the PJRT artifact executor.
 //! - [`metrics`] / [`model`] / [`benchutil`] — run metrics (incl. per-job
 //!   [`metrics::JobMetrics`] accounting), the paper's I/O cost models,

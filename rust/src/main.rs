@@ -6,6 +6,7 @@
 //! graphmp run        --dir /tmp/g --app pagerank --iters 10
 //!                    [--backend native|pjrt] [--cache-mode cache-3]
 //!                    [--cache-mb 256] [--no-selective] [--disk hdd|ssd|none]
+//! graphmp serve      --dir /tmp/g --socket /tmp/graphmp.sock
 //! graphmp info       --dir /tmp/g
 //! ```
 
@@ -20,7 +21,7 @@ use graphmp::compress::CacheMode;
 use graphmp::engine::{Backend, EngineConfig, VswEngine};
 use graphmp::graph::datasets::Dataset;
 use graphmp::prep::{preprocess_into, PrepConfig};
-use graphmp::runtime::{CheckpointConfig, Manifest, ShardExecutor};
+use graphmp::runtime::{CheckpointConfig, Manifest, NoValidCheckpoint, ShardExecutor};
 use graphmp::storage::disk::{Disk, DiskProfile};
 use graphmp::storage::GraphDir;
 use graphmp::util::{human_bytes, human_count, human_duration};
@@ -39,6 +40,7 @@ fn main() {
         Some("preprocess") => cmd_preprocess(&args),
         Some("run") => cmd_run(&args),
         Some("resume") => cmd_resume(&args),
+        Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(&args),
         _ => {
             usage();
@@ -47,7 +49,10 @@ fn main() {
     };
     if let Err(e) = result {
         eprintln!("error: {e:#}");
-        std::process::exit(1);
+        // "nothing to resume from" gets its own exit code so scripts can
+        // tell it apart from a genuine failure
+        let code = if e.downcast_ref::<NoValidCheckpoint>().is_some() { 3 } else { 1 };
+        std::process::exit(code);
     }
 }
 
@@ -90,7 +95,28 @@ USAGE:
                                   D/run_args.txt, warm-starts from the newest
                                   valid checkpoint, finishes the drain —
                                   final values bit-identical to an
-                                  uninterrupted run)
+                                  uninterrupted run; exits 3 when D holds no
+                                  valid checkpoint)
+  graphmp serve      --dir <graphdir> --socket <path.sock>
+                     [--queue-cap N] [--batch-cap N]
+                     [--checkpoint-dir D] [--checkpoint-every K]
+                     [--checkpoint-secs S] [--resume]
+                                 (resident serving daemon: newline-delimited
+                                  JSON over the Unix socket — ops submit /
+                                  status / result / cancel / drain / metrics
+                                  / ping.  Bounded admission queue with
+                                  high|normal|low priorities; a full queue
+                                  answers busy + retry_after_ms
+                                  (backpressure); per-job deadline_passes /
+                                  timeout_ms evict at pass boundaries as
+                                  `expired`.  --checkpoint-dir adds
+                                  background checkpointing of the in-flight
+                                  batch (wall cadence via --checkpoint-secs)
+                                  plus a durable queue roster; SIGINT or
+                                  SIGTERM stops admitting, checkpoints or
+                                  finishes the batch, and exits 0;
+                                  `serve --resume` restores the queue and
+                                  resumes the batch bit-identically)
   graphmp info       --dir <graphdir>
 
 datasets: twitter-sim uk2007-sim uk2014-sim eu2015-sim"
@@ -322,9 +348,28 @@ enum BatchMode {
 fn cmd_resume(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.opt("checkpoint-dir").context("--checkpoint-dir required")?);
     let path = dir.join("run_args.txt");
-    let text = std::fs::read_to_string(&path).with_context(|| {
-        format!("read {} (was the run started with --checkpoint-dir?)", path.display())
-    })?;
+    let text = match std::fs::read_to_string(&path) {
+        Ok(text) => text,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            // No persisted run args.  Probe the directory to tell "nothing
+            // was ever checkpointed here" (typed NoValidCheckpoint, exit 3,
+            // listing any swept .tmp_* candidates) apart from a checkpoint
+            // that lost its run_args.txt.
+            let outcome = graphmp::runtime::checkpoint::load_latest(&dir, &Disk::unthrottled())?;
+            return match outcome.loaded {
+                Some(_) => Err(e).with_context(|| {
+                    format!(
+                        "read {} (checkpoint found, but the run arguments are gone)",
+                        path.display()
+                    )
+                }),
+                None => Err(NoValidCheckpoint { dir, rejected: outcome.rejected }.into()),
+            };
+        }
+        Err(e) => {
+            return Err(e).with_context(|| format!("read {}", path.display()));
+        }
+    };
     let stored = Args::parse(text.lines().map(str::to_string))?;
     let every: u32 = stored.parse_opt_or("checkpoint-every", 4u32)?;
     let cfg = CheckpointConfig::new(dir, every);
@@ -423,6 +468,69 @@ fn run_batched(
     }
     if agg.jobs_failed > 0 {
         println!("jobs failed in isolation: {}", agg.jobs_failed);
+    }
+    Ok(())
+}
+
+/// `graphmp serve`: run the resident serving daemon over one
+/// preprocessed graph dir.  Requests arrive over the Unix socket as
+/// newline-delimited JSON; the daemon exits 0 on drain or on a graceful
+/// SIGINT/SIGTERM shutdown.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use graphmp::runtime::serve::{install_signal_handlers, ServeConfig, ServeDaemon};
+    let socket = PathBuf::from(args.opt("socket").context("--socket required")?);
+    let checkpoint = match args.opt("checkpoint-dir") {
+        Some(d) => {
+            let mut cfg = CheckpointConfig::new(d, args.parse_opt_or("checkpoint-every", 4u32)?);
+            cfg.every_secs = args.parse_opt::<f64>("checkpoint-secs")?;
+            Some(cfg)
+        }
+        None => {
+            anyhow::ensure!(
+                !args.flag("resume"),
+                "serve --resume requires --checkpoint-dir"
+            );
+            None
+        }
+    };
+    let cfg = ServeConfig {
+        socket: Some(socket.clone()),
+        queue_cap: args.parse_opt_or("queue-cap", 256usize)?,
+        batch_cap: args.parse_opt_or("batch-cap", graphmp::exec::MAX_BATCH_JOBS)?,
+        checkpoint,
+        resume: args.flag("resume"),
+    };
+    let mut engine = open_engine(args)?;
+    install_signal_handlers();
+    let mut daemon = ServeDaemon::new(cfg);
+    println!("serving on {}", socket.display());
+    let summary = daemon.run(&mut engine)?;
+    let m = &summary.metrics;
+    println!(
+        "serve: {} submitted, {} completed, {} expired, {} cancelled, {} failed, \
+         {} rejected (backpressure) over {} batches; {} checkpoints written, {} failed",
+        m.submitted,
+        m.completed,
+        m.expired,
+        m.cancelled,
+        m.failed,
+        m.rejected,
+        m.batches,
+        m.checkpoints_written,
+        m.checkpoints_failed,
+    );
+    for p in graphmp::runtime::Priority::ALL {
+        let c = &m.per_class[p.index()];
+        if c.submitted > 0 {
+            println!(
+                "  class {:<6} submitted={:<4} completed={:<4} mean latency {:.1} ms, max {:.1} ms",
+                p.name(),
+                c.submitted,
+                c.completed,
+                c.mean_latency().as_secs_f64() * 1e3,
+                c.max_latency.as_secs_f64() * 1e3,
+            );
+        }
     }
     Ok(())
 }

@@ -132,6 +132,12 @@ pub struct RunMetrics {
     /// error contained to this job under `isolate_failures`): the first
     /// failure, naming the unit and file.  `None` = the job ran clean.
     pub failed: Option<String>,
+    /// Set when the job was evicted from its batch at a pass boundary by a
+    /// [`crate::exec::LaneArbiter`] (deadline exceeded, wall-clock timeout,
+    /// cancellation, or a shutdown-checkpoint stop): the eviction reason.
+    /// The values carried alongside are the lane state at the eviction
+    /// boundary, not a finished result.
+    pub evicted: Option<String>,
 }
 
 impl RunMetrics {
@@ -199,6 +205,18 @@ pub struct BatchMetrics {
     /// Jobs that ended [`crate::runtime::jobs::JobStatus::Failed`] under
     /// failure isolation.
     pub jobs_failed: u32,
+    /// Jobs evicted at a pass boundary by the batch's
+    /// [`crate::exec::LaneArbiter`] (deadlines, timeouts, cancellations,
+    /// shutdown stops).
+    pub jobs_evicted: u32,
+    /// Checkpoints that could not be written (hard write fault): skipped
+    /// with a warning while the batch kept running.
+    pub checkpoints_failed: u32,
+    /// Set when the batch was stopped early at this pass boundary by
+    /// [`crate::exec::LaneArbiter::stop_batch`] (graceful daemon shutdown
+    /// with an in-flight batch): unfinished lanes were frozen, not run to
+    /// completion.
+    pub stopped_at_pass: Option<u32>,
     /// Per-job attribution, in admission order (founding members in
     /// submission order, then mid-batch admissions as they arrived).
     pub per_job: Vec<JobMetrics>,
@@ -249,6 +267,68 @@ impl MemoryAccount {
             + self.inflight_shards
             + self.other
     }
+}
+
+/// Per-priority-class accounting of a `graphmp serve` daemon: how many
+/// jobs of this class were submitted/finished and their submit→terminal
+/// latency profile.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassMetrics {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Sum of submit→terminal wall latencies of completed jobs.
+    pub total_latency: Duration,
+    pub max_latency: Duration,
+}
+
+impl ClassMetrics {
+    /// Mean submit→terminal latency of this class.
+    pub fn mean_latency(&self) -> Duration {
+        if self.completed == 0 {
+            Duration::ZERO
+        } else {
+            self.total_latency / self.completed as u32
+        }
+    }
+}
+
+/// Counters of one `graphmp serve` daemon (PR 8): admission control,
+/// backpressure, evictions and checkpoint health across the daemon's
+/// whole lifetime.  A snapshot is served on the wire protocol's
+/// `metrics` request.
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// Submissions received (accepted + rejected).
+    pub submitted: u64,
+    /// Jobs admitted into a running batch.
+    pub admitted: u64,
+    /// Jobs that reached a finished state (converged / iteration limit).
+    pub completed: u64,
+    /// Submissions rejected by backpressure (bounded queue full).
+    pub rejected: u64,
+    /// Submissions rejected as invalid (unknown app, weight requirements,
+    /// draining daemon).
+    pub rejected_invalid: u64,
+    /// Jobs evicted mid-batch for a missed deadline or wall-clock timeout
+    /// ([`crate::runtime::JobStatus::Expired`]).
+    pub expired: u64,
+    /// Jobs cancelled by request (queued or evicted mid-batch).
+    pub cancelled: u64,
+    /// Jobs evicted resumable by a shutdown checkpoint
+    /// ([`crate::runtime::JobStatus::Evicted`]).
+    pub evicted: u64,
+    /// Jobs failed in isolation.
+    pub failed: u64,
+    /// Scan-shared batches the daemon ran.
+    pub batches: u64,
+    pub checkpoints_written: u64,
+    /// Checkpoints skipped on a hard write fault (the daemon kept serving).
+    pub checkpoints_failed: u64,
+    /// Current admission-queue depth (gauge, not a counter).
+    pub queue_depth: usize,
+    /// Per-priority-class latency accounting, indexed by
+    /// `Priority::index()` (high / normal / low).
+    pub per_class: [ClassMetrics; 3],
 }
 
 #[cfg(test)]
@@ -337,6 +417,17 @@ mod tests {
     fn memory_total() {
         let m = MemoryAccount { vertex_arrays: 10, cache: 5, ..Default::default() };
         assert_eq!(m.total(), 15);
+    }
+
+    #[test]
+    fn class_latency_math() {
+        let c = ClassMetrics {
+            completed: 4,
+            total_latency: Duration::from_millis(200),
+            ..Default::default()
+        };
+        assert_eq!(c.mean_latency(), Duration::from_millis(50));
+        assert_eq!(ClassMetrics::default().mean_latency(), Duration::ZERO);
     }
 
     #[test]

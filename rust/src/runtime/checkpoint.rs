@@ -29,6 +29,7 @@
 //! own iteration clocks, so final values are bit-identical to the
 //! uninterrupted run (`rust/tests/recovery.rs`).
 
+use std::fmt;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -45,9 +46,14 @@ pub const CKPT_VERSION: &str = "graphmp-ckpt v1";
 pub struct CheckpointConfig {
     /// Checkpoint root; one `ckpt_<pass>` subdirectory per checkpoint.
     pub dir: PathBuf,
-    /// Persist every `every` pass boundaries (0 = never write; the kill
-    /// hook below stays armed either way).
+    /// Persist every `every` pass boundaries (0 = never write on pass
+    /// cadence; the kill hook below stays armed either way).
     pub every: u32,
+    /// Wall-clock cadence (serving, `--checkpoint-secs`): also persist at
+    /// the first pass boundary at least this many seconds after the last
+    /// write, independent of `every` — a daemon crawling through long
+    /// passes stays recoverable.  `None` = pass cadence only.
+    pub every_secs: Option<f64>,
     /// Checkpoints to retain; older ones are pruned after each write.
     pub keep: usize,
     /// Fault injection: abort the batch at this (global) pass boundary,
@@ -57,9 +63,43 @@ pub struct CheckpointConfig {
 
 impl CheckpointConfig {
     pub fn new(dir: impl Into<PathBuf>, every: u32) -> CheckpointConfig {
-        CheckpointConfig { dir: dir.into(), every, keep: 2, kill_at_pass: None }
+        CheckpointConfig {
+            dir: dir.into(),
+            every,
+            every_secs: None,
+            keep: 2,
+            kill_at_pass: None,
+        }
     }
 }
+
+/// Typed "nothing to resume from" error: `cfg.dir` is missing, empty, or
+/// holds only rejected candidates (corrupt checkpoints, swept `.tmp_*`
+/// staging dirs).  The CLI maps it to its own exit code so scripts can
+/// tell "no checkpoint yet" from a genuine failure.
+#[derive(Debug)]
+pub struct NoValidCheckpoint {
+    pub dir: PathBuf,
+    /// Every candidate considered and why it was rejected.
+    pub rejected: Vec<(PathBuf, String)>,
+}
+
+impl fmt::Display for NoValidCheckpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "no valid checkpoint found in {}", self.dir.display())?;
+        if self.rejected.is_empty() {
+            write!(f, " (no checkpoint candidates)")
+        } else {
+            write!(f, " ({} candidates rejected:", self.rejected.len())?;
+            for (p, why) in &self.rejected {
+                write!(f, "\n  {}: {why}", p.display())?;
+            }
+            write!(f, ")")
+        }
+    }
+}
+
+impl std::error::Error for NoValidCheckpoint {}
 
 /// One job's persisted state: the [`crate::runtime::jobs::JobSet`] id it
 /// maps back to, its batch-relative arrival pass, and the lane itself.
@@ -117,6 +157,12 @@ pub struct CheckpointWriter {
     /// Pass offset of a resumed batch: the observer sees batch-local
     /// passes, checkpoints are numbered globally across interruptions.
     base_pass: u32,
+    /// Wall clock of the last persisted checkpoint (or writer creation),
+    /// driving [`CheckpointConfig::every_secs`].
+    last_write: Instant,
+    /// One-shot flush request: the next boundary writes regardless of
+    /// cadence (serving: shutdown checkpoint-and-stop).
+    force: bool,
     /// Checkpoints persisted by this writer.
     pub checkpoints_written: u32,
     /// Bytes those checkpoints cost on disk.
@@ -124,6 +170,9 @@ pub struct CheckpointWriter {
     /// Wall seconds spent writing them (boundary work, on the critical
     /// path).
     pub checkpoint_seconds: f64,
+    /// Checkpoints that failed to persist and were skipped (the batch
+    /// kept running on the previous good one).
+    pub checkpoints_failed: u32,
 }
 
 impl CheckpointWriter {
@@ -133,9 +182,12 @@ impl CheckpointWriter {
             disk,
             meta,
             base_pass: 0,
+            last_write: Instant::now(),
+            force: false,
             checkpoints_written: 0,
             checkpoint_bytes: 0,
             checkpoint_seconds: 0.0,
+            checkpoints_failed: 0,
         }
     }
 
@@ -144,6 +196,19 @@ impl CheckpointWriter {
     pub fn with_base_pass(mut self, pass: u32) -> CheckpointWriter {
         self.base_pass = pass;
         self
+    }
+
+    /// Ask for a checkpoint at the next pass boundary regardless of
+    /// cadence (one-shot) — serving uses it to freeze the in-flight batch
+    /// on shutdown.
+    pub fn request_flush(&mut self) {
+        self.force = true;
+    }
+
+    /// Mutable batch identity, for callers whose roster grows while the
+    /// batch runs (serving admits jobs from a socket mid-batch).
+    pub fn meta_mut(&mut self) -> &mut BatchMeta {
+        &mut self.meta
     }
 
     /// Persist one checkpoint at (global) pass `global`: stage every file
@@ -253,9 +318,30 @@ impl PassObserver for CheckpointWriter {
         let global = self.base_pass + pass;
         // `global > base_pass` skips re-writing the checkpoint a resumed
         // batch just restored from (its local pass 0).
-        if self.cfg.every > 0 && global > self.base_pass && global % self.cfg.every == 0 {
-            self.write(global, lanes)
-                .with_context(|| format!("checkpoint at pass {global}"))?;
+        let on_pass_cadence =
+            self.cfg.every > 0 && global % self.cfg.every == 0;
+        let on_wall_cadence = self
+            .cfg
+            .every_secs
+            .is_some_and(|s| self.last_write.elapsed().as_secs_f64() >= s);
+        if global > self.base_pass && (on_pass_cadence || on_wall_cadence || self.force) {
+            // a failed write is skipped, not fatal: the run keeps going on
+            // the previous good checkpoint (it only loses recovery
+            // granularity), which is what a resident daemon needs
+            match self.write(global, lanes) {
+                Ok(()) => self.force = false,
+                Err(e) => {
+                    self.checkpoints_failed += 1;
+                    eprintln!(
+                        "warning: checkpoint at pass {global} failed (skipped, \
+                         {} so far): {e:#}",
+                        self.checkpoints_failed
+                    );
+                }
+            }
+            // either way the cadence clock restarts: a hard-faulted dir
+            // skips *this* checkpoint instead of re-failing every boundary
+            self.last_write = Instant::now();
         }
         if self.cfg.kill_at_pass == Some(global) {
             anyhow::bail!("injected crash at pass boundary {global}");
@@ -280,18 +366,31 @@ pub struct LoadOutcome {
 /// retried like every other read.
 pub fn load_latest(dir: &Path, disk: &Disk) -> Result<LoadOutcome> {
     let mut candidates: Vec<(u32, PathBuf)> = Vec::new();
-    for entry in
-        std::fs::read_dir(dir).with_context(|| format!("checkpoint dir {}", dir.display()))?
-    {
-        let entry = entry?;
+    let mut rejected = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            // missing root is "nothing to resume from", not an I/O failure
+            return Err(NoValidCheckpoint { dir: dir.to_path_buf(), rejected }.into());
+        }
+        Err(e) => {
+            return Err(e).with_context(|| format!("checkpoint dir {}", dir.display()))
+        }
+    };
+    for entry in entries {
+        let entry = entry.with_context(|| format!("checkpoint dir {}", dir.display()))?;
         let name = entry.file_name();
         let name = name.to_string_lossy();
         if let Some(pass) = name.strip_prefix("ckpt_").and_then(|s| s.parse::<u32>().ok()) {
             candidates.push((pass, entry.path()));
+        } else if name.starts_with(".tmp_") {
+            rejected.push((
+                entry.path(),
+                "unpublished staging dir (crashed before rename)".to_string(),
+            ));
         }
     }
     candidates.sort_by(|a, b| b.0.cmp(&a.0));
-    let mut rejected = Vec::new();
     for (_, path) in candidates {
         match load_checkpoint(&path, disk) {
             Ok(state) => return Ok(LoadOutcome { loaded: Some((path, state)), rejected }),

@@ -56,6 +56,39 @@ pub enum JobStatus {
     /// rest of its batch completed unperturbed.  The first failure is in
     /// [`crate::metrics::RunMetrics::failed`].
     Failed,
+    /// Evicted at a pass boundary because its deadline or wall-clock
+    /// timeout passed (serving: [`super::serve`]).  Partial values are
+    /// surfaced; the reason is in [`crate::metrics::RunMetrics::evicted`].
+    Expired,
+    /// Cancelled by the submitter before finishing (serving).  A queued
+    /// job cancels immediately; a running one is evicted at the next
+    /// pass boundary.
+    Cancelled,
+    /// Evicted by the runtime itself — typically a shutdown freezing the
+    /// in-flight batch into a checkpoint.  Unlike [`Expired`](Self::Expired)
+    /// the job is still resumable (`graphmp serve --resume`).
+    Evicted,
+}
+
+impl JobStatus {
+    /// Wire/display name (lowercase, stable across releases).
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Converged => "converged",
+            JobStatus::IterLimit => "iter_limit",
+            JobStatus::Failed => "failed",
+            JobStatus::Expired => "expired",
+            JobStatus::Cancelled => "cancelled",
+            JobStatus::Evicted => "evicted",
+        }
+    }
+
+    /// True once the job will never run again (results, if any, final).
+    pub fn is_terminal(self) -> bool {
+        !matches!(self, JobStatus::Queued | JobStatus::Running)
+    }
 }
 
 /// What to run: the vertex program plus its per-job iteration budget.
@@ -105,10 +138,15 @@ impl BatchReport {
             agg.checkpoints_written += b.checkpoints_written;
             agg.checkpoint_bytes += b.checkpoint_bytes;
             agg.checkpoint_seconds += b.checkpoint_seconds;
+            agg.checkpoints_failed += b.checkpoints_failed;
             if agg.resumed_from_pass.is_none() {
                 agg.resumed_from_pass = b.resumed_from_pass;
             }
+            if agg.stopped_at_pass.is_none() {
+                agg.stopped_at_pass = b.stopped_at_pass;
+            }
             agg.jobs_failed += b.jobs_failed;
+            agg.jobs_evicted += b.jobs_evicted;
             agg.per_job.extend(b.per_job.iter().copied());
         }
         agg
@@ -377,7 +415,11 @@ impl JobSet {
             // materialization)
             let (outs, mut metrics) = match writer.as_mut() {
                 Some(w) => {
-                    let opts = BatchOptions { resume: Vec::new(), observer: Some(w) };
+                    let opts = BatchOptions {
+                        resume: Vec::new(),
+                        observer: Some(w),
+                        arbiter: None,
+                    };
                     engine.run_jobs_with(&specs, intake, opts)?
                 }
                 None if arrivals.is_empty() => engine.run_jobs(&specs)?,
@@ -388,6 +430,7 @@ impl JobSet {
                 metrics.checkpoints_written = w.checkpoints_written;
                 metrics.checkpoint_bytes = w.checkpoint_bytes;
                 metrics.checkpoint_seconds = w.checkpoint_seconds;
+                metrics.checkpoints_failed = w.checkpoints_failed;
             }
             // outputs come back in admission order: founders first, then
             // arrivals in the order the intake released them
@@ -435,11 +478,11 @@ impl JobSet {
         let disk = engine.disk().clone();
         let outcome = checkpoint::load_latest(&cfg.dir, &disk)?;
         let Some((path, state)) = outcome.loaded else {
-            let mut msg = format!("no valid checkpoint in {}", cfg.dir.display());
-            for (p, why) in &outcome.rejected {
-                msg.push_str(&format!("\n  rejected {}: {why}", p.display()));
+            return Err(checkpoint::NoValidCheckpoint {
+                dir: cfg.dir.clone(),
+                rejected: outcome.rejected,
             }
-            anyhow::bail!("{msg}");
+            .into());
         };
         {
             let prop = engine.property();
@@ -549,13 +592,18 @@ impl JobSet {
                 }
                 out
             };
-            let opts = BatchOptions { resume: resume_states, observer: Some(&mut writer) };
+            let opts = BatchOptions {
+                resume: resume_states,
+                observer: Some(&mut writer),
+                arbiter: None,
+            };
             let (outs, mut metrics) = engine.run_jobs_with(&specs, intake, opts)?;
             drop(specs);
             metrics.resumed_from_pass = Some(state.pass);
             metrics.checkpoints_written = writer.checkpoints_written;
             metrics.checkpoint_bytes = writer.checkpoint_bytes;
             metrics.checkpoint_seconds = writer.checkpoint_seconds;
+            metrics.checkpoints_failed = writer.checkpoints_failed;
             let order: Vec<u32> = state
                 .lanes
                 .iter()

@@ -1,5 +1,6 @@
 //! Runtime services: the multi-job scheduler ([`jobs`]), crash-safe
-//! checkpoint/recovery ([`checkpoint`]) and the PJRT backend (below).
+//! checkpoint/recovery ([`checkpoint`]), the resident serving daemon
+//! ([`serve`] + its wire [`protocol`]) and the PJRT backend (below).
 //!
 //! # PJRT backend
 //!
@@ -20,6 +21,8 @@
 pub mod checkpoint;
 pub mod jobs;
 pub mod manifest;
+pub mod protocol;
+pub mod serve;
 
 use std::path::Path;
 use std::sync::Mutex;
@@ -28,9 +31,11 @@ use anyhow::Result;
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 
-pub use checkpoint::{CheckpointConfig, CheckpointState, CheckpointWriter};
+pub use checkpoint::{CheckpointConfig, CheckpointState, CheckpointWriter, NoValidCheckpoint};
 pub use jobs::{BatchReport, Job, JobId, JobSet, JobSpec, JobStatus};
 pub use manifest::{Artifact, Manifest};
+pub use protocol::{Priority, Request, SubmitSpec};
+pub use serve::{ServeConfig, ServeDaemon, ServeHandle, SubmitOutcome};
 
 /// A compiled pair of shard-update executables for one size variant.
 ///

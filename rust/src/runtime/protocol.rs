@@ -1,0 +1,653 @@
+//! Wire protocol of the `graphmp serve` daemon: newline-delimited JSON
+//! over a local Unix socket.
+//!
+//! Every request is one JSON object on one line with an `"op"` field
+//! (`submit` / `status` / `result` / `cancel` / `drain` / `metrics` /
+//! `ping`); every response is one JSON object on one line with an
+//! `"ok"` field.  The daemon side lives in [`super::serve`]; this module
+//! holds the protocol types ([`Request`], [`SubmitSpec`], [`Priority`])
+//! and a small self-contained JSON value ([`Json`]) — the vendored crate
+//! set has no serde, so both directions are hand-rolled here and gated
+//! by round-trip tests below.
+//!
+//! ```text
+//! -> {"op":"submit","app":"ppr","source":3,"iters":10,"priority":"high"}
+//! <- {"ok":true,"id":0}
+//! -> {"op":"status","id":0}
+//! <- {"ok":true,"id":0,"status":"running"}
+//! -> {"op":"result","id":0}
+//! <- {"ok":true,"id":0,"status":"converged","iters":7,"values_crc":"9f3a01c2"}
+//! ```
+
+use anyhow::{Context, Result};
+
+use crate::apps::VertexProgram;
+
+/// A JSON value: the minimal tree both sides of the protocol share.
+/// Objects keep insertion order (they are rendered as written and probed
+/// by key on read; duplicate keys resolve to the first).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse one complete JSON value (trailing garbage is an error).
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        anyhow::ensure!(p.i == p.b.len(), "trailing data after JSON value at byte {}", p.i);
+        Ok(v)
+    }
+
+    /// Render compactly (no whitespace) — one value per protocol line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                // integral values render without the ".0" f64 Display adds
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Object field lookup (first occurrence); `None` on non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64()
+            .filter(|n| n.fract() == 0.0 && *n >= 0.0 && *n <= 9.007199254740992e15)
+            .map(|n| n as u64)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\r' | b'\n') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().context("unexpected end of JSON")
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.obj(),
+            b'[' => self.arr(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => {
+                self.lit("true")?;
+                Ok(Json::Bool(true))
+            }
+            b'f' => {
+                self.lit("false")?;
+                Ok(Json::Bool(false))
+            }
+            b'n' => {
+                self.lit("null")?;
+                Ok(Json::Null)
+            }
+            _ => self.num(),
+        }
+    }
+
+    fn lit(&mut self, s: &str) -> Result<()> {
+        anyhow::ensure!(
+            self.b[self.i..].starts_with(s.as_bytes()),
+            "bad JSON literal at byte {}",
+            self.i
+        );
+        self.i += s.len();
+        Ok(())
+    }
+
+    fn num(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).expect("ascii digits");
+        let n: f64 = s
+            .parse()
+            .with_context(|| format!("bad JSON number '{s}' at byte {start}"))?;
+        Ok(Json::Num(n))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        anyhow::ensure!(self.peek()? == b'"', "expected string at byte {}", self.i);
+        self.i += 1;
+        let mut out = String::new();
+        loop {
+            match self.peek()? {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.i += 1;
+                    let esc = self.peek()?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            anyhow::ensure!(
+                                self.i + 4 <= self.b.len(),
+                                "truncated \\u escape"
+                            );
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .ok()
+                                .context("bad \\u escape")?;
+                            let cp =
+                                u32::from_str_radix(hex, 16).context("bad \\u escape")?;
+                            self.i += 4;
+                            // surrogate halves degrade to the replacement
+                            // character — protocol strings are plain labels
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        other => anyhow::bail!("bad escape '\\{}'", other as char),
+                    }
+                }
+                _ => {
+                    // copy the next UTF-8 scalar whole (input came from a
+                    // &str, so boundaries line up)
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .context("invalid UTF-8 inside JSON string")?;
+                    let ch = rest.chars().next().context("unexpected end of JSON")?;
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn arr(&mut self) -> Result<Json> {
+        self.i += 1; // '['
+        self.ws();
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => anyhow::bail!("expected ',' or ']', got '{}'", c as char),
+            }
+        }
+    }
+
+    fn obj(&mut self) -> Result<Json> {
+        self.i += 1; // '{'
+        self.ws();
+        let mut fields = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            anyhow::ensure!(self.peek()? == b':', "expected ':' at byte {}", self.i);
+            self.i += 1;
+            self.ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                c => anyhow::bail!("expected ',' or '}}', got '{}'", c as char),
+            }
+        }
+    }
+}
+
+/// Admission priority class of a submitted job.  The daemon pops
+/// founders high-before-normal-before-low; within a class, FIFO.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    High,
+    #[default]
+    Normal,
+    Low,
+}
+
+impl Priority {
+    /// Index into per-class arrays ([`crate::metrics::ServeMetrics::per_class`]).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Priority> {
+        Ok(match s {
+            "high" => Priority::High,
+            "normal" => Priority::Normal,
+            "low" => Priority::Low,
+            other => anyhow::bail!("unknown priority '{other}' (high|normal|low)"),
+        })
+    }
+
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+}
+
+/// One job submission: what to run plus the admission-control knobs.
+/// This is plain data (no trait objects), so it crosses threads and
+/// persists to the serve sidecar as-is; the daemon builds the actual
+/// [`VertexProgram`] with [`build_app`](Self::build_app) at admission.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubmitSpec {
+    /// App name: `pagerank|ppr|sssp|cc|bfs|widest`.
+    pub app: String,
+    /// Seed/source vertex of seeded apps (ignored by pagerank/cc).
+    pub source: u32,
+    pub damping: f32,
+    pub max_iters: u32,
+    pub priority: Priority,
+    /// Deadline in pass boundaries since admission: once this many passes
+    /// ran, the job is evicted and reported
+    /// [`crate::runtime::JobStatus::Expired`].
+    pub deadline_passes: Option<u32>,
+    /// Wall-clock deadline since admission, enforced at pass boundaries.
+    pub timeout_ms: Option<u64>,
+    pub label: Option<String>,
+}
+
+impl Default for SubmitSpec {
+    fn default() -> Self {
+        SubmitSpec {
+            app: "pagerank".to_string(),
+            source: 0,
+            damping: 0.85,
+            max_iters: 10,
+            priority: Priority::Normal,
+            deadline_passes: None,
+            timeout_ms: None,
+            label: None,
+        }
+    }
+}
+
+impl SubmitSpec {
+    /// Instantiate the vertex program this spec names (same mapping as
+    /// `graphmp run --app`).
+    pub fn build_app(&self) -> Result<Box<dyn VertexProgram>> {
+        use crate::apps::{Bfs, Cc, PageRank, Ppr, Sssp, Widest};
+        Ok(match self.app.as_str() {
+            "pagerank" => Box::new(PageRank { damping: self.damping }),
+            "ppr" => Box::new(Ppr { damping: self.damping, seed: self.source }),
+            "sssp" => Box::new(Sssp::new(self.source)),
+            "cc" => Box::new(Cc),
+            "bfs" => Box::new(Bfs::new(self.source)),
+            "widest" => Box::new(Widest::new(self.source)),
+            other => anyhow::bail!("unknown app '{other}' (pagerank|ppr|sssp|cc|bfs|widest)"),
+        })
+    }
+
+    /// Display label: the submitted one, or `app#source`.
+    pub fn display_label(&self) -> String {
+        self.label
+            .clone()
+            .unwrap_or_else(|| format!("{}#{}", self.app, self.source))
+    }
+
+    /// Decode from a request/sidecar object (absent fields default).
+    pub fn from_json(v: &Json) -> Result<SubmitSpec> {
+        let d = SubmitSpec::default();
+        Ok(SubmitSpec {
+            app: v
+                .get("app")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.app)
+                .to_string(),
+            source: v
+                .get("source")
+                .and_then(Json::as_u64)
+                .map_or(d.source, |x| x as u32),
+            damping: v
+                .get("damping")
+                .and_then(Json::as_f64)
+                .map_or(d.damping, |x| x as f32),
+            max_iters: v
+                .get("iters")
+                .and_then(Json::as_u64)
+                .map_or(d.max_iters, |x| x as u32),
+            priority: match v.get("priority").and_then(Json::as_str) {
+                Some(p) => Priority::parse(p)?,
+                None => Priority::Normal,
+            },
+            deadline_passes: v
+                .get("deadline_passes")
+                .and_then(Json::as_u64)
+                .map(|x| x as u32),
+            timeout_ms: v.get("timeout_ms").and_then(Json::as_u64),
+            label: v.get("label").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+
+    /// Encode as a submit-request object (also the sidecar format).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("op".to_string(), Json::Str("submit".to_string())),
+            ("app".to_string(), Json::Str(self.app.clone())),
+            ("source".to_string(), Json::Num(f64::from(self.source))),
+            ("damping".to_string(), Json::Num(f64::from(self.damping))),
+            ("iters".to_string(), Json::Num(f64::from(self.max_iters))),
+            (
+                "priority".to_string(),
+                Json::Str(self.priority.name().to_string()),
+            ),
+        ];
+        if let Some(d) = self.deadline_passes {
+            fields.push(("deadline_passes".to_string(), Json::Num(f64::from(d))));
+        }
+        if let Some(t) = self.timeout_ms {
+            fields.push(("timeout_ms".to_string(), Json::Num(t as f64)));
+        }
+        if let Some(l) = &self.label {
+            fields.push(("label".to_string(), Json::Str(l.clone())));
+        }
+        Json::Obj(fields)
+    }
+}
+
+/// One decoded protocol request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Submit(SubmitSpec),
+    /// One job's status, or (with no id) a summary of every job.
+    Status { job: Option<u32> },
+    /// A finished job's result; `values` asks for the full vertex array
+    /// (the compact `values_crc` fingerprint is always included).
+    Result { job: u32, values: bool },
+    Cancel { job: u32 },
+    /// Stop admitting, run the accepted queue dry, then exit.
+    Drain,
+    Metrics,
+    Ping,
+}
+
+impl Request {
+    /// Parse one protocol line.
+    pub fn parse_line(line: &str) -> Result<Request> {
+        let v = Json::parse(line)?;
+        let op = v
+            .get("op")
+            .and_then(Json::as_str)
+            .context("missing \"op\" field")?;
+        let job_id = |v: &Json| -> Result<u32> {
+            Ok(v.get("id")
+                .and_then(Json::as_u64)
+                .with_context(|| format!("op \"{op}\" needs a numeric \"id\""))?
+                as u32)
+        };
+        Ok(match op {
+            "submit" => Request::Submit(SubmitSpec::from_json(&v)?),
+            "status" => Request::Status {
+                job: v.get("id").and_then(Json::as_u64).map(|x| x as u32),
+            },
+            "result" => Request::Result {
+                job: job_id(&v)?,
+                values: v.get("values").and_then(Json::as_bool).unwrap_or(false),
+            },
+            "cancel" => Request::Cancel { job: job_id(&v)? },
+            "drain" => Request::Drain,
+            "metrics" => Request::Metrics,
+            "ping" => Request::Ping,
+            other => anyhow::bail!(
+                "unknown op '{other}' (submit|status|result|cancel|drain|metrics|ping)"
+            ),
+        })
+    }
+}
+
+/// CRC32 fingerprint of a vertex array's exact f32 bits — the protocol's
+/// compact bit-identity check (two runs agree iff their crc agrees).
+pub fn values_crc(values: &[f32]) -> u32 {
+    let mut h = crc32fast::Hasher::new();
+    for v in values {
+        h.update(&v.to_bits().to_le_bytes());
+    }
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trips() {
+        let text = r#"{"op":"submit","n":3,"neg":-2.5,"ok":true,"none":null,"arr":[1,2,3],"s":"a b"}"#;
+        let v = Json::parse(text).unwrap();
+        assert_eq!(v.get("op").and_then(Json::as_str), Some("submit"));
+        assert_eq!(v.get("n").and_then(Json::as_u64), Some(3));
+        assert_eq!(v.get("neg").and_then(Json::as_f64), Some(-2.5));
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("none"), Some(&Json::Null));
+        assert_eq!(v.get("arr").and_then(Json::as_array).map(<[Json]>::len), Some(3));
+        assert_eq!(Json::parse(&v.render()).unwrap(), v);
+    }
+
+    #[test]
+    fn json_escapes_round_trip() {
+        let v = Json::Obj(vec![(
+            "s".to_string(),
+            Json::Str("quote\" slash\\ nl\n tab\t unicode é".to_string()),
+        )]);
+        assert_eq!(Json::parse(&v.render()).unwrap(), v);
+        let parsed = Json::parse(r#""aA\n""#).unwrap();
+        assert_eq!(parsed.as_str(), Some("aA\n"));
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("{\"a\":}").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{} trailing").is_err());
+        assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn submit_spec_round_trips() {
+        let spec = SubmitSpec {
+            app: "ppr".to_string(),
+            source: 7,
+            damping: 0.9,
+            max_iters: 25,
+            priority: Priority::High,
+            deadline_passes: Some(3),
+            timeout_ms: Some(1500),
+            label: Some("hot query".to_string()),
+        };
+        let back = SubmitSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // damping survives the f32 -> f64 -> text -> f64 -> f32 trip exactly
+        assert_eq!(back.damping.to_bits(), spec.damping.to_bits());
+    }
+
+    #[test]
+    fn requests_parse() {
+        let r = Request::parse_line(r#"{"op":"submit","app":"sssp","source":4}"#).unwrap();
+        match r {
+            Request::Submit(s) => {
+                assert_eq!(s.app, "sssp");
+                assert_eq!(s.source, 4);
+                assert_eq!(s.max_iters, SubmitSpec::default().max_iters);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            Request::parse_line(r#"{"op":"status"}"#).unwrap(),
+            Request::Status { job: None }
+        );
+        assert_eq!(
+            Request::parse_line(r#"{"op":"result","id":2,"values":true}"#).unwrap(),
+            Request::Result { job: 2, values: true }
+        );
+        assert_eq!(
+            Request::parse_line(r#"{"op":"cancel","id":1}"#).unwrap(),
+            Request::Cancel { job: 1 }
+        );
+        assert_eq!(Request::parse_line(r#"{"op":"drain"}"#).unwrap(), Request::Drain);
+        assert!(Request::parse_line(r#"{"op":"result"}"#).is_err(), "result needs id");
+        assert!(Request::parse_line(r#"{"op":"nope"}"#).is_err());
+        assert!(Request::parse_line("not json").is_err());
+    }
+
+    #[test]
+    fn build_app_matches_names() {
+        for app in ["pagerank", "ppr", "sssp", "cc", "bfs", "widest"] {
+            let spec = SubmitSpec { app: app.to_string(), ..Default::default() };
+            assert_eq!(spec.build_app().unwrap().name(), app);
+        }
+        let bad = SubmitSpec { app: "zap".to_string(), ..Default::default() };
+        assert!(bad.build_app().is_err());
+    }
+
+    #[test]
+    fn priority_round_trips() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::High.index(), 0);
+    }
+
+    #[test]
+    fn values_crc_is_bit_exact() {
+        let a = vec![0.1f32, -0.0, f32::INFINITY];
+        let b = vec![0.1f32, 0.0, f32::INFINITY]; // -0.0 vs 0.0 differ bitwise
+        assert_ne!(values_crc(&a), values_crc(&b));
+        assert_eq!(values_crc(&a), values_crc(&a.clone()));
+    }
+}

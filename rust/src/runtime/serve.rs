@@ -1,0 +1,1371 @@
+//! `graphmp serve`: a resident serving daemon over one preprocessed
+//! graph (PR 8).
+//!
+//! The daemon wraps the scan-shared interactive batch runtime
+//! ([`crate::engine::VswEngine::run_jobs_with`]) in a long-running
+//! admission loop: jobs arrive over a local Unix socket (or in-process
+//! through a [`ServeHandle`]), wait in a bounded priority queue, and run
+//! in scan-shared batches that stay open to mid-batch admission — the
+//! engine's [`crate::storage::EdgeCache`] and decode memos stay warm
+//! across batches, so a resident daemon amortizes where a per-query CLI
+//! would re-pay cold I/O every time.
+//!
+//! Lifecycle of one submission:
+//!
+//! ```text
+//! submit ──▶ [bounded queue, 3 priority classes]
+//!    │              │ admitted (founder or mid-batch intake)
+//!    │ queue full   ▼
+//!    ▼         Running ──▶ Converged | IterLimit      (completed)
+//!  Busy{retry}      │ ──▶ Failed                      (isolated fault)
+//!                   │ ──▶ Expired                     (deadline/timeout evict)
+//!                   │ ──▶ Cancelled                   (cancel request)
+//!                   └──▶ Evicted                      (shutdown froze the
+//!                                                      batch; resumable)
+//! ```
+//!
+//! Failure matrix: a full queue *rejects* with a retry-after hint
+//! (backpressure, never unbounded growth); a missed per-job deadline or
+//! wall-clock timeout *evicts* that lane at a pass boundary (the PR 6
+//! lane-snapshot state is surfaced as partial values, other lanes are
+//! bit-identical to a run without the evicted member); SIGINT/SIGTERM or
+//! [`ServeHandle::request_shutdown`] *stops admitting* and — when
+//! checkpointing is on — freezes the in-flight batch into a forced
+//! checkpoint at the next pass boundary, so `graphmp serve --resume`
+//! restores the queue and continues every frozen lane bit-identically.
+//!
+//! Durable state lives in the checkpoint dir: `ckpt_*` directories from
+//! [`super::checkpoint`] hold lane values; a `serve_state.jsonl` sidecar
+//! (one JSON object per job: id, status, submit spec) holds the queue
+//! roster.  The sidecar is rewritten via temp-file + rename on every
+//! state change; unlike checkpoints it deliberately bypasses the
+//! fault-injectable [`Disk`](crate::storage::disk::Disk) write path so a
+//! checkpoint write fault cannot also take out the queue roster.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::io::{BufRead, Write as IoWrite};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::checkpoint::{self, BatchMeta, CheckpointConfig, CheckpointWriter};
+use super::jobs::JobStatus;
+use super::protocol::{self, Json, Priority, Request, SubmitSpec};
+use crate::apps::VertexProgram;
+use crate::engine::VswEngine;
+use crate::exec::{
+    BatchJob, BatchOptions, LaneArbiter, LaneSnapshot, LaneVerdict, PassObserver, ResumeState,
+    MAX_BATCH_JOBS,
+};
+use crate::metrics::ServeMetrics;
+
+/// Queue-roster sidecar file, kept next to the `ckpt_*` directories.
+pub const SIDECAR_FILE: &str = "serve_state.jsonl";
+
+/// Backpressure hint returned with [`SubmitOutcome::Busy`].
+const RETRY_AFTER_MS: u64 = 100;
+
+/// How long the serving loop sleeps between shutdown-flag polls when the
+/// queue is empty.
+const IDLE_WAIT: Duration = Duration::from_millis(200);
+
+/// Process-global shutdown flag, set by the SIGINT/SIGTERM handler (the
+/// only thing an async-signal context can safely do).
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(_sig: i32) {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGINT and SIGTERM into the daemon's graceful-shutdown flag:
+/// stop admitting, freeze or finish the in-flight batch, flush state,
+/// exit 0.  Call once from the CLI before [`ServeDaemon::run`].
+pub fn install_signal_handlers() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    // SAFETY: installing a handler that only stores to an AtomicBool is
+    // async-signal-safe; 2/15 are SIGINT/SIGTERM on every Linux ABI.
+    unsafe {
+        signal(2, on_signal);
+        signal(15, on_signal);
+    }
+}
+
+/// Daemon configuration (CLI: `graphmp serve`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Unix socket path to listen on (`--socket`); `None` = in-process
+    /// submissions through [`ServeDaemon::handle`] only.
+    pub socket: Option<PathBuf>,
+    /// Bounded admission-queue capacity; submissions beyond it get
+    /// [`SubmitOutcome::Busy`] (`--queue-cap`).
+    pub queue_cap: usize,
+    /// Jobs per scan-shared batch, clamped to `1..=`[`MAX_BATCH_JOBS`]
+    /// (`--batch-cap`).
+    pub batch_cap: usize,
+    /// Background checkpointing of in-flight batches plus the
+    /// `serve_state.jsonl` queue sidecar (`--checkpoint-dir`,
+    /// `--checkpoint-every`, `--checkpoint-secs`).
+    pub checkpoint: Option<CheckpointConfig>,
+    /// Restore queue + in-flight batch from `checkpoint` before serving
+    /// (`--resume`).
+    pub resume: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            socket: None,
+            queue_cap: 256,
+            batch_cap: MAX_BATCH_JOBS,
+            checkpoint: None,
+            resume: false,
+        }
+    }
+}
+
+/// What [`ServeHandle::submit`] did with a submission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// Queued; poll this job id for status/results.
+    Accepted(u32),
+    /// Backpressure: the bounded queue is full — retry after the hint.
+    Busy { retry_after_ms: u64 },
+    /// Invalid submission (unknown app) or a draining/stopping daemon.
+    Rejected(String),
+}
+
+/// One job the daemon knows about (index in [`Inner::jobs`] == job id).
+struct ServeJob {
+    spec: SubmitSpec,
+    status: JobStatus,
+    submitted: Instant,
+    /// Submit→terminal wall latency, set once terminal.
+    latency: Option<Duration>,
+    values: Option<Vec<f32>>,
+    iters: u32,
+    /// Cancellation requested while running; the arbiter evicts the lane
+    /// at the next pass boundary.
+    cancel: bool,
+    /// Failure or eviction reason.
+    note: Option<String>,
+    /// Restored lane state (`--resume`): re-admitted as a warm-started
+    /// founder of the next batch.
+    resume: Option<ResumeState>,
+}
+
+impl ServeJob {
+    fn new(spec: SubmitSpec) -> ServeJob {
+        ServeJob {
+            spec,
+            status: JobStatus::Queued,
+            submitted: Instant::now(),
+            latency: None,
+            values: None,
+            iters: 0,
+            cancel: false,
+            note: None,
+            resume: None,
+        }
+    }
+}
+
+/// Mutable daemon state behind the [`ServeShared`] mutex.
+#[derive(Default)]
+struct Inner {
+    jobs: Vec<ServeJob>,
+    /// Admission queues by [`Priority::index`] (high, normal, low).
+    queue: [VecDeque<u32>; 3],
+    /// Restored mid-batch lanes, re-admitted (in checkpoint lane order)
+    /// as warm-started founders of the next batch.
+    resume_front: Vec<u32>,
+    /// Stop admitting new submissions, run the queue dry, then exit.
+    draining: bool,
+    /// Stop admitting and stop starting batches; freeze or finish the
+    /// in-flight one, then exit.
+    shutdown: bool,
+    metrics: ServeMetrics,
+}
+
+impl Inner {
+    fn depth(&self) -> usize {
+        self.queue.iter().map(VecDeque::len).sum()
+    }
+
+    fn pop_next(&mut self) -> Option<u32> {
+        for q in &mut self.queue {
+            if let Some(id) = q.pop_front() {
+                return Some(id);
+            }
+        }
+        None
+    }
+
+    fn queued_ids(&self) -> Vec<u32> {
+        self.queue.iter().flatten().copied().collect()
+    }
+}
+
+/// State shared between the daemon loop, socket threads, and handles.
+struct ServeShared {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    /// The daemon loop has exited; handles reject, the listener unwinds.
+    stopped: AtomicBool,
+    queue_cap: usize,
+    sidecar: Option<PathBuf>,
+}
+
+impl ServeShared {
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().expect("serve state poisoned")
+    }
+
+    fn shutdown_requested(&self) -> bool {
+        SHUTDOWN.load(Ordering::Relaxed) || self.lock().shutdown
+    }
+}
+
+/// Mark job `id` failed in place (admission-time validation failures).
+fn fail_job(inner: &mut Inner, id: u32, msg: String) {
+    let job = &mut inner.jobs[id as usize];
+    job.status = JobStatus::Failed;
+    job.note = Some(msg);
+    job.latency = Some(job.submitted.elapsed());
+    inner.metrics.failed += 1;
+}
+
+/// Validate + instantiate job `id` at admission.  On failure the job is
+/// marked [`JobStatus::Failed`] in place and `None` comes back.
+fn build_admission(
+    inner: &mut Inner,
+    id: u32,
+    weighted: bool,
+) -> Option<Box<dyn VertexProgram>> {
+    let built = inner.jobs[id as usize].spec.build_app();
+    match built {
+        Ok(app) if !app.needs_weights() || weighted => {
+            inner.jobs[id as usize].status = JobStatus::Running;
+            inner.metrics.admitted += 1;
+            Some(app)
+        }
+        Ok(app) => {
+            fail_job(inner, id, format!("{} needs a weighted graph dir", app.name()));
+            None
+        }
+        Err(e) => {
+            fail_job(inner, id, format!("{e:#}"));
+            None
+        }
+    }
+}
+
+/// Rewrite the queue-roster sidecar: one JSON line per job (id, status,
+/// submit spec), staged to a temp file and renamed into place.  Plain
+/// `std::fs` on purpose — a fault injected into the checkpoint write
+/// path must not also corrupt the roster.
+fn write_sidecar(shared: &ServeShared, inner: &Inner) {
+    let Some(path) = &shared.sidecar else { return };
+    let mut text = String::new();
+    for (id, job) in inner.jobs.iter().enumerate() {
+        text.push_str(&sidecar_line(id as u32, job));
+        text.push('\n');
+    }
+    let tmp = path.with_extension("jsonl.tmp");
+    let wrote = (|| -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&tmp, text.as_bytes())?;
+        std::fs::rename(&tmp, path)
+    })();
+    if let Err(e) = wrote {
+        eprintln!("warning: serve sidecar write failed ({}): {e}", path.display());
+    }
+}
+
+fn sidecar_line(id: u32, job: &ServeJob) -> String {
+    let mut fields = vec![
+        ("id".to_string(), Json::Num(f64::from(id))),
+        ("status".to_string(), Json::Str(job.status.name().to_string())),
+    ];
+    if let Json::Obj(rest) = job.spec.to_json() {
+        fields.extend(rest);
+    }
+    Json::Obj(fields).render()
+}
+
+fn status_of_name(name: &str) -> Option<JobStatus> {
+    Some(match name {
+        "queued" => JobStatus::Queued,
+        "running" => JobStatus::Running,
+        "converged" => JobStatus::Converged,
+        "iter_limit" => JobStatus::IterLimit,
+        "failed" => JobStatus::Failed,
+        "expired" => JobStatus::Expired,
+        "cancelled" => JobStatus::Cancelled,
+        "evicted" => JobStatus::Evicted,
+        _ => return None,
+    })
+}
+
+/// Clonable client handle: submit/inspect/cancel against a running (or
+/// about-to-run) daemon, from any thread.  Socket connections are served
+/// through the same handle ([`handle_line`](Self::handle_line)).
+#[derive(Clone)]
+pub struct ServeHandle {
+    shared: Arc<ServeShared>,
+}
+
+impl ServeHandle {
+    /// Admission control: validate, then enqueue under the bounded cap.
+    pub fn submit(&self, spec: SubmitSpec) -> SubmitOutcome {
+        let mut inner = self.shared.lock();
+        inner.metrics.submitted += 1;
+        if inner.draining || inner.shutdown || self.shared.stopped.load(Ordering::Relaxed) {
+            inner.metrics.rejected_invalid += 1;
+            return SubmitOutcome::Rejected(
+                "daemon is draining; not accepting new jobs".to_string(),
+            );
+        }
+        if let Err(e) = spec.build_app() {
+            inner.metrics.rejected_invalid += 1;
+            return SubmitOutcome::Rejected(format!("{e:#}"));
+        }
+        if inner.depth() >= self.shared.queue_cap {
+            inner.metrics.rejected += 1;
+            return SubmitOutcome::Busy { retry_after_ms: RETRY_AFTER_MS };
+        }
+        let id = inner.jobs.len() as u32;
+        let class = spec.priority.index();
+        inner.jobs.push(ServeJob::new(spec));
+        inner.queue[class].push_back(id);
+        inner.metrics.per_class[class].submitted += 1;
+        let depth = inner.depth();
+        inner.metrics.queue_depth = depth;
+        write_sidecar(&self.shared, &inner);
+        self.shared.cv.notify_all();
+        SubmitOutcome::Accepted(id)
+    }
+
+    pub fn status(&self, id: u32) -> Option<JobStatus> {
+        self.shared.lock().jobs.get(id as usize).map(|j| j.status)
+    }
+
+    /// A job's vertex values, once set (finished, or partial on evict).
+    pub fn values(&self, id: u32) -> Option<Vec<f32>> {
+        self.shared.lock().jobs.get(id as usize).and_then(|j| j.values.clone())
+    }
+
+    /// A job's failure/eviction reason, if any.
+    pub fn note(&self, id: u32) -> Option<String> {
+        self.shared.lock().jobs.get(id as usize).and_then(|j| j.note.clone())
+    }
+
+    /// Cancel a job: queued → [`JobStatus::Cancelled`] immediately;
+    /// running → evicted at the next pass boundary.  Returns the status
+    /// after the request, `None` for unknown ids.
+    pub fn cancel(&self, id: u32) -> Option<JobStatus> {
+        let mut inner = self.shared.lock();
+        let current = inner.jobs.get(id as usize).map(|j| j.status)?;
+        match current {
+            JobStatus::Queued => {
+                for q in &mut inner.queue {
+                    q.retain(|&x| x != id);
+                }
+                let job = &mut inner.jobs[id as usize];
+                job.status = JobStatus::Cancelled;
+                job.latency = Some(job.submitted.elapsed());
+                inner.metrics.cancelled += 1;
+                let depth = inner.depth();
+                inner.metrics.queue_depth = depth;
+                write_sidecar(&self.shared, &inner);
+                Some(JobStatus::Cancelled)
+            }
+            JobStatus::Running => {
+                inner.jobs[id as usize].cancel = true;
+                Some(JobStatus::Running)
+            }
+            other => Some(other),
+        }
+    }
+
+    /// Stop admitting new submissions; the daemon runs the accepted
+    /// queue dry and then exits.
+    pub fn drain(&self) {
+        self.shared.lock().draining = true;
+        self.shared.cv.notify_all();
+    }
+
+    /// Graceful shutdown, same path as SIGINT/SIGTERM: stop admitting,
+    /// freeze (checkpointing) or finish the in-flight batch, exit.
+    pub fn request_shutdown(&self) {
+        self.shared.lock().shutdown = true;
+        self.shared.cv.notify_all();
+    }
+
+    /// Snapshot of the daemon's lifetime counters.
+    pub fn metrics(&self) -> ServeMetrics {
+        let mut inner = self.shared.lock();
+        let depth = inner.depth();
+        inner.metrics.queue_depth = depth;
+        inner.metrics.clone()
+    }
+
+    /// Serve one wire-protocol line → one response object.
+    pub fn handle_line(&self, line: &str) -> Json {
+        match Request::parse_line(line) {
+            Ok(req) => self.handle_request(req),
+            Err(e) => err_json(&format!("{e:#}")),
+        }
+    }
+
+    /// Serve one decoded request → one response object.
+    pub fn handle_request(&self, req: Request) -> Json {
+        match req {
+            Request::Submit(spec) => match self.submit(spec) {
+                SubmitOutcome::Accepted(id) => Json::Obj(vec![
+                    field("ok", Json::Bool(true)),
+                    field("id", Json::Num(f64::from(id))),
+                ]),
+                SubmitOutcome::Busy { retry_after_ms } => Json::Obj(vec![
+                    field("ok", Json::Bool(false)),
+                    field("busy", Json::Bool(true)),
+                    field("retry_after_ms", Json::Num(retry_after_ms as f64)),
+                    field(
+                        "error",
+                        Json::Str("admission queue full (backpressure)".to_string()),
+                    ),
+                ]),
+                SubmitOutcome::Rejected(msg) => err_json(&msg),
+            },
+            Request::Status { job: Some(id) } => {
+                let inner = self.shared.lock();
+                match inner.jobs.get(id as usize) {
+                    None => err_json(&format!("unknown job {id}")),
+                    Some(j) => {
+                        let mut fields = vec![
+                            field("ok", Json::Bool(true)),
+                            field("id", Json::Num(f64::from(id))),
+                            field("status", Json::Str(j.status.name().to_string())),
+                            field("label", Json::Str(j.spec.display_label())),
+                            field("iters", Json::Num(f64::from(j.iters))),
+                        ];
+                        if let Some(note) = &j.note {
+                            fields.push(field("note", Json::Str(note.clone())));
+                        }
+                        Json::Obj(fields)
+                    }
+                }
+            }
+            Request::Status { job: None } => {
+                let inner = self.shared.lock();
+                let jobs: Vec<Json> = inner
+                    .jobs
+                    .iter()
+                    .enumerate()
+                    .map(|(id, j)| {
+                        Json::Obj(vec![
+                            field("id", Json::Num(id as f64)),
+                            field("status", Json::Str(j.status.name().to_string())),
+                            field("label", Json::Str(j.spec.display_label())),
+                        ])
+                    })
+                    .collect();
+                Json::Obj(vec![
+                    field("ok", Json::Bool(true)),
+                    field("queue_depth", Json::Num(inner.depth() as f64)),
+                    field("jobs", Json::Arr(jobs)),
+                ])
+            }
+            Request::Result { job, values } => {
+                let inner = self.shared.lock();
+                let Some(j) = inner.jobs.get(job as usize) else {
+                    return err_json(&format!("unknown job {job}"));
+                };
+                if !j.status.is_terminal() {
+                    return err_json(&format!(
+                        "job {job} is not finished (status {})",
+                        j.status.name()
+                    ));
+                }
+                let mut fields = vec![
+                    field("ok", Json::Bool(true)),
+                    field("id", Json::Num(f64::from(job))),
+                    field("status", Json::Str(j.status.name().to_string())),
+                    field("iters", Json::Num(f64::from(j.iters))),
+                ];
+                if let Some(note) = &j.note {
+                    fields.push(field("note", Json::Str(note.clone())));
+                }
+                if let Some(vals) = &j.values {
+                    fields.push(field(
+                        "values_crc",
+                        Json::Str(format!("{:08x}", protocol::values_crc(vals))),
+                    ));
+                    if values {
+                        fields.push(field(
+                            "values",
+                            Json::Arr(vals.iter().map(|&v| Json::Num(f64::from(v))).collect()),
+                        ));
+                    }
+                }
+                Json::Obj(fields)
+            }
+            Request::Cancel { job } => match self.cancel(job) {
+                None => err_json(&format!("unknown job {job}")),
+                Some(status) => Json::Obj(vec![
+                    field("ok", Json::Bool(true)),
+                    field("id", Json::Num(f64::from(job))),
+                    field("status", Json::Str(status.name().to_string())),
+                ]),
+            },
+            Request::Drain => {
+                self.drain();
+                Json::Obj(vec![
+                    field("ok", Json::Bool(true)),
+                    field("draining", Json::Bool(true)),
+                ])
+            }
+            Request::Metrics => metrics_json(&self.metrics()),
+            Request::Ping => Json::Obj(vec![
+                field("ok", Json::Bool(true)),
+                field("pong", Json::Bool(true)),
+            ]),
+        }
+    }
+
+    fn stopped(&self) -> bool {
+        self.shared.stopped.load(Ordering::Relaxed)
+    }
+}
+
+fn field(k: &str, v: Json) -> (String, Json) {
+    (k.to_string(), v)
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::Obj(vec![
+        field("ok", Json::Bool(false)),
+        field("error", Json::Str(msg.to_string())),
+    ])
+}
+
+fn metrics_json(m: &ServeMetrics) -> Json {
+    let classes: Vec<Json> = Priority::ALL
+        .iter()
+        .map(|p| {
+            let c = &m.per_class[p.index()];
+            Json::Obj(vec![
+                field("class", Json::Str(p.name().to_string())),
+                field("submitted", Json::Num(c.submitted as f64)),
+                field("completed", Json::Num(c.completed as f64)),
+                field(
+                    "mean_latency_ms",
+                    Json::Num(c.mean_latency().as_secs_f64() * 1e3),
+                ),
+                field("max_latency_ms", Json::Num(c.max_latency.as_secs_f64() * 1e3)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        field("ok", Json::Bool(true)),
+        field("submitted", Json::Num(m.submitted as f64)),
+        field("admitted", Json::Num(m.admitted as f64)),
+        field("completed", Json::Num(m.completed as f64)),
+        field("rejected", Json::Num(m.rejected as f64)),
+        field("rejected_invalid", Json::Num(m.rejected_invalid as f64)),
+        field("expired", Json::Num(m.expired as f64)),
+        field("cancelled", Json::Num(m.cancelled as f64)),
+        field("evicted", Json::Num(m.evicted as f64)),
+        field("failed", Json::Num(m.failed as f64)),
+        field("batches", Json::Num(m.batches as f64)),
+        field("checkpoints_written", Json::Num(m.checkpoints_written as f64)),
+        field("checkpoints_failed", Json::Num(m.checkpoints_failed as f64)),
+        field("queue_depth", Json::Num(m.queue_depth as f64)),
+        field("per_class", Json::Arr(classes)),
+    ])
+}
+
+/// Final report of one daemon life ([`ServeDaemon::run`]).
+#[derive(Clone, Debug)]
+pub struct ServeSummary {
+    pub metrics: ServeMetrics,
+}
+
+/// Owns per-batch admission bookkeeping: one entry per admitted lane,
+/// in lane (= admission) order.
+struct LaneCtl {
+    id: u32,
+    admit_pass: u32,
+    admitted_at: Instant,
+    /// Absolute batch-local pass at which the lane expires.
+    deadline_pass: Option<u32>,
+    timeout: Option<Duration>,
+    /// Terminal status decided at eviction (Cancelled/Expired); `None`
+    /// for shutdown-freeze evictions, which stay resumable.
+    verdict: Option<JobStatus>,
+}
+
+/// Leases `Box<dyn VertexProgram>`s out as `'static` references for the
+/// duration of one batch (the engine's `BatchJob` lifetime wants one
+/// lifetime for founders and mid-batch intake arrivals alike).
+#[derive(Default)]
+struct AppArena {
+    leased: Vec<*mut (dyn VertexProgram + 'static)>,
+}
+
+impl AppArena {
+    /// The `'static` is a scoped lie: the boxed program has a stable heap
+    /// address and is only reclaimed by [`reset`](Self::reset)/drop,
+    /// which the daemon calls strictly after the batch (and every
+    /// `BatchJob` borrowing a lease) is gone.
+    fn lease(&mut self, app: Box<dyn VertexProgram>) -> &'static dyn VertexProgram {
+        let p = Box::into_raw(app);
+        self.leased.push(p);
+        // SAFETY: `p` came from Box::into_raw above (valid, aligned,
+        // uniquely owned by this arena); the shared reference is
+        // read-only and dies with the batch, before reclamation.
+        unsafe { &*p }
+    }
+
+    fn reset(&mut self) {
+        for p in self.leased.drain(..) {
+            // SAFETY: every pointer came from Box::into_raw and is
+            // reclaimed exactly once; no lease outlives the batch.
+            drop(unsafe { Box::from_raw(p) });
+        }
+    }
+}
+
+impl Drop for AppArena {
+    fn drop(&mut self) {
+        self.reset();
+    }
+}
+
+/// The per-batch [`LaneArbiter`]: evicts cancelled / past-deadline /
+/// timed-out lanes at pass boundaries, and stops the whole batch when a
+/// shutdown wants it frozen into a checkpoint.
+struct ServeArbiter {
+    shared: Arc<ServeShared>,
+    ctl: Rc<RefCell<Vec<LaneCtl>>>,
+    /// Checkpointing is on: shutdown freezes the batch via `stop_batch`
+    /// (without it the batch just runs to completion).
+    stop_mode: bool,
+}
+
+impl LaneArbiter for ServeArbiter {
+    fn decide(&mut self, pass: u32, lane: usize, snap: &LaneSnapshot<'_>) -> LaneVerdict {
+        let mut ctl = self.ctl.borrow_mut();
+        let c = &mut ctl[lane];
+        let cancelled = self.shared.lock().jobs[c.id as usize].cancel;
+        if cancelled {
+            c.verdict = Some(JobStatus::Cancelled);
+            return LaneVerdict::Evict("cancelled by request".to_string());
+        }
+        if let Some(d) = c.deadline_pass {
+            if pass >= d {
+                c.verdict = Some(JobStatus::Expired);
+                return LaneVerdict::Evict(format!(
+                    "deadline of {} passes exceeded ({} iterations done)",
+                    d - c.admit_pass,
+                    snap.iters_done
+                ));
+            }
+        }
+        if let Some(t) = c.timeout {
+            if c.admitted_at.elapsed() >= t {
+                c.verdict = Some(JobStatus::Expired);
+                return LaneVerdict::Evict(format!(
+                    "wall-clock timeout of {} ms exceeded",
+                    t.as_millis()
+                ));
+            }
+        }
+        LaneVerdict::Continue
+    }
+
+    fn stop_batch(&mut self, _pass: u32) -> bool {
+        self.stop_mode && self.shared.shutdown_requested()
+    }
+}
+
+/// The per-batch [`PassObserver`]: keeps the checkpoint writer's roster
+/// in sync with mid-batch admissions and forces a final checkpoint at
+/// the boundary a shutdown freezes the batch.
+struct ServeObserver {
+    writer: Option<CheckpointWriter>,
+    shared: Arc<ServeShared>,
+    ctl: Rc<RefCell<Vec<LaneCtl>>>,
+}
+
+impl PassObserver for ServeObserver {
+    fn at_boundary(&mut self, pass: u32, lanes: &[LaneSnapshot<'_>]) -> Result<()> {
+        let Some(w) = self.writer.as_mut() else { return Ok(()) };
+        let mut roster: Vec<(u32, u32)> =
+            self.ctl.borrow().iter().map(|c| (c.id, c.admit_pass)).collect();
+        let shutdown = {
+            let inner = self.shared.lock();
+            for id in inner.queued_ids() {
+                roster.push((id, pass.saturating_add(1)));
+            }
+            inner.shutdown || SHUTDOWN.load(Ordering::Relaxed)
+        };
+        w.meta_mut().roster = roster;
+        if shutdown {
+            // the forced write lands at this same boundary, right before
+            // the arbiter's stop_batch freezes every unfinished lane —
+            // the checkpoint captures them mid-flight, resumable
+            w.request_flush();
+        }
+        w.at_boundary(pass, lanes)
+    }
+}
+
+/// Carried-forward results of finished jobs, persisted into every
+/// checkpoint so `--resume` hands them back without re-running.
+fn finished_records(inner: &Inner) -> Vec<checkpoint::JobRecord> {
+    inner
+        .jobs
+        .iter()
+        .enumerate()
+        .filter(|(_, j)| {
+            matches!(
+                j.status,
+                JobStatus::Converged | JobStatus::IterLimit | JobStatus::Failed
+            )
+        })
+        .map(|(id, j)| checkpoint::JobRecord {
+            id: id as u32,
+            arrive: 0,
+            state: ResumeState {
+                values: j.values.clone().unwrap_or_default(),
+                active: Vec::new(),
+                iters_done: j.iters,
+                done: true,
+                converged: j.status == JobStatus::Converged,
+                failed: (j.status == JobStatus::Failed).then(|| {
+                    j.note.clone().unwrap_or_else(|| "failed".to_string())
+                }),
+            },
+        })
+        .collect()
+}
+
+/// The resident serving daemon.  Construct with a [`ServeConfig`], hand
+/// out [`ServeHandle`]s, then [`run`](Self::run) on the thread that owns
+/// the engine until drain/shutdown.
+pub struct ServeDaemon {
+    cfg: ServeConfig,
+    shared: Arc<ServeShared>,
+    /// Global pass clock across the daemon's batches (checkpoints are
+    /// numbered by it, and it survives `--resume`).
+    pass_base: u32,
+}
+
+impl ServeDaemon {
+    pub fn new(cfg: ServeConfig) -> ServeDaemon {
+        let sidecar = cfg.checkpoint.as_ref().map(|c| c.dir.join(SIDECAR_FILE));
+        let shared = Arc::new(ServeShared {
+            inner: Mutex::new(Inner::default()),
+            cv: Condvar::new(),
+            stopped: AtomicBool::new(false),
+            queue_cap: cfg.queue_cap.max(1),
+            sidecar,
+        });
+        ServeDaemon { cfg, shared, pass_base: 0 }
+    }
+
+    pub fn handle(&self) -> ServeHandle {
+        ServeHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Serve until drained or shut down.  Returns the lifetime counters;
+    /// an `Err` is a crash (e.g. the fault-injection kill hook) — state
+    /// up to the last checkpoint + sidecar write is recoverable with
+    /// `--resume`.
+    pub fn run(&mut self, engine: &mut VswEngine) -> Result<ServeSummary> {
+        if self.cfg.resume {
+            self.restore(engine)?;
+        } else if let Some(ckpt) = &self.cfg.checkpoint {
+            // fresh daemon: a stale roster from a previous life would
+            // confuse a later --resume of *this* life
+            let _ = std::fs::remove_file(ckpt.dir.join(SIDECAR_FILE));
+        }
+        let listener = match self.cfg.socket.clone() {
+            Some(path) => Some(spawn_listener(&path, self.handle())?),
+            None => None,
+        };
+        let served = self.serve_loop(engine);
+        self.shared.stopped.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        if let Some(jh) = listener {
+            let _ = jh.join();
+        }
+        {
+            let mut inner = self.shared.lock();
+            let depth = inner.depth();
+            inner.metrics.queue_depth = depth;
+            write_sidecar(&self.shared, &inner);
+        }
+        served?;
+        Ok(ServeSummary { metrics: self.handle().metrics() })
+    }
+
+    fn serve_loop(&mut self, engine: &mut VswEngine) -> Result<()> {
+        enum Wake {
+            Work,
+            Exit,
+        }
+        loop {
+            let wake = {
+                let mut inner = self.shared.lock();
+                loop {
+                    if SHUTDOWN.load(Ordering::Relaxed) {
+                        inner.shutdown = true;
+                    }
+                    if inner.shutdown {
+                        break Wake::Exit;
+                    }
+                    if !inner.resume_front.is_empty() || inner.depth() > 0 {
+                        break Wake::Work;
+                    }
+                    if inner.draining {
+                        break Wake::Exit;
+                    }
+                    inner = self
+                        .shared
+                        .cv
+                        .wait_timeout(inner, IDLE_WAIT)
+                        .expect("serve state poisoned")
+                        .0;
+                }
+            };
+            match wake {
+                Wake::Exit => return Ok(()),
+                Wake::Work => self.run_batch(engine)?,
+            }
+        }
+    }
+
+    /// Run one scan-shared batch: founders from the queue (resumed lanes
+    /// first), mid-batch intake from later submissions, deadlines and
+    /// cancellations enforced by the arbiter, checkpoints by the
+    /// observer.
+    fn run_batch(&mut self, engine: &mut VswEngine) -> Result<()> {
+        let weighted = engine.property().weighted;
+        let batch_cap = self.cfg.batch_cap.clamp(1, MAX_BATCH_JOBS);
+
+        // the arena outlives `specs` (locals drop in reverse order), so
+        // every leased program outlives every BatchJob borrowing it
+        let arena = RefCell::new(AppArena::default());
+        let ctl: Rc<RefCell<Vec<LaneCtl>>> = Rc::new(RefCell::new(Vec::new()));
+        let mut specs: Vec<BatchJob<'static>> = Vec::new();
+        let mut resumes: Vec<Option<ResumeState>> = Vec::new();
+        let (batch_index, finished) = {
+            let mut inner = self.shared.lock();
+            let batch_index = inner.metrics.batches as u32;
+            let mut cands: Vec<(u32, Option<ResumeState>)> = Vec::new();
+            let front = std::mem::take(&mut inner.resume_front);
+            for id in front {
+                let rs = inner.jobs[id as usize].resume.take();
+                cands.push((id, rs));
+            }
+            while cands.len() < batch_cap {
+                let Some(id) = inner.pop_next() else { break };
+                cands.push((id, None));
+            }
+            for (id, rs) in cands {
+                let Some(app) = build_admission(&mut inner, id, weighted) else { continue };
+                let spec = &inner.jobs[id as usize].spec;
+                let (max_iters, deadline, timeout) =
+                    (spec.max_iters, spec.deadline_passes, spec.timeout_ms);
+                specs.push(BatchJob { app: arena.borrow_mut().lease(app), max_iters });
+                resumes.push(rs);
+                ctl.borrow_mut().push(LaneCtl {
+                    id,
+                    admit_pass: 0,
+                    admitted_at: Instant::now(),
+                    deadline_pass: deadline,
+                    timeout: timeout.map(Duration::from_millis),
+                    verdict: None,
+                });
+            }
+            let finished = finished_records(&inner);
+            let depth = inner.depth();
+            inner.metrics.queue_depth = depth;
+            write_sidecar(&self.shared, &inner);
+            (batch_index, finished)
+        };
+        if specs.is_empty() {
+            return Ok(());
+        }
+
+        let writer = self.cfg.checkpoint.as_ref().map(|cfg| {
+            let prop = engine.property();
+            let roster: Vec<(u32, u32)> =
+                ctl.borrow().iter().map(|c| (c.id, c.admit_pass)).collect();
+            let meta = BatchMeta {
+                num_vertices: prop.num_vertices,
+                num_edges: prop.num_edges,
+                batch_index,
+                start: self.pass_base,
+                roster,
+                finished: finished.clone(),
+            };
+            CheckpointWriter::new(cfg.clone(), engine.disk().clone(), meta)
+                .with_base_pass(self.pass_base)
+        });
+        let mut observer = ServeObserver {
+            writer,
+            shared: Arc::clone(&self.shared),
+            ctl: Rc::clone(&ctl),
+        };
+        let stop_mode = observer.writer.is_some();
+        let mut arbiter = ServeArbiter {
+            shared: Arc::clone(&self.shared),
+            ctl: Rc::clone(&ctl),
+            stop_mode,
+        };
+
+        let shared = Arc::clone(&self.shared);
+        let ctl_in = Rc::clone(&ctl);
+        let arena_ref = &arena;
+        let intake = move |pass: u32, _running: usize| {
+            let mut out: Vec<BatchJob<'static>> = Vec::new();
+            let mut inner = shared.lock();
+            if inner.shutdown || SHUTDOWN.load(Ordering::Relaxed) {
+                return out;
+            }
+            let mut admitted = false;
+            while ctl_in.borrow().len() < batch_cap {
+                let Some(id) = inner.pop_next() else { break };
+                let Some(app) = build_admission(&mut inner, id, weighted) else { continue };
+                let spec = &inner.jobs[id as usize].spec;
+                let (max_iters, deadline, timeout) =
+                    (spec.max_iters, spec.deadline_passes, spec.timeout_ms);
+                out.push(BatchJob { app: arena_ref.borrow_mut().lease(app), max_iters });
+                ctl_in.borrow_mut().push(LaneCtl {
+                    id,
+                    admit_pass: pass,
+                    admitted_at: Instant::now(),
+                    deadline_pass: deadline.map(|d| pass.saturating_add(d)),
+                    timeout: timeout.map(Duration::from_millis),
+                    verdict: None,
+                });
+                admitted = true;
+            }
+            if admitted {
+                let depth = inner.depth();
+                inner.metrics.queue_depth = depth;
+                write_sidecar(&shared, &inner);
+            }
+            out
+        };
+
+        let opts = BatchOptions {
+            resume: resumes,
+            observer: Some(&mut observer),
+            arbiter: Some(&mut arbiter),
+        };
+        let ran = engine.run_jobs_with(&specs, intake, opts);
+        drop(specs);
+        arena.borrow_mut().reset();
+        let (outs, metrics) = ran.context("serve batch execution")?;
+
+        {
+            let mut inner = self.shared.lock();
+            let ctl_b = ctl.borrow();
+            debug_assert_eq!(ctl_b.len(), outs.len());
+            for (c, (values, run)) in ctl_b.iter().zip(outs) {
+                let status = if run.failed.is_some() {
+                    JobStatus::Failed
+                } else if run.evicted.is_some() {
+                    c.verdict.unwrap_or(JobStatus::Evicted)
+                } else if run.converged {
+                    JobStatus::Converged
+                } else {
+                    JobStatus::IterLimit
+                };
+                let job = &mut inner.jobs[c.id as usize];
+                job.iters = run.job.iterations;
+                job.note = run.failed.clone().or_else(|| run.evicted.clone());
+                job.values = Some(values);
+                job.status = status;
+                job.cancel = false;
+                let latency = job.submitted.elapsed();
+                job.latency = Some(latency);
+                let class = job.spec.priority.index();
+                match status {
+                    JobStatus::Failed => inner.metrics.failed += 1,
+                    JobStatus::Cancelled => inner.metrics.cancelled += 1,
+                    JobStatus::Expired => inner.metrics.expired += 1,
+                    JobStatus::Evicted => inner.metrics.evicted += 1,
+                    _ => {
+                        inner.metrics.completed += 1;
+                        let pc = &mut inner.metrics.per_class[class];
+                        pc.completed += 1;
+                        pc.total_latency += latency;
+                        pc.max_latency = pc.max_latency.max(latency);
+                    }
+                }
+            }
+            inner.metrics.batches += 1;
+            if let Some(w) = &observer.writer {
+                inner.metrics.checkpoints_written += u64::from(w.checkpoints_written);
+                inner.metrics.checkpoints_failed += u64::from(w.checkpoints_failed);
+            }
+            write_sidecar(&self.shared, &inner);
+        }
+        self.pass_base = self.pass_base.saturating_add(metrics.passes);
+        Ok(())
+    }
+
+    /// `--resume`: rebuild the job table from the sidecar, reattach lane
+    /// state from the newest valid checkpoint (unfinished lanes resume
+    /// mid-batch, bit-identically), and requeue everything else that
+    /// never finished.
+    fn restore(&mut self, engine: &mut VswEngine) -> Result<()> {
+        let Some(ckpt) = self.cfg.checkpoint.clone() else {
+            anyhow::bail!("serve --resume requires --checkpoint-dir");
+        };
+        let sidecar = ckpt.dir.join(SIDECAR_FILE);
+        let text = match std::fs::read_to_string(&sidecar) {
+            Ok(text) => text,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                eprintln!(
+                    "warning: no serve state at {} — starting fresh",
+                    sidecar.display()
+                );
+                return Ok(());
+            }
+            Err(e) => return Err(e).with_context(|| format!("read {}", sidecar.display())),
+        };
+        let outcome = checkpoint::load_latest(&ckpt.dir, engine.disk())?;
+        let num_vertices = engine.property().num_vertices;
+        let num_edges = engine.property().num_edges;
+
+        let mut inner = self.shared.lock();
+        anyhow::ensure!(
+            inner.jobs.is_empty(),
+            "serve --resume on a daemon that already holds jobs"
+        );
+        for (ln0, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (id, status, spec) = (|| -> Result<(u32, JobStatus, SubmitSpec)> {
+                let v = Json::parse(line)?;
+                let id = v.get("id").and_then(Json::as_u64).context("missing id")? as u32;
+                let name = v.get("status").and_then(Json::as_str).unwrap_or("queued");
+                let status = status_of_name(name)
+                    .with_context(|| format!("unknown status '{name}'"))?;
+                Ok((id, status, SubmitSpec::from_json(&v)?))
+            })()
+            .with_context(|| format!("{}:{}", sidecar.display(), ln0 + 1))?;
+            anyhow::ensure!(
+                id as usize == inner.jobs.len(),
+                "{}: job ids out of order (found {id}, expected {})",
+                sidecar.display(),
+                inner.jobs.len()
+            );
+            let mut job = ServeJob::new(spec);
+            job.status = status;
+            inner.jobs.push(job);
+        }
+
+        let restored = inner.jobs.len();
+        let mut resuming = 0usize;
+        if let Some((path, state)) = outcome.loaded {
+            anyhow::ensure!(
+                state.num_vertices == num_vertices && state.num_edges == num_edges,
+                "{}: checkpoint is for a {}-vertex/{}-edge graph, this dir has \
+                 {num_vertices}/{num_edges}",
+                path.display(),
+                state.num_vertices,
+                state.num_edges
+            );
+            self.pass_base = state.pass;
+            // results of jobs that finished before the interrupted batch
+            for rec in &state.finished {
+                if let Some(job) = inner.jobs.get_mut(rec.id as usize) {
+                    if job.status.is_terminal() {
+                        job.values = Some(rec.state.values.clone());
+                        job.iters = rec.state.iters_done;
+                    }
+                }
+            }
+            for rec in state.lanes {
+                let Some(job) = inner.jobs.get_mut(rec.id as usize) else {
+                    anyhow::bail!(
+                        "{}: checkpoint lane for unknown job {}",
+                        path.display(),
+                        rec.id
+                    );
+                };
+                if rec.state.done {
+                    // finished inside the interrupted batch
+                    job.status = if rec.state.failed.is_some() {
+                        JobStatus::Failed
+                    } else if rec.state.converged {
+                        JobStatus::Converged
+                    } else {
+                        JobStatus::IterLimit
+                    };
+                    job.note = rec.state.failed.clone();
+                    job.iters = rec.state.iters_done;
+                    job.values = Some(rec.state.values);
+                } else {
+                    job.status = JobStatus::Running;
+                    job.iters = rec.state.iters_done;
+                    job.resume = Some(rec.state);
+                    inner.resume_front.push(rec.id);
+                    resuming += 1;
+                }
+            }
+        } else if !outcome.rejected.is_empty() {
+            let err = checkpoint::NoValidCheckpoint {
+                dir: ckpt.dir.clone(),
+                rejected: outcome.rejected,
+            };
+            eprintln!("warning: {err} — continuing from the serve sidecar alone");
+        }
+
+        // everything else that never reached a keepable terminal state
+        // (queued, running without a lane, or shutdown-evicted with no
+        // checkpoint) starts over from the queue
+        let mut requeued = 0usize;
+        for id in 0..inner.jobs.len() {
+            if inner.jobs[id].resume.is_some() {
+                continue;
+            }
+            let st = inner.jobs[id].status;
+            if !matches!(st, JobStatus::Queued | JobStatus::Running | JobStatus::Evicted) {
+                continue;
+            }
+            let class = inner.jobs[id].spec.priority.index();
+            inner.jobs[id].status = JobStatus::Queued;
+            inner.jobs[id].cancel = false;
+            inner.queue[class].push_back(id as u32);
+            requeued += 1;
+        }
+        let depth = inner.depth();
+        inner.metrics.queue_depth = depth;
+        write_sidecar(&self.shared, &inner);
+        eprintln!(
+            "serve: restored {restored} job(s) — {resuming} resuming mid-batch, \
+             {requeued} requeued"
+        );
+        Ok(())
+    }
+}
+
+/// Accept loop on the daemon's Unix socket: one thread per connection,
+/// newline-delimited JSON in, one response line out per request.  Exits
+/// (and removes the socket file) shortly after the daemon stops.
+fn spawn_listener(
+    path: &Path,
+    handle: ServeHandle,
+) -> Result<std::thread::JoinHandle<()>> {
+    if path.exists() {
+        std::fs::remove_file(path)
+            .with_context(|| format!("remove stale socket {}", path.display()))?;
+    }
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create socket dir {}", parent.display()))?;
+        }
+    }
+    let listener = UnixListener::bind(path)
+        .with_context(|| format!("bind serve socket {}", path.display()))?;
+    listener
+        .set_nonblocking(true)
+        .context("serve socket nonblocking")?;
+    let path = path.to_path_buf();
+    Ok(std::thread::spawn(move || {
+        loop {
+            if handle.stopped() {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nonblocking(false);
+                    let conn_handle = handle.clone();
+                    std::thread::spawn(move || {
+                        let _ = serve_conn(stream, conn_handle);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => {
+                    eprintln!("warning: serve socket accept failed: {e}");
+                    break;
+                }
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }))
+}
+
+fn serve_conn(stream: UnixStream, handle: ServeHandle) -> std::io::Result<()> {
+    let reader = std::io::BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle.handle_line(&line);
+        out.write_all(resp.render().as_bytes())?;
+        out.write_all(b"\n")?;
+        out.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn daemon(queue_cap: usize) -> ServeDaemon {
+        ServeDaemon::new(ServeConfig { queue_cap, ..Default::default() })
+    }
+
+    fn spec(app: &str) -> SubmitSpec {
+        SubmitSpec { app: app.to_string(), ..Default::default() }
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_full() {
+        let d = daemon(2);
+        let h = d.handle();
+        assert_eq!(h.submit(spec("pagerank")), SubmitOutcome::Accepted(0));
+        assert_eq!(h.submit(spec("pagerank")), SubmitOutcome::Accepted(1));
+        match h.submit(spec("pagerank")) {
+            SubmitOutcome::Busy { retry_after_ms } => assert!(retry_after_ms > 0),
+            other => panic!("expected backpressure, got {other:?}"),
+        }
+        let m = h.metrics();
+        assert_eq!((m.submitted, m.rejected), (3, 1));
+        assert_eq!(m.queue_depth, 2);
+        assert_eq!(m.per_class[Priority::Normal.index()].submitted, 2);
+    }
+
+    #[test]
+    fn invalid_app_rejected_without_queueing() {
+        let d = daemon(8);
+        let h = d.handle();
+        match h.submit(spec("zap")) {
+            SubmitOutcome::Rejected(msg) => assert!(msg.contains("unknown app"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+        let m = h.metrics();
+        assert_eq!((m.rejected_invalid, m.queue_depth), (1, 0));
+    }
+
+    #[test]
+    fn cancel_queued_job_immediately() {
+        let d = daemon(8);
+        let h = d.handle();
+        assert_eq!(h.submit(spec("pagerank")), SubmitOutcome::Accepted(0));
+        assert_eq!(h.cancel(0), Some(JobStatus::Cancelled));
+        assert_eq!(h.status(0), Some(JobStatus::Cancelled));
+        assert!(JobStatus::Cancelled.is_terminal());
+        let m = h.metrics();
+        assert_eq!((m.cancelled, m.queue_depth), (1, 0));
+        assert_eq!(h.cancel(99), None, "unknown id");
+    }
+
+    #[test]
+    fn drain_rejects_new_submissions() {
+        let d = daemon(8);
+        let h = d.handle();
+        h.drain();
+        match h.submit(spec("pagerank")) {
+            SubmitOutcome::Rejected(msg) => assert!(msg.contains("draining"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn priority_classes_pop_high_first() {
+        let d = daemon(8);
+        let h = d.handle();
+        let mut low = spec("pagerank");
+        low.priority = Priority::Low;
+        let mut high = spec("pagerank");
+        high.priority = Priority::High;
+        assert_eq!(h.submit(low), SubmitOutcome::Accepted(0));
+        assert_eq!(h.submit(spec("pagerank")), SubmitOutcome::Accepted(1));
+        assert_eq!(h.submit(high), SubmitOutcome::Accepted(2));
+        let mut inner = d.shared.lock();
+        assert_eq!(inner.pop_next(), Some(2), "high first");
+        assert_eq!(inner.pop_next(), Some(1), "then normal");
+        assert_eq!(inner.pop_next(), Some(0), "then low");
+        assert_eq!(inner.pop_next(), None);
+    }
+
+    #[test]
+    fn wire_protocol_round_trip() {
+        let d = daemon(8);
+        let h = d.handle();
+        let resp = h.handle_line(r#"{"op":"submit","app":"pagerank","iters":3}"#);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(resp.get("id").and_then(Json::as_u64), Some(0));
+        let resp = h.handle_line(r#"{"op":"status","id":0}"#);
+        assert_eq!(resp.get("status").and_then(Json::as_str), Some("queued"));
+        let resp = h.handle_line(r#"{"op":"result","id":0}"#);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        let resp = h.handle_line(r#"{"op":"ping"}"#);
+        assert_eq!(resp.get("pong").and_then(Json::as_bool), Some(true));
+        let resp = h.handle_line("not json");
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        let resp = h.handle_line(r#"{"op":"metrics"}"#);
+        assert_eq!(resp.get("submitted").and_then(Json::as_u64), Some(1));
+    }
+
+    #[test]
+    fn sidecar_lines_round_trip_status() {
+        for st in [
+            JobStatus::Queued,
+            JobStatus::Running,
+            JobStatus::Converged,
+            JobStatus::IterLimit,
+            JobStatus::Failed,
+            JobStatus::Expired,
+            JobStatus::Cancelled,
+            JobStatus::Evicted,
+        ] {
+            assert_eq!(status_of_name(st.name()), Some(st));
+        }
+        assert_eq!(status_of_name("nope"), None);
+        let mut job = ServeJob::new(spec("ppr"));
+        job.status = JobStatus::Evicted;
+        let line = sidecar_line(7, &job);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("id").and_then(Json::as_u64), Some(7));
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("evicted"));
+        assert_eq!(SubmitSpec::from_json(&v).unwrap().app, "ppr");
+    }
+
+    #[test]
+    fn app_arena_leases_and_resets() {
+        let mut arena = AppArena::default();
+        let spec = spec("pagerank");
+        let app = arena.lease(spec.build_app().unwrap());
+        assert_eq!(app.name(), "pagerank");
+        assert_eq!(arena.leased.len(), 1);
+        arena.reset();
+        assert!(arena.leased.is_empty());
+    }
+}

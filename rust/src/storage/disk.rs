@@ -85,6 +85,9 @@ pub struct IoStats {
     pub sim_nanos: AtomicU64,
     /// Read attempts that failed and were retried (transient-error model).
     pub read_retries: AtomicU64,
+    /// Write attempts that failed and were retried (transient-error model;
+    /// only the durable checkpoint write path retries).
+    pub write_retries: AtomicU64,
 }
 
 /// Point-in-time snapshot of [`IoStats`].
@@ -96,6 +99,7 @@ pub struct IoSnapshot {
     pub write_ops: u64,
     pub sim_nanos: u64,
     pub read_retries: u64,
+    pub write_retries: u64,
 }
 
 impl IoSnapshot {
@@ -112,6 +116,7 @@ impl IoSnapshot {
             write_ops: self.write_ops - earlier.write_ops,
             sim_nanos: self.sim_nanos - earlier.sim_nanos,
             read_retries: self.read_retries - earlier.read_retries,
+            write_retries: self.write_retries - earlier.write_retries,
         }
     }
 }
@@ -132,7 +137,8 @@ impl Default for RetryPolicy {
     }
 }
 
-/// One injected read-failure rule, matched by path substring.
+/// One injected failure rule (read or write side), matched by path
+/// substring.
 #[derive(Clone, Debug)]
 struct FaultRule {
     substr: String,
@@ -148,6 +154,9 @@ struct FaultRule {
 #[derive(Debug, Default)]
 struct FaultPlan {
     rules: Mutex<Vec<FaultRule>>,
+    /// Separate rule list for the write side: checkpoint writes are
+    /// injectable independently of shard reads (PR 8 satellite).
+    write_rules: Mutex<Vec<FaultRule>>,
     policy: Mutex<RetryPolicy>,
 }
 
@@ -155,8 +164,17 @@ impl FaultPlan {
     /// Consult the plan for one read attempt of `path`.  Returns
     /// `Some(hard)` when the attempt must fail, updating rule state.
     fn take_fault(&self, path: &Path) -> Option<bool> {
+        Self::take_from(&self.rules, path)
+    }
+
+    /// Same, for one write attempt of `path`.
+    fn take_write_fault(&self, path: &Path) -> Option<bool> {
+        Self::take_from(&self.write_rules, path)
+    }
+
+    fn take_from(rules: &Mutex<Vec<FaultRule>>, path: &Path) -> Option<bool> {
         let s = path.to_string_lossy();
-        let mut rules = self.rules.lock().unwrap();
+        let mut rules = rules.lock().unwrap();
         for i in 0..rules.len() {
             if !s.contains(&rules[i].substr) {
                 continue;
@@ -213,6 +231,7 @@ impl Disk {
             write_ops: self.stats.write_ops.load(Ordering::Relaxed),
             sim_nanos: self.stats.sim_nanos.load(Ordering::Relaxed),
             read_retries: self.stats.read_retries.load(Ordering::Relaxed),
+            write_retries: self.stats.write_retries.load(Ordering::Relaxed),
         }
     }
 
@@ -223,6 +242,7 @@ impl Disk {
         self.stats.write_ops.store(0, Ordering::Relaxed);
         self.stats.sim_nanos.store(0, Ordering::Relaxed);
         self.stats.read_retries.store(0, Ordering::Relaxed);
+        self.stats.write_retries.store(0, Ordering::Relaxed);
     }
 
     /// Arm a transient fault: after `skip` successful read attempts of any
@@ -250,6 +270,36 @@ impl Disk {
 
     pub fn clear_read_faults(&self) {
         self.faults.rules.lock().unwrap().clear();
+    }
+
+    /// Arm a transient *write* fault: after `skip` successful write
+    /// attempts of any path containing `substr`, the next `count` attempts
+    /// fail.  The durable checkpoint write path retries under the same
+    /// [`RetryPolicy`] as reads, counted in [`IoStats::write_retries`].
+    pub fn inject_write_fault(&self, substr: &str, skip: u32, count: u32) {
+        assert!(count > 0, "transient fault needs count >= 1");
+        self.faults.write_rules.lock().unwrap().push(FaultRule {
+            substr: substr.to_string(),
+            skip,
+            remaining: Some(count),
+        });
+    }
+
+    /// Arm a hard write fault: after `skip` successful attempts, every
+    /// write of a matching path fails — exceeding any retry budget.  The
+    /// checkpoint writer absorbs this by skipping that checkpoint
+    /// ([`crate::runtime::checkpoint::CheckpointWriter`] bumps its
+    /// `checkpoints_failed` counter); the batch itself survives.
+    pub fn inject_hard_write_fault(&self, substr: &str, skip: u32) {
+        self.faults.write_rules.lock().unwrap().push(FaultRule {
+            substr: substr.to_string(),
+            skip,
+            remaining: None,
+        });
+    }
+
+    pub fn clear_write_faults(&self) {
+        self.faults.write_rules.lock().unwrap().clear();
     }
 
     pub fn set_retry_policy(&self, policy: RetryPolicy) {
@@ -296,6 +346,47 @@ impl Disk {
                     }
                     std::thread::sleep(policy.backoff_base * 2u32.saturating_pow(attempt.min(10)));
                     self.stats.read_retries.fetch_add(1, Ordering::Relaxed);
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    /// Run one logical write of `path` under the retry policy — the write
+    /// mirror of [`with_read_retries`](Self::with_read_retries).  Each
+    /// attempt first consults the write-fault plan, then runs `op`; failed
+    /// attempts are retried with exponential backoff, counted in
+    /// [`IoStats::write_retries`].  Only durable (checkpoint) writes come
+    /// through here: plain writes on the preprocessing path keep their
+    /// fail-fast semantics.
+    fn with_write_retries<T>(
+        &self,
+        path: &Path,
+        mut op: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
+        let policy = self.retry_policy();
+        let mut attempt: u32 = 0;
+        loop {
+            let res = match self.faults.take_write_fault(path) {
+                Some(hard) => Err(anyhow::anyhow!(
+                    "injected {} write fault: {}",
+                    if hard { "hard" } else { "transient" },
+                    path.display()
+                )),
+                None => op(),
+            };
+            match res {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if attempt >= policy.max_retries {
+                        return Err(e.context(format!(
+                            "write {} failed after {} attempt(s)",
+                            path.display(),
+                            attempt + 1
+                        )));
+                    }
+                    std::thread::sleep(policy.backoff_base * 2u32.saturating_pow(attempt.min(10)));
+                    self.stats.write_retries.fetch_add(1, Ordering::Relaxed);
                     attempt += 1;
                 }
             }
@@ -363,15 +454,21 @@ impl Disk {
 
     /// Durable write for checkpoint artifacts: write, fsync the file, then
     /// fsync the parent directory so the new entry itself survives a crash.
+    /// Transient failures (injected or real) are retried with backoff under
+    /// the [`RetryPolicy`]; a hard failure surfaces to the caller (the
+    /// checkpoint writer skips that checkpoint and keeps serving).
     pub fn write_file_durable(&self, path: &Path, bytes: &[u8]) -> Result<()> {
         use std::io::Write;
-        if let Some(parent) = path.parent() {
-            fs::create_dir_all(parent)?;
-        }
-        let mut f =
-            fs::File::create(path).with_context(|| format!("write {}", path.display()))?;
-        f.write_all(bytes).with_context(|| format!("write {}", path.display()))?;
-        f.sync_all().with_context(|| format!("fsync {}", path.display()))?;
+        self.with_write_retries(path, || {
+            if let Some(parent) = path.parent() {
+                fs::create_dir_all(parent)?;
+            }
+            let mut f =
+                fs::File::create(path).with_context(|| format!("write {}", path.display()))?;
+            f.write_all(bytes).with_context(|| format!("write {}", path.display()))?;
+            f.sync_all().with_context(|| format!("fsync {}", path.display()))?;
+            Ok(())
+        })?;
         self.account_write(bytes.len() as u64);
         if let Some(parent) = path.parent() {
             sync_dir(parent)?;
@@ -595,6 +692,46 @@ mod tests {
         disk.write_file_durable(&p, b"durable").unwrap();
         assert_eq!(disk.read_file(&p).unwrap(), b"durable");
         assert_eq!(disk.snapshot().bytes_written, 7);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn transient_write_fault_retried_then_succeeds() {
+        let dir = std::env::temp_dir().join("graphmp_disk_wtransient_test");
+        let _ = fs::remove_dir_all(&dir);
+        let disk = Disk::unthrottled();
+        fast_retry(&disk);
+        let p = dir.join("wflaky.bin");
+        disk.inject_write_fault("wflaky.bin", 0, 2);
+        disk.write_file_durable(&p, b"survives").unwrap();
+        assert_eq!(disk.read_file(&p).unwrap(), b"survives");
+        assert_eq!(disk.snapshot().write_retries, 2);
+        // rule exhausted: next write is clean
+        disk.write_file_durable(&p, b"clean").unwrap();
+        assert_eq!(disk.snapshot().write_retries, 2);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn hard_write_fault_exhausts_retry_budget() {
+        let dir = std::env::temp_dir().join("graphmp_disk_whard_test");
+        let _ = fs::remove_dir_all(&dir);
+        let disk = Disk::unthrottled();
+        fast_retry(&disk);
+        let p = dir.join("wdead.bin");
+        disk.inject_hard_write_fault("wdead.bin", 0);
+        let err = disk.write_file_durable(&p, b"x").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected hard write fault"), "{msg}");
+        assert!(msg.contains("after 4 attempt(s)"), "{msg}");
+        assert_eq!(disk.snapshot().write_retries, 3);
+        assert_eq!(disk.snapshot().bytes_written, 0, "failed write not metered");
+        disk.clear_write_faults();
+        disk.write_file_durable(&p, b"x").unwrap();
+        // write faults never bleed into the read side
+        disk.inject_write_fault("wdead.bin", 0, 1);
+        assert_eq!(disk.read_file(&p).unwrap(), b"x");
+        assert_eq!(disk.snapshot().read_retries, 0);
         fs::remove_dir_all(&dir).unwrap();
     }
 

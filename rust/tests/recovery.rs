@@ -112,7 +112,13 @@ fn jobset_kill_resume_bit_identical_vsw() {
     // crash at pass boundary 5; checkpoints every 2 passes → last good
     // checkpoint is pass 4, with ppr9 still pending and widest unqueued
     let ckdir = fresh_dir("graphmp_rec_ckpt_jobset");
-    let crash = CheckpointConfig { dir: ckdir.clone(), every: 2, keep: 2, kill_at_pass: Some(5) };
+    let crash = CheckpointConfig {
+        dir: ckdir.clone(),
+        every: 2,
+        every_secs: None,
+        keep: 2,
+        kill_at_pass: Some(5),
+    };
     let mut killed = JobSet::with_batch_cap(4);
     submit_roster(&mut killed);
     let err = killed
@@ -266,7 +272,13 @@ fn exec_kill_resume_bit_identical_interval_engine() {
         roster: vec![(0, 0), (1, 0)],
         finished: Vec::new(),
     };
-    let crash = CheckpointConfig { dir: dir.clone(), every: 2, keep: 2, kill_at_pass: Some(4) };
+    let crash = CheckpointConfig {
+        dir: dir.clone(),
+        every: 2,
+        every_secs: None,
+        keep: 2,
+        kill_at_pass: Some(4),
+    };
     let mut writer = CheckpointWriter::new(crash, disk.clone(), meta());
     let err = ExecCore::new(exec_cfg(false), &disk, None)
         .run_batch_with(
@@ -275,7 +287,7 @@ fn exec_kill_resume_bit_identical_interval_engine() {
             n,
             &inv,
             |_, _| Vec::new(),
-            BatchOptions { resume: Vec::new(), observer: Some(&mut writer) },
+            BatchOptions { resume: Vec::new(), observer: Some(&mut writer), arbiter: None },
         )
         .unwrap_err();
     assert!(format!("{err:#}").contains("injected crash"), "{err:#}");
@@ -298,7 +310,7 @@ fn exec_kill_resume_bit_identical_interval_engine() {
             n,
             &inv,
             |_, _| Vec::new(),
-            BatchOptions { resume, observer: Some(&mut writer2) },
+            BatchOptions { resume, observer: Some(&mut writer2), arbiter: None },
         )
         .unwrap();
 
@@ -331,7 +343,13 @@ fn corrupt_checkpoint_falls_back_then_errors_when_none_valid() {
 
     // checkpoint every pass, crash at 5: retention keeps passes 4 and 5
     let ckdir = fresh_dir("graphmp_rec_ckpt_corrupt");
-    let crash = CheckpointConfig { dir: ckdir.clone(), every: 1, keep: 2, kill_at_pass: Some(5) };
+    let crash = CheckpointConfig {
+        dir: ckdir.clone(),
+        every: 1,
+        every_secs: None,
+        keep: 2,
+        kill_at_pass: Some(5),
+    };
     let mut killed = JobSet::new();
     killed.submit(spec("pr", Box::new(PageRank::new()), 10));
     killed.submit(spec("sssp", Box::new(Sssp::new(0)), 100));
@@ -529,6 +547,83 @@ fn compute_fault_isolated_at_exec_level() {
         ref_outs[0].0,
         "survivor bit-identical to a batch never containing the failed job"
     );
+}
+
+// ---------------------------------------------------------------------
+// fault injection on the checkpoint WRITE path (PR 8): transient faults
+// are retried invisibly; hard faults skip that checkpoint (counted in
+// `checkpoints_failed`) while the batch itself survives
+// ---------------------------------------------------------------------
+
+#[test]
+fn transient_checkpoint_write_faults_retried_invisibly() {
+    let (dir, disk) = prep_graph("wtransient");
+
+    let mut base = JobSet::new();
+    let b_pr = base.submit(spec("pr", Box::new(PageRank::new()), 10));
+    base.run_all(&mut engine(&dir, &disk, CacheMode::M1Raw)).unwrap();
+    let s_pr = base.status(b_pr);
+    let v_pr = base.take_values(b_pr).unwrap();
+
+    // every checkpoint file goes through the durable write path into a
+    // `.tmp_ckpt_*` staging dir; fail the first two attempts there
+    let d2 = Disk::unthrottled();
+    let ckdir = fresh_dir("graphmp_rec_ckpt_wtransient");
+    let cfg = CheckpointConfig::new(ckdir.clone(), 2);
+    d2.inject_write_fault(".tmp_ckpt", 1, 2);
+    let mut set = JobSet::new();
+    let r_pr = set.submit(spec("pr", Box::new(PageRank::new()), 10));
+    let report = set.run_all_checkpointed(&mut engine(&dir, &d2, CacheMode::M1Raw), &cfg).unwrap();
+
+    assert_eq!(set.status(r_pr), s_pr);
+    assert_eq!(set.take_values(r_pr).unwrap(), v_pr, "retried writes must not change results");
+    assert_eq!(d2.snapshot().write_retries, 2, "each transient fault costs exactly one retry");
+    assert_eq!(report.aggregate().checkpoints_failed, 0, "retries absorb transient faults");
+    assert!(report.aggregate().checkpoints_written > 0);
+    assert!(!kept_checkpoints(&ckdir).is_empty(), "checkpoints landed despite the faults");
+}
+
+#[test]
+fn hard_checkpoint_write_fault_skips_checkpoint_batch_survives() {
+    let (dir, disk) = prep_graph("whard");
+
+    let mut base = JobSet::new();
+    let b_pr = base.submit(spec("pr", Box::new(PageRank::new()), 10));
+    let b_ss = base.submit(spec("sssp", Box::new(Sssp::new(0)), 100));
+    base.run_all(&mut engine(&dir, &disk, CacheMode::M1Raw)).unwrap();
+    let (s_pr, s_ss) = (base.status(b_pr), base.status(b_ss));
+    let v_pr = base.take_values(b_pr).unwrap();
+    let v_ss = base.take_values(b_ss).unwrap();
+
+    // let the pass-2 checkpoint land, then fail every later staging write
+    // hard: each due checkpoint is skipped with a warning, the batch runs
+    // to completion on the pass-2 checkpoint's recovery granularity
+    let d2 = Disk::unthrottled();
+    let ckdir = fresh_dir("graphmp_rec_ckpt_whard");
+    let cfg = CheckpointConfig::new(ckdir.clone(), 2);
+    let first_ckpt_files = 3; // job_000.bin + job_001.bin + MANIFEST
+    d2.inject_hard_write_fault(".tmp_ckpt", first_ckpt_files);
+    let mut set = JobSet::new();
+    let r_pr = set.submit(spec("pr", Box::new(PageRank::new()), 10));
+    let r_ss = set.submit(spec("sssp", Box::new(Sssp::new(0)), 100));
+    let report = set.run_all_checkpointed(&mut engine(&dir, &d2, CacheMode::M1Raw), &cfg).unwrap();
+
+    let agg = report.aggregate();
+    assert_eq!(agg.checkpoints_written, 1, "only the pre-fault checkpoint landed");
+    assert!(agg.checkpoints_failed >= 1, "later checkpoints were skipped, not fatal");
+    assert_eq!(set.status(r_pr), s_pr, "status must match the fault-free run");
+    assert_eq!(set.status(r_ss), s_ss, "status must match the fault-free run");
+    assert_eq!(set.take_values(r_pr).unwrap(), v_pr, "results unaffected by skipped checkpoints");
+    assert_eq!(set.take_values(r_ss).unwrap(), v_ss);
+    let kept = kept_checkpoints(&ckdir);
+    assert_eq!(kept.len(), 1, "the good pass-2 checkpoint survives: {kept:?}");
+    assert!(kept[0].ends_with("ckpt_000002"), "{}", kept[0].display());
+
+    // and that surviving checkpoint is still a valid recovery point
+    d2.clear_write_faults();
+    let outcome = checkpoint::load_latest(&ckdir, &d2).unwrap();
+    let (path, state) = outcome.loaded.expect("pass-2 checkpoint loads cleanly");
+    assert_eq!(state.pass, 2, "{}", path.display());
 }
 
 // ---------------------------------------------------------------------

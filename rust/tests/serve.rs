@@ -1,0 +1,408 @@
+//! Serving-daemon gate (PR 8): `graphmp serve` semantics that must hold
+//! release after release.
+//!
+//! - A drained daemon's per-job results are **bit-identical** to solo
+//!   runs of the same queries — batching, admission order, and priority
+//!   classes must never leak into results.
+//! - A daemon killed mid-batch (checkpoint kill hook) comes back with
+//!   `--resume` and finishes every job bit-identically to a daemon that
+//!   was never interrupted.
+//! - Deadline/timeout evictions surface as `Expired` with the exact
+//!   lane-snapshot state (an eviction after k passes equals a solo
+//!   k-iteration run) and leave the other lanes bit-identical to solo.
+//! - A flooded bounded queue answers backpressure (busy + retry hint)
+//!   instead of growing; a drain or shutdown request exits cleanly.
+//!
+//! Runs in debug and `--release` in CI (the f32 kernel paths are
+//! codegen-sensitive).
+
+use std::path::PathBuf;
+
+use graphmp::apps::{PageRank, Ppr};
+use graphmp::compress::CacheMode;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::rmat::{rmat, RmatParams};
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::runtime::checkpoint::CheckpointConfig;
+use graphmp::runtime::jobs::JobStatus;
+use graphmp::runtime::protocol::{self, Json, Priority, SubmitSpec};
+use graphmp::runtime::serve::{ServeConfig, ServeDaemon, SubmitOutcome, SIDECAR_FILE};
+use graphmp::storage::disk::Disk;
+use graphmp::storage::GraphDir;
+
+fn prep_graph(name: &str) -> (GraphDir, Disk) {
+    let g = rmat(10, 14_000, 2026, RmatParams::default());
+    let root = std::env::temp_dir().join(format!("graphmp_serve_{name}"));
+    let _ = std::fs::remove_dir_all(&root);
+    let disk = Disk::unthrottled();
+    let cfg = PrepConfig {
+        edges_per_shard: 2048,
+        max_rows_per_shard: 512,
+        weighted: true,
+        ..Default::default()
+    };
+    let (dir, _) = preprocess_into(&g, &root, &disk, cfg).unwrap();
+    (dir, disk)
+}
+
+fn engine(dir: &GraphDir, disk: &Disk) -> VswEngine {
+    let cfg = EngineConfig {
+        workers: 4,
+        prefetch_depth: 3,
+        prefetch_threads: 2,
+        cache_mode: Some(CacheMode::M1Raw),
+        cache_capacity: 64 << 20,
+        active_threshold: 0.05,
+        ..Default::default()
+    };
+    VswEngine::open(dir, disk, cfg).unwrap()
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn spec(app: &str, iters: u32) -> SubmitSpec {
+    SubmitSpec { app: app.to_string(), max_iters: iters, ..Default::default() }
+}
+
+fn accept(out: SubmitOutcome) -> u32 {
+    match out {
+        SubmitOutcome::Accepted(id) => id,
+        other => panic!("expected Accepted, got {other:?}"),
+    }
+}
+
+fn finish_status(converged: bool) -> JobStatus {
+    if converged {
+        JobStatus::Converged
+    } else {
+        JobStatus::IterLimit
+    }
+}
+
+// ---------------------------------------------------------------------
+// drain: accepted jobs complete bit-identically to solo runs, exit clean
+// ---------------------------------------------------------------------
+
+#[test]
+fn drained_daemon_matches_solo_runs_bit_identically() {
+    let (dir, disk) = prep_graph("drain");
+    let (v_pr, r_pr) = engine(&dir, &disk).run_to_values(&PageRank::new(), 8).unwrap();
+    let (v_ppr, r_ppr) = engine(&dir, &disk).run_to_values(&Ppr::new(3), 8).unwrap();
+
+    let mut daemon = ServeDaemon::new(ServeConfig::default());
+    let h = daemon.handle();
+    let pr = accept(h.submit(spec("pagerank", 8)));
+    let mut s = spec("ppr", 8);
+    s.source = 3;
+    s.priority = Priority::High;
+    let ppr = accept(h.submit(s));
+    h.drain();
+    let summary = daemon.run(&mut engine(&dir, &disk)).unwrap();
+
+    assert_eq!(h.status(pr), Some(finish_status(r_pr.converged)));
+    assert_eq!(h.status(ppr), Some(finish_status(r_ppr.converged)));
+    assert_eq!(h.values(pr).unwrap(), v_pr, "served pagerank bit-identical to solo");
+    assert_eq!(h.values(ppr).unwrap(), v_ppr, "served ppr bit-identical to solo");
+    let m = &summary.metrics;
+    assert_eq!((m.submitted, m.admitted, m.completed), (2, 2, 2));
+    assert_eq!(m.batches, 1, "both founders share one scan-shared batch");
+    assert_eq!(m.per_class[Priority::High.index()].completed, 1);
+    assert!(m.per_class[Priority::High.index()].max_latency.as_nanos() > 0);
+}
+
+// ---------------------------------------------------------------------
+// kill mid-batch + serve --resume: bit-identical to the uninterrupted
+// daemon (checkpoint restores the in-flight batch, sidecar the queue)
+// ---------------------------------------------------------------------
+
+#[test]
+fn serve_kill_and_resume_bit_identical() {
+    let (dir, disk) = prep_graph("resume");
+
+    let submit_all = |h: &graphmp::runtime::ServeHandle| -> [u32; 3] {
+        let mut ppr = spec("ppr", 9);
+        ppr.source = 3;
+        [
+            accept(h.submit(spec("pagerank", 10))),
+            accept(h.submit(ppr)),
+            accept(h.submit(spec("sssp", 100))),
+        ]
+    };
+
+    // ground truth: the same submissions on a daemon that never dies
+    let mut base = ServeDaemon::new(ServeConfig::default());
+    let hb = base.handle();
+    let ids = submit_all(&hb);
+    hb.drain();
+    base.run(&mut engine(&dir, &disk)).unwrap();
+    let want: Vec<(JobStatus, Vec<f32>)> = ids
+        .iter()
+        .map(|&id| (hb.status(id).unwrap(), hb.values(id).unwrap()))
+        .collect();
+
+    // checkpoint every 2 passes, crash at boundary 5 → last good
+    // checkpoint is pass 4 with all three lanes mid-flight
+    let ckdir = fresh_dir("graphmp_serve_ck_resume");
+    let mut crash = CheckpointConfig::new(ckdir.clone(), 2);
+    crash.kill_at_pass = Some(5);
+    let mut killed = ServeDaemon::new(ServeConfig {
+        checkpoint: Some(crash),
+        ..Default::default()
+    });
+    let hk = killed.handle();
+    submit_all(&hk);
+    hk.drain();
+    let err = killed.run(&mut engine(&dir, &disk)).unwrap_err();
+    assert!(format!("{err:#}").contains("injected crash at pass boundary 5"), "{err:#}");
+    assert!(ckdir.join("ckpt_000004").join("MANIFEST").exists());
+    assert!(ckdir.join(SIDECAR_FILE).exists(), "queue roster persisted alongside");
+
+    // a fresh daemon with --resume: no resubmission — the queue and the
+    // in-flight batch come back from the sidecar + checkpoint
+    let mut resumed = ServeDaemon::new(ServeConfig {
+        checkpoint: Some(CheckpointConfig::new(ckdir, 2)),
+        resume: true,
+        ..Default::default()
+    });
+    let hr = resumed.handle();
+    hr.drain();
+    let summary = resumed.run(&mut engine(&dir, &disk)).unwrap();
+    for (&id, (status, values)) in ids.iter().zip(&want) {
+        assert_eq!(hr.status(id), Some(*status), "job {id} status after kill+resume");
+        assert_eq!(
+            hr.values(id).as_ref(),
+            Some(values),
+            "job {id} values must be bit-identical after kill+resume"
+        );
+    }
+    assert_eq!(summary.metrics.completed, 3);
+    assert!(summary.metrics.checkpoints_written > 0, "resumed daemon keeps checkpointing");
+}
+
+// ---------------------------------------------------------------------
+// deadline + timeout evictions: exact lane-snapshot state, no collateral
+// ---------------------------------------------------------------------
+
+#[test]
+fn deadline_eviction_is_exact_and_leaves_others_bit_identical() {
+    let (dir, disk) = prep_graph("deadline");
+    let (v_pr, r_pr) = engine(&dir, &disk).run_to_values(&PageRank::new(), 12).unwrap();
+    // a lane evicted at boundary 3 has run exactly 3 passes — the PR 6
+    // lane snapshot makes it equal to a solo 3-iteration run
+    let (v_ppr3, _) = engine(&dir, &disk).run_to_values(&Ppr::new(7), 3).unwrap();
+
+    let mut daemon = ServeDaemon::new(ServeConfig::default());
+    let h = daemon.handle();
+    let pr = accept(h.submit(spec("pagerank", 12)));
+    let mut dl = spec("ppr", 12);
+    dl.source = 7;
+    dl.deadline_passes = Some(3);
+    let ppr = accept(h.submit(dl));
+    let mut to = spec("pagerank", 12);
+    to.timeout_ms = Some(0);
+    let timed = accept(h.submit(to));
+    h.drain();
+    let summary = daemon.run(&mut engine(&dir, &disk)).unwrap();
+
+    assert_eq!(h.status(ppr), Some(JobStatus::Expired));
+    let note = h.note(ppr).unwrap();
+    assert!(note.contains("deadline of 3 passes exceeded"), "{note}");
+    assert_eq!(h.values(ppr).unwrap(), v_ppr3, "evicted lane equals the solo 3-iter run");
+
+    // a zero wall-clock budget expires at the very first boundary
+    assert_eq!(h.status(timed), Some(JobStatus::Expired));
+    let note = h.note(timed).unwrap();
+    assert!(note.contains("wall-clock timeout"), "{note}");
+
+    assert_eq!(h.status(pr), Some(finish_status(r_pr.converged)));
+    assert_eq!(h.values(pr).unwrap(), v_pr, "survivor bit-identical to its solo run");
+    let m = &summary.metrics;
+    assert_eq!((m.expired, m.completed), (2, 1));
+}
+
+// ---------------------------------------------------------------------
+// backpressure: a flooded bounded queue rejects with a retry hint, the
+// accepted prefix still drains to completion
+// ---------------------------------------------------------------------
+
+#[test]
+fn flooded_queue_backpressures_then_drains() {
+    let (dir, disk) = prep_graph("flood");
+    let mut daemon = ServeDaemon::new(ServeConfig { queue_cap: 4, ..Default::default() });
+    let h = daemon.handle();
+
+    let mut accepted = Vec::new();
+    let mut busy = 0u32;
+    for i in 0..10 {
+        let resp =
+            h.handle_line(&format!(r#"{{"op":"submit","app":"ppr","source":{i},"iters":4}}"#));
+        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+            accepted.push(resp.get("id").and_then(Json::as_u64).unwrap() as u32);
+        } else {
+            assert_eq!(resp.get("busy").and_then(Json::as_bool), Some(true));
+            assert!(resp.get("retry_after_ms").and_then(Json::as_u64).unwrap() > 0);
+            busy += 1;
+        }
+    }
+    assert_eq!(accepted.len(), 4, "bounded queue admits exactly its capacity");
+    assert_eq!(busy, 6, "overflow answered with backpressure, not growth");
+
+    h.drain();
+    let summary = daemon.run(&mut engine(&dir, &disk)).unwrap();
+    let m = &summary.metrics;
+    assert_eq!((m.submitted, m.rejected, m.completed), (10, 6, 4));
+    for &id in &accepted {
+        assert!(h.status(id).unwrap().is_terminal(), "job {id} drained");
+    }
+
+    // wire-level result: the crc matches the actual value bits
+    let id = accepted[0];
+    let resp = h.handle_line(&format!(r#"{{"op":"result","id":{id}}}"#));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    let crc = resp.get("values_crc").and_then(Json::as_str).unwrap().to_string();
+    let want = format!("{:08x}", protocol::values_crc(&h.values(id).unwrap()));
+    assert_eq!(crc, want, "wire crc must match the value bits");
+}
+
+// ---------------------------------------------------------------------
+// graceful shutdown: exits 0-style (Ok) immediately, keeps queued work
+// ---------------------------------------------------------------------
+
+#[test]
+fn shutdown_request_exits_cleanly_and_keeps_queued_jobs() {
+    let (dir, disk) = prep_graph("shutdown");
+    let mut daemon = ServeDaemon::new(ServeConfig::default());
+    let h = daemon.handle();
+    let id = accept(h.submit(spec("pagerank", 5)));
+    h.request_shutdown();
+    let summary = daemon.run(&mut engine(&dir, &disk)).unwrap();
+
+    assert_eq!(h.status(id), Some(JobStatus::Queued), "queued job survives the shutdown");
+    assert_eq!(summary.metrics.completed, 0);
+    match h.submit(spec("pagerank", 5)) {
+        SubmitOutcome::Rejected(msg) => assert!(msg.contains("draining"), "{msg}"),
+        other => panic!("post-shutdown submit must be rejected, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// mid-batch shutdown: the batch freezes at a boundary (forced
+// checkpoint), and --resume finishes it bit-identically
+// ---------------------------------------------------------------------
+
+#[test]
+fn mid_batch_shutdown_freezes_and_resume_completes_bit_identically() {
+    let (dir, disk) = prep_graph("freeze");
+    let (v_solo, r_solo) = engine(&dir, &disk).run_to_values(&PageRank::new(), 40).unwrap();
+
+    let ckdir = fresh_dir("graphmp_serve_ck_freeze");
+    let mut daemon = ServeDaemon::new(ServeConfig {
+        checkpoint: Some(CheckpointConfig::new(ckdir.clone(), 2)),
+        ..Default::default()
+    });
+    let h = daemon.handle();
+    let id = accept(h.submit(spec("pagerank", 40)));
+    // shut down as soon as the job is running: with checkpointing on, the
+    // arbiter freezes the batch at the next pass boundary
+    let watcher = {
+        let h = h.clone();
+        std::thread::spawn(move || loop {
+            match h.status(id) {
+                // also fires if the batch outran us: a post-batch shutdown
+                // just makes the idle daemon exit
+                Some(JobStatus::Running) | None => {
+                    h.request_shutdown();
+                    return;
+                }
+                Some(s) if s.is_terminal() => {
+                    h.request_shutdown();
+                    return;
+                }
+                _ => std::thread::sleep(std::time::Duration::from_millis(1)),
+            }
+        })
+    };
+    let summary = daemon.run(&mut engine(&dir, &disk)).unwrap();
+    watcher.join().unwrap();
+
+    if h.status(id) == Some(JobStatus::Evicted) {
+        let note = h.note(id).unwrap();
+        assert!(note.contains("batch stopped at pass boundary"), "{note}");
+        assert!(summary.metrics.evicted >= 1);
+        // frozen mid-flight: a --resume daemon picks the lane back up and
+        // finishes bit-identically to the uninterrupted solo run
+        let mut resumed = ServeDaemon::new(ServeConfig {
+            checkpoint: Some(CheckpointConfig::new(ckdir, 2)),
+            resume: true,
+            ..Default::default()
+        });
+        let hr = resumed.handle();
+        hr.drain();
+        resumed.run(&mut engine(&dir, &disk)).unwrap();
+        assert_eq!(hr.status(id), Some(finish_status(r_solo.converged)));
+        assert_eq!(hr.values(id).unwrap(), v_solo, "frozen lane completes bit-identically");
+    } else {
+        // the batch outran the shutdown flag — then it must have finished
+        // normally, with solo-identical values
+        assert_eq!(h.status(id), Some(finish_status(r_solo.converged)));
+        assert_eq!(h.values(id).unwrap(), v_solo);
+    }
+}
+
+// ---------------------------------------------------------------------
+// the Unix socket end to end: connect, submit, drain, clean exit
+// ---------------------------------------------------------------------
+
+#[test]
+fn unix_socket_serves_submissions_end_to_end() {
+    let (dir, disk) = prep_graph("socket");
+    let sock = std::env::temp_dir().join("graphmp_serve_test.sock");
+    let _ = std::fs::remove_file(&sock);
+    let mut daemon = ServeDaemon::new(ServeConfig {
+        socket: Some(sock.clone()),
+        ..Default::default()
+    });
+    let h = daemon.handle();
+
+    let client = {
+        let sock = sock.clone();
+        std::thread::spawn(move || -> Vec<String> {
+            use std::io::{BufRead, BufReader, Write};
+            let stream = loop {
+                match std::os::unix::net::UnixStream::connect(&sock) {
+                    Ok(s) => break s,
+                    Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                }
+            };
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut out = stream;
+            let mut lines = Vec::new();
+            for req in [
+                r#"{"op":"ping"}"#,
+                r#"{"op":"submit","app":"pagerank","iters":3,"priority":"high"}"#,
+                r#"{"op":"drain"}"#,
+            ] {
+                out.write_all(req.as_bytes()).unwrap();
+                out.write_all(b"\n").unwrap();
+                out.flush().unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                lines.push(line.trim().to_string());
+            }
+            lines
+        })
+    };
+
+    let summary = daemon.run(&mut engine(&dir, &disk)).unwrap();
+    let lines = client.join().unwrap();
+    assert!(lines[0].contains("pong"), "{lines:?}");
+    assert!(lines[1].contains(r#""id":0"#), "{lines:?}");
+    assert!(lines[2].contains("draining"), "{lines:?}");
+    assert_eq!(summary.metrics.completed, 1);
+    assert!(h.status(0).unwrap().is_terminal());
+    assert!(!sock.exists(), "socket file removed on exit");
+}

@@ -94,6 +94,7 @@ impl BaselineConfig {
             prefetch_depth: self.prefetch_depth,
             prefetch_auto: false,
             prefetch_threads: self.prefetch_threads,
+            io_depth: 64,
             // the baselines model batch-free systems; the fan-out only
             // engages in scan-shared batches, which they never run
             fan_out: false,

@@ -87,9 +87,14 @@ pub struct EngineConfig {
     /// decode-vs-compute rate (CLI: `--prefetch-depth auto`);
     /// `prefetch_depth` then only seeds the first iteration.
     pub prefetch_auto: bool,
-    /// Dedicated I/O threads feeding the ready queue; 1–2 is enough to
-    /// keep the (simulated) disk continuously busy.
+    /// Dedicated I/O threads feeding the ready queue.  1–2 keeps the
+    /// simulated disk busy; real backends (`--io-backend direct`) profit
+    /// from more, up to the backend's submission depth.
     pub prefetch_threads: usize,
+    /// In-flight read budget for the shard pipeline (CLI: `--io-depth`).
+    /// 0 inherits the disk backend's submission depth (64 for the
+    /// simulated disk, the configured ring depth for direct I/O).
+    pub io_depth: usize,
     /// Byte budget for the decoded pool: parsed shards of compressed
     /// cache entries memoized under LRU eviction (decode-once hot path).
     /// 0 disables the memo; the prefetcher still decodes each scheduled
@@ -120,6 +125,7 @@ impl Default for EngineConfig {
             prefetch_depth: exec.prefetch_depth,
             prefetch_auto: exec.prefetch_auto,
             prefetch_threads: exec.prefetch_threads,
+            io_depth: 0,
             decode_memo_budget: 256 * 1024 * 1024,
             fan_out: exec.fan_out,
             isolate_failures: exec.isolate_failures,
@@ -168,8 +174,13 @@ impl VswEngine {
         };
         cache.set_decode_memo_budget(cfg.decode_memo_budget);
         // steady state keeps ≤ workers + prefetch_depth shard buffers in
-        // flight; idle capacity beyond that would be dead RAM
-        let buf_pool = BufPool::new(cfg.workers + cfg.prefetch_depth.max(1));
+        // flight; idle capacity beyond that would be dead RAM.  The pool
+        // inherits the disk backend's alignment so direct-I/O reads get
+        // block-aligned recycled buffers for free.
+        let buf_pool = BufPool::with_alignment(
+            cfg.workers + cfg.prefetch_depth.max(1),
+            disk.alignment(),
+        );
         Ok(VswEngine {
             dir: dir.clone(),
             disk: disk.clone(),
@@ -345,6 +356,11 @@ impl VswEngine {
             prefetch_depth: self.cfg.prefetch_depth,
             prefetch_auto: self.cfg.prefetch_auto,
             prefetch_threads: self.cfg.prefetch_threads,
+            io_depth: if self.cfg.io_depth == 0 {
+                self.disk.submission_depth()
+            } else {
+                self.cfg.io_depth
+            },
             fan_out: self.cfg.fan_out,
             isolate_failures: self.cfg.isolate_failures,
         };

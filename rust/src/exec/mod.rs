@@ -84,9 +84,18 @@ pub struct ExecConfig {
     /// load-vs-compute rate of the previous one (`prefetch_depth` then
     /// only seeds iteration 0).
     pub prefetch_auto: bool,
-    /// Dedicated I/O threads feeding the ready queue; 1–2 is enough to
-    /// keep the (simulated) disk continuously busy.
+    /// Dedicated I/O threads feeding the ready queue.  1–2 is enough to
+    /// keep the *simulated* disk continuously busy (its cost model is
+    /// depth-independent); a real backend rewards fan-in up to its
+    /// submission depth, so arbitrary N is honored here and clamped to
+    /// [`io_depth`](Self::io_depth) at pass setup (PR 9 — lifts the PR 1
+    /// doc-level 1–2 cap).
     pub prefetch_threads: usize,
+    /// The I/O backend's sustained submission depth (from
+    /// [`Disk::submission_depth`]): upper bound for both the I/O thread
+    /// fan-in and the adaptive prefetch depth.  Engines fill this from
+    /// the disk they open; the default matches the sim backend.
+    pub io_depth: usize,
     /// Split (unit × job) sub-tasks of a scan-shared pass across idle
     /// workers when the union worklist is shorter than the worker pool
     /// (jobs ≫ units).  Results are bit-identical either way; off means
@@ -112,6 +121,7 @@ impl Default for ExecConfig {
             prefetch_depth: 4,
             prefetch_auto: false,
             prefetch_threads: 2,
+            io_depth: 64,
             fan_out: true,
             isolate_failures: false,
         }
@@ -792,7 +802,13 @@ impl<'a> ExecCore<'a> {
             self.auto_depth
         } else {
             self.cfg.prefetch_depth
-        };
+        }
+        // staging past the backend's sustained submission depth only
+        // parks loaded units in RAM (no-op on sim: io_depth 64 > caps)
+        .min(self.cfg.io_depth.max(1));
+        // I/O fan-in beyond the submission depth would just queue inside
+        // the backend's ring; arbitrary N below that is honored (PR 9)
+        let io_threads = self.cfg.prefetch_threads.min(self.cfg.io_depth.max(1));
 
         let lanes_ro: &[JobLane] = lanes;
         let ctxs: Vec<IterCtx<'_>> = running
@@ -845,7 +861,7 @@ impl<'a> ExecCore<'a> {
             pipeline::FanOut { counts: &fan_counts, split },
             self.cfg.workers,
             depth,
-            self.cfg.prefetch_threads,
+            io_threads,
             |id| Ok(source.load(id).map_err(std::sync::Arc::new)),
             || pool.scratch(),
             |scratch, index, id, sub, item: Result<S::Item, std::sync::Arc<anyhow::Error>>| {
@@ -940,7 +956,7 @@ impl<'a> ExecCore<'a> {
         // exactly the pre-pipeline accounting.
         let sim_pipeline_seconds =
             (io_pipeline.sim_nanos - io_before.sim_nanos) as f64 / 1e9;
-        let pipelined = depth > 0 && self.cfg.prefetch_threads > 0;
+        let pipelined = depth > 0 && io_threads > 0;
         let overlapped_sim_seconds = if pipelined {
             sim_pipeline_seconds.min(wall_pipeline.as_secs_f64())
         } else {
@@ -948,7 +964,12 @@ impl<'a> ExecCore<'a> {
         };
 
         if self.cfg.prefetch_auto {
-            self.auto_depth = adaptive_depth(&outcome, self.cfg.workers, self.auto_depth);
+            // On a real backend `io_busy`/`compute_busy` are measured
+            // device/kernel wall times, so auto depth calibrates against
+            // hardware; on sim they track the profiled model.  Either
+            // way the result cannot exceed the backend's queue depth.
+            self.auto_depth = adaptive_depth(&outcome, self.cfg.workers, self.auto_depth)
+                .min(self.cfg.io_depth.max(1));
         }
 
         let io_delta = io_after.since(&io_before);

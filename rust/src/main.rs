@@ -22,7 +22,8 @@ use graphmp::engine::{Backend, EngineConfig, VswEngine};
 use graphmp::graph::datasets::Dataset;
 use graphmp::prep::{preprocess_into, PrepConfig};
 use graphmp::runtime::{CheckpointConfig, Manifest, NoValidCheckpoint, ShardExecutor};
-use graphmp::storage::disk::{Disk, DiskProfile};
+use graphmp::storage::disk::{Disk, DiskProfile, IoBackendKind};
+use graphmp::storage::io_backend::{make_backend, IoBackend};
 use graphmp::storage::GraphDir;
 use graphmp::util::{human_bytes, human_count, human_duration};
 
@@ -83,6 +84,19 @@ USAGE:
                      [--cache-mode cache-0..4] [--cache-mb N] [--no-selective]
                      [--workers N] [--disk hdd|ssd|none] [--no-prefetch]
                      [--prefetch-depth N|auto] [--prefetch-threads N]
+                     [--io-backend sim|direct|direct,uring]
+                                 (sim replays the profiled disk model —
+                                  the default and the paper's regime;
+                                  direct reads shards through O_DIRECT
+                                  with batched submission, falling back
+                                  to buffered + fadvise(DONTNEED) where
+                                  the filesystem refuses O_DIRECT;
+                                  direct,uring additionally drives the
+                                  ring through io_uring when the binary
+                                  was built with `--features uring`)
+                     [--io-depth N] (in-flight read budget of the direct
+                                  backend's submission ring and the shard
+                                  pipeline; default 8 for direct)
                      [--memo-mb N]
                      [--checkpoint-dir D] [--checkpoint-every K]
                                  (crash safety: atomically persist the whole
@@ -128,12 +142,21 @@ fn dataset(args: &Args) -> Result<Dataset> {
     Dataset::parse(name).with_context(|| format!("unknown dataset {name}"))
 }
 
-fn disk(args: &Args) -> Disk {
-    match args.opt_or("disk", "hdd") {
-        "ssd" => Disk::new(DiskProfile::ssd()),
-        "none" => Disk::unthrottled(),
-        _ => Disk::new(DiskProfile::hdd_raid5()),
-    }
+fn disk(args: &Args) -> Result<Disk> {
+    let profile = match args.opt_or("disk", "hdd") {
+        "ssd" => DiskProfile::ssd(),
+        "none" => DiskProfile::unthrottled(),
+        _ => DiskProfile::hdd_raid5(),
+    };
+    let kind = match args.opt("io-backend") {
+        Some(spec) => {
+            IoBackendKind::parse(spec).with_context(|| format!("bad --io-backend {spec}"))?
+        }
+        None => IoBackendKind::Sim,
+    };
+    let depth: usize = args.parse_opt_or("io-depth", 8usize)?;
+    anyhow::ensure!(depth >= 1, "--io-depth must be at least 1");
+    Ok(Disk::with_backend(profile, make_backend(kind, depth)))
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
@@ -154,7 +177,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
 fn cmd_preprocess(args: &Args) -> Result<()> {
     let ds = dataset(args)?;
     let dir = PathBuf::from(args.opt("dir").context("--dir required")?);
-    let disk = disk(args);
+    let disk = disk(args)?;
     let mut g = if args.flag("small") { ds.generate_small() } else { ds.generate() };
     if args.flag("undirected") {
         g = g.to_undirected();
@@ -204,7 +227,7 @@ fn app_of_job(args: &Args, job: u32) -> Result<Box<dyn VertexProgram>> {
 /// run arguments).
 fn open_engine(args: &Args) -> Result<VswEngine> {
     let dir = GraphDir::new(args.opt("dir").context("--dir required")?);
-    let disk = disk(args);
+    let disk = disk(args)?;
 
     let backend = match args.opt_or("backend", "native") {
         "native" => Backend::Native,
@@ -248,6 +271,14 @@ fn open_engine(args: &Args) -> Result<VswEngine> {
         },
         prefetch_auto: !args.flag("no-prefetch") && prefetch_depth_opt.is_none(),
         prefetch_threads: args.parse_opt_or("prefetch-threads", defaults.prefetch_threads)?,
+        // 0 = inherit the disk backend's submission depth; an explicit
+        // `--io-depth N` bounds both the backend ring (via `disk()`) and
+        // the pipeline's in-flight read budget
+        io_depth: if args.opt("io-depth").is_some() {
+            args.parse_opt_or("io-depth", 0usize)?
+        } else {
+            0
+        },
         decode_memo_budget: args
             .parse_opt_or("memo-mb", defaults.decode_memo_budget / (1024 * 1024))?
             * 1024
@@ -257,11 +288,12 @@ fn open_engine(args: &Args) -> Result<VswEngine> {
     };
     let engine = VswEngine::open(&dir, &disk, cfg)?;
     println!(
-        "graph: |V|={} |E|={} shards={} cache={}",
+        "graph: |V|={} |E|={} shards={} cache={} io={}",
         human_count(engine.property().num_vertices as u64),
         human_count(engine.property().num_edges),
         engine.property().num_shards,
         engine.cache().mode().name(),
+        engine.disk().backend().kind().name(),
     );
     Ok(engine)
 }

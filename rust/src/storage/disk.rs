@@ -1,4 +1,5 @@
-//! Throttled disk model.
+//! The shared disk handle: byte metering, the throttled cost model, and
+//! the pluggable I/O backend behind it.
 //!
 //! The paper's testbed is 4×4TB HDD RAID5 (~310MB/s sequential read shared
 //! by all cores).  At sim scale the host page cache would hide all I/O, so
@@ -9,14 +10,33 @@
 //! in `IoStats::sim_nanos` rather than slept away, so benches stay fast
 //! while reporting disk-bound timings — `elapsed = wall + sim` is what the
 //! bench harness prints.
+//!
+//! Since PR 9 the *mechanics* of each read are delegated to an
+//! [`IoBackend`] (see `storage::io_backend`): the default [`SimBackend`]
+//! keeps the behaviour above exactly, while
+//! [`DirectIoBackend`](super::io_backend::DirectIoBackend) reads through
+//! `O_DIRECT` + a batched submission ring against real storage.  On a
+//! real backend `sim_nanos` stays 0 (I/O cost is genuine wall time) and
+//! per-read latency histograms are recorded instead
+//! ([`IoSnapshot::read_lat_shard`] / [`IoSnapshot::read_lat_meta`]);
+//! byte/op metering and the fault-injection + retry machinery are
+//! backend-independent.
 
 use std::fs;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
+
+use super::io_backend::{
+    with_read_retries, with_write_retries, FaultPlan, FaultRule, IoBackend, LatHistogram,
+    ReadClass, SimBackend,
+};
+// Re-exported here for compatibility: `RetryPolicy` predates the backend
+// split and is addressed as `storage::disk::RetryPolicy` throughout.
+pub use super::io_backend::{IoBackendKind, LatencySummary, RetryPolicy};
 
 /// Bandwidth/latency profile of the simulated storage device.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -88,6 +108,11 @@ pub struct IoStats {
     /// Write attempts that failed and were retried (transient-error model;
     /// only the durable checkpoint write path retries).
     pub write_retries: AtomicU64,
+    /// Measured per-read wall-latency histograms, one per [`ReadClass`]
+    /// (shard payload / metadata).  Only real backends record here —
+    /// on the sim backend wall latency is a page-cache artifact and the
+    /// histograms stay empty.
+    pub read_lat: [LatHistogram; 2],
 }
 
 /// Point-in-time snapshot of [`IoStats`].
@@ -100,6 +125,12 @@ pub struct IoSnapshot {
     pub sim_nanos: u64,
     pub read_retries: u64,
     pub write_retries: u64,
+    /// Measured latency percentiles for aligned shard reads (real
+    /// backends only; all-zero on sim).
+    pub read_lat_shard: LatencySummary,
+    /// Measured latency percentiles for buffered metadata reads (real
+    /// backends only; all-zero on sim).
+    pub read_lat_meta: LatencySummary,
 }
 
 impl IoSnapshot {
@@ -107,7 +138,9 @@ impl IoSnapshot {
         self.sim_nanos as f64 / 1e9
     }
 
-    /// Delta between two snapshots (self - earlier).
+    /// Delta between two snapshots (self - earlier).  Latency summaries
+    /// are percentile digests, not counters: the delta carries `self`'s
+    /// cumulative summaries unchanged.
     pub fn since(&self, earlier: &IoSnapshot) -> IoSnapshot {
         IoSnapshot {
             bytes_read: self.bytes_read - earlier.bytes_read,
@@ -117,84 +150,9 @@ impl IoSnapshot {
             sim_nanos: self.sim_nanos - earlier.sim_nanos,
             read_retries: self.read_retries - earlier.read_retries,
             write_retries: self.write_retries - earlier.write_retries,
+            read_lat_shard: self.read_lat_shard,
+            read_lat_meta: self.read_lat_meta,
         }
-    }
-}
-
-/// Bounded-retry policy applied to every read that goes through [`Disk`].
-/// Transient failures (injected or real) are retried with exponential
-/// backoff; `NotFound` is terminal immediately — retrying a missing file
-/// cannot help.
-#[derive(Clone, Copy, Debug)]
-pub struct RetryPolicy {
-    pub max_retries: u32,
-    pub backoff_base: Duration,
-}
-
-impl Default for RetryPolicy {
-    fn default() -> Self {
-        RetryPolicy { max_retries: 3, backoff_base: Duration::from_micros(500) }
-    }
-}
-
-/// One injected failure rule (read or write side), matched by path
-/// substring.
-#[derive(Clone, Debug)]
-struct FaultRule {
-    substr: String,
-    /// Matching attempts to let through before the rule starts firing.
-    skip: u32,
-    /// Remaining failures once firing; `None` = hard fault (fails forever).
-    remaining: Option<u32>,
-}
-
-/// Injectable failure plan shared by all clones of a [`Disk`] handle, so a
-/// test can arm faults on the handle it kept while the engine reads through
-/// its own clone.
-#[derive(Debug, Default)]
-struct FaultPlan {
-    rules: Mutex<Vec<FaultRule>>,
-    /// Separate rule list for the write side: checkpoint writes are
-    /// injectable independently of shard reads (PR 8 satellite).
-    write_rules: Mutex<Vec<FaultRule>>,
-    policy: Mutex<RetryPolicy>,
-}
-
-impl FaultPlan {
-    /// Consult the plan for one read attempt of `path`.  Returns
-    /// `Some(hard)` when the attempt must fail, updating rule state.
-    fn take_fault(&self, path: &Path) -> Option<bool> {
-        Self::take_from(&self.rules, path)
-    }
-
-    /// Same, for one write attempt of `path`.
-    fn take_write_fault(&self, path: &Path) -> Option<bool> {
-        Self::take_from(&self.write_rules, path)
-    }
-
-    fn take_from(rules: &Mutex<Vec<FaultRule>>, path: &Path) -> Option<bool> {
-        let s = path.to_string_lossy();
-        let mut rules = rules.lock().unwrap();
-        for i in 0..rules.len() {
-            if !s.contains(&rules[i].substr) {
-                continue;
-            }
-            if rules[i].skip > 0 {
-                rules[i].skip -= 1;
-                return None;
-            }
-            match &mut rules[i].remaining {
-                None => return Some(true),
-                Some(k) => {
-                    *k -= 1;
-                    if *k == 0 {
-                        rules.remove(i);
-                    }
-                    return Some(false);
-                }
-            }
-        }
-        None
     }
 }
 
@@ -202,14 +160,25 @@ impl FaultPlan {
 #[derive(Clone)]
 pub struct Disk {
     profile: DiskProfile,
+    backend: Arc<dyn IoBackend>,
     stats: Arc<IoStats>,
     faults: Arc<FaultPlan>,
 }
 
 impl Disk {
+    /// A disk on the default [`SimBackend`] (profiled cost model).
     pub fn new(profile: DiskProfile) -> Self {
+        Disk::with_backend(profile, Arc::new(SimBackend))
+    }
+
+    /// A disk reading through `backend`.  On a real backend the profile
+    /// only labels the device: `sim_nanos` is never charged (I/O cost is
+    /// genuine wall time) and per-read latency histograms are recorded
+    /// instead.
+    pub fn with_backend(profile: DiskProfile, backend: Arc<dyn IoBackend>) -> Self {
         Disk {
             profile,
+            backend,
             stats: Arc::new(IoStats::default()),
             faults: Arc::new(FaultPlan::default()),
         }
@@ -223,6 +192,29 @@ impl Disk {
         self.profile
     }
 
+    /// The I/O backend serving aligned reads.
+    pub fn backend(&self) -> &Arc<dyn IoBackend> {
+        &self.backend
+    }
+
+    /// Buffer alignment the backend requires — what `BufPool`s feeding
+    /// this disk must allocate at (64 sim, 4096 direct).
+    pub fn alignment(&self) -> usize {
+        self.backend.alignment()
+    }
+
+    /// The backend's sustained submission depth; the prefetcher clamps
+    /// its I/O fan-in to this.
+    pub fn submission_depth(&self) -> usize {
+        self.backend.submission_depth()
+    }
+
+    /// True when reads hit real storage (no simulated time, measured
+    /// latency histograms instead).
+    pub fn is_real_io(&self) -> bool {
+        self.backend.is_real()
+    }
+
     pub fn snapshot(&self) -> IoSnapshot {
         IoSnapshot {
             bytes_read: self.stats.bytes_read.load(Ordering::Relaxed),
@@ -232,6 +224,8 @@ impl Disk {
             sim_nanos: self.stats.sim_nanos.load(Ordering::Relaxed),
             read_retries: self.stats.read_retries.load(Ordering::Relaxed),
             write_retries: self.stats.write_retries.load(Ordering::Relaxed),
+            read_lat_shard: self.stats.read_lat[ReadClass::Shard as usize].summary(),
+            read_lat_meta: self.stats.read_lat[ReadClass::Meta as usize].summary(),
         }
     }
 
@@ -243,6 +237,9 @@ impl Disk {
         self.stats.sim_nanos.store(0, Ordering::Relaxed);
         self.stats.read_retries.store(0, Ordering::Relaxed);
         self.stats.write_retries.store(0, Ordering::Relaxed);
+        for h in &self.stats.read_lat {
+            h.reset();
+        }
     }
 
     /// Arm a transient fault: after `skip` successful read attempts of any
@@ -310,109 +307,49 @@ impl Disk {
         *self.faults.policy.lock().unwrap()
     }
 
-    /// Run one logical read of `path` under the retry policy: each attempt
-    /// first consults the fault plan, then runs `op`.  Failed attempts are
-    /// retried with exponential backoff up to `max_retries` times, counted
-    /// in [`IoStats::read_retries`]; `NotFound` fails immediately.
-    fn with_read_retries<T>(
-        &self,
-        path: &Path,
-        mut op: impl FnMut() -> Result<T>,
-    ) -> Result<T> {
-        let policy = self.retry_policy();
-        let mut attempt: u32 = 0;
-        loop {
-            let res = match self.faults.take_fault(path) {
-                Some(hard) => Err(anyhow::anyhow!(
-                    "injected {} read fault: {}",
-                    if hard { "hard" } else { "transient" },
-                    path.display()
-                )),
-                None => op(),
-            };
-            match res {
-                Ok(v) => return Ok(v),
-                Err(e) => {
-                    let not_found = e
-                        .root_cause()
-                        .downcast_ref::<std::io::Error>()
-                        .is_some_and(|io| io.kind() == std::io::ErrorKind::NotFound);
-                    if not_found || attempt >= policy.max_retries {
-                        return Err(e.context(format!(
-                            "read {} failed after {} attempt(s)",
-                            path.display(),
-                            attempt + 1
-                        )));
-                    }
-                    std::thread::sleep(policy.backoff_base * 2u32.saturating_pow(attempt.min(10)));
-                    self.stats.read_retries.fetch_add(1, Ordering::Relaxed);
-                    attempt += 1;
-                }
-            }
+    /// The latency histogram reads of `class` record into — real
+    /// backends only (sim wall time is a page-cache artifact).
+    fn lat_for(&self, class: ReadClass) -> Option<&LatHistogram> {
+        if self.backend.is_real() {
+            Some(&self.stats.read_lat[class as usize])
+        } else {
+            None
         }
     }
 
-    /// Run one logical write of `path` under the retry policy — the write
-    /// mirror of [`with_read_retries`](Self::with_read_retries).  Each
-    /// attempt first consults the write-fault plan, then runs `op`; failed
-    /// attempts are retried with exponential backoff, counted in
-    /// [`IoStats::write_retries`].  Only durable (checkpoint) writes come
-    /// through here: plain writes on the preprocessing path keep their
-    /// fail-fast semantics.
-    fn with_write_retries<T>(
-        &self,
-        path: &Path,
-        mut op: impl FnMut() -> Result<T>,
-    ) -> Result<T> {
-        let policy = self.retry_policy();
-        let mut attempt: u32 = 0;
-        loop {
-            let res = match self.faults.take_write_fault(path) {
-                Some(hard) => Err(anyhow::anyhow!(
-                    "injected {} write fault: {}",
-                    if hard { "hard" } else { "transient" },
-                    path.display()
-                )),
-                None => op(),
-            };
-            match res {
-                Ok(v) => return Ok(v),
-                Err(e) => {
-                    if attempt >= policy.max_retries {
-                        return Err(e.context(format!(
-                            "write {} failed after {} attempt(s)",
-                            path.display(),
-                            attempt + 1
-                        )));
-                    }
-                    std::thread::sleep(policy.backoff_base * 2u32.saturating_pow(attempt.min(10)));
-                    self.stats.write_retries.fetch_add(1, Ordering::Relaxed);
-                    attempt += 1;
-                }
-            }
-        }
-    }
-
-    /// Read a whole file, metering + simulating device time.
+    /// Read a whole file (buffered on every backend — metadata files are
+    /// tiny), metering + simulating device time.
     pub fn read_file(&self, path: &Path) -> Result<Vec<u8>> {
-        let data = self.with_read_retries(path, || {
-            fs::read(path).with_context(|| format!("read {}", path.display()))
+        let lat = self.lat_for(ReadClass::Meta);
+        let data = with_read_retries(&self.faults, &self.stats.read_retries, path, || {
+            let t0 = Instant::now();
+            let data = fs::read(path).with_context(|| format!("read {}", path.display()))?;
+            if let Some(h) = lat {
+                h.record(t0.elapsed().as_nanos() as u64);
+            }
+            Ok(data)
         })?;
         self.account_read(data.len() as u64);
         Ok(data)
     }
 
-    /// Read a whole file into a 4-byte-aligned buffer (zero-copy shard
-    /// views borrow typed sections straight out of it).  Metered exactly
-    /// like [`read_file`](Self::read_file).
+    /// Read a whole file into an aligned buffer (zero-copy shard views
+    /// borrow typed sections straight out of it), at the backend's
+    /// declared alignment.  Metered exactly like
+    /// [`read_file`](Self::read_file).
     pub fn read_file_aligned(&self, path: &Path) -> Result<super::view::AlignedBuf> {
-        self.read_file_aligned_with(path, super::view::AlignedBuf::with_len)
+        let align = self.backend.alignment();
+        self.read_file_aligned_with(path, |len| {
+            super::view::AlignedBuf::with_alignment(len, align)
+        })
     }
 
     /// [`read_file_aligned`](Self::read_file_aligned) into a buffer
     /// leased from `pool`: mode-0 runs re-read every shard per iteration,
     /// and the pool recycles the buffers across iterations instead of
-    /// allocating one per shard (PR-3 follow-up).
+    /// allocating one per shard (PR-3 follow-up).  The pool's alignment
+    /// should match [`alignment`](Self::alignment) so direct backends
+    /// read copy-free.
     pub fn read_file_aligned_pooled(
         &self,
         path: &Path,
@@ -422,22 +359,20 @@ impl Disk {
     }
 
     /// The one metered aligned-read path: `alloc` supplies the
-    /// destination buffer (fresh or pooled) for the file's length.
+    /// destination buffer (fresh or pooled) for the file's length; the
+    /// backend moves the bytes under the shared fault/retry machinery.
     fn read_file_aligned_with(
         &self,
         path: &Path,
-        alloc: impl Fn(usize) -> super::view::AlignedBuf,
+        mut alloc: impl FnMut(usize) -> super::view::AlignedBuf,
     ) -> Result<super::view::AlignedBuf> {
-        use std::io::Read;
-        let buf = self.with_read_retries(path, || {
-            let mut f =
-                fs::File::open(path).with_context(|| format!("read {}", path.display()))?;
-            let len = f.metadata()?.len() as usize;
-            let mut buf = alloc(len);
-            f.read_exact(buf.as_bytes_mut())
-                .with_context(|| format!("read {}", path.display()))?;
-            Ok(buf)
-        })?;
+        let buf = self.backend.read_aligned(
+            &self.faults,
+            &self.stats.read_retries,
+            self.lat_for(ReadClass::Shard),
+            path,
+            &mut alloc,
+        )?;
         self.account_read(buf.as_bytes().len() as u64);
         Ok(buf)
     }
@@ -459,7 +394,7 @@ impl Disk {
     /// checkpoint writer skips that checkpoint and keeps serving).
     pub fn write_file_durable(&self, path: &Path, bytes: &[u8]) -> Result<()> {
         use std::io::Write;
-        self.with_write_retries(path, || {
+        with_write_retries(&self.faults, &self.stats.write_retries, path, || {
             if let Some(parent) = path.parent() {
                 fs::create_dir_all(parent)?;
             }
@@ -504,7 +439,9 @@ impl Disk {
     }
 
     fn charge(&self, bytes: u64, bw: u64) {
-        if bw == 0 {
+        // Real backends pay genuine wall time — charging simulated device
+        // time on top would double-count the cost.
+        if bw == 0 || self.backend.is_real() {
             return;
         }
         let nanos = self.profile.seek_nanos + bytes.saturating_mul(1_000_000_000) / bw;
@@ -522,6 +459,7 @@ pub fn sync_dir(path: &Path) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
     #[test]
     fn meters_bytes() {
@@ -732,6 +670,60 @@ mod tests {
         disk.inject_write_fault("wdead.bin", 0, 1);
         assert_eq!(disk.read_file(&p).unwrap(), b"x");
         assert_eq!(disk.snapshot().read_retries, 0);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn direct_backend_meters_without_sim_time() {
+        use crate::storage::io_backend::DirectIoBackend;
+        let dir = std::env::temp_dir().join("graphmp_disk_direct_test");
+        let _ = fs::remove_dir_all(&dir);
+        // A throttled profile on a real backend: bytes/ops are metered,
+        // but no simulated nanos are charged and real latency lands in
+        // the histograms instead.
+        let disk = Disk::with_backend(DiskProfile::hdd_raid5(), DirectIoBackend::new(4, false));
+        assert!(disk.is_real_io());
+        assert_eq!(disk.alignment(), 4096);
+        assert_eq!(disk.submission_depth(), 4);
+        let p = dir.join("x.bin");
+        let data: Vec<u8> = (0..9000u32).map(|i| (i % 251) as u8).collect();
+        disk.write_file(&p, &data).unwrap();
+        let pool = crate::storage::view::BufPool::with_alignment(4, disk.alignment());
+        let buf = disk.read_file_aligned_pooled(&p, &pool).unwrap();
+        assert_eq!(buf.as_bytes(), &data[..]);
+        assert_eq!(buf.as_bytes().as_ptr() as usize % 4096, 0);
+        let meta = disk.read_file(&p).unwrap();
+        assert_eq!(meta, data);
+        let s = disk.snapshot();
+        assert_eq!(s.bytes_read, 2 * 9000);
+        assert_eq!(s.read_ops, 2);
+        assert_eq!(s.sim_nanos, 0, "real backend never charges simulated time");
+        assert_eq!(s.read_lat_shard.count, 1);
+        assert_eq!(s.read_lat_meta.count, 1);
+        assert!(s.read_lat_shard.p50_nanos > 0);
+        disk.reset();
+        assert_eq!(disk.snapshot(), IoSnapshot::default());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn direct_backend_fault_injection_matches_sim() {
+        use crate::storage::io_backend::DirectIoBackend;
+        let dir = std::env::temp_dir().join("graphmp_disk_direct_fault_test");
+        let _ = fs::remove_dir_all(&dir);
+        let disk = Disk::with_backend(DiskProfile::unthrottled(), DirectIoBackend::new(2, false));
+        fast_retry(&disk);
+        let p = dir.join("flaky.bin");
+        disk.write_file(&p, b"payload").unwrap();
+        disk.inject_read_fault("flaky.bin", 0, 2);
+        let b = disk.read_file_aligned(&p).unwrap();
+        assert_eq!(b.as_bytes(), b"payload");
+        assert_eq!(disk.snapshot().read_retries, 2);
+        disk.inject_hard_read_fault("flaky.bin", 0);
+        let err = disk.read_file_aligned(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected hard read fault"), "{msg}");
+        assert!(msg.contains("after 4 attempt(s)"), "{msg}");
         fs::remove_dir_all(&dir).unwrap();
     }
 

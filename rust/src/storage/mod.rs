@@ -2,6 +2,7 @@
 //! disk model that restores the paper's disk-bound regime at sim scale.
 
 pub mod disk;
+pub mod io_backend;
 pub mod shard;
 pub mod view;
 

@@ -1,4 +1,4 @@
-//! Zero-copy shard views over cache-line-aligned file buffers.
+//! Zero-copy shard views over aligned file buffers.
 //!
 //! `Shard::from_bytes` materialises three fresh `Vec`s (row offsets,
 //! columns, weights) out of every shard file — at steady state that copy
@@ -10,14 +10,18 @@
 //! file sits in an aligned buffer ([`AlignedBuf`]) every section can be
 //! *borrowed* as a typed slice instead of copied.
 //!
-//! Alignment contract: the buffer *base* is 64-byte aligned (one cache
-//! line, same contract as `exec::arena`), so streaming a shard never
-//! splits its first bytes across lines and whole-buffer reads start
-//! line-aligned.  The borrowed *sections* are only guaranteed 4-byte
-//! alignment — the 24-byte header shifts them off the line — which is
-//! exactly what the chunked kernels assume: they gather CSR values
-//! scalarly and run their lane arithmetic on the 64-byte-aligned
-//! accumulator arenas, not on these borrowed slices.
+//! Alignment contract (PR 9: backend-declared): the buffer *base* is
+//! aligned to the I/O backend's requirement — at least 64 bytes (one
+//! cache line, the historic contract shared with `exec::arena`), and
+//! 4096 bytes for the direct-I/O backend so `O_DIRECT` can DMA straight
+//! into the pooled buffer with no bounce copy.  Capacity is padded to
+//! the same alignment ([`AlignedBuf::padded_capacity`]), which is what
+//! block-granular direct reads transfer into.  The borrowed *sections*
+//! are only guaranteed 4-byte alignment — the 24-byte header shifts
+//! them off the line — which is exactly what the chunked kernels
+//! assume: they gather CSR values scalarly and run their lane
+//! arithmetic on the 64-byte-aligned accumulator arenas, not on these
+//! borrowed slices.
 //!
 //! Decode-once lifecycle (see `cache.rs`):
 //!
@@ -33,6 +37,8 @@
 //! `util::bytes_as_u32s`); the views reinterpret file bytes directly, so
 //! that assumption is enforced at compile time here.
 
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ptr::NonNull;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -44,46 +50,110 @@ use crate::storage::shard::{Shard, MAGIC};
 #[cfg(target_endian = "big")]
 compile_error!("ShardView reinterprets little-endian shard files in place");
 
-/// One 64-byte cache line of backing storage (mirrors `exec::arena`:
-/// the alignment is a property of the type, so recycled buffers keep it).
-#[repr(C, align(64))]
-#[derive(Clone, Copy)]
-struct Line([u32; 16]);
+/// The minimum base alignment every [`AlignedBuf`] provides (one cache
+/// line — the historic contract; backends may demand more, see
+/// `storage::io_backend`).
+pub const MIN_ALIGN: usize = 64;
 
-const LINE_BYTES: usize = 64;
+/// One raw heap allocation: `cap` bytes at `align`.  `cap == 0` uses a
+/// dangling (but aligned) pointer and owns no memory.
+struct RawBuf {
+    ptr: NonNull<u8>,
+    cap: usize,
+    align: usize,
+}
+
+// SAFETY: RawBuf is an owned, uniquely-referenced heap allocation — the
+// raw pointer never aliases.
+unsafe impl Send for RawBuf {}
+unsafe impl Sync for RawBuf {}
+
+impl RawBuf {
+    /// Zeroed allocation of `cap` bytes (rounded up to `align` by the
+    /// caller) at `align`.
+    fn alloc_zeroed(cap: usize, align: usize) -> RawBuf {
+        debug_assert!(align.is_power_of_two());
+        debug_assert!(cap % align == 0);
+        if cap == 0 {
+            return RawBuf { ptr: NonNull::new(align as *mut u8).unwrap(), cap: 0, align };
+        }
+        let layout = Layout::from_size_align(cap, align).expect("aligned buffer layout");
+        // SAFETY: layout has non-zero size.
+        let p = unsafe { alloc_zeroed(layout) };
+        let ptr = NonNull::new(p).unwrap_or_else(|| handle_alloc_error(layout));
+        RawBuf { ptr, cap, align }
+    }
+}
+
+impl Drop for RawBuf {
+    fn drop(&mut self) {
+        if self.cap > 0 {
+            // SAFETY: allocated by alloc_zeroed with this exact layout.
+            unsafe {
+                dealloc(
+                    self.ptr.as_ptr(),
+                    Layout::from_size_align(self.cap, self.align).unwrap(),
+                )
+            };
+            self.cap = 0;
+        }
+    }
+}
 
 /// A free list of [`AlignedBuf`] backing stores.
 ///
 /// Mode-0 runs (no edge cache) re-read every scheduled shard from disk
 /// each iteration, and each read used to allocate a fresh buffer that
 /// died at the iteration barrier.  Buffers taken through
-/// [`BufPool::take`] return their backing words here when the last
+/// [`BufPool::take`] return their backing allocation here when the last
 /// `Arc<ShardView>` holding them drops, so steady-state mode-0
 /// iterations recycle at most `workers + prefetch_depth` buffers
 /// instead of allocating one per shard.  Idle capacity is bounded
 /// (`max_idle` buffers) and visible to the memory accounting via
 /// [`idle_bytes`](Self::idle_bytes).
+///
+/// Every buffer in one pool shares the pool's base alignment
+/// ([`align`](Self::align)), set to the I/O backend's requirement by the
+/// engine ([`with_alignment`](Self::with_alignment)) so pooled reads are
+/// `O_DIRECT`-eligible without copies.
 pub struct BufPool {
-    bufs: Mutex<Vec<Vec<Line>>>,
+    bufs: Mutex<Vec<RawBuf>>,
+    align: usize,
     max_idle: usize,
     reused: AtomicU64,
     fresh: AtomicU64,
 }
 
 impl BufPool {
-    /// A pool keeping at most `max_idle` buffers on the free list.
+    /// A pool keeping at most `max_idle` buffers on the free list, at
+    /// the default [`MIN_ALIGN`] base alignment.
     pub fn new(max_idle: usize) -> Arc<BufPool> {
+        Self::with_alignment(max_idle, MIN_ALIGN)
+    }
+
+    /// A pool whose buffers are base-aligned (and capacity-padded) to
+    /// `align` — the backend-declared value (64 for sim, 4096 for
+    /// direct).  Clamped up to [`MIN_ALIGN`]; must be a power of two.
+    pub fn with_alignment(max_idle: usize, align: usize) -> Arc<BufPool> {
+        let align = align.max(MIN_ALIGN);
+        assert!(align.is_power_of_two(), "pool alignment must be a power of two");
         Arc::new(BufPool {
             bufs: Mutex::new(Vec::new()),
+            align,
             max_idle,
             reused: AtomicU64::new(0),
             fresh: AtomicU64::new(0),
         })
     }
 
+    /// The base/padding alignment of every buffer this pool hands out.
+    pub fn align(&self) -> usize {
+        self.align
+    }
+
     /// A pooled buffer of `len` bytes: reuses a free-listed backing
     /// store when one exists, allocating (zeroed) otherwise.  The buffer
-    /// returns its words to `pool` on drop.
+    /// returns its allocation to `pool` on drop.
     ///
     /// Unlike [`AlignedBuf::with_len`], a *recycled* buffer's contents
     /// are unspecified — the caller must fill all `len` bytes before
@@ -91,44 +161,40 @@ impl BufPool {
     /// a recycled shard-sized buffer would cost a full memset per read,
     /// most of what the pool exists to save.
     pub fn take(pool: &Arc<BufPool>, len: usize) -> AlignedBuf {
-        let lines_len = len.div_ceil(LINE_BYTES);
+        let cap = len.div_ceil(pool.align) * pool.align;
         let recycled = pool.bufs.lock().unwrap().pop();
-        let lines = match recycled {
-            Some(mut w) => {
+        let raw = match recycled {
+            Some(r) => {
                 pool.reused.fetch_add(1, Ordering::Relaxed);
-                // grow-with-zeros / truncate only: the live prefix is
-                // overwritten by the caller, and bytes past `len` are
-                // never exposed
-                w.resize(lines_len, Line([0; 16]));
-                w
+                if r.cap >= cap {
+                    r
+                } else {
+                    // too small: drop it and regrow (still a pool take)
+                    RawBuf::alloc_zeroed(cap, pool.align)
+                }
             }
             None => {
                 pool.fresh.fetch_add(1, Ordering::Relaxed);
-                vec![Line([0; 16]); lines_len]
+                RawBuf::alloc_zeroed(cap, pool.align)
             }
         };
-        AlignedBuf { lines, len, pool: Some(Arc::clone(pool)) }
+        AlignedBuf { raw, len, pool: Some(Arc::clone(pool)) }
     }
 
-    fn put(&self, lines: Vec<Line>) {
-        if lines.capacity() == 0 {
+    fn put(&self, raw: RawBuf) {
+        if raw.cap == 0 {
             return;
         }
         let mut bufs = self.bufs.lock().unwrap();
         if bufs.len() < self.max_idle {
-            bufs.push(lines);
+            bufs.push(raw);
         }
     }
 
     /// Bytes held by idle free-listed buffers (charged by the engine's
     /// memory account — pooled capacity is real resident RAM).
     pub fn idle_bytes(&self) -> u64 {
-        self.bufs
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|w| (LINE_BYTES * w.capacity()) as u64)
-            .sum()
+        self.bufs.lock().unwrap().iter().map(|r| r.cap as u64).sum()
     }
 
     /// `(reused, fresh)` take counts.
@@ -140,45 +206,75 @@ impl BufPool {
     }
 }
 
-/// A byte buffer whose base address is 64-byte (cache-line) aligned, so
-/// `u32`/`f32` sections at 4-byte offsets can be borrowed as typed
-/// slices and whole-buffer operations start line-aligned.
+/// A byte buffer whose base address is aligned to a backend-declared
+/// power of two (at least [`MIN_ALIGN`]), so `u32`/`f32` sections at
+/// 4-byte offsets can be borrowed as typed slices, whole-buffer
+/// operations start line-aligned, and — at 4096 — `O_DIRECT` reads can
+/// land directly in it.
 ///
-/// Backed by a `Vec<Line>` (alignment 64 guaranteed by the `Line` type,
-/// for fresh and recycled allocations alike); the logical byte length
-/// may be shorter than the backing lines.  Buffers handed out by a
-/// [`BufPool`] return their backing store to it on drop.
+/// The allocation capacity is padded to the same alignment
+/// ([`padded_capacity`](Self::padded_capacity)); block-granular direct
+/// reads transfer into the padded slice
+/// ([`as_padded_mut`](Self::as_padded_mut)) while the logical byte
+/// length stays exact.  Buffers handed out by a [`BufPool`] return
+/// their backing store to it on drop.
 pub struct AlignedBuf {
-    lines: Vec<Line>,
+    raw: RawBuf,
     len: usize,
     pool: Option<Arc<BufPool>>,
 }
 
+// SAFETY: AlignedBuf owns its allocation exclusively (see RawBuf).
+unsafe impl Send for AlignedBuf {}
+unsafe impl Sync for AlignedBuf {}
+
 impl Clone for AlignedBuf {
     fn clone(&self) -> Self {
-        AlignedBuf { lines: self.lines.clone(), len: self.len, pool: self.pool.clone() }
+        let raw = RawBuf::alloc_zeroed(self.raw.cap, self.raw.align);
+        if self.len > 0 {
+            // SAFETY: both allocations cover >= len bytes and don't
+            // overlap.
+            unsafe {
+                std::ptr::copy_nonoverlapping(self.raw.ptr.as_ptr(), raw.ptr.as_ptr(), self.len)
+            };
+        }
+        AlignedBuf { raw, len: self.len, pool: self.pool.clone() }
     }
 }
 
 impl Drop for AlignedBuf {
     fn drop(&mut self) {
         if let Some(pool) = self.pool.take() {
-            pool.put(std::mem::take(&mut self.lines));
+            let empty = RawBuf { ptr: NonNull::new(self.raw.align as *mut u8).unwrap(), cap: 0, align: self.raw.align };
+            pool.put(std::mem::replace(&mut self.raw, empty));
         }
     }
 }
 
 impl std::fmt::Debug for AlignedBuf {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("AlignedBuf").field("len", &self.len).finish()
+        f.debug_struct("AlignedBuf")
+            .field("len", &self.len)
+            .field("align", &self.raw.align)
+            .finish()
     }
 }
 
 impl AlignedBuf {
-    /// A zero-filled buffer of `len` bytes (fill via
-    /// [`as_bytes_mut`](Self::as_bytes_mut)).
+    /// A zero-filled buffer of `len` bytes at the default [`MIN_ALIGN`]
+    /// (fill via [`as_bytes_mut`](Self::as_bytes_mut)).
     pub fn with_len(len: usize) -> AlignedBuf {
-        AlignedBuf { lines: vec![Line([0; 16]); len.div_ceil(LINE_BYTES)], len, pool: None }
+        Self::with_alignment(len, MIN_ALIGN)
+    }
+
+    /// A zero-filled buffer of `len` bytes whose base and capacity
+    /// padding honor `align` (clamped up to [`MIN_ALIGN`]; power of
+    /// two).
+    pub fn with_alignment(len: usize, align: usize) -> AlignedBuf {
+        let align = align.max(MIN_ALIGN);
+        assert!(align.is_power_of_two(), "buffer alignment must be a power of two");
+        let cap = len.div_ceil(align) * align;
+        AlignedBuf { raw: RawBuf::alloc_zeroed(cap, align), len, pool: None }
     }
 
     /// Copy `b` into a fresh aligned buffer.
@@ -196,31 +292,48 @@ impl AlignedBuf {
         self.len == 0
     }
 
+    /// The base/padding alignment this buffer was allocated at.
+    pub fn align(&self) -> usize {
+        self.raw.align
+    }
+
+    /// Allocation size: [`len`](Self::len) rounded up to
+    /// [`align`](Self::align) (possibly larger for a recycled pool
+    /// buffer).  Block-granular direct reads transfer up to this much.
+    pub fn padded_capacity(&self) -> usize {
+        self.raw.cap
+    }
+
     pub fn as_bytes(&self) -> &[u8] {
-        // SAFETY: the Vec<Line> allocation covers >= len bytes and u8
-        // has no alignment or validity requirements.
-        unsafe { std::slice::from_raw_parts(self.lines.as_ptr().cast::<u8>(), self.len) }
+        // SAFETY: the allocation covers >= len bytes and u8 has no
+        // alignment or validity requirements.
+        unsafe { std::slice::from_raw_parts(self.raw.ptr.as_ptr(), self.len) }
     }
 
     pub fn as_bytes_mut(&mut self) -> &mut [u8] {
         // SAFETY: as for `as_bytes`, plus `&mut self` guarantees
         // exclusive access.
-        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr().cast::<u8>(), self.len) }
+        unsafe { std::slice::from_raw_parts_mut(self.raw.ptr.as_ptr(), self.len) }
+    }
+
+    /// The whole padded allocation
+    /// ([`padded_capacity`](Self::padded_capacity) bytes) as a mutable
+    /// slice — the destination of block-granular `O_DIRECT` transfers.
+    /// Bytes past [`len`](Self::len) are unspecified and never exposed
+    /// through [`as_bytes`](Self::as_bytes).
+    pub fn as_padded_mut(&mut self) -> &mut [u8] {
+        // SAFETY: the allocation covers exactly `cap` bytes.
+        unsafe { std::slice::from_raw_parts_mut(self.raw.ptr.as_ptr(), self.raw.cap) }
     }
 
     /// Borrow `n` little-endian `u32`s starting at `byte_off`.
     fn u32s(&self, byte_off: usize, n: usize) -> &[u32] {
         assert!(byte_off % 4 == 0, "unaligned u32 view at {byte_off}");
         assert!(byte_off + n * 4 <= self.len, "u32 view out of bounds");
-        // SAFETY: in bounds (asserted), 4-byte aligned (base is
-        // 64-aligned and byte_off % 4 == 0), and every bit pattern is a
-        // valid u32.
-        unsafe {
-            std::slice::from_raw_parts(
-                self.lines.as_ptr().cast::<u8>().add(byte_off).cast::<u32>(),
-                n,
-            )
-        }
+        // SAFETY: in bounds (asserted), 4-byte aligned (base is at
+        // least 64-aligned and byte_off % 4 == 0), and every bit
+        // pattern is a valid u32.
+        unsafe { std::slice::from_raw_parts(self.raw.ptr.as_ptr().add(byte_off).cast::<u32>(), n) }
     }
 
     /// Borrow `n` little-endian `f32`s starting at `byte_off`.
@@ -229,12 +342,7 @@ impl AlignedBuf {
         assert!(byte_off + n * 4 <= self.len, "f32 view out of bounds");
         // SAFETY: as for `u32s`; every bit pattern is a valid f32 (NaN
         // payloads included).
-        unsafe {
-            std::slice::from_raw_parts(
-                self.lines.as_ptr().cast::<u8>().add(byte_off).cast::<f32>(),
-                n,
-            )
-        }
+        unsafe { std::slice::from_raw_parts(self.raw.ptr.as_ptr().add(byte_off).cast::<f32>(), n) }
     }
 }
 
@@ -285,6 +393,14 @@ impl ShardView {
     }
 
     fn parse_impl(buf: AlignedBuf, verify_crc: bool) -> Result<ShardView> {
+        // The backend-declared alignment contract must hold by
+        // construction for every buffer that reaches a view.
+        debug_assert!(buf.align() >= MIN_ALIGN);
+        debug_assert_eq!(
+            buf.as_bytes().as_ptr() as usize % buf.align(),
+            0,
+            "shard buffer base must honor its declared alignment"
+        );
         let b = buf.as_bytes();
         anyhow::ensure!(b.len() >= 28, "shard file too small ({}B)", b.len());
         anyhow::ensure!(&b[..4] == MAGIC, "bad shard magic");
@@ -422,13 +538,38 @@ mod tests {
     }
 
     #[test]
+    fn aligned_buf_honors_requested_alignment() {
+        for align in [64usize, 512, 4096] {
+            for len in [0usize, 1, 4095, 4096, 4097, 10_000] {
+                let buf = AlignedBuf::with_alignment(len, align);
+                assert_eq!(buf.align(), align);
+                assert_eq!(buf.as_bytes().as_ptr() as usize % align, 0, "align={align} len={len}");
+                assert_eq!(buf.padded_capacity() % align, 0);
+                assert!(buf.padded_capacity() >= len);
+                assert!(buf.as_bytes().iter().all(|&b| b == 0), "fresh buffers are zeroed");
+            }
+        }
+    }
+
+    #[test]
+    fn padded_slice_covers_capacity() {
+        let mut buf = AlignedBuf::with_alignment(5000, 4096);
+        assert_eq!(buf.padded_capacity(), 8192);
+        buf.as_padded_mut().fill(3);
+        assert_eq!(buf.as_bytes(), &[3u8; 5000][..], "logical view stays len-bounded");
+        let cloned = buf.clone();
+        assert_eq!(cloned.as_bytes(), buf.as_bytes());
+        assert_eq!(cloned.align(), 4096);
+    }
+
+    #[test]
     fn buf_pool_recycles_backing_stores() {
         let pool = BufPool::new(4);
         {
             let mut a = BufPool::take(&pool, 100);
             a.as_bytes_mut()[0] = 7;
             assert_eq!(a.len(), 100);
-        } // drop returns the words
+        } // drop returns the allocation
         assert!(pool.idle_bytes() >= 100);
         let mut b = BufPool::take(&pool, 60);
         assert_eq!(b.len(), 60);
@@ -460,6 +601,21 @@ mod tests {
         assert!(pool.idle_bytes() <= 2 * 64 + 8, "idle list must stay bounded");
         let n_idle = { pool.bufs.lock().unwrap().len() };
         assert_eq!(n_idle, 2);
+    }
+
+    #[test]
+    fn block_aligned_pool_serves_direct_io_contract() {
+        let pool = BufPool::with_alignment(4, 4096);
+        assert_eq!(pool.align(), 4096);
+        let a = BufPool::take(&pool, 5000);
+        assert_eq!(a.as_bytes().as_ptr() as usize % 4096, 0);
+        assert_eq!(a.align(), 4096);
+        assert_eq!(a.padded_capacity(), 8192);
+        drop(a);
+        // recycled buffers keep the pool's alignment
+        let b = BufPool::take(&pool, 100);
+        assert_eq!(b.as_bytes().as_ptr() as usize % 4096, 0);
+        assert_eq!(pool.stats(), (1, 1));
     }
 
     #[test]

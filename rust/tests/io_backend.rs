@@ -1,0 +1,237 @@
+//! I/O-backend parity gate (PR 9): the real direct-I/O backend must be a
+//! drop-in replacement for the simulated disk — **bit-identical** engine
+//! results, identical fault-injection/retry behaviour, and the same byte
+//! accounting — while charging zero simulated time and recording real
+//! read-latency histograms instead.
+//!
+//! The scratch directory honours `GRAPHMP_IO_SCRATCH` (CI points it at a
+//! real non-tmpfs filesystem so `O_DIRECT` opens actually succeed); by
+//! default it falls back to the system temp dir, where the backend's
+//! buffered-fallback path (`posix_fadvise(DONTNEED)`) is what gets
+//! exercised.  Both paths must behave identically — that is the point.
+
+use std::path::PathBuf;
+
+use graphmp::apps::{PageRank, Sssp, VertexProgram};
+use graphmp::baselines::{psw::PswEngine, BaselineConfig, BaselineEngine};
+use graphmp::compress::CacheMode;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::rmat::{rmat, RmatParams};
+use graphmp::graph::EdgeList;
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::storage::disk::{Disk, DiskProfile, IoBackendKind};
+use graphmp::storage::io_backend::{make_backend, DIRECT_IO_ALIGN};
+use graphmp::storage::GraphDir;
+
+fn scratch(name: &str) -> PathBuf {
+    let base = std::env::var_os("GRAPHMP_IO_SCRATCH")
+        .map(PathBuf::from)
+        .unwrap_or_else(std::env::temp_dir);
+    base.join(format!("graphmp_iobk_{name}"))
+}
+
+fn disk_for(kind: IoBackendKind) -> Disk {
+    // unthrottled profile: the sim side charges no time either, so the
+    // comparison isolates the read *mechanics*, not the cost model
+    Disk::with_backend(DiskProfile::unthrottled(), make_backend(kind, 8))
+}
+
+fn direct_kind() -> IoBackendKind {
+    IoBackendKind::Direct { uring: false }
+}
+
+fn fixture() -> EdgeList {
+    rmat(10, 12_000, 9242, RmatParams::default())
+}
+
+fn prep_into(g: &EdgeList, root: &PathBuf, disk: &Disk) -> GraphDir {
+    let _ = std::fs::remove_dir_all(root);
+    let prep = PrepConfig {
+        edges_per_shard: 2048,
+        max_rows_per_shard: 512,
+        weighted: true,
+        ..Default::default()
+    };
+    let (dir, _) = preprocess_into(g, root, disk, prep).unwrap();
+    dir
+}
+
+fn apps() -> Vec<(Box<dyn VertexProgram>, u32)> {
+    vec![
+        (Box::new(PageRank::new()) as Box<dyn VertexProgram>, 6),
+        (Box::new(Sssp::new(0)), 60),
+    ]
+}
+
+/// One VSW run of `app` through `kind`, uncached so every shard read in
+/// every iteration goes through the backend.
+fn vsw_run(
+    dir: &GraphDir,
+    kind: IoBackendKind,
+    app: &dyn VertexProgram,
+    iters: u32,
+) -> (Vec<f32>, graphmp::storage::disk::IoSnapshot) {
+    let disk = disk_for(kind);
+    let cfg = EngineConfig {
+        workers: 4,
+        prefetch_depth: 3,
+        prefetch_threads: 2,
+        cache_mode: Some(CacheMode::M0None),
+        selective: false,
+        ..Default::default()
+    };
+    let mut e = VswEngine::open(dir, &disk, cfg).unwrap();
+    disk.reset();
+    let (vals, _) = e.run_to_values(app, iters).unwrap();
+    (vals, disk.snapshot())
+}
+
+// ------------------------------------------------------------ bit identity
+
+#[test]
+fn direct_backend_bit_identical_to_sim_across_engines_and_apps() {
+    let g = fixture();
+    let root = scratch("parity");
+    let dir = prep_into(&g, &root, &Disk::unthrottled());
+
+    for (app, iters) in apps() {
+        let app = app.as_ref();
+        // engine 1: VSW, real file reads through each backend
+        let (sim_vals, sim_io) = vsw_run(&dir, IoBackendKind::Sim, app, iters);
+        let (dir_vals, dir_io) = vsw_run(&dir, direct_kind(), app, iters);
+        assert_eq!(sim_vals, dir_vals, "{}: VSW diverged sim vs direct", app.name());
+        // identical read schedule: same bytes, same op count
+        assert_eq!(sim_io.bytes_read, dir_io.bytes_read, "{}", app.name());
+        assert_eq!(sim_io.read_ops, dir_io.read_ops, "{}", app.name());
+        // real backend charges no simulated time but measures latency
+        assert_eq!(dir_io.sim_nanos, 0, "{}: direct must not charge sim time", app.name());
+        assert!(dir_io.read_lat_shard.count > 0, "{}: no shard latency samples", app.name());
+        assert_eq!(sim_io.read_lat_shard.count, 0, "{}: sim must not record latency", app.name());
+
+        // engine 2: PSW baseline through each backend's disk handle
+        let mut psw_sim = PswEngine::new(BaselineConfig { p: 8, ..Default::default() });
+        let mut psw_dir = PswEngine::new(BaselineConfig { p: 8, ..Default::default() });
+        let dsim = disk_for(IoBackendKind::Sim);
+        let ddir = disk_for(direct_kind());
+        psw_sim.preprocess(&g, &dsim).unwrap();
+        psw_dir.preprocess(&g, &ddir).unwrap();
+        psw_sim.run(app, iters, &dsim).unwrap();
+        psw_dir.run(app, iters, &ddir).unwrap();
+        assert_eq!(
+            psw_sim.values(),
+            psw_dir.values(),
+            "{}: PSW diverged sim vs direct",
+            app.name()
+        );
+        // and both engines agree with each other per backend
+        assert_eq!(psw_dir.values(), &dir_vals[..], "{}: PSW vs VSW on direct", app.name());
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ------------------------------------------------------ fault/retry parity
+
+#[test]
+fn fault_injection_behaves_identically_on_both_backends() {
+    let g = fixture();
+    let root = scratch("faults");
+    let dir = prep_into(&g, &root, &Disk::unthrottled());
+
+    for kind in [IoBackendKind::Sim, direct_kind()] {
+        // transient faults under the retry budget: the run succeeds and
+        // the retry counter records exactly the injected failures
+        let disk = disk_for(kind);
+        disk.inject_read_fault("shard_00000", 0, 2);
+        let cfg = EngineConfig {
+            cache_mode: Some(CacheMode::M0None),
+            selective: false,
+            ..Default::default()
+        };
+        let mut e = VswEngine::open(&dir, &disk, cfg.clone()).unwrap();
+        let (vals, _) = e.run_to_values(&PageRank::new(), 3).unwrap();
+        assert_eq!(
+            disk.snapshot().read_retries,
+            2,
+            "{}: transient fault retry count",
+            kind.name()
+        );
+
+        // clean run for the value baseline
+        let clean = disk_for(kind);
+        let mut ec = VswEngine::open(&dir, &clean, cfg.clone()).unwrap();
+        let (clean_vals, _) = ec.run_to_values(&PageRank::new(), 3).unwrap();
+        assert_eq!(vals, clean_vals, "{}: retried run changed results", kind.name());
+
+        // hard fault: exhausts the budget with the same error shape
+        let bad = disk_for(kind);
+        bad.inject_hard_read_fault("shard_00000", 0);
+        let mut eb = VswEngine::open(&dir, &bad, cfg.clone()).unwrap();
+        let err = eb.run(&PageRank::new(), 3).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("failed after 4 attempt(s)"),
+            "{}: unexpected hard-fault error: {msg}",
+            kind.name()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ------------------------------------------------------ alignment contract
+
+#[test]
+fn direct_disk_pools_and_buffers_are_block_aligned() {
+    let g = fixture();
+    let root = scratch("align");
+    let dir = prep_into(&g, &root, &Disk::unthrottled());
+
+    let disk = disk_for(direct_kind());
+    assert!(disk.is_real_io());
+    assert_eq!(disk.alignment(), DIRECT_IO_ALIGN);
+    assert_eq!(disk.submission_depth(), 8);
+
+    // the engine's recycling pool inherits the backend alignment, so
+    // every shard read lands in an O_DIRECT-compatible buffer
+    let cfg = EngineConfig {
+        cache_mode: Some(CacheMode::M0None),
+        selective: false,
+        ..Default::default()
+    };
+    let e = VswEngine::open(&dir, &disk, cfg).unwrap();
+    assert_eq!(e.buf_pool().align(), DIRECT_IO_ALIGN);
+
+    // a raw aligned read through the disk: base pointer and padded
+    // capacity both block-aligned
+    let buf = disk.read_file_aligned(&dir.shard_path(0)).unwrap();
+    assert_eq!(buf.align(), DIRECT_IO_ALIGN);
+    assert_eq!(buf.as_bytes().as_ptr() as usize % DIRECT_IO_ALIGN, 0);
+    assert_eq!(buf.padded_capacity() % DIRECT_IO_ALIGN, 0);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ----------------------------------------------------- metadata read class
+
+#[test]
+fn direct_backend_records_meta_and_shard_latency_classes() {
+    let g = fixture();
+    let root = scratch("classes");
+    let dir = prep_into(&g, &root, &Disk::unthrottled());
+
+    let disk = disk_for(direct_kind());
+    let cfg = EngineConfig {
+        cache_mode: Some(CacheMode::M0None),
+        selective: false,
+        ..Default::default()
+    };
+    // opening the engine reads property/vertex-info/blooms (Meta class)
+    let mut e = VswEngine::open(&dir, &disk, cfg).unwrap();
+    let after_open = disk.snapshot();
+    assert!(after_open.read_lat_meta.count > 0, "engine open must record meta reads");
+    e.run(&PageRank::new(), 2).unwrap();
+    let s = disk.snapshot();
+    assert!(s.read_lat_shard.count > 0, "run must record shard reads");
+    assert!(s.read_lat_shard.p50_nanos > 0);
+    assert!(s.read_lat_shard.p99_nanos >= s.read_lat_shard.p50_nanos);
+    assert_eq!(s.sim_nanos, 0);
+    let _ = std::fs::remove_dir_all(&root);
+}

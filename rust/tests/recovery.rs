@@ -243,6 +243,7 @@ fn exec_cfg(isolate: bool) -> ExecConfig {
         prefetch_depth: 2,
         prefetch_auto: false,
         prefetch_threads: 1,
+        io_depth: 64,
         fan_out: false,
         isolate_failures: isolate,
     }

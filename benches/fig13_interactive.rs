@@ -20,7 +20,7 @@ use graphmp::apps::Ppr;
 use graphmp::benchutil::{banner, batch_summary, job_summary, scale, Table};
 use graphmp::compress::CacheMode;
 use graphmp::engine::{EngineConfig, VswEngine};
-use graphmp::exec::BatchJob;
+use graphmp::exec::{BatchJob, LaneVec};
 use graphmp::graph::rmat::{rmat, RmatParams};
 use graphmp::graph::EdgeList;
 use graphmp::prep::{preprocess_into, PrepConfig};
@@ -71,7 +71,7 @@ fn bench_arrivals(small: bool, json: &mut String) {
     };
 
     // ground truth: each query run solo
-    let solo_values: Vec<Vec<f32>> = (0..n_jobs)
+    let solo_values: Vec<LaneVec> = (0..n_jobs)
         .map(|j| {
             let (v, _) = mk_engine(&disk)
                 .run_to_values(&Ppr::new(1 + 37 * j), ITERS)

@@ -19,6 +19,7 @@ use graphmp::apps::Ppr;
 use graphmp::benchutil::{banner, scale, Table};
 use graphmp::compress::CacheMode;
 use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::exec::LaneVec;
 use graphmp::graph::rmat::{rmat, RmatParams};
 use graphmp::prep::{preprocess_into, PrepConfig};
 use graphmp::runtime::protocol::{Priority, SubmitSpec};
@@ -78,7 +79,7 @@ fn ms(d: std::time::Duration) -> f64 {
 }
 
 /// Experiment 1: burst size sweep, per-class submit→result latency.
-fn bench_load(dir: &GraphDir, disk: &Disk, v_solo: &[f32], json: &mut String) {
+fn bench_load(dir: &GraphDir, disk: &Disk, v_solo: &LaneVec, json: &mut String) {
     let mut tbl = Table::new(vec![
         "offered", "wall s", "hi mean ms", "no mean ms", "lo mean ms", "max ms",
     ]);
@@ -99,7 +100,7 @@ fn bench_load(dir: &GraphDir, disk: &Disk, v_solo: &[f32], json: &mut String) {
         let m = &summary.metrics;
         assert_eq!(m.completed, u64::from(load), "every accepted job completes");
         assert_eq!(
-            h.values(0).unwrap(),
+            &h.values(0).unwrap(),
             v_solo,
             "job 0 at load {load}: serving changed results"
         );

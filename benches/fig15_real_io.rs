@@ -20,6 +20,7 @@ use graphmp::apps::PageRank;
 use graphmp::benchutil::{banner, Table};
 use graphmp::compress::CacheMode;
 use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::exec::LaneVec;
 use graphmp::graph::rmat::{rmat, RmatParams};
 use graphmp::prep::{preprocess_into, PrepConfig};
 use graphmp::storage::disk::{Disk, DiskProfile};
@@ -168,7 +169,7 @@ fn main() {
 
     let mut engine_rows = Vec::new();
     let mut tbl = Table::new(vec!["engine", "backend", "seconds", "edges/sec"]);
-    let mut baseline_vals: Option<Vec<f32>> = None;
+    let mut baseline_vals: Option<LaneVec> = None;
     for (backend_name, disk) in [
         ("sim", Disk::unthrottled()),
         (

@@ -125,7 +125,7 @@ fn main() {
         let ctx = IterCtx {
             kernel: *k,
             num_vertices: n,
-            src: &src,
+            src: (&src).into(),
             inv_out_deg: &inv,
             contrib: &contrib,
             iteration: 0,
@@ -135,8 +135,8 @@ fn main() {
         // see exec::kernel)
         let mut a = vec![0.5f32; shard.rows()];
         let mut b = a.clone();
-        fold_csr(&ctx, shard.csr.slices(), 0, &mut a);
-        reference_fold_csr(&ctx, shard.csr.slices(), 0, &mut b);
+        fold_csr(&ctx, shard.csr.slices(), 0, (&mut a).into());
+        reference_fold_csr(&ctx, shard.csr.slices(), 0, (&mut b).into());
         match k.combine {
             Combine::Sum => {
                 for (i, (x, y)) in a.iter().zip(&b).enumerate() {
@@ -154,12 +154,12 @@ fn main() {
         let mut out = vec![0.5f32; shard.rows()];
         let mono = stats(&time_n(2, 10, || {
             out.fill(0.5);
-            fold_csr(&ctx, shard.csr.slices(), 0, &mut out);
+            fold_csr(&ctx, shard.csr.slices(), 0, (&mut out).into());
             std::hint::black_box(&out);
         }));
         let en = stats(&time_n(2, 10, || {
             out.fill(0.5);
-            reference_fold_csr(&ctx, shard.csr.slices(), 0, &mut out);
+            reference_fold_csr(&ctx, shard.csr.slices(), 0, (&mut out).into());
             std::hint::black_box(&out);
         }));
         tbl.row(vec![
@@ -212,7 +212,7 @@ fn main() {
         let ctx = IterCtx {
             kernel: *k,
             num_vertices: rnv,
-            src: &rsrc,
+            src: (&rsrc).into(),
             inv_out_deg: &rinv,
             contrib: &rcontrib,
             iteration: 0,
@@ -220,12 +220,12 @@ fn main() {
         let mut out = vec![0.5f32; rnv as usize];
         let scalar = stats(&time_n(1, 5, || {
             out.fill(0.5);
-            scalar_fold_csr(&ctx, rcsr.slices(), 0, &mut out);
+            scalar_fold_csr(&ctx, rcsr.slices(), 0, (&mut out).into());
             std::hint::black_box(&out);
         }));
         let chunked = stats(&time_n(1, 5, || {
             out.fill(0.5);
-            fold_csr(&ctx, rcsr.slices(), 0, &mut out);
+            fold_csr(&ctx, rcsr.slices(), 0, (&mut out).into());
             std::hint::black_box(&out);
         }));
         let (s_eps, c_eps) = (redges / scalar.mean, redges / chunked.mean);

@@ -111,7 +111,7 @@ fn main() -> anyhow::Result<()> {
             );
             // cross-backend agreement: min-apps bit-exact, PR to fp tolerance
             let mut max_err = 0f32;
-            for (a, b) in nat_vals.iter().zip(&pj_vals) {
+            for (a, b) in nat_vals.f32s().iter().zip(pj_vals.f32s()) {
                 if a.is_finite() && b.is_finite() {
                     max_err = max_err.max((a - b).abs() / a.abs().max(1e-9));
                 } else {

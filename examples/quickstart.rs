@@ -39,7 +39,8 @@ fn main() -> anyhow::Result<()> {
 
     // 3. run 20 PageRank iterations under the VSW model
     let mut engine = VswEngine::open(&dir, &disk, EngineConfig::default())?;
-    let (ranks, run) = engine.run_to_values(&PageRank::new(), 20)?;
+    let (rank_lane, run) = engine.run_to_values(&PageRank::new(), 20)?;
+    let ranks = rank_lane.f32s();
 
     // 4. top-5 vertices by rank
     let mut idx: Vec<usize> = (0..ranks.len()).collect();

@@ -6,21 +6,33 @@
 //! contributions, then **applies** the folded accumulator to the old
 //! value, and activates the vertex when the app's **activation
 //! predicate** fires.  [`ShardKernel`] captures exactly that triple over
-//! `f32` lanes, so one execution core ([`crate::exec`]) runs every app on
+//! a typed value lane ([`crate::exec::lane::Lane`]: `f32`, `u32` or
+//! `u64`), so one execution core ([`crate::exec`]) runs every app on
 //! every engine:
 //!
-//! | app          | combine | gather                      | apply                      |
-//! |--------------|---------|-----------------------------|----------------------------|
-//! | PageRank     | sum     | `src[u] · 1/outdeg(u)`      | `(1-d)/n + d·acc`          |
-//! | PPR          | sum     | `src[u] · 1/outdeg(u)`      | `(1-d)·reset(v) + d·acc`   |
-//! | SSSP         | min     | `src[u] + w`                | `min(old, acc)`            |
-//! | BFS          | min     | `src[u] + 1`                | `min(old, acc)`            |
-//! | CC           | min     | `src[u]`                    | `min(old, acc)`            |
-//! | widest path  | max     | `min(src[u], w)`            | `max(old, acc)`            |
+//! | app          | lane | combine | gather                  | apply                    |
+//! |--------------|------|---------|-------------------------|--------------------------|
+//! | PageRank     | f32  | sum     | `src[u] · 1/outdeg(u)`  | `(1-d)/n + d·acc`        |
+//! | PPR          | f32  | sum     | `src[u] · 1/outdeg(u)`  | `(1-d)·reset(v) + d·acc` |
+//! | SSSP         | f32  | min     | `src[u] + w`            | `min(old, acc)`          |
+//! | BFS          | f32  | min     | `src[u] + 1`            | `min(old, acc)`          |
+//! | CC           | f32  | min     | `src[u]`                | `min(old, acc)`          |
+//! | widest path  | f32  | max     | `min(src[u], w)`        | `max(old, acc)`          |
+//! | WCC          | u32  | min     | `src[u]`                | `min(old, acc)`          |
+//! | BFS levels   | u32  | min     | `src[u] ⊕ 1` (sat.)     | `min(old, acc)`          |
+//! | k-core       | u32  | sum     | `src[u] != 0`           | `old != 0 ∧ acc ≥ k`     |
 //!
 //! A [`VertexProgram`] therefore declares its kernel plus init rules; the
-//! engines execute the kernel on either backend (native rust or PJRT).
+//! engines execute the kernel on either backend (native rust or PJRT —
+//! the PJRT artifacts cover f32 lanes only).
+//!
+//! Naive single-threaded reference implementations of all nine apps live
+//! in [`oracle`]; `rust/tests/oracle.rs` cross-checks every engine
+//! against them on seeded random graphs.
 
+pub mod oracle;
+
+use crate::exec::lane::{Lane, LaneType, LaneVec};
 use crate::graph::VertexId;
 
 /// The per-edge cost fed to path-style gathers.
@@ -30,7 +42,7 @@ pub enum EdgeCost {
     Weights,
     /// Unit cost per hop (BFS levels).
     Unit,
-    /// Zero cost (CC label propagation).
+    /// Zero cost (CC/WCC label propagation).
     Zero,
 }
 
@@ -56,14 +68,18 @@ pub enum Combine {
 /// How one edge `(u → v, w)` turns into a contribution for `v`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum EdgeGather {
-    /// `src[u] · inv_out_deg[u]` — degree-normalised rank mass.  The
-    /// execution core pre-folds this product once per iteration into the
-    /// `contrib` array (|V| multiplies instead of |E|).
+    /// `src[u] · inv_out_deg[u]` — degree-normalised rank mass (f32
+    /// lanes only).  The execution core pre-folds this product once per
+    /// iteration into the `contrib` array (|V| multiplies instead of
+    /// |E|).
     DegreeMass,
-    /// `src[u] + cost(w)` — path length (SSSP/BFS) or raw label (CC).
+    /// `src[u] + cost(w)` — path length (SSSP/BFS) or raw label (CC);
+    /// integer lanes add saturating, so unreached `u32::MAX` stays put.
     AddCost(EdgeCost),
     /// `min(src[u], cost(w))` — path bottleneck width (widest path).
     MinCapacity(EdgeCost),
+    /// `1` if `src[u] != 0` else `0` — alive-neighbor counting (k-core).
+    Indicator,
 }
 
 /// Where a sum kernel's teleport/base mass lands.
@@ -95,14 +111,17 @@ impl BaseMass {
 /// How the folded accumulator becomes the vertex's next value.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Apply {
-    /// `base(v) + scale · acc` — sum kernels (PageRank family).
+    /// `base(v) + scale · acc` — sum kernels (PageRank family, f32 only).
     Affine { scale: f32, base: BaseMass },
     /// `combine(old, acc)` — monotone relaxations keep their best value.
     MeetOld,
+    /// `old != 0 ∧ acc ≥ k` — the synchronous k-core peel: a vertex
+    /// stays alive while at least `k` in-neighbors are alive.
+    Threshold { k: u32 },
 }
 
 /// A generalized shard update: associative combine + per-edge gather +
-/// apply + activation predicate over `f32` vertex lanes.  Copyable and
+/// apply + activation predicate over a typed value lane.  Copyable and
 /// engine-agnostic — the whole contract between an app and the execution
 /// core.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -110,6 +129,9 @@ pub struct ShardKernel {
     pub combine: Combine,
     pub gather: EdgeGather,
     pub apply: Apply,
+    /// The concrete value-lane type the kernel folds over.  The erased
+    /// entry points in [`crate::exec::kernel`] dispatch on this tag.
+    pub lane: LaneType,
 }
 
 impl ShardKernel {
@@ -119,6 +141,7 @@ impl ShardKernel {
             combine: Combine::Sum,
             gather: EdgeGather::DegreeMass,
             apply: Apply::Affine { scale: damping, base: BaseMass::Uniform { mass: 1.0 - damping } },
+            lane: LaneType::F32,
         }
     }
 
@@ -131,6 +154,7 @@ impl ShardKernel {
                 scale: damping,
                 base: BaseMass::Single { vertex: seed, mass: 1.0 - damping },
             },
+            lane: LaneType::F32,
         }
     }
 
@@ -140,6 +164,7 @@ impl ShardKernel {
             combine: Combine::Min,
             gather: EdgeGather::AddCost(cost),
             apply: Apply::MeetOld,
+            lane: LaneType::F32,
         }
     }
 
@@ -149,26 +174,44 @@ impl ShardKernel {
             combine: Combine::Max,
             gather: EdgeGather::MinCapacity(cost),
             apply: Apply::MeetOld,
+            lane: LaneType::F32,
         }
     }
 
-    /// Identity element of the combine.
-    #[inline]
-    pub fn identity(&self) -> f32 {
-        match self.combine {
-            Combine::Sum => 0.0,
-            Combine::Min => f32::INFINITY,
-            Combine::Max => f32::NEG_INFINITY,
+    /// Synchronous k-core peel over u32 alive flags: count alive
+    /// in-neighbors, keep the vertex alive while the count stays ≥ k.
+    pub fn kcore(k: u32) -> ShardKernel {
+        ShardKernel {
+            combine: Combine::Sum,
+            gather: EdgeGather::Indicator,
+            apply: Apply::Threshold { k },
+            lane: LaneType::U32,
         }
     }
 
-    /// Fold one contribution into the accumulator.
+    /// The same kernel over a different value lane.
+    pub fn with_lane(mut self, lane: LaneType) -> ShardKernel {
+        self.lane = lane;
+        self
+    }
+
+    /// Identity element of the combine, in lane type `T`.
     #[inline]
-    pub fn combine(&self, acc: f32, contribution: f32) -> f32 {
+    pub fn identity_t<T: Lane>(&self) -> T {
         match self.combine {
-            Combine::Sum => acc + contribution,
-            Combine::Min => acc.min(contribution),
-            Combine::Max => acc.max(contribution),
+            Combine::Sum => T::ZERO,
+            Combine::Min => T::MIN_IDENTITY,
+            Combine::Max => T::MAX_IDENTITY,
+        }
+    }
+
+    /// Fold one contribution into the accumulator, in lane type `T`.
+    #[inline]
+    pub fn combine_t<T: Lane>(&self, acc: T, contribution: T) -> T {
+        match self.combine {
+            Combine::Sum => acc.add(contribution),
+            Combine::Min => acc.meet_min(contribution),
+            Combine::Max => acc.meet_max(contribution),
         }
     }
 
@@ -178,32 +221,63 @@ impl ShardKernel {
     /// `src_val * inv_u` here rounds identically, so both paths agree
     /// bit-for-bit.
     #[inline]
-    pub fn edge_value(&self, src_val: f32, inv_u: f32, w: f32) -> f32 {
+    pub fn edge_value_t<T: Lane>(&self, src_val: T, inv_u: f32, w: f32) -> T {
         match self.gather {
-            EdgeGather::DegreeMass => src_val * inv_u,
-            EdgeGather::AddCost(cost) => src_val + cost.apply(w),
-            EdgeGather::MinCapacity(cost) => src_val.min(cost.apply(w)),
+            EdgeGather::DegreeMass => src_val.degree_mass(inv_u),
+            EdgeGather::AddCost(cost) => src_val.add(T::cost(cost, w)),
+            EdgeGather::MinCapacity(cost) => src_val.meet_min(T::cost(cost, w)),
+            EdgeGather::Indicator => src_val.indicator(),
         }
     }
 
     /// Produce the vertex's next value from the folded accumulator.
     #[inline]
-    pub fn apply(&self, v: VertexId, n: u32, old: f32, acc: f32) -> f32 {
+    pub fn apply_t<T: Lane>(&self, v: VertexId, n: u32, old: T, acc: T) -> T {
         match self.apply {
-            Apply::Affine { scale, base } => base.at(v, n) + scale * acc,
-            Apply::MeetOld => self.combine(old, acc),
+            Apply::Affine { scale, base } => T::affine(acc, scale, base.at(v, n)),
+            Apply::MeetOld => self.combine_t(old, acc),
+            Apply::Threshold { k } => {
+                if old != T::ZERO && acc.count_ge(k) {
+                    T::ONE
+                } else {
+                    T::ZERO
+                }
+            }
         }
     }
 
     /// Activation predicate: sum kernels re-activate on any change,
     /// monotone kernels only on strict improvement.
     #[inline]
-    pub fn is_update(&self, old: f32, new: f32) -> bool {
+    pub fn is_update_t<T: Lane>(&self, old: T, new: T) -> bool {
         match self.combine {
             Combine::Sum => old != new,
             Combine::Min => new < old,
             Combine::Max => new > old,
         }
+    }
+
+    /// f32 conveniences — the historical single-lane API, kept for the
+    /// float apps, the baseline sweeps and the PJRT backend.
+    #[inline]
+    pub fn identity(&self) -> f32 {
+        self.identity_t::<f32>()
+    }
+    #[inline]
+    pub fn combine(&self, acc: f32, contribution: f32) -> f32 {
+        self.combine_t::<f32>(acc, contribution)
+    }
+    #[inline]
+    pub fn edge_value(&self, src_val: f32, inv_u: f32, w: f32) -> f32 {
+        self.edge_value_t::<f32>(src_val, inv_u, w)
+    }
+    #[inline]
+    pub fn apply(&self, v: VertexId, n: u32, old: f32, acc: f32) -> f32 {
+        self.apply_t::<f32>(v, n, old, acc)
+    }
+    #[inline]
+    pub fn is_update(&self, old: f32, new: f32) -> bool {
+        self.is_update_t::<f32>(old, new)
     }
 
     /// Whether the execution core should pre-fold the per-vertex
@@ -227,13 +301,15 @@ impl ShardKernel {
 pub trait VertexProgram: Sync {
     fn name(&self) -> &'static str;
 
-    /// Initial vertex values and the initially-active vertex set.
-    fn init(&self, num_vertices: u32) -> (Vec<f32>, Vec<VertexId>);
+    /// Initial vertex values (in the kernel's lane type) and the
+    /// initially-active vertex set.
+    fn init(&self, num_vertices: u32) -> (LaneVec, Vec<VertexId>);
 
     /// The shard kernel driving `Update`.
     fn kernel(&self) -> ShardKernel;
 
-    /// Does a value change count as "activation"?
+    /// Does a value change count as "activation"?  (f32 lanes; integer
+    /// apps go through `ShardKernel::is_update_t`.)
     #[inline]
     fn is_update(&self, old: f32, new: f32) -> bool {
         self.kernel().is_update(old, new)
@@ -273,9 +349,9 @@ impl VertexProgram for PageRank {
         "pagerank"
     }
 
-    fn init(&self, n: u32) -> (Vec<f32>, Vec<VertexId>) {
+    fn init(&self, n: u32) -> (LaneVec, Vec<VertexId>) {
         let v = vec![1.0 / n.max(1) as f32; n as usize];
-        (v, (0..n).collect())
+        (v.into(), (0..n).collect())
     }
 
     fn kernel(&self) -> ShardKernel {
@@ -303,13 +379,13 @@ impl VertexProgram for Ppr {
         "ppr"
     }
 
-    fn init(&self, n: u32) -> (Vec<f32>, Vec<VertexId>) {
+    fn init(&self, n: u32) -> (LaneVec, Vec<VertexId>) {
         // walk mass starts entirely at the seed
         let mut v = vec![0.0f32; n as usize];
         if self.seed < n {
             v[self.seed as usize] = 1.0;
         }
-        (v, (0..n).collect())
+        (v.into(), (0..n).collect())
     }
 
     fn kernel(&self) -> ShardKernel {
@@ -334,12 +410,12 @@ impl VertexProgram for Sssp {
         "sssp"
     }
 
-    fn init(&self, n: u32) -> (Vec<f32>, Vec<VertexId>) {
+    fn init(&self, n: u32) -> (LaneVec, Vec<VertexId>) {
         let mut v = vec![f32::INFINITY; n as usize];
         if self.source < n {
             v[self.source as usize] = 0.0;
         }
-        (v, vec![self.source])
+        (v.into(), vec![self.source])
     }
 
     fn kernel(&self) -> ShardKernel {
@@ -349,7 +425,8 @@ impl VertexProgram for Sssp {
 
 /// Weakly connected components via min-label propagation (Algorithm 3
 /// lines 26–36; run on the symmetrised graph).  Labels are carried as f32
-/// — exact for ids < 2²⁴, asserted by the execution core.
+/// — exact for ids < 2²⁴, asserted by the execution core.  [`Wcc`] is
+/// the same fixpoint over exact u32 labels with no id ceiling.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Cc;
 
@@ -358,8 +435,9 @@ impl VertexProgram for Cc {
         "cc"
     }
 
-    fn init(&self, n: u32) -> (Vec<f32>, Vec<VertexId>) {
-        ((0..n).map(|i| i as f32).collect(), (0..n).collect())
+    fn init(&self, n: u32) -> (LaneVec, Vec<VertexId>) {
+        let v: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        (v.into(), (0..n).collect())
     }
 
     fn kernel(&self) -> ShardKernel {
@@ -384,12 +462,12 @@ impl VertexProgram for Bfs {
         "bfs"
     }
 
-    fn init(&self, n: u32) -> (Vec<f32>, Vec<VertexId>) {
+    fn init(&self, n: u32) -> (LaneVec, Vec<VertexId>) {
         let mut v = vec![f32::INFINITY; n as usize];
         if self.source < n {
             v[self.source as usize] = 0.0;
         }
-        (v, vec![self.source])
+        (v.into(), vec![self.source])
     }
 
     fn kernel(&self) -> ShardKernel {
@@ -416,18 +494,106 @@ impl VertexProgram for Widest {
         "widest"
     }
 
-    fn init(&self, n: u32) -> (Vec<f32>, Vec<VertexId>) {
+    fn init(&self, n: u32) -> (LaneVec, Vec<VertexId>) {
         // unreachable vertices stay at width 0 (capacities are positive);
         // the source itself has unconstrained width
         let mut v = vec![0.0f32; n as usize];
         if self.source < n {
             v[self.source as usize] = f32::INFINITY;
         }
-        (v, vec![self.source])
+        (v.into(), vec![self.source])
     }
 
     fn kernel(&self) -> ShardKernel {
         ShardKernel::widest_path(EdgeCost::Weights)
+    }
+}
+
+/// Weakly connected components / label propagation over exact u32
+/// labels: each vertex starts labelled with its own id and keeps the
+/// minimum label seen over its in-edges until fixpoint.  On a
+/// symmetrised graph the fixpoint labels components; on a directed
+/// graph it is min-label reachability (identical semantics to [`Cc`],
+/// without the f32 2²⁴ id ceiling).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Wcc;
+
+impl VertexProgram for Wcc {
+    fn name(&self) -> &'static str {
+        "wcc"
+    }
+
+    fn init(&self, n: u32) -> (LaneVec, Vec<VertexId>) {
+        let v: Vec<u32> = (0..n).collect();
+        (v.into(), (0..n).collect())
+    }
+
+    fn kernel(&self) -> ShardKernel {
+        ShardKernel::relax_min(EdgeCost::Zero).with_lane(LaneType::U32)
+    }
+}
+
+/// BFS levels over exact u32 hop counts.  Unreached vertices sit at
+/// `u32::MAX`; the saturating lane add keeps them there (`MAX ⊕ 1 =
+/// MAX`), so no sentinel check is needed in the hot loop.
+#[derive(Clone, Copy, Debug)]
+pub struct BfsLevels {
+    pub source: VertexId,
+}
+
+impl BfsLevels {
+    pub fn new(source: VertexId) -> Self {
+        BfsLevels { source }
+    }
+}
+
+impl VertexProgram for BfsLevels {
+    fn name(&self) -> &'static str {
+        "bfs_levels"
+    }
+
+    fn init(&self, n: u32) -> (LaneVec, Vec<VertexId>) {
+        let mut v = vec![u32::MAX; n as usize];
+        if self.source < n {
+            v[self.source as usize] = 0;
+        }
+        (v.into(), vec![self.source])
+    }
+
+    fn kernel(&self) -> ShardKernel {
+        ShardKernel::relax_min(EdgeCost::Unit).with_lane(LaneType::U32)
+    }
+}
+
+/// k-core decomposition membership via the synchronous peel: every
+/// vertex starts alive (`1`), and each iteration keeps a vertex alive
+/// iff at least `k` of its in-neighbors are alive.  Alive flags only
+/// ever fall, so the fixpoint is the k-core indicator (run on the
+/// symmetrised graph for the classic undirected k-core).  The peel is
+/// selective-scheduling-safe: a vertex whose in-neighborhood did not
+/// change cannot change either.
+#[derive(Clone, Copy, Debug)]
+pub struct KCore {
+    pub k: u32,
+}
+
+impl KCore {
+    pub fn new(k: u32) -> Self {
+        KCore { k }
+    }
+}
+
+impl VertexProgram for KCore {
+    fn name(&self) -> &'static str {
+        "kcore"
+    }
+
+    fn init(&self, n: u32) -> (LaneVec, Vec<VertexId>) {
+        (vec![1u32; n as usize].into(), (0..n).collect())
+    }
+
+    fn kernel(&self) -> ShardKernel {
+        ShardKernel::kcore(self.k)
     }
 }
 
@@ -445,8 +611,8 @@ mod tests {
     #[test]
     fn sssp_init_source_only() {
         let (v, active) = Sssp::new(2).init(4);
-        assert_eq!(v[2], 0.0);
-        assert!(v[0].is_infinite());
+        assert_eq!(v.f32s()[2], 0.0);
+        assert!(v.f32s()[0].is_infinite());
         assert_eq!(active, vec![2]);
     }
 
@@ -467,9 +633,47 @@ mod tests {
     #[test]
     fn widest_init_source_unbounded() {
         let (v, active) = Widest::new(0).init(3);
-        assert!(v[0].is_infinite());
-        assert_eq!(v[1], 0.0);
+        assert!(v.f32s()[0].is_infinite());
+        assert_eq!(v.f32s()[1], 0.0);
         assert_eq!(active, vec![0]);
+    }
+
+    #[test]
+    fn wcc_init_own_labels_u32() {
+        let (v, active) = Wcc.init(3);
+        assert_eq!(v, LaneVec::from(vec![0u32, 1, 2]));
+        assert_eq!(v.lane_type(), LaneType::U32);
+        assert_eq!(active.len(), 3);
+        assert_eq!(Wcc.kernel().lane, LaneType::U32);
+        assert!(!Wcc.needs_weights());
+    }
+
+    #[test]
+    fn bfs_levels_init_saturating_frontier() {
+        let (v, active) = BfsLevels::new(1).init(3);
+        assert_eq!(v, LaneVec::from(vec![u32::MAX, 0, u32::MAX]));
+        assert_eq!(active, vec![1]);
+        let k = BfsLevels::new(1).kernel();
+        assert_eq!(k.lane, LaneType::U32);
+        // unreached stays unreached: MAX ⊕ 1 saturates
+        assert_eq!(k.edge_value_t::<u32>(u32::MAX, 0.0, 7.0), u32::MAX);
+        assert_eq!(k.edge_value_t::<u32>(2, 0.0, 7.0), 3);
+    }
+
+    #[test]
+    fn kcore_peel_semantics() {
+        let (v, active) = KCore::new(2).init(4);
+        assert_eq!(v, LaneVec::from(vec![1u32; 4]));
+        assert_eq!(active.len(), 4);
+        let k = ShardKernel::kcore(2);
+        assert_eq!(k.lane, LaneType::U32);
+        // gather counts alive in-neighbors
+        assert_eq!(k.edge_value_t::<u32>(0, 0.0, 3.0), 0);
+        assert_eq!(k.edge_value_t::<u32>(5, 0.0, 3.0), 1);
+        // apply: dead stays dead, alive needs >= k alive neighbors
+        assert_eq!(k.apply_t::<u32>(0, 4, 0, 99), 0);
+        assert_eq!(k.apply_t::<u32>(0, 4, 1, 1), 0);
+        assert_eq!(k.apply_t::<u32>(0, 4, 1, 2), 1);
     }
 
     #[test]
@@ -485,6 +689,13 @@ mod tests {
         let wd = Widest::new(0);
         assert!(wd.is_update(3.0, 5.0));
         assert!(!wd.is_update(5.0, 3.0));
+        // integer activation mirrors the float rules exactly
+        let wk = Wcc.kernel();
+        assert!(wk.is_update_t::<u32>(5, 3));
+        assert!(!wk.is_update_t::<u32>(3, 5));
+        let kk = ShardKernel::kcore(2);
+        assert!(kk.is_update_t::<u32>(1, 0));
+        assert!(!kk.is_update_t::<u32>(1, 1));
     }
 
     #[test]
@@ -518,6 +729,18 @@ mod tests {
     }
 
     #[test]
+    fn integer_kernel_algebra_saturates() {
+        let ss64 = ShardKernel::relax_min(EdgeCost::Unit).with_lane(LaneType::U64);
+        assert_eq!(ss64.lane, LaneType::U64);
+        assert_eq!(ss64.identity_t::<u64>(), u64::MAX);
+        assert_eq!(ss64.combine_t::<u64>(3, 5), 3);
+        assert_eq!(ss64.edge_value_t::<u64>(u64::MAX, 0.0, 2.0), u64::MAX);
+        let sum32 = ShardKernel::kcore(1);
+        assert_eq!(sum32.identity_t::<u32>(), 0);
+        assert_eq!(sum32.combine_t::<u32>(u32::MAX, 1), u32::MAX);
+    }
+
+    #[test]
     fn base_mass_distribution() {
         let u = BaseMass::Uniform { mass: 0.15 };
         assert!((u.at(0, 3) - 0.05).abs() < 1e-7);
@@ -535,5 +758,9 @@ mod tests {
         assert!(!Cc.needs_weights());
         assert!(!Bfs::new(0).needs_weights());
         assert!(Widest::new(0).needs_weights());
+        assert!(!Wcc.uses_out_degrees());
+        assert!(!BfsLevels::new(0).needs_weights());
+        assert!(!KCore::new(2).needs_weights());
+        assert!(!KCore::new(2).uses_out_degrees());
     }
 }

@@ -1,0 +1,261 @@
+//! Naive single-threaded reference implementations of all nine apps.
+//!
+//! Every oracle is a plain edge-list sweep over the in-memory graph —
+//! no `ShardKernel`, no chunking, no scratch arenas, no engine — so a
+//! bug in the shared kernel machinery cannot cancel out of an
+//! oracle-vs-engine comparison.  `rust/tests/oracle.rs` cross-checks
+//! every app on every engine against these on seeded random graphs.
+//!
+//! Comparison contract (mirrors the kernel-equivalence gates):
+//!
+//! - PageRank/PPR accumulate here in **f64**, so engine results agree
+//!   only to a relative epsilon (the engines reassociate f32 sums);
+//! - the monotone f32 relaxations (SSSP, BFS, CC, widest) converge to a
+//!   unique least fixpoint built from the same f32 operations, so
+//!   converged engine results must match **bit-for-bit**;
+//! - the integer apps (WCC, BFS levels, k-core) are exact by
+//!   construction — any deviation is a bug.
+
+use crate::graph::{Edge, VertexId};
+
+fn out_degrees(edges: &[Edge], n: u32) -> Vec<u32> {
+    let mut deg = vec![0u32; n as usize];
+    for e in edges {
+        deg[e.src as usize] += 1;
+    }
+    deg
+}
+
+/// PageRank: `iters` synchronous sweeps of
+/// `rank'[v] = (1-d)/n + d · Σ rank[u]/outdeg(u)` in f64.
+pub fn pagerank(edges: &[Edge], n: u32, damping: f32, iters: u32) -> Vec<f32> {
+    power_iterate(edges, n, damping, iters, |_| 1.0 / n.max(1) as f64, |_| 1.0 / n.max(1) as f64)
+}
+
+/// Personalized PageRank: all walk mass starts at — and teleports back
+/// to — the seed vertex.
+pub fn ppr(edges: &[Edge], n: u32, damping: f32, seed: VertexId, iters: u32) -> Vec<f32> {
+    power_iterate(
+        edges,
+        n,
+        damping,
+        iters,
+        |v| if v == seed { 1.0 } else { 0.0 },
+        |v| if v == seed { 1.0 } else { 0.0 },
+    )
+}
+
+fn power_iterate(
+    edges: &[Edge],
+    n: u32,
+    damping: f32,
+    iters: u32,
+    init: impl Fn(VertexId) -> f64,
+    reset: impl Fn(VertexId) -> f64,
+) -> Vec<f32> {
+    let deg = out_degrees(edges, n);
+    let d = f64::from(damping);
+    let mut rank: Vec<f64> = (0..n).map(&init).collect();
+    for _ in 0..iters {
+        let mut acc = vec![0.0f64; n as usize];
+        for e in edges {
+            let u = e.src as usize;
+            if deg[u] > 0 {
+                acc[e.dst as usize] += rank[u] / f64::from(deg[u]);
+            }
+        }
+        rank = (0..n).map(|v| (1.0 - d) * reset(v) + d * acc[v as usize]).collect();
+    }
+    rank.into_iter().map(|x| x as f32).collect()
+}
+
+/// Asynchronous relaxation to the least fixpoint of
+/// `val[dst] = meet(val[dst], gather(val[src], w))`.
+fn relax_f32(
+    edges: &[Edge],
+    mut val: Vec<f32>,
+    gather: impl Fn(f32, f32) -> f32,
+    better: impl Fn(f32, f32) -> bool,
+) -> Vec<f32> {
+    loop {
+        let mut changed = false;
+        for e in edges {
+            let cand = gather(val[e.src as usize], e.weight);
+            if better(cand, val[e.dst as usize]) {
+                val[e.dst as usize] = cand;
+                changed = true;
+            }
+        }
+        if !changed {
+            return val;
+        }
+    }
+}
+
+/// Single-source shortest paths (Bellman-Ford to fixpoint, f32 sums).
+pub fn sssp(edges: &[Edge], n: u32, source: VertexId) -> Vec<f32> {
+    let mut d = vec![f32::INFINITY; n as usize];
+    if source < n {
+        d[source as usize] = 0.0;
+    }
+    relax_f32(edges, d, |s, w| s + w, |cand, cur| cand < cur)
+}
+
+/// BFS hop counts carried as f32 (the historical `bfs` app).
+pub fn bfs_hops(edges: &[Edge], n: u32, source: VertexId) -> Vec<f32> {
+    let mut d = vec![f32::INFINITY; n as usize];
+    if source < n {
+        d[source as usize] = 0.0;
+    }
+    relax_f32(edges, d, |s, _| s + 1.0, |cand, cur| cand < cur)
+}
+
+/// Min-label propagation over the directed edge set, f32 labels (the
+/// historical `cc` app; components when the graph is symmetrised).
+pub fn cc_labels(edges: &[Edge], n: u32) -> Vec<f32> {
+    let init: Vec<f32> = (0..n).map(|v| v as f32).collect();
+    relax_f32(edges, init, |s, _| s, |cand, cur| cand < cur)
+}
+
+/// Widest (maximum-bottleneck) paths from one source.
+pub fn widest(edges: &[Edge], n: u32, source: VertexId) -> Vec<f32> {
+    let mut wd = vec![0.0f32; n as usize];
+    if source < n {
+        wd[source as usize] = f32::INFINITY;
+    }
+    relax_f32(edges, wd, |s, w| s.min(w), |cand, cur| cand > cur)
+}
+
+/// Min-label propagation over exact u32 labels (the `wcc` app).
+pub fn wcc_labels(edges: &[Edge], n: u32) -> Vec<u32> {
+    let mut label: Vec<u32> = (0..n).collect();
+    loop {
+        let mut changed = false;
+        for e in edges {
+            let cand = label[e.src as usize];
+            if cand < label[e.dst as usize] {
+                label[e.dst as usize] = cand;
+                changed = true;
+            }
+        }
+        if !changed {
+            return label;
+        }
+    }
+}
+
+/// BFS levels over exact u32 hop counts; unreachable stays `u32::MAX`
+/// (the saturating `MAX ⊕ 1 = MAX` mirrors the engine's lane add).
+pub fn bfs_levels(edges: &[Edge], n: u32, source: VertexId) -> Vec<u32> {
+    let mut level = vec![u32::MAX; n as usize];
+    if source < n {
+        level[source as usize] = 0;
+    }
+    loop {
+        let mut changed = false;
+        for e in edges {
+            let cand = level[e.src as usize].saturating_add(1);
+            if cand < level[e.dst as usize] {
+                level[e.dst as usize] = cand;
+                changed = true;
+            }
+        }
+        if !changed {
+            return level;
+        }
+    }
+}
+
+/// k-core membership via the synchronous peel: every vertex starts
+/// alive; each round keeps a vertex alive iff at least `k` of its
+/// in-neighbors are alive.  Returns the fixpoint indicator vector.
+pub fn kcore(edges: &[Edge], n: u32, k: u32) -> Vec<u32> {
+    let mut alive = vec![1u32; n as usize];
+    loop {
+        let mut cnt = vec![0u32; n as usize];
+        for e in edges {
+            if alive[e.src as usize] != 0 {
+                cnt[e.dst as usize] = cnt[e.dst as usize].saturating_add(1);
+            }
+        }
+        let next: Vec<u32> = (0..n as usize)
+            .map(|v| u32::from(alive[v] != 0 && cnt[v] >= k))
+            .collect();
+        if next == alive {
+            return alive;
+        }
+        alive = next;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // a diamond with a pendant: 0→1, 0→2, 1→3, 2→3, 3→4 (weighted)
+    fn diamond() -> Vec<Edge> {
+        vec![
+            Edge::weighted(0, 1, 2.0),
+            Edge::weighted(0, 2, 5.0),
+            Edge::weighted(1, 3, 1.0),
+            Edge::weighted(2, 3, 1.0),
+            Edge::weighted(3, 4, 4.0),
+        ]
+    }
+
+    #[test]
+    fn sssp_and_bfs_fixpoints_on_the_diamond() {
+        let e = diamond();
+        assert_eq!(sssp(&e, 5, 0), vec![0.0, 2.0, 5.0, 3.0, 7.0]);
+        assert_eq!(bfs_hops(&e, 5, 0), vec![0.0, 1.0, 1.0, 2.0, 3.0]);
+        assert_eq!(bfs_levels(&e, 5, 0), vec![0, 1, 1, 2, 3]);
+        // unreachable saturates
+        assert_eq!(bfs_levels(&e, 5, 4), vec![u32::MAX; 4].into_iter().chain([0]).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn widest_takes_the_fat_branch() {
+        // to 3: via 1 width min(2,1)=1, via 2 width min(5,1)=1 → 1
+        let w = widest(&diamond(), 5, 0);
+        assert_eq!(w, vec![f32::INFINITY, 2.0, 5.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn labels_propagate_to_the_minimum() {
+        let e = diamond();
+        assert_eq!(cc_labels(&e, 5), vec![0.0; 5]);
+        assert_eq!(wcc_labels(&e, 5), vec![0; 5]);
+        // an isolated vertex keeps its own label
+        assert_eq!(wcc_labels(&e, 6)[5], 5);
+    }
+
+    #[test]
+    fn kcore_peels_the_pendant_chain() {
+        // symmetrize a triangle plus a pendant: every triangle vertex has
+        // 2 in-neighbors, the pendant has 1 → 2-core = the triangle
+        let mut e = vec![
+            Edge::new(0, 1),
+            Edge::new(1, 2),
+            Edge::new(2, 0),
+            Edge::new(2, 3),
+        ];
+        let rev: Vec<Edge> = e.iter().map(|x| Edge::new(x.dst, x.src)).collect();
+        e.extend(rev);
+        assert_eq!(kcore(&e, 4, 2), vec![1, 1, 1, 0]);
+        // the 3-core is empty — and the peel cascades to kill everything
+        assert_eq!(kcore(&e, 4, 3), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn pagerank_mass_is_conserved_without_danglers() {
+        // a 3-cycle: stationary distribution is uniform
+        let e = vec![Edge::new(0, 1), Edge::new(1, 2), Edge::new(2, 0)];
+        let r = pagerank(&e, 3, 0.85, 50);
+        for &x in &r {
+            assert!((x - 1.0 / 3.0).abs() < 1e-6, "{r:?}");
+        }
+        let p = ppr(&e, 3, 0.85, 0, 50);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[0] > p[1] && p[0] > p[2], "seed keeps the most mass: {p:?}");
+    }
+}

@@ -23,8 +23,8 @@ use anyhow::Result;
 
 use crate::apps::VertexProgram;
 use crate::exec::{
-    fold_edges_interval, mark_interval, ExecCore, IterCtx, RangeMarker, Scratch, ShardSource,
-    SharedDst, UnitOutput,
+    fold_edges_interval, mark_interval, ExecCore, IterCtx, LaneVec, RangeMarker, Scratch,
+    ShardSource, SharedDst, UnitOutput,
 };
 use crate::graph::{Edge, EdgeList, VertexId};
 use crate::metrics::RunMetrics;
@@ -41,7 +41,7 @@ pub struct DswEngine {
     num_vertices: u32,
     num_edges: u64,
     inv_out_deg: Vec<f32>,
-    values: Vec<f32>,
+    values: LaneVec,
 }
 
 impl DswEngine {
@@ -54,7 +54,7 @@ impl DswEngine {
             num_vertices: 0,
             num_edges: 0,
             inv_out_deg: Vec::new(),
-            values: Vec::new(),
+            values: LaneVec::from(Vec::<f32>::new()),
         }
     }
 }
@@ -112,7 +112,7 @@ impl BaselineEngine for DswEngine {
         Ok(run)
     }
 
-    fn values(&self) -> &[f32] {
+    fn values_lane(&self) -> &LaneVec {
         &self.values
     }
 
@@ -169,9 +169,9 @@ impl ShardSource for DswSource<'_> {
         let hi = ((j + 1) * eng.chunk_span).min(n);
         if lo < hi {
             // SAFETY: destination chunks are disjoint by construction.
-            let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
-            fold_edges_interval(ctx, &col_edges, lo, out, scratch);
-            mark_interval(ctx, lo, out, marker);
+            let mut out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
+            fold_edges_interval(ctx, &col_edges, lo, out.rb(), scratch);
+            mark_interval(ctx, lo, out.shared(), marker);
         }
         let chunk_bytes = C_VERTEX * eng.chunk_span as u64;
         self.disk.account_write(chunk_bytes); // destination chunk j
@@ -226,7 +226,8 @@ mod tests {
         let mut e = DswEngine::new(BaselineConfig { p: 9, ..Default::default() });
         e.preprocess(&g, &disk).unwrap();
         e.run(&Cc, 30, &disk).unwrap();
-        let (mut src, _) = Cc.init(g.num_vertices);
+        let (init, _) = Cc.init(g.num_vertices);
+        let mut src = init.f32s().to_vec();
         for _ in 0..30 {
             let next = sweep(Cc.kernel(), &g.edges, g.num_vertices, &[], &src);
             if next == src {

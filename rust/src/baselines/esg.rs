@@ -21,7 +21,7 @@ use anyhow::Result;
 
 use crate::apps::VertexProgram;
 use crate::exec::{
-    ExecCore, IterCtx, RangeMarker, Scratch, ShardSource, SharedDst, UnitOutput,
+    ExecCore, IterCtx, LaneVec, RangeMarker, Scratch, ShardSource, SharedDst, UnitOutput,
 };
 use crate::graph::{Edge, EdgeList, VertexId};
 use crate::metrics::RunMetrics;
@@ -36,7 +36,7 @@ pub struct EsgEngine {
     num_vertices: u32,
     num_edges: u64,
     inv_out_deg: Vec<f32>,
-    values: Vec<f32>,
+    values: LaneVec,
 }
 
 impl EsgEngine {
@@ -47,7 +47,7 @@ impl EsgEngine {
             num_vertices: 0,
             num_edges: 0,
             inv_out_deg: Vec::new(),
-            values: Vec::new(),
+            values: LaneVec::from(Vec::<f32>::new()),
         }
     }
 }
@@ -96,7 +96,7 @@ impl BaselineEngine for EsgEngine {
         Ok(run)
     }
 
-    fn values(&self) -> &[f32] {
+    fn values_lane(&self) -> &LaneVec {
         &self.values
     }
 
@@ -211,7 +211,8 @@ mod tests {
         e.run(&PageRank::new(), 5, &disk).unwrap();
         // reference via shared sweep
         let inv = super::super::inv_out_degrees(&g);
-        let (mut src, _) = PageRank::new().init(g.num_vertices);
+        let (init, _) = PageRank::new().init(g.num_vertices);
+        let mut src = init.f32s().to_vec();
         for _ in 0..5 {
             src = super::super::sweep(
                 PageRank::new().kernel(),

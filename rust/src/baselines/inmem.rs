@@ -20,7 +20,8 @@ use anyhow::Result;
 
 use crate::apps::VertexProgram;
 use crate::exec::{
-    mark_interval, ExecCore, IterCtx, RangeMarker, Scratch, ShardSource, SharedDst, UnitOutput,
+    mark_interval, ExecCore, IterCtx, LaneVec, RangeMarker, Scratch, ShardSource, SharedDst,
+    UnitOutput,
 };
 use crate::graph::{Csr, EdgeList, VertexId};
 use crate::metrics::RunMetrics;
@@ -34,7 +35,7 @@ pub struct InMemEngine {
     num_vertices: u32,
     num_edges: u64,
     inv_out_deg: Vec<f32>,
-    values: Vec<f32>,
+    values: LaneVec,
     /// Loading-phase seconds (Fig 9's data-loading bar).
     pub load_seconds: f64,
     /// Peak memory of the loading phase (GraphMat's sort roughly doubles
@@ -50,7 +51,7 @@ impl InMemEngine {
             num_vertices: 0,
             num_edges: 0,
             inv_out_deg: Vec::new(),
-            values: Vec::new(),
+            values: LaneVec::from(Vec::<f32>::new()),
             load_seconds: 0.0,
             load_peak_bytes: 0,
         }
@@ -88,7 +89,7 @@ impl BaselineEngine for InMemEngine {
         Ok(run)
     }
 
-    fn values(&self) -> &[f32] {
+    fn values_lane(&self) -> &LaneVec {
         &self.values
     }
 
@@ -162,9 +163,9 @@ impl ShardSource for InMemSource<'_> {
         let csr = self.eng.csr.as_ref().expect("run checks csr");
         let n = self.eng.num_vertices as usize;
         // SAFETY: the single unit owns the whole vertex range.
-        let out = unsafe { dst.claim(0, n) };
-        crate::engine::native_update(ctx, csr.slices(), 0, out);
-        mark_interval(ctx, 0, out, marker);
+        let mut out = unsafe { dst.claim(0, n) };
+        crate::engine::native_update(ctx, csr.slices(), 0, out.rb());
+        mark_interval(ctx, 0, out.shared(), marker);
         Ok(UnitOutput::InPlace)
     }
 
@@ -210,7 +211,8 @@ mod tests {
         e.load(&g, &disk).unwrap();
         e.run(&PageRank::new(), 5, &disk).unwrap();
         let inv = inv_out_degrees(&g);
-        let (mut src, _) = PageRank::new().init(g.num_vertices);
+        let (init, _) = PageRank::new().init(g.num_vertices);
+        let mut src = init.f32s().to_vec();
         for _ in 0..5 {
             src = super::super::sweep(
                 PageRank::new().kernel(),

@@ -35,6 +35,7 @@ pub mod psw;
 use anyhow::Result;
 
 use crate::apps::{Combine, ShardKernel, VertexProgram};
+use crate::exec::lane::{with_lane, Lane, LaneType, LaneVec};
 use crate::exec::ExecConfig;
 use crate::graph::EdgeList;
 use crate::metrics::RunMetrics;
@@ -117,8 +118,14 @@ pub trait BaselineEngine {
     /// vertex math.
     fn run(&mut self, app: &dyn VertexProgram, iters: u32, disk: &Disk) -> Result<RunMetrics>;
 
-    /// Final vertex values of the last `run`.
-    fn values(&self) -> &[f32];
+    /// Final vertex values of the last `run`, in the app's lane type.
+    fn values_lane(&self) -> &LaneVec;
+
+    /// f32 convenience view of [`Self::values_lane`] (float apps only;
+    /// panics on integer lanes).
+    fn values(&self) -> &[f32] {
+        self.values_lane().f32s()
+    }
 
     /// Resident-memory model in bytes (Fig 11).
     fn memory_bytes(&self) -> u64;
@@ -132,6 +139,41 @@ pub trait BaselineEngine {
 /// because this sweep adds sequentially while the engines fold rows
 /// through chunked multi-lane accumulators (see `exec::kernel`).
 /// Destinations with ≤ 3 in-edges stay bit-identical even for sums.
+pub fn sweep_t<T: Lane>(
+    kernel: ShardKernel,
+    edges_by_dst: &[crate::graph::Edge],
+    num_vertices: u32,
+    inv_out_deg: &[f32],
+    src: &[T],
+) -> Vec<T> {
+    let n = num_vertices as usize;
+    match kernel.combine {
+        Combine::Sum => {
+            let mut acc = vec![T::ZERO; n];
+            for e in edges_by_dst {
+                let u = e.src as usize;
+                let inv = inv_out_deg.get(u).copied().unwrap_or(0.0);
+                acc[e.dst as usize] =
+                    acc[e.dst as usize].add(kernel.edge_value_t(src[u], inv, e.weight));
+            }
+            acc.iter()
+                .enumerate()
+                .map(|(v, &a)| kernel.apply_t(v as u32, num_vertices, src[v], a))
+                .collect()
+        }
+        Combine::Min | Combine::Max => {
+            let mut out = src.to_vec();
+            for e in edges_by_dst {
+                let u = e.src as usize;
+                let cand = kernel.edge_value_t(src[u], 0.0, e.weight);
+                out[e.dst as usize] = kernel.combine_t(out[e.dst as usize], cand);
+            }
+            out
+        }
+    }
+}
+
+/// f32 convenience over [`sweep_t`] — the historical single-lane API.
 pub fn sweep(
     kernel: ShardKernel,
     edges_by_dst: &[crate::graph::Edge],
@@ -139,29 +181,24 @@ pub fn sweep(
     inv_out_deg: &[f32],
     src: &[f32],
 ) -> Vec<f32> {
-    let n = num_vertices as usize;
-    match kernel.combine {
-        Combine::Sum => {
-            let mut acc = vec![0.0f32; n];
-            for e in edges_by_dst {
-                let u = e.src as usize;
-                acc[e.dst as usize] += kernel.edge_value(src[u], inv_out_deg[u], e.weight);
-            }
-            acc.iter()
-                .enumerate()
-                .map(|(v, &a)| kernel.apply(v as u32, num_vertices, src[v], a))
-                .collect()
-        }
-        Combine::Min | Combine::Max => {
-            let mut out = src.to_vec();
-            for e in edges_by_dst {
-                let u = e.src as usize;
-                let cand = kernel.edge_value(src[u], 0.0, e.weight);
-                out[e.dst as usize] = kernel.combine(out[e.dst as usize], cand);
-            }
-            out
-        }
-    }
+    sweep_t::<f32>(kernel, edges_by_dst, num_vertices, inv_out_deg, src)
+}
+
+/// Lane-erased [`sweep_t`]: dispatch on the kernel's lane tag.
+pub fn sweep_lane(
+    kernel: ShardKernel,
+    edges_by_dst: &[crate::graph::Edge],
+    num_vertices: u32,
+    inv_out_deg: &[f32],
+    src: &LaneVec,
+) -> LaneVec {
+    with_lane!(kernel.lane, T => T::wrap(sweep_t::<T>(
+        kernel,
+        edges_by_dst,
+        num_vertices,
+        inv_out_deg,
+        T::of_slice(src.as_slice()),
+    )))
 }
 
 /// Count active vertices after a sweep (the app's update semantics).
@@ -170,6 +207,22 @@ pub fn count_updates(app: &dyn VertexProgram, src: &[f32], dst: &[f32]) -> u64 {
         .zip(dst)
         .filter(|&(&a, &b)| app.is_update(a, b))
         .count() as u64
+}
+
+/// Lane-erased [`count_updates`]: f32 lanes keep the app's (overridable)
+/// activation predicate; integer lanes use the kernel's exactly.
+pub fn count_updates_lane(app: &dyn VertexProgram, src: &LaneVec, dst: &LaneVec) -> u64 {
+    let kernel = app.kernel();
+    if kernel.lane == LaneType::F32 {
+        return count_updates(app, src.f32s(), dst.f32s());
+    }
+    with_lane!(kernel.lane, T => {
+        T::of_slice(src.as_slice())
+            .iter()
+            .zip(T::of_slice(dst.as_slice()))
+            .filter(|&(&a, &b)| kernel.is_update_t(a, b))
+            .count() as u64
+    })
 }
 
 /// Shared out-degree inverse used by the sum kernels.

@@ -28,8 +28,8 @@ use anyhow::Result;
 
 use crate::apps::VertexProgram;
 use crate::exec::{
-    fold_edges_interval, mark_interval, ExecCore, IterCtx, RangeMarker, Scratch, ShardSource,
-    SharedDst, UnitOutput,
+    fold_edges_interval, mark_interval, ExecCore, IterCtx, LaneVec, RangeMarker, Scratch,
+    ShardSource, SharedDst, UnitOutput,
 };
 use crate::graph::{Edge, EdgeList, VertexId};
 use crate::metrics::RunMetrics;
@@ -50,7 +50,7 @@ pub struct PswEngine {
     num_vertices: u32,
     num_edges: u64,
     inv_out_deg: Vec<f32>,
-    values: Vec<f32>,
+    values: LaneVec,
 }
 
 impl PswEngine {
@@ -63,7 +63,7 @@ impl PswEngine {
             num_vertices: 0,
             num_edges: 0,
             inv_out_deg: Vec::new(),
-            values: Vec::new(),
+            values: LaneVec::from(Vec::<f32>::new()),
         }
     }
 }
@@ -155,7 +155,7 @@ impl BaselineEngine for PswEngine {
         Ok(run)
     }
 
-    fn values(&self) -> &[f32] {
+    fn values_lane(&self) -> &LaneVec {
         &self.values
     }
 
@@ -242,9 +242,9 @@ impl ShardSource for PswSource<'_> {
         let edges = &eng.shards[id as usize];
         // SAFETY: shard intervals are disjoint by construction (bounds
         // are strictly increasing).
-        let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
-        fold_edges_interval(ctx, edges, lo, out, scratch);
-        mark_interval(ctx, lo, out, marker);
+        let mut out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
+        fold_edges_interval(ctx, edges, lo, out.rb(), scratch);
+        mark_interval(ctx, lo, out.shared(), marker);
         // write back vertices + updated edge values (both directions,
         // §3.1)
         let p = eng.shards.len() as u64;

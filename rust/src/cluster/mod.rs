@@ -20,7 +20,8 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::apps::{EdgeCost, EdgeGather, ShardKernel, VertexProgram};
-use crate::baselines::{count_updates, inv_out_degrees, C_VERTEX, D_EDGE};
+use crate::baselines::{count_updates_lane, inv_out_degrees, sweep_lane, C_VERTEX, D_EDGE};
+use crate::exec::LaneVec;
 use crate::graph::{Edge, EdgeList};
 use crate::metrics::{IterationMetrics, RunMetrics};
 
@@ -140,6 +141,8 @@ pub fn kernel_cost_factor(kernel: &ShardKernel) -> f64 {
         EdgeGather::AddCost(EdgeCost::Weights) => 1.05,
         EdgeGather::AddCost(_) => 0.9,
         EdgeGather::MinCapacity(_) => 1.2,
+        // alive-flag test, no weight fetch — as cheap as an unweighted add
+        EdgeGather::Indicator => 0.9,
     }
 }
 
@@ -149,7 +152,9 @@ pub fn kernel_cost_factor(kernel: &ShardKernel) -> f64 {
 pub fn message_payload_bytes(kernel: &ShardKernel) -> f64 {
     match kernel.gather {
         EdgeGather::DegreeMass => C_VERTEX as f64,
-        EdgeGather::AddCost(_) | EdgeGather::MinCapacity(_) => 4.0,
+        // relaxation candidates and alive indicators both ship 4 bytes
+        // (f32 or u32 — same width on the wire)
+        EdgeGather::AddCost(_) | EdgeGather::MinCapacity(_) | EdgeGather::Indicator => 4.0,
     }
 }
 
@@ -166,7 +171,7 @@ pub struct DistEngine {
     machine_edges: Vec<u64>,
     /// edges whose source and destination live on different machines.
     cross_edges: u64,
-    values: Vec<f32>,
+    values: LaneVec,
     /// estimated replication factor (GAS systems).
     replication: f64,
 }
@@ -203,7 +208,7 @@ impl DistEngine {
             owner,
             machine_edges,
             cross_edges,
-            values: Vec::new(),
+            values: LaneVec::from(Vec::<f32>::new()),
             replication,
             g,
         };
@@ -340,7 +345,7 @@ impl DistEngine {
             }
             let t0 = Instant::now();
             let active_frac = active as f64 / n.max(1) as f64;
-            let dst = crate::baselines::sweep(
+            let dst = sweep_lane(
                 adapt_kind(kernel),
                 &self.g.edges,
                 n,
@@ -364,7 +369,7 @@ impl DistEngine {
             if iter == 0 {
                 sim += self.load_seconds();
             }
-            active = count_updates(app, &src, &dst);
+            active = count_updates_lane(app, &src, &dst);
             src = dst;
             run.iterations.push(IterationMetrics {
                 iteration: iter,
@@ -392,6 +397,11 @@ impl DistEngine {
     }
 
     pub fn values(&self) -> &[f32] {
+        self.values.f32s()
+    }
+
+    /// Final values in the app's lane type (integer apps included).
+    pub fn values_lane(&self) -> &LaneVec {
         &self.values
     }
 
@@ -474,7 +484,8 @@ mod tests {
             DistEngine::new(DistSystem::PregelPlus, ClusterConfig::default(), g.clone()).unwrap();
         eng.run(&PageRank::new(), 5).unwrap();
         let inv = inv_out_degrees(&g);
-        let (mut src, _) = PageRank::new().init(g.num_vertices);
+        let (init, _) = PageRank::new().init(g.num_vertices);
+        let mut src = init.f32s().to_vec();
         for _ in 0..5 {
             src = crate::baselines::sweep(
                 PageRank::new().kernel(),
@@ -563,7 +574,8 @@ mod tests {
                 DistEngine::new(DistSystem::GraphD, ClusterConfig::default(), g.clone())
                     .unwrap();
             let run = eng.run(app, iters).unwrap();
-            let (mut src, _) = app.init(g.num_vertices);
+            let (init, _) = app.init(g.num_vertices);
+            let mut src = init.f32s().to_vec();
             for _ in 0..run.iterations.len() {
                 src = crate::baselines::sweep(app.kernel(), &g.edges, g.num_vertices, &inv, &src);
             }
@@ -572,6 +584,20 @@ mod tests {
                 assert!(m.sim_disk_seconds > 0.0, "{}: no simulated cost", app.name());
             }
         }
+    }
+
+    #[test]
+    fn wcc_matches_oracle_on_the_cluster_sim() {
+        use crate::apps::{oracle, Wcc};
+        let g = graph().to_undirected();
+        let mut eng =
+            DistEngine::new(DistSystem::PregelPlus, ClusterConfig::default(), g.clone()).unwrap();
+        let run = eng.run(&Wcc, 200).unwrap();
+        assert!(run.converged);
+        assert_eq!(
+            eng.values_lane().u32s(),
+            oracle::wcc_labels(&g.edges, g.num_vertices).as_slice()
+        );
     }
 
     #[test]

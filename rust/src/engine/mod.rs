@@ -36,8 +36,8 @@ use crate::bloom::BloomSet;
 use crate::cache::EdgeCache;
 use crate::compress::CacheMode;
 use crate::exec::{
-    schedule, BatchJob, ExecConfig, ExecCore, IterCtx, RangeMarker, Scratch, ShardSource,
-    SharedDst, UnitOutput,
+    schedule, BatchJob, ExecConfig, ExecCore, IterCtx, LaneSliceMut, LaneVec, RangeMarker,
+    Scratch, ShardSource, SharedDst, UnitOutput,
 };
 use crate::graph::{CsrRef, VertexId};
 use crate::metrics::{BatchMetrics, MemoryAccount, RunMetrics};
@@ -253,12 +253,13 @@ impl VswEngine {
         Ok(self.run_impl(app, max_iters)?.1)
     }
 
-    /// Final values convenience: run and return the vertex array.
+    /// Final values convenience: run and return the vertex array (typed
+    /// by the app's lane — f32 mass/distances, u32 labels/levels).
     pub fn run_to_values(
         &mut self,
         app: &dyn VertexProgram,
         max_iters: u32,
-    ) -> Result<(Vec<f32>, RunMetrics)> {
+    ) -> Result<(LaneVec, RunMetrics)> {
         self.run_impl(app, max_iters)
     }
 
@@ -413,7 +414,7 @@ impl VswEngine {
         &mut self,
         app: &dyn VertexProgram,
         max_iters: u32,
-    ) -> Result<(Vec<f32>, RunMetrics)> {
+    ) -> Result<(LaneVec, RunMetrics)> {
         let (mut outs, _) = self.run_jobs(&[BatchJob { app, max_iters }])?;
         let out = outs.pop().expect("one job in, one result out");
         // a solo run has no batch to protect: an isolated failure is the
@@ -502,12 +503,18 @@ impl ShardSource for VswSource<'_> {
         let rows = (b - a) as usize;
         // SAFETY: shard intervals are disjoint (prep::compute_intervals
         // invariant, verified by its tests + the debug registry).
-        let out = unsafe { dst.claim(a as usize, rows) };
+        let mut out = unsafe { dst.claim(a as usize, rows) };
         match &self.eng.cfg.backend {
-            Backend::Native => native_update(ctx, shard.csr_ref(), a, out),
-            Backend::Pjrt(exe) => pjrt_update(ctx, exe, &shard, out)?,
+            Backend::Native => native_update(ctx, shard.csr_ref(), a, out.rb()),
+            Backend::Pjrt(exe) => match out.rb() {
+                LaneSliceMut::F32(o) => pjrt_update(ctx, exe, &shard, o)?,
+                other => anyhow::bail!(
+                    "PJRT backend supports f32 lanes only (got {}); use --backend native",
+                    other.lane_type().name()
+                ),
+            },
         }
-        crate::exec::mark_interval(ctx, a, out, marker);
+        crate::exec::mark_interval(ctx, a, out.shared(), marker);
         Ok(UnitOutput::InPlace)
     }
 
@@ -531,7 +538,7 @@ impl ShardSource for VswSource<'_> {
 /// use the same fixed chunked-reduction scheme, which is also why the
 /// cross-engine gates stay exact while comparisons against *sequential*
 /// references (dense sweeps) need a small epsilon for sum kernels.
-pub fn native_update(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: &mut [f32]) {
+pub fn native_update(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: LaneSliceMut<'_>) {
     crate::exec::kernel::fold_csr(ctx, csr, start_vertex, out);
 }
 
@@ -566,6 +573,9 @@ pub fn pjrt_update(
                 kernel.combine
             );
             None
+        }
+        Apply::Threshold { .. } => {
+            anyhow::bail!("no AOT artifact for k-core thresholds; use --backend native")
         }
     };
 
@@ -636,7 +646,7 @@ fn run_chunk(
         Apply::Affine { .. } => {
             let w = vec![1.0f32; cols.len()];
             let part =
-                exe.pagerank(ctx.src, ctx.inv_out_deg, cols, segs, &w, 0.0, out.len())?;
+                exe.pagerank(ctx.src.f32s(), ctx.inv_out_deg, cols, segs, &w, 0.0, out.len())?;
             for (o, p) in out.iter_mut().zip(part) {
                 *o += p;
             }
@@ -650,8 +660,11 @@ fn run_chunk(
                 Some(ws) => ws.iter().map(|&x| cost.apply(x)).collect(),
                 None => vec![cost.apply(1.0); cols.len()],
             };
-            let part = exe.relax_min(ctx.src, cols, segs, &w, out)?;
+            let part = exe.relax_min(ctx.src.f32s(), cols, segs, &w, out)?;
             out.copy_from_slice(&part);
+        }
+        Apply::Threshold { .. } => {
+            anyhow::bail!("no AOT artifact for k-core thresholds; use --backend native")
         }
     }
     Ok(())
@@ -709,7 +722,7 @@ mod tests {
         // relative gate: the engine's chunked row sums reassociate f32
         // adds, so high-degree vertices drift from the sequential dense
         // reference by a few ulps per iteration (see exec::kernel docs)
-        for (i, (a, b)) in vals.iter().zip(&want).enumerate() {
+        for (i, (a, b)) in vals.f32s().iter().zip(&want).enumerate() {
             assert!((a - b).abs() <= 1e-4 * a.abs().max(1e-3), "vertex {i}: {a} vs {b}");
         }
         assert_eq!(run.iterations.len(), 10);
@@ -775,7 +788,7 @@ mod tests {
         }
         for v in 0..n {
             let root = find(&mut parent, v);
-            assert_eq!(vals[v] as u32, min_label[root], "vertex {v}");
+            assert_eq!(vals.f32s()[v] as u32, min_label[root], "vertex {v}");
         }
     }
 
@@ -802,11 +815,11 @@ mod tests {
         }
         // relative gate for the same reason as pagerank_matches_dense_reference:
         // chunked row sums vs a sequential edge-order reference
-        for (i, (a, b)) in vals.iter().zip(&ranks).enumerate() {
+        for (i, (a, b)) in vals.f32s().iter().zip(&ranks).enumerate() {
             assert!((a - b).abs() <= 1e-4 * a.abs().max(1e-3), "vertex {i}: {a} vs {b}");
         }
         // the seed holds the teleport mass
-        assert!(vals[seed as usize] >= 0.15 - 1e-6);
+        assert!(vals.f32s()[seed as usize] >= 0.15 - 1e-6);
     }
 
     #[test]
@@ -1116,6 +1129,26 @@ mod tests {
     }
 
     #[test]
+    fn integer_apps_match_their_oracles_on_vsw() {
+        use crate::apps::{oracle, BfsLevels, KCore, Wcc};
+        let g = rmat(8, 3_000, 101, RmatParams::default()).to_undirected();
+        let n = g.num_vertices;
+        let (mut e, _) = open_engine(&g, "int_apps", EngineConfig::default(), false);
+        let (wcc, r) = e.run_to_values(&Wcc, 200).unwrap();
+        assert!(r.converged);
+        assert_eq!(wcc.u32s(), oracle::wcc_labels(&g.edges, n).as_slice());
+        let (lv, r) = e.run_to_values(&BfsLevels::new(0), 200).unwrap();
+        assert!(r.converged);
+        assert_eq!(lv.u32s(), oracle::bfs_levels(&g.edges, n, 0).as_slice());
+        let (kc, r) = e.run_to_values(&KCore::new(3), 200).unwrap();
+        assert!(r.converged);
+        assert_eq!(kc.u32s(), oracle::kcore(&g.edges, n, 3).as_slice());
+        // the decomposition actually discriminates on this graph
+        let inside = kc.u32s().iter().filter(|&&x| x != 0).count();
+        assert!(inside > 0 && inside < n as usize, "degenerate 3-core: {inside}/{n}");
+    }
+
+    #[test]
     fn rejects_weighted_app_on_unweighted_dir() {
         let g = rmat(8, 1_000, 61, RmatParams::default());
         let (mut e, _) = open_engine(&g, "wreject", EngineConfig::default(), false);
@@ -1155,13 +1188,13 @@ mod tests {
         let ctx = IterCtx {
             kernel: ShardKernel::pagerank(0.85),
             num_vertices: 2,
-            src: &src,
+            src: (&src).into(),
             inv_out_deg: &inv,
             contrib: &contrib,
             iteration: 0,
         };
         let mut out = src.clone();
-        native_update(&ctx, csr.slices(), 0, &mut out);
+        native_update(&ctx, csr.slices(), 0, (&mut out).into());
         let base = 0.15 / 2.0;
         assert!((out[0] - (base + 0.85 * 0.5)).abs() < 1e-6);
         assert!((out[1] - (base + 0.85 * 0.5)).abs() < 1e-6);

@@ -64,6 +64,17 @@ impl AlignedArena {
         unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr() as *mut u32, len) }
     }
 
+    /// A zeroed `len`-element `u64` view, 64-byte aligned at its base
+    /// (two 32-bit words per element; `Line`'s 64-byte alignment is a
+    /// multiple of `u64`'s 8, so the cast only lowers the requirement).
+    pub fn u64s(&mut self, len: usize) -> &mut [u64] {
+        self.reset(len * 2);
+        debug_assert_eq!(self.lines.as_ptr() as usize % 64, 0);
+        // SAFETY: as in `f32s` — `2 * len` zeroed 32-bit words back
+        // `len` zeroed u64s, alignment only lowered.
+        unsafe { std::slice::from_raw_parts_mut(self.lines.as_mut_ptr() as *mut u64, len) }
+    }
+
     /// Backing capacity in bytes (reuse assertions + memory accounting).
     pub fn capacity_bytes(&self) -> usize {
         self.lines.capacity() * std::mem::size_of::<Line>()
@@ -99,6 +110,19 @@ mod tests {
         let mut a = AlignedArena::new();
         assert_eq!(a.f32s(0).len(), 0);
         assert_eq!(a.u32s(0).len(), 0);
+        assert_eq!(a.u64s(0).len(), 0);
         assert_eq!(a.capacity_bytes(), 0);
+    }
+
+    #[test]
+    fn u64_views_are_zeroed_aligned_and_sized() {
+        let mut a = AlignedArena::new();
+        let w = a.u64s(33);
+        assert_eq!(w.len(), 33);
+        assert_eq!(w.as_ptr() as usize % 64, 0, "u64 view must be line-aligned");
+        assert!(w.iter().all(|&x| x == 0));
+        w[32] = u64::MAX;
+        // the next view re-zeroes the same backing store
+        assert!(a.u64s(33).iter().all(|&x| x == 0));
     }
 }

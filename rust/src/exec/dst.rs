@@ -4,15 +4,20 @@
 //! in-edge of a vertex lives in exactly one shard, `DstVertexArray[v]` is
 //! written by exactly one worker per iteration — so unlike GridGraph no
 //! locks or atomics are needed.  [`SharedDst`] encodes that invariant: it
-//! hands out `&mut [f32]` windows over one array to multiple threads,
-//! `debug_assert`ing that claimed intervals never overlap.
+//! hands out mutable [`LaneSliceMut`] windows over one type-erased value
+//! array to multiple threads, `debug_assert`ing that claimed intervals
+//! never overlap.  Since PR 10 the array carries any [`LaneVec`] lane
+//! type (f32 mass, u32 labels/levels, u64), so one `SharedDst` per job
+//! serves heterogeneously-typed batches.
 
 use std::cell::UnsafeCell;
 use std::sync::Mutex;
 
+use super::lane::{LaneSliceMut, LaneType, LaneVec};
+
 /// A vertex-value array writable concurrently on *disjoint* intervals.
 pub struct SharedDst {
-    data: UnsafeCell<Vec<f32>>,
+    data: UnsafeCell<LaneVec>,
     /// Debug-only overlap registry of claimed `[start, end)` intervals.
     claims: Mutex<Vec<(usize, usize)>>,
 }
@@ -23,7 +28,7 @@ pub struct SharedDst {
 unsafe impl Sync for SharedDst {}
 
 impl SharedDst {
-    pub fn new(init: Vec<f32>) -> Self {
+    pub fn new(init: LaneVec) -> Self {
         SharedDst { data: UnsafeCell::new(init), claims: Mutex::new(Vec::new()) }
     }
 
@@ -35,13 +40,17 @@ impl SharedDst {
         self.len() == 0
     }
 
+    pub fn lane_type(&self) -> LaneType {
+        unsafe { (*self.data.get()).lane_type() }
+    }
+
     /// Claim `[start, start+len)` for exclusive writing.
     ///
     /// # Safety
     /// Callers must guarantee no two live claims overlap. The VSW engine
     /// derives claims from the disjoint shard intervals of the property
     /// file, which `prep::compute_intervals` guarantees (and tests).
-    pub unsafe fn claim(&self, start: usize, len: usize) -> &mut [f32] {
+    pub unsafe fn claim(&self, start: usize, len: usize) -> LaneSliceMut<'_> {
         debug_assert!(start + len <= self.len(), "claim out of bounds");
         #[cfg(debug_assertions)]
         {
@@ -55,8 +64,11 @@ impl SharedDst {
             }
             claims.push((start, start + len));
         }
-        let v = &mut *self.data.get();
-        &mut v[start..start + len]
+        match &mut *self.data.get() {
+            LaneVec::F32(v) => LaneSliceMut::F32(&mut v[start..start + len]),
+            LaneVec::U32(v) => LaneSliceMut::U32(&mut v[start..start + len]),
+            LaneVec::U64(v) => LaneSliceMut::U64(&mut v[start..start + len]),
+        }
     }
 
     /// Clear the debug claim registry at an iteration barrier.
@@ -70,13 +82,13 @@ impl SharedDst {
     }
 
     /// Take the array back out (single-threaded phase).
-    pub fn into_inner(self) -> Vec<f32> {
+    pub fn into_inner(self) -> LaneVec {
         self.data.into_inner()
     }
 
-    /// Read-only view; callers must ensure no concurrent writers (the
+    /// Read-only copy; callers must ensure no concurrent writers (the
     /// engine only reads at iteration barriers).
-    pub fn snapshot(&self) -> Vec<f32> {
+    pub fn snapshot(&self) -> LaneVec {
         unsafe { (*self.data.get()).clone() }
     }
 }
@@ -87,28 +99,40 @@ mod tests {
 
     #[test]
     fn disjoint_claims_write_independently() {
-        let dst = SharedDst::new(vec![0.0; 10]);
+        let dst = SharedDst::new(vec![0.0f32; 10].into());
         std::thread::scope(|s| {
             let d = &dst;
             s.spawn(move || {
                 let a = unsafe { d.claim(0, 5) };
-                a.fill(1.0);
+                a.f32s().fill(1.0);
             });
             s.spawn(move || {
                 let b = unsafe { d.claim(5, 5) };
-                b.fill(2.0);
+                b.f32s().fill(2.0);
             });
         });
         let v = dst.into_inner();
-        assert_eq!(&v[..5], &[1.0; 5]);
-        assert_eq!(&v[5..], &[2.0; 5]);
+        assert_eq!(&v.f32s()[..5], &[1.0; 5]);
+        assert_eq!(&v.f32s()[5..], &[2.0; 5]);
+    }
+
+    #[test]
+    fn integer_lanes_claim_typed_windows() {
+        let dst = SharedDst::new(vec![7u32; 6].into());
+        assert_eq!(dst.lane_type(), LaneType::U32);
+        match unsafe { dst.claim(2, 2) } {
+            LaneSliceMut::U32(w) => w.fill(9),
+            other => panic!("u32 array must hand out u32 claims, got {other:?}"),
+        }
+        dst.release_all();
+        assert_eq!(dst.into_inner().u32s(), &[7, 7, 9, 9, 7, 7]);
     }
 
     #[test]
     #[cfg(debug_assertions)]
     #[should_panic(expected = "overlapping dst claim")]
     fn overlap_detected_in_debug() {
-        let dst = SharedDst::new(vec![0.0; 10]);
+        let dst = SharedDst::new(vec![0.0f32; 10].into());
         unsafe {
             let _a = dst.claim(0, 6);
             let _b = dst.claim(5, 5);
@@ -117,21 +141,21 @@ mod tests {
 
     #[test]
     fn release_allows_reclaim() {
-        let dst = SharedDst::new(vec![0.0; 4]);
+        let dst = SharedDst::new(vec![0.0f32; 4].into());
         unsafe {
-            dst.claim(0, 4)[0] = 3.0;
+            dst.claim(0, 4).f32s()[0] = 3.0;
         }
         dst.release_all();
         unsafe {
-            assert_eq!(dst.claim(0, 4)[0], 3.0);
+            assert_eq!(dst.claim(0, 4).f32s()[0], 3.0);
         }
     }
 
     #[test]
     fn snapshot_reflects_writes() {
-        let dst = SharedDst::new(vec![1.0; 3]);
+        let dst = SharedDst::new(vec![1.0f32; 3].into());
         unsafe {
-            dst.claim(1, 1)[0] = 9.0;
+            dst.claim(1, 1).f32s()[0] = 9.0;
         }
         dst.release_all();
         assert_eq!(dst.snapshot(), vec![1.0, 9.0, 1.0]);

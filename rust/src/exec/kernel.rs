@@ -8,13 +8,20 @@
 //! compile to straight-line arithmetic, and the associative combines
 //! process edges in fixed-width chunks of [`LANES`] with explicit
 //! multi-lane accumulators, so the per-row fold carries [`LANES`]
-//! independent dependency chains instead of one serial f32 chain.
+//! independent dependency chains instead of one serial chain.
+//!
+//! Since PR 10 every fold is additionally **monomorphized over the
+//! value-lane type** ([`Lane`]: `f32`, `u32`, `u64`).  The erased entry
+//! points ([`fold_csr`], [`fold_list`], [`scatter_list`], [`mark_rows`])
+//! dispatch once per unit on `kernel.lane` and hand typed slices to the
+//! generic bodies — the hot loops themselves are branch- and
+//! erasure-free for every lane type.
 //!
 //! ## The chunked combine scheme
 //!
 //! Every sum folds with the same fixed scheme, everywhere:
 //!
-//! - lane `j` of a `[f32; LANES]` accumulator adds elements
+//! - lane `j` of a `[T; LANES]` accumulator adds elements
 //!   `j, j+LANES, j+2·LANES, …` of the row (via `chunks_exact`);
 //! - the final partial chunk lands in lanes `0..rem` of a zero-padded
 //!   tail block (skipped entirely when the row length is a multiple of
@@ -24,19 +31,20 @@
 //!
 //! The default build writes this as plain `chunks_exact` loops the
 //! autovectorizer turns into vector code; with `--features simd`
-//! (nightly only) the lane-wise accumulate is a single portable
+//! (nightly only) the f32 lane-wise accumulate is a single portable
 //! [`std::simd`] `f32x8` add.  Both builds perform *bit-identical*
 //! arithmetic by construction — the only `cfg`-switched operation is
-//! [`add_lanes`], and a vertical lane add is the same eight f32
-//! additions either way.
+//! `Lane::add_lanes` for f32, and a vertical lane add is the same eight
+//! f32 additions either way.  Integer lanes use the scalar lane loop in
+//! both builds.
 //!
 //! ## Where bit-identity is relaxed, and where it is not
 //!
-//! f32 addition is not associative, so the chunked sum **reassociates**:
-//! a row of `k ≥ 4` edges generally differs from the sequential
-//! left-to-right sum in the last few ulps (rows with `k ≤ 3` are exact:
-//! the zero-padded lanes vanish and the reduction tree degenerates to
-//! the sequential order).  Consequently:
+//! f32 addition is not associative, so the chunked f32 sum
+//! **reassociates**: a row of `k ≥ 4` edges generally differs from the
+//! sequential left-to-right sum in the last few ulps (rows with `k ≤ 3`
+//! are exact: the zero-padded lanes vanish and the reduction tree
+//! degenerates to the sequential order).  Consequently:
 //!
 //! - **Across engines and build modes the gates stay exact.** All five
 //!   engines, both `chunks_exact` and `simd` builds, and every
@@ -44,19 +52,25 @@
 //!   *same* canonical ascending-source per-destination edge order, so
 //!   `determinism.rs` / `cross_engine.rs` / `scan_sharing.rs` /
 //!   `recovery.rs` still assert `==` on every app.
-//! - **Sum comparisons against *sequential* references are epsilon
+//! - **f32 sum comparisons against *sequential* references are epsilon
 //!   gated.** [`scalar_fold_csr`] (the sequential monomorphized path)
 //!   and [`reference_fold_csr`] (the per-edge enum-dispatch oracle)
 //!   remain bit-identical to each other; the chunked [`fold_csr`] is
-//!   compared to them with a documented epsilon for `Combine::Sum`
+//!   compared to them with a documented epsilon for f32 `Combine::Sum`
 //!   (kernel tests, `rust/tests/kernel_equivalence.rs`,
 //!   `benches/hot_loop.rs`, and the dense references in engine tests).
+//! - **Integer sums are bitwise everywhere.** The u32/u64 lanes sum
+//!   with *saturating* adds of non-negative values — associative and
+//!   commutative (`min(true_sum, MAX)` under any association) — so the
+//!   chunked fold equals the sequential oracle `==`, with no epsilon
+//!   carve-out (`rust/tests/kernel_equivalence.rs` gates this).
 //! - **Min/max stay strictly bit-identical to the scalar oracle.** The
 //!   chunked meet initializes every lane with the row's current value
 //!   (the meet is idempotent) and reduces with the same `min`/`max`, so
 //!   for NaN-free lanes — all app value domains here are NaN-free and
 //!   signed-zero-free — the result is the multiset extremum regardless
-//!   of association.  SSSP/BFS/CC/widest assert `==` everywhere.
+//!   of association.  SSSP/BFS/CC/widest/WCC/BFS-levels assert `==`
+//!   everywhere.
 //!
 //! Three fold shapes cover every engine:
 //!
@@ -72,119 +86,112 @@
 //!   `fold_updates` in [`super`]).
 
 use super::arena::AlignedArena;
+use super::lane::{with_lane, Lane, LaneSlice, LaneSliceMut};
 use super::{IterCtx, Update};
 use crate::apps::{Combine, EdgeCost, EdgeGather};
 use crate::exec::schedule::RangeMarker;
 use crate::graph::{CsrRef, Edge};
 
-/// Fixed chunk width of the vectorized combines: eight f32 lanes — two
-/// SSE vectors, one AVX2 vector, half a cache line.
+/// Fixed chunk width of the vectorized combines: eight 32-bit lanes —
+/// two SSE vectors, one AVX2 vector, half a cache line (u64 lanes span
+/// a full line per chunk; the scheme is the same).
 pub const LANES: usize = 8;
 
 /// Bind `$g` to a gather closure specialized for `$ctx.kernel.gather`
-/// and evaluate `$body` once per variant — the single dispatch point
-/// that keeps the edge loops branch-free.  Each closure mirrors
-/// `ShardKernel::edge_value` (with `DegreeMass` reading the pre-folded
-/// `contrib` array, as `IterCtx::edge_value` does) bit-for-bit.
+/// over lane type `$T`, and evaluate `$body` once per variant — the
+/// single dispatch point that keeps the edge loops branch-free.  Each
+/// closure mirrors `ShardKernel::edge_value_t` (with `DegreeMass`
+/// reading the pre-folded `contrib` array, as `IterCtx::edge_value`
+/// does) bit-for-bit; for f32 the lane ops lower to exactly the
+/// pre-PR-10 arithmetic (`+ w`, `+ 1.0`, `+ 0.0`, `.min(...)`).
 macro_rules! with_gather {
-    ($ctx:expr, $g:ident => $body:expr) => {{
-        let src = $ctx.src;
+    ($ctx:expr, $T:ty, $g:ident => $body:expr) => {{
+        let src: &[$T] = <$T as Lane>::of_slice($ctx.src);
         let contrib = $ctx.contrib;
         match $ctx.kernel.gather {
             EdgeGather::DegreeMass => {
-                let $g = |u: u32, _w: f32| contrib[u as usize];
+                let $g = |u: u32, _w: f32| <$T as Lane>::from_mass(contrib[u as usize]);
                 $body
             }
             EdgeGather::AddCost(EdgeCost::Weights) => {
-                let $g = |u: u32, w: f32| src[u as usize] + w;
+                let $g = |u: u32, w: f32| src[u as usize].add(<$T as Lane>::from_weight(w));
                 $body
             }
             EdgeGather::AddCost(EdgeCost::Unit) => {
-                let $g = |u: u32, _w: f32| src[u as usize] + 1.0;
+                let $g = |u: u32, _w: f32| src[u as usize].add(<$T as Lane>::ONE);
                 $body
             }
             EdgeGather::AddCost(EdgeCost::Zero) => {
-                let $g = |u: u32, _w: f32| src[u as usize] + 0.0;
+                let $g = |u: u32, _w: f32| src[u as usize].add(<$T as Lane>::ZERO);
                 $body
             }
             EdgeGather::MinCapacity(EdgeCost::Weights) => {
-                let $g = |u: u32, w: f32| src[u as usize].min(w);
+                let $g = |u: u32, w: f32| src[u as usize].meet_min(<$T as Lane>::from_weight(w));
                 $body
             }
             EdgeGather::MinCapacity(EdgeCost::Unit) => {
-                let $g = |u: u32, _w: f32| src[u as usize].min(1.0);
+                let $g = |u: u32, _w: f32| src[u as usize].meet_min(<$T as Lane>::ONE);
                 $body
             }
             EdgeGather::MinCapacity(EdgeCost::Zero) => {
-                let $g = |u: u32, _w: f32| src[u as usize].min(0.0);
+                let $g = |u: u32, _w: f32| src[u as usize].meet_min(<$T as Lane>::ZERO);
+                $body
+            }
+            EdgeGather::Indicator => {
+                let $g = |u: u32, _w: f32| src[u as usize].indicator();
                 $body
             }
         }
     }};
 }
 
-/// Lane-wise accumulate: `acc[j] += vals[j]` for every lane.  This is
-/// the **only** operation the `simd` feature switches — a vertical
-/// vector add performs the same eight f32 additions as the scalar lane
-/// loop, so both builds are bit-identical by construction.
-#[cfg(not(feature = "simd"))]
-#[inline(always)]
-fn add_lanes(acc: &mut [f32; LANES], vals: &[f32; LANES]) {
-    for j in 0..LANES {
-        acc[j] += vals[j];
-    }
-}
-
-/// Lane-wise accumulate via portable SIMD (`--features simd`, nightly).
-#[cfg(feature = "simd")]
-#[inline(always)]
-fn add_lanes(acc: &mut [f32; LANES], vals: &[f32; LANES]) {
-    use std::simd::prelude::*;
-    *acc = (f32x8::from_array(*acc) + f32x8::from_array(*vals)).to_array();
-}
-
 /// The fixed lane-reduction tree — part of the repo-wide canonical sum
 /// order, so it must never change shape.
 #[inline(always)]
-fn reduce_sum(acc: [f32; LANES]) -> f32 {
-    ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]))
+fn reduce_sum<T: Lane>(acc: [T; LANES]) -> T {
+    (acc[0].add(acc[4]).add(acc[1].add(acc[5]))).add(acc[2].add(acc[6]).add(acc[3].add(acc[7])))
 }
 
 /// The canonical chunked sum over a contiguous value slice: full
-/// [`LANES`] chunks accumulate lane-wise, the remainder lands in lanes
-/// `0..rem` of a zero-padded tail, lanes reduce via [`reduce_sum`].
-/// Every sum in the system that feeds a `Combine::Sum` kernel reduces
-/// through this exact scheme (directly, or element-for-element in the
-/// fused gather loops of [`fold_csr`]).
+/// [`LANES`] chunks accumulate lane-wise (`Lane::add_lanes`), the
+/// remainder lands in lanes `0..rem` of a zero-padded tail, lanes
+/// reduce via [`reduce_sum`].  Every sum in the system that feeds a
+/// `Combine::Sum` kernel reduces through this exact scheme (directly,
+/// or element-for-element in the fused gather loops of [`fold_csr`]).
 #[inline]
-pub(crate) fn chunked_sum(vals: &[f32]) -> f32 {
-    let mut acc = [0.0f32; LANES];
+pub(crate) fn chunked_sum<T: Lane>(vals: &[T]) -> T {
+    let mut acc = [T::ZERO; LANES];
     let mut chunks = vals.chunks_exact(LANES);
     for c in &mut chunks {
-        let c: &[f32; LANES] = c.try_into().expect("chunks_exact yields LANES");
-        add_lanes(&mut acc, c);
+        let c: &[T; LANES] = c.try_into().expect("chunks_exact yields LANES");
+        T::add_lanes(&mut acc, c);
     }
     let rem = chunks.remainder();
     if !rem.is_empty() {
-        let mut tail = [0.0f32; LANES];
+        let mut tail = [T::ZERO; LANES];
         tail[..rem.len()].copy_from_slice(rem);
-        add_lanes(&mut acc, &tail);
+        T::add_lanes(&mut acc, &tail);
     }
     reduce_sum(acc)
 }
 
 /// The paper's `Update` loop over one shard's CSR rows, monomorphized
 /// and chunk-vectorized.  `out` must enter holding the current values of
-/// rows `[start_vertex, start_vertex + out.len())`.
-pub fn fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: &mut [f32]) {
+/// rows `[start_vertex, start_vertex + out.len())`, in the kernel's lane
+/// type.
+pub fn fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: LaneSliceMut<'_>) {
+    with_lane!(ctx.kernel.lane, T => fold_csr_t::<T>(ctx, csr, start_vertex, T::of_mut(out)))
+}
+
+fn fold_csr_t<T: Lane>(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: &mut [T]) {
     debug_assert_eq!(out.len(), csr.rows());
     match ctx.kernel.combine {
-        Combine::Sum => with_gather!(ctx, g => sum_csr(ctx, g, csr, start_vertex, out)),
+        Combine::Sum => with_gather!(ctx, T, g => sum_csr(ctx, g, csr, start_vertex, out)),
         Combine::Min => {
-            with_gather!(ctx, g => meet_csr(g, |a: f32, b: f32| a.min(b), csr, out))
+            with_gather!(ctx, T, g => meet_csr(g, |a: T, b: T| a.meet_min(b), csr, out))
         }
         Combine::Max => {
-            with_gather!(ctx, g => meet_csr(g, |a: f32, b: f32| a.max(b), csr, out))
+            with_gather!(ctx, T, g => meet_csr(g, |a: T, b: T| a.meet_max(b), csr, out))
         }
     }
 }
@@ -193,58 +200,59 @@ pub fn fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: &mut
 /// element-for-element the same adds as `chunked_sum` over the gathered
 /// values (the gather itself is exact per edge).
 #[inline]
-fn sum_row_weighted<G: Fn(u32, f32) -> f32>(g: &G, col: &[u32], ws: &[f32]) -> f32 {
-    let mut acc = [0.0f32; LANES];
-    let mut vals = [0.0f32; LANES];
+fn sum_row_weighted<T: Lane, G: Fn(u32, f32) -> T>(g: &G, col: &[u32], ws: &[f32]) -> T {
+    let mut acc = [T::ZERO; LANES];
+    let mut vals = [T::ZERO; LANES];
     let mut cc = col.chunks_exact(LANES);
     let mut cw = ws.chunks_exact(LANES);
     for (c, w) in (&mut cc).zip(&mut cw) {
         for j in 0..LANES {
             vals[j] = g(c[j], w[j]);
         }
-        add_lanes(&mut acc, &vals);
+        T::add_lanes(&mut acc, &vals);
     }
     let rc = cc.remainder();
     if !rc.is_empty() {
-        let mut tail = [0.0f32; LANES];
+        let mut tail = [T::ZERO; LANES];
         for (j, (&u, &w)) in rc.iter().zip(cw.remainder()).enumerate() {
             tail[j] = g(u, w);
         }
-        add_lanes(&mut acc, &tail);
+        T::add_lanes(&mut acc, &tail);
     }
     reduce_sum(acc)
 }
 
 #[inline]
-fn sum_row_unweighted<G: Fn(u32, f32) -> f32>(g: &G, col: &[u32]) -> f32 {
-    let mut acc = [0.0f32; LANES];
-    let mut vals = [0.0f32; LANES];
+fn sum_row_unweighted<T: Lane, G: Fn(u32, f32) -> T>(g: &G, col: &[u32]) -> T {
+    let mut acc = [T::ZERO; LANES];
+    let mut vals = [T::ZERO; LANES];
     let mut cc = col.chunks_exact(LANES);
     for c in &mut cc {
         for j in 0..LANES {
             vals[j] = g(c[j], 1.0);
         }
-        add_lanes(&mut acc, &vals);
+        T::add_lanes(&mut acc, &vals);
     }
     let rc = cc.remainder();
     if !rc.is_empty() {
-        let mut tail = [0.0f32; LANES];
+        let mut tail = [T::ZERO; LANES];
         for (j, &u) in rc.iter().enumerate() {
             tail[j] = g(u, 1.0);
         }
-        add_lanes(&mut acc, &tail);
+        T::add_lanes(&mut acc, &tail);
     }
     reduce_sum(acc)
 }
 
-fn sum_csr<G: Fn(u32, f32) -> f32>(
+fn sum_csr<T: Lane, G: Fn(u32, f32) -> T>(
     ctx: &IterCtx<'_>,
     g: G,
     csr: CsrRef<'_>,
     start_vertex: u32,
-    out: &mut [f32],
+    out: &mut [T],
 ) {
     let kernel = ctx.kernel;
+    let src = T::of_slice(ctx.src);
     let ro = csr.row_offsets;
     match csr.weights {
         Some(ws) => {
@@ -252,7 +260,7 @@ fn sum_csr<G: Fn(u32, f32) -> f32>(
                 let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
                 let sum = sum_row_weighted(&g, &csr.col[lo..hi], &ws[lo..hi]);
                 let v = start_vertex + r as u32;
-                *o = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
+                *o = kernel.apply_t(v, ctx.num_vertices, src[v as usize], sum);
             }
         }
         None => {
@@ -260,7 +268,7 @@ fn sum_csr<G: Fn(u32, f32) -> f32>(
                 let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
                 let sum = sum_row_unweighted(&g, &csr.col[lo..hi]);
                 let v = start_vertex + r as u32;
-                *o = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
+                *o = kernel.apply_t(v, ctx.num_vertices, src[v as usize], sum);
             }
         }
     }
@@ -270,14 +278,16 @@ fn sum_csr<G: Fn(u32, f32) -> f32>(
 /// (`min`/`max` are idempotent, so the extra copies are identities),
 /// the remainder folds into lane 0, and the lanes reduce with the same
 /// meet — for NaN-free, signed-zero-free values (all app value domains
-/// here) the result is the multiset extremum, bit-identical to the
-/// sequential fold regardless of association.  No `simd` variant: the
-/// scalar lane loop autovectorizes, and one code path keeps the
-/// bit-identity argument trivial.
-fn meet_csr<G, C>(g: G, cb: C, csr: CsrRef<'_>, out: &mut [f32])
+/// here; integer meets trivially qualify) the result is the multiset
+/// extremum, bit-identical to the sequential fold regardless of
+/// association.  No `simd` variant: the scalar lane loop
+/// autovectorizes, and one code path keeps the bit-identity argument
+/// trivial.
+fn meet_csr<T, G, C>(g: G, cb: C, csr: CsrRef<'_>, out: &mut [T])
 where
-    G: Fn(u32, f32) -> f32,
-    C: Fn(f32, f32) -> f32,
+    T: Lane,
+    G: Fn(u32, f32) -> T,
+    C: Fn(T, T) -> T,
 {
     let ro = csr.row_offsets;
     match csr.weights {
@@ -286,7 +296,7 @@ where
                 let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
                 let cur = *o; // current value (== src of this row)
                 let mut acc = [cur; LANES];
-                let mut vals = [0.0f32; LANES];
+                let mut vals = [T::ZERO; LANES];
                 let mut cc = csr.col[lo..hi].chunks_exact(LANES);
                 let mut cw = ws[lo..hi].chunks_exact(LANES);
                 for (c, w) in (&mut cc).zip(&mut cw) {
@@ -308,7 +318,7 @@ where
                 let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
                 let cur = *o;
                 let mut acc = [cur; LANES];
-                let mut vals = [0.0f32; LANES];
+                let mut vals = [T::ZERO; LANES];
                 let mut cc = csr.col[lo..hi].chunks_exact(LANES);
                 for c in &mut cc {
                     for j in 0..LANES {
@@ -328,7 +338,7 @@ where
 }
 
 #[inline(always)]
-fn reduce_meet<C: Fn(f32, f32) -> f32>(cb: &C, acc: [f32; LANES]) -> f32 {
+fn reduce_meet<T: Lane, C: Fn(T, T) -> T>(cb: &C, acc: [T; LANES]) -> T {
     cb(
         cb(cb(acc[0], acc[4]), cb(acc[1], acc[5])),
         cb(cb(acc[2], acc[6]), cb(acc[3], acc[7])),
@@ -349,7 +359,18 @@ pub fn fold_list(
     ctx: &IterCtx<'_>,
     edges: &[Edge],
     lo: u32,
-    out: &mut [f32],
+    out: LaneSliceMut<'_>,
+    vals: &mut AlignedArena,
+    idx: &mut AlignedArena,
+) {
+    with_lane!(ctx.kernel.lane, T => fold_list_t::<T>(ctx, edges, lo, T::of_mut(out), vals, idx))
+}
+
+fn fold_list_t<T: Lane>(
+    ctx: &IterCtx<'_>,
+    edges: &[Edge],
+    lo: u32,
+    out: &mut [T],
     vals: &mut AlignedArena,
     idx: &mut AlignedArena,
 ) {
@@ -357,6 +378,7 @@ pub fn fold_list(
     match kernel.combine {
         Combine::Sum => {
             let nr = out.len();
+            let src = T::of_slice(ctx.src);
             // counting sort by destination row: count (offset by one) …
             let idx = idx.u32s(nr + 1);
             debug_assert_eq!(idx.as_ptr() as usize % 64, 0, "fold scratch must be 64B-aligned");
@@ -370,9 +392,9 @@ pub fn fold_list(
             // … then fill, advancing idx[r] to the end of row r.  The
             // fill is in edge order, so each row keeps the caller's
             // per-destination order (canonical ascending source).
-            let vals = vals.f32s(edges.len());
+            let vals = T::arena_slice(vals, edges.len());
             debug_assert_eq!(vals.as_ptr() as usize % 64, 0, "fold scratch must be 64B-aligned");
-            with_gather!(ctx, g => {
+            with_gather!(ctx, T, g => {
                 for e in edges {
                     let r = (e.dst - lo) as usize;
                     vals[idx[r] as usize] = g(e.src, e.weight);
@@ -383,14 +405,14 @@ pub fn fold_list(
                 let start = if r == 0 { 0 } else { idx[r - 1] as usize };
                 let sum = chunked_sum(&vals[start..idx[r] as usize]);
                 let v = lo + r as u32;
-                *o = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
+                *o = kernel.apply_t(v, ctx.num_vertices, src[v as usize], sum);
             }
         }
         Combine::Min => {
-            with_gather!(ctx, g => meet_list(g, |a: f32, b: f32| a.min(b), edges, lo, out))
+            with_gather!(ctx, T, g => meet_list(g, |a: T, b: T| a.meet_min(b), edges, lo, out))
         }
         Combine::Max => {
-            with_gather!(ctx, g => meet_list(g, |a: f32, b: f32| a.max(b), edges, lo, out))
+            with_gather!(ctx, T, g => meet_list(g, |a: T, b: T| a.meet_max(b), edges, lo, out))
         }
     }
 }
@@ -399,10 +421,11 @@ pub fn fold_list(
 /// interleave, so there is no per-row chunk to vectorize; order
 /// insensitivity of NaN-free meets keeps this bit-identical to the
 /// chunked [`fold_csr`] meets.
-fn meet_list<G, C>(g: G, cb: C, edges: &[Edge], lo: u32, out: &mut [f32])
+fn meet_list<T, G, C>(g: G, cb: C, edges: &[Edge], lo: u32, out: &mut [T])
 where
-    G: Fn(u32, f32) -> f32,
-    C: Fn(f32, f32) -> f32,
+    T: Lane,
+    G: Fn(u32, f32) -> T,
+    C: Fn(T, T) -> T,
 {
     for e in edges {
         let r = (e.dst - lo) as usize;
@@ -413,22 +436,28 @@ where
 /// Scatter one unit's edges into deferred updates (X-Stream's scatter
 /// phase), monomorphized and gathered in [`LANES`] blocks; `out` is the
 /// caller's reusable buffer.  Per-edge values are exact (no combine
-/// happens here — the barrier's `fold_updates` runs the chunked sum).
+/// happens here — the barrier's `fold_updates` runs the chunked sum);
+/// each update carries the value's raw bits, typed back out by the
+/// barrier via `Update::val::<T>()`.
 pub fn scatter_list(ctx: &IterCtx<'_>, edges: &[Edge], out: &mut Vec<Update>) {
+    with_lane!(ctx.kernel.lane, T => scatter_list_t::<T>(ctx, edges, out))
+}
+
+fn scatter_list_t<T: Lane>(ctx: &IterCtx<'_>, edges: &[Edge], out: &mut Vec<Update>) {
     out.reserve(edges.len());
-    with_gather!(ctx, g => {
+    with_gather!(ctx, T, g => {
         let mut chunks = edges.chunks_exact(LANES);
-        let mut vals = [0.0f32; LANES];
+        let mut vals = [T::ZERO; LANES];
         for c in &mut chunks {
             for j in 0..LANES {
                 vals[j] = g(c[j].src, c[j].weight);
             }
             for j in 0..LANES {
-                out.push(Update { dst: c[j].dst, val: vals[j] });
+                out.push(Update::new(c[j].dst, vals[j]));
             }
         }
         for e in chunks.remainder() {
-            out.push(Update { dst: e.dst, val: g(e.src, e.weight) });
+            out.push(Update::new(e.dst, g(e.src, e.weight)));
         }
     });
 }
@@ -436,64 +465,70 @@ pub fn scatter_list(ctx: &IterCtx<'_>, edges: &[Edge], out: &mut Vec<Update>) {
 /// The sequential monomorphized fold — the pre-vectorization [`fold_csr`]
 /// body, kept verbatim as the scalar oracle and bench baseline.
 /// Bit-identical to [`reference_fold_csr`] for every combine; the
-/// chunked [`fold_csr`] matches it exactly for min/max and within a
-/// documented epsilon for sums (reassociation).  Not part of the public
-/// API.
+/// chunked [`fold_csr`] matches it exactly for min/max and integer
+/// lanes, and within a documented epsilon for f32 sums (reassociation).
+/// Not part of the public API.
 #[doc(hidden)]
-pub fn scalar_fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: &mut [f32]) {
+pub fn scalar_fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: LaneSliceMut<'_>) {
+    with_lane!(ctx.kernel.lane, T => scalar_fold_csr_t::<T>(ctx, csr, start_vertex, T::of_mut(out)))
+}
+
+fn scalar_fold_csr_t<T: Lane>(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start_vertex: u32, out: &mut [T]) {
     debug_assert_eq!(out.len(), csr.rows());
     match ctx.kernel.combine {
         Combine::Sum => {
-            with_gather!(ctx, g => scalar_sum_csr(ctx, g, csr, start_vertex, out))
+            with_gather!(ctx, T, g => scalar_sum_csr(ctx, g, csr, start_vertex, out))
         }
         Combine::Min => {
-            with_gather!(ctx, g => scalar_meet_csr(g, |a: f32, b: f32| a.min(b), csr, out))
+            with_gather!(ctx, T, g => scalar_meet_csr(g, |a: T, b: T| a.meet_min(b), csr, out))
         }
         Combine::Max => {
-            with_gather!(ctx, g => scalar_meet_csr(g, |a: f32, b: f32| a.max(b), csr, out))
+            with_gather!(ctx, T, g => scalar_meet_csr(g, |a: T, b: T| a.meet_max(b), csr, out))
         }
     }
 }
 
-fn scalar_sum_csr<G: Fn(u32, f32) -> f32>(
+fn scalar_sum_csr<T: Lane, G: Fn(u32, f32) -> T>(
     ctx: &IterCtx<'_>,
     g: G,
     csr: CsrRef<'_>,
     start_vertex: u32,
-    out: &mut [f32],
+    out: &mut [T],
 ) {
     let kernel = ctx.kernel;
+    let src = T::of_slice(ctx.src);
     let ro = csr.row_offsets;
     match csr.weights {
         Some(ws) => {
             for (r, o) in out.iter_mut().enumerate() {
                 let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
-                let mut sum = 0.0f32;
+                let mut sum = T::ZERO;
                 for (&u, &w) in csr.col[lo..hi].iter().zip(&ws[lo..hi]) {
-                    sum += g(u, w);
+                    sum = sum.add(g(u, w));
                 }
                 let v = start_vertex + r as u32;
-                *o = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
+                *o = kernel.apply_t(v, ctx.num_vertices, src[v as usize], sum);
             }
         }
         None => {
             for (r, o) in out.iter_mut().enumerate() {
                 let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
-                let mut sum = 0.0f32;
+                let mut sum = T::ZERO;
                 for &u in &csr.col[lo..hi] {
-                    sum += g(u, 1.0);
+                    sum = sum.add(g(u, 1.0));
                 }
                 let v = start_vertex + r as u32;
-                *o = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
+                *o = kernel.apply_t(v, ctx.num_vertices, src[v as usize], sum);
             }
         }
     }
 }
 
-fn scalar_meet_csr<G, C>(g: G, cb: C, csr: CsrRef<'_>, out: &mut [f32])
+fn scalar_meet_csr<T, G, C>(g: G, cb: C, csr: CsrRef<'_>, out: &mut [T])
 where
-    G: Fn(u32, f32) -> f32,
-    C: Fn(f32, f32) -> f32,
+    T: Lane,
+    G: Fn(u32, f32) -> T,
+    C: Fn(T, T) -> T,
 {
     let ro = csr.row_offsets;
     match csr.weights {
@@ -525,35 +560,40 @@ where
 /// `match` per edge), in the exact shape of the old `native_update`.
 /// Kept as the enum-dispatch oracle — bit-identical to
 /// [`scalar_fold_csr`], epsilon-compared to the chunked [`fold_csr`]
-/// for sums — and measured by `benches/hot_loop.rs` as the dispatch
+/// for f32 sums — and measured by `benches/hot_loop.rs` as the dispatch
 /// baseline.  Not part of the public API.
 #[doc(hidden)]
-pub fn reference_fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start: u32, out: &mut [f32]) {
+pub fn reference_fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start: u32, out: LaneSliceMut<'_>) {
+    with_lane!(ctx.kernel.lane, T => reference_fold_csr_t::<T>(ctx, csr, start, T::of_mut(out)))
+}
+
+fn reference_fold_csr_t<T: Lane>(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start: u32, out: &mut [T]) {
     let kernel = ctx.kernel;
+    let src = T::of_slice(ctx.src);
     let ro = csr.row_offsets;
     for r in 0..out.len() {
         let (lo, hi) = (ro[r] as usize, ro[r + 1] as usize);
         match kernel.combine {
             Combine::Sum => {
-                let mut sum = 0.0f32;
+                let mut sum = T::ZERO;
                 for i in lo..hi {
                     let u = csr.col[i];
                     let w = csr.weights.map_or(1.0, |ws| ws[i]);
-                    sum += if kernel.uses_contrib() {
-                        ctx.contrib[u as usize]
+                    sum = sum.add(if kernel.uses_contrib() {
+                        T::from_mass(ctx.contrib[u as usize])
                     } else {
-                        kernel.edge_value(ctx.src[u as usize], 0.0, w)
-                    };
+                        kernel.edge_value_t(src[u as usize], 0.0, w)
+                    });
                 }
                 let v = start + r as u32;
-                out[r] = kernel.apply(v, ctx.num_vertices, ctx.src[v as usize], sum);
+                out[r] = kernel.apply_t(v, ctx.num_vertices, src[v as usize], sum);
             }
             Combine::Min | Combine::Max => {
                 let mut m = out[r]; // current value (== src of this row)
                 for i in lo..hi {
                     let u = csr.col[i];
                     let w = csr.weights.map_or(1.0, |ws| ws[i]);
-                    m = kernel.combine(m, kernel.edge_value(ctx.src[u as usize], 0.0, w));
+                    m = kernel.combine_t(m, kernel.edge_value_t(src[u as usize], 0.0, w));
                 }
                 out[r] = m;
             }
@@ -563,24 +603,29 @@ pub fn reference_fold_csr(ctx: &IterCtx<'_>, csr: CsrRef<'_>, start: u32, out: &
 
 /// Activation marking for rows `[lo, lo + out.len())`, with the
 /// activation predicate dispatched once per unit instead of per row.
-pub fn mark_rows(ctx: &IterCtx<'_>, lo: u32, out: &[f32], marker: &mut RangeMarker<'_>) {
+pub fn mark_rows(ctx: &IterCtx<'_>, lo: u32, out: LaneSlice<'_>, marker: &mut RangeMarker<'_>) {
+    with_lane!(ctx.kernel.lane, T => mark_rows_t::<T>(ctx, lo, T::of_slice(out), marker))
+}
+
+fn mark_rows_t<T: Lane>(ctx: &IterCtx<'_>, lo: u32, out: &[T], marker: &mut RangeMarker<'_>) {
     match ctx.kernel.combine {
-        Combine::Sum => mark_if(|old, new| old != new, ctx, lo, out, marker),
-        Combine::Min => mark_if(|old, new| new < old, ctx, lo, out, marker),
-        Combine::Max => mark_if(|old, new| new > old, ctx, lo, out, marker),
+        Combine::Sum => mark_if(|old: T, new: T| old != new, ctx, lo, out, marker),
+        Combine::Min => mark_if(|old: T, new: T| new < old, ctx, lo, out, marker),
+        Combine::Max => mark_if(|old: T, new: T| new > old, ctx, lo, out, marker),
     }
 }
 
-fn mark_if<F: Fn(f32, f32) -> bool>(
+fn mark_if<T: Lane, F: Fn(T, T) -> bool>(
     activates: F,
     ctx: &IterCtx<'_>,
     lo: u32,
-    out: &[f32],
+    out: &[T],
     marker: &mut RangeMarker<'_>,
 ) {
+    let src = T::of_slice(ctx.src);
     for (r, &new) in out.iter().enumerate() {
         let v = lo + r as u32;
-        if activates(ctx.src[v as usize], new) {
+        if activates(src[v as usize], new) {
             marker.mark(v);
         }
     }
@@ -590,6 +635,7 @@ fn mark_if<F: Fn(f32, f32) -> bool>(
 mod tests {
     use super::*;
     use crate::apps::{ShardKernel, VertexProgram};
+    use crate::exec::lane::LaneType;
     use crate::graph::Csr;
 
     fn all_kernels() -> Vec<ShardKernel> {
@@ -641,7 +687,7 @@ mod tests {
             let ctx = IterCtx {
                 kernel,
                 num_vertices: n,
-                src: &src,
+                src: (&src).into(),
                 inv_out_deg: &inv,
                 contrib: &contrib,
                 iteration: 0,
@@ -650,14 +696,14 @@ mod tests {
             // per-edge enum-dispatch oracle, for every combine
             let mut s = src.clone();
             let mut b = src.clone();
-            scalar_fold_csr(&ctx, csr.slices(), 0, &mut s);
-            reference_fold_csr(&ctx, csr.slices(), 0, &mut b);
+            scalar_fold_csr(&ctx, csr.slices(), 0, (&mut s).into());
+            reference_fold_csr(&ctx, csr.slices(), 0, (&mut b).into());
             assert_eq!(s, b, "scalar_fold_csr diverged for {kernel:?}");
 
             // the chunked fold: bit-identical for min/max, epsilon for
             // sums (documented reassociation)
             let mut a = src.clone();
-            fold_csr(&ctx, csr.slices(), 0, &mut a);
+            fold_csr(&ctx, csr.slices(), 0, (&mut a).into());
             match kernel.combine {
                 Combine::Sum => assert_sum_close(&a, &s, "fold_csr (sum)"),
                 Combine::Min | Combine::Max => {
@@ -670,7 +716,7 @@ mod tests {
             // scheme, same per-row value order
             let mut c = src.clone();
             let (mut vals, mut idx) = (AlignedArena::new(), AlignedArena::new());
-            fold_list(&ctx, &edges, 0, &mut c, &mut vals, &mut idx);
+            fold_list(&ctx, &edges, 0, (&mut c).into(), &mut vals, &mut idx);
             assert_eq!(c, a, "fold_list diverged for {kernel:?}");
 
             // scatter gathers the same per-edge values, exactly
@@ -679,7 +725,60 @@ mod tests {
             assert_eq!(ups.len(), edges.len());
             for (e, u) in edges.iter().zip(&ups) {
                 assert_eq!(u.dst, e.dst);
-                assert_eq!(u.val, ctx.edge_value(e), "scatter diverged for {kernel:?}");
+                assert_eq!(
+                    u.val::<f32>(),
+                    ctx.edge_value::<f32>(e),
+                    "scatter diverged for {kernel:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn integer_folds_are_bitwise_across_all_paths() {
+        // the u32 relax-min (BFS levels) and the u32 indicator sum
+        // (k-core) must agree across chunked/scalar/reference/list
+        // paths with `==` — integer combines have no epsilon carve-out
+        let n = 40u32;
+        let (edges, _, inv) = fixture(n, 11);
+        let contrib = vec![0.0f32; n as usize];
+        let csr = Csr::from_edges(&edges, 0, n as usize, true);
+        let cases: Vec<(ShardKernel, Vec<u32>)> = vec![
+            (
+                crate::apps::BfsLevels::new(0).kernel(),
+                (0..n).map(|v| if v % 3 == 0 { v } else { u32::MAX }).collect(),
+            ),
+            (ShardKernel::kcore(2), (0..n).map(|v| u32::from(v % 4 != 1)).collect()),
+            (
+                ShardKernel::relax_min(EdgeCost::Zero).with_lane(LaneType::U32),
+                (0..n).collect(),
+            ),
+        ];
+        for (kernel, src) in cases {
+            let ctx = IterCtx {
+                kernel,
+                num_vertices: n,
+                src: LaneSlice::U32(&src),
+                inv_out_deg: &inv,
+                contrib: &contrib,
+                iteration: 0,
+            };
+            let mut a = src.clone();
+            let mut s = src.clone();
+            let mut b = src.clone();
+            fold_csr(&ctx, csr.slices(), 0, LaneSliceMut::U32(&mut a));
+            scalar_fold_csr(&ctx, csr.slices(), 0, LaneSliceMut::U32(&mut s));
+            reference_fold_csr(&ctx, csr.slices(), 0, LaneSliceMut::U32(&mut b));
+            assert_eq!(a, s, "chunked vs scalar diverged for {kernel:?}");
+            assert_eq!(s, b, "scalar vs reference diverged for {kernel:?}");
+            let mut l = src.clone();
+            let (mut vals, mut idx) = (AlignedArena::new(), AlignedArena::new());
+            fold_list(&ctx, &edges, 0, LaneSliceMut::U32(&mut l), &mut vals, &mut idx);
+            assert_eq!(l, a, "fold_list diverged for {kernel:?}");
+            let mut ups = Vec::new();
+            scatter_list(&ctx, &edges, &mut ups);
+            for (e, u) in edges.iter().zip(&ups) {
+                assert_eq!(u.val::<u32>(), ctx.edge_value::<u32>(e));
             }
         }
     }
@@ -705,15 +804,15 @@ mod tests {
             let ctx = IterCtx {
                 kernel,
                 num_vertices: n,
-                src: &src,
+                src: (&src).into(),
                 inv_out_deg: &inv,
                 contrib: &contrib,
                 iteration: 0,
             };
             let mut a = src.clone();
             let mut s = src.clone();
-            fold_csr(&ctx, csr.slices(), 0, &mut a);
-            scalar_fold_csr(&ctx, csr.slices(), 0, &mut s);
+            fold_csr(&ctx, csr.slices(), 0, (&mut a).into());
+            scalar_fold_csr(&ctx, csr.slices(), 0, (&mut s).into());
             assert_eq!(a, s, "short rows must be exact for {kernel:?}");
         }
     }
@@ -732,15 +831,15 @@ mod tests {
             let ctx = IterCtx {
                 kernel,
                 num_vertices: n,
-                src: &src,
+                src: (&src).into(),
                 inv_out_deg: &inv,
                 contrib: &contrib,
                 iteration: 0,
             };
             let mut a = src.clone();
             let mut b = src.clone();
-            fold_csr(&ctx, csr.slices(), 0, &mut a);
-            reference_fold_csr(&ctx, csr.slices(), 0, &mut b);
+            fold_csr(&ctx, csr.slices(), 0, (&mut a).into());
+            reference_fold_csr(&ctx, csr.slices(), 0, (&mut b).into());
             match kernel.combine {
                 Combine::Sum => assert_sum_close(&a, &b, "unweighted fold (sum)"),
                 Combine::Min | Combine::Max => {
@@ -758,18 +857,18 @@ mod tests {
         let ctx = IterCtx {
             kernel: crate::apps::PageRank::new().kernel(),
             num_vertices: n,
-            src: &src,
+            src: (&src).into(),
             inv_out_deg: &inv,
             contrib: &contrib,
             iteration: 0,
         };
         let (mut vals, mut idx) = (AlignedArena::new(), AlignedArena::new());
         let mut out1 = src.clone();
-        fold_list(&ctx, &edges, 0, &mut out1, &mut vals, &mut idx);
+        fold_list(&ctx, &edges, 0, (&mut out1).into(), &mut vals, &mut idx);
         let (cv, ci) = (vals.capacity_bytes(), idx.capacity_bytes());
         assert!(cv >= edges.len() * 4);
         let mut out2 = src.clone();
-        fold_list(&ctx, &edges, 0, &mut out2, &mut vals, &mut idx);
+        fold_list(&ctx, &edges, 0, (&mut out2).into(), &mut vals, &mut idx);
         assert_eq!(vals.capacity_bytes(), cv, "second fold must not reallocate");
         assert_eq!(idx.capacity_bytes(), ci, "second fold must not reallocate");
         assert_eq!(out1, out2);

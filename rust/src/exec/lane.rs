@@ -1,0 +1,774 @@
+//! Generic value lanes (PR 10).
+//!
+//! GraphMP's VSW model keeps all vertex values RAM-resident and streams
+//! only edge shards, so the value type is a free parameter of the
+//! design.  This module generalizes the previously f32-only lane into a
+//! [`Lane`] trait with three concrete carriers:
+//!
+//! - `f32` — PageRank/PPR mass, SSSP/widest distances (the original lane);
+//! - `u32` — WCC labels, BFS levels, k-core alive flags;
+//! - `u64` — wide labels / costs (no shipped app yet; exercised by the
+//!   kernel property sweeps so the monomorphization can't rot).
+//!
+//! The contract every lane obeys (see `docs/ARCHITECTURE.md`, "Generic
+//! lanes"):
+//!
+//! - **Sum** combine is `+` for f32 and *saturating* add for the integer
+//!   lanes.  Saturating add of non-negative integers is associative and
+//!   commutative (`min(true_sum, MAX)` under any association), so the
+//!   chunked width-8 folds are **bitwise** identical to the sequential
+//!   scalar oracle for u32/u64 — integer sums get no epsilon carve-out.
+//!   f32 sums keep the documented relative-epsilon gate (reassociation).
+//! - **Min/Max** meets are exact for every lane.
+//! - Identities: min-identity is `INFINITY`/`MAX`, max-identity is
+//!   `NEG_INFINITY`/`0` (integer lanes carry non-negative values only).
+//!
+//! Type-erased carriers ([`LaneVec`], [`LaneSlice`], [`LaneSliceMut`])
+//! move values across the untyped layers (batch runtime, checkpoints,
+//! serve protocol); the [`with_lane!`] macro dispatches back into the
+//! monomorphized kernels at the hot-loop boundary.
+
+use super::arena::AlignedArena;
+use super::kernel::LANES;
+use crate::apps::EdgeCost;
+
+/// The runtime tag for a lane's concrete type.  Threaded through
+/// `ShardKernel`, checkpoint lane headers (v2) and the serve protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LaneType {
+    F32,
+    U32,
+    U64,
+}
+
+impl LaneType {
+    pub fn name(self) -> &'static str {
+        match self {
+            LaneType::F32 => "f32",
+            LaneType::U32 => "u32",
+            LaneType::U64 => "u64",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LaneType> {
+        match s {
+            "f32" => Some(LaneType::F32),
+            "u32" => Some(LaneType::U32),
+            "u64" => Some(LaneType::U64),
+            _ => None,
+        }
+    }
+
+    /// Bytes per value when serialized (checkpoint lane format v2).
+    pub fn bytes(self) -> usize {
+        match self {
+            LaneType::F32 | LaneType::U32 => 4,
+            LaneType::U64 => 8,
+        }
+    }
+
+    /// Stable wire tag (checkpoint lane header field).
+    pub fn tag(self) -> u32 {
+        match self {
+            LaneType::F32 => 0,
+            LaneType::U32 => 1,
+            LaneType::U64 => 2,
+        }
+    }
+
+    pub fn from_tag(t: u32) -> Option<LaneType> {
+        match t {
+            0 => Some(LaneType::F32),
+            1 => Some(LaneType::U32),
+            2 => Some(LaneType::U64),
+            _ => None,
+        }
+    }
+}
+
+/// A concrete value-lane type.  Everything the kernels, the batch
+/// runtime and the apps need from a vertex value, behind one trait so
+/// `fold_csr`/`fold_list`/`scatter_list` monomorphize per type while
+/// keeping the exact width-8 chunked scheme of the f32 original.
+pub trait Lane:
+    Copy + Send + Sync + PartialEq + PartialOrd + std::fmt::Debug + Default + 'static
+{
+    const TYPE: LaneType;
+    const ZERO: Self;
+    const ONE: Self;
+    /// Identity of the min-combine (`meet_min(MIN_IDENTITY, x) == x`).
+    const MIN_IDENTITY: Self;
+    /// Identity of the max-combine over the lane's value domain.
+    const MAX_IDENTITY: Self;
+
+    /// Sum combine: `+` for f32, saturating add for integer lanes (which
+    /// keeps the chunked fold bitwise-associative — see module docs).
+    fn add(self, other: Self) -> Self;
+    fn meet_min(self, other: Self) -> Self;
+    fn meet_max(self, other: Self) -> Self;
+
+    /// An edge weight as a lane value (costs/capacities).
+    fn from_weight(w: f32) -> Self;
+    /// An [`EdgeCost`] as a lane value.  For f32 this is exactly the
+    /// historical `EdgeCost::apply` (`w` / `1.0` / `0.0`).
+    fn cost(c: EdgeCost, w: f32) -> Self {
+        match c {
+            EdgeCost::Weights => Self::from_weight(w),
+            EdgeCost::Unit => Self::ONE,
+            EdgeCost::Zero => Self::ZERO,
+        }
+    }
+    /// A pre-folded contribution (`src * inv_out_deg`) read back as a
+    /// lane value.  Degree-normalized mass only exists on f32 lanes.
+    fn from_mass(m: f32) -> Self;
+    /// `src * inv_out_deg` for the degree-mass gather (f32 lanes only).
+    fn degree_mass(self, inv_out_deg: f32) -> Self;
+    /// `base + scale * acc` for the affine apply (f32 lanes only).
+    fn affine(acc: Self, scale: f32, base: f32) -> Self;
+    /// `ONE` if non-zero else `ZERO` (k-core alive gather).
+    fn indicator(self) -> Self;
+    /// Threshold test for the k-core apply: `self >= k`.
+    fn count_ge(self, k: u32) -> bool;
+
+    fn to_bits64(self) -> u64;
+    fn from_bits64(bits: u64) -> Self;
+    fn to_f64(self) -> f64;
+
+    /// One width-[`LANES`] accumulate step.  For f32 this is the only
+    /// `cfg(feature = "simd")`-switched function in the crate (the
+    /// `std::simd::f32x8` add performs the same lane arithmetic in the
+    /// same order, so results are bit-identical to the default build);
+    /// integer lanes use the scalar loop in both builds.
+    fn add_lanes(acc: &mut [Self; LANES], vals: &[Self; LANES]);
+
+    /// A zeroed, 64-byte-aligned scratch view of `len` values.
+    fn arena_slice(arena: &mut AlignedArena, len: usize) -> &mut [Self];
+
+    /// Extract this lane's typed slice from an erased slice; panics on a
+    /// lane-type mismatch (a kernel/value-vector pairing bug).
+    fn of_slice<'a>(s: LaneSlice<'a>) -> &'a [Self];
+    fn of_mut<'a>(s: LaneSliceMut<'a>) -> &'a mut [Self];
+    fn of_vec(v: &LaneVec) -> &[Self];
+    fn into_vec(v: LaneVec) -> Vec<Self>;
+    fn wrap(v: Vec<Self>) -> LaneVec;
+}
+
+#[cold]
+fn lane_mismatch(want: LaneType, got: LaneType) -> ! {
+    panic!("lane type mismatch: expected {} got {}", want.name(), got.name())
+}
+
+impl Lane for f32 {
+    const TYPE: LaneType = LaneType::F32;
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const MIN_IDENTITY: Self = f32::INFINITY;
+    const MAX_IDENTITY: Self = f32::NEG_INFINITY;
+
+    #[inline(always)]
+    fn add(self, other: Self) -> Self {
+        self + other
+    }
+    #[inline(always)]
+    fn meet_min(self, other: Self) -> Self {
+        self.min(other)
+    }
+    #[inline(always)]
+    fn meet_max(self, other: Self) -> Self {
+        self.max(other)
+    }
+    #[inline(always)]
+    fn from_weight(w: f32) -> Self {
+        w
+    }
+    #[inline(always)]
+    fn from_mass(m: f32) -> Self {
+        m
+    }
+    #[inline(always)]
+    fn degree_mass(self, inv_out_deg: f32) -> Self {
+        self * inv_out_deg
+    }
+    #[inline(always)]
+    fn affine(acc: Self, scale: f32, base: f32) -> Self {
+        base + scale * acc
+    }
+    #[inline(always)]
+    fn indicator(self) -> Self {
+        if self != 0.0 {
+            1.0
+        } else {
+            0.0
+        }
+    }
+    #[inline(always)]
+    fn count_ge(self, k: u32) -> bool {
+        self >= k as f32
+    }
+    #[inline(always)]
+    fn to_bits64(self) -> u64 {
+        self.to_bits() as u64
+    }
+    #[inline(always)]
+    fn from_bits64(bits: u64) -> Self {
+        f32::from_bits(bits as u32)
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        f64::from(self)
+    }
+
+    #[cfg(not(feature = "simd"))]
+    #[inline(always)]
+    fn add_lanes(acc: &mut [Self; LANES], vals: &[Self; LANES]) {
+        for i in 0..LANES {
+            acc[i] += vals[i];
+        }
+    }
+
+    #[cfg(feature = "simd")]
+    #[inline(always)]
+    fn add_lanes(acc: &mut [Self; LANES], vals: &[Self; LANES]) {
+        use std::simd::f32x8;
+        let a = f32x8::from_array(*acc);
+        let v = f32x8::from_array(*vals);
+        *acc = (a + v).to_array();
+    }
+
+    #[inline]
+    fn arena_slice(arena: &mut AlignedArena, len: usize) -> &mut [Self] {
+        arena.f32s(len)
+    }
+
+    #[inline(always)]
+    fn of_slice<'a>(s: LaneSlice<'a>) -> &'a [Self] {
+        match s {
+            LaneSlice::F32(v) => v,
+            other => lane_mismatch(LaneType::F32, other.lane_type()),
+        }
+    }
+    #[inline(always)]
+    fn of_mut<'a>(s: LaneSliceMut<'a>) -> &'a mut [Self] {
+        match s {
+            LaneSliceMut::F32(v) => v,
+            other => lane_mismatch(LaneType::F32, other.lane_type()),
+        }
+    }
+    fn of_vec(v: &LaneVec) -> &[Self] {
+        v.f32s()
+    }
+    fn into_vec(v: LaneVec) -> Vec<Self> {
+        match v {
+            LaneVec::F32(v) => v,
+            other => lane_mismatch(LaneType::F32, other.lane_type()),
+        }
+    }
+    fn wrap(v: Vec<Self>) -> LaneVec {
+        LaneVec::F32(v)
+    }
+}
+
+impl Lane for u32 {
+    const TYPE: LaneType = LaneType::U32;
+    const ZERO: Self = 0;
+    const ONE: Self = 1;
+    const MIN_IDENTITY: Self = u32::MAX;
+    const MAX_IDENTITY: Self = 0;
+
+    #[inline(always)]
+    fn add(self, other: Self) -> Self {
+        self.saturating_add(other)
+    }
+    #[inline(always)]
+    fn meet_min(self, other: Self) -> Self {
+        self.min(other)
+    }
+    #[inline(always)]
+    fn meet_max(self, other: Self) -> Self {
+        self.max(other)
+    }
+    #[inline(always)]
+    fn from_weight(w: f32) -> Self {
+        w as u32
+    }
+    fn from_mass(_m: f32) -> Self {
+        unreachable!("degree-normalized mass requires f32 lanes")
+    }
+    fn degree_mass(self, _inv_out_deg: f32) -> Self {
+        unreachable!("degree-mass gather requires f32 lanes")
+    }
+    fn affine(_acc: Self, _scale: f32, _base: f32) -> Self {
+        unreachable!("affine apply requires f32 lanes")
+    }
+    #[inline(always)]
+    fn indicator(self) -> Self {
+        (self != 0) as u32
+    }
+    #[inline(always)]
+    fn count_ge(self, k: u32) -> bool {
+        self >= k
+    }
+    #[inline(always)]
+    fn to_bits64(self) -> u64 {
+        self as u64
+    }
+    #[inline(always)]
+    fn from_bits64(bits: u64) -> Self {
+        bits as u32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        f64::from(self)
+    }
+
+    #[inline(always)]
+    fn add_lanes(acc: &mut [Self; LANES], vals: &[Self; LANES]) {
+        for i in 0..LANES {
+            acc[i] = acc[i].saturating_add(vals[i]);
+        }
+    }
+
+    #[inline]
+    fn arena_slice(arena: &mut AlignedArena, len: usize) -> &mut [Self] {
+        arena.u32s(len)
+    }
+
+    #[inline(always)]
+    fn of_slice<'a>(s: LaneSlice<'a>) -> &'a [Self] {
+        match s {
+            LaneSlice::U32(v) => v,
+            other => lane_mismatch(LaneType::U32, other.lane_type()),
+        }
+    }
+    #[inline(always)]
+    fn of_mut<'a>(s: LaneSliceMut<'a>) -> &'a mut [Self] {
+        match s {
+            LaneSliceMut::U32(v) => v,
+            other => lane_mismatch(LaneType::U32, other.lane_type()),
+        }
+    }
+    fn of_vec(v: &LaneVec) -> &[Self] {
+        v.u32s()
+    }
+    fn into_vec(v: LaneVec) -> Vec<Self> {
+        match v {
+            LaneVec::U32(v) => v,
+            other => lane_mismatch(LaneType::U32, other.lane_type()),
+        }
+    }
+    fn wrap(v: Vec<Self>) -> LaneVec {
+        LaneVec::U32(v)
+    }
+}
+
+impl Lane for u64 {
+    const TYPE: LaneType = LaneType::U64;
+    const ZERO: Self = 0;
+    const ONE: Self = 1;
+    const MIN_IDENTITY: Self = u64::MAX;
+    const MAX_IDENTITY: Self = 0;
+
+    #[inline(always)]
+    fn add(self, other: Self) -> Self {
+        self.saturating_add(other)
+    }
+    #[inline(always)]
+    fn meet_min(self, other: Self) -> Self {
+        self.min(other)
+    }
+    #[inline(always)]
+    fn meet_max(self, other: Self) -> Self {
+        self.max(other)
+    }
+    #[inline(always)]
+    fn from_weight(w: f32) -> Self {
+        w as u64
+    }
+    fn from_mass(_m: f32) -> Self {
+        unreachable!("degree-normalized mass requires f32 lanes")
+    }
+    fn degree_mass(self, _inv_out_deg: f32) -> Self {
+        unreachable!("degree-mass gather requires f32 lanes")
+    }
+    fn affine(_acc: Self, _scale: f32, _base: f32) -> Self {
+        unreachable!("affine apply requires f32 lanes")
+    }
+    #[inline(always)]
+    fn indicator(self) -> Self {
+        (self != 0) as u64
+    }
+    #[inline(always)]
+    fn count_ge(self, k: u32) -> bool {
+        self >= k as u64
+    }
+    #[inline(always)]
+    fn to_bits64(self) -> u64 {
+        self
+    }
+    #[inline(always)]
+    fn from_bits64(bits: u64) -> Self {
+        bits
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    fn add_lanes(acc: &mut [Self; LANES], vals: &[Self; LANES]) {
+        for i in 0..LANES {
+            acc[i] = acc[i].saturating_add(vals[i]);
+        }
+    }
+
+    #[inline]
+    fn arena_slice(arena: &mut AlignedArena, len: usize) -> &mut [Self] {
+        arena.u64s(len)
+    }
+
+    #[inline(always)]
+    fn of_slice<'a>(s: LaneSlice<'a>) -> &'a [Self] {
+        match s {
+            LaneSlice::U64(v) => v,
+            other => lane_mismatch(LaneType::U64, other.lane_type()),
+        }
+    }
+    #[inline(always)]
+    fn of_mut<'a>(s: LaneSliceMut<'a>) -> &'a mut [Self] {
+        match s {
+            LaneSliceMut::U64(v) => v,
+            other => lane_mismatch(LaneType::U64, other.lane_type()),
+        }
+    }
+    fn of_vec(v: &LaneVec) -> &[Self] {
+        v.u64s()
+    }
+    fn into_vec(v: LaneVec) -> Vec<Self> {
+        match v {
+            LaneVec::U64(v) => v,
+            other => lane_mismatch(LaneType::U64, other.lane_type()),
+        }
+    }
+    fn wrap(v: Vec<Self>) -> LaneVec {
+        LaneVec::U64(v)
+    }
+}
+
+/// An owned, type-erased value vector: one job's vertex values.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LaneVec {
+    F32(Vec<f32>),
+    U32(Vec<u32>),
+    U64(Vec<u64>),
+}
+
+impl Default for LaneVec {
+    fn default() -> Self {
+        LaneVec::F32(Vec::new())
+    }
+}
+
+impl LaneVec {
+    pub fn len(&self) -> usize {
+        match self {
+            LaneVec::F32(v) => v.len(),
+            LaneVec::U32(v) => v.len(),
+            LaneVec::U64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn lane_type(&self) -> LaneType {
+        match self {
+            LaneVec::F32(_) => LaneType::F32,
+            LaneVec::U32(_) => LaneType::U32,
+            LaneVec::U64(_) => LaneType::U64,
+        }
+    }
+
+    pub fn as_slice(&self) -> LaneSlice<'_> {
+        match self {
+            LaneVec::F32(v) => LaneSlice::F32(v),
+            LaneVec::U32(v) => LaneSlice::U32(v),
+            LaneVec::U64(v) => LaneSlice::U64(v),
+        }
+    }
+
+    pub fn as_mut(&mut self) -> LaneSliceMut<'_> {
+        match self {
+            LaneVec::F32(v) => LaneSliceMut::F32(v),
+            LaneVec::U32(v) => LaneSliceMut::U32(v),
+            LaneVec::U64(v) => LaneSliceMut::U64(v),
+        }
+    }
+
+    /// Typed accessors; panic on a lane-type mismatch.
+    pub fn f32s(&self) -> &[f32] {
+        match self {
+            LaneVec::F32(v) => v,
+            other => lane_mismatch(LaneType::F32, other.lane_type()),
+        }
+    }
+    pub fn u32s(&self) -> &[u32] {
+        match self {
+            LaneVec::U32(v) => v,
+            other => lane_mismatch(LaneType::U32, other.lane_type()),
+        }
+    }
+    pub fn u64s(&self) -> &[u64] {
+        match self {
+            LaneVec::U64(v) => v,
+            other => lane_mismatch(LaneType::U64, other.lane_type()),
+        }
+    }
+
+    /// Value `i` widened to f64 (lossless for every lane except u64
+    /// values above 2^53; serve results and CLI printing only).
+    pub fn get_f64(&self, i: usize) -> f64 {
+        match self {
+            LaneVec::F32(v) => f64::from(v[i]),
+            LaneVec::U32(v) => f64::from(v[i]),
+            LaneVec::U64(v) => v[i] as f64,
+        }
+    }
+
+    /// Value `i`'s raw bit pattern, zero-extended to 64 bits.
+    pub fn bits64(&self, i: usize) -> u64 {
+        match self {
+            LaneVec::F32(v) => v[i].to_bits() as u64,
+            LaneVec::U32(v) => v[i] as u64,
+            LaneVec::U64(v) => v[i],
+        }
+    }
+}
+
+impl From<Vec<f32>> for LaneVec {
+    fn from(v: Vec<f32>) -> Self {
+        LaneVec::F32(v)
+    }
+}
+impl From<Vec<u32>> for LaneVec {
+    fn from(v: Vec<u32>) -> Self {
+        LaneVec::U32(v)
+    }
+}
+impl From<Vec<u64>> for LaneVec {
+    fn from(v: Vec<u64>) -> Self {
+        LaneVec::U64(v)
+    }
+}
+
+// Mixed-type equality against plain f32 vectors keeps the pre-PR-10
+// test idiom (`assert_eq!(engine_values, reference_vec)`) working.
+impl PartialEq<Vec<f32>> for LaneVec {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        matches!(self, LaneVec::F32(v) if v == other)
+    }
+}
+impl PartialEq<LaneVec> for Vec<f32> {
+    fn eq(&self, other: &LaneVec) -> bool {
+        other == self
+    }
+}
+impl PartialEq<[f32]> for LaneVec {
+    fn eq(&self, other: &[f32]) -> bool {
+        matches!(self, LaneVec::F32(v) if v[..] == *other)
+    }
+}
+
+/// A borrowed, type-erased view of a value vector.
+#[derive(Clone, Copy, Debug)]
+pub enum LaneSlice<'a> {
+    F32(&'a [f32]),
+    U32(&'a [u32]),
+    U64(&'a [u64]),
+}
+
+impl<'a> LaneSlice<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            LaneSlice::F32(v) => v.len(),
+            LaneSlice::U32(v) => v.len(),
+            LaneSlice::U64(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn lane_type(&self) -> LaneType {
+        match self {
+            LaneSlice::F32(_) => LaneType::F32,
+            LaneSlice::U32(_) => LaneType::U32,
+            LaneSlice::U64(_) => LaneType::U64,
+        }
+    }
+    pub fn to_lane_vec(self) -> LaneVec {
+        match self {
+            LaneSlice::F32(v) => LaneVec::F32(v.to_vec()),
+            LaneSlice::U32(v) => LaneVec::U32(v.to_vec()),
+            LaneSlice::U64(v) => LaneVec::U64(v.to_vec()),
+        }
+    }
+    pub fn f32s(self) -> &'a [f32] {
+        match self {
+            LaneSlice::F32(v) => v,
+            other => lane_mismatch(LaneType::F32, other.lane_type()),
+        }
+    }
+}
+
+impl<'a> From<&'a [f32]> for LaneSlice<'a> {
+    fn from(v: &'a [f32]) -> Self {
+        LaneSlice::F32(v)
+    }
+}
+impl<'a> From<&'a Vec<f32>> for LaneSlice<'a> {
+    fn from(v: &'a Vec<f32>) -> Self {
+        LaneSlice::F32(v)
+    }
+}
+
+/// A mutable, type-erased view of a value vector (a `SharedDst` claim).
+#[derive(Debug)]
+pub enum LaneSliceMut<'a> {
+    F32(&'a mut [f32]),
+    U32(&'a mut [u32]),
+    U64(&'a mut [u64]),
+}
+
+impl<'a> LaneSliceMut<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            LaneSliceMut::F32(v) => v.len(),
+            LaneSliceMut::U32(v) => v.len(),
+            LaneSliceMut::U64(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn lane_type(&self) -> LaneType {
+        match self {
+            LaneSliceMut::F32(_) => LaneType::F32,
+            LaneSliceMut::U32(_) => LaneType::U32,
+            LaneSliceMut::U64(_) => LaneType::U64,
+        }
+    }
+    /// Reborrow: a shorter-lived mutable view of the same values.
+    pub fn rb(&mut self) -> LaneSliceMut<'_> {
+        match self {
+            LaneSliceMut::F32(v) => LaneSliceMut::F32(v),
+            LaneSliceMut::U32(v) => LaneSliceMut::U32(v),
+            LaneSliceMut::U64(v) => LaneSliceMut::U64(v),
+        }
+    }
+    /// A shared view of the same values.
+    pub fn shared(&self) -> LaneSlice<'_> {
+        match self {
+            LaneSliceMut::F32(v) => LaneSlice::F32(v),
+            LaneSliceMut::U32(v) => LaneSlice::U32(v),
+            LaneSliceMut::U64(v) => LaneSlice::U64(v),
+        }
+    }
+    pub fn f32s(self) -> &'a mut [f32] {
+        match self {
+            LaneSliceMut::F32(v) => v,
+            other => lane_mismatch(LaneType::F32, other.lane_type()),
+        }
+    }
+}
+
+impl<'a> From<&'a mut [f32]> for LaneSliceMut<'a> {
+    fn from(v: &'a mut [f32]) -> Self {
+        LaneSliceMut::F32(v)
+    }
+}
+impl<'a> From<&'a mut Vec<f32>> for LaneSliceMut<'a> {
+    fn from(v: &'a mut Vec<f32>) -> Self {
+        LaneSliceMut::F32(v)
+    }
+}
+
+/// Dispatch an expression over a [`LaneType`], binding `$T` to the
+/// concrete lane type in each arm.
+macro_rules! with_lane {
+    ($lane:expr, $T:ident => $body:expr) => {
+        match $lane {
+            $crate::exec::lane::LaneType::F32 => {
+                type $T = f32;
+                $body
+            }
+            $crate::exec::lane::LaneType::U32 => {
+                type $T = u32;
+                $body
+            }
+            $crate::exec::lane::LaneType::U64 => {
+                type $T = u64;
+                $body
+            }
+        }
+    };
+}
+pub(crate) use with_lane;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_type_tags_and_names_round_trip() {
+        for t in [LaneType::F32, LaneType::U32, LaneType::U64] {
+            assert_eq!(LaneType::from_tag(t.tag()), Some(t));
+            assert_eq!(LaneType::parse(t.name()), Some(t));
+        }
+        assert_eq!(LaneType::from_tag(3), None);
+        assert_eq!(LaneType::parse("i16"), None);
+        assert_eq!(LaneType::U64.bytes(), 8);
+        assert_eq!(LaneType::U32.bytes(), 4);
+    }
+
+    #[test]
+    fn integer_sum_saturates_instead_of_wrapping() {
+        assert_eq!(u32::MAX.add(1), u32::MAX);
+        assert_eq!(u64::MAX.add(u64::MAX), u64::MAX);
+        // saturating add stays associative at the boundary: min(sum, MAX)
+        let (a, b, c) = (u32::MAX - 1, 3u32, 5u32);
+        assert_eq!(a.add(b).add(c), a.add(b.add(c)));
+    }
+
+    #[test]
+    fn bits64_round_trips_every_lane() {
+        assert_eq!(f32::from_bits64((-1.5f32).to_bits64()), -1.5);
+        assert_eq!(u32::from_bits64(7u32.to_bits64()), 7);
+        assert_eq!(u64::from_bits64(u64::MAX.to_bits64()), u64::MAX);
+    }
+
+    #[test]
+    fn erased_vectors_compare_against_f32_vecs() {
+        let v = LaneVec::from(vec![1.0f32, 2.0]);
+        assert_eq!(v, vec![1.0f32, 2.0]);
+        assert_ne!(v, vec![1.0f32, 2.5]);
+        let u = LaneVec::from(vec![1u32, 2]);
+        assert!(u != vec![1.0f32, 2.0]);
+        assert_eq!(u.get_f64(1), 2.0);
+        assert_eq!(u.bits64(0), 1);
+        assert_eq!(u.lane_type(), LaneType::U32);
+    }
+
+    #[test]
+    #[should_panic(expected = "lane type mismatch")]
+    fn typed_accessor_panics_on_mismatch() {
+        LaneVec::from(vec![1u32]).f32s();
+    }
+
+    #[test]
+    fn dispatch_macro_binds_the_concrete_type() {
+        for t in [LaneType::F32, LaneType::U32, LaneType::U64] {
+            let bytes = with_lane!(t, T => std::mem::size_of::<T>());
+            assert_eq!(bytes, t.bytes());
+        }
+    }
+}

@@ -51,6 +51,7 @@
 pub mod arena;
 pub mod dst;
 pub mod kernel;
+pub mod lane;
 pub mod pipeline;
 pub mod schedule;
 
@@ -67,7 +68,9 @@ use crate::graph::{Edge, VertexId};
 use crate::metrics::{BatchMetrics, IterationMetrics, JobMetrics, RunMetrics};
 use crate::storage::disk::Disk;
 use arena::AlignedArena;
+use lane::{with_lane, Lane};
 pub use dst::SharedDst;
+pub use lane::{LaneSlice, LaneSliceMut, LaneType, LaneVec};
 pub use schedule::{ActiveBits, RangeMarker};
 
 /// Execution knobs shared by every engine (the paper's settings).
@@ -144,8 +147,9 @@ pub struct BatchJob<'a> {
     pub max_iters: u32,
 }
 
-/// One job's outcome: final vertex values plus its run metrics.
-pub type JobOutput = (Vec<f32>, RunMetrics);
+/// One job's outcome: final vertex values (in the job kernel's lane
+/// type) plus its run metrics.
+pub type JobOutput = (LaneVec, RunMetrics);
 
 /// Warm-start state for one founding job of [`ExecCore::run_batch_with`]:
 /// the lane exactly as a checkpoint captured it at a pass boundary.  A
@@ -153,7 +157,7 @@ pub type JobOutput = (Vec<f32>, RunMetrics);
 /// remainder of the run is bit-identical to the uninterrupted one.
 #[derive(Clone, Debug, Default)]
 pub struct ResumeState {
-    pub values: Vec<f32>,
+    pub values: LaneVec,
     pub active: Vec<VertexId>,
     /// Iterations the lane completed before the checkpoint.
     pub iters_done: u32,
@@ -165,7 +169,7 @@ pub struct ResumeState {
 /// Read-only view of one lane at a pass boundary, in admission order —
 /// what a [`PassObserver`] (the checkpoint writer) gets to persist.
 pub struct LaneSnapshot<'a> {
-    pub values: &'a [f32],
+    pub values: LaneSlice<'a>,
     pub active: &'a [VertexId],
     /// Job-local iterations completed so far (the lane's clock).
     pub iters_done: u32,
@@ -235,8 +239,9 @@ pub struct BatchOptions<'o> {
 pub struct IterCtx<'a> {
     pub kernel: ShardKernel,
     pub num_vertices: u32,
-    /// The previous iteration's vertex values (read-only this iteration).
-    pub src: &'a [f32],
+    /// The previous iteration's vertex values (read-only this iteration),
+    /// type-erased; the kernels extract the typed slice once per unit.
+    pub src: LaneSlice<'a>,
     pub inv_out_deg: &'a [f32],
     /// Pre-folded `src · inv_out_deg` for sum kernels (|V| multiplies
     /// once, instead of |E| per-edge products); empty otherwise.
@@ -247,22 +252,38 @@ pub struct IterCtx<'a> {
 impl IterCtx<'_> {
     /// One edge's gathered contribution.  Degree-mass kernels read the
     /// pre-folded array; everything else folds from `src` + weight.
+    /// `T` must be the kernel's lane type.
     #[inline]
-    pub fn edge_value(&self, e: &Edge) -> f32 {
+    pub fn edge_value<T: Lane>(&self, e: &Edge) -> T {
         if self.kernel.uses_contrib() {
-            self.contrib[e.src as usize]
+            T::from_mass(self.contrib[e.src as usize])
         } else {
-            self.kernel.edge_value(self.src[e.src as usize], 0.0, e.weight)
+            self.kernel.edge_value_t(T::of_slice(self.src)[e.src as usize], 0.0, e.weight)
         }
     }
 }
 
 /// A deferred write produced by scatter-style units (X-Stream's update
-/// stream): folded deterministically at the iteration barrier.
+/// stream): folded deterministically at the iteration barrier.  The
+/// value travels as its raw bit pattern (zero-extended to 64 bits) so
+/// one update stream type serves every lane; the barrier types it back
+/// out with [`Update::val`] under the kernel's lane.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Update {
     pub dst: VertexId,
-    pub val: f32,
+    pub bits: u64,
+}
+
+impl Update {
+    #[inline]
+    pub fn new<T: Lane>(dst: VertexId, val: T) -> Update {
+        Update { dst, bits: val.to_bits64() }
+    }
+
+    #[inline]
+    pub fn val<T: Lane>(&self) -> T {
+        T::from_bits64(self.bits)
+    }
 }
 
 /// What one unit's compute produced.
@@ -430,7 +451,7 @@ pub fn fold_edges_interval(
     ctx: &IterCtx<'_>,
     edges: &[Edge],
     lo: u32,
-    out: &mut [f32],
+    out: LaneSliceMut<'_>,
     scratch: &mut Scratch<'_>,
 ) {
     let (vals, idx) = scratch.arenas();
@@ -438,7 +459,7 @@ pub fn fold_edges_interval(
 }
 
 /// Mark every row of `[lo, lo + out.len())` whose new value activates it.
-pub fn mark_interval(ctx: &IterCtx<'_>, lo: u32, out: &[f32], marker: &mut RangeMarker<'_>) {
+pub fn mark_interval(ctx: &IterCtx<'_>, lo: u32, out: LaneSlice<'_>, marker: &mut RangeMarker<'_>) {
     kernel::mark_rows(ctx, lo, out, marker);
 }
 
@@ -471,7 +492,7 @@ impl<'a> ExecCore<'a> {
         num_vertices: u32,
         inv_out_deg: &[f32],
         max_iters: u32,
-    ) -> Result<(Vec<f32>, RunMetrics)> {
+    ) -> Result<JobOutput> {
         let (mut outs, _) =
             self.run_batch(source, &[BatchJob { app, max_iters }], num_vertices, inv_out_deg)?;
         Ok(outs.pop().expect("one job in, one result out"))
@@ -563,10 +584,6 @@ impl<'a> ExecCore<'a> {
             jobs.len()
         );
         let n = num_vertices;
-        anyhow::ensure!(
-            n < (1 << 24),
-            "f32 vertex values require ids < 2^24 (got {n})"
-        );
         let mut lanes: Vec<JobLane> = Vec::with_capacity(jobs.len());
         for (i, job) in jobs.iter().enumerate() {
             let mut lane = JobLane::new(job, n, inv_out_deg)?;
@@ -603,7 +620,7 @@ impl<'a> ExecCore<'a> {
                     let verdict = match opts.arbiter.as_mut() {
                         Some(arb) => {
                             let snap = LaneSnapshot {
-                                values: &lane.src,
+                                values: lane.src.as_slice(),
                                 active: &lane.active,
                                 iters_done: lane.iters_done,
                                 done: false,
@@ -660,7 +677,7 @@ impl<'a> ExecCore<'a> {
                 let snaps: Vec<LaneSnapshot<'_>> = lanes
                     .iter()
                     .map(|lane| LaneSnapshot {
-                        values: &lane.src,
+                        values: lane.src.as_slice(),
                         active: &lane.active,
                         iters_done: lane.iters_done,
                         done: lane.done,
@@ -792,7 +809,7 @@ impl<'a> ExecCore<'a> {
             if lane.kernel.uses_contrib() {
                 lane.contrib.clear();
                 lane.contrib
-                    .extend(lane.src.iter().zip(inv_out_deg).map(|(&v, &d)| v * d));
+                    .extend(lane.src.f32s().iter().zip(inv_out_deg).map(|(&v, &d)| v * d));
             }
         }
 
@@ -818,7 +835,7 @@ impl<'a> ExecCore<'a> {
                 IterCtx {
                     kernel: lane.kernel,
                     num_vertices: n as u32,
-                    src: &lane.src,
+                    src: lane.src.as_slice(),
                     inv_out_deg,
                     contrib: &lane.contrib,
                     iteration: lane.iters_done,
@@ -911,7 +928,7 @@ impl<'a> ExecCore<'a> {
             },
         )?;
 
-        let mut nexts: Vec<Vec<f32>> = dsts
+        let mut nexts: Vec<LaneVec> = dsts
             .into_iter()
             .map(|d| {
                 d.release_all();
@@ -1050,7 +1067,7 @@ impl<'a> ExecCore<'a> {
 /// set, pre-folded contribution buffer, metrics and per-job meter.
 struct JobLane {
     kernel: ShardKernel,
-    src: Vec<f32>,
+    src: LaneVec,
     active: Vec<VertexId>,
     contrib: Vec<f32>,
     run: RunMetrics,
@@ -1091,8 +1108,20 @@ impl JobLane {
                 job.app.name()
             );
         }
+        // only f32 lanes carry vertex ids as values imprecisely; integer
+        // lanes are exact at any id, so the guard is per lane type
+        if kernel.lane == LaneType::F32 {
+            anyhow::ensure!(n < (1 << 24), "f32 vertex values require ids < 2^24 (got {n})");
+        }
         let (src, active) = job.app.init(n);
         anyhow::ensure!(src.len() == n as usize, "init length mismatch");
+        anyhow::ensure!(
+            src.lane_type() == kernel.lane,
+            "{}: init lane {} does not match kernel lane {}",
+            job.app.name(),
+            src.lane_type().name(),
+            kernel.lane.name()
+        );
         Ok(JobLane {
             kernel,
             src,
@@ -1121,6 +1150,12 @@ impl JobLane {
             rs.values.len() == n as usize,
             "resume state holds {} vertex values, graph has {n}",
             rs.values.len()
+        );
+        anyhow::ensure!(
+            rs.values.lane_type() == self.kernel.lane,
+            "resume state lane {} does not match kernel lane {}",
+            rs.values.lane_type().name(),
+            self.kernel.lane.name()
         );
         if let Some(&v) = rs.active.iter().max() {
             anyhow::ensure!(v < n, "resume state activates vertex {v} >= {n}");
@@ -1179,11 +1214,24 @@ struct PassStats {
 fn fold_updates(
     ctx: &IterCtx<'_>,
     slots: Vec<Option<Vec<Update>>>,
-    out: &mut [f32],
+    out: &mut LaneVec,
+    bits: &ActiveBits,
+    pool: &ScratchPool,
+) -> u64 {
+    with_lane!(ctx.kernel.lane, T => {
+        fold_updates_t::<T>(ctx, slots, T::of_mut(out.as_mut()), bits, pool)
+    })
+}
+
+fn fold_updates_t<T: Lane>(
+    ctx: &IterCtx<'_>,
+    slots: Vec<Option<Vec<Update>>>,
+    out: &mut [T],
     bits: &ActiveBits,
     pool: &ScratchPool,
 ) -> u64 {
     let kernel = ctx.kernel;
+    let src = T::of_slice(ctx.src);
     let mut folded = 0u64;
     let mut marker = bits.marker();
     match kernel.combine {
@@ -1202,12 +1250,12 @@ fn fold_updates(
                 idx[v + 1] += idx[v];
             }
             // … then fill, advancing idx[v] to the bucket's end
-            let vals = vals_a.f32s(total);
+            let vals = T::arena_slice(&mut vals_a, total);
             for mut slot in slots.into_iter().flatten() {
                 folded += slot.len() as u64;
                 for u in slot.drain(..) {
                     let v = u.dst as usize;
-                    vals[idx[v] as usize] = u.val;
+                    vals[idx[v] as usize] = u.val();
                     idx[v] += 1;
                 }
                 pool.recycle_updates(slot);
@@ -1215,9 +1263,9 @@ fn fold_updates(
             for v in 0..out.len() {
                 let start = if v == 0 { 0 } else { idx[v - 1] as usize };
                 let a = crate::exec::kernel::chunked_sum(&vals[start..idx[v] as usize]);
-                let old = ctx.src[v];
-                let new = kernel.apply(v as u32, ctx.num_vertices, old, a);
-                if kernel.is_update(old, new) {
+                let old = src[v];
+                let new = kernel.apply_t(v as u32, ctx.num_vertices, old, a);
+                if kernel.is_update_t(old, new) {
                     marker.mark(v as u32);
                 }
                 out[v] = new;
@@ -1229,7 +1277,7 @@ fn fold_updates(
                 folded += slot.len() as u64;
                 for u in slot.drain(..) {
                     let cur = out[u.dst as usize];
-                    let new = kernel.combine(cur, u.val);
+                    let new = kernel.combine_t(cur, u.val());
                     if new != cur {
                         out[u.dst as usize] = new;
                         marker.mark(u.dst);
@@ -1299,9 +1347,9 @@ mod tests {
         ) -> Result<UnitOutput> {
             assert_eq!(id as usize, item);
             let (lo, hi) = self.intervals[item];
-            let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
-            fold_edges_interval(ctx, &self.edges[item], lo, out, scratch);
-            mark_interval(ctx, lo, out, marker);
+            let mut out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
+            fold_edges_interval(ctx, &self.edges[item], lo, out.rb(), scratch);
+            mark_interval(ctx, lo, out.shared(), marker);
             Ok(UnitOutput::InPlace)
         }
 
@@ -1715,7 +1763,7 @@ mod tests {
         let ctx = IterCtx {
             kernel,
             num_vertices: 6,
-            src: &src,
+            src: (&src).into(),
             inv_out_deg: &[],
             contrib: &[],
             iteration: 0,
@@ -1725,8 +1773,78 @@ mod tests {
         es.sort_unstable_by_key(|e| e.src);
         let pool = ScratchPool::new();
         let mut scratch = pool.scratch();
-        fold_edges_interval(&ctx, &es, 3, &mut out, &mut scratch);
+        fold_edges_interval(&ctx, &es, 3, (&mut out).into(), &mut scratch);
         assert_eq!(out, vec![3.0, 7.0, 11.0]);
+    }
+
+    #[test]
+    fn integer_lane_jobs_run_through_both_source_shapes() {
+        use crate::apps::{BfsLevels, KCore, Wcc};
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let inplace = interval_source(n, &edges);
+        let mut parts = vec![Vec::new(), Vec::new()];
+        for e in &edges {
+            parts[if e.src < 3 { 0 } else { 1 }].push(*e);
+        }
+        for p in &mut parts {
+            p.sort_unstable_by_key(|e| e.src);
+        }
+        let scatter = ToyScatter { parts };
+        // everything is reachable from 0 → one component, known levels
+        let want_wcc = vec![0u32; n as usize];
+        let want_lvl = vec![0u32, 1, 1, 2, 3, 2];
+        // in-degrees: 1:1, 2:1, 3:2, 4:1, 5:1 → only vertex 3 survives
+        // k=2 at first, then dies once its in-neighbors are gone
+        let want_core = vec![0u32; n as usize];
+        for (app, want) in [
+            (&Wcc as &dyn VertexProgram, &want_wcc),
+            (&BfsLevels::new(0), &want_lvl),
+            (&KCore::new(2), &want_core),
+        ] {
+            let (v1, r1) = ExecCore::new(ExecConfig::default(), &disk, None)
+                .run(&inplace, app, n, &[], 20)
+                .unwrap();
+            assert!(r1.converged, "{} must converge", app.name());
+            assert_eq!(v1.u32s(), &want[..], "{} in-place values", app.name());
+            let (v2, _) = ExecCore::new(ExecConfig::default(), &disk, None)
+                .run(&scatter, app, n, &[], 20)
+                .unwrap();
+            assert_eq!(v1, v2, "{}: scatter diverged from in-place", app.name());
+        }
+    }
+
+    #[test]
+    fn mixed_lane_batch_matches_solo_runs_bitwise() {
+        use crate::apps::Wcc;
+        let (n, edges) = toy_graph();
+        let disk = Disk::unthrottled();
+        let inv = vec![0.5f32, 0.5, 1.0, 1.0, 0.0, 0.0];
+        let src = interval_source(n, &edges);
+        let (v_pr, _) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run(&src, &PageRank::new(), n, &inv, 5)
+            .unwrap();
+        let (v_wcc, _) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run(&src, &Wcc, n, &inv, 20)
+            .unwrap();
+        let (outs, batch) = ExecCore::new(ExecConfig::default(), &disk, None)
+            .run_batch(
+                &src,
+                &[
+                    BatchJob { app: &PageRank::new(), max_iters: 5 },
+                    BatchJob { app: &Wcc, max_iters: 20 },
+                ],
+                n,
+                &inv,
+            )
+            .unwrap();
+        assert_eq!(outs[0].0, v_pr, "f32 member diverged in a mixed batch");
+        assert_eq!(outs[1].0, v_wcc, "u32 member diverged in a mixed batch");
+        assert_eq!(outs[0].0.lane_type(), LaneType::F32);
+        assert_eq!(outs[1].0.lane_type(), LaneType::U32);
+        assert_eq!(batch.jobs, 2);
+        // both jobs scan-share the same shard pass while running
+        assert_eq!(outs[1].1.iterations[0].jobs_in_pass, 2);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use graphmp::apps::{Bfs, Cc, PageRank, Ppr, Sssp, VertexProgram, Widest};
+use graphmp::apps::{Bfs, BfsLevels, Cc, KCore, PageRank, Ppr, Sssp, VertexProgram, Wcc, Widest};
 use graphmp::cli::Args;
 use graphmp::compress::CacheMode;
 use graphmp::engine::{Backend, EngineConfig, VswEngine};
@@ -65,8 +65,13 @@ USAGE:
   graphmp generate   --dataset <name> --out <file.csv>
   graphmp preprocess --dataset <name> --dir <graphdir> [--weighted] [--undirected]
                      [--edges-per-shard N] [--small]
-  graphmp run        --dir <graphdir> --app pagerank|ppr|sssp|cc|bfs|widest
-                     [--iters N] [--source V] [--damping F]
+  graphmp run        --dir <graphdir>
+                     --app pagerank|ppr|sssp|cc|bfs|widest|wcc|bfs_levels|kcore
+                     [--iters N] [--source V] [--damping F] [--k N]
+                                 (wcc/bfs_levels/kcore run on u32 value
+                                  lanes: component labels, hop levels, and
+                                  k-core membership; --k sets the core
+                                  order for kcore, default 2)
                      [--jobs N]  (scan-shared batch: N concurrent queries
                                   share every shard pass; seeded apps offset
                                   --source by the job index, e.g. N PPR
@@ -205,12 +210,13 @@ fn app_of(args: &Args) -> Result<Box<dyn VertexProgram>> {
     app_of_job(args, 0)
 }
 
-/// The app for batch member `job`: seeded apps (ppr/sssp/bfs/widest)
-/// offset their source vertex by the job index, so `--jobs N` submits N
-/// distinct queries (e.g. N PPR reset vectors) over one graph.
+/// The app for batch member `job`: seeded apps (ppr/sssp/bfs/widest/
+/// bfs_levels) offset their source vertex by the job index, so `--jobs N`
+/// submits N distinct queries (e.g. N PPR reset vectors) over one graph.
 fn app_of_job(args: &Args, job: u32) -> Result<Box<dyn VertexProgram>> {
     let source: u32 = args.parse_opt_or("source", 0u32)? + job;
     let damping: f32 = args.parse_opt_or("damping", 0.85f32)?;
+    let k: u32 = args.parse_opt_or("k", 2u32)?;
     Ok(match args.opt_or("app", "pagerank") {
         "pagerank" => Box::new(PageRank { damping }),
         "ppr" => Box::new(Ppr { damping, seed: source }),
@@ -218,7 +224,12 @@ fn app_of_job(args: &Args, job: u32) -> Result<Box<dyn VertexProgram>> {
         "cc" => Box::new(Cc),
         "bfs" => Box::new(Bfs::new(source)),
         "widest" => Box::new(Widest::new(source)),
-        other => anyhow::bail!("unknown app {other}"),
+        "wcc" => Box::new(Wcc),
+        "bfs_levels" => Box::new(BfsLevels::new(source)),
+        "kcore" => Box::new(KCore::new(k)),
+        other => anyhow::bail!(
+            "unknown app {other} (pagerank|ppr|sssp|cc|bfs|widest|wcc|bfs_levels|kcore)"
+        ),
     })
 }
 

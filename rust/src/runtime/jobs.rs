@@ -34,7 +34,7 @@ use anyhow::{Context, Result};
 use super::checkpoint::{self, BatchMeta, CheckpointConfig, CheckpointWriter};
 use crate::apps::VertexProgram;
 use crate::engine::VswEngine;
-use crate::exec::{BatchJob, BatchOptions, ResumeState, MAX_BATCH_JOBS};
+use crate::exec::{BatchJob, BatchOptions, LaneVec, ResumeState, MAX_BATCH_JOBS};
 use crate::metrics::{BatchMetrics, JobMetrics, RunMetrics};
 
 pub type JobId = u32;
@@ -107,7 +107,9 @@ pub struct Job {
     /// Batch pass boundary the job asks to arrive at (0 = founding
     /// member of its batch; set by [`JobSet::submit_at`]).
     pub arrive_pass: u32,
-    pub values: Option<Vec<f32>>,
+    /// Final vertex values in the app's lane type (f32 mass/distances,
+    /// u32 labels/levels).
+    pub values: Option<LaneVec>,
     pub run: Option<RunMetrics>,
 }
 
@@ -236,7 +238,7 @@ impl JobSet {
     }
 
     /// Take a finished job's vertex values (leaves metrics in place).
-    pub fn take_values(&mut self, id: JobId) -> Option<Vec<f32>> {
+    pub fn take_values(&mut self, id: JobId) -> Option<LaneVec> {
         self.jobs.get_mut(id as usize).and_then(|j| j.values.take())
     }
 
@@ -282,7 +284,10 @@ impl JobSet {
                 id: j.id,
                 arrive: 0,
                 state: ResumeState {
-                    values: j.values.clone().unwrap_or_default(),
+                    values: j
+                        .values
+                        .clone()
+                        .unwrap_or_else(|| LaneVec::from(Vec::<f32>::new())),
                     active: Vec::new(),
                     iters_done: j.run.as_ref().map_or(0, |r| r.job.iterations),
                     done: true,

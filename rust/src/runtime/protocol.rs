@@ -22,6 +22,7 @@
 use anyhow::{Context, Result};
 
 use crate::apps::VertexProgram;
+use crate::exec::LaneVec;
 
 /// A JSON value: the minimal tree both sides of the protocol share.
 /// Objects keep insertion order (they are rendered as written and probed
@@ -365,11 +366,13 @@ impl Priority {
 /// [`VertexProgram`] with [`build_app`](Self::build_app) at admission.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SubmitSpec {
-    /// App name: `pagerank|ppr|sssp|cc|bfs|widest`.
+    /// App name: `pagerank|ppr|sssp|cc|bfs|widest|wcc|bfs_levels|kcore`.
     pub app: String,
-    /// Seed/source vertex of seeded apps (ignored by pagerank/cc).
+    /// Seed/source vertex of seeded apps (ignored by pagerank/cc/wcc/kcore).
     pub source: u32,
     pub damping: f32,
+    /// Core order of `kcore` (ignored by every other app).
+    pub k: u32,
     pub max_iters: u32,
     pub priority: Priority,
     /// Deadline in pass boundaries since admission: once this many passes
@@ -387,6 +390,7 @@ impl Default for SubmitSpec {
             app: "pagerank".to_string(),
             source: 0,
             damping: 0.85,
+            k: 2,
             max_iters: 10,
             priority: Priority::Normal,
             deadline_passes: None,
@@ -400,7 +404,7 @@ impl SubmitSpec {
     /// Instantiate the vertex program this spec names (same mapping as
     /// `graphmp run --app`).
     pub fn build_app(&self) -> Result<Box<dyn VertexProgram>> {
-        use crate::apps::{Bfs, Cc, PageRank, Ppr, Sssp, Widest};
+        use crate::apps::{Bfs, BfsLevels, Cc, KCore, PageRank, Ppr, Sssp, Wcc, Widest};
         Ok(match self.app.as_str() {
             "pagerank" => Box::new(PageRank { damping: self.damping }),
             "ppr" => Box::new(Ppr { damping: self.damping, seed: self.source }),
@@ -408,7 +412,13 @@ impl SubmitSpec {
             "cc" => Box::new(Cc),
             "bfs" => Box::new(Bfs::new(self.source)),
             "widest" => Box::new(Widest::new(self.source)),
-            other => anyhow::bail!("unknown app '{other}' (pagerank|ppr|sssp|cc|bfs|widest)"),
+            "wcc" => Box::new(Wcc),
+            "bfs_levels" => Box::new(BfsLevels::new(self.source)),
+            "kcore" => Box::new(KCore::new(self.k)),
+            other => anyhow::bail!(
+                "unknown app '{other}' \
+                 (pagerank|ppr|sssp|cc|bfs|widest|wcc|bfs_levels|kcore)"
+            ),
         })
     }
 
@@ -436,6 +446,7 @@ impl SubmitSpec {
                 .get("damping")
                 .and_then(Json::as_f64)
                 .map_or(d.damping, |x| x as f32),
+            k: v.get("k").and_then(Json::as_u64).map_or(d.k, |x| x as u32),
             max_iters: v
                 .get("iters")
                 .and_then(Json::as_u64)
@@ -460,6 +471,7 @@ impl SubmitSpec {
             ("app".to_string(), Json::Str(self.app.clone())),
             ("source".to_string(), Json::Num(f64::from(self.source))),
             ("damping".to_string(), Json::Num(f64::from(self.damping))),
+            ("k".to_string(), Json::Num(f64::from(self.k))),
             ("iters".to_string(), Json::Num(f64::from(self.max_iters))),
             (
                 "priority".to_string(),
@@ -529,12 +541,28 @@ impl Request {
     }
 }
 
-/// CRC32 fingerprint of a vertex array's exact f32 bits — the protocol's
-/// compact bit-identity check (two runs agree iff their crc agrees).
-pub fn values_crc(values: &[f32]) -> u32 {
+/// CRC32 fingerprint of a vertex array's exact bits at the lane's native
+/// width (LE) — the protocol's compact bit-identity check (two runs agree
+/// iff their crc agrees).  The f32 path is byte-identical to the historic
+/// f32-only fingerprint.
+pub fn values_crc(values: &LaneVec) -> u32 {
     let mut h = crc32fast::Hasher::new();
-    for v in values {
-        h.update(&v.to_bits().to_le_bytes());
+    match values {
+        LaneVec::F32(vs) => {
+            for v in vs {
+                h.update(&v.to_bits().to_le_bytes());
+            }
+        }
+        LaneVec::U32(vs) => {
+            for v in vs {
+                h.update(&v.to_le_bytes());
+            }
+        }
+        LaneVec::U64(vs) => {
+            for v in vs {
+                h.update(&v.to_le_bytes());
+            }
+        }
     }
     h.finalize()
 }
@@ -582,6 +610,7 @@ mod tests {
             app: "ppr".to_string(),
             source: 7,
             damping: 0.9,
+            k: 4,
             max_iters: 25,
             priority: Priority::High,
             deadline_passes: Some(3),
@@ -625,12 +654,34 @@ mod tests {
 
     #[test]
     fn build_app_matches_names() {
-        for app in ["pagerank", "ppr", "sssp", "cc", "bfs", "widest"] {
+        for app in
+            ["pagerank", "ppr", "sssp", "cc", "bfs", "widest", "wcc", "bfs_levels", "kcore"]
+        {
             let spec = SubmitSpec { app: app.to_string(), ..Default::default() };
             assert_eq!(spec.build_app().unwrap().name(), app);
         }
         let bad = SubmitSpec { app: "zap".to_string(), ..Default::default() };
-        assert!(bad.build_app().is_err());
+        let err = bad.build_app().unwrap_err().to_string();
+        // the error names the full valid set, new apps included
+        for app in ["pagerank", "wcc", "bfs_levels", "kcore"] {
+            assert!(err.contains(app), "error should name '{app}': {err}");
+        }
+    }
+
+    #[test]
+    fn new_apps_round_trip_with_their_knobs() {
+        let kcore = SubmitSpec { app: "kcore".to_string(), k: 5, ..Default::default() };
+        let back = SubmitSpec::from_json(&kcore.to_json()).unwrap();
+        assert_eq!(back, kcore);
+        assert_eq!(back.build_app().unwrap().kernel().lane, crate::exec::LaneType::U32);
+
+        let bl = SubmitSpec { app: "bfs_levels".to_string(), source: 9, ..Default::default() };
+        let back = SubmitSpec::from_json(&bl.to_json()).unwrap();
+        assert_eq!(back, bl);
+
+        // a spec without "k" (an old client) still builds kcore at the default
+        let v = Json::parse(r#"{"op":"submit","app":"kcore"}"#).unwrap();
+        assert_eq!(SubmitSpec::from_json(&v).unwrap().k, 2);
     }
 
     #[test]
@@ -645,9 +696,22 @@ mod tests {
 
     #[test]
     fn values_crc_is_bit_exact() {
-        let a = vec![0.1f32, -0.0, f32::INFINITY];
-        let b = vec![0.1f32, 0.0, f32::INFINITY]; // -0.0 vs 0.0 differ bitwise
+        let a = LaneVec::from(vec![0.1f32, -0.0, f32::INFINITY]);
+        let b = LaneVec::from(vec![0.1f32, 0.0, f32::INFINITY]); // -0.0 vs 0.0 differ bitwise
         assert_ne!(values_crc(&a), values_crc(&b));
         assert_eq!(values_crc(&a), values_crc(&a.clone()));
+    }
+
+    #[test]
+    fn values_crc_covers_integer_lanes() {
+        let a = LaneVec::from(vec![1u32, 2, 3]);
+        let b = LaneVec::from(vec![1u32, 2, 4]);
+        assert_ne!(values_crc(&a), values_crc(&b));
+        // a u32 lane and an f32 lane with the same bytes fingerprint alike
+        // (the lane type travels in the result object, not the crc)
+        let bits = LaneVec::from(vec![f32::from_bits(1), f32::from_bits(2), f32::from_bits(3)]);
+        assert_eq!(values_crc(&a), values_crc(&bits));
+        let w = LaneVec::from(vec![u64::MAX, 7]);
+        assert_eq!(values_crc(&w), values_crc(&w.clone()));
     }
 }

@@ -60,8 +60,8 @@ use super::protocol::{self, Json, Priority, Request, SubmitSpec};
 use crate::apps::VertexProgram;
 use crate::engine::VswEngine;
 use crate::exec::{
-    BatchJob, BatchOptions, LaneArbiter, LaneSnapshot, LaneVerdict, PassObserver, ResumeState,
-    MAX_BATCH_JOBS,
+    BatchJob, BatchOptions, LaneArbiter, LaneSnapshot, LaneVec, LaneVerdict, PassObserver,
+    ResumeState, MAX_BATCH_JOBS,
 };
 use crate::metrics::ServeMetrics;
 
@@ -149,7 +149,8 @@ struct ServeJob {
     submitted: Instant,
     /// Submit→terminal wall latency, set once terminal.
     latency: Option<Duration>,
-    values: Option<Vec<f32>>,
+    /// Final (or partial, on evict) vertex values in the app's lane type.
+    values: Option<LaneVec>,
     iters: u32,
     /// Cancellation requested while running; the arbiter evicts the lane
     /// at the next pass boundary.
@@ -360,7 +361,7 @@ impl ServeHandle {
     }
 
     /// A job's vertex values, once set (finished, or partial on evict).
-    pub fn values(&self, id: u32) -> Option<Vec<f32>> {
+    pub fn values(&self, id: u32) -> Option<LaneVec> {
         self.shared.lock().jobs.get(id as usize).and_then(|j| j.values.clone())
     }
 
@@ -510,10 +511,16 @@ impl ServeHandle {
                         "values_crc",
                         Json::Str(format!("{:08x}", protocol::values_crc(vals))),
                     ));
+                    fields.push(field(
+                        "lane",
+                        Json::Str(vals.lane_type().name().to_string()),
+                    ));
                     if values {
                         fields.push(field(
                             "values",
-                            Json::Arr(vals.iter().map(|&v| Json::Num(f64::from(v))).collect()),
+                            Json::Arr(
+                                (0..vals.len()).map(|i| Json::Num(vals.get_f64(i))).collect(),
+                            ),
                         ));
                     }
                 }

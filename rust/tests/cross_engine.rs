@@ -11,12 +11,13 @@
 //! Differences between engines are thereby confined to their I/O
 //! schedules — the paper's premise for Tables 5–7 and Figs 9/10.
 
-use graphmp::apps::{Bfs, Cc, PageRank, Ppr, Sssp, VertexProgram, Widest};
+use graphmp::apps::{Bfs, BfsLevels, Cc, KCore, PageRank, Ppr, Sssp, VertexProgram, Wcc, Widest};
 use graphmp::baselines::{
     dsw::DswEngine, esg::EsgEngine, inmem::InMemEngine, psw::PswEngine, BaselineConfig,
     BaselineEngine,
 };
 use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::exec::LaneVec;
 use graphmp::graph::datasets::Dataset;
 use graphmp::graph::rmat::{rmat, RmatParams};
 use graphmp::graph::EdgeList;
@@ -33,6 +34,11 @@ fn apps() -> Vec<(Box<dyn VertexProgram>, u32, bool)> {
         (Box::new(Cc), 120, true),
         (Box::new(Bfs::new(0)), 60, false),
         (Box::new(Widest::new(0)), 80, false),
+        // the u32 lane: labels, levels and core membership — the same
+        // bitwise agreement, with no float epsilon anywhere in reach
+        (Box::new(Wcc), 120, true),
+        (Box::new(BfsLevels::new(0)), 60, false),
+        (Box::new(KCore::new(3)), 120, true),
     ]
 }
 
@@ -41,7 +47,7 @@ fn vsw_values(
     name: &str,
     app: &dyn VertexProgram,
     iters: u32,
-) -> (Vec<f32>, RunMetrics) {
+) -> (LaneVec, RunMetrics) {
     let root = std::env::temp_dir().join(format!("graphmp_xeng_{name}"));
     let _ = std::fs::remove_dir_all(&root);
     let disk = Disk::unthrottled();
@@ -81,8 +87,8 @@ fn assert_all_engines_agree(g: &EdgeList, gu: &EdgeList, tag: &str) {
             e.preprocess(gg, &disk).unwrap();
             let run = e.run(app, iters, &disk).unwrap();
             assert_eq!(
-                e.values(),
-                &vsw_vals[..],
+                e.values_lane(),
+                &vsw_vals,
                 "{tag}/{}: {} diverged from VSW",
                 app.name(),
                 e.name()
@@ -112,8 +118,8 @@ fn assert_all_engines_agree(g: &EdgeList, gu: &EdgeList, tag: &str) {
         im.load(gg, &disk).unwrap();
         im.run(app, iters, &disk).unwrap();
         assert_eq!(
-            im.values(),
-            &vsw_vals[..],
+            im.values_lane(),
+            &vsw_vals,
             "{tag}/{}: inmem diverged from VSW",
             app.name()
         );

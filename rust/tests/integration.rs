@@ -73,7 +73,7 @@ fn native_and_pjrt_backends_agree_on_pagerank() {
     // native rows fold through chunked multi-lane accumulators, the PJRT
     // artifact reduces in its own order — both reassociate f32 sums, so
     // this comparison is relative by construction (see exec::kernel docs)
-    for (i, (a, b)) in vn.iter().zip(&vp).enumerate() {
+    for (i, (a, b)) in vn.f32s().iter().zip(vp.f32s()).enumerate() {
         assert!(
             (a - b).abs() <= 1e-4 * a.abs().max(1e-3),
             "vertex {i}: native {a} vs pjrt {b}"
@@ -143,7 +143,7 @@ fn all_engines_agree_on_pagerank() {
     for e in engines.iter_mut() {
         e.preprocess(&g, &disk).unwrap();
         e.run(&PageRank::new(), iters, &disk).unwrap();
-        for (i, (a, b)) in vsw_vals.iter().zip(e.values()).enumerate() {
+        for (i, (a, b)) in vsw_vals.f32s().iter().zip(e.values()).enumerate() {
             assert!(
                 (a - b).abs() <= 1e-5,
                 "{}: vertex {i}: vsw {a} vs {b}",
@@ -154,7 +154,7 @@ fn all_engines_agree_on_pagerank() {
     let mut im = InMemEngine::new(cfg);
     im.load(&g, &disk).unwrap();
     im.run(&PageRank::new(), iters, &disk).unwrap();
-    for (a, b) in vsw_vals.iter().zip(im.values()) {
+    for (a, b) in vsw_vals.f32s().iter().zip(im.values()) {
         assert!((a - b).abs() <= 1e-5);
     }
 }
@@ -176,7 +176,7 @@ fn all_engines_agree_on_sssp() {
     for e in engines.iter_mut() {
         e.preprocess(&g, &disk).unwrap();
         e.run(&Sssp::new(0), 100, &disk).unwrap();
-        assert_eq!(e.values(), &vsw_vals[..], "{} disagrees", e.name());
+        assert_eq!(e.values(), vsw_vals.f32s(), "{} disagrees", e.name());
     }
 }
 

@@ -196,7 +196,8 @@ fn prop_pagerank_mass_bounded_and_positive() {
         };
         let (dir, _) = preprocess_into(&g, tmp(&format!("pr_{seed}")), &disk, cfg).unwrap();
         let mut e = VswEngine::open(&dir, &disk, EngineConfig::default()).unwrap();
-        let (vals, _) = e.run_to_values(&PageRank::new(), 8).unwrap();
+        let (lane, _) = e.run_to_values(&PageRank::new(), 8).unwrap();
+        let vals = lane.f32s();
         let n = g.num_vertices as f32;
         let total: f32 = vals.iter().sum();
         for (i, &v) in vals.iter().enumerate() {
@@ -225,7 +226,8 @@ fn prop_sssp_monotone_and_triangle_consistent() {
         };
         let (dir, _) = preprocess_into(&g, tmp(&format!("ss_{seed}")), &disk, cfg).unwrap();
         let mut e = VswEngine::open(&dir, &disk, EngineConfig::default()).unwrap();
-        let (vals, run) = e.run_to_values(&Sssp::new(0), 300).unwrap();
+        let (lane, run) = e.run_to_values(&Sssp::new(0), 300).unwrap();
+        let vals = lane.f32s();
         assert!(run.converged, "seed {seed}: SSSP did not converge");
         assert_eq!(vals[0], 0.0, "seed {seed}");
         // fixed-point property: no edge can still relax
@@ -258,7 +260,8 @@ fn prop_cc_labels_are_component_minima() {
         };
         let (dir, _) = preprocess_into(&g, tmp(&format!("cc_{seed}")), &disk, cfg).unwrap();
         let mut e = VswEngine::open(&dir, &disk, EngineConfig::default()).unwrap();
-        let (vals, run) = e.run_to_values(&Cc, 500).unwrap();
+        let (lane, run) = e.run_to_values(&Cc, 500).unwrap();
+        let vals = lane.f32s();
         assert!(run.converged, "seed {seed}");
         // endpoint labels equal across every edge; label ≤ own id
         for edge in &g.edges {

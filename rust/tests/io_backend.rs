@@ -70,7 +70,7 @@ fn vsw_run(
     kind: IoBackendKind,
     app: &dyn VertexProgram,
     iters: u32,
-) -> (Vec<f32>, graphmp::storage::disk::IoSnapshot) {
+) -> (graphmp::exec::LaneVec, graphmp::storage::disk::IoSnapshot) {
     let disk = disk_for(kind);
     let cfg = EngineConfig {
         workers: 4,
@@ -124,7 +124,7 @@ fn direct_backend_bit_identical_to_sim_across_engines_and_apps() {
             app.name()
         );
         // and both engines agree with each other per backend
-        assert_eq!(psw_dir.values(), &dir_vals[..], "{}: PSW vs VSW on direct", app.name());
+        assert_eq!(psw_dir.values(), dir_vals.f32s(), "{}: PSW vs VSW on direct", app.name());
     }
     let _ = std::fs::remove_dir_all(&root);
 }

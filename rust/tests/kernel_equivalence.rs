@@ -12,17 +12,21 @@
 //! - rows with ≤ 3 edges are bit-identical even for sums (the
 //!   zero-padded tail's reduction tree degenerates to sequential order);
 //! - `fold_list` over the same destination-grouped edge order is
-//!   bit-identical to `fold_csr` — both run the same chunked scheme.
+//!   bit-identical to `fold_csr` — both run the same chunked scheme;
+//! - **integer lanes have no epsilon carve-out at all**: the u32 label/
+//!   level kernels (WCC, BFS levels, k-core) and the synthetic u64
+//!   kernels must be `==` across chunked/scalar/reference/list on the
+//!   same boundary sweep and on seeded random ragged graphs.
 //!
 //! CI runs this suite in debug and release, with and without
 //! `--features simd`; the simd build must satisfy the *same* exact/
 //! epsilon contract against the scalar oracle, which is how "chunked vs
 //! simd agreement" is gated without needing two binaries in one test.
 
-use graphmp::apps::{Combine, ShardKernel, VertexProgram};
+use graphmp::apps::{BfsLevels, Combine, EdgeCost, KCore, ShardKernel, VertexProgram, Wcc};
 use graphmp::exec::arena::AlignedArena;
 use graphmp::exec::kernel::{fold_csr, fold_list, reference_fold_csr, scalar_fold_csr, LANES};
-use graphmp::exec::IterCtx;
+use graphmp::exec::{IterCtx, LaneSlice, LaneSliceMut, LaneType};
 use graphmp::graph::{Csr, Edge};
 
 fn all_kernels() -> Vec<ShardKernel> {
@@ -33,6 +37,32 @@ fn all_kernels() -> Vec<ShardKernel> {
         graphmp::apps::Bfs::new(0).kernel(),
         graphmp::apps::Cc.kernel(),
         graphmp::apps::Widest::new(0).kernel(),
+    ]
+}
+
+/// `(kernel, seeded initial values)` for every u32-lane app kernel.
+fn u32_cases(n: u32) -> Vec<(ShardKernel, Vec<u32>)> {
+    vec![
+        // WCC: min over neighbour labels, seeded with own id
+        (Wcc.kernel(), (0..n).collect()),
+        // BFS levels: min over level+1, frontier at multiples of 3
+        (
+            BfsLevels::new(0).kernel(),
+            (0..n).map(|v| if v % 3 == 0 { v / 3 } else { u32::MAX }).collect(),
+        ),
+        // k-core: sum of alive-neighbour indicators over a 0/1 field
+        (KCore::new(2).kernel(), (0..n).map(|v| u32::from(v % 4 != 1)).collect()),
+    ]
+}
+
+/// Synthetic u64 kernels — no shipped app uses the u64 lane yet, but the
+/// chunked scheme is monomorphized over it and must hold the same
+/// bitwise contract (high bits included).
+fn u64_cases(n: u32) -> Vec<(ShardKernel, Vec<u64>)> {
+    let wide: Vec<u64> = (0..n).map(|v| (u64::from(v) << 33) | u64::from(v * 7 + 1)).collect();
+    vec![
+        (ShardKernel::relax_min(EdgeCost::Unit).with_lane(LaneType::U64), wide.clone()),
+        (ShardKernel::relax_min(EdgeCost::Zero).with_lane(LaneType::U64), wide),
     ]
 }
 
@@ -49,6 +79,27 @@ fn uniform_degree_edges(n: u32, k: usize) -> Vec<Edge> {
     }
     edges.sort_unstable_by_key(|e| (e.dst, e.src));
     edges
+}
+
+/// Seeded random ragged graph: degrees and endpoints both vary, so one
+/// fold crosses full chunks, tails and empty rows at once.
+fn random_edges(n: u32, per_vertex: usize, seed: u64) -> Vec<Edge> {
+    let mut rng = graphmp::util::rng::Xoshiro256::new(seed);
+    let mut edges = Vec::new();
+    for _ in 0..(n as usize * per_vertex) {
+        edges.push(Edge::weighted(
+            rng.next_below(u64::from(n)) as u32,
+            rng.next_below(u64::from(n)) as u32,
+            rng.next_range_f32(0.1, 9.0),
+        ));
+    }
+    edges.sort_unstable_by_key(|e| (e.dst, e.src));
+    edges
+}
+
+/// The boundary sweep's per-row edge counts, every chunk remainder class.
+fn boundary_counts() -> [usize; 7] {
+    [0, 1, LANES - 1, LANES, LANES + 1, 2 * LANES, 3 * LANES + 5]
 }
 
 /// The documented sum gate: chunked-vs-sequential comparisons get a
@@ -68,23 +119,14 @@ fn chunk_boundary_sweep_matches_the_scalar_oracle() {
     let src: Vec<f32> = (0..n).map(|v| 0.25 + (v % 7) as f32).collect();
     let inv: Vec<f32> = (0..n).map(|v| 1.0 / (1.0 + (v % 5) as f32)).collect();
     let contrib: Vec<f32> = src.iter().zip(&inv).map(|(&v, &d)| v * d).collect();
-    let counts = [
-        0,
-        1,
-        LANES - 1,
-        LANES,
-        LANES + 1,
-        2 * LANES,
-        3 * LANES + 5,
-    ];
-    for &k in &counts {
+    for &k in &boundary_counts() {
         let edges = uniform_degree_edges(n, k);
         let csr = Csr::from_edges(&edges, 0, n as usize, true);
         for kernel in all_kernels() {
             let ctx = IterCtx {
                 kernel,
                 num_vertices: n,
-                src: &src,
+                src: (&src).into(),
                 inv_out_deg: &inv,
                 contrib: &contrib,
                 iteration: 0,
@@ -94,14 +136,14 @@ fn chunk_boundary_sweep_matches_the_scalar_oracle() {
             // oracle pair: sequential monomorphized == enum dispatch
             let mut scalar = src.clone();
             let mut oracle = src.clone();
-            scalar_fold_csr(&ctx, csr.slices(), 0, &mut scalar);
-            reference_fold_csr(&ctx, csr.slices(), 0, &mut oracle);
+            scalar_fold_csr(&ctx, csr.slices(), 0, (&mut scalar).into());
+            reference_fold_csr(&ctx, csr.slices(), 0, (&mut oracle).into());
             assert_eq!(scalar, oracle, "oracle pair diverged: {what}");
 
             // chunked fold vs the oracle: exact meets, epsilon sums —
             // and exact sums too while the tail tree is degenerate
             let mut chunked = src.clone();
-            fold_csr(&ctx, csr.slices(), 0, &mut chunked);
+            fold_csr(&ctx, csr.slices(), 0, (&mut chunked).into());
             match kernel.combine {
                 Combine::Sum if k <= 3 => {
                     assert_eq!(chunked, scalar, "short-row sums must be exact: {what}")
@@ -116,7 +158,7 @@ fn chunk_boundary_sweep_matches_the_scalar_oracle() {
             // the chunked CSR fold bitwise (same chunked scheme)
             let mut listed = src.clone();
             let (mut vals, mut idx) = (AlignedArena::new(), AlignedArena::new());
-            fold_list(&ctx, &edges, 0, &mut listed, &mut vals, &mut idx);
+            fold_list(&ctx, &edges, 0, (&mut listed).into(), &mut vals, &mut idx);
             assert_eq!(listed, chunked, "fold_list diverged: {what}");
         }
     }
@@ -143,15 +185,15 @@ fn ragged_rows_cross_boundaries_within_one_unit() {
         let ctx = IterCtx {
             kernel,
             num_vertices: n,
-            src: &src,
+            src: (&src).into(),
             inv_out_deg: &inv,
             contrib: &contrib,
             iteration: 0,
         };
         let mut scalar = src.clone();
         let mut chunked = src.clone();
-        scalar_fold_csr(&ctx, csr.slices(), 0, &mut scalar);
-        fold_csr(&ctx, csr.slices(), 0, &mut chunked);
+        scalar_fold_csr(&ctx, csr.slices(), 0, (&mut scalar).into());
+        fold_csr(&ctx, csr.slices(), 0, (&mut chunked).into());
         match kernel.combine {
             Combine::Sum => assert_sum_close(&chunked, &scalar, &format!("{kernel:?} ragged")),
             Combine::Min | Combine::Max => {
@@ -160,7 +202,116 @@ fn ragged_rows_cross_boundaries_within_one_unit() {
         }
         let mut listed = src.clone();
         let (mut vals, mut idx) = (AlignedArena::new(), AlignedArena::new());
-        fold_list(&ctx, &edges, 0, &mut listed, &mut vals, &mut idx);
+        fold_list(&ctx, &edges, 0, (&mut listed).into(), &mut vals, &mut idx);
         assert_eq!(listed, chunked, "fold_list diverged for {kernel:?}");
+    }
+}
+
+/// Run all four fold paths for one u32 case and assert bitwise equality.
+fn check_u32_case(
+    kernel: ShardKernel,
+    src: &[u32],
+    edges: &[Edge],
+    csr: &Csr,
+    n: u32,
+    inv: &[f32],
+    what: &str,
+) {
+    let contrib = vec![0.0f32; n as usize];
+    let ctx = IterCtx {
+        kernel,
+        num_vertices: n,
+        src: LaneSlice::U32(src),
+        inv_out_deg: inv,
+        contrib: &contrib,
+        iteration: 0,
+    };
+    let mut chunked = src.to_vec();
+    let mut scalar = src.to_vec();
+    let mut oracle = src.to_vec();
+    fold_csr(&ctx, csr.slices(), 0, LaneSliceMut::U32(&mut chunked));
+    scalar_fold_csr(&ctx, csr.slices(), 0, LaneSliceMut::U32(&mut scalar));
+    reference_fold_csr(&ctx, csr.slices(), 0, LaneSliceMut::U32(&mut oracle));
+    assert_eq!(scalar, oracle, "u32 oracle pair diverged: {what}");
+    assert_eq!(chunked, scalar, "u32 chunked vs scalar diverged: {what}");
+    let mut listed = src.to_vec();
+    let (mut vals, mut idx) = (AlignedArena::new(), AlignedArena::new());
+    fold_list(&ctx, edges, 0, LaneSliceMut::U32(&mut listed), &mut vals, &mut idx);
+    assert_eq!(listed, chunked, "u32 fold_list diverged: {what}");
+}
+
+/// Same four-way check for the u64 lane.
+fn check_u64_case(
+    kernel: ShardKernel,
+    src: &[u64],
+    edges: &[Edge],
+    csr: &Csr,
+    n: u32,
+    inv: &[f32],
+    what: &str,
+) {
+    let contrib = vec![0.0f32; n as usize];
+    let ctx = IterCtx {
+        kernel,
+        num_vertices: n,
+        src: LaneSlice::U64(src),
+        inv_out_deg: inv,
+        contrib: &contrib,
+        iteration: 0,
+    };
+    let mut chunked = src.to_vec();
+    let mut scalar = src.to_vec();
+    let mut oracle = src.to_vec();
+    fold_csr(&ctx, csr.slices(), 0, LaneSliceMut::U64(&mut chunked));
+    scalar_fold_csr(&ctx, csr.slices(), 0, LaneSliceMut::U64(&mut scalar));
+    reference_fold_csr(&ctx, csr.slices(), 0, LaneSliceMut::U64(&mut oracle));
+    assert_eq!(scalar, oracle, "u64 oracle pair diverged: {what}");
+    assert_eq!(chunked, scalar, "u64 chunked vs scalar diverged: {what}");
+    let mut listed = src.to_vec();
+    let (mut vals, mut idx) = (AlignedArena::new(), AlignedArena::new());
+    fold_list(&ctx, edges, 0, LaneSliceMut::U64(&mut listed), &mut vals, &mut idx);
+    assert_eq!(listed, chunked, "u64 fold_list diverged: {what}");
+}
+
+#[test]
+fn integer_chunk_boundary_sweep_is_bitwise() {
+    // the same remainder-class sweep as the f32 gate, but integer lanes
+    // get no epsilon anywhere: chunked == scalar == reference == list,
+    // bit for bit, for every u32 app kernel and the synthetic u64 pair
+    let n = 24u32;
+    let inv: Vec<f32> = (0..n).map(|v| 1.0 / (1.0 + (v % 5) as f32)).collect();
+    for &k in &boundary_counts() {
+        let edges = uniform_degree_edges(n, k);
+        let csr = Csr::from_edges(&edges, 0, n as usize, true);
+        for (kernel, src) in u32_cases(n) {
+            let what = format!("{kernel:?} with {k} edges/row");
+            check_u32_case(kernel, &src, &edges, &csr, n, &inv, &what);
+        }
+        for (kernel, src) in u64_cases(n) {
+            let what = format!("{kernel:?} with {k} edges/row");
+            check_u64_case(kernel, &src, &edges, &csr, n, &inv, &what);
+        }
+    }
+}
+
+#[test]
+fn integer_lanes_are_bitwise_on_seeded_random_graphs() {
+    // property sweep over seeded random ragged graphs: several seeds,
+    // several densities, every integer kernel — still zero tolerance
+    let n = 3 * LANES as u32 + 11;
+    let inv: Vec<f32> = (0..n).map(|v| 1.0 / (1.0 + (v % 5) as f32)).collect();
+    for seed in [3u64, 17, 2026] {
+        for per_vertex in [1usize, 4, 9] {
+            let edges = random_edges(n, per_vertex, seed);
+            let csr = Csr::from_edges(&edges, 0, n as usize, true);
+            for (kernel, src) in u32_cases(n) {
+                let what = format!("{kernel:?} seed {seed} density {per_vertex}");
+                check_u32_case(kernel, &src, &edges, &csr, n, &inv, &what);
+            }
+            for (kernel, src) in u64_cases(n) {
+                let what = format!("{kernel:?} seed {seed} density {per_vertex}");
+                check_u64_case(kernel, &src, &edges, &csr, n, &inv, &what);
+            }
+        }
     }
 }

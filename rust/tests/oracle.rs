@@ -1,0 +1,141 @@
+//! Oracle gate: every app on every engine against the naive
+//! single-threaded references in [`graphmp::apps::oracle`], on seeded
+//! random graphs.  The references share no code with the kernel
+//! machinery — no `ShardKernel`, no chunking, no lanes — so a bug in the
+//! shared execution core cannot cancel out of the comparison.
+//!
+//! Contract (see the module docs on `apps::oracle`):
+//!
+//! - the monotone relaxations (SSSP, BFS, CC, widest) and the integer
+//!   apps (WCC, BFS levels, k-core) converge to a unique fixpoint built
+//!   from exact arithmetic — engines must match **bit-for-bit**;
+//! - PageRank/PPR accumulate in f64 in the oracle and in reassociated
+//!   f32 in the engines, so those agree to a relative epsilon.
+
+use graphmp::apps::{
+    oracle, Bfs, BfsLevels, Cc, KCore, PageRank, Ppr, Sssp, VertexProgram, Wcc, Widest,
+};
+use graphmp::baselines::{
+    dsw::DswEngine, esg::EsgEngine, inmem::InMemEngine, psw::PswEngine, BaselineConfig,
+    BaselineEngine,
+};
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::exec::LaneVec;
+use graphmp::graph::rmat::{rmat, RmatParams};
+use graphmp::graph::EdgeList;
+use graphmp::prep::{preprocess_into, PrepConfig};
+use graphmp::storage::disk::Disk;
+
+/// Run `app` on all five engines; returns (engine name, values,
+/// converged) per engine.
+fn all_engine_values(
+    g: &EdgeList,
+    tag: &str,
+    app: &dyn VertexProgram,
+    iters: u32,
+) -> Vec<(String, LaneVec, bool)> {
+    let mut out = Vec::new();
+    let disk = Disk::unthrottled();
+
+    // engine 1: VSW through the full prep + shard pipeline
+    let root = std::env::temp_dir().join(format!("graphmp_oracle_{tag}_{}", app.name()));
+    let _ = std::fs::remove_dir_all(&root);
+    let prep = PrepConfig {
+        edges_per_shard: 2048,
+        max_rows_per_shard: 512,
+        weighted: true,
+        ..Default::default()
+    };
+    let (dir, _) = preprocess_into(g, &root, &disk, prep).unwrap();
+    let cfg = EngineConfig {
+        workers: 4,
+        prefetch_depth: 3,
+        prefetch_threads: 2,
+        ..Default::default()
+    };
+    let mut e = VswEngine::open(&dir, &disk, cfg).unwrap();
+    let (vals, run) = e.run_to_values(app, iters).unwrap();
+    out.push(("vsw".to_string(), vals, run.converged));
+    let _ = std::fs::remove_dir_all(&root);
+
+    // engines 2-4: the out-of-core baselines
+    let cfg = BaselineConfig { p: 8, ..Default::default() };
+    let mut engines: Vec<Box<dyn BaselineEngine>> = vec![
+        Box::new(PswEngine::new(cfg)),
+        Box::new(EsgEngine::new(cfg)),
+        Box::new(DswEngine::new(cfg)),
+    ];
+    for be in engines.iter_mut() {
+        be.preprocess(g, &disk).unwrap();
+        let run = be.run(app, iters, &disk).unwrap();
+        out.push((be.name().to_string(), be.values_lane().clone(), run.converged));
+    }
+
+    // engine 5: fully in-memory
+    let mut im = InMemEngine::new(cfg);
+    im.load(g, &disk).unwrap();
+    let run = im.run(app, iters, &disk).unwrap();
+    out.push(("inmem".to_string(), im.values_lane().clone(), run.converged));
+    out
+}
+
+fn check_f32(g: &EdgeList, tag: &str, app: &dyn VertexProgram, want: &[f32]) {
+    for (name, vals, converged) in all_engine_values(g, tag, app, 400) {
+        assert!(converged, "{tag}/{}/{name}: did not reach the fixpoint", app.name());
+        assert_eq!(vals.f32s(), want, "{tag}/{}/{name} diverged from oracle", app.name());
+    }
+}
+
+fn check_u32(g: &EdgeList, tag: &str, app: &dyn VertexProgram, want: &[u32]) {
+    for (name, vals, converged) in all_engine_values(g, tag, app, 400) {
+        assert!(converged, "{tag}/{}/{name}: did not reach the fixpoint", app.name());
+        assert_eq!(vals.u32s(), want, "{tag}/{}/{name} diverged from oracle", app.name());
+    }
+}
+
+#[test]
+fn relaxation_and_integer_apps_match_oracle_bitwise() {
+    for seed in [11u64, 4242] {
+        let g = rmat(9, 5_000, seed, RmatParams::default());
+        let gu = g.to_undirected();
+        let (n, tag) = (g.num_vertices, format!("s{seed}"));
+
+        // f32 relaxations on the directed graph (rmat weights are small
+        // integers, so every path sum is exact in f32)
+        check_f32(&g, &tag, &Sssp::new(0), &oracle::sssp(&g.edges, n, 0));
+        check_f32(&g, &tag, &Bfs::new(0), &oracle::bfs_hops(&g.edges, n, 0));
+        check_f32(&g, &tag, &Widest::new(0), &oracle::widest(&g.edges, n, 0));
+        // label propagation on the symmetrised graph
+        check_f32(&gu, &tag, &Cc, &oracle::cc_labels(&gu.edges, n));
+
+        // the u32 lane: exact by construction on any graph
+        check_u32(&gu, &tag, &Wcc, &oracle::wcc_labels(&gu.edges, n));
+        check_u32(&g, &tag, &BfsLevels::new(0), &oracle::bfs_levels(&g.edges, n, 0));
+        check_u32(&gu, &tag, &KCore::new(3), &oracle::kcore(&gu.edges, n, 3));
+    }
+}
+
+#[test]
+fn pagerank_family_matches_f64_oracle_within_epsilon() {
+    let g = rmat(9, 5_000, 777, RmatParams::default());
+    let n = g.num_vertices;
+    let iters = 6u32;
+    let apps: Vec<(Box<dyn VertexProgram>, Vec<f32>)> = vec![
+        (Box::new(PageRank::new()), oracle::pagerank(&g.edges, n, 0.85, iters)),
+        (Box::new(Ppr::new(1)), oracle::ppr(&g.edges, n, 0.85, 1, iters)),
+    ];
+    for (app, want) in &apps {
+        for (name, vals, _) in all_engine_values(&g, "prf", app.as_ref(), iters) {
+            let got = vals.f32s();
+            assert_eq!(got.len(), want.len(), "{}/{name}", app.name());
+            for (v, (a, b)) in got.iter().zip(want).enumerate() {
+                let tol = 1e-6 + 1e-4 * b.abs();
+                assert!(
+                    (a - b).abs() <= tol,
+                    "{}/{name}: vertex {v}: engine {a} vs oracle {b}",
+                    app.name()
+                );
+            }
+        }
+    }
+}

@@ -21,7 +21,7 @@ use graphmp::compress::CacheMode;
 use graphmp::engine::{EngineConfig, VswEngine};
 use graphmp::exec::{
     fold_edges_interval, mark_interval, BatchJob, BatchOptions, ExecConfig, ExecCore, IterCtx,
-    RangeMarker, ResumeState, Scratch, ShardSource, SharedDst, UnitOutput,
+    LaneVec, RangeMarker, ResumeState, Scratch, ShardSource, SharedDst, UnitOutput,
 };
 use graphmp::graph::rmat::{rmat, RmatParams};
 use graphmp::graph::{Edge, EdgeList, VertexId};
@@ -104,7 +104,7 @@ fn jobset_kill_resume_bit_identical_vsw() {
     let mut base = JobSet::with_batch_cap(4);
     let ids = submit_roster(&mut base);
     base.run_all(&mut engine(&dir, &disk, CacheMode::M1Raw)).unwrap();
-    let want: Vec<(JobStatus, Vec<f32>)> = ids
+    let want: Vec<(JobStatus, LaneVec)> = ids
         .iter()
         .map(|&id| (base.status(id).unwrap(), base.take_values(id).unwrap()))
         .collect();
@@ -207,9 +207,9 @@ impl ShardSource for IntervalEngine {
         scratch: &mut Scratch<'_>,
     ) -> Result<UnitOutput> {
         let (lo, hi) = self.intervals[item as usize];
-        let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
-        fold_edges_interval(ctx, &self.edges[item as usize], lo, out, scratch);
-        mark_interval(ctx, lo, out, marker);
+        let mut out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
+        fold_edges_interval(ctx, &self.edges[item as usize], lo, out.rb(), scratch);
+        mark_interval(ctx, lo, out.shared(), marker);
         Ok(UnitOutput::InPlace)
     }
 
@@ -706,9 +706,9 @@ impl ShardSource for TwoUnitSource {
         scratch: &mut Scratch<'_>,
     ) -> Result<UnitOutput> {
         let (lo, hi) = self.intervals[item as usize];
-        let out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
-        fold_edges_interval(ctx, &self.edges[item as usize], lo, out, scratch);
-        mark_interval(ctx, lo, out, marker);
+        let mut out = unsafe { dst.claim(lo as usize, (hi - lo) as usize) };
+        fold_edges_interval(ctx, &self.edges[item as usize], lo, out.rb(), scratch);
+        mark_interval(ctx, lo, out.shared(), marker);
         Ok(UnitOutput::InPlace)
     }
 

@@ -12,14 +12,14 @@
 //! admission iteration, already-running jobs must be unperturbed by the
 //! admission, and the (unit × job) fan-out must not change any result.
 
-use graphmp::apps::{PageRank, Ppr, Sssp, VertexProgram, Widest};
+use graphmp::apps::{BfsLevels, PageRank, Ppr, Sssp, VertexProgram, Wcc, Widest};
 use graphmp::compress::CacheMode;
 use graphmp::engine::{EngineConfig, VswEngine};
-use graphmp::exec::BatchJob;
+use graphmp::exec::{BatchJob, LaneType, LaneVec};
 use graphmp::graph::rmat::{rmat, RmatParams};
 use graphmp::metrics::RunMetrics;
 use graphmp::prep::{preprocess_into, PrepConfig};
-use graphmp::runtime::{JobSet, JobSpec, JobStatus};
+use graphmp::runtime::{CheckpointConfig, JobId, JobSet, JobSpec, JobStatus};
 use graphmp::storage::disk::Disk;
 use graphmp::storage::GraphDir;
 
@@ -59,7 +59,7 @@ fn solo(
     mode: CacheMode,
     app: &dyn VertexProgram,
     iters: u32,
-) -> (Vec<f32>, RunMetrics) {
+) -> (LaneVec, RunMetrics) {
     engine(dir, disk, mode).run_to_values(app, iters).unwrap()
 }
 
@@ -74,7 +74,7 @@ fn batched_jobs_bit_identical_across_apps_and_cache_modes() {
     ];
     let iters = 12u32;
     for mode in [CacheMode::M0None, CacheMode::M1Raw, CacheMode::M3Zlib1] {
-        let solos: Vec<(Vec<f32>, RunMetrics)> = apps
+        let solos: Vec<(LaneVec, RunMetrics)> = apps
             .iter()
             .map(|a| solo(&dir, &disk, mode, a.as_ref(), iters))
             .collect();
@@ -428,6 +428,160 @@ fn fan_out_preserves_results_when_jobs_exceed_units() {
     assert!(b_fan.shard_servings_fanned > 0, "jobs >> units must fan out sub-tasks");
     assert_eq!(b_serial.shard_servings_fanned, 0);
     assert_eq!(b_fan.shard_servings, b_serial.shard_servings);
+}
+
+// ------------------------------------------------------ mixed value lanes
+
+#[test]
+fn mixed_lane_batch_bit_identical_and_scan_shared() {
+    // the generic-lane gate: one f32 job (PageRank) and two u32 jobs
+    // (WCC labels, BFS levels) ride the same shard pass, each bit-
+    // identical to its solo run — scan sharing is lane-type agnostic
+    let (dir, disk) = prep_graph("mixed");
+    let mode = CacheMode::M1Raw;
+    let apps: Vec<(Box<dyn VertexProgram>, u32)> = vec![
+        (Box::new(PageRank::new()), 12),
+        (Box::new(Wcc), 40),
+        (Box::new(BfsLevels::new(0)), 40),
+    ];
+    let solos: Vec<(LaneVec, RunMetrics)> = apps
+        .iter()
+        .map(|(a, iters)| solo(&dir, &disk, mode, a.as_ref(), *iters))
+        .collect();
+    let jobs: Vec<BatchJob<'_>> = apps
+        .iter()
+        .map(|(a, iters)| BatchJob { app: a.as_ref(), max_iters: *iters })
+        .collect();
+    let (outs, batch) = engine(&dir, &disk, mode).run_jobs(&jobs).unwrap();
+    assert_eq!(outs.len(), apps.len());
+    let want_types = [LaneType::F32, LaneType::U32, LaneType::U32];
+    for (j, ((v_b, r_b), (v_s, r_s))) in outs.iter().zip(&solos).enumerate() {
+        let name = apps[j].0.name();
+        assert_eq!(v_b.lane_type(), want_types[j], "{name} (job {j}) lane type");
+        assert_eq!(v_b, v_s, "{name} (job {j}): mixed batch diverged from solo");
+        assert_eq!(
+            r_b.iterations.len(),
+            r_s.iterations.len(),
+            "{name} (job {j}): iteration counts differ"
+        );
+        assert_eq!(r_b.converged, r_s.converged, "{name} (job {j})");
+        for (a, b) in r_b.iterations.iter().zip(&r_s.iterations) {
+            assert_eq!(a.active_vertices, b.active_vertices, "{name} (job {j})");
+            assert_eq!(a.shards_processed, b.shards_processed, "{name} (job {j})");
+            assert_eq!(a.shards_skipped, b.shards_skipped, "{name} (job {j})");
+        }
+    }
+    assert!(
+        batch.shard_servings > batch.shard_loads,
+        "mixed-lane jobs must share shard loads ({} servings / {} loads)",
+        batch.shard_servings,
+        batch.shard_loads
+    );
+}
+
+#[test]
+fn u32_job_admitted_mid_batch_into_f32_batch_is_exact() {
+    // interactive admission across lane types: a u32 job joining a
+    // running f32 batch must be bit-identical to its solo run, and must
+    // not perturb the f32 founder
+    let (dir, disk) = prep_graph("mixed_admit");
+    let mode = CacheMode::M1Raw;
+    let admit_at = 3u32;
+    let (v_pr_solo, r_pr_solo) = solo(&dir, &disk, mode, &PageRank::new(), 10);
+    let (v_wcc_solo, r_wcc_solo) = solo(&dir, &disk, mode, &Wcc, 40);
+
+    let wcc = Wcc;
+    let (outs, batch) = engine(&dir, &disk, mode)
+        .run_jobs_interactive(
+            &[BatchJob { app: &PageRank::new(), max_iters: 10 }],
+            |pass, _running| {
+                if pass == admit_at {
+                    vec![BatchJob { app: &wcc, max_iters: 40 }]
+                } else {
+                    Vec::new()
+                }
+            },
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 2);
+    let (v_pr, r_pr) = &outs[0];
+    let (v_wcc, r_wcc) = &outs[1];
+    assert_eq!(v_pr.lane_type(), LaneType::F32);
+    assert_eq!(v_wcc.lane_type(), LaneType::U32);
+    assert_eq!(v_wcc, &v_wcc_solo, "admitted u32 job diverged from solo");
+    assert_eq!(r_wcc.iterations.len(), r_wcc_solo.iterations.len());
+    assert_eq!(r_wcc.job.admitted_pass, admit_at);
+    assert_eq!(v_pr, &v_pr_solo, "u32 admission perturbed the f32 founder");
+    assert_eq!(r_pr.iterations.len(), r_pr_solo.iterations.len());
+    assert_eq!(batch.jobs, 2);
+    assert_eq!(batch.admitted_mid_batch, 1);
+    // the overlapping passes serve both lane types off one load
+    assert!(batch.shard_servings > batch.shard_loads);
+}
+
+#[test]
+fn mixed_lane_batch_survives_kill_and_resume() {
+    // checkpoint/resume with heterogeneous lanes: the snapshot carries
+    // one f32 lane and two u32 lanes; kill+resume must restore each with
+    // its own type and come back bit-identical to the uninterrupted run
+    let (dir, disk) = prep_graph("mixed_ckpt");
+    let mode = CacheMode::M1Raw;
+    let submit = |set: &mut JobSet| -> [JobId; 3] {
+        [
+            set.submit(JobSpec {
+                label: "pr".into(),
+                app: Box::new(PageRank::new()),
+                max_iters: 12,
+            }),
+            set.submit(JobSpec { label: "wcc".into(), app: Box::new(Wcc), max_iters: 40 }),
+            set.submit(JobSpec {
+                label: "bfsl".into(),
+                app: Box::new(BfsLevels::new(0)),
+                max_iters: 40,
+            }),
+        ]
+    };
+    let mut base = JobSet::new();
+    let ids = submit(&mut base);
+    base.run_all(&mut engine(&dir, &disk, mode)).unwrap();
+    let want: Vec<(JobStatus, LaneVec)> = ids
+        .iter()
+        .map(|&id| (base.status(id).unwrap(), base.take_values(id).unwrap()))
+        .collect();
+    assert_eq!(want[0].1.lane_type(), LaneType::F32);
+    assert_eq!(want[1].1.lane_type(), LaneType::U32);
+    assert_eq!(want[2].1.lane_type(), LaneType::U32);
+
+    // crash at pass boundary 5; checkpoints every 2 → resume from pass 4
+    let ckdir = std::env::temp_dir().join("graphmp_scan_mixed_ckpt");
+    let _ = std::fs::remove_dir_all(&ckdir);
+    let crash = CheckpointConfig {
+        dir: ckdir.clone(),
+        every: 2,
+        every_secs: None,
+        keep: 2,
+        kill_at_pass: Some(5),
+    };
+    let mut killed = JobSet::new();
+    submit(&mut killed);
+    let err = killed
+        .run_all_checkpointed(&mut engine(&dir, &disk, mode), &crash)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("injected crash"), "{err:#}");
+
+    let resume_cfg = CheckpointConfig::new(ckdir.clone(), 2);
+    let mut resumed = JobSet::new();
+    let rids = submit(&mut resumed);
+    let report = resumed.resume(&mut engine(&dir, &disk, mode), &resume_cfg).unwrap();
+    assert_eq!(report.aggregate().resumed_from_pass, Some(4));
+    for (&id, (status, values)) in rids.iter().zip(&want) {
+        assert_eq!(resumed.status(id), Some(*status), "job {id} status");
+        assert_eq!(
+            resumed.take_values(id).as_ref(),
+            Some(values),
+            "job {id}: mixed-lane kill+resume must be bit-identical"
+        );
+    }
 }
 
 #[test]

@@ -21,6 +21,7 @@ use std::path::PathBuf;
 use graphmp::apps::{PageRank, Ppr};
 use graphmp::compress::CacheMode;
 use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::exec::LaneVec;
 use graphmp::graph::rmat::{rmat, RmatParams};
 use graphmp::prep::{preprocess_into, PrepConfig};
 use graphmp::runtime::checkpoint::CheckpointConfig;
@@ -139,7 +140,7 @@ fn serve_kill_and_resume_bit_identical() {
     let ids = submit_all(&hb);
     hb.drain();
     base.run(&mut engine(&dir, &disk)).unwrap();
-    let want: Vec<(JobStatus, Vec<f32>)> = ids
+    let want: Vec<(JobStatus, LaneVec)> = ids
         .iter()
         .map(|&id| (hb.status(id).unwrap(), hb.values(id).unwrap()))
         .collect();
